@@ -1,0 +1,103 @@
+//! TLB explorer: poke the simulated memory hierarchy with different access
+//! patterns and watch hit rates, walk counts, and throughput respond.
+//!
+//! Run: `cargo run --release --example tlb_explorer [-- <region_gib>]`
+
+use a100win::config::{MachineConfig, GIB};
+use a100win::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
+
+fn main() -> anyhow::Result<()> {
+    let focus_gib: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(72);
+
+    let machine = Machine::new(MachineConfig::a100_80gb()).map_err(anyhow::Error::msg)?;
+    let sms = machine.topology().all_sms();
+    let cfg = machine.config();
+    println!(
+        "A100-80GB sim: group TLB {} entries x {} MiB pages = {} GiB reach, {} walkers/group\n",
+        cfg.tlb.entries,
+        cfg.tlb.page_bytes >> 20,
+        cfg.tlb.reach_bytes() / GIB,
+        cfg.tlb.walkers_per_group
+    );
+
+    println!("== region sweep (uniform random, all SMs) ==");
+    println!(
+        "{:>10} {:>10} {:>9} {:>12} {:>12} {:>10}",
+        "region_gib", "GB/s", "hit_rate", "walks", "merged", "lat_ns"
+    );
+    for gib in [8u64, 32, 56, 64, 68, 72, 80] {
+        let meas = machine.run(&MeasurementSpec::uniform_all(
+            &sms,
+            Pattern::Uniform(MemRegion::new(0, gib * GIB)),
+            3_000,
+            gib,
+        ));
+        println!(
+            "{gib:>10} {:>10.0} {:>9.3} {:>12} {:>12} {:>10.0}",
+            meas.gbps,
+            meas.tlb_hit_rate,
+            meas.walks(),
+            meas.merged_walks(),
+            meas.avg_latency_ns
+        );
+    }
+
+    println!("\n== pattern comparison over {focus_gib} GiB ==");
+    let region = MemRegion::new(0, focus_gib * GIB);
+    let patterns: Vec<(&str, Pattern)> = vec![
+        ("uniform", Pattern::Uniform(region)),
+        ("sequential", Pattern::Sequential(region)),
+        (
+            "strided_64",
+            Pattern::Strided {
+                region,
+                stride_lines: 64,
+            },
+        ),
+        (
+            "zipf_0.99",
+            Pattern::Zipf {
+                region,
+                theta: 0.99,
+            },
+        ),
+    ];
+    println!(
+        "{:>12} {:>10} {:>9} {:>10} {:>10}",
+        "pattern", "GB/s", "tlb_hit", "utlb_hit", "lat_ns"
+    );
+    for (name, p) in patterns {
+        let meas = machine.run(&MeasurementSpec::uniform_all(&sms, p, 3_000, 99));
+        println!(
+            "{name:>12} {:>10.0} {:>9.3} {:>10.3} {:>10.0}",
+            meas.gbps, meas.tlb_hit_rate, meas.utlb_hit_rate, meas.avg_latency_ns
+        );
+    }
+
+    println!("\n== per-group view at {focus_gib} GiB (uniform) ==");
+    let meas = machine.run(&MeasurementSpec::uniform_all(
+        &sms,
+        Pattern::Uniform(region),
+        3_000,
+        5,
+    ));
+    println!(
+        "{:>6} {:>5} {:>9} {:>9} {:>10}",
+        "group", "sms", "GB/s", "hit_rate", "walks"
+    );
+    for g in &meas.per_group {
+        println!(
+            "{:>6} {:>5} {:>9.1} {:>9.3} {:>10}",
+            g.group,
+            g.active_sms,
+            g.gbps,
+            g.tlb_hit_rate(),
+            g.walks
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT: lower every L2 entry point to HLO *text* + a manifest for the runtime.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (entry point, shape variant) plus
+``manifest.json`` describing every artifact (entry, operand shapes/dtypes,
+row/col counts) so the Rust runtime can pick executables by shape without
+parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Shape variants the coordinator needs.  N is rows of the (scaled-down)
+# resident table shard; B is the routed batch size after dynamic batching.
+# D=32 f32 == one 128-byte line, the paper's access unit.
+DEFAULT_N = 65536
+DEFAULT_D = 32
+BATCHES = (256, 1024, 4096)
+BAG = 8
+
+
+def build_entries(n: int, d: int, batches: tuple[int, ...], bag: int):
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    for b in batches:
+        yield (
+            f"gather_b{b}_n{n}_d{d}",
+            model.lookup,
+            (spec((b,), I32), spec((n, d), F32)),
+            {"entry": "lookup", "b": b, "n": n, "d": d, "operands": ["indices", "table"]},
+        )
+        yield (
+            f"windowed_gather_b{b}_n{n}_d{d}",
+            model.windowed_lookup,
+            (spec((2,), I32), spec((b,), I32), spec((n, d), F32)),
+            {
+                "entry": "windowed_lookup",
+                "b": b,
+                "n": n,
+                "d": d,
+                "operands": ["window", "indices", "table"],
+            },
+        )
+        yield (
+            f"bag_fwd_b{b}_g{bag}_n{n}_d{d}",
+            model.bag_forward,
+            (spec((b, bag), I32), spec((n, d), F32)),
+            {
+                "entry": "bag_forward",
+                "b": b,
+                "g": bag,
+                "n": n,
+                "d": d,
+                "operands": ["indices", "table"],
+            },
+        )
+    # One training-step artifact (fwd+bwd) at the middle batch size.
+    b = batches[len(batches) // 2]
+    yield (
+        f"bag_train_b{b}_g{bag}_n{n}_d{d}",
+        model.bag_loss_and_grad,
+        (spec((b, bag), I32), spec((n, d), F32), spec((b, d), F32)),
+        {
+            "entry": "bag_loss_and_grad",
+            "b": b,
+            "g": bag,
+            "n": n,
+            "d": d,
+            "operands": ["indices", "table", "targets"],
+        },
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file target (model.hlo.txt)")
+    ap.add_argument("--n", type=int, default=DEFAULT_N)
+    ap.add_argument("--d", type=int, default=DEFAULT_D)
+    ap.add_argument("--bag", type=int, default=BAG)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    for name, fn, example_args, meta in build_entries(args.n, args.d, BATCHES, args.bag):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "file": fname, **meta})
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+    if args.out is not None:
+        # Legacy Makefile stamp: symlink the smallest gather to model.hlo.txt.
+        first = manifest["artifacts"][0]["file"]
+        dst = args.out
+        if os.path.islink(dst) or os.path.exists(dst):
+            os.remove(dst)
+        os.symlink(first, dst)
+        print(f"linked {dst} -> {first}")
+
+
+if __name__ == "__main__":
+    main()

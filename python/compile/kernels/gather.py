@@ -1,0 +1,215 @@
+"""L1 Pallas kernels: the paper's benchmark access pattern as compiled compute.
+
+The paper's CUDA micro-benchmark has every warp read random coalesced
+128-byte lines (32 x 32-bit words) from HBM.  The compiled-compute analogue
+is a *row gather*: ``indices[B] x table[N, D=32] f32 -> out[B, D]`` — each
+gathered row is exactly one 128-byte cache line.
+
+Three kernels:
+
+- ``gather_rows``        plain row gather (the unconstrained benchmark).
+- ``windowed_gather``    row gather with every index remapped into a
+                         ``[base, base+size)`` row window.  This is the
+                         in-kernel embodiment of the paper's technique: the
+                         L3 coordinator assigns each SM resource group a
+                         <64 GB window and the kernel *cannot* stray out of
+                         it.  ``window = [base, size]`` arrives as a tiny
+                         i32 operand so the same executable serves any
+                         window placement.
+- ``bag_gather_sum``     fixed-size embedding-bag pooling:
+                         ``indices[B, G] -> sum_g table[idx[b,g]] : [B, D]``
+                         (the "realistic application" workload: random bag
+                         lookups over a huge table).
+
+All kernels are lowered with ``interpret=True`` — real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot run (see
+/opt/xla-example/README.md).  Hardware adaptation (DESIGN.md
+§Hardware-Adaptation): instead of porting warp/threadblock structure, the
+grid is blocked over B (the batch of line reads) so each grid step's block
+of rows is a VMEM-resident tile; the HBM->VMEM schedule that CUDA expressed
+with threadblocks is expressed with the grid + BlockSpec here.
+
+Two kernel bodies per op (EXPERIMENTS.md §Perf):
+
+- the default **vectorized** body gathers the whole index block with one
+  ``jnp.take`` — interpret-mode lowers it to a single HLO ``gather`` that
+  the CPU backend executes ~50x faster than a loop;
+- the ``use_loop=True`` body walks the block with ``fori_loop`` +
+  dynamic-slice loads — the shape a real-TPU lowering wants when the table
+  cannot be materialized in VMEM.  pytest asserts both bodies agree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile of gather indices handled by one grid step.  256 rows x 32
+# f32 = 32 KiB out-tile: comfortably VMEM-resident alongside the index
+# vector.
+DEFAULT_BLOCK_B = 256
+
+
+def _gather_block(idx, table_ref, o_ref, *, block_b: int, use_loop: bool):
+    """Copy ``table[idx[i], :]`` into ``o_ref[i, :]`` for each row of the block.
+
+    Vectorized body (default): one ``jnp.take`` over the block — interpret
+    mode lowers it to a single HLO ``gather``.  Loop body: dynamic-slice
+    loads inside a fori_loop — the shape a real-TPU lowering needs when the
+    table must stay in HBM/ANY (EXPERIMENTS.md §Perf compares them).
+    """
+    d = o_ref.shape[1]
+    if not use_loop:
+        o_ref[...] = jnp.take(table_ref[...], idx, axis=0)
+        return
+
+    def body(i, _):
+        r = idx[i]
+        row = pl.load(table_ref, (pl.dslice(r, 1), pl.dslice(0, d)))
+        pl.store(o_ref, (pl.dslice(i, 1), pl.dslice(0, d)), row)
+        return 0
+
+    jax.lax.fori_loop(0, block_b, body, 0)
+
+
+def _gather_kernel(idx_ref, table_ref, o_ref, *, block_b: int, use_loop: bool):
+    _gather_block(idx_ref[...], table_ref, o_ref, block_b=block_b, use_loop=use_loop)
+
+
+def _windowed_gather_kernel(
+    window_ref, idx_ref, table_ref, o_ref, *, block_b: int, use_loop: bool
+):
+    base = window_ref[0]
+    size = window_ref[1]
+    # Remap every index into [base, base+size).  `% size` (not clamp) keeps
+    # the access stream uniform over the window, matching the paper's
+    # benchmark which draws uniformly inside the restricted region.
+    idx = base + jax.lax.rem(idx_ref[...], size)
+    _gather_block(idx, table_ref, o_ref, block_b=block_b, use_loop=use_loop)
+
+
+def _bag_kernel(idx_ref, table_ref, o_ref, *, block_b: int, bag: int, use_loop: bool):
+    d = o_ref.shape[1]
+    idx = idx_ref[...]  # (block_b, bag)
+    if not use_loop:
+        # (block, bag, d) gather then reduce over the bag axis: lowers to
+        # one HLO gather + reduce, fused by XLA.
+        rows = jnp.take(table_ref[...], idx.reshape(-1), axis=0)
+        o_ref[...] = rows.reshape((block_b, bag, d)).sum(axis=1)
+        return
+
+    def body(i, _):
+        def inner(g, acc):
+            r = idx[i, g]
+            row = pl.load(table_ref, (pl.dslice(r, 1), pl.dslice(0, d)))
+            return acc + row.reshape((d,))
+
+        acc = jax.lax.fori_loop(0, bag, inner, jnp.zeros((d,), o_ref.dtype))
+        pl.store(o_ref, (pl.dslice(i, 1), pl.dslice(0, d)), acc.reshape((1, d)))
+        return 0
+
+    jax.lax.fori_loop(0, block_b, body, 0)
+
+
+def _block_b_for(batch: int, requested: int | None) -> int:
+    block = requested or DEFAULT_BLOCK_B
+    if batch < block:
+        block = batch
+    if batch % block != 0:
+        raise ValueError(f"batch {batch} not divisible by block_b {block}")
+    return block
+
+
+def gather_rows(
+    indices: jax.Array,
+    table: jax.Array,
+    *,
+    block_b: int | None = None,
+    use_loop: bool = False,
+) -> jax.Array:
+    """Gather rows of ``table`` at ``indices``: out[b, :] = table[indices[b], :].
+
+    indices: (B,) int32, table: (N, D) float32 -> (B, D) float32.
+    """
+    (batch,) = indices.shape
+    n, d = table.shape
+    block = _block_b_for(batch, block_b)
+    grid = (batch // block,)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block_b=block, use_loop=use_loop),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # Whole table visible to every grid step: gather targets are
+            # data-dependent, so no useful HBM->VMEM pre-tiling exists for
+            # the table itself (on real TPU the table stays in HBM/ANY and
+            # rows stream through VMEM; interpret mode just aliases it).
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d), table.dtype),
+        interpret=True,
+    )(indices, table)
+
+
+def windowed_gather(
+    window: jax.Array,
+    indices: jax.Array,
+    table: jax.Array,
+    *,
+    block_b: int | None = None,
+    use_loop: bool = False,
+) -> jax.Array:
+    """Gather with indices remapped into the row window ``[window[0], window[0]+window[1])``.
+
+    window: (2,) int32 = [base_row, size_rows]; indices: (B,) int32;
+    table: (N, D) f32 -> (B, D) f32.  The coordinator's group-to-chunk
+    placement feeds each SM group's window here.
+    """
+    (batch,) = indices.shape
+    n, d = table.shape
+    block = _block_b_for(batch, block_b)
+    grid = (batch // block,)
+    return pl.pallas_call(
+        functools.partial(_windowed_gather_kernel, block_b=block, use_loop=use_loop),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d), table.dtype),
+        interpret=True,
+    )(window, indices, table)
+
+
+def bag_gather_sum(
+    indices: jax.Array,
+    table: jax.Array,
+    *,
+    block_b: int | None = None,
+    use_loop: bool = False,
+) -> jax.Array:
+    """Fixed-size embedding-bag pooling: out[b] = sum_g table[indices[b, g]].
+
+    indices: (B, G) int32, table: (N, D) f32 -> (B, D) f32.
+    """
+    batch, bag = indices.shape
+    n, d = table.shape
+    block = _block_b_for(batch, block_b)
+    grid = (batch // block,)
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, block_b=block, bag=bag, use_loop=use_loop),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, bag), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d), table.dtype),
+        interpret=True,
+    )(indices, table)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in gather.py has an oracle here; pytest asserts allclose over a
+hypothesis-driven sweep of shapes and index distributions.  These are also
+the implementations the AOT path uses for the backward pass (scatter-add is
+an L2-level op; see model.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(indices: jax.Array, table: jax.Array) -> jax.Array:
+    """out[b, :] = table[indices[b], :]."""
+    return jnp.take(table, indices, axis=0)
+
+
+def windowed_gather_ref(window: jax.Array, indices: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather with indices remapped into [window[0], window[0]+window[1])."""
+    remapped = window[0] + jax.lax.rem(indices, window[1])
+    return jnp.take(table, remapped, axis=0)
+
+
+def bag_gather_sum_ref(indices: jax.Array, table: jax.Array) -> jax.Array:
+    """out[b] = sum_g table[indices[b, g]]."""
+    return jnp.take(table, indices, axis=0).sum(axis=1)
+
+
+def bag_grad_table_ref(indices: jax.Array, grad_out: jax.Array, n_rows: int) -> jax.Array:
+    """Backward of bag_gather_sum w.r.t. the table: scatter-add of grad_out.
+
+    indices: (B, G) int32, grad_out: (B, D) -> (n_rows, D).
+    """
+    batch, bag = indices.shape
+    d = grad_out.shape[1]
+    flat_idx = indices.reshape(-1)
+    flat_grad = jnp.broadcast_to(grad_out[:, None, :], (batch, bag, d)).reshape(-1, d)
+    return jnp.zeros((n_rows, d), grad_out.dtype).at[flat_idx].add(flat_grad)

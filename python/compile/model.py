@@ -1,0 +1,78 @@
+"""L2: the JAX compute graph the Rust coordinator executes via PJRT.
+
+The "model" for a random-access paper is the lookup workload itself:
+
+- ``lookup``            plain row gather (unconstrained benchmark access).
+- ``windowed_lookup``   gather constrained to a window — the executable the
+                        coordinator runs per SM-resource-group shard
+                        (group-to-chunk placement reaches the kernel through
+                        the ``window`` operand, so ONE executable serves any
+                        placement).
+- ``bag_forward``       fixed-size embedding-bag pooling (the application
+                        workload the paper's intro motivates: random bag
+                        lookups over a table far larger than TLB reach).
+- ``bag_loss_and_grad`` fwd+bwd: MSE against targets, gradient w.r.t. the
+                        table via a custom VJP whose forward is the Pallas
+                        kernel and whose backward is the scatter-add oracle.
+                        Demonstrates the kernel composing with jax.grad and
+                        gives the coordinator a training-step executable.
+
+Everything here is lowered ONCE by aot.py to HLO text; python never runs on
+the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gather as K
+from compile.kernels import ref as R
+
+
+def lookup(indices: jax.Array, table: jax.Array) -> tuple[jax.Array]:
+    """Unconstrained row gather.  Returns a 1-tuple (AOT convention)."""
+    return (K.gather_rows(indices, table),)
+
+
+def windowed_lookup(window: jax.Array, indices: jax.Array, table: jax.Array) -> tuple[jax.Array]:
+    """Window-constrained gather; ``window=[base,size]`` rows."""
+    return (K.windowed_gather(window, indices, table),)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _bag(indices: jax.Array, table: jax.Array) -> jax.Array:
+    return K.bag_gather_sum(indices, table)
+
+
+def _bag_fwd(indices, table):
+    return K.bag_gather_sum(indices, table), (indices, table.shape[0])
+
+
+def _bag_bwd(res, g):
+    indices, n_rows = res
+    return (None, R.bag_grad_table_ref(indices, g, n_rows))
+
+
+_bag.defvjp(_bag_fwd, _bag_bwd)
+
+
+def bag_forward(indices: jax.Array, table: jax.Array) -> tuple[jax.Array]:
+    """Embedding-bag pooling: (B, G) indices -> (B, D) pooled rows."""
+    return (_bag(indices, table),)
+
+
+def bag_loss(indices: jax.Array, table: jax.Array, targets: jax.Array) -> jax.Array:
+    out = _bag(indices, table)
+    diff = out - targets
+    return jnp.mean(diff * diff)
+
+
+def bag_loss_and_grad(
+    indices: jax.Array, table: jax.Array, targets: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (scalar loss, d loss / d table).  The coordinator's train step."""
+    loss, grad = jax.value_and_grad(bag_loss, argnums=1)(indices, table, targets)
+    return (loss, grad)

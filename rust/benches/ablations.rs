@@ -1,0 +1,189 @@
+//! Ablations over the design choices DESIGN.md calls out: what creates the
+//! cliff, what moves it, and when the paper's technique stops mattering.
+//!
+//!   1. page size      — reach = entries x page; the cliff tracks reach.
+//!   2. walker count   — sets the post-cliff floor, not the plateau.
+//!   3. associativity  — low assoc erodes the plateau edge.
+//!   4. window count   — group-to-chunk works with any windows <= groups.
+//!   5. access skew    — zipf re-use keeps the TLB effective past reach.
+//!   6. txn size       — the paper's §2.1 aside.
+
+use a100win::config::{MachineConfig, GIB};
+use a100win::coordinator::PlacementPolicy;
+use a100win::experiments::common::{ground_truth_map, run_policy};
+use a100win::experiments::{txn, Effort};
+use a100win::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
+use a100win::util::benchkit::Table;
+
+const PER_SM: u64 = 3_000;
+
+fn uniform_run(machine: &Machine, region_gib: u64, seed: u64) -> f64 {
+    let sms = machine.topology().all_sms();
+    let spec = MeasurementSpec::uniform_all(
+        &sms,
+        Pattern::Uniform(MemRegion::new(0, region_gib * GIB)),
+        PER_SM,
+        seed,
+    );
+    machine.run(&spec).gbps
+}
+
+fn ablate_page_size() {
+    println!("\n## Ablation 1: page size (reach = 32768 entries x page)");
+    let mut t = Table::new(&["page_mib", "reach_gib", "gbps_at_48gib", "gbps_at_80gib"]);
+    for page_mib in [1u64, 2, 4] {
+        let mut cfg = MachineConfig::a100_80gb();
+        cfg.tlb.page_bytes = page_mib << 20;
+        let reach = cfg.tlb.reach_bytes() / GIB;
+        let m = Machine::new(cfg).unwrap();
+        t.row(&[
+            page_mib.to_string(),
+            reach.to_string(),
+            format!("{:.0}", uniform_run(&m, 48, 1)),
+            format!("{:.0}", uniform_run(&m, 80, 2)),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_page_size.csv");
+}
+
+fn ablate_walkers() {
+    println!("\n## Ablation 2: page walkers per group (post-cliff floor)");
+    let mut t = Table::new(&["walkers", "gbps_at_32gib", "gbps_at_80gib"]);
+    for walkers in [4usize, 8, 16, 32] {
+        let mut cfg = MachineConfig::a100_80gb();
+        cfg.tlb.walkers_per_group = walkers;
+        let m = Machine::new(cfg).unwrap();
+        t.row(&[
+            walkers.to_string(),
+            format!("{:.0}", uniform_run(&m, 32, 3)),
+            format!("{:.0}", uniform_run(&m, 80, 4)),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_walkers.csv");
+}
+
+fn ablate_associativity() {
+    println!("\n## Ablation 3: TLB associativity (plateau edge at reach)");
+    let mut t = Table::new(&["assoc", "gbps_at_60gib", "gbps_at_64gib"]);
+    for assoc in [2usize, 8, 32] {
+        let mut cfg = MachineConfig::a100_80gb();
+        cfg.tlb.associativity = assoc;
+        let m = Machine::new(cfg).unwrap();
+        t.row(&[
+            assoc.to_string(),
+            format!("{:.0}", uniform_run(&m, 60, 5)),
+            format!("{:.0}", uniform_run(&m, 64, 6)),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_assoc.csv");
+}
+
+fn ablate_window_count() {
+    println!("\n## Ablation 4: group-to-chunk window count at 80 GiB");
+    let machine = Machine::new(MachineConfig::a100_80gb()).unwrap();
+    let map = ground_truth_map(&machine);
+    let mut t = Table::new(&["windows", "gbps"]);
+    for windows in [2usize, 4, 7, 14] {
+        let gbps = run_policy(
+            &machine,
+            &map,
+            PlacementPolicy::GroupToChunk,
+            80,
+            windows,
+            PER_SM,
+            7,
+        );
+        t.row(&[windows.to_string(), format!("{gbps:.0}")]);
+    }
+    t.print();
+    t.write_csv("ablation_windows.csv");
+}
+
+fn ablate_skew() {
+    println!("\n## Ablation 5: access skew at 80 GiB, naive placement");
+    let machine = Machine::new(MachineConfig::a100_80gb()).unwrap();
+    let sms = machine.topology().all_sms();
+    let mut t = Table::new(&["workload", "gbps", "tlb_hit_rate"]);
+    let region = MemRegion::new(0, 80 * GIB);
+    let cases: Vec<(&str, Pattern)> = vec![
+        ("uniform", Pattern::Uniform(region)),
+        (
+            "zipf_0.99",
+            Pattern::Zipf {
+                region,
+                theta: 0.99,
+            },
+        ),
+        ("sequential", Pattern::Sequential(region)),
+    ];
+    for (name, pattern) in cases {
+        let spec = MeasurementSpec::uniform_all(&sms, pattern, PER_SM, 8);
+        let meas = machine.run(&spec);
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", meas.gbps),
+            format!("{:.3}", meas.tlb_hit_rate),
+        ]);
+    }
+    t.print();
+    t.write_csv("ablation_skew.csv");
+}
+
+fn main() {
+    println!("# Ablation benches (A100-80GB preset, {PER_SM} accesses/SM)");
+    ablate_page_size();
+    ablate_walkers();
+    ablate_associativity();
+    ablate_window_count();
+    ablate_skew();
+    ablate_nvlink();
+
+    println!("\n## §2.1 aside: transaction-size sweep");
+    let rows = txn::run(Effort::Quick, 9);
+    let t = txn::table(&rows);
+    t.print();
+    t.write_csv("ablation_txn.csv");
+    txn::check(&rows).expect("txn sweep shape");
+}
+
+fn ablate_nvlink() {
+    println!("\n## Ablation 6: NVLink remote access (the paper's §1.2 TLB)");
+    use a100win::sim::nvlink::{run_remote, NvlinkConfig, PeerSpec};
+    let cfg = MachineConfig::a100_80gb();
+    let nv = NvlinkConfig::a100();
+    let mut t = Table::new(&["region_gib", "peers", "gbps", "tlb_hit_rate"]);
+    for (gib, peers) in [(32u64, 4usize), (60, 4), (80, 4), (80, 1)] {
+        let specs: Vec<PeerSpec> = (0..peers)
+            .map(|_| PeerSpec {
+                pattern: Pattern::Uniform(MemRegion::new(0, gib * GIB)),
+            })
+            .collect();
+        let m = run_remote(&cfg, &nv, &specs, 10_000, 11);
+        t.row(&[
+            gib.to_string(),
+            peers.to_string(),
+            format!("{:.0}", m.gbps),
+            format!("{:.3}", m.tlb_hit_rate),
+        ]);
+    }
+    // Sender-side windowing control: does NOT restore speed (single TLB).
+    let windows: Vec<PeerSpec> = (0..4)
+        .map(|i| PeerSpec {
+            pattern: Pattern::Uniform(MemRegion::new(i * 20 * GIB, 20 * GIB)),
+        })
+        .collect();
+    let m = run_remote(&cfg, &nv, &windows, 10_000, 12);
+    t.row(&[
+        "80(win)".into(),
+        "4".into(),
+        format!("{:.0}", m.gbps),
+        format!("{:.3}", m.tlb_hit_rate),
+    ]);
+    t.print();
+    t.write_csv("ablation_nvlink.csv");
+    println!("(windowed senders do not help: the ingress TLB is a single shared structure,");
+    println!(" unlike the per-group SM TLBs the paper's technique exploits)");
+}

@@ -1,0 +1,184 @@
+//! Bench: the L3 coordinator's request hot path.
+//!
+//! Three levels, innermost out:
+//!   1. router split+merge alone (pure CPU),
+//!   2. batcher submit->drain round trip,
+//!   3. full server lookups over PJRT artifacts (requires `make artifacts`).
+
+use std::time::{Duration, Instant};
+
+use a100win::coordinator::{
+    merge_rows, BatcherConfig, EmbeddingServer, Placement, PlacementPolicy, Router,
+    ServerConfig, Table, WindowPlan,
+};
+use a100win::probe::TopologyMap;
+use a100win::runtime::Runtime;
+use a100win::util::benchkit::{self, black_box};
+use a100win::util::rng::Rng;
+use a100win::workload::{RequestGen, WorkloadSpec};
+
+fn map14() -> TopologyMap {
+    TopologyMap {
+        groups: (0..14).map(|g| (g * 8..g * 8 + 8).collect()).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0; 14],
+        independent: true,
+        card_id: "bench".into(),
+    }
+}
+
+fn bench_router() {
+    let map = map14();
+    let total_rows: u64 = 1 << 24; // 16M rows = 2 GiB of 128 B lines
+    let plan = WindowPlan::split(total_rows, 128, 14);
+    let placement = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+    let mut router = Router::new(&plan, &placement);
+    let mut rng = Rng::seed_from_u64(1);
+    let batch: Vec<u64> = (0..4096).map(|_| rng.gen_range(total_rows)).collect();
+
+    // Throughput metric: routed rows/s.
+    let iters = 2_000;
+    let t = Instant::now();
+    for _ in 0..iters {
+        black_box(router.split(black_box(&batch)));
+    }
+    let dt = t.elapsed();
+    let rows_per_s = (iters as f64 * batch.len() as f64) / dt.as_secs_f64();
+    println!("router split: {:.2} M rows/s (batch 4096, 14 windows)", rows_per_s / 1e6);
+
+    benchkit::bench("router_split_4096", 10, 50, || {
+        black_box(router.split(black_box(&batch)));
+    });
+
+    // Split + identity merge round trip.
+    let d = 32;
+    benchkit::bench("router_split_merge_4096x32", 5, 20, || {
+        let split = router.split(&batch);
+        let parts: Vec<Vec<f32>> = split
+            .sub_batches
+            .iter()
+            .map(|sb| vec![1.0f32; sb.local_rows.len() * d])
+            .collect();
+        black_box(merge_rows(&split, &parts, d));
+    });
+}
+
+fn bench_batcher() {
+    let b: a100win::coordinator::Batcher<u32> = a100win::coordinator::Batcher::new(BatcherConfig {
+        max_batch_rows: 4096,
+        max_wait: Duration::from_millis(10),
+        max_pending: 1 << 20,
+    });
+    benchkit::bench("batcher_submit_drain_64x64", 5, 50, || {
+        for i in 0..64u32 {
+            b.try_submit(vec![7; 64], i).unwrap();
+        }
+        black_box(b.next_batch().unwrap());
+    });
+}
+
+fn bench_server() {
+    let Ok(dir) = Runtime::default_artifacts_dir() else {
+        println!("skipping server bench: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    drop(rt);
+    let windows = 2;
+    let rows = (meta.n * windows) as u64;
+    let table = Table::synthetic(rows, meta.d);
+    let plan = WindowPlan::split(rows, 128, windows);
+    let mut cfg = ServerConfig::new(dir);
+    cfg.policy = PlacementPolicy::GroupToChunk;
+    let map = TopologyMap {
+        groups: (0..4).map(|g| vec![g]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0; 4],
+        independent: true,
+        card_id: "bench".into(),
+    };
+    let server = EmbeddingServer::start(cfg, &map, plan, table).unwrap();
+
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, 1024, 3));
+    // Warm the executable caches.
+    for _ in 0..3 {
+        server.lookup(gen.next_request()).unwrap();
+    }
+    let iters = 100;
+    let t = Instant::now();
+    for _ in 0..iters {
+        black_box(server.lookup(gen.next_request()).unwrap());
+    }
+    let dt = t.elapsed();
+    let m = server.metrics();
+    println!(
+        "server end-to-end: {:.0} lookups/s of 1024 rows ({:.2} M rows/s); {}",
+        iters as f64 / dt.as_secs_f64(),
+        iters as f64 * 1024.0 / dt.as_secs_f64() / 1e6,
+        m.report()
+    );
+    server.shutdown();
+}
+
+fn main() {
+    println!("# Coordinator hot-path benchmarks");
+    bench_router();
+    bench_batcher();
+    bench_server();
+    bench_latency_curve();
+}
+
+/// Latency-throughput curve: open-loop Poisson offered-load sweep against
+/// the live server (the classic serving-paper figure).
+fn bench_latency_curve() {
+    let Ok(dir) = Runtime::default_artifacts_dir() else {
+        println!("skipping latency curve: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    drop(rt);
+    let rows = (meta.n * 2) as u64;
+    let table = Table::synthetic(rows, meta.d);
+    let plan = WindowPlan::split(rows, 128, 2);
+    let mut cfg = ServerConfig::new(dir);
+    cfg.policy = PlacementPolicy::GroupToChunk;
+    cfg.batcher.max_wait = Duration::from_micros(500);
+    let map = TopologyMap {
+        groups: (0..4).map(|g| vec![g]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0; 4],
+        independent: true,
+        card_id: "curve".into(),
+    };
+    let server = std::sync::Arc::new(EmbeddingServer::start(cfg, &map, plan, table).unwrap());
+    // Warm the executable caches.
+    let mut warm = RequestGen::new(WorkloadSpec::uniform(rows, 256, 1));
+    for _ in 0..3 {
+        server.lookup(warm.next_request()).unwrap();
+    }
+
+    use a100win::workload::{drive, OpenLoopConfig};
+    let mut t = a100win::util::benchkit::Table::new(&[
+        "offered_rps",
+        "achieved_rps",
+        "mean_us",
+        "p99_us",
+        "dropped",
+    ]);
+    println!("\n# Open-loop latency-throughput curve (256-row lookups)");
+    for offered in [100.0f64, 400.0, 800.0, 1600.0, 3200.0] {
+        let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, 256, 42));
+        let point = drive(&server, &mut gen, offered, &OpenLoopConfig::default());
+        t.row(&[
+            format!("{offered:.0}"),
+            format!("{:.0}", point.achieved_rps),
+            format!("{:.0}", point.mean_latency_us),
+            point.p99_latency_us.to_string(),
+            point.dropped.to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv("latency_curve.csv");
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Figure 1 (throughput vs region size, uniform and
+//! SM-to-chunk arms) and time the sweep.  CSV lands in bench_out/fig1.csv.
+
+use a100win::experiments::{fig1, Effort};
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let rows = fig1::run(effort, 42);
+    println!("# Figure 1: memory throughput for random access (GB/s)");
+    let t = fig1::table(&rows);
+    t.print();
+    t.write_csv("fig1.csv");
+    fig1::check(&rows).expect("figure 1 shape");
+
+    benchkit::bench("fig1_sweep", 0, 3, || {
+        benchkit::black_box(fig1::run(Effort::Quick, 43));
+    });
+}

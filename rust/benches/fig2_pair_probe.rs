@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Figure 2 (the SM-pair probe matrix) and time the
+//! full 108x108 sweep.  CSV lands in bench_out/fig2.csv.
+
+use a100win::experiments::{fig2, Effort};
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let t = std::time::Instant::now();
+    let f = fig2::run(effort, 42);
+    let dt = t.elapsed();
+    println!("# Figure 2: SM-pair probe matrix (smid order), probed in {:.1}s", dt.as_secs_f64());
+    print!("{}", fig2::render(&f));
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig2.csv", fig2::to_csv(&f)).expect("write fig2.csv");
+    println!("[csv] wrote bench_out/fig2.csv");
+
+    // Contrast metric: same-group vs cross-group pair throughput must be
+    // bimodal; report the achieved gap (the probe's signal-to-noise).
+    let mean = f.matrix.mean_offdiag();
+    println!("mean off-diagonal pair throughput: {mean:.2} GB/s");
+
+    benchkit::bench("single_pair_probe_run", 1, 10, || {
+        use a100win::prelude::*;
+        let m = a100win::experiments::common::paper_machine();
+        let spec = MeasurementSpec::uniform_all(
+            &[0, 1],
+            Pattern::Uniform(MemRegion::whole(m.config().memory.total_bytes)),
+            1_500,
+            7,
+        );
+        benchkit::black_box(m.run(&spec));
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Figure 3 (index rearrangement -> group blocks)
+//! and time the clustering step in isolation.
+
+use a100win::experiments::{fig3, Effort};
+use a100win::probe::cluster;
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let f = fig3::run(effort, 42);
+    println!("# Figure 3: rearranged SM indices");
+    print!("{}", fig3::render(&f));
+    println!("{}", fig3::summary(&f));
+    assert_eq!(f.clustering.groups.len(), 14, "must discover 14 groups");
+
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write(
+        "bench_out/fig3.csv",
+        f.fig2.matrix.to_csv(&f.clustering.permutation),
+    )
+    .expect("write fig3.csv");
+    println!("[csv] wrote bench_out/fig3.csv");
+
+    benchkit::bench("cluster_108x108_matrix", 1, 20, || {
+        benchkit::black_box(cluster(&f.fig2.matrix));
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Figure 4 (each resource group individually).
+
+use a100win::experiments::{fig4, Effort};
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let rows = fig4::run(effort, 42);
+    println!("# Figure 4: running each resource group individually");
+    let t = fig4::table(&rows);
+    t.print();
+    t.write_csv("fig4.csv");
+    fig4::check(&rows).expect("figure 4 shape");
+
+    benchkit::bench("solo_group_measurement", 1, 5, || {
+        benchkit::black_box(fig4::run(Effort::Quick, 43));
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Figure 5 (pairs of groups, disjoint regions).
+
+use a100win::experiments::{fig5, Effort};
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let f = fig5::run(effort, 42);
+    println!("# Figure 5: running pairs of resource groups");
+    let t = fig5::table(&f);
+    t.print();
+    t.write_csv("fig5.csv");
+    fig5::check(&f).expect("figure 5 shape");
+    let worst = f
+        .pairs
+        .iter()
+        .map(|p| (p.gbps / p.solo_sum - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    println!("worst deviation from independence: {:.1}%", worst * 100.0);
+
+    benchkit::bench("group_pair_measurement", 1, 5, || {
+        benchkit::black_box(fig5::run(Effort::Quick, 43));
+    });
+}

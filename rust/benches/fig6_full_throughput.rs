@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Figure 6 — the headline result.  All three
+//! placement policies vs region size; group-to-chunk must stay flat at the
+//! HBM ceiling over the entire 80 GiB.
+
+use a100win::experiments::{fig6, Effort};
+use a100win::util::benchkit;
+
+fn main() {
+    let effort = Effort::from_env();
+    let rows = fig6::run(effort, 42);
+    println!("# Figure 6: memory throughput for random access, take 2 (GB/s)");
+    let t = fig6::table(&rows);
+    t.print();
+    t.write_csv("fig6.csv");
+    fig6::check(&rows).expect("figure 6 shape");
+
+    let at80 = rows.iter().find(|r| r.region_gib == 80).unwrap();
+    println!(
+        "at 80 GiB: group-to-chunk {:.0} GB/s vs uniform {:.0} GB/s ({:.1}x)",
+        at80.group_to_chunk_gbps,
+        at80.uniform_gbps,
+        at80.group_to_chunk_gbps / at80.uniform_gbps
+    );
+
+    benchkit::bench("fig6_sweep", 0, 3, || {
+        benchkit::black_box(fig6::run(Effort::Quick, 43));
+    });
+}

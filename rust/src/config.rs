@@ -1,0 +1,334 @@
+//! Machine and simulation configuration.
+//!
+//! All hardware parameters of the simulated GPU live here, with presets
+//! calibrated so the A100-SXM4-80GB preset reproduces the paper's measured
+//! curves (see DESIGN.md §6 for the calibration derivation):
+//!
+//! * random 128 B coalesced reads over a TLB-resident region saturate at
+//!   ~1.3 TB/s device-wide (paper Fig 1/6 plateau),
+//! * a solo 8-SM resource group reaches ~120 GB/s and a 6-SM group ~90 GB/s
+//!   (paper Fig 4),
+//! * regions larger than the 64 GB per-group TLB reach collapse to the
+//!   page-walker service rate (paper Fig 1 cliff).
+
+/// Bytes in one GiB (the paper speaks in "GB" but means GiB-scale windows).
+pub const GIB: u64 = 1 << 30;
+
+/// One warp-coalesced access: 32 lanes x 32-bit words = 128 bytes.
+pub const LINE_BYTES: u64 = 128;
+
+/// Topology parameters: how many clusters exist physically and how many
+/// survive yield harvesting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyConfig {
+    /// Physical GPCs on the die (A100: 8).
+    pub physical_gpcs: usize,
+    /// GPCs enabled after harvesting (A100: 7).
+    pub enabled_gpcs: usize,
+    /// TPCs per GPC physically (A100: 8).
+    pub tpcs_per_gpc: usize,
+    /// Total enabled TPCs across the device (A100: 54 -> 108 SMs).
+    pub enabled_tpcs: usize,
+    /// SMs per TPC (A100: 2).
+    pub sms_per_tpc: usize,
+    /// Seed for the card-specific SM-enumeration permutation.  Real cards
+    /// differ ("this may vary card to card", paper §1.1); the probe must
+    /// not rely on the enumeration order.
+    pub smid_permutation_seed: u64,
+}
+
+impl TopologyConfig {
+    pub fn a100(seed: u64) -> Self {
+        Self {
+            physical_gpcs: 8,
+            enabled_gpcs: 7,
+            tpcs_per_gpc: 8,
+            enabled_tpcs: 54,
+            sms_per_tpc: 2,
+            smid_permutation_seed: seed,
+        }
+    }
+
+    /// Total enabled SMs.
+    pub fn sm_count(&self) -> usize {
+        self.enabled_tpcs * self.sms_per_tpc
+    }
+}
+
+/// TLB geometry for one SM resource group (half-GPC), plus the per-SM uTLB.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TlbConfig {
+    /// Page size in bytes (2 MiB on the simulated card).
+    pub page_bytes: u64,
+    /// Entries in the per-group TLB.  32768 x 2 MiB = 64 GiB reach — the
+    /// quantity the whole paper is about.
+    pub entries: usize,
+    /// Associativity of the per-group TLB (entries/assoc sets, LRU).
+    pub associativity: usize,
+    /// Entries in the per-SM micro-TLB (fully associative, LRU).  0 disables.
+    pub utlb_entries: usize,
+    /// Latency of a group-TLB hit, ns.
+    pub hit_ns: f64,
+    /// Latency of one page walk, ns (service time at a walker).
+    pub walk_ns: f64,
+    /// Page walkers per group (k-server pool); misses queue here, and this
+    /// service rate is what the Fig-1 cliff collapses onto.
+    pub walkers_per_group: usize,
+}
+
+impl TlbConfig {
+    pub fn a100() -> Self {
+        Self {
+            page_bytes: 2 * 1024 * 1024,
+            entries: 32768,
+            associativity: 8,
+            utlb_entries: 32,
+            hit_ns: 25.0,
+            walk_ns: 500.0,
+            walkers_per_group: 8,
+        }
+    }
+
+    /// TLB reach in bytes.
+    pub fn reach_bytes(&self) -> u64 {
+        self.entries as u64 * self.page_bytes
+    }
+
+    pub fn sets(&self) -> usize {
+        self.entries / self.associativity
+    }
+}
+
+/// HBM + interconnect parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// Total device memory, bytes (80 GiB preset).
+    pub total_bytes: u64,
+    /// Number of independent HBM channels (address-striped by line).
+    pub channels: usize,
+    /// Peak aggregate bandwidth, GB/s (A100 80GB: ~1935).
+    pub peak_gbps: f64,
+    /// Efficiency of a 128 B transaction (paper §2.1: 128 B random reads
+    /// reach ~1300/1935; 256 B ~1400; 512 B ~1600).
+    pub efficiency_128b: f64,
+    /// Fixed HBM access latency, ns (row activation + on-die transit).
+    pub base_latency_ns: f64,
+    /// Per-group memory-port bandwidth, GB/s.  Slightly above what a full
+    /// 8-SM group demands, so solo groups are SM-limited (Fig 4) but the
+    /// port still shapes heavy intra-group contention.
+    pub group_port_gbps: f64,
+    /// Per-GPC hub bandwidth, GB/s.  Both half-GPC groups of one GPC share
+    /// this; it is generously provisioned and only produces the *faint*
+    /// background pattern of Fig 2.
+    pub gpc_hub_gbps: f64,
+}
+
+impl MemoryConfig {
+    pub fn a100_80gb() -> Self {
+        Self {
+            total_bytes: 80 * GIB,
+            channels: 32,
+            peak_gbps: 1935.0,
+            efficiency_128b: 0.68,
+            base_latency_ns: 350.0,
+            group_port_gbps: 130.0,
+            gpc_hub_gbps: 260.0,
+        }
+    }
+
+    /// Effective per-channel bandwidth for a given transaction efficiency.
+    pub fn channel_gbps(&self, efficiency: f64) -> f64 {
+        self.peak_gbps * efficiency / self.channels as f64
+    }
+
+    /// Efficiency for a transaction of `bytes` (piecewise model of the
+    /// paper's §2.1 aside: 128 B ≈ 0.68, 256 B ≈ 0.72, 512 B ≈ 0.83).
+    pub fn txn_efficiency(&self, bytes: u64) -> f64 {
+        match bytes {
+            0..=128 => self.efficiency_128b,
+            129..=256 => 0.72,
+            257..=512 => 0.83,
+            _ => 0.90,
+        }
+    }
+}
+
+/// Per-SM execution parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmConfig {
+    /// Outstanding line accesses one SM keeps in flight (latency hiding by
+    /// resident warps; each warp has one coalesced access outstanding).
+    pub outstanding: usize,
+    /// Minimum interval between successive issues from one SM, ns.
+    pub issue_interval_ns: f64,
+}
+
+impl SmConfig {
+    pub fn a100() -> Self {
+        Self {
+            outstanding: 48,
+            issue_interval_ns: 0.7,
+        }
+    }
+}
+
+/// Everything about the simulated machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    pub topology: TopologyConfig,
+    pub tlb: TlbConfig,
+    pub memory: MemoryConfig,
+    pub sm: SmConfig,
+}
+
+impl MachineConfig {
+    /// The card the paper measured: SXM4-80GB.
+    pub fn a100_80gb() -> Self {
+        Self {
+            topology: TopologyConfig::a100(0xA100),
+            tlb: TlbConfig::a100(),
+            memory: MemoryConfig::a100_80gb(),
+            sm: SmConfig::a100(),
+        }
+    }
+
+    /// The 40 GB launch variant (same groups, half the memory; the whole
+    /// memory fits under one TLB reach, so the paper's problem never
+    /// arises — useful as a control in tests and ablations).
+    pub fn a100_40gb() -> Self {
+        let mut c = Self::a100_80gb();
+        c.memory.total_bytes = 40 * GIB;
+        c
+    }
+
+    /// A tiny machine for fast unit tests: 2 GPCs / 4 groups / 12 SMs and a
+    /// scaled-down TLB so tests exercise the cliff in milliseconds.
+    pub fn tiny_test() -> Self {
+        Self {
+            topology: TopologyConfig {
+                physical_gpcs: 2,
+                enabled_gpcs: 2,
+                tpcs_per_gpc: 4,
+                enabled_tpcs: 6,
+                sms_per_tpc: 2,
+                smid_permutation_seed: 7,
+            },
+            tlb: TlbConfig {
+                page_bytes: 1 << 16, // 64 KiB pages
+                entries: 256,        // reach = 16 MiB
+                associativity: 4,
+                utlb_entries: 8,
+                hit_ns: 25.0,
+                walk_ns: 500.0,
+                walkers_per_group: 4,
+            },
+            memory: MemoryConfig {
+                total_bytes: 64 << 20, // 64 MiB
+                channels: 8,
+                peak_gbps: 1935.0,
+                efficiency_128b: 0.68,
+                base_latency_ns: 350.0,
+                group_port_gbps: 130.0,
+                gpc_hub_gbps: 260.0,
+            },
+            sm: SmConfig::a100(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.topology.enabled_gpcs == 0
+            || self.topology.enabled_gpcs > self.topology.physical_gpcs
+        {
+            return Err("enabled_gpcs must be in 1..=physical_gpcs".into());
+        }
+        let max_tpcs = self.topology.enabled_gpcs * self.topology.tpcs_per_gpc;
+        if self.topology.enabled_tpcs == 0 || self.topology.enabled_tpcs > max_tpcs {
+            return Err(format!(
+                "enabled_tpcs {} must be in 1..={max_tpcs}",
+                self.topology.enabled_tpcs
+            ));
+        }
+        // Every enabled GPC must keep >= 1 TPC per half for the half-GPC
+        // grouping to be well defined.
+        if self.topology.enabled_tpcs < self.topology.enabled_gpcs * 2 {
+            return Err("need at least 2 TPCs per enabled GPC".into());
+        }
+        if self.tlb.entries == 0 || self.tlb.associativity == 0 {
+            return Err("tlb entries/associativity must be nonzero".into());
+        }
+        if self.tlb.entries % self.tlb.associativity != 0 {
+            return Err("tlb entries must be divisible by associativity".into());
+        }
+        if !self.tlb.page_bytes.is_power_of_two() {
+            return Err("page_bytes must be a power of two".into());
+        }
+        if self.memory.total_bytes % self.tlb.page_bytes != 0 {
+            return Err("total_bytes must be page-aligned".into());
+        }
+        if self.memory.channels == 0 {
+            return Err("need at least one HBM channel".into());
+        }
+        if self.sm.outstanding == 0 {
+            return Err("sm.outstanding must be nonzero".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_preset_validates() {
+        MachineConfig::a100_80gb().validate().unwrap();
+        MachineConfig::a100_40gb().validate().unwrap();
+        MachineConfig::tiny_test().validate().unwrap();
+    }
+
+    #[test]
+    fn a100_reach_is_64_gib() {
+        assert_eq!(TlbConfig::a100().reach_bytes(), 64 * GIB);
+    }
+
+    #[test]
+    fn a100_sm_count_is_108() {
+        assert_eq!(TopologyConfig::a100(0).sm_count(), 108);
+    }
+
+    #[test]
+    fn channel_bandwidth_sums_to_effective_peak() {
+        let m = MemoryConfig::a100_80gb();
+        let agg = m.channel_gbps(m.efficiency_128b) * m.channels as f64;
+        assert!((agg - 1935.0 * 0.68).abs() < 1e-9);
+    }
+
+    #[test]
+    fn txn_efficiency_monotone() {
+        let m = MemoryConfig::a100_80gb();
+        assert!(m.txn_efficiency(128) < m.txn_efficiency(256));
+        assert!(m.txn_efficiency(256) < m.txn_efficiency(512));
+        assert!(m.txn_efficiency(512) < m.txn_efficiency(1024));
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut c = MachineConfig::a100_80gb();
+        c.tlb.associativity = 3;
+        c.tlb.entries = 32768;
+        assert!(c.validate().is_err());
+
+        let mut c = MachineConfig::a100_80gb();
+        c.topology.enabled_tpcs = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = MachineConfig::a100_80gb();
+        c.tlb.page_bytes = 3 << 20;
+        assert!(c.validate().is_err());
+
+        let mut c = MachineConfig::a100_80gb();
+        c.memory.channels = 0;
+        assert!(c.validate().is_err());
+    }
+
+}

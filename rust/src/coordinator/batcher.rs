@@ -1,0 +1,275 @@
+//! Dynamic batching: accumulate lookup requests until a size or deadline
+//! trigger, then emit one batch (vLLM-router-style continuous batching,
+//! scoped to the lookup workload).
+//!
+//! Thread-safe: producers call [`Batcher::submit`], the serving loop calls
+//! [`Batcher::next_batch`].  Backpressure: a bounded queue; `submit` blocks
+//! when `max_pending` requests are waiting (tests cover the non-blocking
+//! `try_submit` too).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One enqueued request: global row indices + an opaque ticket the server
+/// uses to respond.
+#[derive(Debug)]
+pub struct PendingRequest<T> {
+    pub rows: Vec<u64>,
+    pub ticket: T,
+    pub enqueued: Instant,
+}
+
+/// A formed batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub requests: Vec<PendingRequest<T>>,
+}
+
+impl<T> Batch<T> {
+    pub fn total_rows(&self) -> usize {
+        self.requests.iter().map(|r| r.rows.len()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Emit when this many rows are pending...
+    pub max_batch_rows: usize,
+    /// ...or when the oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Bound on queued requests (backpressure).
+    pub max_pending: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch_rows: 4096,
+            max_wait: Duration::from_millis(2),
+            max_pending: 1024,
+        }
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<PendingRequest<T>>,
+    pending_rows: usize,
+    closed: bool,
+}
+
+/// The batching queue.
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    state: Mutex<State<T>>,
+    /// Signals consumers (batch ready / closed) and producers (space freed).
+    cv: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch_rows > 0 && cfg.max_pending > 0);
+        Self {
+            cfg,
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                pending_rows: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request, blocking while the queue is full.  Returns Err if
+    /// the batcher is closed.
+    pub fn submit(&self, rows: Vec<u64>, ticket: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        while st.queue.len() >= self.cfg.max_pending && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(ticket);
+        }
+        st.pending_rows += rows.len();
+        st.queue.push_back(PendingRequest {
+            rows,
+            ticket,
+            enqueued: Instant::now(),
+        });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking submit; Err(ticket) when full or closed.
+    pub fn try_submit(&self, rows: Vec<u64>, ticket: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.queue.len() >= self.cfg.max_pending {
+            return Err(ticket);
+        }
+        st.pending_rows += rows.len();
+        st.queue.push_back(PendingRequest {
+            rows,
+            ticket,
+            enqueued: Instant::now(),
+        });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a batch is ready (size or deadline trigger) or the
+    /// batcher is closed and drained.  Returns None on closed+empty.
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                let oldest_wait = st.queue.front().unwrap().enqueued.elapsed();
+                if st.pending_rows >= self.cfg.max_batch_rows
+                    || oldest_wait >= self.cfg.max_wait
+                    || st.closed
+                {
+                    return Some(self.drain_batch(&mut st));
+                }
+                // Wait out the remaining deadline (or a new submit).
+                let remaining = self.cfg.max_wait - oldest_wait;
+                let (guard, _timeout) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    fn drain_batch(&self, st: &mut State<T>) -> Batch<T> {
+        let mut requests = Vec::new();
+        let mut rows = 0usize;
+        while let Some(front) = st.queue.front() {
+            let next = front.rows.len();
+            // Always take at least one request; stop before exceeding the
+            // cap (oversized single requests still pass through whole).
+            if !requests.is_empty() && rows + next > self.cfg.max_batch_rows {
+                break;
+            }
+            rows += next;
+            let req = st.queue.pop_front().unwrap();
+            requests.push(req);
+            if rows >= self.cfg.max_batch_rows {
+                break;
+            }
+        }
+        st.pending_rows -= rows;
+        self.cv.notify_all(); // wake blocked producers
+        Batch { requests }
+    }
+
+    /// Close: further submits fail; queued requests still drain.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn cfg(rows: usize, wait_ms: u64, pending: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch_rows: rows,
+            max_wait: Duration::from_millis(wait_ms),
+            max_pending: pending,
+        }
+    }
+
+    #[test]
+    fn size_trigger_forms_batch() {
+        let b: Batcher<u32> = Batcher::new(cfg(8, 10_000, 100));
+        b.submit(vec![1, 2, 3, 4], 0).unwrap();
+        b.submit(vec![5, 6, 7, 8], 1).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.total_rows(), 8);
+    }
+
+    #[test]
+    fn deadline_trigger_fires_for_small_batch() {
+        let b: Batcher<u32> = Batcher::new(cfg(1_000_000, 5, 100));
+        b.submit(vec![1, 2], 7).unwrap();
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(4));
+        assert!(t.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn batch_respects_row_cap() {
+        let b: Batcher<u32> = Batcher::new(cfg(6, 10_000, 100));
+        for i in 0..4 {
+            b.submit(vec![0, 1, 2], i).unwrap(); // 3 rows each
+        }
+        let batch = b.next_batch().unwrap();
+        // 3+3=6 hits the cap exactly; third request stays queued.
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn oversized_request_passes_whole() {
+        let b: Batcher<u32> = Batcher::new(cfg(4, 10_000, 100));
+        b.submit((0..10).collect(), 0).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.total_rows(), 10);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b: Batcher<u32> = Batcher::new(cfg(1_000, 10_000, 100));
+        b.submit(vec![1], 0).unwrap();
+        b.close();
+        assert!(b.submit(vec![2], 1).is_err());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        let b: Batcher<u32> = Batcher::new(cfg(1_000, 10_000, 2));
+        assert!(b.try_submit(vec![1], 0).is_ok());
+        assert!(b.try_submit(vec![2], 1).is_ok());
+        assert!(b.try_submit(vec![3], 2).is_err()); // full
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(cfg(64, 1, 16)));
+        let n_requests = 200;
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..n_requests {
+                    b.submit(vec![i as u64; 4], i).unwrap();
+                }
+                b.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            for r in batch.requests {
+                seen.push(r.ticket);
+            }
+        }
+        producer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_requests).collect::<Vec<_>>());
+    }
+}

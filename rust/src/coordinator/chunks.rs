@@ -1,0 +1,267 @@
+//! Window (chunk) management: slice a huge random-access table into
+//! windows no larger than the probed TLB reach.
+//!
+//! The table lives in *row* space: `rows x d` f32 rows, one row = one
+//! 128-byte line when d = 32.  A [`WindowPlan`] cuts the row space into
+//! equal windows; the paper's requirement is `window_bytes <= reach` so
+//! that any SM group confined to one window never thrashes its TLB.
+
+/// One window of table rows `[start_row, start_row + rows)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub id: usize,
+    pub start_row: u64,
+    pub rows: u64,
+}
+
+impl Window {
+    pub fn end_row(&self) -> u64 {
+        self.start_row + self.rows
+    }
+
+    pub fn contains(&self, row: u64) -> bool {
+        row >= self.start_row && row < self.end_row()
+    }
+
+    /// Row index local to the window.
+    pub fn localize(&self, row: u64) -> u64 {
+        debug_assert!(self.contains(row));
+        row - self.start_row
+    }
+}
+
+/// The full partition of a table's row space into windows.
+#[derive(Debug, Clone)]
+pub struct WindowPlan {
+    pub total_rows: u64,
+    pub row_bytes: u64,
+    windows: Vec<Window>,
+    /// Row width of all non-final windows (for O(1) lookup).
+    stride: u64,
+}
+
+impl WindowPlan {
+    /// Cut `total_rows` into `count` near-equal windows.
+    pub fn split(total_rows: u64, row_bytes: u64, count: usize) -> Self {
+        assert!(count >= 1);
+        assert!(
+            total_rows >= count as u64,
+            "fewer rows ({total_rows}) than windows ({count})"
+        );
+        let stride = total_rows.div_ceil(count as u64);
+        let mut windows = Vec::with_capacity(count);
+        let mut start = 0;
+        for id in 0..count {
+            let rows = stride.min(total_rows - start);
+            assert!(rows > 0, "window {id} would be empty");
+            windows.push(Window {
+                id,
+                start_row: start,
+                rows,
+            });
+            start += rows;
+        }
+        assert_eq!(start, total_rows);
+        Self {
+            total_rows,
+            row_bytes,
+            windows,
+            stride,
+        }
+    }
+
+    /// Cut a table into as few windows as possible subject to the probed
+    /// reach (the paper's construction: windows <= reach, one per group,
+    /// group count permitting).
+    pub fn for_reach(
+        total_rows: u64,
+        row_bytes: u64,
+        reach_bytes: u64,
+        max_windows: usize,
+    ) -> anyhow::Result<Self> {
+        let total_bytes = total_rows * row_bytes;
+        let need = total_bytes.div_ceil(reach_bytes).max(1) as usize;
+        if need > max_windows {
+            anyhow::bail!(
+                "table of {total_bytes} bytes needs {need} windows of <= {reach_bytes} bytes, \
+                 but only {max_windows} groups are available"
+            );
+        }
+        Ok(Self::split(total_rows, row_bytes, need))
+    }
+
+    pub fn windows(&self) -> &[Window] {
+        &self.windows
+    }
+
+    pub fn count(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Window containing a global row (O(1)).
+    pub fn window_of(&self, row: u64) -> &Window {
+        assert!(row < self.total_rows, "row {row} out of table");
+        let idx = (row / self.stride) as usize;
+        // Final window may be shorter than stride; idx can overshoot by one
+        // only when stride divides unevenly — clamp.
+        let idx = idx.min(self.windows.len() - 1);
+        debug_assert!(self.windows[idx].contains(row));
+        &self.windows[idx]
+    }
+
+    /// Bytes spanned by one window.
+    pub fn window_bytes(&self, w: &Window) -> u64 {
+        w.rows * self.row_bytes
+    }
+
+    /// Are all windows within `reach` bytes?  (The paper's invariant.)
+    pub fn fits_reach(&self, reach_bytes: u64) -> bool {
+        self.windows
+            .iter()
+            .all(|w| self.window_bytes(w) <= reach_bytes)
+    }
+
+    /// The device byte region of a window (rows scaled by row_bytes) — for
+    /// driving the simulator with window-constrained access patterns.
+    pub fn region_of(&self, w: &Window) -> crate::sim::MemRegion {
+        crate::sim::MemRegion::new(w.start_row * self.row_bytes, w.rows * self.row_bytes)
+    }
+}
+
+/// Row width in bytes for a `d`-wide f32 table (d=32 -> one 128 B line).
+pub fn row_bytes_for_d(d: usize) -> u64 {
+    (d * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_rows_exactly() {
+        let p = WindowPlan::split(1000, 128, 3);
+        assert_eq!(p.count(), 3);
+        let total: u64 = p.windows().iter().map(|w| w.rows).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(p.windows()[0].start_row, 0);
+        for w in p.windows().windows(2) {
+            assert_eq!(w[0].end_row(), w[1].start_row);
+        }
+    }
+
+    #[test]
+    fn window_of_is_consistent_with_contains() {
+        let p = WindowPlan::split(1000, 128, 7);
+        for row in 0..1000 {
+            let w = p.window_of(row);
+            assert!(w.contains(row));
+            assert_eq!(w.localize(row), row - w.start_row);
+        }
+    }
+
+    #[test]
+    fn for_reach_minimizes_window_count() {
+        // 1 GiB of rows at 128 B, reach 256 MiB -> 4 windows.
+        let rows = (1u64 << 30) / 128;
+        let p = WindowPlan::for_reach(rows, 128, 256 << 20, 14).unwrap();
+        assert_eq!(p.count(), 4);
+        assert!(p.fits_reach(256 << 20));
+    }
+
+    #[test]
+    fn for_reach_single_window_when_table_fits() {
+        let p = WindowPlan::for_reach(1024, 128, 1 << 30, 14).unwrap();
+        assert_eq!(p.count(), 1);
+    }
+
+    #[test]
+    fn for_reach_fails_when_groups_insufficient() {
+        // 100 windows needed, only 14 groups.
+        let rows = (100u64 << 20) / 128;
+        assert!(WindowPlan::for_reach(rows, 128, 1 << 20, 14).is_err());
+    }
+
+    #[test]
+    fn line_rows() {
+        assert_eq!(row_bytes_for_d(32), crate::config::LINE_BYTES);
+    }
+
+    #[test]
+    fn uneven_final_window() {
+        let p = WindowPlan::split(10, 128, 3);
+        let sizes: Vec<u64> = p.windows().iter().map(|w| w.rows).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(p.window_of(9).id, 2);
+        assert_eq!(p.window_of(8).id, 2);
+        assert_eq!(p.window_of(7).id, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of table")]
+    fn window_of_out_of_range_panics() {
+        WindowPlan::split(10, 128, 2).window_of(10);
+    }
+
+    #[test]
+    fn region_of_maps_rows_to_bytes() {
+        let p = WindowPlan::split(1000, 128, 2);
+        let r = p.region_of(&p.windows()[1]);
+        assert_eq!(r.base, 500 * 128);
+        assert_eq!(r.len, 500 * 128);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn property_split_partitions_and_localizes() {
+        prop::check("windowplan-partition", 60, |g| {
+            let rows = g.u64(1, 100_000);
+            let count = g.usize(1, 16.min(rows as usize));
+            let plan = WindowPlan::split(rows, 128, count);
+
+            // Windows tile the row space exactly.
+            assert_eq!(plan.windows()[0].start_row, 0);
+            assert_eq!(plan.windows().last().unwrap().end_row(), rows);
+            for w in plan.windows().windows(2) {
+                assert_eq!(w[0].end_row(), w[1].start_row);
+                assert!(w[0].rows > 0 && w[1].rows > 0);
+            }
+
+            // window_of + localize round-trip for random rows.
+            for _ in 0..50 {
+                let row = g.u64(0, rows - 1);
+                let w = plan.window_of(row);
+                assert!(w.contains(row));
+                assert_eq!(w.start_row + w.localize(row), row);
+            }
+        });
+    }
+
+    #[test]
+    fn property_for_reach_respects_invariant() {
+        prop::check("windowplan-reach", 40, |g| {
+            let rows = g.u64(1024, 1 << 22);
+            let reach = g.u64(1 << 17, 1 << 26);
+            match WindowPlan::for_reach(rows, 128, reach, 14) {
+                Ok(plan) => {
+                    assert!(plan.fits_reach(reach), "window exceeds reach");
+                    assert!(plan.count() <= 14);
+                    // Minimality: one fewer window would violate reach
+                    // (unless a single window already fits).
+                    if plan.count() > 1 {
+                        let fewer = WindowPlan::split(rows, 128, plan.count() - 1);
+                        assert!(!fewer.fits_reach(reach));
+                    }
+                }
+                Err(_) => {
+                    // Only legal when even 14 windows cannot satisfy reach.
+                    assert!(rows * 128 > reach * 14);
+                }
+            }
+        });
+    }
+}

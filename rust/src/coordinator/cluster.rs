@@ -1,0 +1,322 @@
+//! Multi-card coordination: shard a table larger than one device across
+//! several probed cards, each with its own (card-specific!) topology map.
+//!
+//! The paper stresses that the smid->group mapping "may vary card to card"
+//! — so a fleet deployment probes every card once at install time and the
+//! coordinator composes the per-card maps.  Routing becomes two-level:
+//!
+//! ```text
+//! global row ──► card (device-level shard) ──► window ──► SM group
+//! ```
+//!
+//! Each card independently applies group-to-chunk placement inside its
+//! shard; the fleet-level router only needs shard boundaries.  Capacity-
+//! aware sharding sizes each card's shard by its probed aggregate
+//! throughput (cards may differ: a 40 GB card takes a smaller shard).
+
+use anyhow::{anyhow, Context};
+
+use crate::probe::TopologyMap;
+
+use super::chunks::WindowPlan;
+use super::placement::{Placement, PlacementPolicy};
+
+/// One card in the fleet: its probe result and memory budget.
+#[derive(Debug, Clone)]
+pub struct CardSpec {
+    pub map: TopologyMap,
+    /// Device memory usable for the table, bytes.
+    pub memory_bytes: u64,
+}
+
+impl CardSpec {
+    /// Probed aggregate capacity, GB/s.
+    pub fn capacity_gbps(&self) -> f64 {
+        self.map.solo_gbps.iter().sum()
+    }
+}
+
+/// A card's slice of the global row space, with its internal plan.
+#[derive(Debug, Clone)]
+pub struct CardShard {
+    pub card: usize,
+    pub start_row: u64,
+    pub rows: u64,
+    pub plan: WindowPlan,
+    pub placement: Placement,
+}
+
+impl CardShard {
+    pub fn end_row(&self) -> u64 {
+        self.start_row + self.rows
+    }
+
+    pub fn contains(&self, row: u64) -> bool {
+        row >= self.start_row && row < self.end_row()
+    }
+}
+
+/// The fleet-level plan.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub shards: Vec<CardShard>,
+    pub total_rows: u64,
+    pub row_bytes: u64,
+}
+
+impl FleetPlan {
+    /// Shard `total_rows` across `cards`, proportionally to probed
+    /// capacity, honoring per-card memory and reach limits; inside each
+    /// card, build a `GroupToChunk` placement over reach-sized windows.
+    pub fn build(
+        cards: &[CardSpec],
+        total_rows: u64,
+        row_bytes: u64,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        if cards.is_empty() {
+            return Err(anyhow!("no cards"));
+        }
+        let total_bytes = total_rows * row_bytes;
+        let fleet_mem: u64 = cards.iter().map(|c| c.memory_bytes).sum();
+        if total_bytes > fleet_mem {
+            return Err(anyhow!(
+                "table needs {total_bytes} bytes but the fleet only has {fleet_mem}"
+            ));
+        }
+        let fleet_cap: f64 = cards.iter().map(|c| c.capacity_gbps()).sum();
+
+        // Capacity-proportional split, clamped to per-card memory, with the
+        // remainder spilled to cards that still have room.
+        let mut rows_of: Vec<u64> = cards
+            .iter()
+            .map(|c| {
+                let ideal = (total_rows as f64 * c.capacity_gbps() / fleet_cap) as u64;
+                ideal.min(c.memory_bytes / row_bytes)
+            })
+            .collect();
+        let mut assigned: u64 = rows_of.iter().sum();
+        // Distribute the rounding/clamping remainder.
+        'outer: while assigned < total_rows {
+            let mut progressed = false;
+            for (i, c) in cards.iter().enumerate() {
+                let room = c.memory_bytes / row_bytes - rows_of[i];
+                if room > 0 {
+                    let take = room.min(total_rows - assigned);
+                    rows_of[i] += take;
+                    assigned += take;
+                    progressed = true;
+                    if assigned == total_rows {
+                        break 'outer;
+                    }
+                }
+            }
+            if !progressed {
+                return Err(anyhow!("could not place all rows"));
+            }
+        }
+        // Trim over-assignment (possible only from the ideal rounding up).
+        while assigned > total_rows {
+            for r in rows_of.iter_mut() {
+                if *r > 0 && assigned > total_rows {
+                    let give = (*r).min(assigned - total_rows);
+                    *r -= give;
+                    assigned -= give;
+                }
+            }
+        }
+
+        let mut shards = Vec::new();
+        let mut start = 0u64;
+        for (i, c) in cards.iter().enumerate() {
+            let rows = rows_of[i];
+            if rows == 0 {
+                continue;
+            }
+            let plan = WindowPlan::for_reach(rows, row_bytes, c.map.reach_bytes, c.map.groups.len())
+                .with_context(|| format!("card {i}"))?;
+            let placement = Placement::build(PlacementPolicy::GroupToChunk, &c.map, &plan, seed)
+                .with_context(|| format!("card {i}"))?;
+            shards.push(CardShard {
+                card: i,
+                start_row: start,
+                rows,
+                plan,
+                placement,
+            });
+            start += rows;
+        }
+        debug_assert_eq!(start, total_rows);
+        Ok(Self {
+            shards,
+            total_rows,
+            row_bytes,
+        })
+    }
+
+    /// Two-level route: global row -> (shard index, card-local row).
+    pub fn route(&self, row: u64) -> anyhow::Result<(usize, u64)> {
+        if row >= self.total_rows {
+            return Err(anyhow!("row {row} out of table"));
+        }
+        // Shards are few (fleet-sized); linear scan beats binary search at
+        // n <= ~16 and is branch-predictable.
+        for (si, s) in self.shards.iter().enumerate() {
+            if s.contains(row) {
+                return Ok((si, row - s.start_row));
+            }
+        }
+        unreachable!("shards tile the row space");
+    }
+
+    /// Split a request batch by card: returns per-shard (local rows,
+    /// original positions).
+    pub fn split(&self, rows: &[u64]) -> anyhow::Result<Vec<(Vec<u64>, Vec<u32>)>> {
+        let mut out: Vec<(Vec<u64>, Vec<u32>)> =
+            (0..self.shards.len()).map(|_| Default::default()).collect();
+        for (pos, &row) in rows.iter().enumerate() {
+            let (si, local) = self.route(row)?;
+            out[si].0.push(local);
+            out[si].1.push(pos as u32);
+        }
+        Ok(out)
+    }
+
+    /// The paper's invariant across the whole fleet.
+    pub fn fits_reach(&self, cards: &[CardSpec]) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.plan.fits_reach(cards[s.card].map.reach_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+    use crate::util::prop;
+
+    fn card(groups: usize, sms_per_group: usize, gbps: f64, mem_gib: u64) -> CardSpec {
+        CardSpec {
+            map: TopologyMap {
+                groups: (0..groups)
+                    .map(|g| (g * sms_per_group..(g + 1) * sms_per_group).collect())
+                    .collect(),
+                reach_bytes: 64 * GIB,
+                solo_gbps: vec![gbps; groups],
+                independent: true,
+                card_id: format!("card-{groups}x{sms_per_group}"),
+            },
+            memory_bytes: mem_gib * GIB,
+        }
+    }
+
+    #[test]
+    fn two_equal_cards_split_evenly() {
+        let cards = vec![card(14, 8, 120.0, 80), card(14, 8, 120.0, 80)];
+        let rows = 120 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        assert_eq!(plan.shards.len(), 2);
+        let r0 = plan.shards[0].rows as f64;
+        let r1 = plan.shards[1].rows as f64;
+        assert!((r0 / r1 - 1.0).abs() < 0.01, "{r0} vs {r1}");
+        assert!(plan.fits_reach(&cards));
+    }
+
+    #[test]
+    fn capacity_weighting_favors_faster_card() {
+        // Card B has 6-SM groups only (slower): gets a smaller shard.
+        let cards = vec![card(14, 8, 120.0, 80), card(14, 6, 90.0, 80)];
+        let rows = 100 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        assert!(plan.shards[0].rows > plan.shards[1].rows);
+        let ratio = plan.shards[0].rows as f64 / plan.shards[1].rows as f64;
+        assert!((ratio - 120.0 / 90.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_clamp_spills_to_other_cards() {
+        // A fast card with tiny memory cannot take its capacity share.
+        let cards = vec![card(14, 8, 200.0, 10), card(14, 8, 100.0, 80)];
+        let rows = 60 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        assert_eq!(plan.shards[0].rows, 10 * GIB / 128);
+        assert_eq!(plan.shards[1].rows, 50 * GIB / 128);
+    }
+
+    #[test]
+    fn oversized_table_rejected() {
+        let cards = vec![card(14, 8, 120.0, 80)];
+        assert!(FleetPlan::build(&cards, 100 * GIB / 128, 128, 0).is_err());
+    }
+
+    #[test]
+    fn route_and_split_are_consistent() {
+        let cards = vec![card(14, 8, 120.0, 80), card(14, 8, 110.0, 40)];
+        let rows = 90 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 1).unwrap();
+        let batch: Vec<u64> = vec![0, rows - 1, rows / 2, 17, rows / 3];
+        let split = plan.split(&batch).unwrap();
+        let mut covered = 0;
+        for (si, (locals, positions)) in split.iter().enumerate() {
+            for (k, &local) in locals.iter().enumerate() {
+                let global = plan.shards[si].start_row + local;
+                assert_eq!(global, batch[positions[k] as usize]);
+                covered += 1;
+            }
+        }
+        assert_eq!(covered, batch.len());
+        assert!(plan.route(rows).is_err());
+    }
+
+    #[test]
+    fn per_card_windows_respect_each_cards_reach() {
+        // Mixed fleet: an 80 GiB card needs 2 windows, a 40 GiB fits in 1.
+        let cards = vec![card(14, 8, 120.0, 80), card(14, 8, 120.0, 40)];
+        let rows = 120 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        assert!(plan.fits_reach(&cards));
+        for s in &plan.shards {
+            // Every window pinned to a group of ITS card.
+            for w in 0..s.plan.count() {
+                assert!(!s.placement.serving_groups(w).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn property_fleet_shards_tile_rows() {
+        prop::check("fleet-tiling", 40, |g| {
+            let n_cards = g.usize(1, 4);
+            let cards: Vec<CardSpec> = (0..n_cards)
+                .map(|_| {
+                    card(
+                        g.usize(2, 14),
+                        *g.pick(&[6, 8]),
+                        g.f64(80.0, 130.0),
+                        g.u64(8, 80),
+                    )
+                })
+                .collect();
+            let fleet_rows: u64 = cards.iter().map(|c| c.memory_bytes / 128).sum();
+            let rows = g.u64(1 << 16, fleet_rows);
+            let Ok(plan) = FleetPlan::build(&cards, rows, 128, g.u64(0, 99)) else {
+                return; // reach constraints can legitimately fail
+            };
+            // Shards tile [0, rows).
+            let mut cursor = 0;
+            for s in &plan.shards {
+                assert_eq!(s.start_row, cursor);
+                cursor = s.end_row();
+            }
+            assert_eq!(cursor, rows);
+            // Random routes agree with containment.
+            for _ in 0..20 {
+                let row = g.u64(0, rows - 1);
+                let (si, local) = plan.route(row).unwrap();
+                assert!(plan.shards[si].contains(row));
+                assert_eq!(plan.shards[si].start_row + local, row);
+            }
+        });
+    }
+}

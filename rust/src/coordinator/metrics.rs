@@ -1,0 +1,193 @@
+//! Serving metrics: lock-free counters + log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram, 1 µs .. ~1 s.
+const BUCKETS: usize = 22;
+
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket_of(us: u64) -> usize {
+        (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let want = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= want {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_latency_us: self.latency.quantile_us(0.50),
+            p99_latency_us: self.latency.quantile_us(0.99),
+            max_latency_us: self.latency.max_us(),
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub max_latency_us: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} rows={} batches={} padded={} errors={} rejected={} \
+             latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
+            self.requests,
+            self.rows,
+            self.batches,
+            self.padded_rows,
+            self.errors,
+            self.rejected,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.max_latency_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 220.0).abs() < 1.0);
+        assert!(h.quantile_us(0.5) >= 16 && h.quantile_us(0.5) <= 64);
+        assert!(h.quantile_us(0.99) >= 1000);
+        assert_eq!(h.max_us(), 1000);
+    }
+
+    #[test]
+    fn bucket_mapping_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 5, 100, 10_000, 1_000_000, u64::MAX / 2] {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= last);
+            last = b;
+            assert!(b < BUCKETS);
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.rows.fetch_add(300, Ordering::Relaxed);
+        m.latency.record(Duration::from_micros(50));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.rows, 300);
+        assert!(s.report().contains("requests=3"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.rows.fetch_add(1, Ordering::Relaxed);
+                        m.latency.record(Duration::from_micros(7));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.rows.load(Ordering::Relaxed), 8000);
+        assert_eq!(m.latency.count(), 8000);
+    }
+}

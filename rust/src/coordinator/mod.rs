@@ -1,0 +1,36 @@
+//! L3 coordinator: the paper's result productized as a serving layer.
+//!
+//! The paper shows that full-speed random access to all 80 GB requires
+//! confining each SM resource group to a window smaller than its 64 GB TLB
+//! reach.  This module turns that into a deployable system for the workload
+//! the paper motivates (random cache-line lookups over a huge table):
+//!
+//! * [`chunks`]    — slice the table into windows <= probed reach.
+//! * [`placement`] — pin groups to windows (the paper's three arms:
+//!                   Naive / SmToChunk / GroupToChunk).
+//! * [`router`]    — split requests by owning window, merge in order.
+//! * [`batcher`]   — dynamic batching with deadline + backpressure.
+//! * [`server`]    — per-group worker threads executing AOT gather
+//!                   kernels via PJRT ([`crate::runtime`]).
+//! * [`state`]     — assignment epochs, group health, rebalancing.
+//! * [`cluster`]   — fleet-level sharding across several probed cards
+//!                   (maps vary card to card, per the paper).
+//! * [`metrics`]   — counters + latency histogram.
+
+pub mod batcher;
+pub mod chunks;
+pub mod cluster;
+pub mod metrics;
+pub mod placement;
+pub mod router;
+pub mod server;
+pub mod state;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use chunks::{Window, WindowPlan};
+pub use cluster::{CardSpec, CardShard, FleetPlan};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use placement::{Placement, PlacementPolicy};
+pub use router::{merge_rows, pad_indices, Router};
+pub use server::{EmbeddingServer, ServerConfig, Table};
+pub use state::{CoordinatorState, GroupHealth};

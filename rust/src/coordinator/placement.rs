@@ -1,0 +1,278 @@
+//! Placement policies: which SM resource group serves which window.
+//!
+//! The paper's three experimental arms, as deployable policies:
+//!
+//! * [`PlacementPolicy::Naive`]        — no constraint: every group roams
+//!   the whole table (Fig 1 "uniform": thrashes past 64 GB).
+//! * [`PlacementPolicy::SmToChunk`]    — each *SM* is pinned to a window,
+//!   groups end up straddling windows (Fig 1 "SM-to-chunk": no benefit).
+//! * [`PlacementPolicy::GroupToChunk`] — each *group* is pinned to one
+//!   window (Fig 6: full speed over the whole memory).  The contribution.
+//!
+//! A [`Placement`] also answers the inverse question the router needs:
+//! which groups may serve a given window.
+
+use crate::probe::TopologyMap;
+use crate::sim::{Machine, Pattern, SmAssignment};
+use crate::util::rng::Rng;
+
+use super::chunks::WindowPlan;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    Naive,
+    SmToChunk,
+    GroupToChunk,
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PlacementPolicy::Naive => "naive",
+            PlacementPolicy::SmToChunk => "sm-to-chunk",
+            PlacementPolicy::GroupToChunk => "group-to-chunk",
+        };
+        f.write_str(s)
+    }
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "naive" => Ok(Self::Naive),
+            "sm-to-chunk" | "sm" => Ok(Self::SmToChunk),
+            "group-to-chunk" | "group" => Ok(Self::GroupToChunk),
+            _ => anyhow::bail!("unknown policy '{s}' (naive|sm-to-chunk|group-to-chunk)"),
+        }
+    }
+}
+
+/// A concrete assignment of groups to windows.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub policy: PlacementPolicy,
+    /// window id -> group indices (into `map.groups`) serving it.
+    pub groups_of_window: Vec<Vec<usize>>,
+    /// group index -> window id it is pinned to (GroupToChunk only; under
+    /// other policies groups serve every window).
+    pub window_of_group: Vec<usize>,
+}
+
+impl Placement {
+    /// Build a placement.  GroupToChunk assigns groups to windows
+    /// round-robin weighted by probed solo throughput: every window gets at
+    /// least one group, faster groups absorb leftover windows' load (and
+    /// when windows < groups, spare groups double up on windows).
+    pub fn build(
+        policy: PlacementPolicy,
+        map: &TopologyMap,
+        plan: &WindowPlan,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let g = map.groups.len();
+        let w = plan.count();
+        if g == 0 || w == 0 {
+            anyhow::bail!("empty topology map or window plan");
+        }
+        match policy {
+            PlacementPolicy::Naive | PlacementPolicy::SmToChunk => {
+                // All groups serve all windows (the router spreads load);
+                // window_of_group is a synthetic striping used only for the
+                // SmToChunk *simulation* arm.
+                let mut rng = Rng::seed_from_u64(seed);
+                let window_of_group = (0..g).map(|_| rng.gen_index(w)).collect();
+                Ok(Self {
+                    policy,
+                    groups_of_window: vec![(0..g).collect(); w],
+                    window_of_group,
+                })
+            }
+            PlacementPolicy::GroupToChunk => {
+                if g < w {
+                    anyhow::bail!("{w} windows but only {g} groups: cannot pin 1:1");
+                }
+                // Sort groups by probed solo throughput (desc) and deal them
+                // to windows round-robin: each window's serving capacity
+                // stays balanced.
+                let mut order: Vec<usize> = (0..g).collect();
+                order.sort_by(|&a, &b| {
+                    map.solo_gbps[b]
+                        .partial_cmp(&map.solo_gbps[a])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                let mut groups_of_window = vec![Vec::new(); w];
+                let mut window_of_group = vec![0usize; g];
+                for (k, &gi) in order.iter().enumerate() {
+                    let wid = k % w;
+                    groups_of_window[wid].push(gi);
+                    window_of_group[gi] = wid;
+                }
+                Ok(Self {
+                    policy,
+                    groups_of_window,
+                    window_of_group,
+                })
+            }
+        }
+    }
+
+    /// Serving groups for a window.
+    pub fn serving_groups(&self, window: usize) -> &[usize] {
+        &self.groups_of_window[window]
+    }
+
+    /// Probed capacity (GB/s) dedicated to a window.
+    pub fn window_capacity_gbps(&self, map: &TopologyMap, window: usize) -> f64 {
+        self.groups_of_window[window]
+            .iter()
+            .map(|&g| map.solo_gbps[g])
+            .sum()
+    }
+
+    /// Translate the placement into per-SM simulator assignments over a
+    /// device-resident table occupying `plan`'s row space from byte 0.
+    /// This is what the Fig-1/Fig-6 experiments run.
+    pub fn sim_assignments(
+        &self,
+        map: &TopologyMap,
+        plan: &WindowPlan,
+        machine: &Machine,
+        seed: u64,
+    ) -> Vec<SmAssignment> {
+        let whole = crate::sim::MemRegion::new(0, plan.total_rows * plan.row_bytes);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut out = Vec::new();
+        for (gi, group) in map.groups.iter().enumerate() {
+            for &smid in group {
+                if smid >= machine.topology().sm_count() {
+                    continue;
+                }
+                let pattern = match self.policy {
+                    PlacementPolicy::Naive => Pattern::Uniform(whole),
+                    PlacementPolicy::SmToChunk => {
+                        // Each SM independently picks a window (the paper's
+                        // "pick a random half per SM").
+                        let w = &plan.windows()[rng.gen_index(plan.count())];
+                        Pattern::Uniform(plan.region_of(w))
+                    }
+                    PlacementPolicy::GroupToChunk => {
+                        let w = &plan.windows()[self.window_of_group[gi]];
+                        Pattern::Uniform(plan.region_of(w))
+                    }
+                };
+                out.push(SmAssignment { smid, pattern });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn test_map() -> TopologyMap {
+        TopologyMap {
+            groups: vec![
+                vec![0, 1, 2, 3],
+                vec![4, 5, 6, 7],
+                vec![8, 9],
+                vec![10, 11],
+            ],
+            reach_bytes: 16 << 20,
+            solo_gbps: vec![120.0, 118.0, 90.0, 91.0],
+            independent: true,
+            card_id: "test".into(),
+        }
+    }
+
+    fn plan(windows: usize) -> WindowPlan {
+        WindowPlan::split(1 << 20, 128, windows)
+    }
+
+    #[test]
+    fn group_to_chunk_pins_every_window() {
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &test_map(), &plan(2), 0).unwrap();
+        assert_eq!(p.groups_of_window.len(), 2);
+        for w in 0..2 {
+            assert!(!p.serving_groups(w).is_empty());
+        }
+        // All 4 groups assigned, each to exactly one window.
+        let mut seen = vec![false; 4];
+        for w in 0..2 {
+            for &g in p.serving_groups(w) {
+                assert!(!seen[g]);
+                seen[g] = true;
+                assert_eq!(p.window_of_group[g], w);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn group_to_chunk_balances_capacity() {
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &test_map(), &plan(2), 0).unwrap();
+        let m = test_map();
+        let c0 = p.window_capacity_gbps(&m, 0);
+        let c1 = p.window_capacity_gbps(&m, 1);
+        // Weighted dealing: both windows get one fast + one slow group.
+        assert!((c0 - c1).abs() / c0.max(c1) < 0.1, "c0={c0} c1={c1}");
+    }
+
+    #[test]
+    fn group_to_chunk_rejects_too_many_windows() {
+        assert!(Placement::build(PlacementPolicy::GroupToChunk, &test_map(), &plan(5), 0).is_err());
+    }
+
+    #[test]
+    fn naive_serves_everything() {
+        let p = Placement::build(PlacementPolicy::Naive, &test_map(), &plan(3), 0).unwrap();
+        for w in 0..3 {
+            assert_eq!(p.serving_groups(w).len(), 4);
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            PlacementPolicy::Naive,
+            PlacementPolicy::SmToChunk,
+            PlacementPolicy::GroupToChunk,
+        ] {
+            assert_eq!(PlacementPolicy::parse(&p.to_string()).unwrap(), p);
+        }
+        assert!(PlacementPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn sim_assignments_respect_policy() {
+        let machine = Machine::new(MachineConfig::tiny_test()).unwrap();
+        // Use the real topology for the map so smids are valid.
+        let topo = machine.topology();
+        let map = TopologyMap {
+            groups: (0..topo.group_count()).map(|g| topo.sms_in_group(g)).collect(),
+            reach_bytes: machine.config().tlb.reach_bytes(),
+            solo_gbps: vec![100.0; topo.group_count()],
+            independent: true,
+            card_id: "t".into(),
+        };
+        let plan = WindowPlan::split(
+            machine.config().memory.total_bytes / 128,
+            128,
+            2,
+        );
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 1).unwrap();
+        let asg = p.sim_assignments(&map, &plan, &machine, 2);
+        assert_eq!(asg.len(), topo.sm_count());
+        // All SMs of one group read the same region.
+        for (gi, group) in map.groups.iter().enumerate() {
+            let want = plan.region_of(&plan.windows()[p.window_of_group[gi]]);
+            for &smid in group {
+                let a = asg.iter().find(|a| a.smid == smid).unwrap();
+                assert_eq!(a.pattern.region(), &want);
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Request routing: split a lookup batch by owning window, dispatch to the
+//! groups pinned there, and merge results back in request order.
+//!
+//! Pure logic (no threads, no PJRT) so the invariants are property-testable:
+//!
+//! * every index is routed to the window that contains it,
+//! * every routed index is localized to its window's row space,
+//! * the merge restores exactly the request's order,
+//! * padding (to the executable's static batch) never leaks into results.
+
+use crate::util::rng::Rng;
+
+use super::chunks::WindowPlan;
+use super::placement::Placement;
+
+/// A sub-batch destined for one window.
+#[derive(Debug, Clone)]
+pub struct SubBatch {
+    pub window: usize,
+    /// Group chosen to execute this sub-batch.
+    pub group: usize,
+    /// Window-local row indices.
+    pub local_rows: Vec<u32>,
+    /// For each entry, its position in the original request.
+    pub positions: Vec<u32>,
+}
+
+/// Split plan for one request.
+#[derive(Debug, Clone)]
+pub struct SplitBatch {
+    pub sub_batches: Vec<SubBatch>,
+    pub request_len: usize,
+}
+
+/// Stateless router (the RNG for group load-spreading is caller-owned).
+#[derive(Debug)]
+pub struct Router<'a> {
+    plan: &'a WindowPlan,
+    placement: &'a Placement,
+    /// Round-robin cursors per window for group selection.
+    cursors: Vec<usize>,
+}
+
+impl<'a> Router<'a> {
+    pub fn new(plan: &'a WindowPlan, placement: &'a Placement) -> Self {
+        assert_eq!(plan.count(), placement.groups_of_window.len());
+        Self {
+            plan,
+            placement,
+            cursors: vec![0; plan.count()],
+        }
+    }
+
+    /// Split a request's global row indices into per-window sub-batches.
+    /// Each sub-batch is assigned a serving group round-robin (cheap load
+    /// spreading; the probed capacities are balanced by construction).
+    pub fn split(&mut self, rows: &[u64]) -> SplitBatch {
+        let mut per_window: Vec<Option<usize>> = vec![None; self.plan.count()];
+        let mut sub_batches: Vec<SubBatch> = Vec::new();
+        for (pos, &row) in rows.iter().enumerate() {
+            let w = self.plan.window_of(row);
+            let sb_idx = match per_window[w.id] {
+                Some(i) => i,
+                None => {
+                    let serving = self.placement.serving_groups(w.id);
+                    let cursor = &mut self.cursors[w.id];
+                    let group = serving[*cursor % serving.len()];
+                    *cursor = cursor.wrapping_add(1);
+                    sub_batches.push(SubBatch {
+                        window: w.id,
+                        group,
+                        local_rows: Vec::new(),
+                        positions: Vec::new(),
+                    });
+                    per_window[w.id] = Some(sub_batches.len() - 1);
+                    sub_batches.len() - 1
+                }
+            };
+            sub_batches[sb_idx].local_rows.push(w.localize(row) as u32);
+            sub_batches[sb_idx].positions.push(pos as u32);
+        }
+        SplitBatch {
+            sub_batches,
+            request_len: rows.len(),
+        }
+    }
+
+    pub fn plan(&self) -> &WindowPlan {
+        self.plan
+    }
+}
+
+/// Pad `local_rows` (i32 cast) up to `batch` entries, repeating index 0.
+/// Returns (padded indices, real length).
+pub fn pad_indices(local_rows: &[u32], batch: usize) -> (Vec<i32>, usize) {
+    assert!(
+        local_rows.len() <= batch,
+        "sub-batch {} exceeds executable batch {batch}",
+        local_rows.len()
+    );
+    let mut v: Vec<i32> = local_rows.iter().map(|&r| r as i32).collect();
+    v.resize(batch, 0);
+    (v, local_rows.len())
+}
+
+/// Merge per-sub-batch gathered rows (each `d` wide, padding already
+/// dropped) back into request order.  `parts[i]` corresponds to
+/// `split.sub_batches[i]`.
+pub fn merge_rows(split: &SplitBatch, parts: &[Vec<f32>], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; split.request_len * d];
+    for (sb, rows) in split.sub_batches.iter().zip(parts) {
+        assert_eq!(
+            rows.len(),
+            sb.local_rows.len() * d,
+            "sub-batch result size mismatch"
+        );
+        for (k, &pos) in sb.positions.iter().enumerate() {
+            let src = &rows[k * d..(k + 1) * d];
+            out[pos as usize * d..(pos as usize + 1) * d].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Generate a random batch of global rows (bench/test helper).
+pub fn random_rows(rng: &mut Rng, total_rows: u64, len: usize) -> Vec<u64> {
+    (0..len).map(|_| rng.gen_range(total_rows)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::PlacementPolicy;
+    use crate::probe::TopologyMap;
+    use crate::util::prop;
+
+    fn setup(windows: usize) -> (WindowPlan, Placement) {
+        let map = TopologyMap {
+            groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+            reach_bytes: 1 << 30,
+            solo_gbps: vec![100.0, 100.0, 100.0, 100.0],
+            independent: true,
+            card_id: "t".into(),
+        };
+        let plan = WindowPlan::split(10_000, 128, windows);
+        let placement =
+            Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        (plan, placement)
+    }
+
+    #[test]
+    fn split_routes_every_index_to_owning_window() {
+        let (plan, placement) = setup(4);
+        let mut router = Router::new(&plan, &placement);
+        let rows: Vec<u64> = vec![0, 9_999, 2_500, 5_000, 7_499, 1, 2_500];
+        let split = router.split(&rows);
+        let mut covered = 0;
+        for sb in &split.sub_batches {
+            let w = &plan.windows()[sb.window];
+            for (k, &local) in sb.local_rows.iter().enumerate() {
+                let global = w.start_row + local as u64;
+                assert_eq!(global, rows[sb.positions[k] as usize]);
+                covered += 1;
+            }
+            // The chosen group must actually serve the window.
+            assert!(placement.serving_groups(sb.window).contains(&sb.group));
+        }
+        assert_eq!(covered, rows.len());
+    }
+
+    #[test]
+    fn merge_restores_request_order() {
+        let (plan, placement) = setup(4);
+        let mut router = Router::new(&plan, &placement);
+        let rows: Vec<u64> = vec![42, 9_000, 3, 7_777, 2_500, 42];
+        let split = router.split(&rows);
+        // Fake per-row payload: row value replicated d times.
+        let d = 4;
+        let parts: Vec<Vec<f32>> = split
+            .sub_batches
+            .iter()
+            .map(|sb| {
+                let w = &plan.windows()[sb.window];
+                sb.local_rows
+                    .iter()
+                    .flat_map(|&l| {
+                        let g = (w.start_row + l as u64) as f32;
+                        std::iter::repeat(g).take(d)
+                    })
+                    .collect()
+            })
+            .collect();
+        let merged = merge_rows(&split, &parts, d);
+        for (i, &row) in rows.iter().enumerate() {
+            for j in 0..d {
+                assert_eq!(merged[i * d + j], row as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_indices_pads_and_reports_len() {
+        let (idx, real) = pad_indices(&[5, 6, 7], 8);
+        assert_eq!(real, 3);
+        assert_eq!(idx, vec![5, 6, 7, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds executable batch")]
+    fn pad_indices_rejects_oversize() {
+        pad_indices(&[1, 2, 3], 2);
+    }
+
+    #[test]
+    fn round_robin_spreads_groups() {
+        // One window served by several groups (Naive policy): consecutive
+        // splits should rotate through them.
+        let map = TopologyMap {
+            groups: (0..4).map(|g| vec![g]).collect(),
+            reach_bytes: 1 << 30,
+            solo_gbps: vec![1.0; 4],
+            independent: true,
+            card_id: "t".into(),
+        };
+        let plan = WindowPlan::split(100, 128, 1);
+        let placement = Placement::build(PlacementPolicy::Naive, &map, &plan, 0).unwrap();
+        let mut router = Router::new(&plan, &placement);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let split = router.split(&[1, 2, 3]);
+            seen.insert(split.sub_batches[0].group);
+        }
+        assert_eq!(seen.len(), 4, "round robin must cycle all groups");
+    }
+
+    #[test]
+    fn property_split_merge_identity() {
+        prop::check("split-merge-identity", 50, |g| {
+            let windows = g.usize(1, 4);
+            let (plan, placement) = setup(windows);
+            let mut router = Router::new(&plan, &placement);
+            let len = g.usize(1, 300);
+            let rows: Vec<u64> = (0..len).map(|_| g.u64(0, 9_999)).collect();
+            let split = router.split(&rows);
+
+            // Sub-batch sizes sum to the request.
+            let total: usize = split.sub_batches.iter().map(|s| s.local_rows.len()).sum();
+            assert_eq!(total, len);
+
+            // Identity payload merge reproduces the request.
+            let d = 2;
+            let parts: Vec<Vec<f32>> = split
+                .sub_batches
+                .iter()
+                .map(|sb| {
+                    let w = &plan.windows()[sb.window];
+                    sb.local_rows
+                        .iter()
+                        .flat_map(|&l| {
+                            let v = (w.start_row + l as u64) as f32;
+                            [v, v]
+                        })
+                        .collect()
+                })
+                .collect();
+            let merged = merge_rows(&split, &parts, d);
+            for (i, &row) in rows.iter().enumerate() {
+                assert_eq!(merged[i * d], row as f32, "position {i}");
+            }
+
+            // No duplicate positions.
+            let mut pos: Vec<u32> = split
+                .sub_batches
+                .iter()
+                .flat_map(|s| s.positions.iter().copied())
+                .collect();
+            pos.sort_unstable();
+            pos.dedup();
+            assert_eq!(pos.len(), len);
+        });
+    }
+}

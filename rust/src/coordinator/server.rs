@@ -1,0 +1,526 @@
+//! The embedding-lookup server: the paper's group-to-chunk placement as a
+//! serving system.
+//!
+//! Topology (one process, vLLM-router-like):
+//!
+//! ```text
+//! clients ──lookup()──► Batcher ──► dispatcher thread ──► per-group worker
+//!    ▲                                 (Router::split)        threads
+//!    └──────────── response channel ◄── last sub-batch ◄── PJRT gather
+//! ```
+//!
+//! * Each **worker** owns one SM resource group's execution domain: its own
+//!   PJRT client, the compiled gather executables, and the device buffer of
+//!   the window shard(s) it serves.  Under `GroupToChunk` that is exactly
+//!   one window smaller than TLB reach — the paper's construction.
+//! * The **dispatcher** splits every batched request by owning window and
+//!   fans sub-batches to the pinned groups.
+//! * Sub-batches are padded to the executable's static batch size (XLA
+//!   static shapes); padding is dropped before merging.
+//!
+//! Python never runs here: workers execute AOT artifacts from `artifacts/`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+
+use crate::probe::TopologyMap;
+use crate::runtime::Runtime;
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::chunks::WindowPlan;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::placement::{Placement, PlacementPolicy};
+use super::router::{pad_indices, Router};
+
+/// Host-side table (synthetic or user-provided).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub rows: u64,
+    pub d: usize,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl Table {
+    /// Deterministic synthetic table: row r, column j holds
+    /// `r as f32 + j as f32 / 100.0` — lets tests verify any gather against
+    /// closed-form expectations without storing golden data.
+    pub fn synthetic(rows: u64, d: usize) -> Self {
+        let mut data = Vec::with_capacity(rows as usize * d);
+        for r in 0..rows {
+            for j in 0..d {
+                data.push(r as f32 + j as f32 / 100.0);
+            }
+        }
+        Self {
+            rows,
+            d,
+            data: Arc::new(data),
+        }
+    }
+
+    pub fn expected(&self, row: u64, j: usize) -> f32 {
+        self.data[row as usize * self.d + j]
+    }
+
+    /// Slice one window's rows.
+    fn shard(&self, start_row: u64, rows: u64) -> &[f32] {
+        let a = start_row as usize * self.d;
+        let b = (start_row + rows) as usize * self.d;
+        &self.data[a..b]
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub policy: PlacementPolicy,
+    pub batcher: BatcherConfig,
+    pub seed: u64,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: std::path::PathBuf) -> Self {
+        Self {
+            artifacts_dir,
+            policy: PlacementPolicy::GroupToChunk,
+            batcher: BatcherConfig::default(),
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+type Ticket = mpsc::SyncSender<anyhow::Result<Vec<f32>>>;
+
+/// Per-request accumulator: workers write their slice, the last one
+/// responds.
+struct RequestAcc {
+    out: Mutex<Vec<f32>>,
+    remaining: AtomicUsize,
+    ticket: Mutex<Option<Ticket>>,
+    failed: Mutex<Option<String>>,
+    start: Instant,
+}
+
+impl RequestAcc {
+    fn finish_part(&self, metrics: &Metrics) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let ticket = self.ticket.lock().unwrap().take();
+            if let Some(t) = ticket {
+                let failed = self.failed.lock().unwrap().take();
+                let result = match failed {
+                    Some(e) => Err(anyhow!(e)),
+                    None => Ok(std::mem::take(&mut *self.out.lock().unwrap())),
+                };
+                if result.is_err() {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.latency.record(self.start.elapsed());
+                let _ = t.send(result);
+            }
+        }
+    }
+}
+
+/// One unit of work for a group worker.
+struct Job {
+    window: usize,
+    local_rows: Vec<u32>,
+    positions: Vec<u32>,
+    acc: Arc<RequestAcc>,
+}
+
+enum WorkerMsg {
+    Job(Job),
+    Shutdown,
+}
+
+/// The running server.
+pub struct EmbeddingServer {
+    batcher: Arc<Batcher<Ticket>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    plan: Arc<WindowPlan>,
+    table: Table,
+    pub placement: Placement,
+}
+
+impl EmbeddingServer {
+    /// Start the server: probe map + table in, worker threads out.
+    ///
+    /// `plan` must slice the table into windows whose row count matches an
+    /// available artifact `n` (XLA static shapes).
+    pub fn start(
+        cfg: ServerConfig,
+        map: &TopologyMap,
+        plan: WindowPlan,
+        table: Table,
+    ) -> anyhow::Result<Self> {
+        if table.rows != plan.total_rows {
+            return Err(anyhow!(
+                "table has {} rows but plan covers {}",
+                table.rows,
+                plan.total_rows
+            ));
+        }
+        let placement = Placement::build(cfg.policy, map, &plan, cfg.seed)?;
+        let metrics = Arc::new(Metrics::new());
+        let plan = Arc::new(plan);
+
+        // --- workers: one per group that serves at least one window ------
+        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> =
+            (0..map.groups.len()).map(|_| None).collect();
+        let mut workers = Vec::new();
+        let mut served_by_group: Vec<Vec<usize>> = vec![Vec::new(); map.groups.len()];
+        for w in 0..plan.count() {
+            for &g in placement.serving_groups(w) {
+                served_by_group[g].push(w);
+            }
+        }
+        for (g, served) in served_by_group.iter().enumerate() {
+            if served.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            senders[g] = Some(tx);
+            let worker = WorkerInit {
+                group: g,
+                windows: served.clone(),
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                plan: Arc::clone(&plan),
+                table: table.clone(),
+                metrics: Arc::clone(&metrics),
+            };
+            // Startup errors must fail `start`, not the thread: hand the
+            // result back over a one-shot channel.
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
+            let handle = std::thread::Builder::new()
+                .name(format!("a100win-worker-g{g}"))
+                .spawn(move || worker.run(rx, ready_tx))
+                .context("spawning worker")?;
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker {g} died during startup"))?
+                .with_context(|| format!("worker {g} startup"))?;
+            workers.push(handle);
+        }
+
+        // --- dispatcher ---------------------------------------------------
+        let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
+        let dispatcher = {
+            let batcher = Arc::clone(&batcher);
+            let plan = Arc::clone(&plan);
+            let placement2 = placement.clone();
+            let metrics = Arc::clone(&metrics);
+            let d = table.d;
+            std::thread::Builder::new()
+                .name("a100win-dispatcher".into())
+                .spawn(move || {
+                    let mut router = Router::new(&plan, &placement2);
+                    while let Some(batch) = batcher.next_batch() {
+                        dispatch(batch, &mut router, &senders, &metrics, d);
+                    }
+                    for s in senders.iter().flatten() {
+                        let _ = s.send(WorkerMsg::Shutdown);
+                    }
+                })
+                .context("spawning dispatcher")?
+        };
+
+        Ok(Self {
+            batcher,
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            plan,
+            table,
+            placement,
+        })
+    }
+
+    /// Blocking lookup: returns the gathered rows (len = rows.len() * d).
+    pub fn lookup(&self, rows: Vec<u64>) -> anyhow::Result<Vec<f32>> {
+        for &r in &rows {
+            if r >= self.table.rows {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("row {r} out of table ({} rows)", self.table.rows));
+            }
+        }
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .rows
+            .fetch_add(rows.len() as u64, Ordering::Relaxed);
+        self.batcher
+            .submit(rows, tx)
+            .map_err(|_| anyhow!("server is shutting down"))?;
+        rx.recv().context("server dropped the request")?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn plan(&self) -> &WindowPlan {
+        &self.plan
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for EmbeddingServer {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split every request of a batch and fan sub-batches out to workers.
+fn dispatch(
+    batch: Batch<Ticket>,
+    router: &mut Router<'_>,
+    senders: &[Option<mpsc::Sender<WorkerMsg>>],
+    metrics: &Arc<Metrics>,
+    d: usize,
+) {
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    for req in batch.requests {
+        let split = router.split(&req.rows);
+        let acc = Arc::new(RequestAcc {
+            out: Mutex::new(vec![0.0; req.rows.len() * d]),
+            remaining: AtomicUsize::new(split.sub_batches.len()),
+            ticket: Mutex::new(Some(req.ticket)),
+            failed: Mutex::new(None),
+            start: req.enqueued,
+        });
+        for sb in split.sub_batches {
+            let job = Job {
+                window: sb.window,
+                local_rows: sb.local_rows,
+                positions: sb.positions,
+                acc: Arc::clone(&acc),
+            };
+            match senders.get(sb.group).and_then(|s| s.as_ref()) {
+                Some(tx) => {
+                    if tx.send(WorkerMsg::Job(job)).is_err() {
+                        fail_part(&acc, metrics, "worker channel closed");
+                    }
+                }
+                None => fail_part(&acc, metrics, "no worker for group"),
+            }
+        }
+    }
+}
+
+fn fail_part(acc: &Arc<RequestAcc>, metrics: &Arc<Metrics>, why: &str) {
+    *acc.failed.lock().unwrap() = Some(why.to_string());
+    acc.finish_part(metrics);
+}
+
+/// Everything a worker thread needs at startup.
+struct WorkerInit {
+    group: usize,
+    windows: Vec<usize>,
+    artifacts_dir: std::path::PathBuf,
+    plan: Arc<WindowPlan>,
+    table: Table,
+    metrics: Arc<Metrics>,
+}
+
+impl WorkerInit {
+    fn run(self, rx: mpsc::Receiver<WorkerMsg>, ready: mpsc::SyncSender<anyhow::Result<()>>) {
+        let mut ctx = match self.setup() {
+            Ok(ctx) => {
+                let _ = ready.send(Ok(()));
+                ctx
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WorkerMsg::Shutdown => break,
+                WorkerMsg::Job(job) => ctx.execute(job),
+            }
+        }
+    }
+
+    fn setup(self) -> anyhow::Result<WorkerCtx> {
+        let mut rt = Runtime::new(&self.artifacts_dir)?;
+        // Pick the lookup artifacts whose table shape matches the window
+        // shard shape (static shapes: window rows must equal artifact n).
+        let lookups: Vec<(usize, String)> = rt
+            .manifest()
+            .by_entry("lookup")
+            .iter()
+            .filter(|a| a.d == self.table.d)
+            .map(|a| (a.b, a.name.clone()))
+            .collect();
+        if lookups.is_empty() {
+            return Err(anyhow!("no lookup artifacts for d={}", self.table.d));
+        }
+        let n_required = rt
+            .manifest()
+            .by_entry("lookup")
+            .first()
+            .map(|a| a.n)
+            .unwrap();
+        let mut shards = std::collections::HashMap::new();
+        for &w in &self.windows {
+            let win = self.plan.windows()[w];
+            if win.rows != n_required as u64 {
+                return Err(anyhow!(
+                    "window {w} has {} rows but artifacts were lowered for n={n_required}; \
+                     re-run aot.py or resize the table",
+                    win.rows
+                ));
+            }
+            let host = self.table.shard(win.start_row, win.rows);
+            let buf = rt.upload_f32(host, &[win.rows as usize, self.table.d])?;
+            shards.insert(w, buf);
+        }
+        for (_b, name) in &lookups {
+            rt.ensure_compiled(name)?;
+        }
+        Ok(WorkerCtx {
+            group: self.group,
+            rt,
+            lookups,
+            shards,
+            metrics: self.metrics,
+            d: self.table.d,
+        })
+    }
+}
+
+/// Live worker state (owns PJRT handles; never leaves its thread).
+struct WorkerCtx {
+    #[allow(dead_code)]
+    group: usize,
+    rt: Runtime,
+    /// (batch, artifact name), ascending batch.
+    lookups: Vec<(usize, String)>,
+    shards: std::collections::HashMap<usize, xla::PjRtBuffer>,
+    metrics: Arc<Metrics>,
+    d: usize,
+}
+
+/// Decompose `len` rows into executable batch sizes minimizing padded
+/// slots: greedily take the largest batch that fits, then round the
+/// remainder up to the smallest batch that covers it.  With the standard
+/// 256/1024/4096 artifact set this at least halves padding vs rounding the
+/// whole sub-batch up (EXPERIMENTS.md §Perf iteration 2).
+fn plan_batches(len: usize, sizes: &[usize]) -> Vec<usize> {
+    debug_assert!(!sizes.is_empty() && sizes.windows(2).all(|w| w[0] < w[1]));
+    let mut plan = Vec::new();
+    let mut rem = len;
+    for &b in sizes.iter().rev() {
+        while rem >= b {
+            plan.push(b);
+            rem -= b;
+        }
+    }
+    if rem > 0 {
+        let b = sizes.iter().copied().find(|&b| b >= rem).unwrap_or(sizes[sizes.len() - 1]);
+        plan.push(b);
+    }
+    plan
+}
+
+impl WorkerCtx {
+    /// Artifact name for an exact batch size.
+    fn artifact_for(&self, b: usize) -> &str {
+        &self
+            .lookups
+            .iter()
+            .find(|(ab, _)| *ab == b)
+            .expect("plan_batches only emits available sizes")
+            .1
+    }
+
+    fn execute(&mut self, job: Job) {
+        let result = self.gather(&job);
+        match result {
+            Ok(rows) => {
+                // Scatter this part into the request buffer.
+                let mut out = job.acc.out.lock().unwrap();
+                for (k, &pos) in job.positions.iter().enumerate() {
+                    out[pos as usize * self.d..(pos as usize + 1) * self.d]
+                        .copy_from_slice(&rows[k * self.d..(k + 1) * self.d]);
+                }
+                drop(out);
+                job.acc.finish_part(&self.metrics);
+            }
+            Err(e) => {
+                *job.acc.failed.lock().unwrap() = Some(format!("{e:#}"));
+                job.acc.finish_part(&self.metrics);
+            }
+        }
+    }
+
+    /// Gather `job.local_rows` from the job's window shard, decomposed into
+    /// padding-minimal executable batches.
+    fn gather(&mut self, job: &Job) -> anyhow::Result<Vec<f32>> {
+        let shard = self
+            .shards
+            .get(&job.window)
+            .ok_or_else(|| anyhow!("group has no shard for window {}", job.window))?;
+        let sizes: Vec<usize> = self.lookups.iter().map(|(b, _)| *b).collect();
+        let plan = plan_batches(job.local_rows.len(), &sizes);
+        let mut out = Vec::with_capacity(job.local_rows.len() * self.d);
+        let mut cursor = 0usize;
+        for b in plan {
+            let chunk = &job.local_rows[cursor..job.local_rows.len().min(cursor + b)];
+            cursor += chunk.len();
+            let name = self.artifact_for(b).to_string();
+            let (padded, real) = pad_indices(chunk, b);
+            self.metrics
+                .padded_rows
+                .fetch_add((b - real) as u64, Ordering::Relaxed);
+            // NB: `gather` needs &mut self for compile cache, but shards are
+            // disjoint borrows; clone the name to end the manifest borrow.
+            let full = {
+                let rt = &mut self.rt;
+                let exe_name: &str = &name;
+                rt.ensure_compiled(exe_name)?;
+                let idx = rt.upload_i32(&padded, &[b])?;
+                let outs = rt.execute(exe_name, &[&idx, shard])?;
+                outs[0]
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("gather result: {e:?}"))?
+            };
+            out.extend_from_slice(&full[..real * self.d]);
+        }
+        Ok(out)
+    }
+}
+
+// Integration tests (requiring artifacts) live in
+// rust/tests/coordinator_integration.rs and rust/tests/end_to_end.rs.

@@ -1,0 +1,296 @@
+//! Coordinator state: window->group assignment epochs, group health, and
+//! rebalancing when groups degrade or fail.
+//!
+//! The placement computed at startup is not static: if a resource group is
+//! taken out (simulated XID error, thermal throttle, preemption), its
+//! windows must move to surviving groups — ideally keeping every group's
+//! window set small enough to stay under TLB reach, and otherwise
+//! *admitting* that a group now straddles two windows (degraded mode, the
+//! Fig-1 regime) rather than failing the table.
+
+use std::collections::BTreeMap;
+
+use crate::probe::TopologyMap;
+
+use super::chunks::WindowPlan;
+use super::placement::{Placement, PlacementPolicy};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupHealth {
+    Healthy,
+    /// Serving, but deprioritized (e.g. thermal).
+    Degraded,
+    /// Not serving.
+    Failed,
+}
+
+/// Versioned assignment state.
+#[derive(Debug, Clone)]
+pub struct CoordinatorState {
+    pub epoch: u64,
+    /// window id -> serving group indices (ordered by priority).
+    pub assignment: Vec<Vec<usize>>,
+    pub health: Vec<GroupHealth>,
+    /// True when some group serves more than one window (TLB reach may be
+    /// exceeded; throughput follows the paper's Fig-1 cliff).
+    pub degraded_reach: bool,
+}
+
+impl CoordinatorState {
+    /// Initial state from a placement.
+    pub fn new(placement: &Placement, group_count: usize) -> Self {
+        Self {
+            epoch: 0,
+            assignment: placement.groups_of_window.clone(),
+            health: vec![GroupHealth::Healthy; group_count],
+            degraded_reach: false,
+        }
+    }
+
+    /// Serving groups of a window, healthiest first.
+    pub fn serving(&self, window: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self.assignment[window]
+            .iter()
+            .copied()
+            .filter(|&g| self.health[g] != GroupHealth::Failed)
+            .collect();
+        v.sort_by_key(|&g| match self.health[g] {
+            GroupHealth::Healthy => 0,
+            GroupHealth::Degraded => 1,
+            GroupHealth::Failed => 2,
+        });
+        v
+    }
+
+    /// Mark a group and rebalance: every window must end with >= 1 serving
+    /// group.  Windows orphaned by failures are taken over by the
+    /// least-loaded surviving groups; a group serving >1 window flips
+    /// `degraded_reach` (its combined footprint may exceed TLB reach).
+    pub fn set_health(
+        &mut self,
+        group: usize,
+        health: GroupHealth,
+        map: &TopologyMap,
+    ) -> anyhow::Result<()> {
+        if group >= self.health.len() {
+            anyhow::bail!("group {group} out of range");
+        }
+        self.health[group] = health;
+        self.epoch += 1;
+
+        // Count load (windows served) per surviving group.
+        let mut load: BTreeMap<usize, usize> = BTreeMap::new();
+        for g in 0..self.health.len() {
+            if self.health[g] != GroupHealth::Failed {
+                load.insert(g, 0);
+            }
+        }
+        if load.is_empty() {
+            anyhow::bail!("all groups failed");
+        }
+        for wss in &self.assignment {
+            for &g in wss {
+                if let Some(l) = load.get_mut(&g) {
+                    *l += 1;
+                }
+            }
+        }
+
+        // Re-home orphaned windows.
+        for w in 0..self.assignment.len() {
+            let alive = self
+                .assignment[w]
+                .iter()
+                .any(|&g| self.health[g] != GroupHealth::Failed);
+            if !alive {
+                // Prefer healthy, low-load, high-capacity groups.
+                let (&best, _) = load
+                    .iter()
+                    .min_by(|(&ga, &la), (&gb, &lb)| {
+                        let ha = self.health[ga] == GroupHealth::Degraded;
+                        let hb = self.health[gb] == GroupHealth::Degraded;
+                        ha.cmp(&hb)
+                            .then(la.cmp(&lb))
+                            .then(
+                                map.solo_gbps[gb]
+                                    .partial_cmp(&map.solo_gbps[ga])
+                                    .unwrap(),
+                            )
+                            .then(ga.cmp(&gb))
+                    })
+                    .unwrap();
+                self.assignment[w].push(best);
+                *load.get_mut(&best).unwrap() += 1;
+            }
+        }
+
+        // Reach degradation: any surviving group on >1 window?
+        let mut per_group = vec![0usize; self.health.len()];
+        for (w, wss) in self.assignment.iter().enumerate() {
+            let _ = w;
+            for &g in wss {
+                if self.health[g] != GroupHealth::Failed {
+                    per_group[g] += 1;
+                }
+            }
+        }
+        self.degraded_reach = per_group.iter().any(|&c| c > 1);
+        Ok(())
+    }
+
+    /// Do all windows still have a serving group?
+    pub fn all_windows_served(&self) -> bool {
+        (0..self.assignment.len()).all(|w| !self.serving(w).is_empty())
+    }
+}
+
+/// Build placement + state in one step (startup path).
+pub fn bootstrap(
+    policy: PlacementPolicy,
+    map: &TopologyMap,
+    plan: &WindowPlan,
+    seed: u64,
+) -> anyhow::Result<(Placement, CoordinatorState)> {
+    let placement = Placement::build(policy, map, plan, seed)?;
+    let state = CoordinatorState::new(&placement, map.groups.len());
+    Ok((placement, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map4() -> TopologyMap {
+        TopologyMap {
+            groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+            reach_bytes: 1 << 30,
+            solo_gbps: vec![120.0, 118.0, 90.0, 91.0],
+            independent: true,
+            card_id: "t".into(),
+        }
+    }
+
+    fn state2() -> (TopologyMap, CoordinatorState) {
+        let map = map4();
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let (_p, st) =
+            bootstrap(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        (map, st)
+    }
+
+    #[test]
+    fn bootstrap_serves_all_windows() {
+        let (_map, st) = state2();
+        assert!(st.all_windows_served());
+        assert_eq!(st.epoch, 0);
+        assert!(!st.degraded_reach);
+    }
+
+    #[test]
+    fn failed_group_windows_rehomed() {
+        let (map, mut st) = state2();
+        // Fail every group on window 0.
+        let victims = st.serving(0);
+        for g in victims {
+            st.set_health(g, GroupHealth::Failed, &map).unwrap();
+        }
+        assert!(st.all_windows_served(), "window 0 must be re-homed");
+        assert!(st.epoch >= 1);
+        // The takeover group now serves two windows -> reach degraded.
+        assert!(st.degraded_reach);
+    }
+
+    #[test]
+    fn degraded_groups_sort_last() {
+        let (map, mut st) = state2();
+        let serving = st.serving(0);
+        assert!(serving.len() >= 2, "need 2 groups on window 0");
+        let first = serving[0];
+        st.set_health(first, GroupHealth::Degraded, &map).unwrap();
+        let after = st.serving(0);
+        assert_eq!(*after.last().unwrap(), first);
+        assert!(!st.degraded_reach, "degraded (not failed) keeps its window");
+    }
+
+    #[test]
+    fn recovery_clears_priority() {
+        let (map, mut st) = state2();
+        let g = st.serving(0)[0];
+        st.set_health(g, GroupHealth::Failed, &map).unwrap();
+        assert!(!st.serving(0).contains(&g));
+        st.set_health(g, GroupHealth::Healthy, &map).unwrap();
+        assert!(st.serving(0).contains(&g));
+    }
+
+    #[test]
+    fn all_failed_errors() {
+        let (map, mut st) = state2();
+        for g in 0..3 {
+            st.set_health(g, GroupHealth::Failed, &map).unwrap();
+        }
+        assert!(st.set_health(3, GroupHealth::Failed, &map).is_err());
+    }
+
+    #[test]
+    fn epoch_increments_per_change() {
+        let (map, mut st) = state2();
+        let e0 = st.epoch;
+        st.set_health(0, GroupHealth::Degraded, &map).unwrap();
+        st.set_health(0, GroupHealth::Healthy, &map).unwrap();
+        assert_eq!(st.epoch, e0 + 2);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn property_random_failures_never_orphan_windows() {
+        prop::check("state-failure-injection", 50, |g| {
+            let n_groups = g.usize(2, 8);
+            let n_windows = g.usize(1, n_groups);
+            let map = TopologyMap {
+                groups: (0..n_groups).map(|q| vec![q * 2, q * 2 + 1]).collect(),
+                reach_bytes: 1 << 30,
+                solo_gbps: (0..n_groups).map(|q| 90.0 + q as f64).collect(),
+                independent: true,
+                card_id: "prop".into(),
+            };
+            let plan = WindowPlan::split(1 << 16, 128, n_windows);
+            let (_p, mut st) =
+                bootstrap(PlacementPolicy::GroupToChunk, &map, &plan, g.u64(0, 999)).unwrap();
+
+            // Random health transitions; keep at least one group alive.
+            for _ in 0..g.usize(1, 20) {
+                let victim = g.usize(0, n_groups - 1);
+                let health = *g.pick(&[
+                    GroupHealth::Healthy,
+                    GroupHealth::Degraded,
+                    GroupHealth::Failed,
+                ]);
+                let alive_after = (0..n_groups)
+                    .filter(|&q| {
+                        if q == victim {
+                            health != GroupHealth::Failed
+                        } else {
+                            st.health[q] != GroupHealth::Failed
+                        }
+                    })
+                    .count();
+                if alive_after == 0 {
+                    continue; // would kill the last group; skip
+                }
+                st.set_health(victim, health, &map).unwrap();
+                assert!(st.all_windows_served(), "window orphaned");
+                // serving() never returns failed groups.
+                for w in 0..n_windows {
+                    for &q in &st.serving(w) {
+                        assert_ne!(st.health[q], GroupHealth::Failed);
+                    }
+                }
+            }
+        });
+    }
+}

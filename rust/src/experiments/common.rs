@@ -1,0 +1,120 @@
+//! Shared experiment plumbing.
+
+use crate::config::{MachineConfig, GIB};
+use crate::coordinator::{Placement, PlacementPolicy, WindowPlan};
+use crate::probe::TopologyMap;
+use crate::sim::{Machine, MeasurementSpec, SmAssignment};
+
+/// How heavy to run the simulated benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    /// CI-fast: fewer accesses, fewer sweep points.
+    Quick,
+    /// Paper-fidelity sweeps.
+    Full,
+}
+
+impl Effort {
+    pub fn accesses_per_sm(&self) -> u64 {
+        match self {
+            Effort::Quick => 2_000,
+            Effort::Full => 6_000,
+        }
+    }
+
+    pub fn from_env() -> Self {
+        match std::env::var("A100WIN_EFFORT").as_deref() {
+            Ok("full") => Effort::Full,
+            _ => Effort::Quick,
+        }
+    }
+}
+
+/// The canonical experiment machine: the paper's SXM4-80GB card.
+pub fn paper_machine() -> Machine {
+    Machine::new(MachineConfig::a100_80gb()).expect("preset must validate")
+}
+
+/// Ground-truth topology map (cheap; used where the experiment is about
+/// *placement*, not about discovery — discovery experiments run the real
+/// probe).  Matches what a `Prober::run` would return on this machine.
+pub fn ground_truth_map(machine: &Machine) -> TopologyMap {
+    let topo = machine.topology();
+    TopologyMap {
+        groups: (0..topo.group_count())
+            .map(|g| topo.sms_in_group(g))
+            .collect(),
+        reach_bytes: machine.config().tlb.reach_bytes(),
+        solo_gbps: topo
+            .group_sizes()
+            .iter()
+            .map(|&s| s as f64 * 15.0)
+            .collect(),
+        independent: true,
+        card_id: "ground-truth".into(),
+    }
+}
+
+/// Region sizes for Fig-1/Fig-6 sweeps (GiB).
+pub fn region_sweep_gib(effort: Effort) -> Vec<u64> {
+    match effort {
+        Effort::Quick => vec![8, 24, 40, 56, 60, 64, 68, 72, 80],
+        Effort::Full => vec![4, 8, 16, 24, 32, 40, 48, 56, 60, 62, 64, 66, 68, 70, 72, 76, 80],
+    }
+}
+
+/// Run one full-device measurement under a placement policy over a region
+/// of `gib` GiB starting at byte 0.
+pub fn run_policy(
+    machine: &Machine,
+    map: &TopologyMap,
+    policy: PlacementPolicy,
+    gib: u64,
+    chunks: usize,
+    accesses_per_sm: u64,
+    seed: u64,
+) -> f64 {
+    let row_bytes = crate::config::LINE_BYTES;
+    let total_rows = gib * GIB / row_bytes;
+    let plan = WindowPlan::split(total_rows, row_bytes, chunks);
+    let placement = Placement::build(policy, map, &plan, seed).expect("placement");
+    let assignments: Vec<SmAssignment> = placement.sim_assignments(map, &plan, machine, seed);
+    let spec = MeasurementSpec {
+        assignments,
+        accesses_per_sm,
+        warmup_fraction: 0.25,
+        txn_bytes: crate::config::LINE_BYTES,
+        seed,
+    };
+    machine.run(&spec).gbps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effort_parses_env_values() {
+        assert_eq!(Effort::Quick.accesses_per_sm() < Effort::Full.accesses_per_sm(), true);
+    }
+
+    #[test]
+    fn sweeps_cover_the_cliff() {
+        for e in [Effort::Quick, Effort::Full] {
+            let s = region_sweep_gib(e);
+            assert!(s.iter().any(|&g| g < 64));
+            assert!(s.iter().any(|&g| g == 64));
+            assert!(s.iter().any(|&g| g > 64));
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn ground_truth_map_validates() {
+        let m = paper_machine();
+        let map = ground_truth_map(&m);
+        map.validate().unwrap();
+        assert_eq!(map.groups.len(), 14);
+        assert_eq!(map.reach_bytes, 64 * GIB);
+    }
+}

@@ -1,0 +1,110 @@
+//! Figure 1: memory throughput for random access vs region size.
+//!
+//! Two arms, exactly the paper's §2.1 baseline experiment:
+//!
+//! * **uniform**     — every warp on every SM reads random lines in a
+//!   region of varying size.  Expected: ~1.3 TB/s plateau up to the 64 GB
+//!   TLB reach, then a precipitous collapse.
+//! * **sm-to-chunk** — memory split in two; each SM picks a random half.
+//!   Expected: *no benefit* (each group's TLB still sees both halves).
+
+use crate::coordinator::PlacementPolicy;
+use crate::util::benchkit::Table;
+use crate::util::threads::{default_workers, parallel_map};
+
+use super::common::{self, Effort};
+
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub region_gib: u64,
+    pub uniform_gbps: f64,
+    pub sm_to_chunk_gbps: f64,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Vec<Fig1Row> {
+    let machine = common::paper_machine();
+    let map = common::ground_truth_map(&machine);
+    let per_sm = effort.accesses_per_sm();
+    let sweep = common::region_sweep_gib(effort);
+    parallel_map(sweep, default_workers(), |&gib| {
+        let uniform = common::run_policy(
+            &machine,
+            &map,
+            PlacementPolicy::Naive,
+            gib,
+            1,
+            per_sm,
+            seed ^ gib,
+        );
+        let sm_chunk = common::run_policy(
+            &machine,
+            &map,
+            PlacementPolicy::SmToChunk,
+            gib,
+            2,
+            per_sm,
+            seed ^ gib ^ 0x5A,
+        );
+        Fig1Row {
+            region_gib: gib,
+            uniform_gbps: uniform,
+            sm_to_chunk_gbps: sm_chunk,
+        }
+    })
+}
+
+pub fn table(rows: &[Fig1Row]) -> Table {
+    let mut t = Table::new(&["region_gib", "uniform_gbps", "sm_to_chunk_gbps"]);
+    for r in rows {
+        t.row(&[
+            r.region_gib.to_string(),
+            format!("{:.1}", r.uniform_gbps),
+            format!("{:.1}", r.sm_to_chunk_gbps),
+        ]);
+    }
+    t
+}
+
+/// The claims the paper's Fig 1 makes, as assertions over the series.
+pub fn check(rows: &[Fig1Row]) -> anyhow::Result<()> {
+    let below: Vec<&Fig1Row> = rows.iter().filter(|r| r.region_gib <= 56).collect();
+    let above: Vec<&Fig1Row> = rows.iter().filter(|r| r.region_gib >= 72).collect();
+    if below.is_empty() || above.is_empty() {
+        anyhow::bail!("sweep does not bracket the cliff");
+    }
+    let plateau =
+        below.iter().map(|r| r.uniform_gbps).sum::<f64>() / below.len() as f64;
+    let floor = above.iter().map(|r| r.uniform_gbps).sum::<f64>() / above.len() as f64;
+    if plateau < 1100.0 {
+        anyhow::bail!("plateau {plateau:.0} GB/s too low");
+    }
+    if floor > plateau / 2.5 {
+        anyhow::bail!("no precipitous drop: plateau {plateau:.0}, floor {floor:.0}");
+    }
+    // SM-to-chunk must track uniform (no benefit) past the cliff.
+    for r in rows.iter().filter(|r| r.region_gib > 64) {
+        let ratio = r.sm_to_chunk_gbps / r.uniform_gbps;
+        if ratio > 1.6 {
+            anyhow::bail!(
+                "sm-to-chunk shows unexpected benefit at {} GiB: {ratio:.2}x",
+                r.region_gib
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reproduces_paper_shape() {
+        let rows = run(Effort::Quick, 1);
+        assert_eq!(
+            rows.len(),
+            common::region_sweep_gib(Effort::Quick).len()
+        );
+        check(&rows).unwrap();
+    }
+}

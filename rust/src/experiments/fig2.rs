@@ -1,0 +1,66 @@
+//! Figure 2: probing SM pairs — the raw (un-rearranged) throughput matrix.
+
+use crate::probe::{pair_probe, PairMatrix, PairProbeConfig};
+use crate::sim::Machine;
+
+use super::common::{self, Effort};
+
+pub struct Fig2 {
+    pub matrix: PairMatrix,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Fig2 {
+    let machine = common::paper_machine();
+    run_on(&machine, effort, seed)
+}
+
+pub fn run_on(machine: &Machine, effort: Effort, seed: u64) -> Fig2 {
+    let mut cfg = PairProbeConfig::for_machine(machine);
+    cfg.accesses_per_sm = match effort {
+        Effort::Quick => 1_500,
+        Effort::Full => 4_000,
+    };
+    cfg.seed = seed;
+    Fig2 {
+        matrix: pair_probe(machine, &cfg),
+    }
+}
+
+/// The identity-permutation render (what the paper's Fig 2 shows: dark 2x2
+/// TPC blocks scattered over the matrix).
+pub fn render(f: &Fig2) -> String {
+    let perm: Vec<usize> = (0..f.matrix.n).collect();
+    f.matrix.render(&perm)
+}
+
+pub fn to_csv(f: &Fig2) -> String {
+    let perm: Vec<usize> = (0..f.matrix.n).collect();
+    f.matrix.to_csv(&perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    #[test]
+    fn fig2_shows_2x2_blocks_on_tiny() {
+        // Tiny machine keeps the n^2 sweep fast; structure is identical.
+        let machine = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let f = run_on(&machine, Effort::Quick, 3);
+        let topo = machine.topology();
+        // TPC mates (2k, 2k+1) must be dark (same group by construction).
+        let mean = f.matrix.mean_offdiag();
+        for k in 0..topo.sm_count() / 2 {
+            let v = f.matrix.get(2 * k, 2 * k + 1);
+            assert!(
+                v < mean * 0.85,
+                "TPC pair ({},{}) not dark: {v:.1} vs mean {mean:.1}",
+                2 * k,
+                2 * k + 1
+            );
+        }
+        let txt = render(&f);
+        assert!(txt.contains('#'));
+    }
+}

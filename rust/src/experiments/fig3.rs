@@ -1,0 +1,77 @@
+//! Figure 3: rearranging SM indices to clarify the resource groups.
+//!
+//! Clusters the Fig-2 matrix and renders it under the discovered
+//! permutation: the scattered dark cells collapse into contiguous blocks —
+//! 14 groups of 6 or 8 SMs on the A100 preset.
+
+use crate::probe::{cluster, Clustering};
+
+use super::common::Effort;
+use super::fig2::{self, Fig2};
+
+pub struct Fig3 {
+    pub fig2: Fig2,
+    pub clustering: Clustering,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Fig3 {
+    let fig2 = fig2::run(effort, seed);
+    let clustering = cluster(&fig2.matrix);
+    Fig3 { fig2, clustering }
+}
+
+pub fn run_on(machine: &crate::sim::Machine, effort: Effort, seed: u64) -> Fig3 {
+    let fig2 = fig2::run_on(machine, effort, seed);
+    let clustering = cluster(&fig2.matrix);
+    Fig3 { fig2, clustering }
+}
+
+/// Render under the group-sorted permutation (the paper's Fig-3 view).
+pub fn render(f: &Fig3) -> String {
+    f.fig2.matrix.render(&f.clustering.permutation)
+}
+
+/// Group summary: "group 0: 8 SMs [..]" lines.
+pub fn summary(f: &Fig3) -> String {
+    let mut s = String::new();
+    for (gid, members) in f.clustering.groups.iter().enumerate() {
+        s.push_str(&format!(
+            "group {gid:2}: {} SMs {:?}\n",
+            members.len(),
+            members
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::sim::Machine;
+
+    #[test]
+    fn fig3_blocks_are_contiguous_on_tiny() {
+        let machine = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let f = run_on(&machine, Effort::Quick, 4);
+        // Discovered groups = ground truth count.
+        assert_eq!(f.clustering.groups.len(), machine.topology().group_count());
+        // Under the permutation, each row's dark cells must be contiguous
+        // (a block diagonal): verify rows of the rendered matrix contain at
+        // most one run of '#'.
+        let txt = render(&f);
+        for line in txt.lines() {
+            let mut runs = 0;
+            let mut inside = false;
+            for c in line.chars() {
+                let dark = c == '#' || c == '@';
+                if dark && !inside {
+                    runs += 1;
+                }
+                inside = dark;
+            }
+            assert!(runs <= 1, "non-contiguous block in row: {line}");
+        }
+        assert!(summary(&f).contains("group  0"));
+    }
+}

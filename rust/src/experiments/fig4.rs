@@ -1,0 +1,69 @@
+//! Figure 4: running each resource group individually.
+//!
+//! Expected: throughput proportional to SM count — the two 6-SM groups
+//! underperform the twelve 8-SM groups by exactly 6/8 (paper: ~90 vs ~120
+//! GB/s).
+
+use crate::probe::{solo_groups, SoloGroupResult, VerifyConfig};
+use crate::util::benchkit::Table;
+
+use super::common::{self, Effort};
+
+pub fn run(effort: Effort, seed: u64) -> Vec<SoloGroupResult> {
+    let machine = common::paper_machine();
+    let map = common::ground_truth_map(&machine);
+    let mut cfg = VerifyConfig::for_machine(&machine);
+    cfg.accesses_per_sm = effort.accesses_per_sm();
+    cfg.seed = seed;
+    solo_groups(&machine, &map.groups, &cfg)
+}
+
+pub fn table(rows: &[SoloGroupResult]) -> Table {
+    let mut t = Table::new(&["group", "sms", "gbps"]);
+    for r in rows {
+        t.row(&[
+            r.group_index.to_string(),
+            r.sm_count.to_string(),
+            format!("{:.1}", r.gbps),
+        ]);
+    }
+    t
+}
+
+/// Paper claims: every group lands near its size class, and the class
+/// ratio is ~8/6.
+pub fn check(rows: &[SoloGroupResult]) -> anyhow::Result<()> {
+    let mean_of = |n: usize| -> f64 {
+        let v: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.sm_count == n)
+            .map(|r| r.gbps)
+            .collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let big = mean_of(8);
+    let small = mean_of(6);
+    if !(100.0..150.0).contains(&big) {
+        anyhow::bail!("8-SM groups at {big:.1} GB/s (expected ~120)");
+    }
+    if !(75.0..115.0).contains(&small) {
+        anyhow::bail!("6-SM groups at {small:.1} GB/s (expected ~90)");
+    }
+    let ratio = big / small;
+    if (ratio - 8.0 / 6.0).abs() > 0.12 {
+        anyhow::bail!("size ratio {ratio:.3} != 8/6");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_reproduces_paper_shape() {
+        let rows = run(Effort::Quick, 7);
+        assert_eq!(rows.len(), 14);
+        check(&rows).unwrap();
+    }
+}

@@ -1,0 +1,85 @@
+//! Figure 5: running pairs of resource groups over disjoint 40 GB regions.
+//!
+//! Expected: every pair achieves almost exactly the sum of its members'
+//! solo throughput — the groups do not share a TLB.
+
+use crate::probe::{group_pairs, solo_groups, GroupPairResult, VerifyConfig};
+use crate::util::benchkit::Table;
+
+use super::common::{self, Effort};
+
+pub struct Fig5 {
+    pub pairs: Vec<GroupPairResult>,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Fig5 {
+    let machine = common::paper_machine();
+    let map = common::ground_truth_map(&machine);
+    let mut cfg = VerifyConfig::for_machine(&machine);
+    cfg.accesses_per_sm = effort.accesses_per_sm();
+    cfg.seed = seed;
+    let solos = solo_groups(&machine, &map.groups, &cfg);
+    // The paper plots all pairs; Quick mode samples a representative set
+    // (every group appears, both 6-SM groups included).
+    let pairs_sel = match effort {
+        Effort::Full => None,
+        Effort::Quick => {
+            let n = map.groups.len();
+            let mut v: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+            v.push((0, n - 1));
+            Some(v)
+        }
+    };
+    Fig5 {
+        pairs: group_pairs(&machine, &map.groups, &solos, pairs_sel, &cfg),
+    }
+}
+
+pub fn table(f: &Fig5) -> Table {
+    let mut t = Table::new(&["group_a", "group_b", "pair_gbps", "solo_sum_gbps", "ratio"]);
+    for p in &f.pairs {
+        t.row(&[
+            p.a.to_string(),
+            p.b.to_string(),
+            format!("{:.1}", p.gbps),
+            format!("{:.1}", p.solo_sum),
+            format!("{:.3}", p.gbps / p.solo_sum),
+        ]);
+    }
+    t
+}
+
+/// Paper claim: pairs ~= double the singles (within tolerance).
+pub fn check(f: &Fig5) -> anyhow::Result<()> {
+    for p in &f.pairs {
+        let ratio = p.gbps / p.solo_sum;
+        if (ratio - 1.0).abs() > 0.12 {
+            anyhow::bail!(
+                "pair ({},{}) at {:.2}x of independent prediction",
+                p.a,
+                p.b,
+                ratio
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_reproduces_paper_shape() {
+        let f = run(Effort::Quick, 11);
+        assert!(!f.pairs.is_empty());
+        check(&f).unwrap();
+        // Every group appears at least once in the quick set.
+        let mut seen = std::collections::HashSet::new();
+        for p in &f.pairs {
+            seen.insert(p.a);
+            seen.insert(p.b);
+        }
+        assert_eq!(seen.len(), 14);
+    }
+}

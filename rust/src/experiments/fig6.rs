@@ -1,0 +1,102 @@
+//! Figure 6: memory throughput for random access, take 2 — the headline
+//! result.
+//!
+//! Fig 1's two arms plus **group-to-chunk**: all SMs of a resource group
+//! confined to the same memory half.  Expected: the group-to-chunk series
+//! stays at the ~1.3 TB/s plateau across the entire 80 GB while the other
+//! two collapse past 64 GB.
+
+use crate::coordinator::PlacementPolicy;
+use crate::util::benchkit::Table;
+use crate::util::threads::{default_workers, parallel_map};
+
+use super::common::{self, Effort};
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub region_gib: u64,
+    pub uniform_gbps: f64,
+    pub sm_to_chunk_gbps: f64,
+    pub group_to_chunk_gbps: f64,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Vec<Fig6Row> {
+    let machine = common::paper_machine();
+    let map = common::ground_truth_map(&machine);
+    let per_sm = effort.accesses_per_sm();
+    let sweep = common::region_sweep_gib(effort);
+    parallel_map(sweep, default_workers(), |&gib| {
+        let run = |policy, chunks, salt: u64| {
+            common::run_policy(&machine, &map, policy, gib, chunks, per_sm, seed ^ gib ^ salt)
+        };
+        Fig6Row {
+            region_gib: gib,
+            uniform_gbps: run(PlacementPolicy::Naive, 1, 0),
+            sm_to_chunk_gbps: run(PlacementPolicy::SmToChunk, 2, 0x5A),
+            group_to_chunk_gbps: run(PlacementPolicy::GroupToChunk, 2, 0xC3),
+        }
+    })
+}
+
+pub fn table(rows: &[Fig6Row]) -> Table {
+    let mut t = Table::new(&[
+        "region_gib",
+        "uniform_gbps",
+        "sm_to_chunk_gbps",
+        "group_to_chunk_gbps",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.region_gib.to_string(),
+            format!("{:.1}", r.uniform_gbps),
+            format!("{:.1}", r.sm_to_chunk_gbps),
+            format!("{:.1}", r.group_to_chunk_gbps),
+        ]);
+    }
+    t
+}
+
+/// The paper's headline claim: group-to-chunk is flat at full speed over
+/// the entire memory; the others collapse.
+pub fn check(rows: &[Fig6Row]) -> anyhow::Result<()> {
+    let at_80 = rows
+        .iter()
+        .find(|r| r.region_gib == 80)
+        .ok_or_else(|| anyhow::anyhow!("sweep must include 80 GiB"))?;
+    if at_80.group_to_chunk_gbps < 1100.0 {
+        anyhow::bail!(
+            "group-to-chunk at 80 GiB is {:.0} GB/s, not full speed",
+            at_80.group_to_chunk_gbps
+        );
+    }
+    if at_80.uniform_gbps > at_80.group_to_chunk_gbps / 2.5 {
+        anyhow::bail!("uniform did not collapse at 80 GiB");
+    }
+    if at_80.sm_to_chunk_gbps > at_80.group_to_chunk_gbps / 2.5 {
+        anyhow::bail!("sm-to-chunk should not benefit at 80 GiB");
+    }
+    // Flatness: group-to-chunk varies < 15% across the sweep.
+    let min = rows
+        .iter()
+        .map(|r| r.group_to_chunk_gbps)
+        .fold(f64::INFINITY, f64::min);
+    let max = rows
+        .iter()
+        .map(|r| r.group_to_chunk_gbps)
+        .fold(0.0f64, f64::max);
+    if (max - min) / max > 0.15 {
+        anyhow::bail!("group-to-chunk series not flat: {min:.0}..{max:.0}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_reproduces_headline_result() {
+        let rows = run(Effort::Quick, 2);
+        check(&rows).unwrap();
+    }
+}

@@ -1,0 +1,79 @@
+//! One driver per figure in the paper's evaluation (DESIGN.md §5).
+//!
+//! Each `figN` module exposes `run(effort, seed)`, a table/render function,
+//! and a `check()` that encodes the figure's qualitative claims — the same
+//! assertions the test suite and the benches rely on.  The CLI's
+//! `a100win fig <n>` prints the series; benches under `rust/benches/`
+//! re-run them with timing and CSV output.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod txn;
+
+pub use common::Effort;
+
+/// Run one figure by number and print it; `0` means the txn-size aside.
+pub fn run_figure(n: u32, effort: Effort, seed: u64) -> anyhow::Result<()> {
+    match n {
+        1 => {
+            let rows = fig1::run(effort, seed);
+            println!("# Figure 1: throughput vs region size (GB/s)");
+            fig1::table(&rows).print();
+            fig1::check(&rows)
+        }
+        2 => {
+            let f = fig2::run(effort, seed);
+            println!("# Figure 2: SM-pair probe matrix (smid order)");
+            println!("#   '@' diagonal, '#' strong contention (shared group),");
+            println!("#   '+' faint contention (shared GPC hub), '.' none");
+            print!("{}", fig2::render(&f));
+            Ok(())
+        }
+        3 => {
+            let f = fig3::run(effort, seed);
+            println!("# Figure 3: rearranged SM indices (discovered groups)");
+            print!("{}", fig3::render(&f));
+            println!("{}", fig3::summary(&f));
+            Ok(())
+        }
+        4 => {
+            let rows = fig4::run(effort, seed);
+            println!("# Figure 4: each resource group individually");
+            fig4::table(&rows).print();
+            fig4::check(&rows)
+        }
+        5 => {
+            let f = fig5::run(effort, seed);
+            println!("# Figure 5: pairs of resource groups, disjoint regions");
+            fig5::table(&f).print();
+            fig5::check(&f)
+        }
+        6 => {
+            let rows = fig6::run(effort, seed);
+            println!("# Figure 6: throughput vs region size, all policies");
+            fig6::table(&rows).print();
+            fig6::check(&rows)
+        }
+        0 => {
+            let rows = txn::run(effort, seed);
+            println!("# §2.1 aside: transaction-size sweep");
+            txn::table(&rows).print();
+            txn::check(&rows)
+        }
+        _ => anyhow::bail!("unknown figure {n} (paper has figures 1-6, 0 = txn aside)"),
+    }
+}
+
+/// All figures in order.
+pub fn run_all(effort: Effort, seed: u64) -> anyhow::Result<()> {
+    for n in [1, 2, 3, 4, 5, 6, 0] {
+        run_figure(n, effort, seed)?;
+        println!();
+    }
+    Ok(())
+}

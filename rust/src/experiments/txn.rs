@@ -1,0 +1,85 @@
+//! The §2.1 aside: transaction-size sweep.
+//!
+//! "Reading 32 64-bit words achieves about 1400 GB/s, and 32 128-bit words
+//! achieves about 1600 GB/s" — larger coalesced transactions amortize HBM
+//! overheads.  Orthogonal to the TLB cliff, but part of the evaluation.
+
+use crate::config::GIB;
+use crate::sim::{MeasurementSpec, MemRegion, Pattern, SmAssignment};
+use crate::util::benchkit::Table;
+use crate::util::threads::{default_workers, parallel_map};
+
+use super::common::{self, Effort};
+
+#[derive(Debug, Clone)]
+pub struct TxnRow {
+    pub txn_bytes: u64,
+    pub gbps: f64,
+}
+
+pub fn run(effort: Effort, seed: u64) -> Vec<TxnRow> {
+    let machine = common::paper_machine();
+    let sms = machine.topology().all_sms();
+    let per_sm = effort.accesses_per_sm();
+    parallel_map(vec![128u64, 256, 512], default_workers(), |&txn| {
+        let spec = MeasurementSpec {
+            assignments: sms
+                .iter()
+                .map(|&smid| SmAssignment {
+                    smid,
+                    pattern: Pattern::Uniform(MemRegion::new(0, 32 * GIB)),
+                })
+                .collect(),
+            accesses_per_sm: per_sm,
+            warmup_fraction: 0.25,
+            txn_bytes: txn,
+            seed: seed ^ txn,
+        };
+        TxnRow {
+            txn_bytes: txn,
+            gbps: machine.run(&spec).gbps,
+        }
+    })
+}
+
+pub fn table(rows: &[TxnRow]) -> Table {
+    let mut t = Table::new(&["txn_bytes", "gbps"]);
+    for r in rows {
+        t.row(&[r.txn_bytes.to_string(), format!("{:.1}", r.gbps)]);
+    }
+    t
+}
+
+/// Paper: 128 B ~1300, 256 B ~1400, 512 B ~1600 GB/s.
+pub fn check(rows: &[TxnRow]) -> anyhow::Result<()> {
+    let get = |b: u64| rows.iter().find(|r| r.txn_bytes == b).map(|r| r.gbps);
+    let (t128, t256, t512) = (
+        get(128).ok_or_else(|| anyhow::anyhow!("missing 128B"))?,
+        get(256).ok_or_else(|| anyhow::anyhow!("missing 256B"))?,
+        get(512).ok_or_else(|| anyhow::anyhow!("missing 512B"))?,
+    );
+    if !(1150.0..1400.0).contains(&t128) {
+        anyhow::bail!("128 B at {t128:.0} (paper ~1300)");
+    }
+    if !(1250.0..1500.0).contains(&t256) {
+        anyhow::bail!("256 B at {t256:.0} (paper ~1400)");
+    }
+    if !(1450.0..1700.0).contains(&t512) {
+        anyhow::bail!("512 B at {t512:.0} (paper ~1600)");
+    }
+    if !(t128 < t256 && t256 < t512) {
+        anyhow::bail!("efficiency must grow with transaction size");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn txn_sweep_matches_paper_aside() {
+        let rows = run(Effort::Quick, 5);
+        check(&rows).unwrap();
+    }
+}

@@ -1,0 +1,42 @@
+//! # a100win — full-speed random access to the entire (simulated) A100 memory
+//!
+//! Reproduction of Alden Walker, *"Enabling full-speed random access to the
+//! entire memory on the A100 GPU"* (2024), as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * [`sim`] — the substrate: a discrete-event model of the A100 memory
+//!   hierarchy (resource groups, per-group 64 GB TLBs, page walkers, HBM
+//!   channels).  We have no A100; this module stands in for the silicon
+//!   (DESIGN.md §2).
+//! * [`probe`] — the paper's technique: reverse-engineer which SMs share
+//!   memory resources from throughput measurements alone (Figs 2–5).
+//! * [`coordinator`] — the productized contribution: a TLB-aware placement
+//!   and serving layer that shards a huge random-access table into
+//!   per-group windows smaller than TLB reach and routes lookups to the
+//!   owning group (Fig 6 as a system feature).
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas gather
+//!   kernels (`artifacts/*.hlo.txt`); python never runs at request time.
+//! * [`workload`] — request/trace generators for benches and examples.
+//! * [`experiments`] — one driver per paper figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod probe;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::{MachineConfig, GIB, LINE_BYTES};
+    pub use crate::coordinator::placement::PlacementPolicy;
+    pub use crate::probe::{report::TopologyMap, Prober};
+    pub use crate::sim::{
+        Machine, Measurement, MeasurementSpec, MemRegion, Pattern, SmAssignment,
+    };
+}

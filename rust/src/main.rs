@@ -1,0 +1,393 @@
+//! `a100win` CLI: probe the (simulated) card, regenerate the paper's
+//! figures, and serve lookups with TLB-aware placement.
+
+use std::path::PathBuf;
+
+use a100win::config::MachineConfig;
+use a100win::coordinator::{
+    BatcherConfig, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+};
+use a100win::experiments::{self, Effort};
+use a100win::probe::{ProbeConfig, Prober, TopologyMap};
+use a100win::runtime::Runtime;
+use a100win::sim::Machine;
+use a100win::workload::{RequestGen, WorkloadSpec};
+
+const USAGE: &str = "\
+a100win — full-speed random access to the entire (simulated) A100 memory
+
+USAGE:
+    a100win probe   [--seed N] [--out FILE] [--effort quick|full]
+    a100win fig     <1..6|0|all> [--seed N] [--effort quick|full]
+    a100win serve   [--policy naive|sm-to-chunk|group-to-chunk]
+                    [--windows N] [--requests N] [--rows-per-request N]
+                    [--artifacts DIR]
+    a100win explain [--seed N]
+    a100win remote  [--peers N] [--region-gib N]
+    a100win analytic [--region-gib N]
+    a100win help
+
+SUBCOMMANDS:
+    probe    run the paper's probing pipeline (Figs 2-5) on the simulated
+             card and write the TopologyMap artifact
+    fig      regenerate a paper figure's data series (0 = txn-size aside)
+    serve    run the embedding-lookup server on AOT artifacts and report
+             throughput/latency (requires `make artifacts`)
+    explain  print machine config, ground-truth topology, and what the
+             paper's technique does on this card
+    remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
+    analytic closed-form throughput predictions (no simulation)
+";
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    fn u64_flag(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    fn effort(&self) -> anyhow::Result<Effort> {
+        match self.flag("effort") {
+            None => Ok(Effort::from_env()),
+            Some("quick") => Ok(Effort::Quick),
+            Some("full") => Ok(Effort::Full),
+            Some(v) => anyhow::bail!("--effort quick|full, got '{v}'"),
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "probe" => cmd_probe(&args),
+        "fig" => cmd_fig(&args),
+        "serve" => cmd_serve(&args),
+        "explain" => cmd_explain(&args),
+        "remote" => cmd_remote(&args),
+        "analytic" => cmd_analytic(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}' (try `a100win help`)")
+        }
+    }
+}
+
+fn machine_with_seed(seed: u64) -> anyhow::Result<Machine> {
+    let mut cfg = MachineConfig::a100_80gb();
+    cfg.topology.smid_permutation_seed = seed;
+    Machine::new(cfg).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn cmd_probe(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_flag("seed", 0xA100)?;
+    let effort = args.effort()?;
+    let machine = machine_with_seed(seed)?;
+    let mut cfg = ProbeConfig::for_machine(&machine);
+    if effort == Effort::Quick {
+        cfg.pair.accesses_per_sm = 1_500;
+        cfg.verify.accesses_per_sm = 3_000;
+    }
+    eprintln!(
+        "probing simulated card (seed {seed:#x}): {} SM pairs + verification...",
+        machine.topology().sm_count() * (machine.topology().sm_count() + 1) / 2
+    );
+    let t = std::time::Instant::now();
+    let outcome = Prober::with_config(&machine, cfg).run()?;
+    eprintln!("probe finished in {:.1}s", t.elapsed().as_secs_f64());
+
+    println!(
+        "discovered {} resource groups (sizes {:?})",
+        outcome.map.groups.len(),
+        outcome
+            .map
+            .groups
+            .iter()
+            .map(|g| g.len())
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "per-group TLB reach estimate: {:.1} GiB",
+        outcome.map.reach_bytes as f64 / (1u64 << 30) as f64
+    );
+    println!(
+        "groups independent (Fig-5 check): {}",
+        outcome.map.independent
+    );
+    println!("reach sweep (GiB -> GB/s):");
+    for (bytes, gbps) in &outcome.reach_curve {
+        println!(
+            "  {:6.1} -> {gbps:7.1}",
+            *bytes as f64 / (1u64 << 30) as f64
+        );
+    }
+    let out = PathBuf::from(args.flag("out").unwrap_or("topomap.json"));
+    outcome.map.save(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("fig needs a figure number or 'all'"))?;
+    let seed = args.u64_flag("seed", 42)?;
+    let effort = args.effort()?;
+    if which == "all" {
+        experiments::run_all(effort, seed)
+    } else {
+        let n: u32 = which
+            .parse()
+            .map_err(|_| anyhow::anyhow!("figure must be 0-6 or 'all'"))?;
+        experiments::run_figure(n, effort, seed)
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
+    let windows = args.u64_flag("windows", 2)? as usize;
+    let requests = args.u64_flag("requests", 200)?;
+    let rows_per_request = args.u64_flag("rows-per-request", 512)? as usize;
+    let artifacts = match args.flag("artifacts") {
+        Some(d) => PathBuf::from(d),
+        None => Runtime::default_artifacts_dir()?,
+    };
+
+    // Table sized to the artifacts' static shard shape.
+    let rt = Runtime::new(&artifacts)?;
+    let meta = rt
+        .manifest()
+        .first_of("lookup")
+        .ok_or_else(|| anyhow::anyhow!("no lookup artifacts"))?;
+    drop(rt);
+    let rows = (meta.n * windows) as u64;
+    println!(
+        "table: {rows} rows x {} f32 ({} MiB), {windows} windows, policy {policy}",
+        meta.d,
+        rows * (meta.d as u64) * 4 / (1 << 20),
+    );
+
+    let machine = machine_with_seed(0xA100)?;
+    let map = {
+        // Serve against the ground-truth map (a real deployment would load
+        // `a100win probe`'s output; identical content here).
+        let topo = machine.topology();
+        TopologyMap {
+            groups: (0..topo.group_count())
+                .map(|g| topo.sms_in_group(g))
+                .collect(),
+            reach_bytes: machine.config().tlb.reach_bytes(),
+            solo_gbps: topo.group_sizes().iter().map(|&s| s as f64 * 15.0).collect(),
+            independent: true,
+            card_id: "serve".into(),
+        }
+    };
+
+    let table = Table::synthetic(rows, meta.d);
+    let plan = WindowPlan::split(rows, 128, windows);
+    let mut cfg = ServerConfig::new(artifacts);
+    cfg.policy = policy;
+    cfg.batcher = BatcherConfig::default();
+    let server = EmbeddingServer::start(cfg, &map, plan, table.clone())?;
+
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, rows_per_request, 7));
+    let t = std::time::Instant::now();
+    for _ in 0..requests {
+        let req = gen.next_request();
+        let out = server.lookup(req.clone())?;
+        debug_assert_eq!(out.len(), req.len() * meta.d);
+    }
+    let dt = t.elapsed();
+    let m = server.metrics();
+    println!("served {requests} requests in {:.2}s", dt.as_secs_f64());
+    println!(
+        "throughput: {:.0} rows/s ({:.1} MB/s of gathered lines)",
+        m.rows as f64 / dt.as_secs_f64(),
+        m.rows as f64 * (meta.d as f64 * 4.0) / dt.as_secs_f64() / 1e6
+    );
+    println!("{}", m.report());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_remote(args: &Args) -> anyhow::Result<()> {
+    use a100win::sim::nvlink::{run_remote, NvlinkConfig, PeerSpec};
+    use a100win::sim::MemRegion;
+    let peers = args.u64_flag("peers", 4)? as usize;
+    let gib = args.u64_flag("region-gib", 80)?;
+    let cfg = MachineConfig::a100_80gb();
+    let nv = NvlinkConfig::a100();
+    println!(
+        "NVLink ingress: {:.0} GB/s, TLB reach {} GiB, {peers} peers reading {gib} GiB",
+        nv.ingress_gbps,
+        nv.reach_bytes(cfg.tlb.page_bytes) >> 30
+    );
+    let specs: Vec<PeerSpec> = (0..peers)
+        .map(|_| PeerSpec {
+            pattern: a100win::sim::Pattern::Uniform(MemRegion::new(0, gib << 30)),
+        })
+        .collect();
+    let m = run_remote(&cfg, &nv, &specs, 20_000, 1);
+    println!(
+        "remote random access: {:.1} GB/s (TLB hit rate {:.3}, mean latency {:.0} ns)",
+        m.gbps, m.tlb_hit_rate, m.avg_latency_ns
+    );
+    if m.tlb_hit_rate < 0.95 {
+        println!("NOTE: the ingress TLB is a single shared structure; sender-side");
+        println!("windowing cannot restore speed — shrink the total touched region.");
+    }
+    Ok(())
+}
+
+fn cmd_analytic(args: &Args) -> anyhow::Result<()> {
+    use a100win::sim::analytic::Analytic;
+    use a100win::sim::MemRegion;
+    let gib = args.u64_flag("region-gib", 80)?;
+    let cfg = MachineConfig::a100_80gb();
+    let a = Analytic::new(&cfg);
+    println!("closed-form predictions (no simulation), region {gib} GiB:");
+    let p = a.predict_uniform(MemRegion::new(0, gib << 30), 128);
+    println!(
+        "  uniform random, all SMs: {:.0} GB/s (group 0: hit rate {:.3}, bottleneck {:?})",
+        p.gbps, p.per_group[0].hit_rate, p.per_group[0].bottleneck
+    );
+    for txn in [128u64, 256, 512] {
+        let p = a.predict_uniform(MemRegion::new(0, 32 << 30), txn);
+        println!("  {txn:>4} B transactions over 32 GiB: {:.0} GB/s", p.gbps);
+    }
+    Ok(())
+}
+
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_flag("seed", 0xA100)?;
+    let machine = machine_with_seed(seed)?;
+    let cfg = machine.config();
+    let topo = machine.topology();
+    println!("simulated card: A100-SXM4-80GB (smid permutation seed {seed:#x})");
+    println!(
+        "  {} GPCs enabled, {} TPCs, {} SMs, {} memory resource groups (half-GPCs)",
+        cfg.topology.enabled_gpcs,
+        cfg.topology.enabled_tpcs,
+        topo.sm_count(),
+        topo.group_count()
+    );
+    println!(
+        "  group sizes: {:?}",
+        (0..topo.group_count())
+            .map(|g| topo.group_sizes()[g])
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "  per-group TLB: {} x {} KiB pages = {} GiB reach, {}-way LRU, {} walkers @ {} ns",
+        cfg.tlb.entries,
+        cfg.tlb.page_bytes / 1024,
+        cfg.tlb.reach_bytes() / (1 << 30),
+        cfg.tlb.associativity,
+        cfg.tlb.walkers_per_group,
+        cfg.tlb.walk_ns
+    );
+    println!(
+        "  HBM: {} GiB, {} channels, {:.0} GB/s peak ({:.0} effective for 128 B random)",
+        cfg.memory.total_bytes / (1 << 30),
+        cfg.memory.channels,
+        cfg.memory.peak_gbps,
+        cfg.memory.peak_gbps * cfg.memory.efficiency_128b
+    );
+    println!();
+    println!("the paper's technique on this card:");
+    println!(
+        "  random access over all {} GiB thrashes every group's TLB (reach {} GiB);",
+        cfg.memory.total_bytes / (1 << 30),
+        cfg.tlb.reach_bytes() / (1 << 30)
+    );
+    println!("  probe the pair matrix (fig 2-3) to discover the groups, then pin each");
+    println!("  group to a window smaller than reach (fig 6) to restore full speed.");
+    println!("  run `a100win probe` then `a100win fig 6` to see it.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn args_positional_and_flags() {
+        let a = parse(&["6", "--seed", "42", "--effort", "full"]);
+        assert_eq!(a.positional, vec!["6"]);
+        assert_eq!(a.flag("seed"), Some("42"));
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 42);
+        assert!(matches!(a.effort().unwrap(), Effort::Full));
+    }
+
+    #[test]
+    fn args_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_flag("seed", 7).unwrap(), 7);
+        assert!(a.flag("none").is_none());
+    }
+
+    #[test]
+    fn args_rejects_missing_value_and_bad_numbers() {
+        assert!(Args::parse(&["--seed".to_string()]).is_err());
+        let a = parse(&["--seed", "abc"]);
+        assert!(a.u64_flag("seed", 0).is_err());
+        let a = parse(&["--effort", "bogus"]);
+        assert!(a.effort().is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&["bogus".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! Clustering the pair matrix into resource groups (paper §2.2, Fig 3).
+//!
+//! The paper "rearranges the indices" of the Fig-2 matrix until the shared
+//! groups appear as blocks.  Algorithmically that is: threshold the matrix
+//! into a "shares resources" relation, then take connected components —
+//! SMs in one half-GPC all contend with each other through the same TLB /
+//! walker pool, so the relation is (noisily) transitive and components
+//! recover the groups.  The permutation that sorts SMs by discovered
+//! component is exactly the paper's Fig-3 rearrangement.
+
+use crate::probe::pair::PairMatrix;
+use crate::sim::SmId;
+
+/// Result of clustering.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Discovered group id per smid (dense, 0-based, ordered by first
+    /// member smid).
+    pub group_of: Vec<usize>,
+    /// Members per discovered group.
+    pub groups: Vec<Vec<SmId>>,
+    /// Permutation of smids sorted by (group, smid) — the Fig-3 view.
+    pub permutation: Vec<SmId>,
+    /// The contention threshold used (fraction of mean off-diagonal).
+    pub threshold: f64,
+    /// Bimodality contrast: mean(pairs above threshold) / mean(below).
+    /// ~1.0 means the matrix carries no contention signal (e.g. a card
+    /// whose whole memory fits under TLB reach); >1.3 is a clean split.
+    pub contrast: f64,
+}
+
+/// Union-find over smids.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n).collect(),
+        }
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let root = self.find(self.parent[x]);
+            self.parent[x] = root;
+        }
+        self.parent[x]
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra.max(rb)] = ra.min(rb);
+        }
+    }
+}
+
+/// Pick the contention threshold from the matrix itself: the pair
+/// throughputs are bimodal (contended ~half of uncontended), so the largest
+/// gap in the sorted off-diagonal values separates the modes.
+pub fn auto_threshold(m: &PairMatrix) -> f64 {
+    let mut vals: Vec<f64> = Vec::with_capacity(m.n * (m.n - 1) / 2);
+    for i in 0..m.n {
+        for j in (i + 1)..m.n {
+            vals.push(m.get(i, j));
+        }
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Find the widest relative gap in the middle 90% of the distribution.
+    let lo = vals.len() / 20;
+    let hi = vals.len() - vals.len() / 20;
+    let mut best_gap = 0.0;
+    let mut best_mid = vals[vals.len() / 2];
+    for k in lo..hi.saturating_sub(1) {
+        let gap = vals[k + 1] - vals[k];
+        if gap > best_gap {
+            best_gap = gap;
+            best_mid = (vals[k + 1] + vals[k]) / 2.0;
+        }
+    }
+    best_mid
+}
+
+/// Cluster the matrix into resource groups.
+///
+/// Robustness: raw single-link union-find chains through any single noisy
+/// pair, merging whole groups.  So an edge (i, j) below threshold only
+/// counts when i and j also *agree about everyone else*: their dark-
+/// neighbor sets must overlap substantially (Jaccard >= 0.5).  True group
+/// mates contend with the identical SM set; a one-off outlier pair shares
+/// almost none.
+pub fn cluster(m: &PairMatrix) -> Clustering {
+    let thr = auto_threshold(m);
+    let dark: Vec<Vec<bool>> = (0..m.n)
+        .map(|i| {
+            (0..m.n)
+                .map(|j| i != j && m.get(i, j) < thr)
+                .collect()
+        })
+        .collect();
+    // Jaccard over dark sets *closed with the endpoints themselves* — for a
+    // 2-SM group, i's only dark neighbor is j and vice versa, so the open
+    // sets would be disjoint even though the pair is genuinely a group.
+    let jaccard = |i: usize, j: usize| -> f64 {
+        let (a, b) = (&dark[i], &dark[j]);
+        let mut inter = 0usize;
+        let mut union = 0usize;
+        for k in 0..a.len() {
+            let ak = a[k] || k == i;
+            let bk = b[k] || k == j;
+            inter += usize::from(ak && bk);
+            union += usize::from(ak || bk);
+        }
+        if union == 0 {
+            0.0
+        } else {
+            inter as f64 / union as f64
+        }
+    };
+    let mut dsu = Dsu::new(m.n);
+    for i in 0..m.n {
+        for j in (i + 1)..m.n {
+            if m.get(i, j) < thr && jaccard(i, j) >= 0.5 {
+                dsu.union(i, j);
+            }
+        }
+    }
+    // Dense group ids in order of first appearance.
+    let mut id_of_root = std::collections::HashMap::new();
+    let mut group_of = vec![0usize; m.n];
+    let mut groups: Vec<Vec<SmId>> = Vec::new();
+    for sm in 0..m.n {
+        let root = dsu.find(sm);
+        let gid = *id_of_root.entry(root).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        group_of[sm] = gid;
+        groups[gid].push(sm);
+    }
+    let mut permutation: Vec<SmId> = (0..m.n).collect();
+    permutation.sort_by_key(|&s| (group_of[s], s));
+    // Contrast of the two modes around the threshold.
+    let (mut lo_sum, mut lo_n, mut hi_sum, mut hi_n) = (0.0, 0usize, 0.0, 0usize);
+    for i in 0..m.n {
+        for j in (i + 1)..m.n {
+            let v = m.get(i, j);
+            if v < thr {
+                lo_sum += v;
+                lo_n += 1;
+            } else {
+                hi_sum += v;
+                hi_n += 1;
+            }
+        }
+    }
+    let contrast = if lo_n == 0 || hi_n == 0 {
+        1.0
+    } else {
+        (hi_sum / hi_n as f64) / (lo_sum / lo_n as f64)
+    };
+    Clustering {
+        group_of,
+        groups,
+        permutation,
+        threshold: thr,
+        contrast,
+    }
+}
+
+/// Check the paper's Fig-2 structural observation: TPC mates (consecutive
+/// smid pairs `(2k, 2k+1)`) always land in the same discovered group.
+pub fn tpc_blocks_consistent(c: &Clustering) -> bool {
+    c.group_of
+        .chunks(2)
+        .all(|pair| pair.len() < 2 || pair[0] == pair[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::probe::pair::{pair_probe, PairProbeConfig};
+    use crate::sim::Machine;
+
+    fn tiny_clustering() -> (Machine, Clustering) {
+        let m = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let mut cfg = PairProbeConfig::for_machine(&m);
+        cfg.accesses_per_sm = 2_000;
+        cfg.workers = 4;
+        let pm = pair_probe(&m, &cfg);
+        let c = cluster(&pm);
+        (m, c)
+    }
+
+    #[test]
+    fn recovers_ground_truth_groups() {
+        let (m, c) = tiny_clustering();
+        let topo = m.topology();
+        assert_eq!(c.groups.len(), topo.group_count());
+        // Discovered labels must be a relabeling of ground truth.
+        for i in 0..topo.sm_count() {
+            for j in 0..topo.sm_count() {
+                assert_eq!(
+                    c.group_of[i] == c.group_of[j],
+                    topo.group_of(i) == topo.group_of(j),
+                    "smids {i},{j} mis-clustered"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tpc_mates_clustered_together() {
+        let (_m, c) = tiny_clustering();
+        assert!(tpc_blocks_consistent(&c));
+    }
+
+    #[test]
+    fn permutation_is_valid_and_group_sorted() {
+        let (_m, c) = tiny_clustering();
+        let mut sorted = c.permutation.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..c.group_of.len()).collect::<Vec<_>>());
+        // Group ids must be nondecreasing along the permutation.
+        let seq: Vec<usize> = c.permutation.iter().map(|&s| c.group_of[s]).collect();
+        assert!(seq.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn groups_partition_all_sms() {
+        let (_m, c) = tiny_clustering();
+        let total: usize = c.groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, c.group_of.len());
+        for (gid, members) in c.groups.iter().enumerate() {
+            for &sm in members {
+                assert_eq!(c.group_of[sm], gid);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_separates_modes() {
+        let m = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let mut cfg = PairProbeConfig::for_machine(&m);
+        cfg.accesses_per_sm = 2_000;
+        cfg.workers = 4;
+        let pm = pair_probe(&m, &cfg);
+        let thr = auto_threshold(&pm);
+        let topo = m.topology();
+        for i in 0..pm.n {
+            for j in (i + 1)..pm.n {
+                let same = topo.group_of(i) == topo.group_of(j);
+                assert_eq!(
+                    pm.get(i, j) < thr,
+                    same,
+                    "pair ({i},{j}) same={same} thr={thr:.2} got={:.2}",
+                    pm.get(i, j)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! The paper's reverse-engineering technique, end to end.
+//!
+//! [`Prober`] chains the pieces:
+//!
+//! 1. [`pair`]    — Fig 2: throughput matrix over all SM pairs.
+//! 2. [`cluster`] — Fig 3: rearrangement / connected components -> groups.
+//! 3. [`verify`]  — Figs 4–5: solo-group scaling + pairwise independence.
+//! 4. reach sweep —  Fig 1 mechanism: grow one group's region until
+//!    throughput collapses; the knee is the per-group TLB reach.
+//! 5. [`report`]  — the `TopologyMap` artifact the coordinator consumes.
+//!
+//! Everything here treats the [`Machine`](crate::sim::Machine) as an opaque
+//! device: only smid lists go in, only throughput comes out.  Ground-truth
+//! topology is never consulted (tests check the *discovered* map against
+//! it, the prober itself cannot).
+
+pub mod cluster;
+pub mod pair;
+pub mod report;
+pub mod verify;
+
+use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
+use crate::util::threads::default_workers;
+
+pub use cluster::{cluster, Clustering};
+pub use pair::{pair_probe, PairMatrix, PairProbeConfig};
+pub use report::TopologyMap;
+pub use verify::{group_pairs, solo_groups, GroupPairResult, SoloGroupResult, VerifyConfig};
+
+/// Tunables for a full probe run.
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    pub pair: PairProbeConfig,
+    pub verify: VerifyConfig,
+    /// Region sizes (bytes) for the reach sweep.  Default: 12 points from
+    /// 1/12 of memory to all of it.
+    pub reach_sweep: Vec<u64>,
+    /// Relative throughput drop that marks the reach knee.
+    pub knee_ratio: f64,
+    /// Tolerance for the independence verdict.
+    pub independence_tolerance: f64,
+}
+
+impl ProbeConfig {
+    pub fn for_machine(m: &Machine) -> Self {
+        let total = m.config().memory.total_bytes;
+        let page = m.config().tlb.page_bytes;
+        let mut sweep = Vec::new();
+        for k in 1..=12u64 {
+            let bytes = total * k / 12;
+            sweep.push((bytes / page).max(1) * page);
+        }
+        Self {
+            pair: PairProbeConfig::for_machine(m),
+            verify: VerifyConfig::for_machine(m),
+            reach_sweep: sweep,
+            knee_ratio: 0.7,
+            independence_tolerance: 0.15,
+        }
+    }
+}
+
+/// Full probe outcome (the map plus the raw evidence behind it).
+#[derive(Debug, Clone)]
+pub struct ProbeOutcome {
+    pub map: TopologyMap,
+    pub matrix: PairMatrix,
+    pub clustering: Clustering,
+    pub solos: Vec<SoloGroupResult>,
+    pub pairs: Vec<GroupPairResult>,
+    /// (region_bytes, gbps) points of the reach sweep.
+    pub reach_curve: Vec<(u64, f64)>,
+}
+
+/// High-level driver for the probe pipeline.
+pub struct Prober<'m> {
+    machine: &'m Machine,
+    cfg: ProbeConfig,
+}
+
+impl<'m> Prober<'m> {
+    pub fn new(machine: &'m Machine) -> Self {
+        let cfg = ProbeConfig::for_machine(machine);
+        Self { machine, cfg }
+    }
+
+    pub fn with_config(machine: &'m Machine, cfg: ProbeConfig) -> Self {
+        Self { machine, cfg }
+    }
+
+    pub fn config(&self) -> &ProbeConfig {
+        &self.cfg
+    }
+
+    /// Estimate one group's TLB reach: sweep region sizes, find the knee
+    /// where throughput falls below `knee_ratio` x the small-region value.
+    /// Returns (reach estimate, curve).
+    pub fn reach_sweep(&self, group: &[crate::sim::SmId]) -> (u64, Vec<(u64, f64)>) {
+        let jobs: Vec<u64> = self.cfg.reach_sweep.clone();
+        let per_sm = self.cfg.verify.accesses_per_sm;
+        let seed = self.cfg.verify.seed;
+        let machine = self.machine;
+        let curve: Vec<(u64, f64)> =
+            crate::util::threads::parallel_map(jobs, default_workers(), |&bytes| {
+                let spec = MeasurementSpec::uniform_all(
+                    group,
+                    Pattern::Uniform(MemRegion::new(0, bytes)),
+                    per_sm,
+                    seed ^ bytes,
+                );
+                (bytes, machine.run(&spec).gbps)
+            });
+        let baseline = curve
+            .iter()
+            .take(3)
+            .map(|&(_, g)| g)
+            .fold(0.0f64, f64::max);
+        // The knee is the first region size whose throughput falls below
+        // the threshold; the conservative reach estimate is the sweep point
+        // before it.
+        let mut est = curve.last().map(|&(b, _)| b).unwrap_or(0);
+        for (idx, &(bytes, gbps)) in curve.iter().enumerate() {
+            if gbps < baseline * self.cfg.knee_ratio {
+                est = if idx > 0 { curve[idx - 1].0 } else { bytes };
+                break;
+            }
+        }
+        (est, curve)
+    }
+
+    /// Run the whole pipeline.
+    pub fn run(&self) -> anyhow::Result<ProbeOutcome> {
+        let matrix = pair_probe(self.machine, &self.cfg.pair);
+        let mut clustering = cluster(&matrix);
+        // No contention signal?  That happens when the card's entire memory
+        // fits under every TLB's reach (e.g. the 40 GB variant): the thrash
+        // probe never thrashes, pair throughputs are unimodal, and any
+        // partition would be noise.  Report one undivided group — placement
+        // is irrelevant on such a card, and the map stays honest.
+        if clustering.contrast < 1.2 {
+            let n = self.machine.topology().sm_count();
+            clustering.groups = vec![(0..n).collect()];
+            clustering.group_of = vec![0; n];
+            clustering.permutation = (0..n).collect();
+        }
+        let solos = solo_groups(self.machine, &clustering.groups, &self.cfg.verify);
+        // All-pairs verification is O(groups^2) runs — cheap next to the
+        // O(sms^2) pair sweep.
+        let pairs = group_pairs(
+            self.machine,
+            &clustering.groups,
+            &solos,
+            None,
+            &self.cfg.verify,
+        );
+        let independent = verify::groups_independent(&pairs, self.cfg.independence_tolerance);
+        // Reach: sweep the largest discovered group (most demand pressure).
+        let largest = clustering
+            .groups
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, g)| g.len())
+            .map(|(i, _)| i)
+            .unwrap();
+        let (reach_bytes, reach_curve) = self.reach_sweep(&clustering.groups[largest]);
+
+        let map = TopologyMap {
+            groups: clustering.groups.clone(),
+            reach_bytes,
+            solo_gbps: solos.iter().map(|s| s.gbps).collect(),
+            independent,
+            card_id: format!(
+                "sim-seed-{:#x}",
+                self.machine.config().topology.smid_permutation_seed
+            ),
+        };
+        map.validate()?;
+        Ok(ProbeOutcome {
+            map,
+            matrix,
+            clustering,
+            solos,
+            pairs,
+            reach_curve,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    #[test]
+    fn full_pipeline_on_tiny_machine() {
+        let m = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let mut cfg = ProbeConfig::for_machine(&m);
+        cfg.pair.accesses_per_sm = 2_000;
+        cfg.verify.accesses_per_sm = 3_000;
+        let outcome = Prober::with_config(&m, cfg).run().unwrap();
+
+        // Discovered structure matches ground truth.
+        let topo = m.topology();
+        assert_eq!(outcome.map.groups.len(), topo.group_count());
+        assert_eq!(outcome.map.sm_count(), topo.sm_count());
+        for g in &outcome.map.groups {
+            let want = topo.group_of(g[0]);
+            assert!(g.iter().all(|&s| topo.group_of(s) == want));
+        }
+
+        // Independence held, and the reach estimate brackets the true reach.
+        assert!(outcome.map.independent);
+        let true_reach = m.config().tlb.reach_bytes(); // 16 MiB on tiny
+        assert!(
+            outcome.map.reach_bytes >= true_reach / 2
+                && outcome.map.reach_bytes <= true_reach * 2,
+            "reach estimate {} vs true {true_reach}",
+            outcome.map.reach_bytes
+        );
+        // The sweep must actually show the cliff: max/min ratio is large.
+        let max = outcome
+            .reach_curve
+            .iter()
+            .map(|&(_, g)| g)
+            .fold(0.0, f64::max);
+        let min = outcome
+            .reach_curve
+            .iter()
+            .map(|&(_, g)| g)
+            .fold(f64::INFINITY, f64::min);
+        assert!(max / min > 2.0, "no cliff in reach curve: {max} / {min}");
+    }
+
+    #[test]
+    fn reach_sweep_monotone_regions() {
+        let m = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let cfg = ProbeConfig::for_machine(&m);
+        assert!(cfg.reach_sweep.windows(2).all(|w| w[0] <= w[1]));
+        let page = m.config().tlb.page_bytes;
+        assert!(cfg.reach_sweep.iter().all(|&b| b % page == 0 && b > 0));
+    }
+}

@@ -1,0 +1,233 @@
+//! Pair probing (paper §2.2, Fig 2): measure throughput for every pair of
+//! SMs and look for the contention fingerprint of shared resources.
+//!
+//! The probe points the benchmark at a region *larger than any plausible
+//! TLB reach* so that translation — not data bandwidth — is the bottleneck.
+//! Two SMs that share translation hardware (TLB + page walkers) then
+//! collapse to roughly half the throughput of two SMs that do not.  With a
+//! TLB-resident region the signal would vanish: two SMs pull ~30 GB/s,
+//! nowhere near any shared port's bandwidth.  (The paper does not spell out
+//! its probe region size; thrash mode is the regime in which its Fig-2
+//! pattern is strongest.)
+
+use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmId};
+use crate::util::threads::{default_workers, parallel_map};
+
+/// Configuration for the pair sweep.
+#[derive(Debug, Clone)]
+pub struct PairProbeConfig {
+    /// Region each probe run reads (default: the whole device, which
+    /// exceeds the 64 GB reach and forces translation pressure).
+    pub region: MemRegion,
+    /// Accesses per SM per run.  Small: only the *relative* throughput of
+    /// pairs matters.
+    pub accesses_per_sm: u64,
+    pub seed: u64,
+    /// OS threads for the sweep (runs are independent simulations).
+    pub workers: usize,
+}
+
+impl PairProbeConfig {
+    pub fn for_machine(m: &Machine) -> Self {
+        Self {
+            region: MemRegion::whole(m.config().memory.total_bytes),
+            accesses_per_sm: 3_000,
+            seed: 0xFA15,
+            workers: default_workers(),
+        }
+    }
+}
+
+/// The symmetric pair-throughput matrix (GB/s), `sm_count x sm_count`.
+/// Diagonal holds each SM's solo throughput.
+#[derive(Debug, Clone)]
+pub struct PairMatrix {
+    pub n: usize,
+    data: Vec<f64>,
+}
+
+impl PairMatrix {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: SmId, j: SmId) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    fn set(&mut self, i: SmId, j: SmId, v: f64) {
+        self.data[i * self.n + j] = v;
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Mean off-diagonal throughput (normalization reference).
+    pub fn mean_offdiag(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    sum += self.get(i, j);
+                    cnt += 1;
+                }
+            }
+        }
+        sum / cnt as f64
+    }
+
+    /// Render the matrix with a permutation applied to both axes (Fig 3's
+    /// "rearranged indices" view).  `shade` maps a throughput to a glyph.
+    pub fn render(&self, perm: &[SmId]) -> String {
+        assert_eq!(perm.len(), self.n);
+        let mean = self.mean_offdiag();
+        let mut out = String::with_capacity(self.n * (self.n + 1));
+        for &i in perm {
+            for &j in perm {
+                let c = if i == j {
+                    '@'
+                } else {
+                    let ratio = self.get(i, j) / mean;
+                    if ratio < 0.75 {
+                        '#' // strong contention: shared group
+                    } else if ratio < 0.97 {
+                        '+' // faint contention: shared GPC hub
+                    } else {
+                        '.'
+                    }
+                };
+                out.push(c);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV of the (optionally permuted) matrix.
+    pub fn to_csv(&self, perm: &[SmId]) -> String {
+        let mut s = String::new();
+        for &i in perm {
+            let row: Vec<String> = perm.iter().map(|&j| format!("{:.2}", self.get(i, j))).collect();
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Run the full pair sweep: `n*(n-1)/2` two-SM runs plus `n` solo runs.
+pub fn pair_probe(machine: &Machine, cfg: &PairProbeConfig) -> PairMatrix {
+    let n = machine.topology().sm_count();
+    let mut jobs: Vec<(SmId, SmId)> = Vec::with_capacity(n * (n + 1) / 2);
+    for i in 0..n {
+        for j in i..n {
+            jobs.push((i, j));
+        }
+    }
+    let results = parallel_map(jobs.clone(), cfg.workers, |&(i, j)| {
+        let sms: Vec<SmId> = if i == j { vec![i] } else { vec![i, j] };
+        let spec = MeasurementSpec::uniform_all(
+            &sms,
+            Pattern::Uniform(cfg.region),
+            cfg.accesses_per_sm,
+            cfg.seed ^ ((i as u64) << 32 | j as u64),
+        );
+        machine.run(&spec).gbps
+    });
+    let mut m = PairMatrix::new(n);
+    for ((i, j), gbps) in jobs.into_iter().zip(results) {
+        m.set(i, j, gbps);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn tiny_machine() -> Machine {
+        Machine::new(MachineConfig::tiny_test()).unwrap()
+    }
+
+    fn tiny_probe(m: &Machine) -> PairMatrix {
+        let mut cfg = PairProbeConfig::for_machine(m);
+        cfg.accesses_per_sm = 2_000;
+        cfg.workers = 4;
+        pair_probe(m, &cfg)
+    }
+
+    #[test]
+    fn matrix_is_symmetric_and_positive() {
+        let m = tiny_machine();
+        let pm = tiny_probe(&m);
+        assert_eq!(pm.n, 12);
+        for i in 0..pm.n {
+            assert!(pm.get(i, i) > 0.0);
+            for j in 0..pm.n {
+                assert_eq!(pm.get(i, j), pm.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn same_group_pairs_are_slower() {
+        let m = tiny_machine();
+        let pm = tiny_probe(&m);
+        let topo = m.topology();
+        let (mut same_sum, mut same_n, mut diff_sum, mut diff_n) = (0.0, 0, 0.0, 0);
+        for i in 0..pm.n {
+            for j in (i + 1)..pm.n {
+                if topo.group_of(i) == topo.group_of(j) {
+                    same_sum += pm.get(i, j);
+                    same_n += 1;
+                } else {
+                    diff_sum += pm.get(i, j);
+                    diff_n += 1;
+                }
+            }
+        }
+        let same = same_sum / same_n as f64;
+        let diff = diff_sum / diff_n as f64;
+        assert!(
+            diff / same > 1.5,
+            "expected strong group signal: same={same:.2} diff={diff:.2}"
+        );
+    }
+
+    #[test]
+    fn render_shows_group_blocks() {
+        let m = tiny_machine();
+        let pm = tiny_probe(&m);
+        // Group-sorted permutation must produce '#' marks for group mates.
+        let topo = m.topology();
+        let mut perm: Vec<usize> = (0..pm.n).collect();
+        perm.sort_by_key(|&s| topo.group_of(s));
+        let s = pm.render(&perm);
+        assert_eq!(s.lines().count(), pm.n);
+        assert!(s.contains('#'));
+        assert!(s.contains('.'));
+        assert!(s.contains('@'));
+    }
+
+    #[test]
+    fn csv_has_n_rows() {
+        let m = tiny_machine();
+        let pm = tiny_probe(&m);
+        let perm: Vec<usize> = (0..pm.n).collect();
+        let csv = pm.to_csv(&perm);
+        assert_eq!(csv.lines().count(), pm.n);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), pm.n);
+    }
+
+    #[test]
+    fn probe_is_deterministic() {
+        let m = tiny_machine();
+        let a = tiny_probe(&m);
+        let b = tiny_probe(&m);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,211 @@
+//! The probe's output artifact: a card-specific `TopologyMap` that the
+//! coordinator consumes to place windows.
+//!
+//! Serialized as JSON (via the in-tree [`crate::util::json`] substrate) so
+//! a probe run on one process can feed coordinators in another — mirroring
+//! how the paper's technique would ship: probe once per card at install
+//! time, then reuse the map.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::sim::SmId;
+use crate::util::json::Json;
+
+/// What the probe learned about a card.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyMap {
+    /// Discovered resource groups (each a set of smids).
+    pub groups: Vec<Vec<SmId>>,
+    /// Estimated per-group TLB reach in bytes (from the region sweep; the
+    /// A100 answer is 64 GiB).
+    pub reach_bytes: u64,
+    /// Solo throughput per group, GB/s (Fig-4 data; used by the
+    /// coordinator to weight window sizes).
+    pub solo_gbps: Vec<f64>,
+    /// Did the independence check (Fig 5) pass?
+    pub independent: bool,
+    /// Seed / identity of the probed card.
+    pub card_id: String,
+}
+
+impl TopologyMap {
+    /// Group id for an smid, if the map covers it.
+    pub fn group_of(&self, smid: SmId) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(&smid))
+    }
+
+    pub fn sm_count(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Sanity-check structural invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.groups.is_empty() {
+            return Err(anyhow!("no groups"));
+        }
+        if self.groups.len() != self.solo_gbps.len() {
+            return Err(anyhow!("solo_gbps length mismatch"));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for g in &self.groups {
+            if g.is_empty() {
+                return Err(anyhow!("empty group"));
+            }
+            for &sm in g {
+                if !seen.insert(sm) {
+                    return Err(anyhow!("smid {sm} appears twice"));
+                }
+            }
+        }
+        if self.reach_bytes == 0 {
+            return Err(anyhow!("reach_bytes is zero"));
+        }
+        Ok(())
+    }
+
+    // ---- JSON round-trip -----------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("card_id", Json::str(self.card_id.clone())),
+            ("reach_bytes", Json::num(self.reach_bytes as f64)),
+            ("independent", Json::Bool(self.independent)),
+            (
+                "groups",
+                Json::arr(
+                    self.groups
+                        .iter()
+                        .map(|g| Json::arr(g.iter().map(|&s| Json::num(s as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "solo_gbps",
+                Json::arr(self.solo_gbps.iter().map(|&x| Json::num(x)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let groups = v
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow!("missing groups"))?
+            .iter()
+            .map(|g| {
+                g.as_arr()
+                    .ok_or_else(|| anyhow!("group not an array"))?
+                    .iter()
+                    .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad smid")))
+                    .collect::<anyhow::Result<Vec<_>>>()
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let solo_gbps = v
+            .get("solo_gbps")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow!("missing solo_gbps"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad solo_gbps")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let map = Self {
+            groups,
+            reach_bytes: v
+                .get("reach_bytes")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow!("missing reach_bytes"))?,
+            independent: v
+                .get("independent")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            solo_gbps,
+            card_id: v
+                .get("card_id")
+                .and_then(|x| x.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+        };
+        map.validate()?;
+        Ok(map)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TopologyMap {
+        TopologyMap {
+            groups: vec![vec![0, 1, 4, 5], vec![2, 3, 6, 7]],
+            reach_bytes: 64 << 30,
+            solo_gbps: vec![120.0, 118.5],
+            independent: true,
+            card_id: "sim-a100-seed-0xA100".into(),
+        }
+    }
+
+    #[test]
+    fn validate_accepts_sample() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_and_empties() {
+        let mut m = sample();
+        m.groups[1][0] = 0; // duplicate smid
+        assert!(m.validate().is_err());
+
+        let mut m = sample();
+        m.groups.push(vec![]);
+        m.solo_gbps.push(0.0);
+        assert!(m.validate().is_err());
+
+        let mut m = sample();
+        m.solo_gbps.pop();
+        assert!(m.validate().is_err());
+
+        let mut m = sample();
+        m.reach_bytes = 0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let back = TopologyMap::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = sample();
+        let dir = std::env::temp_dir().join(format!("a100win-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("topomap.json");
+        m.save(&path).unwrap();
+        let back = TopologyMap::load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let m = sample();
+        assert_eq!(m.group_of(5), Some(0));
+        assert_eq!(m.group_of(3), Some(1));
+        assert_eq!(m.group_of(99), None);
+        assert_eq!(m.sm_count(), 8);
+    }
+}

@@ -1,0 +1,200 @@
+//! Verification experiments (paper §2.3, Figs 4–5): confirm the discovered
+//! groups behave like independent translation domains.
+//!
+//! * `solo_groups` — run each discovered group alone over a TLB-resident
+//!   region; throughput must scale with member count (Fig 4: ~120 GB/s for
+//!   8-SM groups vs ~90 for 6-SM, ratio 8/6).
+//! * `group_pairs` — run pairs of groups, each over a *disjoint* region; if
+//!   the pair achieves ~2x a solo group, the groups do not share a TLB
+//!   (Fig 5), so per-group windows are enough to dodge translation limits.
+
+use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmAssignment, SmId};
+use crate::util::threads::{default_workers, parallel_map};
+
+/// One solo-group measurement (Fig 4 bar).
+#[derive(Debug, Clone)]
+pub struct SoloGroupResult {
+    pub group_index: usize,
+    pub sm_count: usize,
+    pub gbps: f64,
+}
+
+/// One group-pair measurement (Fig 5 point).
+#[derive(Debug, Clone)]
+pub struct GroupPairResult {
+    pub a: usize,
+    pub b: usize,
+    pub gbps: f64,
+    /// Sum of the two solo throughputs (the "independent" prediction).
+    pub solo_sum: f64,
+}
+
+/// Shared parameters for verification runs.
+#[derive(Debug, Clone)]
+pub struct VerifyConfig {
+    /// Region size per group (must be well under TLB reach; the paper uses
+    /// 40 GB).
+    pub region_bytes: u64,
+    pub accesses_per_sm: u64,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl VerifyConfig {
+    pub fn for_machine(m: &Machine) -> Self {
+        Self {
+            region_bytes: (m.config().memory.total_bytes / 2)
+                .min(m.config().tlb.reach_bytes() / 2),
+            accesses_per_sm: 6_000,
+            seed: 0xF16,
+            workers: default_workers(),
+        }
+    }
+}
+
+/// Fig 4: each discovered group alone.
+pub fn solo_groups(
+    machine: &Machine,
+    groups: &[Vec<SmId>],
+    cfg: &VerifyConfig,
+) -> Vec<SoloGroupResult> {
+    let jobs: Vec<usize> = (0..groups.len()).collect();
+    let region = MemRegion::new(0, cfg.region_bytes);
+    let results = parallel_map(jobs, cfg.workers, |&gi| {
+        let spec = MeasurementSpec::uniform_all(
+            &groups[gi],
+            Pattern::Uniform(region),
+            cfg.accesses_per_sm,
+            cfg.seed ^ gi as u64,
+        );
+        machine.run(&spec).gbps
+    });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(gi, gbps)| SoloGroupResult {
+            group_index: gi,
+            sm_count: groups[gi].len(),
+            gbps,
+        })
+        .collect()
+}
+
+/// Fig 5: pairs of groups over disjoint regions.  `pairs` defaults to all
+/// C(n,2) pairs when `None` (the paper plots all pairs).
+pub fn group_pairs(
+    machine: &Machine,
+    groups: &[Vec<SmId>],
+    solos: &[SoloGroupResult],
+    pairs: Option<Vec<(usize, usize)>>,
+    cfg: &VerifyConfig,
+) -> Vec<GroupPairResult> {
+    let jobs: Vec<(usize, usize)> = pairs.unwrap_or_else(|| {
+        let mut v = Vec::new();
+        for a in 0..groups.len() {
+            for b in (a + 1)..groups.len() {
+                v.push((a, b));
+            }
+        }
+        v
+    });
+    let r1 = MemRegion::new(0, cfg.region_bytes);
+    let r2 = MemRegion::new(cfg.region_bytes, cfg.region_bytes);
+    let results = parallel_map(jobs.clone(), cfg.workers, |&(a, b)| {
+        let mut assignments: Vec<SmAssignment> = Vec::new();
+        for &smid in &groups[a] {
+            assignments.push(SmAssignment {
+                smid,
+                pattern: Pattern::Uniform(r1),
+            });
+        }
+        for &smid in &groups[b] {
+            assignments.push(SmAssignment {
+                smid,
+                pattern: Pattern::Uniform(r2),
+            });
+        }
+        let spec = MeasurementSpec {
+            assignments,
+            accesses_per_sm: cfg.accesses_per_sm,
+            warmup_fraction: 0.25,
+            txn_bytes: crate::config::LINE_BYTES,
+            seed: cfg.seed ^ ((a as u64) << 32 | b as u64),
+        };
+        machine.run(&spec).gbps
+    });
+    jobs.into_iter()
+        .zip(results)
+        .map(|((a, b), gbps)| GroupPairResult {
+            a,
+            b,
+            gbps,
+            solo_sum: solos[a].gbps + solos[b].gbps,
+        })
+        .collect()
+}
+
+/// Independence verdict over the pair results: true when every pair lands
+/// within `tolerance` of its solo-sum prediction (paper: "almost exactly
+/// double").
+pub fn groups_independent(pairs: &[GroupPairResult], tolerance: f64) -> bool {
+    pairs
+        .iter()
+        .all(|p| (p.gbps / p.solo_sum - 1.0).abs() <= tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn setup() -> (Machine, Vec<Vec<SmId>>, VerifyConfig) {
+        let m = Machine::new(MachineConfig::tiny_test()).unwrap();
+        let groups: Vec<Vec<SmId>> = (0..m.topology().group_count())
+            .map(|g| m.topology().sms_in_group(g))
+            .collect();
+        let mut cfg = VerifyConfig::for_machine(&m);
+        cfg.accesses_per_sm = 3_000;
+        cfg.workers = 4;
+        (m, groups, cfg)
+    }
+
+    #[test]
+    fn verify_region_fits_under_reach() {
+        let (m, _g, cfg) = setup();
+        assert!(cfg.region_bytes <= m.config().tlb.reach_bytes());
+        assert!(2 * cfg.region_bytes <= m.config().memory.total_bytes);
+    }
+
+    #[test]
+    fn solo_scales_with_sm_count() {
+        let (m, groups, cfg) = setup();
+        let solos = solo_groups(&m, &groups, &cfg);
+        assert_eq!(solos.len(), groups.len());
+        for s in &solos {
+            let per_sm = s.gbps / s.sm_count as f64;
+            assert!(
+                per_sm > 10.0 && per_sm < 20.0,
+                "group {}: {per_sm:.1} GB/s per SM",
+                s.group_index
+            );
+        }
+    }
+
+    #[test]
+    fn pairs_double_solo() {
+        let (m, groups, cfg) = setup();
+        let solos = solo_groups(&m, &groups, &cfg);
+        let pairs = group_pairs(&m, &groups, &solos, Some(vec![(0, 1), (1, 2), (0, 3)]), &cfg);
+        assert!(groups_independent(&pairs, 0.15), "{pairs:?}");
+    }
+
+    #[test]
+    fn all_pairs_cover_upper_triangle() {
+        let (m, groups, cfg) = setup();
+        let solos = solo_groups(&m, &groups, &cfg);
+        let pairs = group_pairs(&m, &groups, &solos, None, &cfg);
+        let n = groups.len();
+        assert_eq!(pairs.len(), n * (n - 1) / 2);
+    }
+}

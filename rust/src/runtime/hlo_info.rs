@@ -1,0 +1,178 @@
+//! HLO text inspection: a lightweight census of the AOT artifacts.
+//!
+//! This is the L2 profiling tool of DESIGN.md §8: without executing
+//! anything it answers "did the kernel lower to the shape we intended?" —
+//! the vectorized gather must contain a real `gather` op and **no**
+//! `while` loop, the bag kernel must fuse its reduce, the training artifact
+//! must carry exactly one scatter(-add).  Tests in
+//! `rust/tests/runtime_roundtrip.rs` enforce those properties for every
+//! artifact in the manifest, so an accidental re-introduction of the slow
+//! loop lowering (EXPERIMENTS.md §Perf L1 iteration 0: 68x slower) fails CI
+//! rather than shipping.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+/// Census of one HLO module.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HloInfo {
+    /// Opcode -> occurrence count (entry + nested computations).
+    pub op_counts: BTreeMap<String, usize>,
+    /// Number of computations (fusions/branches/loops bodies + entry).
+    pub computations: usize,
+    /// Total instruction count.
+    pub instructions: usize,
+    /// Parameters of the entry computation, in order: (name, type string).
+    pub entry_params: Vec<(String, String)>,
+}
+
+impl HloInfo {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    pub fn has_while(&self) -> bool {
+        self.count("while") > 0
+    }
+
+    pub fn has_gather(&self) -> bool {
+        self.count("gather") > 0
+    }
+
+    pub fn has_scatter(&self) -> bool {
+        self.count("scatter") > 0
+    }
+}
+
+/// Parse HLO *text* (as emitted by aot.py / `as_hlo_text`).
+///
+/// The format is line-oriented:
+/// ```text
+/// HloModule jit_lookup, entry_computation_layout=...
+///
+/// %fused_computation (...) -> ... {
+///   %param_0.1 = f32[65536,32]{1,0} parameter(0)
+///   ROOT %gather.2 = f32[256,32]{1,0} gather(...), offset_dims=...
+/// }
+///
+/// ENTRY %main.10 (...) -> ... {
+///   ...
+/// }
+/// ```
+/// An instruction line is `[ROOT] %name = type opcode(args), attrs`.
+pub fn parse_hlo_text(text: &str) -> anyhow::Result<HloInfo> {
+    let mut info = HloInfo::default();
+    let mut in_entry = false;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") {
+            continue;
+        }
+        // Computation header: `name {`, `name (params) -> result {`, or
+        // `ENTRY ...` — the text emitter may or may not prefix names with
+        // '%' depending on the HloPrintOptions used.
+        if line.ends_with('{') && !line.contains('=') {
+            info.computations += 1;
+            in_entry = line.starts_with("ENTRY");
+            continue;
+        }
+        if line == "}" {
+            in_entry = false;
+            continue;
+        }
+        // Instruction: [ROOT] [%]name = type opcode(...)
+        let body = line.strip_prefix("ROOT ").unwrap_or(line);
+        let rest = body.strip_prefix('%').unwrap_or(body);
+        let Some(eq) = rest.find(" = ") else { continue };
+        let name = &rest[..eq];
+        if name.contains(' ') {
+            continue; // not an instruction line
+        }
+        let after = &rest[eq + 3..];
+        // after = "f32[256,32]{1,0} opcode(args), attrs"
+        let mut parts = after.splitn(2, ' ');
+        let ty = parts.next().unwrap_or("");
+        let Some(opcall) = parts.next() else { continue };
+        let opcode: String = opcall
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        if in_entry && opcode == "parameter" {
+            info.entry_params.push((name.to_string(), ty.to_string()));
+        }
+        *info.op_counts.entry(opcode).or_insert(0) += 1;
+        info.instructions += 1;
+    }
+    if info.computations == 0 {
+        anyhow::bail!("no computations found: not HLO text?");
+    }
+    Ok(info)
+}
+
+/// Parse an artifact file.
+pub fn inspect_file(path: &Path) -> anyhow::Result<HloInfo> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_hlo_text(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_lookup, entry_computation_layout={(s32[8]{0}, f32[16,4]{1,0})->(f32[8,4]{1,0})}
+
+%fused_computation (param_0.1: f32[16,4], param_1.2: s32[8]) -> f32[8,4] {
+  %param_1.2 = s32[8]{0} parameter(1)
+  %param_0.1 = f32[16,4]{1,0} parameter(0)
+  ROOT %gather.1 = f32[8,4]{1,0} gather(f32[16,4]{1,0} %param_0.1, s32[8]{0} %param_1.2), offset_dims={1}
+}
+
+ENTRY %main.5 (Arg_0.1: s32[8], Arg_1.2: f32[16,4]) -> (f32[8,4]) {
+  %Arg_0.1 = s32[8]{0} parameter(0)
+  %Arg_1.2 = f32[16,4]{1,0} parameter(1)
+  %fusion = f32[8,4]{1,0} fusion(f32[16,4]{1,0} %Arg_1.2, s32[8]{0} %Arg_0.1), kind=kLoop, calls=%fused_computation
+  ROOT %tuple.4 = (f32[8,4]{1,0}) tuple(f32[8,4]{1,0} %fusion)
+}
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let info = parse_hlo_text(SAMPLE).unwrap();
+        assert_eq!(info.computations, 2);
+        assert!(info.has_gather());
+        assert!(!info.has_while());
+        assert_eq!(info.count("parameter"), 4);
+        assert_eq!(info.count("fusion"), 1);
+        assert_eq!(info.count("tuple"), 1);
+        assert_eq!(info.instructions, 4 + 1 + 1 + 1);
+    }
+
+    #[test]
+    fn entry_params_only_from_entry() {
+        let info = parse_hlo_text(SAMPLE).unwrap();
+        assert_eq!(info.entry_params.len(), 2);
+        assert_eq!(info.entry_params[0].0, "Arg_0.1");
+        assert!(info.entry_params[0].1.starts_with("s32[8]"));
+        assert!(info.entry_params[1].1.starts_with("f32[16,4]"));
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(parse_hlo_text("this is not hlo").is_err());
+        assert!(parse_hlo_text("").is_err());
+    }
+
+    #[test]
+    fn counts_while_ops() {
+        let src = "ENTRY %m (a: s32[]) -> s32[] {\n  %a = s32[] parameter(0)\n  ROOT %while.1 = s32[] while(s32[] %a), condition=%c, body=%b\n}\n";
+        let info = parse_hlo_text(src).unwrap();
+        assert!(info.has_while());
+        assert_eq!(info.count("while"), 1);
+    }
+}

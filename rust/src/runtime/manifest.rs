@@ -1,0 +1,201 @@
+//! The AOT artifact manifest: what `python -m compile.aot` produced.
+//!
+//! `artifacts/manifest.json` lists every lowered executable with its entry
+//! point and operand shapes, so the runtime can pick executables by
+//! (entry, batch) without parsing HLO text.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// L2 entry point: "lookup" | "windowed_lookup" | "bag_forward" |
+    /// "bag_loss_and_grad".
+    pub entry: String,
+    /// Batch size the executable was lowered for.
+    pub b: usize,
+    /// Table rows / row width it was lowered for.
+    pub n: usize,
+    pub d: usize,
+    /// Bag size (bag entries only).
+    pub g: Option<usize>,
+    /// Operand order (runtime contract; e.g. windowed executables take
+    /// `window` first).
+    pub operands: Vec<String>,
+}
+
+/// Parsed manifest plus its directory (file paths are relative to it).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let version = v
+            .get("version")
+            .and_then(|x| x.as_u64())
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let artifacts = v
+            .get("artifacts")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                let req_str = |k: &str| -> anyhow::Result<String> {
+                    Ok(a.get(k)
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                        .to_string())
+                };
+                let req_usize = |k: &str| -> anyhow::Result<usize> {
+                    a.get(k)
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow!("artifact missing {k}"))
+                };
+                Ok(ArtifactMeta {
+                    name: req_str("name")?,
+                    file: req_str("file")?,
+                    entry: req_str("entry")?,
+                    b: req_usize("b")?,
+                    n: req_usize("n")?,
+                    d: req_usize("d")?,
+                    g: a.get("g").and_then(|x| x.as_usize()),
+                    operands: a
+                        .get("operands")
+                        .and_then(|x| x.as_arr())
+                        .ok_or_else(|| anyhow!("artifact missing operands"))?
+                        .iter()
+                        .map(|o| {
+                            Ok(o.as_str()
+                                .ok_or_else(|| anyhow!("operand not a string"))?
+                                .to_string())
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        if artifacts.is_empty() {
+            return Err(anyhow!("manifest has no artifacts"));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts for an entry point, sorted by batch size.
+    pub fn by_entry(&self, entry: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.entry == entry).collect();
+        v.sort_by_key(|a| a.b);
+        v
+    }
+
+    /// Owned copy of the smallest-batch artifact of an entry (convenient
+    /// for callers that then need `&mut` access to the runtime).
+    pub fn first_of(&self, entry: &str) -> Option<ArtifactMeta> {
+        self.by_entry(entry).first().map(|a| (*a).clone())
+    }
+
+    /// Smallest batch-size artifact of `entry` with `b >= want` (for batch
+    /// padding), falling back to the largest available.
+    pub fn pick(&self, entry: &str, want: usize) -> Option<&ArtifactMeta> {
+        let candidates = self.by_entry(entry);
+        candidates
+            .iter()
+            .find(|a| a.b >= want)
+            .or_else(|| candidates.last())
+            .copied()
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "gather_b256_n65536_d32", "file": "gather_b256_n65536_d32.hlo.txt",
+         "entry": "lookup", "b": 256, "n": 65536, "d": 32, "operands": ["indices", "table"]},
+        {"name": "gather_b1024_n65536_d32", "file": "gather_b1024_n65536_d32.hlo.txt",
+         "entry": "lookup", "b": 1024, "n": 65536, "d": 32, "operands": ["indices", "table"]},
+        {"name": "bag_fwd_b256_g8_n65536_d32", "file": "bag_fwd_b256_g8_n65536_d32.hlo.txt",
+         "entry": "bag_forward", "b": 256, "g": 8, "n": 65536, "d": 32,
+         "operands": ["indices", "table"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].entry, "lookup");
+        assert_eq!(m.artifacts[2].g, Some(8));
+    }
+
+    #[test]
+    fn by_entry_sorted() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        let v = m.by_entry("lookup");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].b < v[1].b);
+    }
+
+    #[test]
+    fn pick_rounds_up_then_saturates() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.pick("lookup", 10).unwrap().b, 256);
+        assert_eq!(m.pick("lookup", 256).unwrap().b, 256);
+        assert_eq!(m.pick("lookup", 257).unwrap().b, 1024);
+        assert_eq!(m.pick("lookup", 5000).unwrap().b, 1024); // saturate
+        assert!(m.pick("nonexistent", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse(Path::new("/"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/"), r#"{"version": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("/"), r#"{"version": 1, "artifacts": []}"#).is_err());
+        let missing_field = r#"{"version":1,"artifacts":[{"name":"x","file":"y","entry":"lookup","b":1,"n":2,"operands":[]}]}"#;
+        assert!(Manifest::parse(Path::new("/"), missing_field).is_err());
+    }
+
+    #[test]
+    fn path_of_joins_dir() {
+        let m = Manifest::parse(Path::new("/a/b"), SAMPLE).unwrap();
+        assert_eq!(
+            m.path_of(&m.artifacts[0]),
+            PathBuf::from("/a/b/gather_b256_n65536_d32.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from the
+//! Rust hot path.  Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute_b`.  HLO *text* is the interchange format —
+//! jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Thread model: PJRT handles are not `Send`, so each coordinator worker
+//! owns its own [`Runtime`] (its own CPU client + executable cache + shard
+//! buffer).  That mirrors the paper's architecture anyway: one execution
+//! domain per SM resource group.
+
+pub mod hlo_info;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+pub use hlo_info::{inspect_file, HloInfo};
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// A compiled artifact cache bound to one PJRT (CPU) client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`; run `make artifacts` first).
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        let path: PathBuf = self.manifest.path_of(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Upload a host f32 tensor as a device buffer (e.g. the table shard).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    /// Upload a host i32 tensor (indices / window descriptors).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    /// Execute a compiled artifact on device buffers; returns the elements
+    /// of the result tuple as host literals.
+    pub fn execute(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("{name} not compiled (call ensure_compiled)"))?;
+        let outs = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: every result is a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Convenience: run a `lookup` gather of `indices` against an uploaded
+    /// table, returning the flat row data (len = b * d).
+    pub fn gather(
+        &mut self,
+        name: &str,
+        indices: &[i32],
+        table: &xla::PjRtBuffer,
+    ) -> anyhow::Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact {name}"))?
+            .clone();
+        if indices.len() != meta.b {
+            return Err(anyhow!(
+                "artifact {name} wants batch {}, got {}",
+                meta.b,
+                indices.len()
+            ));
+        }
+        self.ensure_compiled(name)?;
+        let idx = self.upload_i32(indices, &[meta.b])?;
+        let outs = self.execute(name, &[&idx, table])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("result of {name}: {e:?}"))
+    }
+
+    /// Convenience: windowed gather (operands: window [2], indices [b],
+    /// table [n, d]).
+    pub fn windowed_gather(
+        &mut self,
+        name: &str,
+        window: [i32; 2],
+        indices: &[i32],
+        table: &xla::PjRtBuffer,
+    ) -> anyhow::Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact {name}"))?
+            .clone();
+        if meta.operands.first().map(String::as_str) != Some("window") {
+            return Err(anyhow!("artifact {name} is not a windowed entry"));
+        }
+        if indices.len() != meta.b {
+            return Err(anyhow!(
+                "artifact {name} wants batch {}, got {}",
+                meta.b,
+                indices.len()
+            ));
+        }
+        self.ensure_compiled(name)?;
+        let win = self.upload_i32(&window, &[2])?;
+        let idx = self.upload_i32(indices, &[meta.b])?;
+        let outs = self.execute(name, &[&win, &idx, table])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("result of {name}: {e:?}"))
+    }
+
+    /// Locate the artifacts directory: `$A100WIN_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (for tests running in target/).
+    pub fn default_artifacts_dir() -> anyhow::Result<PathBuf> {
+        if let Ok(p) = std::env::var("A100WIN_ARTIFACTS") {
+            return Ok(PathBuf::from(p));
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return Ok(p);
+            }
+        }
+        Err(anyhow!(
+            "no artifacts directory found; run `make artifacts` or set A100WIN_ARTIFACTS"
+        ))
+        .context("locating AOT artifacts")
+    }
+}
+
+// Runtime tests need compiled artifacts on disk; they live in
+// rust/tests/runtime_roundtrip.rs so `cargo test --lib` stays artifact-free.

@@ -1,0 +1,245 @@
+//! Access-stream generators: what addresses each SM's warps read.
+//!
+//! The paper's benchmark: "every warp reads random coalesced arrays of 32
+//! 32-bit words" — i.e. a stream of uniformly random line addresses inside
+//! some region.  Variants restrict the region per SM (the paper's
+//! "SM-to-chunk"), per group ("group-to-chunk", the contribution), or use
+//! non-uniform distributions for the workload studies.
+
+use crate::config::LINE_BYTES;
+use crate::util::rng::Rng;
+use crate::sim::pages::MemRegion;
+
+/// Address-stream shape for one SM.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    /// Uniformly random lines in the region (the paper's benchmark).
+    Uniform(MemRegion),
+    /// Sequential line sweep from the region base (wraps).
+    Sequential(MemRegion),
+    /// Strided lines: `base + (k * stride_lines * LINE) % len` (wraps).
+    Strided { region: MemRegion, stride_lines: u64 },
+    /// Zipf-distributed lines (hot-spot workloads), s = `theta`.
+    Zipf { region: MemRegion, theta: f64 },
+}
+
+impl Pattern {
+    pub fn region(&self) -> &MemRegion {
+        match self {
+            Pattern::Uniform(r) | Pattern::Sequential(r) => r,
+            Pattern::Strided { region, .. } | Pattern::Zipf { region, .. } => region,
+        }
+    }
+}
+
+/// Per-SM address generator (deterministic for a given seed).
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pattern: Pattern,
+    rng: Rng,
+    counter: u64,
+    /// Zipf sampling state (rejection-inversion constants).
+    zipf: Option<ZipfState>,
+}
+
+impl Stream {
+    pub fn new(pattern: Pattern, seed: u64) -> Self {
+        assert!(
+            pattern.region().lines() > 0,
+            "region must hold at least one line"
+        );
+        let zipf = match &pattern {
+            Pattern::Zipf { region, theta } => Some(ZipfState::new(region.lines(), *theta)),
+            _ => None,
+        };
+        Self {
+            pattern,
+            rng: Rng::seed_from_u64(seed),
+            counter: 0,
+            zipf,
+        }
+    }
+
+    /// Next line-aligned byte address.
+    #[inline]
+    pub fn next_addr(&mut self) -> u64 {
+        match &self.pattern {
+            Pattern::Uniform(r) => {
+                let line = self.rng.gen_range(r.lines());
+                r.base + line * LINE_BYTES
+            }
+            Pattern::Sequential(r) => {
+                let line = self.counter % r.lines();
+                self.counter += 1;
+                r.base + line * LINE_BYTES
+            }
+            Pattern::Strided {
+                region,
+                stride_lines,
+            } => {
+                let line = (self.counter * stride_lines) % region.lines();
+                self.counter += 1;
+                region.base + line * LINE_BYTES
+            }
+            Pattern::Zipf { region, .. } => {
+                let z = self.zipf.as_mut().unwrap();
+                let rank = z.sample(&mut self.rng);
+                // Scatter ranks over the region so hot lines are not all in
+                // the first pages (rank r -> line via multiplicative hash).
+                let line = rank.wrapping_mul(0x9E37_79B9_7F4A_7C15) % region.lines();
+                region.base + line * LINE_BYTES
+            }
+        }
+    }
+
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+}
+
+/// Zipf(s) sampler over `n` items, Gries/rejection-inversion style.
+#[derive(Debug, Clone)]
+struct ZipfState {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zeta_n: f64,
+    eta: f64,
+}
+
+impl ZipfState {
+    fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!(theta > 0.0 && theta < 2.0 && (theta - 1.0).abs() > 1e-9);
+        let zeta = |m: u64| -> f64 { (1..=m.min(10_000)).map(|i| 1.0 / (i as f64).powf(theta)).sum() };
+        // For large n, approximate the zeta tail with the integral.
+        let zeta_n = if n <= 10_000 {
+            zeta(n)
+        } else {
+            zeta(10_000)
+                + ((n as f64).powf(1.0 - theta) - 10_000f64.powf(1.0 - theta)) / (1.0 - theta)
+        };
+        let zeta2 = zeta(2.min(n));
+        Self {
+            n,
+            theta,
+            alpha: 1.0 / (1.0 - theta),
+            zeta_n,
+            eta: (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zeta_n),
+        }
+    }
+
+    /// Sample a 0-based rank (0 = hottest).
+    fn sample(&mut self, rng: &mut Rng) -> u64 {
+        // Classic YCSB-style approximation.
+        let u: f64 = rng.gen_f64();
+        let uz = u * self.zeta_n;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+
+    fn region() -> MemRegion {
+        MemRegion::new(GIB, 2 * GIB)
+    }
+
+    #[test]
+    fn uniform_stays_in_region_and_line_aligned() {
+        let r = region();
+        let mut s = Stream::new(Pattern::Uniform(r), 1);
+        for _ in 0..10_000 {
+            let a = s.next_addr();
+            assert!(r.contains(a));
+            assert_eq!(a % LINE_BYTES, 0);
+        }
+    }
+
+    #[test]
+    fn uniform_covers_region_roughly_evenly() {
+        let r = MemRegion::new(0, 128 * LINE_BYTES);
+        let mut s = Stream::new(Pattern::Uniform(r), 2);
+        let mut counts = vec![0u32; 128];
+        for _ in 0..128_000 {
+            counts[(s.next_addr() / LINE_BYTES) as usize] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min > 800 && *max < 1200, "min={min} max={max}");
+    }
+
+    #[test]
+    fn sequential_wraps() {
+        let r = MemRegion::new(0, 4 * LINE_BYTES);
+        let mut s = Stream::new(Pattern::Sequential(r), 0);
+        let seq: Vec<u64> = (0..6).map(|_| s.next_addr() / LINE_BYTES).collect();
+        assert_eq!(seq, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn strided_pattern() {
+        let r = MemRegion::new(0, 8 * LINE_BYTES);
+        let mut s = Stream::new(
+            Pattern::Strided {
+                region: r,
+                stride_lines: 3,
+            },
+            0,
+        );
+        let seq: Vec<u64> = (0..4).map(|_| s.next_addr() / LINE_BYTES).collect();
+        assert_eq!(seq, vec![0, 3, 6, 1]);
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_region() {
+        let r = MemRegion::new(0, 1024 * LINE_BYTES);
+        let mut s = Stream::new(
+            Pattern::Zipf {
+                region: r,
+                theta: 0.99,
+            },
+            3,
+        );
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            let a = s.next_addr();
+            assert!(r.contains(a));
+            *counts.entry(a).or_insert(0u32) += 1;
+        }
+        let mut freq: Vec<u32> = counts.values().copied().collect();
+        freq.sort_unstable_by(|a, b| b.cmp(a));
+        // Heavy skew: hottest line way above uniform expectation (~49) and
+        // the top-16 lines carry a large share of all accesses.
+        assert!(freq[0] > 1000, "max={}", freq[0]);
+        let top16: u32 = freq.iter().take(16).sum();
+        assert!(top16 > 50_000 / 3, "top16={top16}");
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        let r = region();
+        let mut a = Stream::new(Pattern::Uniform(r), 9);
+        let mut b = Stream::new(Pattern::Uniform(r), 9);
+        let mut c = Stream::new(Pattern::Uniform(r), 10);
+        let va: Vec<u64> = (0..100).map(|_| a.next_addr()).collect();
+        let vb: Vec<u64> = (0..100).map(|_| b.next_addr()).collect();
+        let vc: Vec<u64> = (0..100).map(|_| c.next_addr()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one line")]
+    fn empty_region_panics() {
+        Stream::new(Pattern::Uniform(MemRegion::new(0, 0)), 0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Closed-form throughput model: the queueing-theory skeleton under the
+//! discrete-event simulator.
+//!
+//! The DES *measures*; this module *predicts* from first principles, and
+//! the test suite cross-validates the two.  The machine is a small network
+//! of bottlenecks; steady-state throughput is the fixed point of:
+//!
+//! * **SM (latency) limit** — each SM keeps W accesses in flight, so it
+//!   produces `W / L` accesses/s at mean latency `L` (Little's law).
+//! * **TLB hit rate** — LRU under uniform random over `P` pages with
+//!   capacity `C`: `h = min(1, C / P)` (exact for random replacement,
+//!   asymptotically exact for LRU at P >> C, and exact at P <= C with
+//!   low-bit indexing because contiguous regions fill sets evenly).
+//! * **walker limit** — misses are served by k walkers of rate `1/walk`;
+//!   the group cannot complete more than `k / (walk * m)` accesses/s when
+//!   the miss rate is `m = 1 - h`.  Below saturation the walk queue adds
+//!   the M/D/k-ish waiting time that inflates `L`.
+//! * **port / hub / HBM limits** — plain bandwidth caps.
+//!
+//! The fixed point is found by iterating latency -> demand -> queue
+//! inflation -> latency.
+
+use crate::config::MachineConfig;
+use crate::sim::pages::MemRegion;
+
+/// Prediction for one group under uniform random access.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupPrediction {
+    /// Expected steady-state group-TLB hit rate.
+    pub hit_rate: f64,
+    /// Per-SM line throughput, accesses/s.
+    pub per_sm_rate: f64,
+    /// Group throughput, GB/s.
+    pub gbps: f64,
+    /// Binding constraint.
+    pub bottleneck: Bottleneck,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    SmLatency,
+    Walkers,
+    GroupPort,
+    Hbm,
+}
+
+/// Device-level prediction.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub per_group: Vec<GroupPrediction>,
+    pub gbps: f64,
+}
+
+/// The analytic machine model.
+pub struct Analytic<'c> {
+    cfg: &'c MachineConfig,
+}
+
+impl<'c> Analytic<'c> {
+    pub fn new(cfg: &'c MachineConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Steady-state group-TLB hit rate for uniform random access over a
+    /// region (pre-warmed, as the DES does).
+    pub fn hit_rate(&self, region: &MemRegion) -> f64 {
+        let pages = region.pages(self.cfg.tlb.page_bytes) as f64;
+        let cap = self.cfg.tlb.entries as f64;
+        (cap / pages).min(1.0)
+    }
+
+    /// Unloaded access latency (ns): TLB hit + port + hub + channel service
+    /// + HBM base latency.
+    pub fn unloaded_latency_ns(&self, txn_bytes: u64) -> f64 {
+        let m = &self.cfg.memory;
+        let port = txn_bytes as f64 / m.group_port_gbps;
+        let hub = txn_bytes as f64 / m.gpc_hub_gbps;
+        let chan = txn_bytes as f64 / m.channel_gbps(m.txn_efficiency(txn_bytes));
+        self.cfg.tlb.hit_ns + port + hub + chan + m.base_latency_ns
+    }
+
+    /// Predict one group of `sms` SMs reading uniformly from `region`.
+    ///
+    /// Solves the latency/throughput fixed point: the walk-queue wait is
+    /// whatever makes walker occupancy self-consistent with the SM's
+    /// finite concurrency (Little's law on the walker pool).
+    pub fn predict_group(&self, sms: usize, region: &MemRegion, txn_bytes: u64) -> GroupPrediction {
+        let cfg = self.cfg;
+        let h = self.hit_rate(region);
+        let m = 1.0 - h;
+        let w = cfg.sm.outstanding as f64;
+        let base_l = self.unloaded_latency_ns(txn_bytes);
+        let walk = cfg.tlb.walk_ns;
+        let k = cfg.tlb.walkers_per_group as f64;
+
+        // Fixed point on the walk-queue wait q (ns).  Demand of misses:
+        // lambda_m = sms * W / L(q) * m, with L(q) = base_l + m*(walk+q).
+        // Walker occupancy n = lambda_m * (walk + q) (Little), bounded by
+        // the SMs' in-flight budget; waiting arises when n > k.
+        let mut q = 0.0f64;
+        for _ in 0..64 {
+            let l = base_l + m * (walk + q);
+            let lambda_m = sms as f64 * w / l * m; // misses per ns
+            let n = lambda_m * (walk + q); // walks in system
+            let q_new = if n > k {
+                // Backlogged: each miss waits behind (n - k) peers spread
+                // over k servers.
+                (n - k) / k * walk
+            } else {
+                0.0
+            };
+            if (q_new - q).abs() < 1e-6 {
+                q = q_new;
+                break;
+            }
+            // Damped update for stability.
+            q = 0.5 * q + 0.5 * q_new;
+        }
+        let l = base_l + m * (walk + q);
+        let sm_rate = w / l * 1e9; // accesses/s per SM
+        let mut rate = sms as f64 * sm_rate;
+        let mut bottleneck = if q > 0.0 {
+            Bottleneck::Walkers
+        } else {
+            Bottleneck::SmLatency
+        };
+
+        // Hard walker ceiling (saturated pool).
+        if m > 0.0 {
+            let walker_cap = k / (walk * 1e-9) / m;
+            if rate > walker_cap {
+                rate = walker_cap;
+                bottleneck = Bottleneck::Walkers;
+            }
+        }
+        // Port ceiling.
+        let port_cap = cfg.memory.group_port_gbps * 1e9 / txn_bytes as f64;
+        if rate > port_cap {
+            rate = port_cap;
+            bottleneck = Bottleneck::GroupPort;
+        }
+        GroupPrediction {
+            hit_rate: h,
+            per_sm_rate: rate / sms as f64,
+            gbps: rate * txn_bytes as f64 / 1e9,
+            bottleneck,
+        }
+    }
+
+    /// Predict the whole device: every group reading uniformly from its
+    /// assigned region (`regions[group]`), all groups concurrently.
+    pub fn predict_device(
+        &self,
+        group_sizes: &[usize],
+        regions: &[MemRegion],
+        txn_bytes: u64,
+    ) -> Prediction {
+        assert_eq!(group_sizes.len(), regions.len());
+        let mut per_group: Vec<GroupPrediction> = group_sizes
+            .iter()
+            .zip(regions)
+            .map(|(&sms, r)| self.predict_group(sms, r, txn_bytes))
+            .collect();
+        let raw: f64 = per_group.iter().map(|p| p.gbps).sum();
+        // HBM aggregate ceiling.
+        let eff = self.cfg.memory.txn_efficiency(txn_bytes);
+        let hbm_cap = self.cfg.memory.peak_gbps * eff;
+        let gbps = if raw > hbm_cap {
+            let scale = hbm_cap / raw;
+            for p in per_group.iter_mut() {
+                p.gbps *= scale;
+                p.per_sm_rate *= scale;
+                p.bottleneck = Bottleneck::Hbm;
+            }
+            hbm_cap
+        } else {
+            raw
+        };
+        Prediction { per_group, gbps }
+    }
+
+    /// Convenience: all groups read the same region (the Fig-1 uniform arm).
+    pub fn predict_uniform(&self, region: MemRegion, txn_bytes: u64) -> Prediction {
+        let topo = crate::sim::Topology::build(&self.cfg.topology);
+        let sizes: Vec<usize> = topo.group_sizes().to_vec();
+        let regions = vec![region; sizes.len()];
+        self.predict_device(&sizes, &regions, txn_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Cross-validation: the DES must land within tolerance of the
+    //! closed-form predictions in every regime (plateau, cliff edge,
+    //! walker-bound floor) — and vice versa, the analytic model is itself
+    //! validated by the structural simulation.
+
+    use super::*;
+    use crate::config::{MachineConfig, GIB};
+    use crate::sim::{Machine, MeasurementSpec, Pattern};
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::a100_80gb()
+    }
+
+    fn des_uniform(machine: &Machine, sms: &[usize], gib: u64, per_sm: u64) -> f64 {
+        machine
+            .run(&MeasurementSpec::uniform_all(
+                sms,
+                Pattern::Uniform(MemRegion::new(0, gib * GIB)),
+                per_sm,
+                99,
+            ))
+            .gbps
+    }
+
+    #[test]
+    fn hit_rate_formula() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        assert_eq!(a.hit_rate(&MemRegion::new(0, 32 * GIB)), 1.0);
+        assert_eq!(a.hit_rate(&MemRegion::new(0, 64 * GIB)), 1.0);
+        let h80 = a.hit_rate(&MemRegion::new(0, 80 * GIB));
+        assert!((h80 - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solo_sm_matches_des_within_10pct() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let machine = Machine::new(c.clone()).unwrap();
+        let p = a.predict_group(1, &MemRegion::new(0, 4 * GIB), 128);
+        assert_eq!(p.bottleneck, Bottleneck::SmLatency);
+        let des = des_uniform(&machine, &[0], 4, 20_000);
+        let rel = (p.gbps - des).abs() / des;
+        assert!(rel < 0.10, "analytic {:.1} vs DES {des:.1}", p.gbps);
+    }
+
+    #[test]
+    fn solo_group_matches_des_within_10pct() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let machine = Machine::new(c.clone()).unwrap();
+        let big = machine.topology().groups_by_size()[0];
+        let sms = machine.topology().sms_in_group(big);
+        let p = a.predict_group(sms.len(), &MemRegion::new(0, 40 * GIB), 128);
+        let des = des_uniform(&machine, &sms, 40, 8_000);
+        let rel = (p.gbps - des).abs() / des;
+        assert!(rel < 0.10, "analytic {:.1} vs DES {des:.1}", p.gbps);
+    }
+
+    #[test]
+    fn device_plateau_matches_des_within_10pct() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let machine = Machine::new(c.clone()).unwrap();
+        let p = a.predict_uniform(MemRegion::new(0, 32 * GIB), 128);
+        assert_eq!(p.per_group[0].bottleneck, Bottleneck::Hbm);
+        let des = des_uniform(&machine, &machine.topology().all_sms(), 32, 3_000);
+        let rel = (p.gbps - des).abs() / des;
+        assert!(rel < 0.10, "analytic {:.1} vs DES {des:.1}", p.gbps);
+    }
+
+    #[test]
+    fn device_cliff_floor_matches_des_within_25pct() {
+        // The walker-bound floor involves the deepest queueing; allow a
+        // looser band.
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let machine = Machine::new(c.clone()).unwrap();
+        let p = a.predict_uniform(MemRegion::whole(80 * GIB), 128);
+        assert!(p
+            .per_group
+            .iter()
+            .all(|g| g.bottleneck == Bottleneck::Walkers));
+        let des = des_uniform(&machine, &machine.topology().all_sms(), 80, 3_000);
+        let rel = (p.gbps - des).abs() / des;
+        assert!(rel < 0.25, "analytic {:.1} vs DES {des:.1}", p.gbps);
+    }
+
+    #[test]
+    fn cliff_position_tracks_reach_analytically() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let at = |gib: u64| a.predict_uniform(MemRegion::new(0, gib * GIB), 128).gbps;
+        assert!(at(64) / at(80) > 4.0, "cliff must be steep");
+        assert!((at(8) - at(64)).abs() / at(64) < 0.02, "plateau must be flat");
+    }
+
+    #[test]
+    fn group_to_chunk_predicted_flat() {
+        // Analytic version of Fig 6: 14 groups over two 40 GiB halves.
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let machine = Machine::new(c.clone()).unwrap();
+        let sizes: Vec<usize> = machine.topology().group_sizes().to_vec();
+        let halves = MemRegion::whole(80 * GIB).split(2, c.tlb.page_bytes);
+        let regions: Vec<MemRegion> = (0..sizes.len()).map(|g| halves[g % 2]).collect();
+        let p = a.predict_device(&sizes, &regions, 128);
+        assert!(p.gbps > 1100.0, "predicted {:.0}", p.gbps);
+        assert!(p.per_group.iter().all(|g| g.hit_rate == 1.0));
+    }
+
+    #[test]
+    fn larger_transactions_predicted_faster() {
+        let c = cfg();
+        let a = Analytic::new(&c);
+        let r = MemRegion::new(0, 32 * GIB);
+        let t128 = a.predict_uniform(r, 128).gbps;
+        let t256 = a.predict_uniform(r, 256).gbps;
+        let t512 = a.predict_uniform(r, 512).gbps;
+        assert!(t128 < t256 && t256 < t512);
+    }
+}

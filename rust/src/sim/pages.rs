@@ -1,0 +1,171 @@
+//! Virtual memory regions, pages, and lines.
+//!
+//! Addresses are plain device byte offsets (the simulator models one large
+//! device allocation, like the paper's benchmark buffer).  A "line" is one
+//! warp-coalesced 128 B access; a "page" is the translation unit.
+
+use crate::config::LINE_BYTES;
+
+/// A contiguous byte range of device memory `[base, base+len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemRegion {
+    pub base: u64,
+    pub len: u64,
+}
+
+impl MemRegion {
+    pub fn new(base: u64, len: u64) -> Self {
+        Self { base, len }
+    }
+
+    /// The whole device.
+    pub fn whole(total_bytes: u64) -> Self {
+        Self::new(0, total_bytes)
+    }
+
+    pub fn end(&self) -> u64 {
+        self.base + self.len
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+
+    /// Number of whole lines in the region.
+    pub fn lines(&self) -> u64 {
+        self.len / LINE_BYTES
+    }
+
+    /// Number of pages the region touches.
+    pub fn pages(&self, page_bytes: u64) -> u64 {
+        if self.len == 0 {
+            return 0;
+        }
+        let first = self.base / page_bytes;
+        let last = (self.end() - 1) / page_bytes;
+        last - first + 1
+    }
+
+    /// Split into `n` equal-length page-aligned chunks (last chunk absorbs
+    /// the remainder).  Panics if the region has fewer than `n` pages.
+    pub fn split(&self, n: usize, page_bytes: u64) -> Vec<MemRegion> {
+        assert!(n >= 1);
+        assert!(
+            self.pages(page_bytes) >= n as u64,
+            "cannot split {} bytes into {n} page-aligned chunks",
+            self.len
+        );
+        let raw = self.len / n as u64;
+        let chunk = (raw / page_bytes) * page_bytes;
+        let mut out = Vec::with_capacity(n);
+        let mut base = self.base;
+        for i in 0..n {
+            let len = if i == n - 1 { self.end() - base } else { chunk };
+            out.push(MemRegion::new(base, len));
+            base += len;
+        }
+        out
+    }
+
+    /// Intersection, if non-empty.
+    pub fn intersect(&self, other: &MemRegion) -> Option<MemRegion> {
+        let base = self.base.max(other.base);
+        let end = self.end().min(other.end());
+        (end > base).then(|| MemRegion::new(base, end - base))
+    }
+}
+
+/// Page number of a byte address.
+#[inline(always)]
+pub fn page_of(addr: u64, page_shift: u32) -> u64 {
+    addr >> page_shift
+}
+
+/// Line index of a byte address.
+#[inline(always)]
+pub fn line_of(addr: u64) -> u64 {
+    addr / LINE_BYTES
+}
+
+/// log2 of a power-of-two page size.
+pub fn page_shift(page_bytes: u64) -> u32 {
+    debug_assert!(page_bytes.is_power_of_two());
+    page_bytes.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+
+    #[test]
+    fn region_basics() {
+        let r = MemRegion::new(1024, 4096);
+        assert_eq!(r.end(), 5120);
+        assert!(r.contains(1024));
+        assert!(r.contains(5119));
+        assert!(!r.contains(5120));
+        assert!(!r.contains(1023));
+        assert_eq!(r.lines(), 32);
+    }
+
+    #[test]
+    fn page_count_spanning() {
+        // 2 MiB pages; region from 1 MiB to 5 MiB touches pages 0,1,2.
+        let r = MemRegion::new(1 << 20, 4 << 20);
+        assert_eq!(r.pages(2 << 20), 3);
+        assert_eq!(MemRegion::new(0, 0).pages(2 << 20), 0);
+    }
+
+    #[test]
+    fn split_halves_are_page_aligned_and_cover() {
+        let page = 2u64 << 20;
+        let r = MemRegion::whole(80 * GIB);
+        let halves = r.split(2, page);
+        assert_eq!(halves.len(), 2);
+        assert_eq!(halves[0].base, 0);
+        assert_eq!(halves[0].len % page, 0);
+        assert_eq!(halves[1].end(), r.end());
+        assert_eq!(halves[0].len + halves[1].len, r.len);
+        assert_eq!(halves[0].end(), halves[1].base);
+    }
+
+    #[test]
+    fn split_fourteen_chunks() {
+        let page = 2u64 << 20;
+        let r = MemRegion::whole(80 * GIB);
+        let chunks = r.split(14, page);
+        assert_eq!(chunks.len(), 14);
+        let total: u64 = chunks.iter().map(|c| c.len).sum();
+        assert_eq!(total, r.len);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].end(), w[1].base);
+            assert_eq!(w[0].base % page, 0);
+        }
+    }
+
+    #[test]
+    fn intersect_cases() {
+        let a = MemRegion::new(0, 100);
+        let b = MemRegion::new(50, 100);
+        assert_eq!(a.intersect(&b), Some(MemRegion::new(50, 50)));
+        let c = MemRegion::new(100, 10);
+        assert_eq!(a.intersect(&c), None);
+    }
+
+    #[test]
+    fn page_and_line_math() {
+        let shift = page_shift(2 << 20);
+        assert_eq!(shift, 21);
+        assert_eq!(page_of((2 << 20) - 1, shift), 0);
+        assert_eq!(page_of(2 << 20, shift), 1);
+        assert_eq!(line_of(127), 0);
+        assert_eq!(line_of(128), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split")]
+    fn split_too_small_panics() {
+        MemRegion::new(0, 2 << 20).split(4, 2 << 20);
+    }
+}

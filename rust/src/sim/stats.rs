@@ -1,0 +1,96 @@
+//! Measurement results: what one simulated benchmark run reports.
+
+use crate::sim::topology::GroupId;
+
+/// Per-resource-group counters for one run.
+#[derive(Debug, Clone, Default)]
+pub struct GroupStats {
+    pub group: GroupId,
+    /// Active SMs of this group in the run.
+    pub active_sms: usize,
+    /// Counted (post-warmup) accesses issued by this group's SMs.
+    pub accesses: u64,
+    /// Group-TLB hits/misses over the whole run (warmup included).
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    /// Real page walks and merged (MSHR-coalesced) misses.
+    pub walks: u64,
+    pub merged_walks: u64,
+    /// Throughput attributable to this group, GB/s.
+    pub gbps: f64,
+}
+
+impl GroupStats {
+    pub fn tlb_hit_rate(&self) -> f64 {
+        let total = self.tlb_hits + self.tlb_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.tlb_hits as f64 / total as f64
+    }
+}
+
+/// Result of one simulated benchmark run.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Aggregate read throughput over the measured window, GB/s
+    /// (1 GB/s = 1e9 bytes/s, matching the paper's axes).
+    pub gbps: f64,
+    /// Measured (post-warmup) window length, ns.
+    pub window_ns: f64,
+    /// End-to-end simulated time, ns.
+    pub sim_ns: f64,
+    /// Accesses inside the measured window / in total.
+    pub counted_accesses: u64,
+    pub total_accesses: u64,
+    /// Mean end-to-end access latency inside the window, ns.
+    pub avg_latency_ns: f64,
+    /// Aggregate group-TLB hit rate (all groups, whole run).
+    pub tlb_hit_rate: f64,
+    /// Aggregate per-SM uTLB hit rate.
+    pub utlb_hit_rate: f64,
+    /// HBM channel utilization inside the whole run (0..1).
+    pub hbm_utilization: f64,
+    pub per_group: Vec<GroupStats>,
+}
+
+impl Measurement {
+    /// Total real page walks.
+    pub fn walks(&self) -> u64 {
+        self.per_group.iter().map(|g| g.walks).sum()
+    }
+
+    pub fn merged_walks(&self) -> u64 {
+        self.per_group.iter().map(|g| g.merged_walks).sum()
+    }
+
+    /// Convenience: throughput of one group.
+    pub fn group_gbps(&self, group: GroupId) -> f64 {
+        self.per_group
+            .iter()
+            .find(|g| g.group == group)
+            .map(|g| g.gbps)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_zero() {
+        let g = GroupStats::default();
+        assert_eq!(g.tlb_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let g = GroupStats {
+            tlb_hits: 75,
+            tlb_misses: 25,
+            ..Default::default()
+        };
+        assert!((g.tlb_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

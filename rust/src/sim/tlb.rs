@@ -1,0 +1,300 @@
+//! TLB structures: the per-group set-associative L2 TLB and the per-SM
+//! fully-associative micro-TLB.
+//!
+//! These are *structural* models — real tag arrays with LRU replacement —
+//! so hit rates under any access pattern are measured, not assumed.  The
+//! per-group TLB's reach (entries x page size = 64 GiB on the A100 preset)
+//! is the central quantity of the paper.
+
+/// Sentinel for an empty TLB way.
+const EMPTY: u64 = u64::MAX;
+
+/// Set-associative TLB with per-set LRU replacement.
+///
+/// Flat arrays (`sets x assoc`) of tags and LRU stamps; lookup scans one
+/// set (assoc <= 16 in practice, so this is a handful of comparisons).
+#[derive(Debug, Clone)]
+pub struct SetAssocTlb {
+    tags: Vec<u64>,
+    stamp: Vec<u64>,
+    sets: usize,
+    assoc: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl SetAssocTlb {
+    pub fn new(entries: usize, assoc: usize) -> Self {
+        assert!(assoc >= 1 && entries >= assoc && entries % assoc == 0);
+        let sets = entries / assoc;
+        Self {
+            tags: vec![EMPTY; entries],
+            stamp: vec![0; entries],
+            sets,
+            assoc,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, page: u64) -> usize {
+        // Low-bit indexing, as in real TLBs.  This matters for fidelity: a
+        // *contiguous* region of N pages fills sets exactly evenly, so there
+        // are no conflict misses below reach (the paper's flat plateau up to
+        // 64 GB) and a uniform overflow beyond it (the sharp cliff).  A
+        // hashed index would smear pages Poisson-style and erode the
+        // plateau well before reach.
+        (page % self.sets as u64) as usize
+    }
+
+    /// Look up a page; on hit refresh LRU and return true.
+    #[inline]
+    pub fn lookup(&mut self, page: u64) -> bool {
+        self.clock += 1;
+        let s = self.set_of(page);
+        let base = s * self.assoc;
+        for w in 0..self.assoc {
+            if self.tags[base + w] == page {
+                self.stamp[base + w] = self.clock;
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Install a page (evicting the set's LRU victim if full).
+    #[inline]
+    pub fn insert(&mut self, page: u64) {
+        self.clock += 1;
+        let s = self.set_of(page);
+        let base = s * self.assoc;
+        let mut victim = base;
+        let mut oldest = u64::MAX;
+        for w in 0..self.assoc {
+            let i = base + w;
+            if self.tags[i] == page {
+                self.stamp[i] = self.clock;
+                return; // already present (raced walk)
+            }
+            if self.tags[i] == EMPTY {
+                self.tags[i] = page;
+                self.stamp[i] = self.clock;
+                return;
+            }
+            if self.stamp[i] < oldest {
+                oldest = self.stamp[i];
+                victim = i;
+            }
+        }
+        self.tags[victim] = page;
+        self.stamp[victim] = self.clock;
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Number of valid entries currently resident.
+    pub fn occupancy(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != EMPTY).count()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.tags.len()
+    }
+
+    /// Drop all entries (e.g. context switch), keeping stats.
+    pub fn flush(&mut self) {
+        self.tags.fill(EMPTY);
+    }
+}
+
+/// Tiny fully-associative LRU TLB (the per-SM uTLB).
+#[derive(Debug, Clone)]
+pub struct FullyAssocTlb {
+    tags: Vec<u64>,
+    stamp: Vec<u64>,
+    clock: u64,
+}
+
+impl FullyAssocTlb {
+    pub fn new(entries: usize) -> Self {
+        Self {
+            tags: vec![EMPTY; entries],
+            stamp: vec![0; entries],
+            clock: 0,
+        }
+    }
+
+    /// Lookup-and-fill in one step: the uTLB always caches the translation
+    /// it just used (it is refilled from the group TLB, not from memory, so
+    /// the fill has no modelled cost of its own).  Returns hit?
+    #[inline]
+    pub fn access(&mut self, page: u64) -> bool {
+        if self.tags.is_empty() {
+            return false;
+        }
+        self.clock += 1;
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for i in 0..self.tags.len() {
+            if self.tags[i] == page {
+                self.stamp[i] = self.clock;
+                return true;
+            }
+            if self.stamp[i] < oldest {
+                oldest = self.stamp[i];
+                victim = i;
+            }
+        }
+        self.tags[victim] = page;
+        self.stamp[victim] = self.clock;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut t = SetAssocTlb::new(64, 4);
+        assert!(!t.lookup(42));
+        t.insert(42);
+        assert!(t.lookup(42));
+        assert_eq!(t.hits(), 1);
+        assert_eq!(t.misses(), 1);
+    }
+
+    #[test]
+    fn capacity_working_set_all_hits_after_warmup() {
+        let entries = 256;
+        let mut t = SetAssocTlb::new(entries, 8);
+        // Working set smaller than half capacity: after one pass, the next
+        // passes must hit every time (hash spreads pages over sets; with
+        // ws << capacity no set overflows).
+        let ws: Vec<u64> = (0..(entries as u64) / 4).collect();
+        for &p in &ws {
+            if !t.lookup(p) {
+                t.insert(p);
+            }
+        }
+        t.reset_stats();
+        for _ in 0..3 {
+            for &p in &ws {
+                assert!(t.lookup(p));
+            }
+        }
+        assert_eq!(t.misses(), 0);
+    }
+
+    #[test]
+    fn oversized_working_set_misses() {
+        let mut t = SetAssocTlb::new(64, 4);
+        // Working set 4x capacity, uniform sweep: mostly misses.
+        for round in 0..4u64 {
+            for p in 0..256u64 {
+                if !t.lookup(p) {
+                    t.insert(p);
+                }
+            }
+            if round == 0 {
+                t.reset_stats();
+            }
+        }
+        let total = t.hits() + t.misses();
+        let miss_rate = t.misses() as f64 / total as f64;
+        assert!(miss_rate > 0.9, "miss_rate = {miss_rate}");
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_set() {
+        // Direct-mapped corner: assoc == entries == 1 set of 4.
+        let mut t = SetAssocTlb::new(4, 4);
+        for p in 0..4 {
+            t.insert(p);
+        }
+        assert!(t.lookup(0)); // refresh 0: LRU is now 1
+        t.insert(100); // evicts 1
+        assert!(t.lookup(0));
+        assert!(!t.lookup(1));
+        assert!(t.lookup(2));
+        assert!(t.lookup(3));
+        assert!(t.lookup(100));
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut t = SetAssocTlb::new(16, 4);
+        t.insert(5);
+        t.insert(5);
+        assert_eq!(t.occupancy(), 1);
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut t = SetAssocTlb::new(16, 4);
+        for p in 0..8 {
+            t.insert(p);
+        }
+        assert!(t.occupancy() > 0);
+        t.flush();
+        assert_eq!(t.occupancy(), 0);
+        assert!(!t.lookup(3));
+    }
+
+    #[test]
+    fn utlb_lru() {
+        let mut u = FullyAssocTlb::new(2);
+        assert!(!u.access(1)); // fill 1
+        assert!(!u.access(2)); // fill 2
+        assert!(u.access(1)); // hit, refresh
+        assert!(!u.access(3)); // evicts 2
+        assert!(!u.access(2));
+        assert!(u.access(3));
+    }
+
+    #[test]
+    fn utlb_zero_entries_never_hits() {
+        let mut u = FullyAssocTlb::new(0);
+        assert!(!u.access(1));
+        assert!(!u.access(1));
+    }
+
+    #[test]
+    fn reach_statistics_match_uniform_theory() {
+        // LRU over uniform random pages: steady-state hit rate ~ C/N for
+        // N pages >> C capacity.  This is the mechanism behind the paper's
+        // Fig-1 curve; verify the structural model reproduces it.
+        let mut rng = crate::util::rng::Rng::seed_from_u64(1);
+        let cap = 1024;
+        let n_pages = 4096u64; // N = 4C -> expected hit rate ~0.25
+        let mut t = SetAssocTlb::new(cap, 8);
+        for i in 0..200_000u64 {
+            let p = rng.gen_range(n_pages);
+            if !t.lookup(p) {
+                t.insert(p);
+            }
+            if i == 50_000 {
+                t.reset_stats();
+            }
+        }
+        let hr = t.hits() as f64 / (t.hits() + t.misses()) as f64;
+        assert!((hr - 0.25).abs() < 0.03, "hit rate {hr} not ~0.25");
+    }
+}

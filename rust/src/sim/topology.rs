@@ -1,0 +1,277 @@
+//! Die topology: GPCs, TPCs, SMs, yield harvesting, and the card-specific
+//! SM-enumeration permutation.
+//!
+//! The paper (§1.1): the A100 has 8 GPCs x 8 TPCs x 2 SMs physically; one
+//! GPC is fused off and two of the remaining GPCs lose one TPC each, giving
+//! 7 GPCs / 54 TPCs / 108 SMs.  `%smid` reveals which SM a block runs on but
+//! not which GPC the SM belongs to, "and this may vary card to card".
+//!
+//! The paper's Fig 3 finding: the unit that shares memory-access resources
+//! is the **half-GPC** ("resource group") — 14 groups of 6 or 8 SMs.  We
+//! model exactly that: each enabled GPC is split into two halves, each half
+//! gets its own TLB + page-walker pool + memory port.
+
+use crate::config::TopologyConfig;
+use crate::util::rng::Rng;
+
+/// Index types.  `SmId` is the *enumeration* id visible to software (what
+/// `%smid` would report); physical coordinates are hidden inside [`Topology`].
+pub type SmId = usize;
+pub type GroupId = usize;
+pub type GpcId = usize;
+pub type TpcId = usize;
+
+/// Physical placement of one SM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SmInfo {
+    /// Software-visible id (0..sm_count), i.e. simulated `%smid`.
+    pub smid: SmId,
+    /// Physical GPC (0..enabled_gpcs).
+    pub gpc: GpcId,
+    /// Physical TPC within the device (global index).
+    pub tpc: TpcId,
+    /// Memory resource group = half-GPC (0..2*enabled_gpcs).
+    pub group: GroupId,
+}
+
+/// The die after yield harvesting, with the software SM enumeration.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    sms: Vec<SmInfo>, // indexed by smid
+    group_sizes: Vec<usize>,
+    gpc_of_group: Vec<GpcId>,
+}
+
+impl Topology {
+    /// Build the die: distribute enabled TPCs over GPCs (deficit GPCs chosen
+    /// by seed), split each GPC into two halves (groups), then assign smids:
+    /// the two SMs of one TPC always get consecutive smids (the paper infers
+    /// this from the 2x2 blocks in Fig 2), but the *TPC* enumeration order is
+    /// a card-specific pseudorandom permutation.
+    pub fn build(cfg: &TopologyConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.smid_permutation_seed);
+
+        // 1. Which GPCs lose TPCs?  Spread the deficit round-robin over a
+        //    seed-shuffled GPC order.
+        let full = cfg.enabled_gpcs * cfg.tpcs_per_gpc;
+        assert!(cfg.enabled_tpcs <= full);
+        let deficit = full - cfg.enabled_tpcs;
+        let mut gpc_order: Vec<GpcId> = (0..cfg.enabled_gpcs).collect();
+        rng.shuffle(&mut gpc_order);
+        let mut tpcs_in_gpc = vec![cfg.tpcs_per_gpc; cfg.enabled_gpcs];
+        for i in 0..deficit {
+            tpcs_in_gpc[gpc_order[i % cfg.enabled_gpcs]] -= 1;
+        }
+
+        // 2. Lay out TPCs physically and split each GPC into two halves.
+        //    A GPC with t TPCs gets halves of ceil(t/2) and floor(t/2) TPCs
+        //    (A100: 8 -> 4+4 = two 8-SM groups; 7 -> 4+3 = 8-SM + 6-SM).
+        struct PhysTpc {
+            gpc: GpcId,
+            group: GroupId,
+        }
+        let mut phys: Vec<PhysTpc> = Vec::with_capacity(cfg.enabled_tpcs);
+        for (gpc, &t) in tpcs_in_gpc.iter().enumerate() {
+            let first_half = t.div_ceil(2);
+            for k in 0..t {
+                let half = usize::from(k >= first_half);
+                phys.push(PhysTpc {
+                    gpc,
+                    group: gpc * 2 + half,
+                });
+            }
+        }
+        debug_assert_eq!(phys.len(), cfg.enabled_tpcs);
+
+        // 3. Card-specific TPC enumeration: shuffle the physical TPC list;
+        //    smids are assigned in shuffled order, two per TPC.
+        let mut order: Vec<usize> = (0..phys.len()).collect();
+        rng.shuffle(&mut order);
+
+        let mut sms = Vec::with_capacity(cfg.enabled_tpcs * cfg.sms_per_tpc);
+        for (enum_tpc, &pidx) in order.iter().enumerate() {
+            let p = &phys[pidx];
+            for s in 0..cfg.sms_per_tpc {
+                sms.push(SmInfo {
+                    smid: enum_tpc * cfg.sms_per_tpc + s,
+                    gpc: p.gpc,
+                    tpc: pidx,
+                    group: p.group,
+                });
+            }
+        }
+
+        let n_groups = cfg.enabled_gpcs * 2;
+        let mut group_sizes = vec![0usize; n_groups];
+        for sm in &sms {
+            group_sizes[sm.group] += 1;
+        }
+        let gpc_of_group = (0..n_groups).map(|g| g / 2).collect();
+
+        Self {
+            sms,
+            group_sizes,
+            gpc_of_group,
+        }
+    }
+
+    /// Number of software-visible SMs.
+    pub fn sm_count(&self) -> usize {
+        self.sms.len()
+    }
+
+    /// Number of memory resource groups (half-GPCs).
+    pub fn group_count(&self) -> usize {
+        self.group_sizes.len()
+    }
+
+    /// Info for one smid.
+    pub fn sm(&self, smid: SmId) -> &SmInfo {
+        &self.sms[smid]
+    }
+
+    /// Resource group of an smid (ground truth — the probe must *discover*
+    /// this without calling it).
+    pub fn group_of(&self, smid: SmId) -> GroupId {
+        self.sms[smid].group
+    }
+
+    /// GPC that a group belongs to (two groups per GPC).
+    pub fn gpc_of_group(&self, group: GroupId) -> GpcId {
+        self.gpc_of_group[group]
+    }
+
+    /// SMs (smids) in one group, ascending.
+    pub fn sms_in_group(&self, group: GroupId) -> Vec<SmId> {
+        self.sms
+            .iter()
+            .filter(|s| s.group == group)
+            .map(|s| s.smid)
+            .collect()
+    }
+
+    /// Sizes of all groups, indexed by group id.
+    pub fn group_sizes(&self) -> &[usize] {
+        &self.group_sizes
+    }
+
+    /// Groups sorted by (size desc, id) — convenient for experiments.
+    pub fn groups_by_size(&self) -> Vec<GroupId> {
+        let mut g: Vec<GroupId> = (0..self.group_count()).collect();
+        g.sort_by_key(|&id| (usize::MAX - self.group_sizes[id], id));
+        g
+    }
+
+    /// All smids.
+    pub fn all_sms(&self) -> Vec<SmId> {
+        (0..self.sm_count()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn a100() -> Topology {
+        Topology::build(&MachineConfig::a100_80gb().topology)
+    }
+
+    #[test]
+    fn a100_has_108_sms_14_groups() {
+        let t = a100();
+        assert_eq!(t.sm_count(), 108);
+        assert_eq!(t.group_count(), 14);
+    }
+
+    #[test]
+    fn a100_group_sizes_are_12x8_plus_2x6() {
+        let t = a100();
+        let mut sizes = t.group_sizes().to_vec();
+        sizes.sort_unstable();
+        let eights = sizes.iter().filter(|&&s| s == 8).count();
+        let sixes = sizes.iter().filter(|&&s| s == 6).count();
+        assert_eq!((sixes, eights), (2, 12), "sizes = {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 108);
+    }
+
+    #[test]
+    fn tpc_mates_have_consecutive_smids_and_same_group() {
+        // The paper's Fig-2 observation: dark boxes are 2x2 because the two
+        // SMs of a TPC have consecutive indices.
+        let t = a100();
+        for i in (0..t.sm_count()).step_by(2) {
+            let a = t.sm(i);
+            let b = t.sm(i + 1);
+            assert_eq!(a.tpc, b.tpc);
+            assert_eq!(a.group, b.group);
+            assert_eq!(a.gpc, b.gpc);
+        }
+    }
+
+    #[test]
+    fn smid_to_group_is_scrambled() {
+        // Consecutive smids beyond TPC mates should NOT all be in the same
+        // group; the card-specific permutation must scramble them.
+        let t = a100();
+        let changes = (0..t.sm_count() - 2)
+            .step_by(2)
+            .filter(|&i| t.group_of(i) != t.group_of(i + 2))
+            .count();
+        assert!(changes > 30, "enumeration suspiciously ordered: {changes}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_enumerations() {
+        let mut c1 = MachineConfig::a100_80gb().topology;
+        let mut c2 = c1.clone();
+        c1.smid_permutation_seed = 1;
+        c2.smid_permutation_seed = 2;
+        let t1 = Topology::build(&c1);
+        let t2 = Topology::build(&c2);
+        let same = (0..t1.sm_count())
+            .filter(|&i| t1.group_of(i) == t2.group_of(i))
+            .count();
+        assert!(same < t1.sm_count(), "seeds produced identical layouts");
+    }
+
+    #[test]
+    fn same_seed_is_deterministic() {
+        let c = MachineConfig::a100_80gb().topology;
+        let t1 = Topology::build(&c);
+        let t2 = Topology::build(&c);
+        for i in 0..t1.sm_count() {
+            assert_eq!(t1.sm(i), t2.sm(i));
+        }
+    }
+
+    #[test]
+    fn groups_partition_sms() {
+        let t = a100();
+        let mut seen = vec![false; t.sm_count()];
+        for g in 0..t.group_count() {
+            for sm in t.sms_in_group(g) {
+                assert!(!seen[sm]);
+                seen[sm] = true;
+                assert_eq!(t.group_of(sm), g);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn gpc_of_group_pairs_halves() {
+        let t = a100();
+        for g in 0..t.group_count() {
+            assert_eq!(t.gpc_of_group(g), g / 2);
+        }
+    }
+
+    #[test]
+    fn tiny_topology_consistent() {
+        let t = Topology::build(&MachineConfig::tiny_test().topology);
+        assert_eq!(t.sm_count(), 12);
+        assert_eq!(t.group_count(), 4);
+        assert_eq!(t.group_sizes().iter().sum::<usize>(), 12);
+    }
+}

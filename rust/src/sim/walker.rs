@@ -1,0 +1,156 @@
+//! Per-group page-walker pool with walk coalescing (MSHR-style merge).
+//!
+//! A TLB miss queues a page walk on the group's k-server walker pool.  If a
+//! walk for the same page is already in flight, the new miss *merges* onto
+//! it (no extra walker occupancy) and completes at the same time — exactly
+//! what hardware miss-status-holding registers do.  Without merging, a
+//! burst of warps touching one new page would count as dozens of walks.
+//!
+//! The walker pool's service rate (k / walk_ns) is the ceiling that the
+//! paper's Fig-1 cliff collapses onto once the working set exceeds reach.
+
+use std::collections::HashMap;
+
+use crate::sim::queue::{MultiServer, Ps};
+
+#[derive(Debug, Clone)]
+pub struct WalkerPool {
+    pool: MultiServer,
+    walk_svc: Ps,
+    /// page -> completion time of the in-flight walk for that page.
+    pending: HashMap<u64, Ps>,
+    walks: u64,
+    merged: u64,
+    /// Lazy cleanup watermark: drop stale `pending` entries when it grows.
+    sweep_len: usize,
+}
+
+impl WalkerPool {
+    pub fn new(walkers: usize, walk_svc: Ps) -> Self {
+        Self {
+            pool: MultiServer::new(walkers),
+            walk_svc,
+            pending: HashMap::new(),
+            walks: 0,
+            merged: 0,
+            sweep_len: 64,
+        }
+    }
+
+    /// A miss for `page` arrives at `t`; returns when its translation is
+    /// available.  Either merges onto an in-flight walk or starts a new one.
+    #[inline]
+    pub fn walk(&mut self, t: Ps, page: u64) -> Ps {
+        if let Some(&done) = self.pending.get(&page) {
+            if done > t {
+                self.merged += 1;
+                return done;
+            }
+            // Stale entry (walk finished in the past): fall through.
+        }
+        let done = self.pool.serve(t, self.walk_svc);
+        self.pending.insert(page, done);
+        self.walks += 1;
+        if self.pending.len() > self.sweep_len {
+            self.pending.retain(|_, &mut d| d > t);
+            self.sweep_len = (self.pending.len() * 2).max(64);
+        }
+        done
+    }
+
+    /// Completion time of an in-flight walk for `page`, if any is pending
+    /// at or after time 0 (caller checks recency).  Used for hit-under-miss:
+    /// a TLB hit on a just-installed entry must still wait for the walk.
+    #[inline]
+    pub fn pending_completion(&self, page: u64) -> Option<Ps> {
+        self.pending.get(&page).copied()
+    }
+
+    /// Completed + in-flight real walks (merges excluded).
+    pub fn walks(&self) -> u64 {
+        self.walks
+    }
+
+    /// Misses that merged onto an in-flight walk.
+    pub fn merged(&self) -> u64 {
+        self.merged
+    }
+
+    pub fn busy_ps(&self) -> Ps {
+        self.pool.busy_ps()
+    }
+
+    pub fn walkers(&self) -> usize {
+        self.pool.servers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_pages_use_walkers_in_parallel() {
+        let mut w = WalkerPool::new(4, 500_000); // 500 ns walks
+        for p in 0..4 {
+            assert_eq!(w.walk(0, p), 500_000);
+        }
+        // Fifth distinct page queues.
+        assert_eq!(w.walk(0, 99), 1_000_000);
+        assert_eq!(w.walks(), 5);
+        assert_eq!(w.merged(), 0);
+    }
+
+    #[test]
+    fn same_page_merges() {
+        let mut w = WalkerPool::new(4, 500_000);
+        let d = w.walk(0, 7);
+        // Ten more misses on the same page while the walk is in flight: all
+        // complete at the same time, consuming no walkers.
+        for _ in 0..10 {
+            assert_eq!(w.walk(100, 7), d);
+        }
+        assert_eq!(w.walks(), 1);
+        assert_eq!(w.merged(), 10);
+        // Another distinct page still finds 3 idle walkers.
+        assert_eq!(w.walk(0, 8), 500_000);
+    }
+
+    #[test]
+    fn stale_pending_entry_triggers_new_walk() {
+        let mut w = WalkerPool::new(2, 1000);
+        let d1 = w.walk(0, 7);
+        assert_eq!(d1, 1000);
+        // Long after the first walk completed (entry is stale; the page was
+        // evicted from the TLB again): a new real walk must start.
+        let d2 = w.walk(10_000, 7);
+        assert_eq!(d2, 11_000);
+        assert_eq!(w.walks(), 2);
+        assert_eq!(w.merged(), 0);
+    }
+
+    #[test]
+    fn throughput_is_k_over_walk_time() {
+        let k = 8;
+        let svc = 500_000;
+        let mut w = WalkerPool::new(k, svc);
+        let n = 8000u64;
+        let mut last = 0;
+        for p in 0..n {
+            last = last.max(w.walk(0, p));
+        }
+        // n distinct pages, k walkers: makespan = n/k * svc.
+        assert_eq!(last, n / k as u64 * svc);
+    }
+
+    #[test]
+    fn pending_map_is_swept() {
+        let mut w = WalkerPool::new(2, 10);
+        for p in 0..10_000u64 {
+            w.walk(p * 1000, p);
+        }
+        // All walks complete long before the last arrival; sweep must have
+        // kept the map bounded.
+        assert!(w.pending.len() < 1000, "pending = {}", w.pending.len());
+    }
+}

@@ -1,0 +1,19 @@
+//! Offline substrates.
+//!
+//! This build runs with no network registry: only the crates vendored in
+//! the image (xla, anyhow, thiserror) are available.  The small libraries a
+//! project like this would normally pull from crates.io are implemented
+//! here instead (DESIGN.md "Offline substrates"):
+//!
+//! * [`rng`]      — deterministic xoshiro256** PRNG (for `rand`)
+//! * [`json`]     — JSON emit + parse (for `serde_json`)
+//! * [`prop`]     — property-test runner with replayable seeds (for `proptest`)
+//! * [`benchkit`] — warmup/median benchmark harness + table/CSV output
+//!                  (for `criterion`)
+//! * [`threads`]  — scoped parallel map (for `rayon`)
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;

@@ -1,0 +1,146 @@
+//! Mini property-testing kit (offline substrate for `proptest`).
+//!
+//! `check(name, cases, |g| ...)` runs a closure over `cases` pseudo-random
+//! inputs drawn through [`Gen`].  On failure it retries the same case to
+//! confirm, then panics with the *case seed* so the exact input can be
+//! replayed by setting `A100WIN_PROP_SEED`.  No shrinking — cases are kept
+//! small by construction instead.
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi_incl: u64) -> u64 {
+        assert!(hi_incl >= lo);
+        lo + self.rng.gen_range(hi_incl - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.u64(lo as u64, hi_incl as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_index(xs.len())]
+    }
+
+    pub fn vec_u64(&mut self, len: usize, lo: u64, hi_incl: u64) -> Vec<u64> {
+        (0..len).map(|_| self.u64(lo, hi_incl)).collect()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs);
+    }
+}
+
+/// Run `f` over `cases` generated inputs.  Panics (with replay seed) on the
+/// first failing case.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
+    // Replay mode: run exactly one case with the given seed.
+    if let Ok(s) = std::env::var("A100WIN_PROP_SEED") {
+        let seed: u64 = s.parse().expect("A100WIN_PROP_SEED must be a u64");
+        let mut g = Gen {
+            rng: Rng::seed_from_u64(seed),
+            case_seed: seed,
+        };
+        f(&mut g);
+        return;
+    }
+    let base = fxhash(name);
+    for i in 0..cases {
+        let case_seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Rng::seed_from_u64(case_seed),
+                case_seed,
+            };
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay with \
+                 A100WIN_PROP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Stable name hash (FNV-1a) so case seeds don't change run to run.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always-true", 50, |g| {
+            let x = g.u64(1, 10);
+            assert!(x >= 1 && x <= 10);
+            n += 1;
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-false", 10, |_g| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap();
+        assert!(msg.contains("A100WIN_PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Vec::new();
+        check("det", 5, |g| a.push(g.u64(0, 1000)));
+        let mut b = Vec::new();
+        check("det", 5, |g| b.push(g.u64(0, 1000)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        check("helpers", 20, |g| {
+            let v = g.vec_u64(10, 5, 9);
+            assert_eq!(v.len(), 10);
+            assert!(v.iter().all(|&x| (5..=9).contains(&x)));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let choice = *g.pick(&[1, 2, 3]);
+            assert!((1..=3).contains(&choice));
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Scoped parallel map (offline substrate for `rayon`).
+//!
+//! `parallel_map(items, workers, f)` fans `f` over `items` on `workers`
+//! OS threads with work-stealing-free round-robin chunking by atomic index
+//! (items are claimed one at a time, so uneven item costs still balance).
+//! Result order matches input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Default worker count: available parallelism minus one (leave a core for
+/// the harness), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(items, 8, |&x| x * x);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<u32> = parallel_map(Vec::<u32>::new(), 4, |&x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Items with wildly different costs still all complete.
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(items, 4, |&x| {
+            if x % 7 == 0 {
+                // Simulate a heavy item.
+                (0..100_000u64).sum::<u64>() + x
+            } else {
+                x
+            }
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[1], 1);
+        assert_eq!(out[0], (0..100_000u64).sum::<u64>());
+    }
+
+    #[test]
+    fn workers_clamped() {
+        // More workers than items must not deadlock or panic.
+        let out = parallel_map(vec![1, 2, 3], 64, |&x| x);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload generation for the serving benches and examples: batches of
+//! lookup requests over a huge table, with the distributions the paper's
+//! use case implies (uniform random cache-line access) plus skewed and
+//! trace-replay variants for the ablation studies.
+
+pub mod openloop;
+pub mod synth;
+pub mod trace;
+
+pub use openloop::{drive, LoadPoint, OpenLoopConfig};
+pub use synth::{RequestGen, WorkloadSpec};
+pub use trace::Trace;

@@ -1,0 +1,152 @@
+//! Synthetic request generators.
+
+use crate::util::rng::Rng;
+
+/// Index distribution over the table's rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Distribution {
+    /// The paper's benchmark: uniform random rows.
+    Uniform,
+    /// Zipf-skewed rows (hot embedding rows), scattered over the table.
+    Zipf { theta: f64 },
+    /// Sequential scan (control: TLB-friendly).
+    Sequential,
+}
+
+/// Shape of the request stream.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub total_rows: u64,
+    pub distribution: Distribution,
+    /// Rows per request (min..=max, drawn uniformly).
+    pub request_rows: (usize, usize),
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn uniform(total_rows: u64, request_rows: usize, seed: u64) -> Self {
+        Self {
+            total_rows,
+            distribution: Distribution::Uniform,
+            request_rows: (request_rows, request_rows),
+            seed,
+        }
+    }
+}
+
+/// Stateful generator producing one request (a row-index batch) at a time.
+#[derive(Debug, Clone)]
+pub struct RequestGen {
+    spec: WorkloadSpec,
+    rng: Rng,
+    cursor: u64,
+}
+
+impl RequestGen {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        assert!(spec.total_rows > 0);
+        assert!(spec.request_rows.0 >= 1 && spec.request_rows.0 <= spec.request_rows.1);
+        let rng = Rng::seed_from_u64(spec.seed);
+        Self {
+            spec,
+            rng,
+            cursor: 0,
+        }
+    }
+
+    pub fn next_request(&mut self) -> Vec<u64> {
+        let (lo, hi) = self.spec.request_rows;
+        let len = if lo == hi {
+            lo
+        } else {
+            lo + self.rng.gen_index(hi - lo + 1)
+        };
+        (0..len).map(|_| self.next_row()).collect()
+    }
+
+    fn next_row(&mut self) -> u64 {
+        let n = self.spec.total_rows;
+        match self.spec.distribution {
+            Distribution::Uniform => self.rng.gen_range(n),
+            Distribution::Sequential => {
+                let r = self.cursor % n;
+                self.cursor += 1;
+                r
+            }
+            Distribution::Zipf { theta } => {
+                // Inverse-power approximation (matches sim::access's
+                // sampler closely enough for load shaping): draw u in
+                // (0,1], rank ~ n * u^(1/(1-theta)), then scatter.
+                let u = self.rng.gen_f64().max(1e-12);
+                let alpha = 1.0 / (1.0 - theta);
+                let rank = ((n as f64) * u.powf(alpha)) as u64;
+                rank.min(n - 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) % n
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_range_and_fixed_len() {
+        let mut g = RequestGen::new(WorkloadSpec::uniform(1000, 64, 1));
+        for _ in 0..50 {
+            let req = g.next_request();
+            assert_eq!(req.len(), 64);
+            assert!(req.iter().all(|&r| r < 1000));
+        }
+    }
+
+    #[test]
+    fn variable_request_sizes() {
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: 100,
+            distribution: Distribution::Uniform,
+            request_rows: (1, 10),
+            seed: 2,
+        });
+        let sizes: Vec<usize> = (0..200).map(|_| g.next_request().len()).collect();
+        assert!(sizes.iter().all(|&s| (1..=10).contains(&s)));
+        assert!(sizes.iter().collect::<std::collections::HashSet<_>>().len() > 3);
+    }
+
+    #[test]
+    fn sequential_wraps() {
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: 5,
+            distribution: Distribution::Sequential,
+            request_rows: (7, 7),
+            seed: 0,
+        });
+        assert_eq!(g.next_request(), vec![0, 1, 2, 3, 4, 0, 1]);
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: 10_000,
+            distribution: Distribution::Zipf { theta: 0.99 },
+            request_rows: (1, 1),
+            seed: 3,
+        });
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(g.next_request()[0]).or_insert(0u32) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        assert!(max > 200, "hottest row only {max} hits");
+        assert!(counts.len() < 9_000);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = RequestGen::new(WorkloadSpec::uniform(500, 8, 9));
+        let mut b = RequestGen::new(WorkloadSpec::uniform(500, 8, 9));
+        for _ in 0..10 {
+            assert_eq!(a.next_request(), b.next_request());
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Request-trace capture and replay.
+//!
+//! Plain text format, one request per line: comma-separated row indices.
+//! Lets a workload observed in one run (or authored by hand) be replayed
+//! byte-identically in benches and regression tests.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Trace {
+    pub requests: Vec<Vec<u64>>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record from a generator.
+    pub fn capture(gen: &mut crate::workload::RequestGen, requests: usize) -> Self {
+        Self {
+            requests: (0..requests).map(|_| gen.next_request()).collect(),
+        }
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.requests.iter().map(|r| r.len()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        for req in &self.requests {
+            let line: Vec<String> = req.iter().map(|r| r.to_string()).collect();
+            writeln!(f, "{}", line.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut requests = Vec::new();
+        for (ln, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let req = line
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<u64>()
+                        .with_context(|| format!("line {}: bad index '{t}'", ln + 1))
+                })
+                .collect::<anyhow::Result<Vec<u64>>>()?;
+            requests.push(req);
+        }
+        Ok(Self { requests })
+    }
+
+    /// Iterate in a loop (for fixed-duration replay).
+    pub fn cycle(&self) -> impl Iterator<Item = &Vec<u64>> + '_ {
+        self.requests.iter().cycle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{RequestGen, WorkloadSpec};
+
+    #[test]
+    fn capture_and_roundtrip() {
+        let mut g = RequestGen::new(WorkloadSpec::uniform(1000, 16, 4));
+        let t = Trace::capture(&mut g, 25);
+        assert_eq!(t.requests.len(), 25);
+        assert_eq!(t.total_rows(), 400);
+
+        let dir = std::env::temp_dir().join(format!("a100win-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join(format!("a100win-trace2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        std::fs::write(&path, "# header\n1,2,3\n\n4\n").unwrap();
+        let t = Trace::load(&path).unwrap();
+        assert_eq!(t.requests, vec![vec![1, 2, 3], vec![4]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("a100win-trace3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        std::fs::write(&path, "1,x,3\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cycle_repeats() {
+        let t = Trace {
+            requests: vec![vec![1], vec![2]],
+        };
+        let v: Vec<u64> = t.cycle().take(5).map(|r| r[0]).collect();
+        assert_eq!(v, vec![1, 2, 1, 2, 1]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: the full serving stack (batcher -> dispatcher -> router ->
+//! per-group PJRT workers -> merge) over AOT artifacts.
+
+use std::sync::Arc;
+
+use a100win::coordinator::{
+    BatcherConfig, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+};
+use a100win::probe::TopologyMap;
+use a100win::runtime::Runtime;
+use a100win::util::rng::Rng;
+
+/// A small fake probe map: 4 groups of 2 SMs (what matters here is group
+/// count and capacities; the serving stack never touches simulated SMs).
+fn map4() -> TopologyMap {
+    TopologyMap {
+        groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0, 119.0, 91.0, 90.0],
+        independent: true,
+        card_id: "integration".into(),
+    }
+}
+
+fn artifact_n() -> usize {
+    let dir = Runtime::default_artifacts_dir().expect("run `make artifacts`");
+    let rt = Runtime::new(&dir).unwrap();
+    rt.manifest().by_entry("lookup").first().unwrap().n
+}
+
+fn start_server(windows: usize, policy: PlacementPolicy) -> (EmbeddingServer, Table) {
+    let n = artifact_n();
+    let rows = (n * windows) as u64;
+    let table = Table::synthetic(rows, 32);
+    let plan = WindowPlan::split(rows, 128, windows);
+    let mut cfg = ServerConfig::new(Runtime::default_artifacts_dir().unwrap());
+    cfg.policy = policy;
+    cfg.batcher = BatcherConfig {
+        max_batch_rows: 8192,
+        max_wait: std::time::Duration::from_millis(1),
+        max_pending: 256,
+    };
+    let server = EmbeddingServer::start(cfg, &map4(), plan, table.clone()).unwrap();
+    (server, table)
+}
+
+#[test]
+fn lookup_roundtrip_group_to_chunk() {
+    let (server, table) = start_server(2, PlacementPolicy::GroupToChunk);
+    let mut rng = Rng::seed_from_u64(1);
+    for _ in 0..5 {
+        let rows: Vec<u64> = (0..300).map(|_| rng.gen_range(table.rows)).collect();
+        let out = server.lookup(rows.clone()).unwrap();
+        assert_eq!(out.len(), rows.len() * table.d);
+        for (i, &r) in rows.iter().enumerate() {
+            for j in 0..table.d {
+                assert_eq!(out[i * table.d + j], table.expected(r, j), "row {i}");
+            }
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 5);
+    assert_eq!(m.rows, 1500);
+    assert_eq!(m.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn lookup_roundtrip_naive_policy() {
+    // Naive placement must still produce correct answers (it is only
+    // slower on the real device); all groups serve all windows.
+    let (server, table) = start_server(2, PlacementPolicy::Naive);
+    let rows: Vec<u64> = (0..500).map(|i| (i * 7919) as u64 % table.rows).collect();
+    let out = server.lookup(rows.clone()).unwrap();
+    for (i, &r) in rows.iter().enumerate() {
+        assert_eq!(out[i * table.d], table.expected(r, 0));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let (server, table) = start_server(2, PlacementPolicy::GroupToChunk);
+    let server = Arc::new(server);
+    let errors = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..8u64 {
+            let server = Arc::clone(&server);
+            let table = table.clone();
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(c);
+                let mut bad = 0;
+                for _ in 0..10 {
+                    let rows: Vec<u64> =
+                        (0..64).map(|_| rng.gen_range(table.rows)).collect();
+                    let out = server.lookup(rows.clone()).unwrap();
+                    for (i, &r) in rows.iter().enumerate() {
+                        if out[i * table.d] != table.expected(r, 0) {
+                            bad += 1;
+                        }
+                    }
+                }
+                bad
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum::<u32>()
+    });
+    assert_eq!(errors, 0);
+    let m = server.metrics();
+    assert_eq!(m.requests, 80);
+    assert_eq!(m.rows, 80 * 64);
+    assert!(m.batches >= 1);
+}
+
+#[test]
+fn out_of_range_rows_rejected() {
+    let (server, table) = start_server(1, PlacementPolicy::GroupToChunk);
+    assert!(server.lookup(vec![table.rows]).is_err());
+    assert!(server.lookup(vec![0, table.rows + 5]).is_err());
+    assert_eq!(server.metrics().rejected, 2);
+    // Server still healthy afterwards.
+    let out = server.lookup(vec![0, 1]).unwrap();
+    assert_eq!(out[0], table.expected(0, 0));
+    server.shutdown();
+}
+
+#[test]
+fn empty_lookup_is_noop() {
+    let (server, _table) = start_server(1, PlacementPolicy::GroupToChunk);
+    assert_eq!(server.lookup(vec![]).unwrap().len(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn single_row_and_full_window_batches() {
+    let (server, table) = start_server(2, PlacementPolicy::GroupToChunk);
+    // 1 row.
+    let out = server.lookup(vec![42]).unwrap();
+    assert_eq!(out.len(), table.d);
+    assert_eq!(out[0], table.expected(42, 0));
+    // A batch larger than the biggest artifact (forces chunking).
+    let rows: Vec<u64> = (0..5000).map(|i| i as u64 % table.rows).collect();
+    let out = server.lookup(rows.clone()).unwrap();
+    for (i, &r) in rows.iter().enumerate().step_by(97) {
+        assert_eq!(out[i * table.d], table.expected(r, 0));
+    }
+    // Padding happened (5000 is not a multiple of any artifact batch).
+    assert!(server.metrics().padded_rows > 0);
+    server.shutdown();
+}
+
+#[test]
+fn windows_must_match_artifact_shape() {
+    // A plan whose windows differ from the artifact n must fail at startup
+    // with a clear error, not at serve time.
+    let n = artifact_n();
+    let rows = (n + 128) as u64;
+    let table = Table::synthetic(rows, 32);
+    let plan = WindowPlan::split(rows, 128, 1);
+    let cfg = ServerConfig::new(Runtime::default_artifacts_dir().unwrap());
+    let err = EmbeddingServer::start(cfg, &map4(), plan, table);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("lowered for"), "unexpected error: {msg}");
+}

@@ -1,0 +1,181 @@
+//! END-TO-END: the whole system on a real small workload.
+//!
+//! Mirrors examples/embedding_server.rs with assertions: serve a mixed
+//! uniform + zipf workload from concurrent clients through the full
+//! L3 -> PJRT -> AOT-kernel stack, verify every spot-checked row, replay a
+//! recorded trace byte-identically, and run a short training loop whose
+//! loss must fall.  Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use a100win::coordinator::{
+    BatcherConfig, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+};
+use a100win::probe::TopologyMap;
+use a100win::runtime::Runtime;
+use a100win::workload::{synth::Distribution, RequestGen, Trace, WorkloadSpec};
+
+fn map6() -> TopologyMap {
+    TopologyMap {
+        groups: (0..6).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0, 120.0, 118.0, 117.0, 90.0, 91.0],
+        independent: true,
+        card_id: "e2e".into(),
+    }
+}
+
+fn start(windows: usize) -> (EmbeddingServer, Table) {
+    let dir = Runtime::default_artifacts_dir().expect("run `make artifacts`");
+    let rt = Runtime::new(&dir).unwrap();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    drop(rt);
+    let rows = (meta.n * windows) as u64;
+    let table = Table::synthetic(rows, meta.d);
+    let plan = WindowPlan::split(rows, 128, windows);
+    let mut cfg = ServerConfig::new(dir);
+    cfg.policy = PlacementPolicy::GroupToChunk;
+    cfg.batcher = BatcherConfig {
+        max_batch_rows: 4096,
+        max_wait: std::time::Duration::from_millis(1),
+        max_pending: 512,
+    };
+    let server = EmbeddingServer::start(cfg, &map6(), plan, table.clone()).unwrap();
+    (server, table)
+}
+
+#[test]
+fn serve_mixed_workload_concurrently() {
+    let (server, table) = start(3);
+    let server = Arc::new(server);
+    let total_checked: u64 = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..6u64 {
+            let server = Arc::clone(&server);
+            let table = table.clone();
+            handles.push(s.spawn(move || {
+                let dist = if c % 2 == 0 {
+                    Distribution::Uniform
+                } else {
+                    Distribution::Zipf { theta: 0.99 }
+                };
+                let mut gen = RequestGen::new(WorkloadSpec {
+                    total_rows: table.rows,
+                    distribution: dist,
+                    request_rows: (1, 700),
+                    seed: 100 + c,
+                });
+                let mut checked = 0u64;
+                for _ in 0..15 {
+                    let req = gen.next_request();
+                    let out = server.lookup(req.clone()).unwrap();
+                    assert_eq!(out.len(), req.len() * table.d);
+                    for (i, &r) in req.iter().enumerate() {
+                        assert_eq!(out[i * table.d], table.expected(r, 0));
+                        assert_eq!(
+                            out[i * table.d + table.d - 1],
+                            table.expected(r, table.d - 1)
+                        );
+                        checked += 1;
+                    }
+                }
+                checked
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    assert!(total_checked > 1000);
+    let m = server.metrics();
+    assert_eq!(m.requests, 90);
+    assert_eq!(m.errors, 0);
+    assert!(m.p99_latency_us > 0);
+}
+
+#[test]
+fn trace_replay_is_reproducible() {
+    let (server, table) = start(2);
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(table.rows, 128, 5));
+    let trace = Trace::capture(&mut gen, 10);
+
+    let run = |server: &EmbeddingServer| -> Vec<f32> {
+        let mut all = Vec::new();
+        for req in &trace.requests {
+            all.extend(server.lookup(req.clone()).unwrap());
+        }
+        all
+    };
+    let a = run(&server);
+    let b = run(&server);
+    assert_eq!(a, b, "same trace must produce identical bytes");
+    assert_eq!(a.len(), trace.total_rows() * table.d);
+    server.shutdown();
+}
+
+#[test]
+fn training_loop_loss_falls() {
+    let dir = Runtime::default_artifacts_dir().expect("run `make artifacts`");
+    let mut rt = Runtime::new(&dir).unwrap();
+    let meta = rt.manifest().first_of("bag_loss_and_grad").unwrap();
+    let (b, n, d, g) = (meta.b, meta.n, meta.d, meta.g.unwrap());
+    rt.ensure_compiled(&meta.name).unwrap();
+
+    let mut rng = a100win::util::rng::Rng::seed_from_u64(21);
+    let mut table: Vec<f32> = (0..n * d)
+        .map(|_| (rng.gen_f64() as f32 - 0.5) * 0.1)
+        .collect();
+    let indices: Vec<i32> = (0..b * g).map(|_| rng.gen_range(n as u64) as i32).collect();
+    let targets: Vec<f32> = (0..b * d).map(|_| rng.gen_f64() as f32).collect();
+    let idx = rt.upload_i32(&indices, &[b, g]).unwrap();
+    let tgt = rt.upload_f32(&targets, &[b, d]).unwrap();
+
+    // The loss is a mean over b*d elements, so grads scale as 1/(b*d);
+    // scale the step to compensate (stable well below the max appearance-
+    // cluster eigenvalue; ~0.95x decay per step for singly-used rows).
+    let lr = (b * d) as f32 / 40.0;
+    let mut losses = Vec::new();
+    for _ in 0..24 {
+        let tab = rt.upload_f32(&table, &[n, d]).unwrap();
+        let outs = rt.execute(&meta.name, &[&idx, &tab, &tgt]).unwrap();
+        let loss = outs[0].to_vec::<f32>().unwrap()[0];
+        let grad = outs[1].to_vec::<f32>().unwrap();
+        for (w, gr) in table.iter_mut().zip(&grad) {
+            *w -= lr * gr;
+        }
+        losses.push(loss);
+    }
+    assert!(
+        *losses.last().unwrap() < losses[0] * 0.5,
+        "loss curve did not fall: {losses:?}"
+    );
+    // Monotone non-increasing within tolerance (quadratic loss, fixed batch).
+    for w in losses.windows(2) {
+        assert!(w[1] <= w[0] * 1.01, "loss rose: {losses:?}");
+    }
+}
+
+#[test]
+fn probe_artifact_feeds_server() {
+    // TopologyMap round-trips through disk and boots a server (the real
+    // deployment flow: `a100win probe` once, serve many times).
+    let dir = std::env::temp_dir().join(format!("a100win-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("map.json");
+    map6().save(&path).unwrap();
+    let loaded = TopologyMap::load(&path).unwrap();
+    assert_eq!(loaded, map6());
+
+    let artifacts = Runtime::default_artifacts_dir().expect("run `make artifacts`");
+    let rt = Runtime::new(&artifacts).unwrap();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    drop(rt);
+    let rows = (meta.n * 2) as u64;
+    let table = Table::synthetic(rows, meta.d);
+    let plan = WindowPlan::split(rows, 128, 2);
+    let cfg = ServerConfig::new(artifacts);
+    let server = EmbeddingServer::start(cfg, &loaded, plan, table.clone()).unwrap();
+    let out = server.lookup(vec![0, rows - 1]).unwrap();
+    assert_eq!(out[0], table.expected(0, 0));
+    assert_eq!(out[meta.d], table.expected(rows - 1, 0));
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

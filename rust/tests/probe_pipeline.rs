@@ -1,0 +1,130 @@
+//! Integration: the full probe -> map -> placement pipeline on the
+//! *full-size* simulated A100 (108 SMs, 14 groups), with an unknown
+//! card-specific SM enumeration.
+//!
+//! This is the paper's whole method end to end: the prober sees only
+//! throughput numbers, yet must recover the 12x8 + 2x6 group structure,
+//! estimate ~64 GiB reach, pass the independence check, and produce a map
+//! that the coordinator can pin windows with.
+
+use a100win::config::MachineConfig;
+use a100win::coordinator::{Placement, PlacementPolicy, WindowPlan};
+use a100win::probe::{ProbeConfig, Prober};
+use a100win::sim::Machine;
+
+fn quick_probe(seed: u64) -> (Machine, a100win::probe::ProbeOutcome) {
+    let mut cfg = MachineConfig::a100_80gb();
+    cfg.topology.smid_permutation_seed = seed;
+    let machine = Machine::new(cfg).unwrap();
+    let mut pc = ProbeConfig::for_machine(&machine);
+    // Keep the 5886-run pair sweep fast; the contention signal is a ~40%
+    // throughput gap, far above the deterministic simulator's noise.
+    pc.pair.accesses_per_sm = 800;
+    pc.verify.accesses_per_sm = 2_500;
+    pc.reach_sweep = {
+        let gib = 1u64 << 30;
+        vec![16 * gib, 32 * gib, 48 * gib, 64 * gib, 72 * gib, 80 * gib]
+    };
+    let outcome = Prober::with_config(&machine, pc).run().unwrap();
+    (machine, outcome)
+}
+
+#[test]
+fn probe_recovers_a100_topology() {
+    let (machine, outcome) = quick_probe(0xCAFE);
+    let topo = machine.topology();
+
+    // 14 groups, sizes 12x8 + 2x6.
+    assert_eq!(outcome.map.groups.len(), 14);
+    let mut sizes: Vec<usize> = outcome.map.groups.iter().map(|g| g.len()).collect();
+    sizes.sort_unstable();
+    assert_eq!(&sizes[..2], &[6, 6]);
+    assert!(sizes[2..].iter().all(|&s| s == 8));
+
+    // Discovered partition == ground truth partition.
+    for g in &outcome.map.groups {
+        let want = topo.group_of(g[0]);
+        for &sm in g {
+            assert_eq!(topo.group_of(sm), want, "smid {sm} misplaced");
+        }
+    }
+
+    // Reach estimate brackets 64 GiB.
+    let reach = outcome.map.reach_bytes;
+    assert!(
+        reach >= 48 * (1 << 30) && reach <= 72 * (1u64 << 30),
+        "reach estimate {} GiB",
+        reach >> 30
+    );
+
+    // Independence (Fig 5) held.
+    assert!(outcome.map.independent);
+}
+
+#[test]
+fn probe_is_robust_to_card_enumeration() {
+    // A different card (different smid permutation) must yield the same
+    // *structure* even though the smid->group mapping differs.
+    let (_m1, o1) = quick_probe(1);
+    let (_m2, o2) = quick_probe(2);
+    let sizes = |o: &a100win::probe::ProbeOutcome| {
+        let mut v: Vec<usize> = o.map.groups.iter().map(|g| g.len()).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sizes(&o1), sizes(&o2));
+    // And the mapping really is card-specific: the group containing smid 0
+    // has different membership between cards (overwhelmingly likely under
+    // a shuffle).
+    let members = |o: &a100win::probe::ProbeOutcome| {
+        let gid = o.map.group_of(0).unwrap();
+        let mut v = o.map.groups[gid].clone();
+        v.sort_unstable();
+        v
+    };
+    assert_ne!(members(&o1), members(&o2));
+}
+
+#[test]
+fn probed_map_drives_group_to_chunk_placement() {
+    let (machine, outcome) = quick_probe(0xBEEF);
+    // Window the full 80 GiB by the *probed* reach and pin groups.
+    let row_bytes = 128u64;
+    let total_rows = machine.config().memory.total_bytes / row_bytes;
+    let plan = WindowPlan::for_reach(
+        total_rows,
+        row_bytes,
+        outcome.map.reach_bytes,
+        outcome.map.groups.len(),
+    )
+    .unwrap();
+    assert!(
+        plan.count() >= 2,
+        "80 GiB needs >= 2 windows under 64 GiB reach"
+    );
+    let placement =
+        Placement::build(PlacementPolicy::GroupToChunk, &outcome.map, &plan, 0).unwrap();
+
+    // Every window pinned, and the paper's invariant holds: each group's
+    // window is within probed reach.
+    for w in 0..plan.count() {
+        assert!(!placement.serving_groups(w).is_empty());
+        assert!(plan.window_bytes(&plan.windows()[w]) <= outcome.map.reach_bytes);
+    }
+
+    // And the placement actually restores full speed on the simulator.
+    let assignments = placement.sim_assignments(&outcome.map, &plan, &machine, 3);
+    let spec = a100win::sim::MeasurementSpec {
+        assignments,
+        accesses_per_sm: 3_000,
+        warmup_fraction: 0.25,
+        txn_bytes: 128,
+        seed: 3,
+    };
+    let meas = machine.run(&spec);
+    assert!(
+        meas.gbps > 1100.0,
+        "probed group-to-chunk placement reached only {:.0} GB/s",
+        meas.gbps
+    );
+}

@@ -1,0 +1,201 @@
+//! Integration: the AOT bridge end to end.
+//!
+//! python (jax/pallas, `make artifacts`) lowered the gather kernels to HLO
+//! text; here the Rust runtime loads, compiles, and executes them on the
+//! PJRT CPU client and checks numerics against closed-form expectations —
+//! the Rust half of the interchange contract (python/tests/test_aot.py is
+//! the other half).
+
+use a100win::coordinator::Table;
+use a100win::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    let dir = Runtime::default_artifacts_dir()
+        .expect("artifacts missing: run `make artifacts` before cargo test");
+    Runtime::new(&dir).expect("runtime init")
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert!(!m.by_entry("lookup").is_empty());
+    assert!(!m.by_entry("windowed_lookup").is_empty());
+    assert!(!m.by_entry("bag_forward").is_empty());
+    assert_eq!(m.by_entry("bag_loss_and_grad").len(), 1);
+}
+
+#[test]
+fn gather_matches_synthetic_table() {
+    let mut rt = runtime();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    let (b, n, d) = (meta.b, meta.n, meta.d);
+
+    let table = Table::synthetic(n as u64, d);
+    let buf = rt.upload_f32(&table.data, &[n, d]).unwrap();
+
+    // Deterministic pseudo-random indices.
+    let mut rng = a100win::util::rng::Rng::seed_from_u64(7);
+    let indices: Vec<i32> = (0..b).map(|_| rng.gen_range(n as u64) as i32).collect();
+
+    let out = rt.gather(&meta.name, &indices, &buf).unwrap();
+    assert_eq!(out.len(), b * d);
+    for (k, &idx) in indices.iter().enumerate() {
+        for j in 0..d {
+            assert_eq!(
+                out[k * d + j],
+                table.expected(idx as u64, j),
+                "row {k} col {j} (index {idx})"
+            );
+        }
+    }
+}
+
+#[test]
+fn windowed_gather_remaps_into_window() {
+    let mut rt = runtime();
+    let meta = rt.manifest().first_of("windowed_lookup").unwrap();
+    let (b, n, d) = (meta.b, meta.n, meta.d);
+
+    let table = Table::synthetic(n as u64, d);
+    let buf = rt.upload_f32(&table.data, &[n, d]).unwrap();
+
+    // Indices intentionally larger than the window (and some larger than
+    // the table): the kernel must remap them via base + idx % size.
+    let mut rng = a100win::util::rng::Rng::seed_from_u64(8);
+    let indices: Vec<i32> = (0..b)
+        .map(|_| rng.gen_range(i32::MAX as u64) as i32)
+        .collect();
+    let (base, size) = ((n / 4) as i32, (n / 2) as i32);
+
+    let out = rt
+        .windowed_gather(&meta.name, [base, size], &indices, &buf)
+        .unwrap();
+    for (k, &idx) in indices.iter().enumerate() {
+        let expect_row = base as u64 + (idx % size) as u64;
+        assert!(expect_row >= base as u64 && expect_row < (base + size) as u64);
+        for j in 0..d {
+            assert_eq!(out[k * d + j], table.expected(expect_row, j));
+        }
+    }
+}
+
+#[test]
+fn bag_forward_sums_rows() {
+    let mut rt = runtime();
+    let meta = rt.manifest().first_of("bag_forward").unwrap();
+    let (b, n, d, g) = (meta.b, meta.n, meta.d, meta.g.unwrap());
+
+    let table = Table::synthetic(n as u64, d);
+    let buf = rt.upload_f32(&table.data, &[n, d]).unwrap();
+    let mut rng = a100win::util::rng::Rng::seed_from_u64(9);
+    let indices: Vec<i32> = (0..b * g).map(|_| rng.gen_range(n as u64) as i32).collect();
+
+    rt.ensure_compiled(&meta.name).unwrap();
+    let idx = rt.upload_i32(&indices, &[b, g]).unwrap();
+    let outs = rt.execute(&meta.name, &[&idx, &buf]).unwrap();
+    let out = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(out.len(), b * d);
+    for k in 0..b.min(16) {
+        for j in 0..d {
+            let want: f32 = (0..g)
+                .map(|q| table.expected(indices[k * g + q] as u64, j))
+                .sum();
+            let got = out[k * d + j];
+            assert!(
+                (got - want).abs() <= want.abs() * 1e-5 + 1e-3,
+                "bag {k} col {j}: got {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bag_train_returns_loss_and_grad() {
+    let mut rt = runtime();
+    let meta = rt.manifest().first_of("bag_loss_and_grad").unwrap();
+    let (b, n, d, g) = (meta.b, meta.n, meta.d, meta.g.unwrap());
+
+    let table = Table::synthetic(n as u64, d);
+    let buf = rt.upload_f32(&table.data, &[n, d]).unwrap();
+    let indices: Vec<i32> = vec![3; b * g]; // every bag = g copies of row 3
+    let targets = vec![0.0f32; b * d];
+
+    rt.ensure_compiled(&meta.name).unwrap();
+    let idx = rt.upload_i32(&indices, &[b, g]).unwrap();
+    let tgt = rt.upload_f32(&targets, &[b, d]).unwrap();
+    let outs = rt.execute(&meta.name, &[&idx, &buf, &tgt]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let loss = outs[0].to_vec::<f32>().unwrap()[0];
+    let grad = outs[1].to_vec::<f32>().unwrap();
+    assert_eq!(grad.len(), n * d);
+    // Forward: every bag sums g copies of row 3 -> loss > 0 against zero
+    // targets.
+    assert!(loss > 0.0);
+    // Gradient only touches row 3.
+    for r in 0..n {
+        for j in 0..d {
+            let v = grad[r * d + j];
+            if r == 3 {
+                assert!(v != 0.0, "grad at used row must be nonzero");
+            } else {
+                assert_eq!(v, 0.0, "grad leaked to row {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let mut rt = runtime();
+    let name = rt.manifest().first_of("lookup").unwrap().name;
+    assert!(!rt.is_compiled(&name));
+    rt.ensure_compiled(&name).unwrap();
+    assert!(rt.is_compiled(&name));
+    let t = std::time::Instant::now();
+    rt.ensure_compiled(&name).unwrap(); // cached: must be instant
+    assert!(t.elapsed() < std::time::Duration::from_millis(50));
+}
+
+#[test]
+fn gather_rejects_wrong_batch() {
+    let mut rt = runtime();
+    let meta = rt.manifest().first_of("lookup").unwrap();
+    let table = Table::synthetic(meta.n as u64, meta.d);
+    let buf = rt.upload_f32(&table.data, &[meta.n, meta.d]).unwrap();
+    let err = rt.gather(&meta.name, &[0, 1, 2], &buf);
+    assert!(err.is_err());
+}
+
+#[test]
+fn artifacts_lowered_to_intended_shapes() {
+    // L2 graph-quality gate (EXPERIMENTS.md §Perf L2): every artifact must
+    // contain a real `gather`, and none may contain a `while` loop — the
+    // loop lowering is 68x slower on the CPU backend and its reappearance
+    // should fail tests, not ship.
+    let rt = runtime();
+    let dir = Runtime::default_artifacts_dir().unwrap();
+    for meta in rt.manifest().artifacts.clone() {
+        let info = a100win::runtime::inspect_file(&dir.join(&meta.file)).unwrap();
+        assert!(
+            info.has_gather(),
+            "{}: no gather op (ops: {:?})",
+            meta.name,
+            info.op_counts.keys().collect::<Vec<_>>()
+        );
+        assert!(!info.has_while(), "{}: while loop reintroduced", meta.name);
+        // Operand count and order survive lowering.
+        assert_eq!(
+            info.entry_params.len(),
+            meta.operands.len(),
+            "{}: parameter count mismatch",
+            meta.name
+        );
+        // Training artifact carries exactly the backward scatter(-add).
+        if meta.entry == "bag_loss_and_grad" {
+            assert!(info.has_scatter(), "{}: missing scatter-add bwd", meta.name);
+        } else {
+            assert!(!info.has_scatter(), "{}: unexpected scatter", meta.name);
+        }
+    }
+}
