@@ -50,6 +50,13 @@ fn bench_router() {
         black_box(router.split(black_box(&batch)));
     });
 
+    // Zero-alloc steady state: shells recycled between splits.
+    benchkit::bench("router_split_4096_recycled", 10, 50, || {
+        let split = router.split(black_box(&batch));
+        black_box(&split);
+        router.recycle(split);
+    });
+
     // Split + identity merge round trip.
     let d = 32;
     benchkit::bench("router_split_merge_4096x32", 5, 20, || {
@@ -60,6 +67,7 @@ fn bench_router() {
             .map(|sb| vec![1.0f32; sb.local_rows.len() * d])
             .collect();
         black_box(merge_rows(&split, &parts, d));
+        router.recycle(split);
     });
 }
 

@@ -1,0 +1,149 @@
+//! Bench: raw discrete-event engine throughput, tracked across PRs.
+//!
+//! Measures simulated accesses per wall-clock second on the Fig-1 region
+//! sweep workload (the engine's dominant consumer) in three ways:
+//!
+//!   1. single-thread, calendar-queue engine (`Machine::run`),
+//!   2. single-thread, reference heap engine (the seed's event loop,
+//!      `Machine::run_reference_heap`) — the speedup denominator,
+//!   3. `Machine::run_many` scaling at 1/2/4/8 workers.
+//!
+//! Emits `BENCH_engine.json` (in the crate directory under `cargo bench`)
+//! so the perf trajectory is comparable across PRs; see EXPERIMENTS.md
+//! §Perf for the recorded history.
+
+use std::time::Instant;
+
+use a100win::config::{MachineConfig, GIB};
+use a100win::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
+use a100win::util::json::Json;
+
+/// The Fig-1 style workload: all 108 SMs, uniform random lines, region
+/// sweep bracketing the 64 GiB cliff (both TLB-resident and thrash
+/// regimes, which stress the event core differently).
+fn sweep_specs(machine: &Machine, per_sm: u64, seed: u64) -> Vec<MeasurementSpec> {
+    let sms = machine.topology().all_sms();
+    [8u64, 24, 40, 56, 64, 72, 80]
+        .iter()
+        .map(|&gib| {
+            MeasurementSpec::uniform_all(
+                &sms,
+                Pattern::Uniform(MemRegion::new(0, gib * GIB)),
+                per_sm,
+                seed ^ gib,
+            )
+        })
+        .collect()
+}
+
+fn total_accesses(specs: &[MeasurementSpec]) -> u64 {
+    specs
+        .iter()
+        .map(|s| s.accesses_per_sm * s.assignments.len() as u64)
+        .sum()
+}
+
+/// Time `runs` serial passes of `f` over all specs; returns accesses/s.
+fn accesses_per_s(
+    specs: &[MeasurementSpec],
+    runs: usize,
+    mut f: impl FnMut(&MeasurementSpec),
+) -> f64 {
+    let t = Instant::now();
+    for _ in 0..runs {
+        for spec in specs {
+            f(spec);
+        }
+    }
+    (total_accesses(specs) * runs as u64) as f64 / t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let machine = Machine::new(MachineConfig::a100_80gb()).unwrap();
+    let per_sm: u64 = std::env::var("A100WIN_BENCH_PER_SM")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3_000);
+    let specs = sweep_specs(&machine, per_sm, 42);
+    println!(
+        "# Engine throughput (fig1 region sweep: {} points x 108 SMs x {per_sm} accesses)",
+        specs.len()
+    );
+
+    // Warm the TLB-image cache and the allocator so both engines measure
+    // steady state.
+    for spec in &specs {
+        machine.run(spec);
+    }
+
+    // 1. Calendar-queue engine, single thread.
+    let cal = accesses_per_s(&specs, 3, |s| {
+        std::hint::black_box(machine.run(s));
+    });
+    println!("calendar engine:        {:>10.2} M simulated accesses/s", cal / 1e6);
+
+    // 2. Reference heap engine (the seed's event loop), single thread.
+    let heap = accesses_per_s(&specs, 3, |s| {
+        std::hint::black_box(machine.run_reference_heap(s));
+    });
+    println!("reference heap engine:  {:>10.2} M simulated accesses/s", heap / 1e6);
+    let speedup = cal / heap;
+    println!("single-thread speedup:  {speedup:>10.2}x");
+
+    // 3. run_many scaling.  More sweep points than the serial case so each
+    // worker stays busy.
+    let many_specs: Vec<MeasurementSpec> = (0..4)
+        .flat_map(|k| sweep_specs(&machine, per_sm, 1000 + k))
+        .collect();
+    let many_total = total_accesses(&many_specs) as f64;
+    let mut scaling = Vec::new();
+    let mut base_rate = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let t = Instant::now();
+        std::hint::black_box(machine.run_many_with(&many_specs, workers));
+        let rate = many_total / t.elapsed().as_secs_f64();
+        if workers == 1 {
+            base_rate = rate;
+        }
+        let ratio = rate / base_rate;
+        println!(
+            "run_many x{workers}:            {:>10.2} M accesses/s  ({ratio:.2}x vs 1 worker)",
+            rate / 1e6
+        );
+        scaling.push((workers, rate, ratio));
+    }
+
+    let json = Json::obj(vec![
+        ("workload", Json::str("fig1_region_sweep")),
+        ("sweep_points", Json::num(specs.len() as u32)),
+        ("accesses_per_sm", Json::num(per_sm as u32)),
+        (
+            "single_thread",
+            Json::obj(vec![
+                ("calendar_accesses_per_s", Json::num(cal)),
+                ("reference_heap_accesses_per_s", Json::num(heap)),
+                ("speedup_vs_reference_heap", Json::num(speedup)),
+            ]),
+        ),
+        (
+            "run_many",
+            Json::arr(
+                scaling
+                    .iter()
+                    .map(|&(w, rate, ratio)| {
+                        Json::obj(vec![
+                            ("workers", Json::num(w as u32)),
+                            ("accesses_per_s", Json::num(rate)),
+                            ("scaling_vs_1_worker", Json::num(ratio)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_engine.json";
+    match std::fs::write(path, json.to_string_pretty()) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -32,13 +32,28 @@ pub struct SplitBatch {
     pub request_len: usize,
 }
 
+/// Sentinel for "window has no sub-batch yet in this split".
+const NO_SLOT: u32 = u32::MAX;
+
 /// Stateless router (the RNG for group load-spreading is caller-owned).
+///
+/// The per-window scratch (`window_slot`) and a pool of recycled
+/// [`SubBatch`] shells persist across [`Router::split`] calls, so the
+/// request hot path performs no per-request window-map allocation and —
+/// when callers return finished splits via [`Router::recycle`] — no
+/// sub-batch allocations either (EXPERIMENTS.md §Perf L3, serving path).
 #[derive(Debug)]
 pub struct Router<'a> {
     plan: &'a WindowPlan,
     placement: &'a Placement,
     /// Round-robin cursors per window for group selection.
     cursors: Vec<usize>,
+    /// Scratch: window id -> index into the split being built (`NO_SLOT`
+    /// when untouched).  Reset lazily after each split by walking only the
+    /// touched windows.
+    window_slot: Vec<u32>,
+    /// Recycled sub-batch shells (emptied, capacity retained).
+    pool: Vec<SubBatch>,
 }
 
 impl<'a> Router<'a> {
@@ -48,6 +63,8 @@ impl<'a> Router<'a> {
             plan,
             placement,
             cursors: vec![0; plan.count()],
+            window_slot: vec![NO_SLOT; plan.count()],
+            pool: Vec::new(),
         }
     }
 
@@ -55,33 +72,52 @@ impl<'a> Router<'a> {
     /// Each sub-batch is assigned a serving group round-robin (cheap load
     /// spreading; the probed capacities are balanced by construction).
     pub fn split(&mut self, rows: &[u64]) -> SplitBatch {
-        let mut per_window: Vec<Option<usize>> = vec![None; self.plan.count()];
         let mut sub_batches: Vec<SubBatch> = Vec::new();
         for (pos, &row) in rows.iter().enumerate() {
             let w = self.plan.window_of(row);
-            let sb_idx = match per_window[w.id] {
-                Some(i) => i,
-                None => {
+            let sb_idx = match self.window_slot[w.id] {
+                NO_SLOT => {
                     let serving = self.placement.serving_groups(w.id);
                     let cursor = &mut self.cursors[w.id];
                     let group = serving[*cursor % serving.len()];
                     *cursor = cursor.wrapping_add(1);
-                    sub_batches.push(SubBatch {
-                        window: w.id,
-                        group,
+                    let mut sb = self.pool.pop().unwrap_or_else(|| SubBatch {
+                        window: 0,
+                        group: 0,
                         local_rows: Vec::new(),
                         positions: Vec::new(),
                     });
-                    per_window[w.id] = Some(sub_batches.len() - 1);
-                    sub_batches.len() - 1
+                    sb.window = w.id;
+                    sb.group = group;
+                    sub_batches.push(sb);
+                    let idx = sub_batches.len() - 1;
+                    self.window_slot[w.id] = idx as u32;
+                    idx
                 }
+                i => i as usize,
             };
             sub_batches[sb_idx].local_rows.push(w.localize(row) as u32);
             sub_batches[sb_idx].positions.push(pos as u32);
         }
+        // Reset only the touched scratch entries (O(sub-batches), not
+        // O(windows)).
+        for sb in &sub_batches {
+            self.window_slot[sb.window] = NO_SLOT;
+        }
         SplitBatch {
             sub_batches,
             request_len: rows.len(),
+        }
+    }
+
+    /// Return a finished split's sub-batch shells for reuse by later
+    /// [`Router::split`] calls.  Purely an optimization — splits that
+    /// escape (e.g. into worker jobs) simply aren't recycled.
+    pub fn recycle(&mut self, split: SplitBatch) {
+        for mut sb in split.sub_batches {
+            sb.local_rows.clear();
+            sb.positions.clear();
+            self.pool.push(sb);
         }
     }
 
@@ -231,6 +267,35 @@ mod tests {
             seen.insert(split.sub_batches[0].group);
         }
         assert_eq!(seen.len(), 4, "round robin must cycle all groups");
+    }
+
+    #[test]
+    fn recycled_splits_reuse_shells_and_stay_correct() {
+        let (plan, placement) = setup(4);
+        let mut router = Router::new(&plan, &placement);
+        let rows: Vec<u64> = vec![0, 9_999, 2_500, 5_000, 7_499, 1, 2_500];
+        let first = router.split(&rows);
+        let sub_count = first.sub_batches.len();
+        router.recycle(first);
+        // Subsequent splits must produce identical routing out of the
+        // recycled shells (cursors advanced round-robin, data reset).
+        for _ in 0..3 {
+            let split = router.split(&rows);
+            assert_eq!(split.sub_batches.len(), sub_count);
+            let mut covered = 0;
+            for sb in &split.sub_batches {
+                let w = &plan.windows()[sb.window];
+                for (k, &local) in sb.local_rows.iter().enumerate() {
+                    assert_eq!(
+                        w.start_row + local as u64,
+                        rows[sb.positions[k] as usize]
+                    );
+                    covered += 1;
+                }
+            }
+            assert_eq!(covered, rows.len());
+            router.recycle(split);
+        }
     }
 
     #[test]

@@ -63,6 +63,33 @@ pub fn region_sweep_gib(effort: Effort) -> Vec<u64> {
     }
 }
 
+/// Build the measurement spec for one full-device run under a placement
+/// policy over a region of `gib` GiB starting at byte 0.  Specs are built
+/// serially (placement is cheap) and executed through
+/// [`Machine::run_many`] so sweeps share one parallel engine pool.
+pub fn policy_spec(
+    machine: &Machine,
+    map: &TopologyMap,
+    policy: PlacementPolicy,
+    gib: u64,
+    chunks: usize,
+    accesses_per_sm: u64,
+    seed: u64,
+) -> MeasurementSpec {
+    let row_bytes = crate::config::LINE_BYTES;
+    let total_rows = gib * GIB / row_bytes;
+    let plan = WindowPlan::split(total_rows, row_bytes, chunks);
+    let placement = Placement::build(policy, map, &plan, seed).expect("placement");
+    let assignments: Vec<SmAssignment> = placement.sim_assignments(map, &plan, machine, seed);
+    MeasurementSpec {
+        assignments,
+        accesses_per_sm,
+        warmup_fraction: 0.25,
+        txn_bytes: crate::config::LINE_BYTES,
+        seed,
+    }
+}
+
 /// Run one full-device measurement under a placement policy over a region
 /// of `gib` GiB starting at byte 0.
 pub fn run_policy(
@@ -74,19 +101,9 @@ pub fn run_policy(
     accesses_per_sm: u64,
     seed: u64,
 ) -> f64 {
-    let row_bytes = crate::config::LINE_BYTES;
-    let total_rows = gib * GIB / row_bytes;
-    let plan = WindowPlan::split(total_rows, row_bytes, chunks);
-    let placement = Placement::build(policy, map, &plan, seed).expect("placement");
-    let assignments: Vec<SmAssignment> = placement.sim_assignments(map, &plan, machine, seed);
-    let spec = MeasurementSpec {
-        assignments,
-        accesses_per_sm,
-        warmup_fraction: 0.25,
-        txn_bytes: crate::config::LINE_BYTES,
-        seed,
-    };
-    machine.run(&spec).gbps
+    machine
+        .run(&policy_spec(machine, map, policy, gib, chunks, accesses_per_sm, seed))
+        .gbps
 }
 
 #[cfg(test)]

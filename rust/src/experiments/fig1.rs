@@ -10,7 +10,6 @@
 
 use crate::coordinator::PlacementPolicy;
 use crate::util::benchkit::Table;
-use crate::util::threads::{default_workers, parallel_map};
 
 use super::common::{self, Effort};
 
@@ -26,8 +25,10 @@ pub fn run(effort: Effort, seed: u64) -> Vec<Fig1Row> {
     let map = common::ground_truth_map(&machine);
     let per_sm = effort.accesses_per_sm();
     let sweep = common::region_sweep_gib(effort);
-    parallel_map(sweep, default_workers(), |&gib| {
-        let uniform = common::run_policy(
+    // Two specs per sweep point, executed as one parallel batch.
+    let mut specs = Vec::with_capacity(sweep.len() * 2);
+    for &gib in &sweep {
+        specs.push(common::policy_spec(
             &machine,
             &map,
             PlacementPolicy::Naive,
@@ -35,8 +36,8 @@ pub fn run(effort: Effort, seed: u64) -> Vec<Fig1Row> {
             1,
             per_sm,
             seed ^ gib,
-        );
-        let sm_chunk = common::run_policy(
+        ));
+        specs.push(common::policy_spec(
             &machine,
             &map,
             PlacementPolicy::SmToChunk,
@@ -44,13 +45,18 @@ pub fn run(effort: Effort, seed: u64) -> Vec<Fig1Row> {
             2,
             per_sm,
             seed ^ gib ^ 0x5A,
-        );
-        Fig1Row {
+        ));
+    }
+    let results = machine.run_many(&specs);
+    sweep
+        .iter()
+        .zip(results.chunks_exact(2))
+        .map(|(&gib, pair)| Fig1Row {
             region_gib: gib,
-            uniform_gbps: uniform,
-            sm_to_chunk_gbps: sm_chunk,
-        }
-    })
+            uniform_gbps: pair[0].gbps,
+            sm_to_chunk_gbps: pair[1].gbps,
+        })
+        .collect()
 }
 
 pub fn table(rows: &[Fig1Row]) -> Table {

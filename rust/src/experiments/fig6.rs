@@ -8,7 +8,6 @@
 
 use crate::coordinator::PlacementPolicy;
 use crate::util::benchkit::Table;
-use crate::util::threads::{default_workers, parallel_map};
 
 use super::common::{self, Effort};
 
@@ -25,17 +24,27 @@ pub fn run(effort: Effort, seed: u64) -> Vec<Fig6Row> {
     let map = common::ground_truth_map(&machine);
     let per_sm = effort.accesses_per_sm();
     let sweep = common::region_sweep_gib(effort);
-    parallel_map(sweep, default_workers(), |&gib| {
-        let run = |policy, chunks, salt: u64| {
-            common::run_policy(&machine, &map, policy, gib, chunks, per_sm, seed ^ gib ^ salt)
+    // Three specs (one per policy arm) per sweep point, one parallel batch.
+    let mut specs = Vec::with_capacity(sweep.len() * 3);
+    for &gib in &sweep {
+        let spec = |policy, chunks, salt: u64| {
+            common::policy_spec(&machine, &map, policy, gib, chunks, per_sm, seed ^ gib ^ salt)
         };
-        Fig6Row {
+        specs.push(spec(PlacementPolicy::Naive, 1, 0));
+        specs.push(spec(PlacementPolicy::SmToChunk, 2, 0x5A));
+        specs.push(spec(PlacementPolicy::GroupToChunk, 2, 0xC3));
+    }
+    let results = machine.run_many(&specs);
+    sweep
+        .iter()
+        .zip(results.chunks_exact(3))
+        .map(|(&gib, arms)| Fig6Row {
             region_gib: gib,
-            uniform_gbps: run(PlacementPolicy::Naive, 1, 0),
-            sm_to_chunk_gbps: run(PlacementPolicy::SmToChunk, 2, 0x5A),
-            group_to_chunk_gbps: run(PlacementPolicy::GroupToChunk, 2, 0xC3),
-        }
-    })
+            uniform_gbps: arms[0].gbps,
+            sm_to_chunk_gbps: arms[1].gbps,
+            group_to_chunk_gbps: arms[2].gbps,
+        })
+        .collect()
 }
 
 pub fn table(rows: &[Fig6Row]) -> Table {

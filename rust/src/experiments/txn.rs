@@ -7,7 +7,6 @@
 use crate::config::GIB;
 use crate::sim::{MeasurementSpec, MemRegion, Pattern, SmAssignment};
 use crate::util::benchkit::Table;
-use crate::util::threads::{default_workers, parallel_map};
 
 use super::common::{self, Effort};
 
@@ -21,8 +20,10 @@ pub fn run(effort: Effort, seed: u64) -> Vec<TxnRow> {
     let machine = common::paper_machine();
     let sms = machine.topology().all_sms();
     let per_sm = effort.accesses_per_sm();
-    parallel_map(vec![128u64, 256, 512], default_workers(), |&txn| {
-        let spec = MeasurementSpec {
+    let txns = [128u64, 256, 512];
+    let specs: Vec<MeasurementSpec> = txns
+        .iter()
+        .map(|&txn| MeasurementSpec {
             assignments: sms
                 .iter()
                 .map(|&smid| SmAssignment {
@@ -34,12 +35,15 @@ pub fn run(effort: Effort, seed: u64) -> Vec<TxnRow> {
             warmup_fraction: 0.25,
             txn_bytes: txn,
             seed: seed ^ txn,
-        };
-        TxnRow {
+        })
+        .collect();
+    txns.iter()
+        .zip(machine.run_many(&specs))
+        .map(|(&txn, meas)| TxnRow {
             txn_bytes: txn,
-            gbps: machine.run(&spec).gbps,
-        }
-    })
+            gbps: meas.gbps,
+        })
+        .collect()
 }
 
 pub fn table(rows: &[TxnRow]) -> Table {

@@ -20,7 +20,6 @@ pub mod report;
 pub mod verify;
 
 use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
-use crate::util::threads::default_workers;
 
 pub use cluster::{cluster, Clustering};
 pub use pair::{pair_probe, PairMatrix, PairProbeConfig};
@@ -96,20 +95,28 @@ impl<'m> Prober<'m> {
     /// where throughput falls below `knee_ratio` x the small-region value.
     /// Returns (reach estimate, curve).
     pub fn reach_sweep(&self, group: &[crate::sim::SmId]) -> (u64, Vec<(u64, f64)>) {
-        let jobs: Vec<u64> = self.cfg.reach_sweep.clone();
         let per_sm = self.cfg.verify.accesses_per_sm;
         let seed = self.cfg.verify.seed;
-        let machine = self.machine;
-        let curve: Vec<(u64, f64)> =
-            crate::util::threads::parallel_map(jobs, default_workers(), |&bytes| {
-                let spec = MeasurementSpec::uniform_all(
+        let specs: Vec<MeasurementSpec> = self
+            .cfg
+            .reach_sweep
+            .iter()
+            .map(|&bytes| {
+                MeasurementSpec::uniform_all(
                     group,
                     Pattern::Uniform(MemRegion::new(0, bytes)),
                     per_sm,
                     seed ^ bytes,
-                );
-                (bytes, machine.run(&spec).gbps)
-            });
+                )
+            })
+            .collect();
+        let curve: Vec<(u64, f64)> = self
+            .cfg
+            .reach_sweep
+            .iter()
+            .zip(self.machine.run_many(&specs))
+            .map(|(&bytes, meas)| (bytes, meas.gbps))
+            .collect();
         let baseline = curve
             .iter()
             .take(3)

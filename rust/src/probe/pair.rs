@@ -11,7 +11,7 @@
 //! pattern is strongest.)
 
 use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmId};
-use crate::util::threads::{default_workers, parallel_map};
+use crate::util::threads::default_workers;
 
 /// Configuration for the pair sweep.
 #[derive(Debug, Clone)]
@@ -127,19 +127,22 @@ pub fn pair_probe(machine: &Machine, cfg: &PairProbeConfig) -> PairMatrix {
             jobs.push((i, j));
         }
     }
-    let results = parallel_map(jobs.clone(), cfg.workers, |&(i, j)| {
-        let sms: Vec<SmId> = if i == j { vec![i] } else { vec![i, j] };
-        let spec = MeasurementSpec::uniform_all(
-            &sms,
-            Pattern::Uniform(cfg.region),
-            cfg.accesses_per_sm,
-            cfg.seed ^ ((i as u64) << 32 | j as u64),
-        );
-        machine.run(&spec).gbps
-    });
+    let specs: Vec<MeasurementSpec> = jobs
+        .iter()
+        .map(|&(i, j)| {
+            let sms: Vec<SmId> = if i == j { vec![i] } else { vec![i, j] };
+            MeasurementSpec::uniform_all(
+                &sms,
+                Pattern::Uniform(cfg.region),
+                cfg.accesses_per_sm,
+                cfg.seed ^ ((i as u64) << 32 | j as u64),
+            )
+        })
+        .collect();
+    let results = machine.run_many_with(&specs, cfg.workers);
     let mut m = PairMatrix::new(n);
-    for ((i, j), gbps) in jobs.into_iter().zip(results) {
-        m.set(i, j, gbps);
+    for ((i, j), meas) in jobs.into_iter().zip(results) {
+        m.set(i, j, meas.gbps);
     }
     m
 }

@@ -9,7 +9,7 @@
 //!   (Fig 5), so per-group windows are enough to dodge translation limits.
 
 use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmAssignment, SmId};
-use crate::util::threads::{default_workers, parallel_map};
+use crate::util::threads::default_workers;
 
 /// One solo-group measurement (Fig 4 bar).
 #[derive(Debug, Clone)]
@@ -58,24 +58,25 @@ pub fn solo_groups(
     groups: &[Vec<SmId>],
     cfg: &VerifyConfig,
 ) -> Vec<SoloGroupResult> {
-    let jobs: Vec<usize> = (0..groups.len()).collect();
     let region = MemRegion::new(0, cfg.region_bytes);
-    let results = parallel_map(jobs, cfg.workers, |&gi| {
-        let spec = MeasurementSpec::uniform_all(
-            &groups[gi],
-            Pattern::Uniform(region),
-            cfg.accesses_per_sm,
-            cfg.seed ^ gi as u64,
-        );
-        machine.run(&spec).gbps
-    });
-    results
+    let specs: Vec<MeasurementSpec> = (0..groups.len())
+        .map(|gi| {
+            MeasurementSpec::uniform_all(
+                &groups[gi],
+                Pattern::Uniform(region),
+                cfg.accesses_per_sm,
+                cfg.seed ^ gi as u64,
+            )
+        })
+        .collect();
+    machine
+        .run_many_with(&specs, cfg.workers)
         .into_iter()
         .enumerate()
-        .map(|(gi, gbps)| SoloGroupResult {
+        .map(|(gi, meas)| SoloGroupResult {
             group_index: gi,
             sm_count: groups[gi].len(),
-            gbps,
+            gbps: meas.gbps,
         })
         .collect()
 }
@@ -100,35 +101,38 @@ pub fn group_pairs(
     });
     let r1 = MemRegion::new(0, cfg.region_bytes);
     let r2 = MemRegion::new(cfg.region_bytes, cfg.region_bytes);
-    let results = parallel_map(jobs.clone(), cfg.workers, |&(a, b)| {
-        let mut assignments: Vec<SmAssignment> = Vec::new();
-        for &smid in &groups[a] {
-            assignments.push(SmAssignment {
-                smid,
-                pattern: Pattern::Uniform(r1),
-            });
-        }
-        for &smid in &groups[b] {
-            assignments.push(SmAssignment {
-                smid,
-                pattern: Pattern::Uniform(r2),
-            });
-        }
-        let spec = MeasurementSpec {
-            assignments,
-            accesses_per_sm: cfg.accesses_per_sm,
-            warmup_fraction: 0.25,
-            txn_bytes: crate::config::LINE_BYTES,
-            seed: cfg.seed ^ ((a as u64) << 32 | b as u64),
-        };
-        machine.run(&spec).gbps
-    });
+    let specs: Vec<MeasurementSpec> = jobs
+        .iter()
+        .map(|&(a, b)| {
+            let mut assignments: Vec<SmAssignment> = Vec::new();
+            for &smid in &groups[a] {
+                assignments.push(SmAssignment {
+                    smid,
+                    pattern: Pattern::Uniform(r1),
+                });
+            }
+            for &smid in &groups[b] {
+                assignments.push(SmAssignment {
+                    smid,
+                    pattern: Pattern::Uniform(r2),
+                });
+            }
+            MeasurementSpec {
+                assignments,
+                accesses_per_sm: cfg.accesses_per_sm,
+                warmup_fraction: 0.25,
+                txn_bytes: crate::config::LINE_BYTES,
+                seed: cfg.seed ^ ((a as u64) << 32 | b as u64),
+            }
+        })
+        .collect();
+    let results = machine.run_many_with(&specs, cfg.workers);
     jobs.into_iter()
         .zip(results)
-        .map(|((a, b), gbps)| GroupPairResult {
+        .map(|((a, b), meas)| GroupPairResult {
             a,
             b,
-            gbps,
+            gbps: meas.gbps,
             solo_sum: solos[a].gbps + solos[b].gbps,
         })
         .collect()

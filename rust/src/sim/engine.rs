@@ -26,12 +26,25 @@
 //! walker's pending table and waits for the same walk, so hit-under-miss
 //! timing stays correct; the entry merely becomes evictable one walk-time
 //! early, which is negligible at TLB capacities of interest.
+//!
+//! ## Hot-path structure (EXPERIMENTS.md §Perf L3)
+//!
+//! The event core is an indexed [`CalendarQueue`](crate::sim::calendar)
+//! (O(1) amortized) instead of a binary heap; per-SM hot fields live in
+//! struct-of-arrays form inside [`RunState`]; the walker pending table is
+//! open-addressed; and parallel sweeps go through [`Machine::run_many`],
+//! which shares pre-warmed TLB images through a sharded read-mostly cache.
+//! The seed's heap-driven loop survives verbatim as
+//! [`Machine::run_reference_heap`] — the oracle that the optimized engine
+//! must match bit-for-bit (see the equivalence tests below) and the
+//! baseline that `benches/engine_throughput.rs` measures speedup against.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 use crate::config::MachineConfig;
 use crate::sim::access::{Pattern, Stream};
+use crate::sim::calendar::CalendarQueue;
 use crate::sim::hbm::Hbm;
 use crate::sim::pages::{line_of, page_of, page_shift};
 use crate::sim::port::{GpcHub, GroupPort};
@@ -81,33 +94,85 @@ impl MeasurementSpec {
     }
 }
 
+/// Memoized pre-warmed group-TLB states, keyed by the group's region set.
+///
+/// Pre-warming inserts up to `entries` pages (65 k operations for the A100
+/// preset) which dominates short probe runs; cloning a warmed tag array is
+/// a ~0.5 MB memcpy instead (EXPERIMENTS.md §Perf L3 iteration 3).  The
+/// cache is sharded by key hash behind `RwLock`s so the read-mostly steady
+/// state of a [`Machine::run_many`] sweep (thousands of lookups, a handful
+/// of builds) never serializes on one mutex.
+const WARM_SHARDS: usize = 8;
+
+#[derive(Debug)]
+struct WarmCache {
+    shards: [RwLock<HashMap<Vec<(u64, u64)>, SetAssocTlb>>; WARM_SHARDS],
+}
+
+impl Default for WarmCache {
+    fn default() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+        }
+    }
+}
+
+impl WarmCache {
+    fn shard_of(key: &[(u64, u64)]) -> usize {
+        // FNV-1a over the region descriptors.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &(a, b) in key {
+            for w in [a, b] {
+                h ^= w;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        (h >> 32) as usize % WARM_SHARDS
+    }
+
+    /// Fetch a warmed TLB image, building (and publishing) it on miss.
+    /// Builds run outside any lock; a racing duplicate build produces an
+    /// identical image, so either insert order yields the same content.
+    fn get_or_build(
+        &self,
+        key: Vec<(u64, u64)>,
+        build: impl FnOnce() -> SetAssocTlb,
+    ) -> SetAssocTlb {
+        let shard = &self.shards[Self::shard_of(&key)];
+        if let Some(t) = shard.read().unwrap().get(&key) {
+            return t.clone();
+        }
+        let t = build();
+        shard.write().unwrap().insert(key, t.clone());
+        t
+    }
+}
+
 /// The simulated device.
 #[derive(Debug, Clone)]
 pub struct Machine {
     cfg: MachineConfig,
     topo: Topology,
-    /// Memoized pre-warmed group-TLB states, keyed by the group's region
-    /// set.  Pre-warming inserts up to `entries` pages (65 k operations for
-    /// the A100 preset) which dominates short probe runs; cloning a warmed
-    /// tag array is a ~0.5 MB memcpy instead (EXPERIMENTS.md §Perf L3
-    /// iteration 3).  Shared across clones so parallel sweeps hit it.
-    warm_cache: std::sync::Arc<std::sync::Mutex<HashMap<Vec<(u64, u64)>, SetAssocTlb>>>,
+    /// Shared across clones so parallel sweeps hit the same warm images.
+    warm_cache: Arc<WarmCache>,
 }
 
-struct SmState {
-    stream: Stream,
-    utlb: FullyAssocTlb,
-    group_idx: usize,
-    gpc_idx: usize,
-    issued: u64,
-    completed: u64,
-    warmup: u64,
-    last_issue: Ps,
-    counted_bytes: u64,
-    counted_accesses: u64,
-    latency_sum: Ps,
-    utlb_hits: u64,
-    utlb_lookups: u64,
+/// Per-SM hot state in struct-of-arrays form: the issue path touches
+/// `last_issue`/`issued`/`stream`/`utlb`/`group_idx`/`gpc_idx`, the
+/// completion path touches the counters — each loop streams over dense
+/// same-kind arrays instead of striding across a 200-byte struct.
+struct SmArrays {
+    stream: Vec<Stream>,
+    utlb: Vec<FullyAssocTlb>,
+    group_idx: Vec<u32>,
+    gpc_idx: Vec<u32>,
+    last_issue: Vec<Ps>,
+    issued: Vec<u64>,
+    completed: Vec<u64>,
+    counted_accesses: Vec<u64>,
+    latency_sum: Vec<Ps>,
+    utlb_hits: Vec<u64>,
+    utlb_lookups: Vec<u64>,
 }
 
 struct GroupState {
@@ -116,8 +181,65 @@ struct GroupState {
     walkers: WalkerPool,
     port: GroupPort,
     active_sms: usize,
-    counted_bytes: u64,
     counted_accesses: u64,
+}
+
+/// Everything one simulation run mutates, borrowed exactly once by the
+/// event loop (the seed engine threaded five `&mut` params through a
+/// closure instead).
+struct RunState {
+    shift: u32,
+    hit_ps: Ps,
+    issue_iv: Ps,
+    sms: SmArrays,
+    groups: Vec<GroupState>,
+    hubs: Vec<GpcHub>,
+    hbm: Hbm,
+}
+
+impl RunState {
+    /// Issue one access for `sm` at (no earlier than) `t`: route it through
+    /// translation and the data path at issue time, returning
+    /// `(completion, issue_time)`.  The virtual-clock servers absorb
+    /// out-of-order arrivals, so one event per access suffices — 2x fewer
+    /// queue operations than a staged issue/complete loop with identical
+    /// results (EXPERIMENTS.md §Perf L3).
+    #[inline]
+    fn issue(&mut self, sm: u32, t: Ps) -> (Ps, Ps) {
+        let i = sm as usize;
+        let t_issue = t.max(self.sms.last_issue[i] + self.issue_iv);
+        self.sms.last_issue[i] = t_issue;
+        self.sms.issued[i] += 1;
+
+        let addr = self.sms.stream[i].next_addr();
+        let page = page_of(addr, self.shift);
+        let line = line_of(addr);
+        let gi = self.sms.group_idx[i] as usize;
+        let gs = &mut self.groups[gi];
+
+        // Translation.
+        self.sms.utlb_lookups[i] += 1;
+        let mut ready = t_issue;
+        if self.sms.utlb[i].access(page) {
+            self.sms.utlb_hits[i] += 1;
+            // Translation cached SM-locally: no group-TLB trip.
+        } else if gs.tlb.lookup(page) {
+            ready = t_issue + self.hit_ps;
+            // Hit-under-miss: if a walk for this page is still in flight,
+            // the translation is not actually ready until it lands.
+            ready = ready.max(gs.walkers.pending_completion(page).unwrap_or(0));
+        } else {
+            let done = gs.walkers.walk(t_issue + self.hit_ps, page);
+            gs.tlb.insert(page);
+            ready = done;
+        }
+
+        // Data path.
+        let after_port = gs.port.pass(ready);
+        let after_hub = self.hubs[self.sms.gpc_idx[i] as usize].pass(after_port);
+        let done = self.hbm.access(after_hub, line);
+        (done, t_issue)
+    }
 }
 
 impl Machine {
@@ -139,18 +261,14 @@ impl Machine {
         &self.topo
     }
 
-    /// Run one benchmark measurement.
-    pub fn run(&self, spec: &MeasurementSpec) -> Measurement {
+    /// Build the run-local component state for one spec.
+    fn build_run_state(&self, spec: &MeasurementSpec) -> RunState {
         assert!(!spec.assignments.is_empty(), "no SMs assigned");
         assert!(spec.accesses_per_sm > 0);
         let shift = page_shift(self.cfg.tlb.page_bytes);
-        let hit_ps = ns_to_ps(self.cfg.tlb.hit_ns);
         let walk_svc = ns_to_ps(self.cfg.tlb.walk_ns);
-        let issue_iv = ns_to_ps(self.cfg.sm.issue_interval_ns);
-        let outstanding = self.cfg.sm.outstanding as u64;
         let txn = spec.txn_bytes;
 
-        // --- Build run-local component state -----------------------------
         // Map active groups/GPCs to dense indices (GroupStates are created
         // below, once the pre-warmed TLB content is known, to avoid a
         // throwaway 0.5 MB tag-array allocation per group).
@@ -182,8 +300,7 @@ impl Machine {
         for a in &spec.assignments {
             let g = group_idx_of[self.topo.group_of(a.smid)];
             let r = a.pattern.region();
-            group_regions[g]
-                .insert((r.base, r.len), r.pages(self.cfg.tlb.page_bytes));
+            group_regions[g].insert((r.base, r.len), r.pages(self.cfg.tlb.page_bytes));
         }
         let cap = self.cfg.tlb.entries as u64;
         let mut groups: Vec<GroupState> = Vec::with_capacity(group_ids.len());
@@ -191,145 +308,160 @@ impl Machine {
             let key: Vec<(u64, u64)> = regions.keys().copied().collect();
             // Memoized warm state: build once per distinct region set, then
             // clone the tag arrays (fast memcpy) for every later run.
-            let cached = self.warm_cache.lock().unwrap().get(&key).cloned();
-            let warmed = match cached {
-                Some(t) => t,
-                None => {
-                    let mut t =
-                        SetAssocTlb::new(self.cfg.tlb.entries, self.cfg.tlb.associativity);
-                    let total: u64 = regions.values().sum();
-                    for (&(base, _len), &pages) in regions {
-                        let first = base >> shift;
-                        // Insert the whole working set when it fits;
-                        // otherwise a stride-sampled, capacity-proportional
-                        // share per region.
-                        let take = if total <= cap {
-                            pages
-                        } else {
-                            (cap * pages / total).max(1)
-                        };
-                        for k in 0..take {
-                            let p = first + (k * pages) / take;
-                            t.insert(p);
-                        }
+            let warmed = self.warm_cache.get_or_build(key, || {
+                let mut t = SetAssocTlb::new(self.cfg.tlb.entries, self.cfg.tlb.associativity);
+                let total: u64 = regions.values().sum();
+                for (&(base, _len), &pages) in regions {
+                    let first = base >> shift;
+                    // Insert the whole working set when it fits; otherwise a
+                    // stride-sampled, capacity-proportional share per region.
+                    let take = if total <= cap {
+                        pages
+                    } else {
+                        (cap * pages / total).max(1)
+                    };
+                    for k in 0..take {
+                        let p = first + (k * pages) / take;
+                        t.insert(p);
                     }
-                    t.reset_stats();
-                    self.warm_cache
-                        .lock()
-                        .unwrap()
-                        .insert(key, t.clone());
-                    t
                 }
-            };
+                t.reset_stats();
+                t
+            });
             groups.push(GroupState {
                 group: group_ids[gi],
                 tlb: warmed,
                 walkers: WalkerPool::new(self.cfg.tlb.walkers_per_group, walk_svc),
                 port: GroupPort::new(&self.cfg.memory, txn),
                 active_sms: group_active[gi],
-                counted_bytes: 0,
                 counted_accesses: 0,
             });
         }
 
-        let mut hubs: Vec<GpcHub> = (0..n_gpcs)
+        let hubs: Vec<GpcHub> = (0..n_gpcs)
             .map(|gpc| GpcHub::new(&self.cfg.memory, txn, gpc_active_groups[gpc].len() >= 2))
             .collect();
-        let mut hbm = Hbm::new(&self.cfg.memory, txn);
+        let hbm = Hbm::new(&self.cfg.memory, txn);
 
+        let n = spec.assignments.len();
+        let mut sms = SmArrays {
+            stream: Vec::with_capacity(n),
+            utlb: Vec::with_capacity(n),
+            group_idx: Vec::with_capacity(n),
+            gpc_idx: Vec::with_capacity(n),
+            last_issue: vec![0; n],
+            issued: vec![0; n],
+            completed: vec![0; n],
+            counted_accesses: vec![0; n],
+            latency_sum: vec![0; n],
+            utlb_hits: vec![0; n],
+            utlb_lookups: vec![0; n],
+        };
+        for (i, a) in spec.assignments.iter().enumerate() {
+            let g = self.topo.group_of(a.smid);
+            sms.stream.push(Stream::new(
+                a.pattern.clone(),
+                spec.seed
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(((a.smid as u64) << 20) | i as u64),
+            ));
+            sms.utlb.push(FullyAssocTlb::new(self.cfg.tlb.utlb_entries));
+            sms.group_idx.push(group_idx_of[g] as u32);
+            sms.gpc_idx.push(self.topo.gpc_of_group(g) as u32);
+        }
+
+        RunState {
+            shift,
+            hit_ps: ns_to_ps(self.cfg.tlb.hit_ns),
+            issue_iv: ns_to_ps(self.cfg.sm.issue_interval_ns),
+            sms,
+            groups,
+            hubs,
+            hbm,
+        }
+    }
+
+    /// Run one benchmark measurement (calendar-queue event core).
+    pub fn run(&self, spec: &MeasurementSpec) -> Measurement {
+        let mut st = self.build_run_state(spec);
+        let outstanding = self.cfg.sm.outstanding as u64;
+        let n_sms = spec.assignments.len();
         let warmup = ((spec.accesses_per_sm as f64) * spec.warmup_fraction) as u64;
-        let mut sms: Vec<SmState> = spec
-            .assignments
-            .iter()
-            .enumerate()
-            .map(|(i, a)| {
-                let g = self.topo.group_of(a.smid);
-                SmState {
-                    stream: Stream::new(
-                        a.pattern.clone(),
-                        spec.seed
-                            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                            .wrapping_add(((a.smid as u64) << 20) | i as u64),
-                    ),
-                    utlb: FullyAssocTlb::new(self.cfg.tlb.utlb_entries),
-                    group_idx: group_idx_of[g],
-                    gpc_idx: self.topo.gpc_of_group(g),
-                    issued: 0,
-                    completed: 0,
-                    warmup,
-                    last_issue: 0,
-                    counted_bytes: 0,
-                    counted_accesses: 0,
-                    latency_sum: 0,
-                    utlb_hits: 0,
-                    utlb_lookups: 0,
-                }
-            })
-            .collect();
+        let issue_iv = st.issue_iv;
 
-        // --- Event loop ---------------------------------------------------
-        // One heap event per access: an access is fully routed through the
-        // translation + data path *at issue time* (the virtual-clock
-        // servers absorb out-of-order arrivals), and the heap only orders
-        // completions; the SM issues its next access when one completes.
-        // This is 2x fewer heap operations than a staged issue/complete
-        // loop with identical results (EXPERIMENTS.md §Perf L3).
-        let issue =
-            |sms: &mut Vec<SmState>,
-             groups: &mut Vec<GroupState>,
-             hubs: &mut Vec<GpcHub>,
-             hbm: &mut Hbm,
-             sm: u32,
-             t: Ps|
-             -> (Ps, Ps) {
-                let s = &mut sms[sm as usize];
-                let t_issue = t.max(s.last_issue + issue_iv);
-                s.last_issue = t_issue;
-                s.issued += 1;
-
-                let addr = s.stream.next_addr();
-                let page = page_of(addr, shift);
-                let line = line_of(addr);
-                let gs = &mut groups[s.group_idx];
-
-                // Translation.
-                s.utlb_lookups += 1;
-                let mut ready = t_issue;
-                if s.utlb.access(page) {
-                    s.utlb_hits += 1;
-                    // Translation cached SM-locally: no group-TLB trip.
-                } else if gs.tlb.lookup(page) {
-                    ready = t_issue + hit_ps;
-                    // Hit-under-miss: if a walk for this page is still in
-                    // flight, the translation is not actually ready until
-                    // it lands.
-                    ready = ready.max(gs.walkers.pending_completion(page).unwrap_or(0));
-                } else {
-                    let done = gs.walkers.walk(t_issue + hit_ps, page);
-                    gs.tlb.insert(page);
-                    ready = done;
-                }
-
-                // Data path.
-                let after_port = gs.port.pass(ready);
-                let after_hub = hubs[s.gpc_idx].pass(after_port);
-                let done = hbm.access(after_hub, line);
-                (done, t_issue)
-            };
-
-        // Heap of (completion, sm, issue_time).
-        let mut heap: BinaryHeap<Reverse<(Ps, u32, Ps)>> = BinaryHeap::with_capacity(
-            spec.assignments.len() * outstanding as usize + 1,
-        );
+        // One queue event per access: `(completion, sm, issue_time)`.
+        let mut q = CalendarQueue::new(n_sms * outstanding as usize + 1);
         // Stagger initial slot issues by the issue interval, slot-major so
         // the shared servers see globally nondecreasing arrival times (the
         // virtual-clock FIFO contract; SM-major seeding would present each
         // later SM's t=0 arrivals *after* the previous SM's t=33 ns ones and
         // conjure a phantom standing backlog on near-saturated servers).
         for k in 0..outstanding.min(spec.accesses_per_sm) {
-            for i in 0..spec.assignments.len() as u32 {
-                let (done, t_issue) =
-                    issue(&mut sms, &mut groups, &mut hubs, &mut hbm, i, k * issue_iv);
+            for i in 0..n_sms as u32 {
+                let (done, t_issue) = st.issue(i, k * issue_iv);
+                q.push((done, i, t_issue));
+            }
+        }
+
+        let mut meas_start: Ps = Ps::MAX;
+        let mut meas_end: Ps = 0;
+        let mut sim_end: Ps = 0;
+
+        while let Some((t, sm, issued)) = q.pop() {
+            let i = sm as usize;
+            st.sms.completed[i] += 1;
+            sim_end = sim_end.max(t);
+            if st.sms.completed[i] > warmup {
+                st.sms.counted_accesses[i] += 1;
+                st.sms.latency_sum[i] += t - issued;
+                st.groups[st.sms.group_idx[i] as usize].counted_accesses += 1;
+                meas_start = meas_start.min(issued);
+                meas_end = meas_end.max(t);
+            }
+            if st.sms.issued[i] < spec.accesses_per_sm {
+                let (done, t_issue) = st.issue(sm, t);
+                q.push((done, sm, t_issue));
+            }
+        }
+
+        aggregate(&st, spec, meas_start, meas_end, sim_end)
+    }
+
+    /// Run many independent measurements in parallel on OS threads with the
+    /// default worker count.  Results are position-matched to `specs` and
+    /// identical to running each spec serially: runs share nothing mutable
+    /// except the warm-TLB cache, whose images are deterministic functions
+    /// of the region sets.
+    pub fn run_many(&self, specs: &[MeasurementSpec]) -> Vec<Measurement> {
+        self.run_many_with(specs, crate::util::threads::default_workers())
+    }
+
+    /// [`Machine::run_many`] with an explicit worker count.
+    pub fn run_many_with(&self, specs: &[MeasurementSpec], workers: usize) -> Vec<Measurement> {
+        crate::util::threads::parallel_map(specs, workers, |spec| self.run(spec))
+    }
+
+    /// The seed's heap-driven event loop, kept verbatim as the reference
+    /// engine: the equivalence tests prove [`Machine::run`] produces
+    /// bit-identical `Measurement`s, and `benches/engine_throughput.rs`
+    /// reports the calendar engine's speedup against it.  Not a production
+    /// path.
+    #[doc(hidden)]
+    pub fn run_reference_heap(&self, spec: &MeasurementSpec) -> Measurement {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        let mut st = self.build_run_state(spec);
+        let outstanding = self.cfg.sm.outstanding as u64;
+        let n_sms = spec.assignments.len();
+        let warmup = ((spec.accesses_per_sm as f64) * spec.warmup_fraction) as u64;
+        let issue_iv = st.issue_iv;
+
+        let mut heap: BinaryHeap<Reverse<(Ps, u32, Ps)>> =
+            BinaryHeap::with_capacity(n_sms * outstanding as usize + 1);
+        for k in 0..outstanding.min(spec.accesses_per_sm) {
+            for i in 0..n_sms as u32 {
+                let (done, t_issue) = st.issue(i, k * issue_iv);
                 heap.push(Reverse((done, i, t_issue)));
             }
         }
@@ -339,75 +471,261 @@ impl Machine {
         let mut sim_end: Ps = 0;
 
         while let Some(Reverse((t, sm, issued))) = heap.pop() {
-            let s = &mut sms[sm as usize];
-            s.completed += 1;
+            let i = sm as usize;
+            st.sms.completed[i] += 1;
             sim_end = sim_end.max(t);
-            if s.completed > s.warmup {
-                s.counted_bytes += txn;
-                s.counted_accesses += 1;
-                s.latency_sum += t - issued;
-                groups[s.group_idx].counted_bytes += txn;
-                groups[s.group_idx].counted_accesses += 1;
+            if st.sms.completed[i] > warmup {
+                st.sms.counted_accesses[i] += 1;
+                st.sms.latency_sum[i] += t - issued;
+                st.groups[st.sms.group_idx[i] as usize].counted_accesses += 1;
                 meas_start = meas_start.min(issued);
                 meas_end = meas_end.max(t);
             }
-            if s.issued < spec.accesses_per_sm {
-                let (done, t_issue) = issue(&mut sms, &mut groups, &mut hubs, &mut hbm, sm, t);
+            if st.sms.issued[i] < spec.accesses_per_sm {
+                let (done, t_issue) = st.issue(sm, t);
                 heap.push(Reverse((done, sm, t_issue)));
             }
         }
 
-        // --- Aggregate ----------------------------------------------------
-        let window = meas_end.saturating_sub(meas_start).max(1);
-        let counted_bytes: u64 = sms.iter().map(|s| s.counted_bytes).sum();
-        let counted_accesses: u64 = sms.iter().map(|s| s.counted_accesses).sum();
-        let total_accesses: u64 = sms.iter().map(|s| s.issued).sum();
-        let latency_sum: Ps = sms.iter().map(|s| s.latency_sum).sum();
-        let utlb_hits: u64 = sms.iter().map(|s| s.utlb_hits).sum();
-        let utlb_lookups: u64 = sms.iter().map(|s| s.utlb_lookups).sum();
-        let window_s = window as f64 * 1e-12;
-        let gbps = counted_bytes as f64 / 1e9 / window_s;
+        aggregate(&st, spec, meas_start, meas_end, sim_end)
+    }
+}
 
-        let tlb_hits: u64 = groups.iter().map(|g| g.tlb.hits()).sum();
-        let tlb_misses: u64 = groups.iter().map(|g| g.tlb.misses()).sum();
-        let per_group = groups
-            .iter()
-            .map(|g| GroupStats {
-                group: g.group,
-                active_sms: g.active_sms,
-                accesses: g.counted_accesses,
-                tlb_hits: g.tlb.hits(),
-                tlb_misses: g.tlb.misses(),
-                walks: g.walkers.walks(),
-                merged_walks: g.walkers.merged(),
-                gbps: g.counted_bytes as f64 / 1e9 / window_s,
+/// Fold a finished run into the reported [`Measurement`].  Counted bytes
+/// are exactly `txn * counted_accesses` (every counted access moves one
+/// transaction), so no per-SM byte counters are kept.
+fn aggregate(
+    st: &RunState,
+    spec: &MeasurementSpec,
+    meas_start: Ps,
+    meas_end: Ps,
+    sim_end: Ps,
+) -> Measurement {
+    let txn = spec.txn_bytes;
+    let window = meas_end.saturating_sub(meas_start).max(1);
+    let counted_accesses: u64 = st.sms.counted_accesses.iter().sum();
+    let counted_bytes: u64 = counted_accesses * txn;
+    let total_accesses: u64 = st.sms.issued.iter().sum();
+    let latency_sum: Ps = st.sms.latency_sum.iter().sum();
+    let utlb_hits: u64 = st.sms.utlb_hits.iter().sum();
+    let utlb_lookups: u64 = st.sms.utlb_lookups.iter().sum();
+    let window_s = window as f64 * 1e-12;
+    let gbps = counted_bytes as f64 / 1e9 / window_s;
+
+    let tlb_hits: u64 = st.groups.iter().map(|g| g.tlb.hits()).sum();
+    let tlb_misses: u64 = st.groups.iter().map(|g| g.tlb.misses()).sum();
+    let per_group = st
+        .groups
+        .iter()
+        .map(|g| GroupStats {
+            group: g.group,
+            active_sms: g.active_sms,
+            accesses: g.counted_accesses,
+            tlb_hits: g.tlb.hits(),
+            tlb_misses: g.tlb.misses(),
+            walks: g.walkers.walks(),
+            merged_walks: g.walkers.merged(),
+            gbps: (g.counted_accesses * txn) as f64 / 1e9 / window_s,
+        })
+        .collect();
+
+    Measurement {
+        gbps,
+        window_ns: ps_to_ns(window),
+        sim_ns: ps_to_ns(sim_end),
+        counted_accesses,
+        total_accesses,
+        avg_latency_ns: if counted_accesses > 0 {
+            ps_to_ns(latency_sum) / counted_accesses as f64
+        } else {
+            0.0
+        },
+        tlb_hit_rate: if tlb_hits + tlb_misses > 0 {
+            tlb_hits as f64 / (tlb_hits + tlb_misses) as f64
+        } else {
+            1.0
+        },
+        utlb_hit_rate: if utlb_lookups > 0 {
+            utlb_hits as f64 / utlb_lookups as f64
+        } else {
+            0.0
+        },
+        hbm_utilization: st.hbm.busy_ps() as f64
+            / (st.hbm.channel_count() as f64 * sim_end.max(1) as f64),
+        per_group,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, GIB};
+    use crate::sim::pages::MemRegion;
+    use crate::util::prop;
+
+    fn tiny() -> Machine {
+        Machine::new(MachineConfig::tiny_test()).unwrap()
+    }
+
+    /// Exhaustive bit-identity check between two measurements.
+    fn assert_bit_identical(a: &Measurement, b: &Measurement, what: &str) {
+        assert_eq!(a.gbps.to_bits(), b.gbps.to_bits(), "{what}: gbps");
+        assert_eq!(a.window_ns.to_bits(), b.window_ns.to_bits(), "{what}: window");
+        assert_eq!(a.sim_ns.to_bits(), b.sim_ns.to_bits(), "{what}: sim_ns");
+        assert_eq!(a.counted_accesses, b.counted_accesses, "{what}: counted");
+        assert_eq!(a.total_accesses, b.total_accesses, "{what}: total");
+        assert_eq!(
+            a.avg_latency_ns.to_bits(),
+            b.avg_latency_ns.to_bits(),
+            "{what}: latency"
+        );
+        assert_eq!(
+            a.tlb_hit_rate.to_bits(),
+            b.tlb_hit_rate.to_bits(),
+            "{what}: tlb_hit_rate"
+        );
+        assert_eq!(
+            a.utlb_hit_rate.to_bits(),
+            b.utlb_hit_rate.to_bits(),
+            "{what}: utlb_hit_rate"
+        );
+        assert_eq!(
+            a.hbm_utilization.to_bits(),
+            b.hbm_utilization.to_bits(),
+            "{what}: hbm_utilization"
+        );
+        assert_eq!(a.per_group.len(), b.per_group.len(), "{what}: group count");
+        for (ga, gb) in a.per_group.iter().zip(&b.per_group) {
+            assert_eq!(ga.group, gb.group, "{what}: group id");
+            assert_eq!(ga.active_sms, gb.active_sms, "{what}: active_sms");
+            assert_eq!(ga.accesses, gb.accesses, "{what}: group accesses");
+            assert_eq!(ga.tlb_hits, gb.tlb_hits, "{what}: group hits");
+            assert_eq!(ga.tlb_misses, gb.tlb_misses, "{what}: group misses");
+            assert_eq!(ga.walks, gb.walks, "{what}: walks");
+            assert_eq!(ga.merged_walks, gb.merged_walks, "{what}: merged");
+            assert_eq!(ga.gbps.to_bits(), gb.gbps.to_bits(), "{what}: group gbps");
+        }
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_resident_region() {
+        let m = tiny();
+        let spec = MeasurementSpec::uniform_all(
+            &m.topology().all_sms(),
+            Pattern::Uniform(MemRegion::new(0, 8 << 20)),
+            3_000,
+            42,
+        );
+        assert_bit_identical(&m.run(&spec), &m.run_reference_heap(&spec), "resident");
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_thrash_region() {
+        // Past reach: walker backlogs push completions far beyond the
+        // calendar ring horizon, exercising the overflow path.
+        let m = tiny();
+        let spec = MeasurementSpec::uniform_all(
+            &m.topology().all_sms(),
+            Pattern::Uniform(MemRegion::whole(64 << 20)),
+            3_000,
+            7,
+        );
+        assert_bit_identical(&m.run(&spec), &m.run_reference_heap(&spec), "thrash");
+    }
+
+    #[test]
+    fn property_calendar_engine_is_bit_identical_to_heap() {
+        // Seeded random specs over the tiny machine: SM subsets, pattern
+        // shapes, transaction sizes, warmup fractions.
+        let m = tiny();
+        let total = m.config().memory.total_bytes;
+        prop::check("calendar-vs-heap", 25, |g| {
+            let n_sms = g.usize(1, m.topology().sm_count());
+            let mut sms = m.topology().all_sms();
+            g.shuffle(&mut sms);
+            sms.truncate(n_sms);
+            let assignments: Vec<SmAssignment> = sms
+                .iter()
+                .map(|&smid| {
+                    let base = g.u64(0, total / 2) & !0xFFFF;
+                    let len = g.u64(1 << 20, total - base);
+                    let region = MemRegion::new(base, len);
+                    let pattern = match g.usize(0, 3) {
+                        0 => Pattern::Uniform(region),
+                        1 => Pattern::Sequential(region),
+                        2 => Pattern::Strided {
+                            region,
+                            stride_lines: g.u64(1, 1024),
+                        },
+                        _ => Pattern::Zipf {
+                            region,
+                            theta: g.f64(0.5, 0.99),
+                        },
+                    };
+                    SmAssignment { smid, pattern }
+                })
+                .collect();
+            let spec = MeasurementSpec {
+                assignments,
+                accesses_per_sm: g.u64(100, 2_500),
+                warmup_fraction: g.f64(0.0, 0.5),
+                txn_bytes: *g.pick(&[128u64, 256, 512]),
+                seed: g.u64(0, u64::MAX - 1),
+            };
+            assert_bit_identical(
+                &m.run(&spec),
+                &m.run_reference_heap(&spec),
+                &format!("case seed {}", g.case_seed),
+            );
+        });
+    }
+
+    #[test]
+    fn run_many_matches_serial_runs() {
+        let m = tiny();
+        let specs: Vec<MeasurementSpec> = (0..8)
+            .map(|k| {
+                MeasurementSpec::uniform_all(
+                    &m.topology().all_sms(),
+                    Pattern::Uniform(MemRegion::new(0, (8 + k) << 20)),
+                    1_500,
+                    100 + k,
+                )
             })
             .collect();
-
-        Measurement {
-            gbps,
-            window_ns: ps_to_ns(window),
-            sim_ns: ps_to_ns(sim_end),
-            counted_accesses,
-            total_accesses,
-            avg_latency_ns: if counted_accesses > 0 {
-                ps_to_ns(latency_sum) / counted_accesses as f64
-            } else {
-                0.0
-            },
-            tlb_hit_rate: if tlb_hits + tlb_misses > 0 {
-                tlb_hits as f64 / (tlb_hits + tlb_misses) as f64
-            } else {
-                1.0
-            },
-            utlb_hit_rate: if utlb_lookups > 0 {
-                utlb_hits as f64 / utlb_lookups as f64
-            } else {
-                0.0
-            },
-            hbm_utilization: hbm.busy_ps() as f64
-                / (hbm.channel_count() as f64 * sim_end.max(1) as f64),
-            per_group,
+        let parallel = m.run_many_with(&specs, 4);
+        assert_eq!(parallel.len(), specs.len());
+        for (spec, got) in specs.iter().zip(&parallel) {
+            assert_bit_identical(got, &m.run(spec), "run_many");
         }
+    }
+
+    #[test]
+    fn warm_cache_is_shared_across_clones() {
+        let m = tiny();
+        let spec = MeasurementSpec::uniform_all(
+            &m.topology().all_sms(),
+            Pattern::Uniform(MemRegion::new(0, 8 << 20)),
+            500,
+            1,
+        );
+        let a = m.run(&spec);
+        let m2 = m.clone();
+        let b = m2.run(&spec);
+        assert_bit_identical(&a, &b, "clone");
+    }
+
+    #[test]
+    fn full_a100_spot_check_calendar_vs_heap() {
+        // One spec on the full-size machine: 108 SMs, 14 groups, thrash
+        // regime (maximum event-queue pressure).
+        let m = Machine::new(MachineConfig::a100_80gb()).unwrap();
+        let spec = MeasurementSpec::uniform_all(
+            &m.topology().all_sms(),
+            Pattern::Uniform(MemRegion::whole(80 * GIB)),
+            800,
+            3,
+        );
+        assert_bit_identical(&m.run(&spec), &m.run_reference_heap(&spec), "a100");
     }
 }

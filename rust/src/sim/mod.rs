@@ -13,6 +13,8 @@
 //! * [`port`] / [`hbm`] — per-group memory ports, per-GPC hubs, and
 //!   line-striped HBM channels.
 //! * [`access`] — the benchmark's address streams.
+//! * [`calendar`] — the indexed calendar queue ordering completion events
+//!   (O(1) amortized; the heap it replaced survives as the test oracle).
 //! * [`engine`] — the event loop tying it together; produces
 //!   [`stats::Measurement`]s with throughput in the paper's GB/s units.
 //! * [`analytic`] — closed-form queueing predictions cross-validating the
@@ -20,6 +22,7 @@
 
 pub mod access;
 pub mod analytic;
+pub mod calendar;
 pub mod engine;
 pub mod hbm;
 pub mod nvlink;

@@ -8,17 +8,129 @@
 //!
 //! The walker pool's service rate (k / walk_ns) is the ceiling that the
 //! paper's Fig-1 cliff collapses onto once the working set exceeds reach.
-
-use std::collections::HashMap;
+//!
+//! The pending table is an open-addressed (linear-probe, fibonacci-hashed)
+//! map rather than `std::collections::HashMap`: in thrash mode every
+//! access walks, so this lookup sits on the engine's innermost path and
+//! SipHash + bucket-chasing dominated it (EXPERIMENTS.md §Perf L3).  The
+//! table replicates the `HashMap` semantics *exactly* — including the lazy
+//! sweep schedule — so the engine's bit-identical-measurement contract
+//! holds (see the reference-engine equivalence tests in
+//! [`crate::sim::engine`]).
 
 use crate::sim::queue::{MultiServer, Ps};
+
+/// Sentinel for an empty slot; device pages are far below `u64::MAX`.
+const EMPTY_KEY: u64 = u64::MAX;
+
+/// Fibonacci multiplier (2^64 / phi) — one multiply diffuses page numbers
+/// whose low bits are correlated (contiguous regions).
+const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Open-addressed `page -> completion` map for in-flight walks.
+///
+/// Linear probing, power-of-two capacity, load factor <= 7/8.  Removal
+/// only ever happens wholesale via [`PendingTable::retain_after`] (the
+/// sweep), which rebuilds in place — so no tombstones are needed.
+#[derive(Debug, Clone)]
+struct PendingTable {
+    keys: Vec<u64>,
+    vals: Vec<Ps>,
+    /// `capacity - 1` (capacity is a power of two).
+    mask: usize,
+    /// `64 - log2(capacity)`: index = high bits of the hash product.
+    hash_shift: u32,
+    len: usize,
+}
+
+impl PendingTable {
+    fn new() -> Self {
+        Self::with_pow2_capacity(128)
+    }
+
+    fn with_pow2_capacity(cap: usize) -> Self {
+        debug_assert!(cap.is_power_of_two() && cap >= 2);
+        Self {
+            keys: vec![EMPTY_KEY; cap],
+            vals: vec![0; cap],
+            mask: cap - 1,
+            hash_shift: 64 - cap.trailing_zeros(),
+            len: 0,
+        }
+    }
+
+    /// Slot holding `page`, or the empty slot where it would be inserted.
+    #[inline]
+    fn probe(&self, page: u64) -> usize {
+        let mut i = (page.wrapping_mul(FIB) >> self.hash_shift) as usize;
+        loop {
+            let k = self.keys[i];
+            if k == page || k == EMPTY_KEY {
+                return i;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    fn get(&self, page: u64) -> Option<Ps> {
+        let i = self.probe(page);
+        if self.keys[i] == page {
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, page: u64, done: Ps) {
+        if (self.len + 1) * 8 > self.keys.len() * 7 {
+            self.grow();
+        }
+        let i = self.probe(page);
+        if self.keys[i] != page {
+            self.keys[i] = page;
+            self.len += 1;
+        }
+        self.vals[i] = done;
+    }
+
+    fn grow(&mut self) {
+        let bigger = Self::with_pow2_capacity(self.keys.len() * 2);
+        let old = std::mem::replace(self, bigger);
+        for (k, v) in old.keys.into_iter().zip(old.vals) {
+            if k != EMPTY_KEY {
+                self.insert(k, v);
+            }
+        }
+    }
+
+    /// Keep only entries whose completion is strictly after `t` (the
+    /// sweep's predicate), rebuilding in place.
+    fn retain_after(&mut self, t: Ps) {
+        let cap = self.keys.len();
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY_KEY; cap]);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.vals = vec![0; cap];
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY_KEY && v > t {
+                self.insert(k, v);
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct WalkerPool {
     pool: MultiServer,
     walk_svc: Ps,
     /// page -> completion time of the in-flight walk for that page.
-    pending: HashMap<u64, Ps>,
+    pending: PendingTable,
     walks: u64,
     merged: u64,
     /// Lazy cleanup watermark: drop stale `pending` entries when it grows.
@@ -30,7 +142,7 @@ impl WalkerPool {
         Self {
             pool: MultiServer::new(walkers),
             walk_svc,
-            pending: HashMap::new(),
+            pending: PendingTable::new(),
             walks: 0,
             merged: 0,
             sweep_len: 64,
@@ -41,7 +153,7 @@ impl WalkerPool {
     /// available.  Either merges onto an in-flight walk or starts a new one.
     #[inline]
     pub fn walk(&mut self, t: Ps, page: u64) -> Ps {
-        if let Some(&done) = self.pending.get(&page) {
+        if let Some(done) = self.pending.get(page) {
             if done > t {
                 self.merged += 1;
                 return done;
@@ -52,7 +164,7 @@ impl WalkerPool {
         self.pending.insert(page, done);
         self.walks += 1;
         if self.pending.len() > self.sweep_len {
-            self.pending.retain(|_, &mut d| d > t);
+            self.pending.retain_after(t);
             self.sweep_len = (self.pending.len() * 2).max(64);
         }
         done
@@ -63,7 +175,7 @@ impl WalkerPool {
     /// a TLB hit on a just-installed entry must still wait for the walk.
     #[inline]
     pub fn pending_completion(&self, page: u64) -> Option<Ps> {
-        self.pending.get(&page).copied()
+        self.pending.get(page)
     }
 
     /// Completed + in-flight real walks (merges excluded).
@@ -152,5 +264,51 @@ mod tests {
         // All walks complete long before the last arrival; sweep must have
         // kept the map bounded.
         assert!(w.pending.len() < 1000, "pending = {}", w.pending.len());
+    }
+
+    #[test]
+    fn pending_table_matches_hashmap_reference() {
+        // Drive the table and a std HashMap through an identical random
+        // insert/overwrite/sweep schedule; state must agree at every step.
+        use crate::util::rng::Rng;
+        use std::collections::HashMap;
+        let mut t = PendingTable::new();
+        let mut h: HashMap<u64, Ps> = HashMap::new();
+        let mut rng = Rng::seed_from_u64(11);
+        for step in 0..20_000u64 {
+            let page = rng.gen_range(512);
+            match rng.gen_range(10) {
+                0..=5 => {
+                    let v = step + 1;
+                    t.insert(page, v);
+                    h.insert(page, v);
+                }
+                6..=8 => {
+                    assert_eq!(t.get(page), h.get(&page).copied(), "step {step}");
+                }
+                _ => {
+                    let cut = step / 2;
+                    t.retain_after(cut);
+                    h.retain(|_, v| *v > cut);
+                }
+            }
+            assert_eq!(t.len(), h.len(), "step {step}");
+        }
+        for (k, v) in &h {
+            assert_eq!(t.get(*k), Some(*v));
+        }
+    }
+
+    #[test]
+    fn pending_table_grows_past_initial_capacity() {
+        let mut t = PendingTable::new();
+        for p in 0..10_000u64 {
+            t.insert(p, p + 1);
+        }
+        assert_eq!(t.len(), 10_000);
+        for p in 0..10_000u64 {
+            assert_eq!(t.get(p), Some(p + 1));
+        }
+        assert_eq!(t.get(10_001), None);
     }
 }

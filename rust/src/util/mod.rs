@@ -1,9 +1,10 @@
 //! Offline substrates.
 //!
-//! This build runs with no network registry: only the crates vendored in
-//! the image (xla, anyhow, thiserror) are available.  The small libraries a
-//! project like this would normally pull from crates.io are implemented
-//! here instead (DESIGN.md "Offline substrates"):
+//! This build runs with no network registry: the only "external" crates
+//! are vendored in-tree under `rust/vendor/` (a minimal `anyhow`
+//! substitute and an error-returning `xla`/PJRT stub).  The small
+//! libraries a project like this would normally pull from crates.io are
+//! implemented here instead (DESIGN.md "Offline substrates"):
 //!
 //! * [`rng`]      — deterministic xoshiro256** PRNG (for `rand`)
 //! * [`json`]     — JSON emit + parse (for `serde_json`)

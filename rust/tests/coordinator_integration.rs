@@ -1,5 +1,9 @@
 //! Integration: the full serving stack (batcher -> dispatcher -> router ->
 //! per-group PJRT workers -> merge) over AOT artifacts.
+//!
+//! Gated behind the `pjrt` feature: it needs the real `xla` crate (the
+//! offline build links an error-returning stub) plus `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

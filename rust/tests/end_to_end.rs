@@ -5,6 +5,10 @@
 //! L3 -> PJRT -> AOT-kernel stack, verify every spot-checked row, replay a
 //! recorded trace byte-identically, and run a short training loop whose
 //! loss must fall.  Requires `make artifacts`.
+//!
+//! Gated behind the `pjrt` feature: it needs the real `xla` crate (the
+//! offline build links an error-returning stub) plus `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
