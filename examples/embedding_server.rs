@@ -27,6 +27,7 @@ use a100win::coordinator::{
 };
 use a100win::experiments::common::{ground_truth_map, run_policy};
 use a100win::runtime::Runtime;
+use a100win::service::Service;
 use a100win::sim::Machine;
 use a100win::workload::{synth::Distribution, RequestGen, WorkloadSpec};
 
@@ -96,7 +97,14 @@ fn serve_one(
     let mut cfg = ServerConfig::new(artifacts.to_path_buf());
     cfg.policy = policy;
     cfg.batcher = BatcherConfig::default();
-    let server = Arc::new(EmbeddingServer::start(cfg, map, plan, table.clone())?);
+    // The PJRT server behind the ticketed facade: clients share the
+    // Service (cheap clone), submit Arc'd indices, redeem tickets.
+    let service = Service::new(Arc::new(EmbeddingServer::start(
+        cfg,
+        map,
+        plan,
+        table.clone(),
+    )?));
 
     let clients = 6;
     let requests_per_client = 40;
@@ -105,7 +113,8 @@ fn serve_one(
     let checked: u64 = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..clients {
-            let server = Arc::clone(&server);
+            let service = service.clone();
+            let table = table.clone();
             handles.push(s.spawn(move || {
                 let dist = if c % 2 == 0 {
                     Distribution::Uniform
@@ -113,18 +122,19 @@ fn serve_one(
                     Distribution::Zipf { theta: 0.99 }
                 };
                 let mut gen = RequestGen::new(WorkloadSpec {
-                    total_rows: server.table().rows,
+                    total_rows: table.rows,
                     distribution: dist,
                     request_rows: (rows_per_request, rows_per_request),
                     seed: c as u64,
                 });
                 let mut checked = 0u64;
                 for _ in 0..requests_per_client {
-                    let req = gen.next_request();
-                    let out = server.lookup(req.clone()).expect("lookup");
+                    let req = Arc::new(gen.next_request());
+                    let ticket = service.submit(Arc::clone(&req), None).expect("submit");
+                    let out = ticket.wait().expect("lookup");
                     // Spot-check correctness on every 97th row.
                     for (i, &r) in req.iter().enumerate().step_by(97) {
-                        assert_eq!(out[i * server.table().d], server.table().expected(r, 0));
+                        assert_eq!(out[i * table.d], table.expected(r, 0));
                         checked += 1;
                     }
                 }
@@ -134,7 +144,7 @@ fn serve_one(
         handles.into_iter().map(|h| h.join().unwrap()).sum()
     });
     let dt = t.elapsed();
-    let m = server.metrics();
+    let m = service.metrics();
     println!("policy {policy}:");
     println!(
         "  {} requests x {rows_per_request} rows from {clients} clients in {:.2}s \
@@ -145,6 +155,7 @@ fn serve_one(
         m.rows as f64 / dt.as_secs_f64() / 1e6,
     );
     println!("  {}\n", m.report());
+    service.shutdown();
     Ok(())
 }
 

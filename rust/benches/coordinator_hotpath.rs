@@ -77,9 +77,10 @@ fn bench_batcher() {
         max_wait: Duration::from_millis(10),
         max_pending: 1 << 20,
     });
+    let payload: std::sync::Arc<Vec<u64>> = std::sync::Arc::new(vec![7; 64]);
     benchkit::bench("batcher_submit_drain_64x64", 5, 50, || {
         for i in 0..64u32 {
-            b.try_submit(vec![7; 64], i).unwrap();
+            b.try_submit(std::sync::Arc::clone(&payload), None, i).unwrap();
         }
         black_box(b.next_batch().unwrap());
     });
@@ -111,12 +112,12 @@ fn bench_server() {
     let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, 1024, 3));
     // Warm the executable caches.
     for _ in 0..3 {
-        server.lookup(gen.next_request()).unwrap();
+        server.lookup(std::sync::Arc::new(gen.next_request())).unwrap();
     }
     let iters = 100;
     let t = Instant::now();
     for _ in 0..iters {
-        black_box(server.lookup(gen.next_request()).unwrap());
+        black_box(server.lookup(std::sync::Arc::new(gen.next_request())).unwrap());
     }
     let dt = t.elapsed();
     let m = server.metrics();
@@ -160,11 +161,13 @@ fn bench_latency_curve() {
         independent: true,
         card_id: "curve".into(),
     };
-    let server = std::sync::Arc::new(EmbeddingServer::start(cfg, &map, plan, table).unwrap());
+    let service = a100win::service::Service::new(std::sync::Arc::new(
+        EmbeddingServer::start(cfg, &map, plan, table).unwrap(),
+    ));
     // Warm the executable caches.
     let mut warm = RequestGen::new(WorkloadSpec::uniform(rows, 256, 1));
     for _ in 0..3 {
-        server.lookup(warm.next_request()).unwrap();
+        service.lookup(std::sync::Arc::new(warm.next_request())).unwrap();
     }
 
     use a100win::workload::{drive, OpenLoopConfig};
@@ -178,7 +181,7 @@ fn bench_latency_curve() {
     println!("\n# Open-loop latency-throughput curve (256-row lookups)");
     for offered in [100.0f64, 400.0, 800.0, 1600.0, 3200.0] {
         let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, 256, 42));
-        let point = drive(&server, &mut gen, offered, &OpenLoopConfig::default());
+        let point = drive(&service, &mut gen, offered, &OpenLoopConfig::default());
         t.row(&[
             format!("{offered:.0}"),
             format!("{:.0}", point.achieved_rps),

@@ -8,16 +8,18 @@
 //! `try_submit` too).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One enqueued request: global row indices + an opaque ticket the server
-/// uses to respond.
+/// One enqueued request: shared global row indices + an opaque ticket the
+/// server uses to respond + an optional completion deadline the dispatcher
+/// may cull on.  Rows travel by `Arc` so enqueueing never copies indices.
 #[derive(Debug)]
 pub struct PendingRequest<T> {
-    pub rows: Vec<u64>,
+    pub rows: Arc<Vec<u64>>,
     pub ticket: T,
     pub enqueued: Instant,
+    pub deadline: Option<Instant>,
 }
 
 /// A formed batch.
@@ -82,7 +84,12 @@ impl<T> Batcher<T> {
 
     /// Enqueue a request, blocking while the queue is full.  Returns Err if
     /// the batcher is closed.
-    pub fn submit(&self, rows: Vec<u64>, ticket: T) -> Result<(), T> {
+    pub fn submit(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Instant>,
+        ticket: T,
+    ) -> Result<(), T> {
         let mut st = self.state.lock().unwrap();
         while st.queue.len() >= self.cfg.max_pending && !st.closed {
             st = self.cv.wait(st).unwrap();
@@ -95,13 +102,19 @@ impl<T> Batcher<T> {
             rows,
             ticket,
             enqueued: Instant::now(),
+            deadline,
         });
         self.cv.notify_all();
         Ok(())
     }
 
     /// Non-blocking submit; Err(ticket) when full or closed.
-    pub fn try_submit(&self, rows: Vec<u64>, ticket: T) -> Result<(), T> {
+    pub fn try_submit(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Instant>,
+        ticket: T,
+    ) -> Result<(), T> {
         let mut st = self.state.lock().unwrap();
         if st.closed || st.queue.len() >= self.cfg.max_pending {
             return Err(ticket);
@@ -111,6 +124,7 @@ impl<T> Batcher<T> {
             rows,
             ticket,
             enqueued: Instant::now(),
+            deadline,
         });
         self.cv.notify_all();
         Ok(())
@@ -188,11 +202,15 @@ mod tests {
         }
     }
 
+    fn rows(v: Vec<u64>) -> Arc<Vec<u64>> {
+        Arc::new(v)
+    }
+
     #[test]
     fn size_trigger_forms_batch() {
         let b: Batcher<u32> = Batcher::new(cfg(8, 10_000, 100));
-        b.submit(vec![1, 2, 3, 4], 0).unwrap();
-        b.submit(vec![5, 6, 7, 8], 1).unwrap();
+        b.submit(rows(vec![1, 2, 3, 4]), None, 0).unwrap();
+        b.submit(rows(vec![5, 6, 7, 8]), None, 1).unwrap();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 2);
         assert_eq!(batch.total_rows(), 8);
@@ -201,7 +219,7 @@ mod tests {
     #[test]
     fn deadline_trigger_fires_for_small_batch() {
         let b: Batcher<u32> = Batcher::new(cfg(1_000_000, 5, 100));
-        b.submit(vec![1, 2], 7).unwrap();
+        b.submit(rows(vec![1, 2]), None, 7).unwrap();
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
@@ -213,7 +231,7 @@ mod tests {
     fn batch_respects_row_cap() {
         let b: Batcher<u32> = Batcher::new(cfg(6, 10_000, 100));
         for i in 0..4 {
-            b.submit(vec![0, 1, 2], i).unwrap(); // 3 rows each
+            b.submit(rows(vec![0, 1, 2]), None, i).unwrap(); // 3 rows each
         }
         let batch = b.next_batch().unwrap();
         // 3+3=6 hits the cap exactly; third request stays queued.
@@ -224,7 +242,7 @@ mod tests {
     #[test]
     fn oversized_request_passes_whole() {
         let b: Batcher<u32> = Batcher::new(cfg(4, 10_000, 100));
-        b.submit((0..10).collect(), 0).unwrap();
+        b.submit(rows((0..10).collect()), None, 0).unwrap();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.total_rows(), 10);
@@ -233,9 +251,9 @@ mod tests {
     #[test]
     fn close_drains_then_none() {
         let b: Batcher<u32> = Batcher::new(cfg(1_000, 10_000, 100));
-        b.submit(vec![1], 0).unwrap();
+        b.submit(rows(vec![1]), None, 0).unwrap();
         b.close();
-        assert!(b.submit(vec![2], 1).is_err());
+        assert!(b.submit(rows(vec![2]), None, 1).is_err());
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert!(b.next_batch().is_none());
@@ -244,9 +262,20 @@ mod tests {
     #[test]
     fn try_submit_backpressure() {
         let b: Batcher<u32> = Batcher::new(cfg(1_000, 10_000, 2));
-        assert!(b.try_submit(vec![1], 0).is_ok());
-        assert!(b.try_submit(vec![2], 1).is_ok());
-        assert!(b.try_submit(vec![3], 2).is_err()); // full
+        assert!(b.try_submit(rows(vec![1]), None, 0).is_ok());
+        assert!(b.try_submit(rows(vec![2]), None, 1).is_ok());
+        assert!(b.try_submit(rows(vec![3]), None, 2).is_err()); // full
+    }
+
+    #[test]
+    fn deadline_rides_along() {
+        let b: Batcher<u32> = Batcher::new(cfg(8, 10_000, 100));
+        let dl = Instant::now() + Duration::from_secs(5);
+        b.submit(rows(vec![1]), Some(dl), 0).unwrap();
+        b.submit(rows(vec![2, 3, 4, 5, 6, 7, 8]), None, 1).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests[0].deadline, Some(dl));
+        assert_eq!(batch.requests[1].deadline, None);
     }
 
     #[test]
@@ -257,7 +286,7 @@ mod tests {
             let b = Arc::clone(&b);
             std::thread::spawn(move || {
                 for i in 0..n_requests {
-                    b.submit(vec![i as u64; 4], i).unwrap();
+                    b.submit(rows(vec![i as u64; 4]), None, i).unwrap();
                 }
                 b.close();
             })

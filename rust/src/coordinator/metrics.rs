@@ -66,7 +66,10 @@ impl LatencyHistogram {
     }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics.  One registry per backend; the service
+/// facade, sessions, and tickets all record into the backend's registry so
+/// admission-control outcomes (`admission_rejected` / `throttled`) and
+/// deadline expiries (`expired`) show up next to the serving counters.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -74,7 +77,18 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests refused for invalid input (row index out of table).
     pub rejected: AtomicU64,
+    /// Requests shed by session admission control (over the in-flight
+    /// budget under the Reject overload policy) — kept separate from
+    /// `rejected` so overload is distinguishable from client bugs.
+    pub admission_rejected: AtomicU64,
+    /// Tickets whose deadline passed before the result arrived (counted at
+    /// `Ticket::wait` timeout or dispatcher-side culling).
+    pub expired: AtomicU64,
+    /// Session submissions that blocked on the in-flight budget (Queue
+    /// overload policy).
+    pub throttled: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -91,6 +105,9 @@ impl Metrics {
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            admission_rejected: self.admission_rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            throttled: self.throttled.load(Ordering::Relaxed),
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.quantile_us(0.50),
             p99_latency_us: self.latency.quantile_us(0.99),
@@ -108,6 +125,9 @@ pub struct MetricsSnapshot {
     pub padded_rows: u64,
     pub errors: u64,
     pub rejected: u64,
+    pub admission_rejected: u64,
+    pub expired: u64,
+    pub throttled: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -118,13 +138,16 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} rows={} batches={} padded={} errors={} rejected={} \
-             latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
+             shed={} expired={} throttled={} latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
             self.requests,
             self.rows,
             self.batches,
             self.padded_rows,
             self.errors,
             self.rejected,
+            self.admission_rejected,
+            self.expired,
+            self.throttled,
             self.mean_latency_us,
             self.p50_latency_us,
             self.p99_latency_us,

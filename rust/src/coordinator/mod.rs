@@ -1,21 +1,28 @@
-//! L3 coordinator: the paper's result productized as a serving layer.
+//! L3 coordinator: the serving *mechanics* under the facade.
 //!
 //! The paper shows that full-speed random access to all 80 GB requires
 //! confining each SM resource group to a window smaller than its 64 GB TLB
-//! reach.  This module turns that into a deployable system for the workload
-//! the paper motivates (random cache-line lookups over a huge table):
+//! reach.  This module holds the machinery that enforces that for the
+//! workload the paper motivates (random cache-line lookups over a huge
+//! table).  **The public entry point is [`crate::service::Service`]** — the
+//! async ticketed facade documented in `service/`; what lives here are its
+//! moving parts:
 //!
 //! * [`chunks`]    — slice the table into windows <= probed reach.
 //! * [`placement`] — pin groups to windows (the paper's three arms:
 //!                   Naive / SmToChunk / GroupToChunk).
 //! * [`router`]    — split requests by owning window, merge in order.
 //! * [`batcher`]   — dynamic batching with deadline + backpressure.
-//! * [`server`]    — per-group worker threads executing AOT gather
-//!                   kernels via PJRT ([`crate::runtime`]).
+//! * [`server`]    — the PJRT [`crate::service::Backend`]: per-group
+//!                   worker threads executing AOT gather kernels via
+//!                   [`crate::runtime`] (the hermetic sibling is
+//!                   [`crate::service::SimBackend`]).
 //! * [`state`]     — assignment epochs, group health, rebalancing.
 //! * [`cluster`]   — fleet-level sharding across several probed cards
-//!                   (maps vary card to card, per the paper).
-//! * [`metrics`]   — counters + latency histogram.
+//!                   (maps vary card to card, per the paper); served
+//!                   through [`crate::service::FleetService`].
+//! * [`metrics`]   — counters + latency histogram, shared by backends,
+//!                   sessions, and tickets.
 
 pub mod batcher;
 pub mod chunks;

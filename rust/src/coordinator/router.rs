@@ -150,10 +150,7 @@ pub fn merge_rows(split: &SplitBatch, parts: &[Vec<f32>], d: usize) -> Vec<f32> 
             sb.local_rows.len() * d,
             "sub-batch result size mismatch"
         );
-        for (k, &pos) in sb.positions.iter().enumerate() {
-            let src = &rows[k * d..(k + 1) * d];
-            out[pos as usize * d..(pos as usize + 1) * d].copy_from_slice(src);
-        }
+        crate::service::backend::scatter_rows(&mut out, &sb.positions, rows, d);
     }
     out
 }

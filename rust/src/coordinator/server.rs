@@ -1,12 +1,13 @@
 //! The embedding-lookup server: the paper's group-to-chunk placement as a
-//! serving system.
+//! serving system, and the PJRT implementation of the serving facade's
+//! [`Backend`] trait.
 //!
 //! Topology (one process, vLLM-router-like):
 //!
 //! ```text
-//! clients ──lookup()──► Batcher ──► dispatcher thread ──► per-group worker
-//!    ▲                                 (Router::split)        threads
-//!    └──────────── response channel ◄── last sub-batch ◄── PJRT gather
+//! clients ─submit()─► Ticket   Batcher ──► dispatcher thread ──► per-group worker
+//!    ▲                           ▲            (Router::split)        threads
+//!    └────────── ticket channel ─┴────── last sub-batch ◄────── PJRT gather
 //! ```
 //!
 //! * Each **worker** owns one SM resource group's execution domain: its own
@@ -19,21 +20,26 @@
 //!   static shapes); padding is dropped before merging.
 //!
 //! Python never runs here: workers execute AOT artifacts from `artifacts/`.
+//!
+//! Callers should usually wrap the server in a
+//! [`Service`](crate::service::Service) — the front door documented in
+//! `service/` — rather than driving it directly; the hermetic sibling is
+//! [`SimBackend`](crate::service::SimBackend).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Context};
 
 use crate::probe::TopologyMap;
 use crate::runtime::Runtime;
+use crate::service::backend::{submit_ticketed, Backend, Batch, Job, Pipeline, Ticket, WorkerMsg};
 
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::batcher::BatcherConfig;
 use super::chunks::WindowPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::placement::{Placement, PlacementPolicy};
-use super::router::{pad_indices, Router};
+use super::router::pad_indices;
 
 /// Host-side table (synthetic or user-provided).
 #[derive(Debug, Clone)]
@@ -65,8 +71,20 @@ impl Table {
         self.data[row as usize * self.d + j]
     }
 
+    /// A standalone copy of `rows` rows starting at `start_row` (fleet
+    /// sharding: each card holds only its shard).
+    pub fn slice_rows(&self, start_row: u64, rows: u64) -> Self {
+        let a = start_row as usize * self.d;
+        let b = (start_row + rows) as usize * self.d;
+        Self {
+            rows,
+            d: self.d,
+            data: Arc::new(self.data[a..b].to_vec()),
+        }
+    }
+
     /// Slice one window's rows.
-    fn shard(&self, start_row: u64, rows: u64) -> &[f32] {
+    pub(crate) fn shard(&self, start_row: u64, rows: u64) -> &[f32] {
         let a = start_row as usize * self.d;
         let b = (start_row + rows) as usize * self.d;
         &self.data[a..b]
@@ -93,56 +111,9 @@ impl ServerConfig {
     }
 }
 
-type Ticket = mpsc::SyncSender<anyhow::Result<Vec<f32>>>;
-
-/// Per-request accumulator: workers write their slice, the last one
-/// responds.
-struct RequestAcc {
-    out: Mutex<Vec<f32>>,
-    remaining: AtomicUsize,
-    ticket: Mutex<Option<Ticket>>,
-    failed: Mutex<Option<String>>,
-    start: Instant,
-}
-
-impl RequestAcc {
-    fn finish_part(&self, metrics: &Metrics) {
-        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let ticket = self.ticket.lock().unwrap().take();
-            if let Some(t) = ticket {
-                let failed = self.failed.lock().unwrap().take();
-                let result = match failed {
-                    Some(e) => Err(anyhow!(e)),
-                    None => Ok(std::mem::take(&mut *self.out.lock().unwrap())),
-                };
-                if result.is_err() {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                }
-                metrics.latency.record(self.start.elapsed());
-                let _ = t.send(result);
-            }
-        }
-    }
-}
-
-/// One unit of work for a group worker.
-struct Job {
-    window: usize,
-    local_rows: Vec<u32>,
-    positions: Vec<u32>,
-    acc: Arc<RequestAcc>,
-}
-
-enum WorkerMsg {
-    Job(Job),
-    Shutdown,
-}
-
 /// The running server.
 pub struct EmbeddingServer {
-    batcher: Arc<Batcher<Ticket>>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    pipeline: Pipeline,
     metrics: Arc<Metrics>,
     plan: Arc<WindowPlan>,
     table: Table,
@@ -209,32 +180,19 @@ impl EmbeddingServer {
             workers.push(handle);
         }
 
-        // --- dispatcher ---------------------------------------------------
-        let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
-        let dispatcher = {
-            let batcher = Arc::clone(&batcher);
-            let plan = Arc::clone(&plan);
-            let placement2 = placement.clone();
-            let metrics = Arc::clone(&metrics);
-            let d = table.d;
-            std::thread::Builder::new()
-                .name("a100win-dispatcher".into())
-                .spawn(move || {
-                    let mut router = Router::new(&plan, &placement2);
-                    while let Some(batch) = batcher.next_batch() {
-                        dispatch(batch, &mut router, &senders, &metrics, d);
-                    }
-                    for s in senders.iter().flatten() {
-                        let _ = s.send(WorkerMsg::Shutdown);
-                    }
-                })
-                .context("spawning dispatcher")?
-        };
+        // --- dispatcher + queue (shared scaffolding) ----------------------
+        let pipeline = Pipeline::start(
+            cfg.batcher.clone(),
+            Arc::clone(&plan),
+            placement.clone(),
+            Arc::clone(&metrics),
+            table.d,
+            senders,
+            workers,
+        )?;
 
         Ok(Self {
-            batcher,
-            dispatcher: Some(dispatcher),
-            workers,
+            pipeline,
             metrics,
             plan,
             table,
@@ -242,26 +200,10 @@ impl EmbeddingServer {
         })
     }
 
-    /// Blocking lookup: returns the gathered rows (len = rows.len() * d).
-    pub fn lookup(&self, rows: Vec<u64>) -> anyhow::Result<Vec<f32>> {
-        for &r in &rows {
-            if r >= self.table.rows {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(anyhow!("row {r} out of table ({} rows)", self.table.rows));
-            }
-        }
-        if rows.is_empty() {
-            return Ok(Vec::new());
-        }
-        let (tx, rx) = mpsc::sync_channel(1);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.metrics
-            .rows
-            .fetch_add(rows.len() as u64, Ordering::Relaxed);
-        self.batcher
-            .submit(rows, tx)
-            .map_err(|_| anyhow!("server is shutting down"))?;
-        rx.recv().context("server dropped the request")?
+    /// Blocking convenience over [`Backend::submit`]: returns the gathered
+    /// rows (len = rows.len() * d).  Indices are shared, not cloned.
+    pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
+        Backend::submit(self, Batch::new(rows))?.wait()
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -276,70 +218,42 @@ impl EmbeddingServer {
         &self.table
     }
 
-    /// Drain and stop all threads.
-    pub fn shutdown(mut self) {
-        self.batcher.close();
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    /// Drain and stop all threads (idempotent; also runs on drop).
+    pub fn shutdown(&self) {
+        self.pipeline.stop();
+    }
+}
+
+impl Backend for EmbeddingServer {
+    fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
+        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.table.rows, batch)
+    }
+
+    fn d(&self) -> usize {
+        self.table.d
+    }
+
+    fn rows(&self) -> u64 {
+        self.table.rows
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    fn shutdown(&self) {
+        EmbeddingServer::shutdown(self);
     }
 }
 
 impl Drop for EmbeddingServer {
     fn drop(&mut self) {
-        self.batcher.close();
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
-}
-
-/// Split every request of a batch and fan sub-batches out to workers.
-fn dispatch(
-    batch: Batch<Ticket>,
-    router: &mut Router<'_>,
-    senders: &[Option<mpsc::Sender<WorkerMsg>>],
-    metrics: &Arc<Metrics>,
-    d: usize,
-) {
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    for req in batch.requests {
-        let split = router.split(&req.rows);
-        let acc = Arc::new(RequestAcc {
-            out: Mutex::new(vec![0.0; req.rows.len() * d]),
-            remaining: AtomicUsize::new(split.sub_batches.len()),
-            ticket: Mutex::new(Some(req.ticket)),
-            failed: Mutex::new(None),
-            start: req.enqueued,
-        });
-        for sb in split.sub_batches {
-            let job = Job {
-                window: sb.window,
-                local_rows: sb.local_rows,
-                positions: sb.positions,
-                acc: Arc::clone(&acc),
-            };
-            match senders.get(sb.group).and_then(|s| s.as_ref()) {
-                Some(tx) => {
-                    if tx.send(WorkerMsg::Job(job)).is_err() {
-                        fail_part(&acc, metrics, "worker channel closed");
-                    }
-                }
-                None => fail_part(&acc, metrics, "no worker for group"),
-            }
-        }
-    }
-}
-
-fn fail_part(acc: &Arc<RequestAcc>, metrics: &Arc<Metrics>, why: &str) {
-    *acc.failed.lock().unwrap() = Some(why.to_string());
-    acc.finish_part(metrics);
 }
 
 /// Everything a worker thread needs at startup.
@@ -469,18 +383,11 @@ impl WorkerCtx {
         let result = self.gather(&job);
         match result {
             Ok(rows) => {
-                // Scatter this part into the request buffer.
-                let mut out = job.acc.out.lock().unwrap();
-                for (k, &pos) in job.positions.iter().enumerate() {
-                    out[pos as usize * self.d..(pos as usize + 1) * self.d]
-                        .copy_from_slice(&rows[k * self.d..(k + 1) * self.d]);
-                }
-                drop(out);
+                job.acc.scatter(&job.positions, &rows, self.d);
                 job.acc.finish_part(&self.metrics);
             }
             Err(e) => {
-                *job.acc.failed.lock().unwrap() = Some(format!("{e:#}"));
-                job.acc.finish_part(&self.metrics);
+                job.acc.fail_part(&self.metrics, &format!("{e:#}"));
             }
         }
     }
@@ -523,4 +430,5 @@ impl WorkerCtx {
 }
 
 // Integration tests (requiring artifacts) live in
-// rust/tests/coordinator_integration.rs and rust/tests/end_to_end.rs.
+// rust/tests/coordinator_integration.rs and rust/tests/end_to_end.rs; the
+// hermetic facade tests (sim backend) in rust/tests/service_facade.rs.

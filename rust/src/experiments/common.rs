@@ -39,20 +39,7 @@ pub fn paper_machine() -> Machine {
 /// *placement*, not about discovery — discovery experiments run the real
 /// probe).  Matches what a `Prober::run` would return on this machine.
 pub fn ground_truth_map(machine: &Machine) -> TopologyMap {
-    let topo = machine.topology();
-    TopologyMap {
-        groups: (0..topo.group_count())
-            .map(|g| topo.sms_in_group(g))
-            .collect(),
-        reach_bytes: machine.config().tlb.reach_bytes(),
-        solo_gbps: topo
-            .group_sizes()
-            .iter()
-            .map(|&s| s as f64 * 15.0)
-            .collect(),
-        independent: true,
-        card_id: "ground-truth".into(),
-    }
+    TopologyMap::ground_truth(machine)
 }
 
 /// Region sizes for Fig-1/Fig-6 sweeps (GiB).

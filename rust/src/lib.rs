@@ -4,19 +4,23 @@
 //! entire memory on the A100 GPU"* (2024), as a three-layer Rust + JAX +
 //! Pallas system:
 //!
+//! * [`service`] — **the front door**: an async ticketed serving facade
+//!   ([`service::Service`]) over interchangeable backends — the hermetic
+//!   sim-backed one and the PJRT one — with per-tenant admission control
+//!   ([`service::Session`]) and multi-card fleet routing
+//!   ([`service::FleetService`]).  Start here.
 //! * [`sim`] — the substrate: a discrete-event model of the A100 memory
 //!   hierarchy (resource groups, per-group 64 GB TLBs, page walkers, HBM
 //!   channels).  We have no A100; this module stands in for the silicon
 //!   (DESIGN.md §2).
 //! * [`probe`] — the paper's technique: reverse-engineer which SMs share
 //!   memory resources from throughput measurements alone (Figs 2–5).
-//! * [`coordinator`] — the productized contribution: a TLB-aware placement
-//!   and serving layer that shards a huge random-access table into
-//!   per-group windows smaller than TLB reach and routes lookups to the
-//!   owning group (Fig 6 as a system feature).
+//! * [`coordinator`] — the serving mechanics under the facade: windows,
+//!   placement, routing, batching, the PJRT server, fleet plans, metrics.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas gather
 //!   kernels (`artifacts/*.hlo.txt`); python never runs at request time.
-//! * [`workload`] — request/trace generators for benches and examples.
+//! * [`workload`] — request/trace/open-loop generators; backend-agnostic
+//!   clients of the facade.
 //! * [`experiments`] — one driver per paper figure.
 
 pub mod config;
@@ -24,6 +28,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod probe;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workload;
@@ -36,6 +41,10 @@ pub mod prelude {
     pub use crate::config::{MachineConfig, GIB, LINE_BYTES};
     pub use crate::coordinator::placement::PlacementPolicy;
     pub use crate::probe::{report::TopologyMap, Prober};
+    pub use crate::service::{
+        Backend, Service, SessionConfig, SimBackend, SimBackendConfig, SimTiming, Ticket,
+        TicketState,
+    };
     pub use crate::sim::{
         Machine, Measurement, MeasurementSpec, MemRegion, Pattern, SmAssignment,
     };

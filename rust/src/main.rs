@@ -1,17 +1,23 @@
 //! `a100win` CLI: probe the (simulated) card, regenerate the paper's
-//! figures, and serve lookups with TLB-aware placement.
+//! figures, and serve lookups through the async ticketed `service` facade
+//! with TLB-aware placement.
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
-    BatcherConfig, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+    CardSpec, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
 };
 use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
 use a100win::runtime::Runtime;
+use a100win::service::{
+    FleetService, OverloadPolicy, Service, SessionConfig, SimBackend, SimBackendConfig, SimTiming,
+};
 use a100win::sim::Machine;
-use a100win::workload::{RequestGen, WorkloadSpec};
+use a100win::workload::{drive, OpenLoopConfig, RequestGen, WorkloadSpec};
 
 const USAGE: &str = "\
 a100win — full-speed random access to the entire (simulated) A100 memory
@@ -19,9 +25,11 @@ a100win — full-speed random access to the entire (simulated) A100 memory
 USAGE:
     a100win probe   [--seed N] [--out FILE] [--effort quick|full]
     a100win fig     <1..6|0|all> [--seed N] [--effort quick|full]
-    a100win serve   [--policy naive|sm-to-chunk|group-to-chunk]
+    a100win serve   [--backend sim|pjrt] [--policy naive|sm-to-chunk|group-to-chunk]
                     [--windows N] [--requests N] [--rows-per-request N]
-                    [--artifacts DIR]
+                    [--cards N] [--rows-per-window N] [--artifacts DIR]
+    a100win bench-serve [--policy P] [--windows N] [--rows-per-request N]
+                    [--duration-ms N] [--rps A,B,C...]
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -31,8 +39,16 @@ SUBCOMMANDS:
     probe    run the paper's probing pipeline (Figs 2-5) on the simulated
              card and write the TopologyMap artifact
     fig      regenerate a paper figure's data series (0 = txn-size aside)
-    serve    run the embedding-lookup server on AOT artifacts and report
-             throughput/latency (requires `make artifacts`)
+    serve    serve ticketed lookups through service::Service.
+             --backend sim (default): hermetic, no artifacts — gathers on
+             the host, device cost from the DES; verifies every row.
+             --backend pjrt: AOT artifacts via PJRT (requires `make
+             artifacts`).  --cards N>1 (sim only): shard the table across
+             N probed cards via a FleetPlan and merge in request order.
+    bench-serve
+             open-loop Poisson QPS sweep against the sim-backed facade:
+             offered vs achieved rps, latency percentiles (EXPERIMENTS.md
+             §Serve)
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -106,6 +122,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "probe" => cmd_probe(&args),
         "fig" => cmd_fig(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "explain" => cmd_explain(&args),
         "remote" => cmd_remote(&args),
         "analytic" => cmd_analytic(&args),
@@ -191,6 +208,203 @@ fn cmd_fig(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    match args.flag("backend").unwrap_or("sim") {
+        "sim" => {
+            if args.u64_flag("cards", 1)? > 1 {
+                serve_fleet_sim(args)
+            } else {
+                serve_sim(args)
+            }
+        }
+        "pjrt" => serve_pjrt(args),
+        other => anyhow::bail!("--backend sim|pjrt, got '{other}'"),
+    }
+}
+
+/// Row width of the synthetic serving table: d=32 f32s = one 128 B line.
+const SERVE_D: usize = 32;
+
+/// A pending response: redeem once to get the gathered rows.
+type WaitFn = Box<dyn FnOnce() -> anyhow::Result<Vec<f32>>>;
+
+/// Drain-and-verify loop shared by the serve paths: pipelined ticketed
+/// submission (a window of in-flight tickets, never one-at-a-time
+/// blocking), every returned row checked against `Table::expected`.
+fn serve_requests(
+    submit: impl Fn(Arc<Vec<u64>>) -> anyhow::Result<WaitFn>,
+    table: &Table,
+    requests: u64,
+    rows_per_request: usize,
+) -> anyhow::Result<u64> {
+    let d = table.d;
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(table.rows, rows_per_request, 7));
+    let depth = 32usize;
+    let mut inflight: std::collections::VecDeque<(Arc<Vec<u64>>, WaitFn)> = Default::default();
+    let mut verified = 0u64;
+    let mut drain_one =
+        |inflight: &mut std::collections::VecDeque<(Arc<Vec<u64>>, WaitFn)>| -> anyhow::Result<()> {
+            let (rows, wait) = inflight.pop_front().expect("non-empty");
+            let out = wait()?;
+            anyhow::ensure!(out.len() == rows.len() * d, "short response");
+            for (k, &row) in rows.iter().enumerate() {
+                for j in 0..d {
+                    anyhow::ensure!(
+                        out[k * d + j] == table.expected(row, j),
+                        "row {row} column {j}: got {} want {}",
+                        out[k * d + j],
+                        table.expected(row, j)
+                    );
+                }
+                verified += 1;
+            }
+            Ok(())
+        };
+    for _ in 0..requests {
+        let rows = Arc::new(gen.next_request());
+        let wait = submit(Arc::clone(&rows))?;
+        inflight.push_back((rows, wait));
+        if inflight.len() >= depth {
+            drain_one(&mut inflight)?;
+        }
+    }
+    while !inflight.is_empty() {
+        drain_one(&mut inflight)?;
+    }
+    Ok(verified)
+}
+
+fn serve_sim(args: &Args) -> anyhow::Result<()> {
+    let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
+    let windows = args.u64_flag("windows", 2)? as usize;
+    let requests = args.u64_flag("requests", 200)?;
+    let rows_per_request = args.u64_flag("rows-per-request", 512)? as usize;
+    let rows_per_window = args.u64_flag("rows-per-window", 32_768)?;
+
+    let machine = machine_with_seed(0xA100)?;
+    // Serve against the ground-truth map (a real deployment would load
+    // `a100win probe`'s output; identical content here).
+    let map = TopologyMap::ground_truth(&machine);
+    let rows = rows_per_window * windows as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    let plan = WindowPlan::split(rows, (SERVE_D * 4) as u64, windows);
+    println!(
+        "table: {rows} rows x {SERVE_D} f32 ({} MiB), {windows} windows, policy {policy}, sim backend",
+        rows * (SERVE_D as u64) * 4 / (1 << 20),
+    );
+
+    let backend = Arc::new(SimBackend::start(
+        SimBackendConfig::new(policy),
+        &map,
+        plan,
+        table.clone(),
+        SimTiming::machine(machine),
+    )?);
+    let service = Service::new(backend.clone());
+    // All CLI traffic flows through one admission-controlled session: the
+    // in-flight budget backpressures (Queue) instead of shedding.
+    let session = service.session(
+        "cli",
+        SessionConfig {
+            max_in_flight: 64,
+            overload: OverloadPolicy::Queue,
+            deadline: None,
+        },
+    );
+
+    let t = std::time::Instant::now();
+    let verified = serve_requests(
+        |rows| {
+            let ticket = session.submit(rows)?;
+            Ok(Box::new(move || ticket.wait()))
+        },
+        &table,
+        requests,
+        rows_per_request,
+    )?;
+    let dt = t.elapsed();
+
+    let m = service.metrics();
+    println!(
+        "served {requests} requests ({verified} rows, all verified) in {:.2}s",
+        dt.as_secs_f64()
+    );
+    println!(
+        "host throughput: {:.0} rows/s ({:.1} MB/s of gathered lines)",
+        m.rows as f64 / dt.as_secs_f64(),
+        m.rows as f64 * (SERVE_D as f64 * 4.0) / dt.as_secs_f64() / 1e6
+    );
+    println!("{}", m.report());
+    println!("simulated device (per group, window-pinned placement):");
+    for r in backend.sim_report() {
+        println!(
+            "  group {:2}: {:8} rows in {:8.2} ms device time -> {:6.1} GB/s",
+            r.group, r.rows, r.sim_ms, r.simulated_gbps
+        );
+    }
+    service.shutdown();
+    Ok(())
+}
+
+fn serve_fleet_sim(args: &Args) -> anyhow::Result<()> {
+    let cards = args.u64_flag("cards", 2)? as usize;
+    let requests = args.u64_flag("requests", 200)?;
+    let rows_per_request = args.u64_flag("rows-per-request", 512)? as usize;
+    let rows_per_window = args.u64_flag("rows-per-window", 32_768)?;
+
+    // Probe map per card: enumeration seeds differ card to card (paper
+    // §1.1), so each shard gets its own TopologyMap + placement.
+    let mut specs = Vec::new();
+    for i in 0..cards {
+        let machine = machine_with_seed(0xA100 + 0x1111 * i as u64)?;
+        let spec = CardSpec {
+            map: TopologyMap::ground_truth(&machine),
+            memory_bytes: machine.config().memory.total_bytes,
+        };
+        specs.push((spec, SimTiming::machine(machine)));
+    }
+
+    let rows = rows_per_window * cards as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    println!(
+        "fleet: {cards} cards, table {rows} rows x {SERVE_D} f32 ({} MiB), sim backend",
+        rows * (SERVE_D as u64) * 4 / (1 << 20),
+    );
+    let fleet = FleetService::build_sim(specs, &table, Default::default(), 0xF1EE7)?;
+    for s in &fleet.plan().shards {
+        println!(
+            "  card {}: rows [{}, {}) in {} windows",
+            s.card,
+            s.start_row,
+            s.end_row(),
+            s.plan.count()
+        );
+    }
+
+    let t = std::time::Instant::now();
+    let verified = serve_requests(
+        |rows| {
+            let ticket = fleet.submit(rows, None)?;
+            Ok(Box::new(move || ticket.wait()))
+        },
+        &table,
+        requests,
+        rows_per_request,
+    )?;
+    let dt = t.elapsed();
+    println!(
+        "served {requests} requests ({verified} rows, merged in request order, all verified) \
+         in {:.2}s",
+        dt.as_secs_f64()
+    );
+    println!("per-card metrics:");
+    for (card, m) in fleet.per_card_metrics() {
+        println!("  card {card}: {}", m.report());
+    }
+    fleet.shutdown();
+    Ok(())
+}
+
+fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
     let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
     let windows = args.u64_flag("windows", 2)? as usize;
     let requests = args.u64_flag("requests", 200)?;
@@ -209,51 +423,108 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     drop(rt);
     let rows = (meta.n * windows) as u64;
     println!(
-        "table: {rows} rows x {} f32 ({} MiB), {windows} windows, policy {policy}",
+        "table: {rows} rows x {} f32 ({} MiB), {windows} windows, policy {policy}, pjrt backend",
         meta.d,
         rows * (meta.d as u64) * 4 / (1 << 20),
     );
 
     let machine = machine_with_seed(0xA100)?;
-    let map = {
-        // Serve against the ground-truth map (a real deployment would load
-        // `a100win probe`'s output; identical content here).
-        let topo = machine.topology();
-        TopologyMap {
-            groups: (0..topo.group_count())
-                .map(|g| topo.sms_in_group(g))
-                .collect(),
-            reach_bytes: machine.config().tlb.reach_bytes(),
-            solo_gbps: topo.group_sizes().iter().map(|&s| s as f64 * 15.0).collect(),
-            independent: true,
-            card_id: "serve".into(),
-        }
-    };
-
+    let map = TopologyMap::ground_truth(&machine);
     let table = Table::synthetic(rows, meta.d);
     let plan = WindowPlan::split(rows, 128, windows);
     let mut cfg = ServerConfig::new(artifacts);
     cfg.policy = policy;
-    cfg.batcher = BatcherConfig::default();
-    let server = EmbeddingServer::start(cfg, &map, plan, table.clone())?;
+    let service = Service::new(Arc::new(EmbeddingServer::start(
+        cfg,
+        &map,
+        plan,
+        table.clone(),
+    )?));
 
-    let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, rows_per_request, 7));
     let t = std::time::Instant::now();
-    for _ in 0..requests {
-        let req = gen.next_request();
-        let out = server.lookup(req.clone())?;
-        debug_assert_eq!(out.len(), req.len() * meta.d);
-    }
+    let verified = serve_requests(
+        |rows| {
+            let ticket = service.submit(rows, None)?;
+            Ok(Box::new(move || ticket.wait()))
+        },
+        &table,
+        requests,
+        rows_per_request,
+    )?;
     let dt = t.elapsed();
-    let m = server.metrics();
-    println!("served {requests} requests in {:.2}s", dt.as_secs_f64());
+    let m = service.metrics();
+    println!(
+        "served {requests} requests ({verified} rows, all verified) in {:.2}s",
+        dt.as_secs_f64()
+    );
     println!(
         "throughput: {:.0} rows/s ({:.1} MB/s of gathered lines)",
         m.rows as f64 / dt.as_secs_f64(),
         m.rows as f64 * (meta.d as f64 * 4.0) / dt.as_secs_f64() / 1e6
     );
     println!("{}", m.report());
-    server.shutdown();
+    service.shutdown();
+    Ok(())
+}
+
+/// Open-loop QPS sweep against the sim-backed facade: the standard
+/// methodology for memory-system serving benchmarks (EXPERIMENTS.md
+/// §Serve).
+fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
+    let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
+    let windows = args.u64_flag("windows", 2)? as usize;
+    let rows_per_request = args.u64_flag("rows-per-request", 256)? as usize;
+    let duration = Duration::from_millis(args.u64_flag("duration-ms", 300)?);
+    let rps_list: Vec<f64> = match args.flag("rps") {
+        None => vec![1_000.0, 4_000.0, 16_000.0, 64_000.0],
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--rps expects numbers, got '{x}'"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+
+    let machine = machine_with_seed(0xA100)?;
+    let map = TopologyMap::ground_truth(&machine);
+    let rows = 32_768u64 * windows as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    let plan = WindowPlan::split(rows, (SERVE_D * 4) as u64, windows);
+    // Probed timing: load generation measures the serving pipeline's
+    // wall-clock behavior; skip per-window DES calibration at startup.
+    let service = Service::new(Arc::new(SimBackend::start(
+        SimBackendConfig::new(policy),
+        &map,
+        plan,
+        table,
+        SimTiming::Probed,
+    )?));
+
+    println!(
+        "open-loop sweep: policy {policy}, {windows} windows, {rows_per_request} rows/request, \
+         {} ms per point",
+        duration.as_millis()
+    );
+    println!(
+        "{:>12} {:>12} {:>10} {:>10} {:>8} {:>8}",
+        "offered_rps", "achieved_rps", "mean_us", "p99_us", "dropped", "errors"
+    );
+    for offered in rps_list {
+        let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, rows_per_request, 42));
+        let cfg = OpenLoopConfig {
+            duration,
+            ..OpenLoopConfig::default()
+        };
+        let p = drive(&service, &mut gen, offered, &cfg);
+        println!(
+            "{:>12.0} {:>12.0} {:>10.0} {:>10} {:>8} {:>8}",
+            p.offered_rps, p.achieved_rps, p.mean_latency_us, p.p99_latency_us, p.dropped, p.errors
+        );
+    }
+    println!("{}", service.metrics().report());
+    service.shutdown();
     Ok(())
 }
 

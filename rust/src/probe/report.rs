@@ -10,8 +10,14 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context};
 
-use crate::sim::SmId;
+use crate::sim::{Machine, SmId};
 use crate::util::json::Json;
+
+/// Calibrated solo throughput of one SM in thrash-free steady state, GB/s
+/// (engine calibration: 48 outstanding × 128 B / ~390 ns ≈ 15 GB/s; paper
+/// Fig 4 shows ~120 GB/s for an 8-SM group).  Used to synthesize the
+/// ground-truth map's `solo_gbps` without running the probe.
+pub const SOLO_GBPS_PER_SM: f64 = 15.0;
 
 /// What the probe learned about a card.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,6 +37,31 @@ pub struct TopologyMap {
 }
 
 impl TopologyMap {
+    /// The map a perfect probe of `machine` would produce, read straight
+    /// from the simulator's ground truth.  Used where the experiment (or
+    /// server) is about *placement*, not discovery — a real deployment
+    /// would load `a100win probe`'s output, which carries identical
+    /// content on a correctly probed card.
+    pub fn ground_truth(machine: &Machine) -> Self {
+        let topo = machine.topology();
+        Self {
+            groups: (0..topo.group_count())
+                .map(|g| topo.sms_in_group(g))
+                .collect(),
+            reach_bytes: machine.config().tlb.reach_bytes(),
+            solo_gbps: topo
+                .group_sizes()
+                .iter()
+                .map(|&s| s as f64 * SOLO_GBPS_PER_SM)
+                .collect(),
+            independent: true,
+            card_id: format!(
+                "ground-truth-{:#x}",
+                machine.config().topology.smid_permutation_seed
+            ),
+        }
+    }
+
     /// Group id for an smid, if the map covers it.
     pub fn group_of(&self, smid: SmId) -> Option<usize> {
         self.groups.iter().position(|g| g.contains(&smid))
@@ -207,5 +238,23 @@ mod tests {
         assert_eq!(m.group_of(3), Some(1));
         assert_eq!(m.group_of(99), None);
         assert_eq!(m.sm_count(), 8);
+    }
+
+    #[test]
+    fn ground_truth_matches_machine_topology() {
+        let machine = Machine::new(crate::config::MachineConfig::tiny_test()).unwrap();
+        let map = TopologyMap::ground_truth(&machine);
+        map.validate().unwrap();
+        let topo = machine.topology();
+        assert_eq!(map.groups.len(), topo.group_count());
+        assert_eq!(map.sm_count(), topo.sm_count());
+        assert_eq!(map.reach_bytes, machine.config().tlb.reach_bytes());
+        for (g, sms) in map.groups.iter().enumerate() {
+            for &sm in sms {
+                assert_eq!(topo.group_of(sm), g);
+            }
+            assert_eq!(map.solo_gbps[g], sms.len() as f64 * SOLO_GBPS_PER_SM);
+        }
+        assert!(map.independent);
     }
 }

@@ -154,9 +154,9 @@ mod tests {
 
     fn setup() -> (Machine, Vec<Vec<SmId>>, VerifyConfig) {
         let m = Machine::new(MachineConfig::tiny_test()).unwrap();
-        let groups: Vec<Vec<SmId>> = (0..m.topology().group_count())
-            .map(|g| m.topology().sms_in_group(g))
-            .collect();
+        // Verification is about group behavior, not discovery: read the
+        // partition from the ground-truth map.
+        let groups = crate::probe::TopologyMap::ground_truth(&m).groups;
         let mut cfg = VerifyConfig::for_machine(&m);
         cfg.accesses_per_sm = 3_000;
         cfg.workers = 4;

@@ -1,0 +1,536 @@
+//! The backend contract of the serving facade, plus the request plumbing
+//! shared by every backend implementation.
+//!
+//! A [`Backend`] turns a [`Batch`] of global row indices into a [`Ticket`]
+//! immediately — no per-request blocking — and resolves the ticket with the
+//! gathered rows when its workers finish.  Two implementations exist:
+//!
+//! * [`crate::coordinator::EmbeddingServer`] — the PJRT path: per-group
+//!   worker threads executing AOT gather artifacts (needs `make artifacts`
+//!   and a real `xla` crate).
+//! * [`crate::service::SimBackend`] — the hermetic path: host-side gathers
+//!   timed by the discrete-event [`crate::sim::Machine`], so every serving
+//!   scenario runs under tier-1 with no artifacts.
+//!
+//! Both share the same internal shape (batcher → dispatcher →
+//! [`Router`](crate::coordinator::Router) split → per-group workers →
+//! ordered merge), so the split/accumulate/respond machinery lives here:
+//! [`RequestAcc`], [`Job`], [`WorkerMsg`], [`dispatch_formed`] and
+//! [`submit_ticketed`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::router::Router;
+
+use super::session::SlotGuard;
+
+/// One submission: shared row indices plus an optional completion deadline.
+///
+/// Indices travel by `Arc` end to end (caller → batcher → router), so a
+/// caller that keeps a handle for verification pays one refcount bump, not
+/// a `Vec` clone per request.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub rows: Arc<Vec<u64>>,
+    pub deadline: Option<Instant>,
+}
+
+impl Batch {
+    pub fn new(rows: Arc<Vec<u64>>) -> Self {
+        Self {
+            rows,
+            deadline: None,
+        }
+    }
+
+    /// A batch that must complete within `budget` of now.
+    pub fn with_deadline(rows: Arc<Vec<u64>>, budget: Duration) -> Self {
+        Self {
+            rows,
+            deadline: Some(Instant::now() + budget),
+        }
+    }
+}
+
+/// Observable state of an in-flight [`Ticket`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketState {
+    /// Still in the backend; the deadline (if any) has not passed.
+    Pending,
+    /// The result (or a backend error) is available; `wait` will not block.
+    Ready,
+    /// The deadline passed before the result arrived.
+    Expired,
+}
+
+/// Response channel the workers complete into.  Capacity 1: exactly one
+/// response per request, so a worker send never blocks.
+pub(crate) type ResponseTx = mpsc::SyncSender<anyhow::Result<Vec<f32>>>;
+
+/// A claim on one in-flight request.  Tickets carry their deadline;
+/// [`Ticket::wait`] returns an error (and counts `Metrics::expired`) if the
+/// result does not arrive in time.  Dropping a ticket abandons the request
+/// (the backend still completes it; the response is discarded).
+pub struct Ticket {
+    rx: mpsc::Receiver<anyhow::Result<Vec<f32>>>,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    buffered: Option<anyhow::Result<Vec<f32>>>,
+    metrics: Arc<Metrics>,
+    /// Admission-control slot released when the ticket resolves or drops.
+    pub(crate) slot: Option<SlotGuard>,
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("deadline", &self.deadline)
+            .field("age", &self.age())
+            .field("buffered", &self.buffered.is_some())
+            .field("admission_slot", &self.slot.is_some())
+            .finish()
+    }
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        rx: mpsc::Receiver<anyhow::Result<Vec<f32>>>,
+        deadline: Option<Instant>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self {
+            rx,
+            deadline,
+            submitted: Instant::now(),
+            buffered: None,
+            metrics,
+            slot: None,
+        }
+    }
+
+    /// A ticket that is already resolved (e.g. the empty request).
+    pub(crate) fn resolved(result: anyhow::Result<Vec<f32>>, metrics: Arc<Metrics>) -> Self {
+        let (_tx, rx) = mpsc::sync_channel(1);
+        let mut t = Self::new(rx, None, metrics);
+        t.buffered = Some(result);
+        t
+    }
+
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Time since submission.
+    pub fn age(&self) -> Duration {
+        self.submitted.elapsed()
+    }
+
+    /// Non-blocking progress check.
+    pub fn poll(&mut self) -> TicketState {
+        if self.buffered.is_some() {
+            return TicketState::Ready;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.buffered = Some(r);
+                TicketState::Ready
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                if self.deadline.is_some_and(|d| Instant::now() >= d) {
+                    TicketState::Expired
+                } else {
+                    TicketState::Pending
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.buffered = Some(Err(anyhow!("backend dropped the request")));
+                TicketState::Ready
+            }
+        }
+    }
+
+    /// Redeem the ticket: block until the gathered rows arrive, the
+    /// backend reports an error, or the deadline passes.
+    pub fn wait(mut self) -> anyhow::Result<Vec<f32>> {
+        let result = self.wait_inner();
+        // Release the admission slot the moment the request resolves (the
+        // whole ticket drops right after, but the intent is load-bearing).
+        drop(self.slot.take());
+        result
+    }
+
+    fn wait_inner(&mut self) -> anyhow::Result<Vec<f32>> {
+        if let Some(r) = self.buffered.take() {
+            return r;
+        }
+        // A result that already arrived always wins, even past the
+        // deadline — wait and poll must agree on an identical state.
+        if let Ok(r) = self.rx.try_recv() {
+            return r;
+        }
+        match self.deadline {
+            None => self.rx.recv().context("backend dropped the request")?,
+            Some(d) => {
+                let now = Instant::now();
+                if d <= now {
+                    return Err(self.expire());
+                }
+                match self.rx.recv_timeout(d - now) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => Err(self.expire()),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(anyhow!("backend dropped the request"))
+                    }
+                }
+            }
+        }
+    }
+
+    fn expire(&self) -> anyhow::Error {
+        self.metrics.expired.fetch_add(1, Ordering::Relaxed);
+        anyhow!("ticket deadline expired after {:?}", self.age())
+    }
+}
+
+/// A serving backend: asynchronous ticketed gathers over a row table.
+///
+/// `submit` must not block on request *execution* (it may block briefly on
+/// queue backpressure); completion is observed through the returned
+/// [`Ticket`].
+pub trait Backend: Send + Sync {
+    /// Enqueue a batch of global row indices.
+    fn submit(&self, batch: Batch) -> anyhow::Result<Ticket>;
+
+    /// Non-blocking progress check for one of this backend's tickets.
+    fn poll(&self, ticket: &mut Ticket) -> TicketState {
+        ticket.poll()
+    }
+
+    /// Redeem a ticket (blocking, deadline-aware).
+    fn wait(&self, ticket: Ticket) -> anyhow::Result<Vec<f32>> {
+        ticket.wait()
+    }
+
+    /// Row width (f32 elements per row).
+    fn d(&self) -> usize;
+
+    /// Rows in this backend's (local) table.
+    fn rows(&self) -> u64;
+
+    fn metrics(&self) -> MetricsSnapshot;
+
+    /// The live counter registry: the facade and sessions record admission
+    /// rejections and deadline expiries into the same place the backend
+    /// records batches and latency.
+    fn metrics_handle(&self) -> Arc<Metrics>;
+
+    /// Drain in-flight work and stop worker threads (idempotent).
+    fn shutdown(&self);
+}
+
+// ---------------------------------------------------------------------------
+// Shared request plumbing (used by EmbeddingServer and SimBackend).
+// ---------------------------------------------------------------------------
+
+/// Scatter gathered `rows` (each `d` wide) into `out` at their original
+/// request `positions`.  The one ordered-merge loop in the crate: request
+/// accumulators, the fleet merge, and the router's `merge_rows` all call
+/// this.
+pub(crate) fn scatter_rows(out: &mut [f32], positions: &[u32], rows: &[f32], d: usize) {
+    debug_assert_eq!(rows.len(), positions.len() * d);
+    for (k, &pos) in positions.iter().enumerate() {
+        out[pos as usize * d..(pos as usize + 1) * d].copy_from_slice(&rows[k * d..(k + 1) * d]);
+    }
+}
+
+/// Per-request accumulator: workers scatter their slice, the last one
+/// responds on the ticket channel.
+pub(crate) struct RequestAcc {
+    out: Mutex<Vec<f32>>,
+    remaining: AtomicUsize,
+    ticket: Mutex<Option<ResponseTx>>,
+    failed: Mutex<Option<String>>,
+    start: Instant,
+}
+
+impl RequestAcc {
+    pub(crate) fn new(len_floats: usize, parts: usize, ticket: ResponseTx, start: Instant) -> Self {
+        Self {
+            out: Mutex::new(vec![0.0; len_floats]),
+            remaining: AtomicUsize::new(parts),
+            ticket: Mutex::new(Some(ticket)),
+            failed: Mutex::new(None),
+            start,
+        }
+    }
+
+    /// Scatter one sub-batch's gathered rows (each `d` wide) into the
+    /// request buffer at their original positions.
+    pub(crate) fn scatter(&self, positions: &[u32], rows: &[f32], d: usize) {
+        scatter_rows(&mut self.out.lock().unwrap(), positions, rows, d);
+    }
+
+    /// Mark one sub-batch done; the last part sends the response.
+    pub(crate) fn finish_part(&self, metrics: &Metrics) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let ticket = self.ticket.lock().unwrap().take();
+            if let Some(t) = ticket {
+                let failed = self.failed.lock().unwrap().take();
+                let result = match failed {
+                    Some(e) => Err(anyhow!(e)),
+                    None => Ok(std::mem::take(&mut *self.out.lock().unwrap())),
+                };
+                if result.is_err() {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.latency.record(self.start.elapsed());
+                // The waiter may have expired or dropped its ticket;
+                // discarding the response is correct then.
+                let _ = t.send(result);
+            }
+        }
+    }
+
+    /// Record a failure for this part and finish it.
+    pub(crate) fn fail_part(&self, metrics: &Metrics, why: &str) {
+        *self.failed.lock().unwrap() = Some(why.to_string());
+        self.finish_part(metrics);
+    }
+}
+
+/// One unit of work for a group worker.
+pub(crate) struct Job {
+    pub(crate) window: usize,
+    pub(crate) local_rows: Vec<u32>,
+    pub(crate) positions: Vec<u32>,
+    pub(crate) acc: Arc<RequestAcc>,
+}
+
+pub(crate) enum WorkerMsg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Split every request of a formed batch and fan sub-batches out to the
+/// per-group workers.  Requests whose deadline already passed are failed
+/// fast (counted in `Metrics::expired`) without touching a worker.
+pub(crate) fn dispatch_formed(
+    formed: crate::coordinator::batcher::Batch<ResponseTx>,
+    router: &mut Router<'_>,
+    senders: &[Option<mpsc::Sender<WorkerMsg>>],
+    metrics: &Arc<Metrics>,
+    d: usize,
+) {
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    let now = Instant::now();
+    for req in formed.requests {
+        if req.deadline.is_some_and(|dl| dl <= now) {
+            metrics.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .ticket
+                .send(Err(anyhow!("deadline expired before dispatch")));
+            continue;
+        }
+        let split = router.split(&req.rows);
+        let acc = Arc::new(RequestAcc::new(
+            req.rows.len() * d,
+            split.sub_batches.len(),
+            req.ticket,
+            req.enqueued,
+        ));
+        for sb in split.sub_batches {
+            let job = Job {
+                window: sb.window,
+                local_rows: sb.local_rows,
+                positions: sb.positions,
+                acc: Arc::clone(&acc),
+            };
+            match senders.get(sb.group).and_then(|s| s.as_ref()) {
+                Some(tx) => {
+                    if tx.send(WorkerMsg::Job(job)).is_err() {
+                        acc.fail_part(metrics, "worker channel closed");
+                    }
+                }
+                None => acc.fail_part(metrics, "no worker for group"),
+            }
+        }
+    }
+}
+
+/// The batcher → dispatcher → worker thread scaffolding both backends
+/// share: owns the queue and every thread handle, spawns the dispatcher
+/// loop, and knows how to drain and join on shutdown.  Backends only
+/// differ in *what a worker does with a [`Job`]* — they spawn their own
+/// workers and hand the senders + handles here.
+pub(crate) struct Pipeline {
+    pub(crate) batcher: Arc<Batcher<ResponseTx>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Pipeline {
+    /// Spawn the dispatcher over `senders` and adopt the worker handles.
+    pub(crate) fn start(
+        cfg: crate::coordinator::batcher::BatcherConfig,
+        plan: Arc<crate::coordinator::chunks::WindowPlan>,
+        placement: crate::coordinator::placement::Placement,
+        metrics: Arc<Metrics>,
+        d: usize,
+        senders: Vec<Option<mpsc::Sender<WorkerMsg>>>,
+        workers: Vec<std::thread::JoinHandle<()>>,
+    ) -> anyhow::Result<Self> {
+        let batcher = Arc::new(Batcher::new(cfg));
+        let dispatcher = {
+            let batcher = Arc::clone(&batcher);
+            std::thread::Builder::new()
+                .name("a100win-dispatcher".into())
+                .spawn(move || {
+                    let mut router = Router::new(&plan, &placement);
+                    while let Some(batch) = batcher.next_batch() {
+                        dispatch_formed(batch, &mut router, &senders, &metrics, d);
+                    }
+                    for s in senders.iter().flatten() {
+                        let _ = s.send(WorkerMsg::Shutdown);
+                    }
+                })
+                .context("spawning dispatcher")?
+        };
+        Ok(Self {
+            batcher,
+            dispatcher: Mutex::new(Some(dispatcher)),
+            workers: Mutex::new(workers),
+        })
+    }
+
+    /// Close the queue, drain queued requests, and join every thread
+    /// (idempotent; both backends call this from shutdown *and* Drop).
+    pub(crate) fn stop(&self) {
+        self.batcher.close();
+        if let Some(d) = self.dispatcher.lock().unwrap().take() {
+            let _ = d.join();
+        }
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The common `Backend::submit` body: validate, count, enqueue, ticket.
+pub(crate) fn submit_ticketed(
+    batcher: &Batcher<ResponseTx>,
+    metrics: &Arc<Metrics>,
+    total_rows: u64,
+    batch: Batch,
+) -> anyhow::Result<Ticket> {
+    for &r in batch.rows.iter() {
+        if r >= total_rows {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("row {r} out of table ({total_rows} rows)"));
+        }
+    }
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .rows
+        .fetch_add(batch.rows.len() as u64, Ordering::Relaxed);
+    if batch.rows.is_empty() {
+        return Ok(Ticket::resolved(Ok(Vec::new()), Arc::clone(metrics)));
+    }
+    let (tx, rx) = mpsc::sync_channel(1);
+    batcher
+        .submit(batch.rows, batch.deadline, tx)
+        .map_err(|_| anyhow!("backend is shutting down"))?;
+    Ok(Ticket::new(rx, batch.deadline, Arc::clone(metrics)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::new())
+    }
+
+    #[test]
+    fn resolved_ticket_is_ready_immediately() {
+        let mut t = Ticket::resolved(Ok(vec![1.0, 2.0]), metrics());
+        assert_eq!(t.poll(), TicketState::Ready);
+        assert_eq!(t.wait().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ticket_pending_then_ready() {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let mut t = Ticket::new(rx, None, metrics());
+        assert_eq!(t.poll(), TicketState::Pending);
+        tx.send(Ok(vec![3.0])).unwrap();
+        assert_eq!(t.poll(), TicketState::Ready);
+        // Poll buffers the result; wait returns it without a channel read.
+        assert_eq!(t.wait().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn ticket_deadline_expires() {
+        let m = metrics();
+        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Vec<f32>>>(1);
+        let t = Ticket::new(
+            rx,
+            Some(Instant::now() + Duration::from_millis(10)),
+            Arc::clone(&m),
+        );
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("deadline expired"), "{err}");
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        drop(tx);
+    }
+
+    #[test]
+    fn ticket_poll_reports_expired() {
+        let (_tx, rx) = mpsc::sync_channel::<anyhow::Result<Vec<f32>>>(1);
+        let mut t = Ticket::new(
+            rx,
+            Some(Instant::now() - Duration::from_millis(1)),
+            metrics(),
+        );
+        assert_eq!(t.poll(), TicketState::Expired);
+    }
+
+    #[test]
+    fn disconnected_backend_surfaces_as_error() {
+        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Vec<f32>>>(1);
+        drop(tx);
+        let mut t = Ticket::new(rx, None, metrics());
+        assert_eq!(t.poll(), TicketState::Ready);
+        assert!(t.wait().is_err());
+    }
+
+    #[test]
+    fn request_acc_merges_parts_and_responds_once() {
+        let m = metrics();
+        let (tx, rx) = mpsc::sync_channel(1);
+        let acc = RequestAcc::new(4, 2, tx, Instant::now());
+        acc.scatter(&[1], &[3.0, 4.0], 2);
+        acc.finish_part(&m);
+        assert!(rx.try_recv().is_err(), "must wait for all parts");
+        acc.scatter(&[0], &[1.0, 2.0], 2);
+        acc.finish_part(&m);
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.latency.count(), 1);
+    }
+
+    #[test]
+    fn request_acc_failure_propagates() {
+        let m = metrics();
+        let (tx, rx) = mpsc::sync_channel(1);
+        let acc = RequestAcc::new(2, 2, tx, Instant::now());
+        acc.fail_part(&m, "boom");
+        acc.finish_part(&m);
+        assert!(rx.recv().unwrap().is_err());
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+}

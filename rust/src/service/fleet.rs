@@ -1,0 +1,222 @@
+//! Fleet routing: one serving facade over several probed cards.
+//!
+//! The paper stresses that the smid→group mapping "may vary card to card",
+//! so a fleet deployment probes every card once and composes the per-card
+//! [`TopologyMap`](crate::probe::TopologyMap)s.  [`FleetService`] wires
+//! [`FleetPlan`]/[`CardShard`](crate::coordinator::CardShard) to the
+//! ticketed facade: a request's rows are split by card shard, submitted to
+//! each card's [`Service`] as ordinary tickets, and merged back **in
+//! request order** when the [`FleetTicket`] is redeemed.
+//!
+//! ```text
+//! global row ──► card shard (FleetPlan) ──► window ──► SM group
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::chunks::row_bytes_for_d;
+use crate::coordinator::cluster::{CardSpec, FleetPlan};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::placement::PlacementPolicy;
+use crate::coordinator::Table;
+
+use super::backend::{scatter_rows, Ticket, TicketState};
+use super::sim_backend::{SimBackend, SimBackendConfig, SimTiming};
+use super::Service;
+
+/// One card's share of an in-flight fleet request.
+struct FleetPart {
+    /// Index into `FleetService::cards` / `plan.shards`.
+    shard: usize,
+    ticket: Ticket,
+    /// Original request positions of this card's rows.
+    positions: Vec<u32>,
+}
+
+/// A claim on one in-flight fleet request; redeems to rows merged back in
+/// request order.
+pub struct FleetTicket {
+    parts: Vec<FleetPart>,
+    request_len: usize,
+    d: usize,
+}
+
+impl FleetTicket {
+    /// Non-blocking progress: Ready once every card is ready; Expired as
+    /// soon as any card's deadline passed.
+    pub fn poll(&mut self) -> TicketState {
+        let mut all_ready = true;
+        for p in &mut self.parts {
+            match p.ticket.poll() {
+                TicketState::Expired => return TicketState::Expired,
+                TicketState::Pending => all_ready = false,
+                TicketState::Ready => {}
+            }
+        }
+        if all_ready {
+            TicketState::Ready
+        } else {
+            TicketState::Pending
+        }
+    }
+
+    /// Redeem: wait for every card and merge rows into request order.
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        let d = self.d;
+        let mut out = vec![0.0f32; self.request_len * d];
+        for part in self.parts {
+            let rows = part
+                .ticket
+                .wait()
+                .with_context(|| format!("card shard {}", part.shard))?;
+            scatter_rows(&mut out, &part.positions, &rows, d);
+        }
+        Ok(out)
+    }
+}
+
+/// The fleet-level facade: two-level routing over per-card services.
+pub struct FleetService {
+    plan: FleetPlan,
+    /// Position-matched to `plan.shards`.
+    cards: Vec<Service>,
+    d: usize,
+}
+
+impl FleetService {
+    /// Compose a fleet from an existing plan and per-card services (each
+    /// serving exactly its shard's local row space).
+    pub fn new(plan: FleetPlan, cards: Vec<Service>) -> anyhow::Result<Self> {
+        if plan.shards.len() != cards.len() {
+            return Err(anyhow!(
+                "{} shards but {} card services",
+                plan.shards.len(),
+                cards.len()
+            ));
+        }
+        let mut d = None;
+        for (shard, svc) in plan.shards.iter().zip(&cards) {
+            if svc.rows() != shard.rows {
+                return Err(anyhow!(
+                    "card {} serves {} rows but its shard has {}",
+                    shard.card,
+                    svc.rows(),
+                    shard.rows
+                ));
+            }
+            match d {
+                None => d = Some(svc.d()),
+                Some(d0) if d0 != svc.d() => {
+                    return Err(anyhow!("cards disagree on row width"));
+                }
+                _ => {}
+            }
+        }
+        let d = d.ok_or_else(|| anyhow!("empty fleet"))?;
+        Ok(Self { plan, cards, d })
+    }
+
+    /// Build a hermetic fleet: shard `table` across simulated cards
+    /// (capacity-weighted, reach-constrained — the plan comes from
+    /// [`FleetPlan::build`]) and start one [`SimBackend`] per shard using
+    /// that card's probed map, window plan, and group placement.
+    pub fn build_sim(
+        specs: Vec<(CardSpec, SimTiming)>,
+        table: &Table,
+        batcher: BatcherConfig,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let cards: Vec<CardSpec> = specs.iter().map(|(c, _)| c.clone()).collect();
+        let plan = FleetPlan::build(&cards, table.rows, row_bytes_for_d(table.d), seed)?;
+        let mut services = Vec::new();
+        for shard in &plan.shards {
+            let (spec, timing) = &specs[shard.card];
+            let local = table.slice_rows(shard.start_row, shard.rows);
+            let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+            cfg.batcher = batcher.clone();
+            cfg.seed = seed;
+            let backend = SimBackend::start_with_placement(
+                cfg,
+                &spec.map,
+                shard.plan.clone(),
+                shard.placement.clone(),
+                local,
+                timing.clone(),
+            )
+            .with_context(|| format!("starting card {}", shard.card))?;
+            services.push(Service::new(Arc::new(backend)));
+        }
+        Self::new(plan, services)
+    }
+
+    pub fn plan(&self) -> &FleetPlan {
+        &self.plan
+    }
+
+    /// Per-card services, position-matched to `plan().shards`.
+    pub fn cards(&self) -> &[Service] {
+        &self.cards
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.plan.total_rows
+    }
+
+    /// Split a request by card shard and submit each part; the returned
+    /// [`FleetTicket`] merges rows back in request order.
+    pub fn submit(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<FleetTicket> {
+        let split = self.plan.split(&rows)?;
+        let mut parts = Vec::new();
+        for (si, (locals, positions)) in split.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let ticket = self.cards[si]
+                .submit(Arc::new(locals), deadline)
+                .with_context(|| format!("card shard {si}"))?;
+            parts.push(FleetPart {
+                shard: si,
+                ticket,
+                positions,
+            });
+        }
+        Ok(FleetTicket {
+            parts,
+            request_len: rows.len(),
+            d: self.d,
+        })
+    }
+
+    /// Blocking convenience: submit + merge.
+    pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
+        self.submit(rows, None)?.wait()
+    }
+
+    /// Per-card metric snapshots as `(card id, snapshot)`.
+    pub fn per_card_metrics(&self) -> Vec<(usize, MetricsSnapshot)> {
+        self.plan
+            .shards
+            .iter()
+            .zip(&self.cards)
+            .map(|(shard, svc)| (shard.card, svc.metrics()))
+            .collect()
+    }
+
+    pub fn shutdown(&self) {
+        for c in &self.cards {
+            c.shutdown();
+        }
+    }
+}

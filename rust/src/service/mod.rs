@@ -1,0 +1,143 @@
+//! **The crate's front door**: an async, ticketed serving facade over
+//! interchangeable execution backends.
+//!
+//! The paper's payoff is a *serving* construction — probe the card's SM
+//! resource groups, pin each group to a sub-reach window, and random
+//! lookups over the entire memory run at full speed.  This module turns
+//! the whole "probe → map → place → serve" pipeline into one API:
+//!
+//! ```text
+//!  Session (admission control) ─┐
+//!  Session ... ─────────────────┤
+//!                               ▼
+//!                           Service ── submit(rows, deadline) → Ticket
+//!                               │
+//!                        Backend trait
+//!                     ┌─────────┴──────────┐
+//!                SimBackend          EmbeddingServer      FleetService
+//!              (sim::Machine,          (PJRT, AOT        (FleetPlan over
+//!               hermetic, no           artifacts)         several probed
+//!               artifacts)                                cards)
+//! ```
+//!
+//! * [`Backend`] — `submit(Batch) -> Ticket`, `poll`/`wait`, `shutdown`.
+//!   Two implementations: the hermetic [`SimBackend`] (gathers on the host,
+//!   device cost from the discrete-event [`crate::sim::Machine`]) and the
+//!   PJRT [`crate::coordinator::EmbeddingServer`] (AOT gather artifacts).
+//! * [`Service`] — ticketed async submission.  No per-request blocking:
+//!   `submit` returns a [`Ticket`] carrying an optional deadline; redeem it
+//!   with `wait` (deadline-aware) or check it with `poll`.
+//! * [`Session`] — per-tenant admission control: an in-flight budget with
+//!   reject-or-queue overload handling, surfaced in
+//!   [`Metrics`](crate::coordinator::Metrics).
+//! * [`FleetService`] — the same facade over several probed cards via
+//!   [`crate::coordinator::FleetPlan`], merging rows in request order.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use a100win::prelude::*;
+//! use a100win::coordinator::{Table, WindowPlan};
+//! use a100win::service::{Service, SimBackend, SimBackendConfig, SimTiming};
+//!
+//! let machine = Machine::new(MachineConfig::a100_80gb()).unwrap();
+//! let map = TopologyMap::ground_truth(&machine);        // or probe + load
+//! let table = Table::synthetic(1 << 16, 32);
+//! let plan = WindowPlan::split(table.rows, 128, 2);
+//! let backend = SimBackend::start(
+//!     SimBackendConfig::new(PlacementPolicy::GroupToChunk),
+//!     &map, plan, table, SimTiming::machine(machine),
+//! ).unwrap();
+//! let service = Service::new(Arc::new(backend));
+//! let ticket = service.submit(Arc::new(vec![7, 99, 12345]), None).unwrap();
+//! let rows = ticket.wait().unwrap();                    // 3 * 32 f32s
+//! service.shutdown();
+//! ```
+//!
+//! The open-loop load generator ([`crate::workload::openloop`]) is a
+//! backend-agnostic client of this facade; `a100win serve --backend sim`
+//! and `a100win bench-serve` drive it from the CLI.
+
+pub mod backend;
+pub mod fleet;
+pub mod session;
+pub mod sim_backend;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+
+pub use backend::{Backend, Batch, Ticket, TicketState};
+pub use fleet::{FleetService, FleetTicket};
+pub use session::{OverloadPolicy, Session, SessionConfig, SessionStats};
+pub use sim_backend::{GroupSimReport, SimBackend, SimBackendConfig, SimTiming};
+
+/// The serving facade: a cheaply clonable handle over one backend.
+///
+/// All clones (and the [`Session`]s minted from them) share the backend
+/// and its metrics registry.
+#[derive(Clone)]
+pub struct Service {
+    backend: Arc<dyn Backend>,
+    metrics: Arc<Metrics>,
+}
+
+impl Service {
+    pub fn new(backend: Arc<dyn Backend>) -> Self {
+        let metrics = backend.metrics_handle();
+        Self { backend, metrics }
+    }
+
+    /// Ticketed async submission.  `deadline` bounds the whole request:
+    /// expired tickets fail at `wait`/`poll`, and the dispatcher culls
+    /// requests whose deadline passed before execution.
+    pub fn submit(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Ticket> {
+        self.backend.submit(Batch {
+            rows,
+            deadline: deadline.map(|d| Instant::now() + d),
+        })
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
+        self.submit(rows, None)?.wait()
+    }
+
+    /// Mint a per-tenant session with its own admission budget.
+    pub fn session(&self, tenant: &str, cfg: SessionConfig) -> Session {
+        Session::new(self.clone(), tenant, cfg)
+    }
+
+    /// Row width (f32 elements per row).
+    pub fn d(&self) -> usize {
+        self.backend.d()
+    }
+
+    /// Rows in the served table.
+    pub fn rows(&self) -> u64 {
+        self.backend.rows()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.backend.metrics()
+    }
+
+    pub(crate) fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The backend, for implementation-specific reporting (e.g.
+    /// [`SimBackend::sim_report`]).
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Drain and stop the backend (idempotent).
+    pub fn shutdown(&self) {
+        self.backend.shutdown();
+    }
+}

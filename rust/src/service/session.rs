@@ -1,0 +1,244 @@
+//! Per-tenant sessions: admission control and backpressure on top of a
+//! shared [`Service`](super::Service).
+//!
+//! Every session owns an in-flight budget.  A submission beyond the budget
+//! is either **rejected** immediately ([`OverloadPolicy::Reject`], the
+//! heavy-traffic default: shed load at the front door) or **queued** by
+//! blocking the caller until a slot frees ([`OverloadPolicy::Queue`],
+//! closed-loop clients).  Both outcomes are surfaced in the backend's
+//! [`Metrics`] (`admission_rejected` / `throttled`) and in per-session
+//! [`SessionStats`].
+//!
+//! Slots are released by RAII: the [`SlotGuard`] rides inside the
+//! [`Ticket`] and frees the slot when the ticket resolves or is dropped —
+//! a tenant cannot leak budget by abandoning tickets.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::backend::Ticket;
+use super::Service;
+
+/// What to do with a submission beyond the in-flight budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Fail the submission immediately (load shedding).
+    Reject,
+    /// Block the caller until a slot frees (backpressure).
+    Queue,
+}
+
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Maximum unresolved tickets this tenant may hold.
+    pub max_in_flight: usize,
+    pub overload: OverloadPolicy,
+    /// Deadline attached to every submission (None = unbounded).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            max_in_flight: 64,
+            overload: OverloadPolicy::Reject,
+            deadline: None,
+        }
+    }
+}
+
+/// Per-tenant counters (the backend-wide view lives in [`Metrics`]).
+#[derive(Debug, Default)]
+pub struct SessionStats {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub throttled: AtomicU64,
+}
+
+/// The in-flight gauge: a counting semaphore with RAII release.
+#[derive(Debug)]
+pub(crate) struct Slots {
+    cap: usize,
+    used: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Slots {
+    fn new(cap: usize) -> Arc<Self> {
+        Arc::new(Self {
+            cap,
+            used: Mutex::new(0),
+            freed: Condvar::new(),
+        })
+    }
+
+    fn try_acquire(slots: &Arc<Self>) -> Option<SlotGuard> {
+        let mut used = slots.used.lock().unwrap();
+        if *used >= slots.cap {
+            return None;
+        }
+        *used += 1;
+        Some(SlotGuard {
+            slots: Arc::clone(slots),
+        })
+    }
+
+    /// Block until a slot frees; reports whether the caller had to wait.
+    fn acquire_blocking(slots: &Arc<Self>) -> (SlotGuard, bool) {
+        let mut used = slots.used.lock().unwrap();
+        let mut blocked = false;
+        while *used >= slots.cap {
+            blocked = true;
+            used = slots.freed.wait(used).unwrap();
+        }
+        *used += 1;
+        (
+            SlotGuard {
+                slots: Arc::clone(slots),
+            },
+            blocked,
+        )
+    }
+
+    fn used(&self) -> usize {
+        *self.used.lock().unwrap()
+    }
+}
+
+/// Releases one in-flight slot on drop.
+#[derive(Debug)]
+pub struct SlotGuard {
+    slots: Arc<Slots>,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        let mut used = self.slots.used.lock().unwrap();
+        *used -= 1;
+        drop(used);
+        self.slots.freed.notify_one();
+    }
+}
+
+/// One tenant's handle on the service.
+pub struct Session {
+    tenant: String,
+    cfg: SessionConfig,
+    service: Service,
+    slots: Arc<Slots>,
+    stats: Arc<SessionStats>,
+    metrics: Arc<Metrics>,
+}
+
+impl Session {
+    pub(crate) fn new(service: Service, tenant: &str, cfg: SessionConfig) -> Self {
+        assert!(cfg.max_in_flight >= 1, "in-flight budget must be >= 1");
+        let metrics = service.metrics_handle();
+        Self {
+            tenant: tenant.to_string(),
+            slots: Slots::new(cfg.max_in_flight),
+            cfg,
+            service,
+            stats: Arc::new(SessionStats::default()),
+            metrics,
+        }
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+
+    /// Unresolved tickets currently held by this tenant.
+    pub fn in_flight(&self) -> usize {
+        self.slots.used()
+    }
+
+    /// Admission-controlled submit: acquires an in-flight slot per the
+    /// overload policy, then forwards to the service with the session's
+    /// default deadline.  The slot rides inside the ticket and frees when
+    /// the ticket resolves or is dropped.
+    pub fn submit(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Ticket> {
+        let guard = match self.cfg.overload {
+            OverloadPolicy::Reject => Slots::try_acquire(&self.slots).ok_or_else(|| {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow!(
+                    "tenant '{}' over its in-flight budget ({})",
+                    self.tenant,
+                    self.cfg.max_in_flight
+                )
+            })?,
+            OverloadPolicy::Queue => {
+                let (guard, blocked) = Slots::acquire_blocking(&self.slots);
+                if blocked {
+                    self.stats.throttled.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.throttled.fetch_add(1, Ordering::Relaxed);
+                }
+                guard
+            }
+        };
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let mut ticket = self.service.submit(rows, self.cfg.deadline)?;
+        ticket.slot = Some(guard);
+        Ok(ticket)
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
+        self.submit(rows)?.wait()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_count_and_release() {
+        let s = Slots::new(2);
+        let a = Slots::try_acquire(&s).unwrap();
+        let b = Slots::try_acquire(&s).unwrap();
+        assert!(Slots::try_acquire(&s).is_none());
+        assert_eq!(s.used(), 2);
+        drop(a);
+        assert_eq!(s.used(), 1);
+        let c = Slots::try_acquire(&s).unwrap();
+        assert!(Slots::try_acquire(&s).is_none());
+        drop(b);
+        drop(c);
+        assert_eq!(s.used(), 0);
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let s = Slots::new(1);
+        let held = Slots::try_acquire(&s).unwrap();
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            let (g, blocked) = Slots::acquire_blocking(&s2);
+            drop(g);
+            blocked
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(held);
+        assert!(t.join().unwrap(), "second acquire must have blocked");
+        assert_eq!(s.used(), 0);
+    }
+
+    #[test]
+    fn unblocked_acquire_reports_no_wait() {
+        let s = Slots::new(1);
+        let (g, blocked) = Slots::acquire_blocking(&s);
+        assert!(!blocked);
+        drop(g);
+    }
+}

@@ -1,0 +1,343 @@
+//! The hermetic backend: gathers execute host-side against the table while
+//! the discrete-event [`Machine`] supplies the *device* cost model — what
+//! each SM resource group's gather rate would be on the simulated A100
+//! given the placement it was pinned under.
+//!
+//! This is the facade implementation every serving scenario can run under
+//! tier-1: no PJRT, no artifacts, same batcher → dispatcher →
+//! [`Router`](crate::coordinator::Router) split → per-group worker → merge
+//! pipeline as the PJRT [`EmbeddingServer`](crate::coordinator::EmbeddingServer).
+//!
+//! Timing model: serving a sub-batch of `k` rows from window `w` on group
+//! `g` costs `k * ns_per_row(g, w)` of simulated device time, where
+//! `ns_per_row` is calibrated once per (group, window) pair by running the
+//! DES with that group's SMs uniform-random over the window's byte region
+//! (then memoized).  Under `GroupToChunk` the regions sit below TLB reach
+//! and the rates land at the paper's full-speed plateau; under `Naive`
+//! whole-table placement they collapse exactly like Fig 1.  With
+//! [`SimTiming::Probed`] the DES is skipped and the probe map's
+//! `solo_gbps` is used directly (fast startup for load-generation tests).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::chunks::WindowPlan;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::placement::{Placement, PlacementPolicy};
+use crate::coordinator::Table;
+use crate::probe::TopologyMap;
+use crate::sim::{Machine, MeasurementSpec, Pattern, SmId};
+
+use super::backend::{submit_ticketed, Backend, Batch, Job, Pipeline, Ticket, WorkerMsg};
+
+/// Where the per-(group, window) service rates come from.
+#[derive(Clone)]
+pub enum SimTiming {
+    /// Calibrate by running the DES (one short measurement per pair,
+    /// memoized; workers share the machine's warm-TLB cache).  Boxed: a
+    /// `Machine` is ~40x the size of the other variant.
+    Machine(Box<Machine>),
+    /// Use the probe map's `solo_gbps` as-is — no DES at serve time.
+    Probed,
+}
+
+impl SimTiming {
+    /// Convenience constructor for the DES-calibrated variant.
+    pub fn machine(m: Machine) -> Self {
+        Self::Machine(Box::new(m))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimBackendConfig {
+    pub policy: PlacementPolicy,
+    pub batcher: BatcherConfig,
+    pub seed: u64,
+    /// Accesses per SM for each calibration measurement.
+    pub calib_accesses_per_sm: u64,
+}
+
+impl SimBackendConfig {
+    pub fn new(policy: PlacementPolicy) -> Self {
+        Self {
+            policy,
+            batcher: BatcherConfig::default(),
+            seed: 0xC0FFEE,
+            calib_accesses_per_sm: 2_000,
+        }
+    }
+}
+
+/// Simulated-device accounting per group.
+#[derive(Debug, Default)]
+struct GroupServeStats {
+    rows: AtomicU64,
+    sim_ns: AtomicU64,
+}
+
+/// One group's slice of the simulated-device report.
+#[derive(Debug, Clone)]
+pub struct GroupSimReport {
+    pub group: usize,
+    /// Rows this group gathered.
+    pub rows: u64,
+    /// Simulated device time it spent doing so, milliseconds.
+    pub sim_ms: f64,
+    /// Implied device-side gather throughput, GB/s.
+    pub simulated_gbps: f64,
+}
+
+/// The running sim-backed server.
+pub struct SimBackend {
+    pipeline: Pipeline,
+    metrics: Arc<Metrics>,
+    plan: Arc<WindowPlan>,
+    table: Table,
+    placement: Placement,
+    stats: Arc<Vec<GroupServeStats>>,
+}
+
+impl SimBackend {
+    /// Start the backend with a placement built from `cfg.policy`.
+    pub fn start(
+        cfg: SimBackendConfig,
+        map: &TopologyMap,
+        plan: WindowPlan,
+        table: Table,
+        timing: SimTiming,
+    ) -> anyhow::Result<Self> {
+        map.validate()?;
+        let placement = Placement::build(cfg.policy, map, &plan, cfg.seed)?;
+        Self::start_with_placement(cfg, map, plan, placement, table, timing)
+    }
+
+    /// Start with a prebuilt placement (fleet shards carry their own).
+    pub fn start_with_placement(
+        cfg: SimBackendConfig,
+        map: &TopologyMap,
+        plan: WindowPlan,
+        placement: Placement,
+        table: Table,
+        timing: SimTiming,
+    ) -> anyhow::Result<Self> {
+        if table.rows != plan.total_rows {
+            return Err(anyhow!(
+                "table has {} rows but plan covers {}",
+                table.rows,
+                plan.total_rows
+            ));
+        }
+        let metrics = Arc::new(Metrics::new());
+        let plan = Arc::new(plan);
+        let stats: Arc<Vec<GroupServeStats>> =
+            Arc::new((0..map.groups.len()).map(|_| Default::default()).collect());
+
+        let mut served_by_group: Vec<Vec<usize>> = vec![Vec::new(); map.groups.len()];
+        for w in 0..plan.count() {
+            for &g in placement.serving_groups(w) {
+                served_by_group[g].push(w);
+            }
+        }
+        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> =
+            (0..map.groups.len()).map(|_| None).collect();
+        let mut workers = Vec::new();
+        for (g, served) in served_by_group.iter().enumerate() {
+            if served.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            senders[g] = Some(tx);
+            let mut worker = SimWorker {
+                group: g,
+                sms: map.groups[g].clone(),
+                machine: match &timing {
+                    SimTiming::Machine(m) => Some(m.as_ref().clone()),
+                    SimTiming::Probed => None,
+                },
+                solo_gbps: map.solo_gbps[g].max(1e-9),
+                calib_accesses: cfg.calib_accesses_per_sm.max(1),
+                plan: Arc::clone(&plan),
+                table: table.clone(),
+                metrics: Arc::clone(&metrics),
+                stats: Arc::clone(&stats),
+                ns_per_row: HashMap::new(),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("a100win-sim-g{g}"))
+                .spawn(move || {
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            WorkerMsg::Shutdown => break,
+                            WorkerMsg::Job(job) => worker.execute(job),
+                        }
+                    }
+                })
+                .context("spawning sim worker")?;
+            workers.push(handle);
+        }
+
+        let pipeline = Pipeline::start(
+            cfg.batcher.clone(),
+            Arc::clone(&plan),
+            placement.clone(),
+            Arc::clone(&metrics),
+            table.d,
+            senders,
+            workers,
+        )?;
+
+        Ok(Self {
+            pipeline,
+            metrics,
+            plan,
+            table,
+            placement,
+            stats,
+        })
+    }
+
+    pub fn plan(&self) -> &WindowPlan {
+        &self.plan
+    }
+
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// What the simulated device did: per-group rows, device time, and the
+    /// implied gather throughput under the active placement.
+    pub fn sim_report(&self) -> Vec<GroupSimReport> {
+        let row_bytes = self.plan.row_bytes as f64;
+        self.stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.rows.load(Ordering::Relaxed) > 0)
+            .map(|(group, s)| {
+                let rows = s.rows.load(Ordering::Relaxed);
+                let ns = s.sim_ns.load(Ordering::Relaxed).max(1) as f64;
+                GroupSimReport {
+                    group,
+                    rows,
+                    sim_ms: ns / 1e6,
+                    simulated_gbps: rows as f64 * row_bytes / ns,
+                }
+            })
+            .collect()
+    }
+
+    fn stop(&self) {
+        self.pipeline.stop();
+    }
+}
+
+impl Backend for SimBackend {
+    fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
+        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.table.rows, batch)
+    }
+
+    fn d(&self) -> usize {
+        self.table.d
+    }
+
+    fn rows(&self) -> u64 {
+        self.table.rows
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    fn shutdown(&self) {
+        self.stop();
+    }
+}
+
+impl Drop for SimBackend {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One group's worker: host gathers + simulated-device accounting.
+struct SimWorker {
+    group: usize,
+    /// The probe map's smids for this group (filtered against the machine
+    /// when calibrating).
+    sms: Vec<SmId>,
+    machine: Option<Machine>,
+    solo_gbps: f64,
+    calib_accesses: u64,
+    plan: Arc<WindowPlan>,
+    table: Table,
+    metrics: Arc<Metrics>,
+    stats: Arc<Vec<GroupServeStats>>,
+    /// Memoized calibration results per window.
+    ns_per_row: HashMap<usize, f64>,
+}
+
+impl SimWorker {
+    fn execute(&mut self, job: Job) {
+        let rate = self.ns_per_row(job.window);
+        let w = self.plan.windows()[job.window];
+        let d = self.table.d;
+        let mut rows = Vec::with_capacity(job.local_rows.len() * d);
+        for &local in &job.local_rows {
+            let r = (w.start_row + local as u64) as usize;
+            rows.extend_from_slice(&self.table.data[r * d..(r + 1) * d]);
+        }
+        let st = &self.stats[self.group];
+        st.rows
+            .fetch_add(job.local_rows.len() as u64, Ordering::Relaxed);
+        st.sim_ns
+            .fetch_add((job.local_rows.len() as f64 * rate) as u64, Ordering::Relaxed);
+        job.acc.scatter(&job.positions, &rows, d);
+        job.acc.finish_part(&self.metrics);
+    }
+
+    /// Simulated device cost of one row gathered from `window` by this
+    /// group (ns).  GB/s ≡ bytes/ns, so `ns_per_row = row_bytes / gbps`.
+    fn ns_per_row(&mut self, window: usize) -> f64 {
+        if let Some(&r) = self.ns_per_row.get(&window) {
+            return r;
+        }
+        let row_bytes = self.plan.row_bytes as f64;
+        let rate = match &self.machine {
+            Some(m) => {
+                let sms: Vec<SmId> = self
+                    .sms
+                    .iter()
+                    .copied()
+                    .filter(|&s| s < m.topology().sm_count())
+                    .collect();
+                if sms.is_empty() {
+                    row_bytes / self.solo_gbps
+                } else {
+                    let region = self.plan.region_of(&self.plan.windows()[window]);
+                    let mut spec = MeasurementSpec::uniform_all(
+                        &sms,
+                        Pattern::Uniform(region),
+                        self.calib_accesses,
+                        0xCA11B ^ window as u64,
+                    );
+                    spec.txn_bytes = self.plan.row_bytes;
+                    row_bytes / m.run(&spec).gbps.max(1e-9)
+                }
+            }
+            None => row_bytes / self.solo_gbps,
+        };
+        self.ns_per_row.insert(window, rate);
+        rate
+    }
+}

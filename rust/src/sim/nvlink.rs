@@ -21,11 +21,40 @@
 
 use crate::config::MachineConfig;
 use crate::sim::access::{Pattern, Stream};
+use crate::sim::calendar::{CalendarQueue, Event};
 use crate::sim::pages::{line_of, page_of, page_shift};
 use crate::sim::queue::{ns_to_ps, svc_ps, Ps, SingleServer};
 use crate::sim::tlb::SetAssocTlb;
 use crate::sim::walker::WalkerPool;
 use crate::sim::hbm::Hbm;
+
+/// The two event cores `run_remote` can drive: the production
+/// [`CalendarQueue`] and the seed-style binary heap kept as the pop-order
+/// oracle (mirroring `Machine::run` vs `Machine::run_reference_heap`).
+trait EventQueue {
+    fn push_event(&mut self, ev: Event);
+    fn pop_event(&mut self) -> Option<Event>;
+}
+
+impl EventQueue for CalendarQueue {
+    fn push_event(&mut self, ev: Event) {
+        self.push(ev);
+    }
+
+    fn pop_event(&mut self) -> Option<Event> {
+        self.pop()
+    }
+}
+
+impl EventQueue for std::collections::BinaryHeap<std::cmp::Reverse<Event>> {
+    fn push_event(&mut self, ev: Event) {
+        self.push(std::cmp::Reverse(ev));
+    }
+
+    fn pop_event(&mut self) -> Option<Event> {
+        self.pop().map(|std::cmp::Reverse(ev)| ev)
+    }
+}
 
 /// NVLink ingress configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,13 +110,44 @@ pub struct RemoteMeasurement {
 ///
 /// Event model mirrors [`crate::sim::engine`] but with the single
 /// device-level ingress path: link -> NVLink TLB (-> walker on miss) ->
-/// HBM channel.
+/// HBM channel.  Completion events are ordered by the same indexed
+/// [`CalendarQueue`] the engine uses; pops are in exact tuple order, so
+/// results are bit-identical to the heap-driven loop kept as
+/// [`run_remote_reference_heap`] (the equivalence property test below
+/// mirrors the engine's).
 pub fn run_remote(
     cfg: &MachineConfig,
     nv: &NvlinkConfig,
     peers: &[PeerSpec],
     accesses_per_peer: u64,
     seed: u64,
+) -> RemoteMeasurement {
+    let queue = CalendarQueue::new(peers.len() * nv.outstanding_per_peer + 1);
+    run_remote_on(cfg, nv, peers, accesses_per_peer, seed, queue)
+}
+
+/// The seed-style `BinaryHeap` event loop, kept as the pop-order oracle
+/// for the calendar-queue port.  Not a production path.
+#[doc(hidden)]
+pub fn run_remote_reference_heap(
+    cfg: &MachineConfig,
+    nv: &NvlinkConfig,
+    peers: &[PeerSpec],
+    accesses_per_peer: u64,
+    seed: u64,
+) -> RemoteMeasurement {
+    let queue: std::collections::BinaryHeap<std::cmp::Reverse<Event>> =
+        std::collections::BinaryHeap::with_capacity(peers.len() * nv.outstanding_per_peer + 1);
+    run_remote_on(cfg, nv, peers, accesses_per_peer, seed, queue)
+}
+
+fn run_remote_on<Q: EventQueue>(
+    cfg: &MachineConfig,
+    nv: &NvlinkConfig,
+    peers: &[PeerSpec],
+    accesses_per_peer: u64,
+    seed: u64,
+    mut queue: Q,
 ) -> RemoteMeasurement {
     assert!(!peers.is_empty());
     let shift = page_shift(cfg.tlb.page_bytes);
@@ -144,8 +204,6 @@ pub fn run_remote(
         })
         .collect();
 
-    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Ps, u32, Ps)>> =
-        std::collections::BinaryHeap::new();
     let issue = |state: &mut Vec<Peer>,
                      link: &mut SingleServer,
                      tlb: &mut SetAssocTlb,
@@ -182,14 +240,14 @@ pub fn run_remote(
                 pid,
                 k * 700,
             );
-            heap.push(std::cmp::Reverse((done, pid, issued)));
+            queue.push_event((done, pid, issued));
         }
     }
 
     let mut meas_start = Ps::MAX;
     let mut meas_end: Ps = 0;
     let mut counted_bytes = 0u64;
-    while let Some(std::cmp::Reverse((t, pid, issued))) = heap.pop() {
+    while let Some((t, pid, issued)) = queue.pop_event() {
         let p = &mut state[pid as usize];
         p.completed += 1;
         if p.completed > p.warmup {
@@ -209,7 +267,7 @@ pub fn run_remote(
                 pid,
                 t,
             );
-            heap.push(std::cmp::Reverse((done, pid, t_issue)));
+            queue.push_event((done, pid, t_issue));
         }
     }
 
@@ -324,5 +382,61 @@ mod tests {
         let a = run(80, 2);
         let b = run(80, 2);
         assert_eq!(a.gbps, b.gbps);
+    }
+
+    fn assert_bit_identical(a: &RemoteMeasurement, b: &RemoteMeasurement, what: &str) {
+        assert_eq!(a.gbps.to_bits(), b.gbps.to_bits(), "{what}: gbps");
+        assert_eq!(
+            a.tlb_hit_rate.to_bits(),
+            b.tlb_hit_rate.to_bits(),
+            "{what}: tlb_hit_rate"
+        );
+        assert_eq!(
+            a.avg_latency_ns.to_bits(),
+            b.avg_latency_ns.to_bits(),
+            "{what}: avg_latency_ns"
+        );
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_resident_and_thrash() {
+        let cfg = MachineConfig::a100_80gb();
+        let nv = NvlinkConfig::a100();
+        for gib in [32u64, 80] {
+            let ps = peers(4, MemRegion::new(0, gib * GIB));
+            assert_bit_identical(
+                &run_remote(&cfg, &nv, &ps, 15_000, 3),
+                &run_remote_reference_heap(&cfg, &nv, &ps, 15_000, 3),
+                &format!("{gib} GiB"),
+            );
+        }
+    }
+
+    #[test]
+    fn property_calendar_remote_is_bit_identical_to_heap() {
+        // Mirrors the engine's calendar-vs-heap property test: random peer
+        // counts, region shapes (incl. past-reach thrash that drives the
+        // walker backlog over the calendar's ring horizon), and seeds.
+        let cfg = MachineConfig::a100_80gb();
+        crate::util::prop::check("nvlink-calendar-vs-heap", 15, |g| {
+            let nv = NvlinkConfig::a100();
+            let n_peers = g.usize(1, 5);
+            let specs: Vec<PeerSpec> = (0..n_peers)
+                .map(|_| {
+                    let base = g.u64(0, 40) * GIB;
+                    let len = g.u64(1, 80 - base / GIB) * GIB;
+                    PeerSpec {
+                        pattern: Pattern::Uniform(MemRegion::new(base, len)),
+                    }
+                })
+                .collect();
+            let accesses = g.u64(1_000, 8_000);
+            let seed = g.u64(0, u64::MAX - 1);
+            assert_bit_identical(
+                &run_remote(&cfg, &nv, &specs, accesses, seed),
+                &run_remote_reference_heap(&cfg, &nv, &specs, accesses, seed),
+                &format!("case seed {}", g.case_seed),
+            );
+        });
     }
 }

@@ -2,12 +2,15 @@
 //! load, independent of service completions — the honest way to measure a
 //! server's latency-throughput curve (closed-loop clients self-throttle
 //! and hide queueing collapse).
+//!
+//! Backend-agnostic: drives any [`Service`] — sim-backed for hermetic QPS
+//! sweeps (`a100win bench-serve`), PJRT-backed when artifacts exist.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::EmbeddingServer;
+use crate::service::Service;
 use crate::util::rng::Rng;
 use crate::workload::RequestGen;
 
@@ -20,8 +23,8 @@ pub struct LoadPoint {
     pub achieved_rps: f64,
     pub mean_latency_us: f64,
     pub p99_latency_us: u64,
-    /// Requests dropped because the system fell behind the arrival clock
-    /// by more than the drop deadline.
+    /// Requests dropped at the in-flight cap (the system fell behind the
+    /// arrival clock).
     pub dropped: u64,
     pub errors: u64,
 }
@@ -33,6 +36,9 @@ pub struct OpenLoopConfig {
     /// In-flight cap: arrivals beyond it are counted as dropped (an open
     /// system would queue unboundedly; the cap keeps runs finite).
     pub max_in_flight: usize,
+    /// Deadline attached to every request (None = unbounded); expiries
+    /// count as errors.
+    pub deadline: Option<Duration>,
     pub seed: u64,
 }
 
@@ -41,24 +47,26 @@ impl Default for OpenLoopConfig {
         Self {
             duration: Duration::from_millis(800),
             max_in_flight: 256,
+            deadline: None,
             seed: 7,
         }
     }
 }
 
-/// Drive the server at `offered_rps` with Poisson arrivals; requests are
-/// executed by a pool of dispatcher threads so arrivals never block on
-/// service (open loop), up to the in-flight cap.
+/// Drive the service at `offered_rps` with Poisson arrivals; requests are
+/// executed by per-arrival threads so arrivals never block on service
+/// (open loop), up to the in-flight cap.
 pub fn drive(
-    server: &Arc<EmbeddingServer>,
+    service: &Service,
     gen: &mut RequestGen,
     offered_rps: f64,
     cfg: &OpenLoopConfig,
 ) -> LoadPoint {
     assert!(offered_rps > 0.0);
     let mut rng = Rng::seed_from_u64(cfg.seed);
-    // Pre-draw the arrival schedule and payloads.
-    let mut arrivals: Vec<(Duration, Vec<u64>)> = Vec::new();
+    // Pre-draw the arrival schedule and payloads (shared by Arc: the spawn
+    // path never copies indices).
+    let mut arrivals: Vec<(Duration, Arc<Vec<u64>>)> = Vec::new();
     let mut t = 0.0f64;
     loop {
         // Exponential inter-arrival.
@@ -67,7 +75,7 @@ pub fn drive(
         if t > cfg.duration.as_secs_f64() {
             break;
         }
-        arrivals.push((Duration::from_secs_f64(t), gen.next_request()));
+        arrivals.push((Duration::from_secs_f64(t), Arc::new(gen.next_request())));
     }
 
     let in_flight = Arc::new(AtomicU64::new(0));
@@ -92,17 +100,20 @@ pub fn drive(
                 continue;
             }
             in_flight.fetch_add(1, Ordering::Relaxed);
-            let server = Arc::clone(server);
             let in_flight = Arc::clone(&in_flight);
             let errors = Arc::clone(&errors);
             let done = Arc::clone(&done);
             let lat_sum_us = Arc::clone(&lat_sum_us);
             let lat_max_us = Arc::clone(&lat_max_us);
             let hist = Arc::clone(&hist);
-            let rows = rows.clone();
+            let rows = Arc::clone(rows);
+            let deadline = cfg.deadline;
             s.spawn(move || {
                 let t0 = Instant::now();
-                match server.lookup(rows) {
+                let result = service
+                    .submit(rows, deadline)
+                    .and_then(|ticket| ticket.wait());
+                match result {
                     Ok(_) => {
                         let us = t0.elapsed().as_micros() as u64;
                         lat_sum_us.fetch_add(us, Ordering::Relaxed);

@@ -53,8 +53,9 @@ fn lookup_roundtrip_group_to_chunk() {
     let (server, table) = start_server(2, PlacementPolicy::GroupToChunk);
     let mut rng = Rng::seed_from_u64(1);
     for _ in 0..5 {
-        let rows: Vec<u64> = (0..300).map(|_| rng.gen_range(table.rows)).collect();
-        let out = server.lookup(rows.clone()).unwrap();
+        let rows: Arc<Vec<u64>> =
+            Arc::new((0..300).map(|_| rng.gen_range(table.rows)).collect());
+        let out = server.lookup(Arc::clone(&rows)).unwrap();
         assert_eq!(out.len(), rows.len() * table.d);
         for (i, &r) in rows.iter().enumerate() {
             for j in 0..table.d {
@@ -74,8 +75,9 @@ fn lookup_roundtrip_naive_policy() {
     // Naive placement must still produce correct answers (it is only
     // slower on the real device); all groups serve all windows.
     let (server, table) = start_server(2, PlacementPolicy::Naive);
-    let rows: Vec<u64> = (0..500).map(|i| (i * 7919) as u64 % table.rows).collect();
-    let out = server.lookup(rows.clone()).unwrap();
+    let rows: Arc<Vec<u64>> =
+        Arc::new((0..500).map(|i| (i * 7919) as u64 % table.rows).collect());
+    let out = server.lookup(Arc::clone(&rows)).unwrap();
     for (i, &r) in rows.iter().enumerate() {
         assert_eq!(out[i * table.d], table.expected(r, 0));
     }
@@ -95,9 +97,9 @@ fn concurrent_clients_all_get_correct_answers() {
                 let mut rng = Rng::seed_from_u64(c);
                 let mut bad = 0;
                 for _ in 0..10 {
-                    let rows: Vec<u64> =
-                        (0..64).map(|_| rng.gen_range(table.rows)).collect();
-                    let out = server.lookup(rows.clone()).unwrap();
+                    let rows: Arc<Vec<u64>> =
+                        Arc::new((0..64).map(|_| rng.gen_range(table.rows)).collect());
+                    let out = server.lookup(Arc::clone(&rows)).unwrap();
                     for (i, &r) in rows.iter().enumerate() {
                         if out[i * table.d] != table.expected(r, 0) {
                             bad += 1;
@@ -119,11 +121,11 @@ fn concurrent_clients_all_get_correct_answers() {
 #[test]
 fn out_of_range_rows_rejected() {
     let (server, table) = start_server(1, PlacementPolicy::GroupToChunk);
-    assert!(server.lookup(vec![table.rows]).is_err());
-    assert!(server.lookup(vec![0, table.rows + 5]).is_err());
+    assert!(server.lookup(Arc::new(vec![table.rows])).is_err());
+    assert!(server.lookup(Arc::new(vec![0, table.rows + 5])).is_err());
     assert_eq!(server.metrics().rejected, 2);
     // Server still healthy afterwards.
-    let out = server.lookup(vec![0, 1]).unwrap();
+    let out = server.lookup(Arc::new(vec![0, 1])).unwrap();
     assert_eq!(out[0], table.expected(0, 0));
     server.shutdown();
 }
@@ -131,7 +133,7 @@ fn out_of_range_rows_rejected() {
 #[test]
 fn empty_lookup_is_noop() {
     let (server, _table) = start_server(1, PlacementPolicy::GroupToChunk);
-    assert_eq!(server.lookup(vec![]).unwrap().len(), 0);
+    assert_eq!(server.lookup(Arc::new(vec![])).unwrap().len(), 0);
     server.shutdown();
 }
 
@@ -139,12 +141,12 @@ fn empty_lookup_is_noop() {
 fn single_row_and_full_window_batches() {
     let (server, table) = start_server(2, PlacementPolicy::GroupToChunk);
     // 1 row.
-    let out = server.lookup(vec![42]).unwrap();
+    let out = server.lookup(Arc::new(vec![42])).unwrap();
     assert_eq!(out.len(), table.d);
     assert_eq!(out[0], table.expected(42, 0));
     // A batch larger than the biggest artifact (forces chunking).
-    let rows: Vec<u64> = (0..5000).map(|i| i as u64 % table.rows).collect();
-    let out = server.lookup(rows.clone()).unwrap();
+    let rows: Arc<Vec<u64>> = Arc::new((0..5000).map(|i| i as u64 % table.rows).collect());
+    let out = server.lookup(Arc::clone(&rows)).unwrap();
     for (i, &r) in rows.iter().enumerate().step_by(97) {
         assert_eq!(out[i * table.d], table.expected(r, 0));
     }

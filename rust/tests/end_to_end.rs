@@ -71,8 +71,8 @@ fn serve_mixed_workload_concurrently() {
                 });
                 let mut checked = 0u64;
                 for _ in 0..15 {
-                    let req = gen.next_request();
-                    let out = server.lookup(req.clone()).unwrap();
+                    let req = Arc::new(gen.next_request());
+                    let out = server.lookup(Arc::clone(&req)).unwrap();
                     assert_eq!(out.len(), req.len() * table.d);
                     for (i, &r) in req.iter().enumerate() {
                         assert_eq!(out[i * table.d], table.expected(r, 0));
@@ -104,7 +104,7 @@ fn trace_replay_is_reproducible() {
     let run = |server: &EmbeddingServer| -> Vec<f32> {
         let mut all = Vec::new();
         for req in &trace.requests {
-            all.extend(server.lookup(req.clone()).unwrap());
+            all.extend(server.lookup(Arc::new(req.clone())).unwrap());
         }
         all
     };
@@ -177,7 +177,7 @@ fn probe_artifact_feeds_server() {
     let plan = WindowPlan::split(rows, 128, 2);
     let cfg = ServerConfig::new(artifacts);
     let server = EmbeddingServer::start(cfg, &loaded, plan, table.clone()).unwrap();
-    let out = server.lookup(vec![0, rows - 1]).unwrap();
+    let out = server.lookup(Arc::new(vec![0, rows - 1])).unwrap();
     assert_eq!(out[0], table.expected(0, 0));
     assert_eq!(out[meta.d], table.expected(rows - 1, 0));
     server.shutdown();
