@@ -103,7 +103,7 @@ fn serve_one(
         cfg,
         map,
         plan,
-        table.clone(),
+        table.view(),
     )?));
 
     let clients = 6;
@@ -119,7 +119,7 @@ fn serve_one(
                 let dist = if c % 2 == 0 {
                     Distribution::Uniform
                 } else {
-                    Distribution::Zipf { theta: 0.99 }
+                    Distribution::ZipfScattered { theta: 0.99 }
                 };
                 let mut gen = RequestGen::new(WorkloadSpec {
                     total_rows: table.rows,

@@ -1,0 +1,355 @@
+//! Skew-aware placement: rebalance the group↔window assignment from
+//! observed per-window load, epoch by epoch.
+//!
+//! The paper pins each SM resource group to one ≤reach window and shows
+//! that restores full-speed random access — but a *static* pin sizes each
+//! window's serving capacity for uniform traffic.  Under zipfian or
+//! hot-spot skew a hot window's groups saturate while cold windows idle.
+//! [`AdaptivePlacer`] keeps the paper's invariant (every group serves
+//! exactly one ≤reach window, every window covered) and re-deals groups so
+//! each window's share of probed capacity tracks its share of observed
+//! load: hot windows earn more groups.  Cf. TileLens (arXiv 2607.04031) on
+//! transparent layout adaptation over large-granularity memory.
+//!
+//! Deterministic: same signals + capacities → same placement, so the
+//! rebalance path is property-testable (`property_rebalance_keeps_invariant`).
+
+use std::time::Duration;
+
+use crate::probe::TopologyMap;
+
+use super::chunks::WindowPlan;
+use super::placement::{Placement, PlacementPolicy, Placer, WindowSignals};
+
+/// Tuning for [`AdaptivePlacer`] and the backend's rebalance driver.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Background rebalance period for backends that drive their own
+    /// epochs; `None` = epochs are ticked manually
+    /// (e.g. [`SimBackend::rebalance_epoch`](crate::service::SimBackend::rebalance_epoch)).
+    pub epoch: Option<Duration>,
+    /// Hysteresis: minimum |load share − capacity share| on some window
+    /// before a swap is proposed (keeps uniform traffic at generation 0).
+    /// Queue backlog ([`WindowSignals`](super::placement::WindowSignals)
+    /// `queued_rows`) tightens the effective threshold down to half.
+    pub min_imbalance: f64,
+    /// Minimum rows observed in an epoch before rebalancing (starvation of
+    /// signal must not cause thrashing swaps).
+    pub min_epoch_rows: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            epoch: None,
+            min_imbalance: 0.10,
+            min_epoch_rows: 256,
+        }
+    }
+}
+
+/// The skew-aware [`Placer`]: starts from the paper's group-to-chunk deal,
+/// then re-deals groups to windows proportionally to observed load.
+#[derive(Debug, Clone, Default)]
+pub struct AdaptivePlacer {
+    pub cfg: AdaptiveConfig,
+}
+
+impl AdaptivePlacer {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Greedy capacity-proportional deal: groups (fastest first) go to the
+    /// window with the largest remaining capacity deficit against its load
+    /// target; empty windows then steal the slowest group from the most
+    /// over-provisioned multi-group window so coverage always holds.
+    fn deal(map: &TopologyMap, load_share: &[f64]) -> (Vec<Vec<usize>>, Vec<usize>) {
+        let w = load_share.len();
+        let g = map.groups.len();
+        debug_assert!(g >= w);
+        let total_cap: f64 = map.solo_gbps.iter().sum();
+        let target: Vec<f64> = load_share.iter().map(|s| s * total_cap).collect();
+
+        let mut order: Vec<usize> = (0..g).collect();
+        order.sort_by(|&a, &b| {
+            map.solo_gbps[b]
+                .partial_cmp(&map.solo_gbps[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+
+        let mut groups_of_window = vec![Vec::new(); w];
+        let mut assigned = vec![0.0f64; w];
+        let mut window_of_group = vec![0usize; g];
+        for &gi in &order {
+            let wid = (0..w)
+                .max_by(|&a, &b| {
+                    (target[a] - assigned[a])
+                        .partial_cmp(&(target[b] - assigned[b]))
+                        .unwrap()
+                        .then(b.cmp(&a)) // ties: lower window id wins
+                })
+                .unwrap();
+            groups_of_window[wid].push(gi);
+            assigned[wid] += map.solo_gbps[gi];
+            window_of_group[gi] = wid;
+        }
+
+        // Coverage fix-up: a cold window may have been starved entirely.
+        while let Some(empty) = groups_of_window.iter().position(Vec::is_empty) {
+            let donor = (0..w)
+                .filter(|&i| groups_of_window[i].len() > 1)
+                .max_by(|&a, &b| {
+                    (assigned[a] - target[a])
+                        .partial_cmp(&(assigned[b] - target[b]))
+                        .unwrap()
+                        .then(b.cmp(&a))
+                })
+                .expect("g >= w guarantees a multi-group donor");
+            // Move the donor's slowest group.
+            let k = (0..groups_of_window[donor].len())
+                .min_by(|&a, &b| {
+                    let ga = groups_of_window[donor][a];
+                    let gb = groups_of_window[donor][b];
+                    map.solo_gbps[ga]
+                        .partial_cmp(&map.solo_gbps[gb])
+                        .unwrap()
+                        .then(ga.cmp(&gb))
+                })
+                .unwrap();
+            let moved = groups_of_window[donor].remove(k);
+            assigned[donor] -= map.solo_gbps[moved];
+            groups_of_window[empty].push(moved);
+            assigned[empty] += map.solo_gbps[moved];
+            window_of_group[moved] = empty;
+        }
+        (groups_of_window, window_of_group)
+    }
+}
+
+impl Placer for AdaptivePlacer {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    /// Initial placement: the paper's static group-to-chunk deal (uniform
+    /// prior — no load observed yet).
+    fn place(&self, map: &TopologyMap, plan: &WindowPlan, seed: u64) -> anyhow::Result<Placement> {
+        Placement::build(PlacementPolicy::GroupToChunk, map, plan, seed)
+    }
+
+    fn rebalance(
+        &self,
+        current: &Placement,
+        map: &TopologyMap,
+        plan: &WindowPlan,
+        signals: &WindowSignals,
+    ) -> Option<Placement> {
+        let w = plan.count();
+        let total = signals.total_rows();
+        // `total == 0` guards division even when `min_epoch_rows` is 0.
+        if signals.rows.len() != w
+            || total == 0
+            || total < self.cfg.min_epoch_rows
+            || map.groups.len() < w
+        {
+            return None;
+        }
+        let load_share: Vec<f64> = signals
+            .rows
+            .iter()
+            .map(|&r| r as f64 / total as f64)
+            .collect();
+
+        // Hysteresis against the *current* capacity shares.  Queue
+        // pressure (batcher depth vs the epoch's served rows) tightens the
+        // threshold down to half: when requests are backing up, a smaller
+        // mismatch is worth correcting; an unpressured system leaves the
+        // placement alone at the same mismatch.
+        let total_cap: f64 = map.solo_gbps.iter().sum();
+        let imbalance = (0..w)
+            .map(|wid| {
+                let cap: f64 = current.groups_of_window[wid]
+                    .iter()
+                    .map(|&g| map.solo_gbps[g])
+                    .sum();
+                (load_share[wid] - cap / total_cap).abs()
+            })
+            .fold(0.0f64, f64::max);
+        let pressure = (signals.queued_rows as f64 / total as f64).min(1.0);
+        if imbalance < self.cfg.min_imbalance * (1.0 - 0.5 * pressure) {
+            return None;
+        }
+
+        let (groups_of_window, window_of_group) = Self::deal(map, &load_share);
+        if groups_of_window == current.groups_of_window {
+            return None;
+        }
+        Some(Placement {
+            policy: PlacementPolicy::GroupToChunk,
+            generation: current.generation, // stamped by PlacementCell::store
+            groups_of_window,
+            window_of_group,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(solo: &[f64]) -> TopologyMap {
+        TopologyMap {
+            groups: (0..solo.len()).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+            reach_bytes: 1 << 30,
+            solo_gbps: solo.to_vec(),
+            independent: true,
+            card_id: "adaptive-test".into(),
+        }
+    }
+
+    fn signals(rows: &[u64]) -> WindowSignals {
+        WindowSignals {
+            rows: rows.to_vec(),
+            ..Default::default()
+        }
+    }
+
+    fn start(map: &TopologyMap, plan: &WindowPlan) -> Placement {
+        AdaptivePlacer::default().place(map, plan, 0).unwrap()
+    }
+
+    #[test]
+    fn hot_window_earns_more_groups() {
+        let m = map(&[100.0; 4]);
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let current = start(&m, &plan);
+        assert_eq!(current.groups_of_window[0].len(), 2);
+        let next = AdaptivePlacer::default()
+            .rebalance(&current, &m, &plan, &signals(&[9_000, 1_000]))
+            .expect("skew must trigger a swap");
+        assert_eq!(next.groups_of_window[0].len(), 3, "{next:?}");
+        assert_eq!(next.groups_of_window[1].len(), 1);
+        assert_eq!(next.check_windowed_invariant(&m, &plan), Ok(()));
+    }
+
+    #[test]
+    fn uniform_load_keeps_current_placement() {
+        let m = map(&[100.0; 4]);
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let current = start(&m, &plan);
+        assert!(AdaptivePlacer::default()
+            .rebalance(&current, &m, &plan, &signals(&[5_050, 4_950]))
+            .is_none());
+    }
+
+    #[test]
+    fn starved_epoch_never_swaps() {
+        let m = map(&[100.0; 4]);
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let current = start(&m, &plan);
+        let placer = AdaptivePlacer::default();
+        assert!(placer.rebalance(&current, &m, &plan, &signals(&[10, 0])).is_none());
+        assert!(placer.rebalance(&current, &m, &plan, &signals(&[0, 0])).is_none());
+    }
+
+    #[test]
+    fn queue_pressure_tightens_hysteresis() {
+        // Unequal groups: w0={g0,g2} holds 220/400 = 0.55 of capacity.
+        // A 0.47/0.53 load is a 0.08 mismatch — inside the idle threshold
+        // (0.10), outside the fully-pressured one (0.05).
+        let m = map(&[120.0, 100.0, 100.0, 80.0]);
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let current = start(&m, &plan);
+        let placer = AdaptivePlacer::default();
+        let idle = WindowSignals {
+            rows: vec![4_700, 5_300],
+            ..Default::default()
+        };
+        assert!(placer.rebalance(&current, &m, &plan, &idle).is_none());
+        let pressured = WindowSignals {
+            queued_rows: 10_000,
+            ..idle
+        };
+        let next = placer
+            .rebalance(&current, &m, &plan, &pressured)
+            .expect("backlog must lower the swap threshold");
+        assert_eq!(next.check_windowed_invariant(&m, &plan), Ok(()));
+    }
+
+    #[test]
+    fn cold_windows_keep_one_group() {
+        // Extreme skew: all load on window 0 — windows 1 and 2 must still
+        // be covered (the table must stay servable everywhere).
+        let m = map(&[120.0, 110.0, 100.0, 90.0, 80.0]);
+        let plan = WindowPlan::split(1 << 16, 128, 3);
+        let current = start(&m, &plan);
+        let next = AdaptivePlacer::default()
+            .rebalance(&current, &m, &plan, &signals(&[10_000, 0, 0]))
+            .expect("skew must trigger a swap");
+        assert_eq!(next.check_windowed_invariant(&m, &plan), Ok(()));
+        for wid in 1..3 {
+            assert_eq!(next.groups_of_window[wid].len(), 1, "{next:?}");
+        }
+        assert_eq!(next.groups_of_window[0].len(), 3);
+    }
+
+    #[test]
+    fn rebalance_is_deterministic() {
+        let m = map(&[100.0, 99.0, 98.0, 97.0]);
+        let plan = WindowPlan::split(1 << 16, 128, 2);
+        let current = start(&m, &plan);
+        let placer = AdaptivePlacer::default();
+        let s = signals(&[8_000, 2_000]);
+        let a = placer.rebalance(&current, &m, &plan, &s).unwrap();
+        let b = placer.rebalance(&current, &m, &plan, &s).unwrap();
+        assert_eq!(a.groups_of_window, b.groups_of_window);
+        assert_eq!(a.window_of_group, b.window_of_group);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn property_rebalance_keeps_invariant() {
+        prop::check("adaptive-invariant", 80, |g| {
+            let n_windows = g.usize(1, 6);
+            let n_groups = g.usize(n_windows, 14);
+            let map = TopologyMap {
+                groups: (0..n_groups).map(|q| vec![q * 2, q * 2 + 1]).collect(),
+                reach_bytes: 1 << 30,
+                solo_gbps: (0..n_groups).map(|_| g.f64(60.0, 140.0)).collect(),
+                independent: true,
+                card_id: "prop".into(),
+            };
+            // Windows sized well under reach so fits_reach holds.
+            let plan = WindowPlan::split(1 << 16, 128, n_windows);
+            let placer = AdaptivePlacer::default();
+            let mut current = placer.place(&map, &plan, g.u64(0, 99)).unwrap();
+            assert_eq!(current.check_windowed_invariant(&map, &plan), Ok(()));
+
+            // A run of epochs with arbitrary (possibly degenerate) loads:
+            // the invariant must hold after every accepted swap.
+            for _ in 0..g.usize(1, 8) {
+                let rows: Vec<u64> =
+                    (0..n_windows).map(|_| g.u64(0, 50_000)).collect();
+                let sig = WindowSignals {
+                    rows,
+                    ..Default::default()
+                };
+                if let Some(next) = placer.rebalance(&current, &map, &plan, &sig) {
+                    assert_eq!(
+                        next.check_windowed_invariant(&map, &plan),
+                        Ok(()),
+                        "signals {sig:?}"
+                    );
+                    current = next;
+                }
+            }
+        });
+    }
+}

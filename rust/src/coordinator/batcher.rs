@@ -187,6 +187,12 @@ impl<T> Batcher<T> {
     pub fn pending(&self) -> usize {
         self.state.lock().unwrap().queue.len()
     }
+
+    /// Rows queued across all pending requests — the queue-depth signal the
+    /// adaptive placer samples at epoch boundaries.
+    pub fn pending_rows(&self) -> usize {
+        self.state.lock().unwrap().pending_rows
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +252,18 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.total_rows(), 10);
+    }
+
+    #[test]
+    fn pending_rows_tracks_queue() {
+        let b: Batcher<u32> = Batcher::new(cfg(4, 10_000, 100));
+        assert_eq!(b.pending_rows(), 0);
+        b.submit(rows(vec![1, 2, 3]), None, 0).unwrap();
+        b.submit(rows(vec![4]), None, 1).unwrap();
+        assert_eq!(b.pending_rows(), 4);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.total_rows(), 4);
+        assert_eq!(b.pending_rows(), 0);
     }
 
     #[test]

@@ -89,12 +89,45 @@ pub struct Metrics {
     /// Session submissions that blocked on the in-flight budget (Queue
     /// overload policy).
     pub throttled: AtomicU64,
+    /// Submissions denied by the cross-tenant
+    /// [`GlobalAdmission`](crate::service::GlobalAdmission) budget (always
+    /// also counted in `admission_rejected`; kept separate so per-tenant
+    /// overload is distinguishable from fleet-wide overload).
+    pub global_rejected: AtomicU64,
+    /// Rows routed per window (index = window id; the adaptive placer's
+    /// load signal).  Sized by [`Metrics::for_windows`]; empty when the
+    /// owner tracks no placement.
+    pub window_rows: Vec<AtomicU64>,
     pub latency: LatencyHistogram,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A registry that additionally tracks per-window routed rows.
+    pub fn for_windows(windows: usize) -> Self {
+        Self {
+            window_rows: (0..windows).map(|_| AtomicU64::new(0)).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Record rows routed to a window (no-op for unsized registries).
+    pub fn record_window_rows(&self, window: usize, rows: u64) {
+        if let Some(c) = self.window_rows.get(window) {
+            c.fetch_add(rows, Ordering::Relaxed);
+        }
+    }
+
+    /// Lifetime per-window routed-row totals (epoch deltas are the
+    /// caller's subtraction).
+    pub fn window_rows_snapshot(&self) -> Vec<u64> {
+        self.window_rows
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -108,6 +141,8 @@ impl Metrics {
             admission_rejected: self.admission_rejected.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             throttled: self.throttled.load(Ordering::Relaxed),
+            global_rejected: self.global_rejected.load(Ordering::Relaxed),
+            window_rows: self.window_rows_snapshot(),
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.quantile_us(0.50),
             p99_latency_us: self.latency.quantile_us(0.99),
@@ -128,6 +163,9 @@ pub struct MetricsSnapshot {
     pub admission_rejected: u64,
     pub expired: u64,
     pub throttled: u64,
+    pub global_rejected: u64,
+    /// Rows routed per window (empty when the backend sizes no windows).
+    pub window_rows: Vec<u64>,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -138,7 +176,8 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} rows={} batches={} padded={} errors={} rejected={} \
-             shed={} expired={} throttled={} latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
+             shed={} shed_global={} expired={} throttled={} \
+             latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
             self.requests,
             self.rows,
             self.batches,
@@ -146,6 +185,7 @@ impl MetricsSnapshot {
             self.errors,
             self.rejected,
             self.admission_rejected,
+            self.global_rejected,
             self.expired,
             self.throttled,
             self.mean_latency_us,
@@ -194,6 +234,21 @@ mod tests {
         assert_eq!(s.requests, 3);
         assert_eq!(s.rows, 300);
         assert!(s.report().contains("requests=3"));
+    }
+
+    #[test]
+    fn window_rows_tracked_when_sized() {
+        let m = Metrics::for_windows(3);
+        m.record_window_rows(0, 5);
+        m.record_window_rows(2, 7);
+        m.record_window_rows(2, 1);
+        m.record_window_rows(9, 100); // out of range: ignored
+        assert_eq!(m.window_rows_snapshot(), vec![5, 0, 8]);
+        assert_eq!(m.snapshot().window_rows, vec![5, 0, 8]);
+        // Unsized registries ignore window recording entirely.
+        let plain = Metrics::new();
+        plain.record_window_rows(0, 5);
+        assert!(plain.window_rows_snapshot().is_empty());
     }
 
     #[test]

@@ -8,22 +8,29 @@
 //! async ticketed facade documented in `service/`; what lives here are its
 //! moving parts:
 //!
+//! * [`table`]     — zero-copy storage: one shared `Arc<[f32]>` behind
+//!                   [`TableView`]s; sharding never copies row data.
 //! * [`chunks`]    — slice the table into windows <= probed reach.
-//! * [`placement`] — pin groups to windows (the paper's three arms:
-//!                   Naive / SmToChunk / GroupToChunk).
-//! * [`router`]    — split requests by owning window, merge in order.
+//! * [`placement`] — pin groups to windows: the [`Placer`] trait (the
+//!                   paper's three arms as [`StaticPlacer`]) and the
+//!                   generation-stamped live [`PlacementCell`].
+//! * [`adaptive`]  — skew-aware [`AdaptivePlacer`]: rebalance the
+//!                   group↔window deal from per-window load signals.
+//! * [`router`]    — split requests by owning window (under the current
+//!                   placement generation), merge in order.
 //! * [`batcher`]   — dynamic batching with deadline + backpressure.
 //! * [`server`]    — the PJRT [`crate::service::Backend`]: per-group
 //!                   worker threads executing AOT gather kernels via
 //!                   [`crate::runtime`] (the hermetic sibling is
 //!                   [`crate::service::SimBackend`]).
-//! * [`state`]     — assignment epochs, group health, rebalancing.
+//! * [`state`]     — assignment epochs, group health, failure rebalancing.
 //! * [`cluster`]   — fleet-level sharding across several probed cards
 //!                   (maps vary card to card, per the paper); served
 //!                   through [`crate::service::FleetService`].
-//! * [`metrics`]   — counters + latency histogram, shared by backends,
-//!                   sessions, and tickets.
+//! * [`metrics`]   — counters + latency histogram + per-window load,
+//!                   shared by backends, sessions, and tickets.
 
+pub mod adaptive;
 pub mod batcher;
 pub mod chunks;
 pub mod cluster;
@@ -32,12 +39,17 @@ pub mod placement;
 pub mod router;
 pub mod server;
 pub mod state;
+pub mod table;
 
+pub use adaptive::{AdaptiveConfig, AdaptivePlacer};
 pub use batcher::{Batcher, BatcherConfig};
 pub use chunks::{Window, WindowPlan};
 pub use cluster::{CardSpec, CardShard, FleetPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use placement::{Placement, PlacementPolicy};
+pub use placement::{
+    Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
+};
 pub use router::{merge_rows, pad_indices, Router};
-pub use server::{EmbeddingServer, ServerConfig, Table};
+pub use server::{EmbeddingServer, ServerConfig};
 pub use state::{CoordinatorState, GroupHealth};
+pub use table::{Table, TableView};

@@ -11,6 +11,15 @@
 //!
 //! A [`Placement`] also answers the inverse question the router needs:
 //! which groups may serve a given window.
+//!
+//! Placement is a *live* layer, not a boot-time literal: the [`Placer`]
+//! trait produces placements (the three static arms via [`StaticPlacer`],
+//! skew-aware rebalancing via
+//! [`AdaptivePlacer`](super::adaptive::AdaptivePlacer)), and a
+//! [`PlacementCell`] publishes generation-stamped swaps to the dispatch
+//! path without draining in-flight tickets.
+
+use std::sync::{Arc, RwLock};
 
 use crate::probe::TopologyMap;
 use crate::sim::{Machine, Pattern, SmAssignment};
@@ -51,6 +60,9 @@ impl PlacementPolicy {
 #[derive(Debug, Clone)]
 pub struct Placement {
     pub policy: PlacementPolicy,
+    /// Swap stamp: 0 at construction, bumped by [`PlacementCell::store`]
+    /// each time a rebalanced placement goes live.
+    pub generation: u64,
     /// window id -> group indices (into `map.groups`) serving it.
     pub groups_of_window: Vec<Vec<usize>>,
     /// group index -> window id it is pinned to (GroupToChunk only; under
@@ -83,6 +95,7 @@ impl Placement {
                 let window_of_group = (0..g).map(|_| rng.gen_index(w)).collect();
                 Ok(Self {
                     policy,
+                    generation: 0,
                     groups_of_window: vec![(0..g).collect(); w],
                     window_of_group,
                 })
@@ -110,6 +123,7 @@ impl Placement {
                 }
                 Ok(Self {
                     policy,
+                    generation: 0,
                     groups_of_window,
                     window_of_group,
                 })
@@ -165,6 +179,176 @@ impl Placement {
             }
         }
         out
+    }
+
+    /// What every consumer of a placement structurally requires before the
+    /// paper-level invariant even applies: one serving list per plan
+    /// window, none empty, every group id within the map, and a
+    /// window-per-group table sized to the map.  The router panics on
+    /// anything less (`% 0` / index OOB), so backend startup and live-swap
+    /// gates check this in release builds — the one validator behind
+    /// [`check_windowed_invariant`](Self::check_windowed_invariant),
+    /// `SimBackend`'s swap gate, and `EmbeddingServer::swap_placement`.
+    pub fn check_servable(&self, windows: usize, groups: usize) -> Result<(), String> {
+        if self.groups_of_window.len() != windows {
+            return Err(format!(
+                "covers {} windows but the plan has {windows}",
+                self.groups_of_window.len()
+            ));
+        }
+        if self.window_of_group.len() != groups {
+            return Err(format!(
+                "window_of_group covers {} groups but the map has {groups}",
+                self.window_of_group.len()
+            ));
+        }
+        for (w, serving) in self.groups_of_window.iter().enumerate() {
+            if serving.is_empty() {
+                return Err(format!("window {w} has no serving group"));
+            }
+            if let Some(&g) = serving.iter().find(|&&g| g >= groups) {
+                return Err(format!(
+                    "window {w} names group {g} but the map has only {groups}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The paper's serving invariant for windowed placements: structurally
+    /// servable ([`check_servable`](Self::check_servable)), every group on
+    /// exactly one window's serving list, and every window within the
+    /// probed reach.  Returns a description of the first violation.
+    pub fn check_windowed_invariant(
+        &self,
+        map: &TopologyMap,
+        plan: &WindowPlan,
+    ) -> Result<(), String> {
+        self.check_servable(plan.count(), map.groups.len())?;
+        let mut count = vec![0usize; map.groups.len()];
+        for (w, groups) in self.groups_of_window.iter().enumerate() {
+            for &g in groups {
+                count[g] += 1;
+                if self.window_of_group[g] != w {
+                    return Err(format!("group {g} listed in window {w} but pinned elsewhere"));
+                }
+            }
+        }
+        if let Some(g) = count.iter().position(|&c| c != 1) {
+            return Err(format!("group {g} serves {} windows (want exactly 1)", count[g]));
+        }
+        if !plan.fits_reach(map.reach_bytes) {
+            return Err("a window exceeds the probed reach".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The placement seam: producers (Placer) and the live cell (PlacementCell).
+// ---------------------------------------------------------------------------
+
+/// Per-window load signals observed over one rebalance epoch (deltas since
+/// the previous epoch, not lifetime totals).  Collected from
+/// [`Metrics`](super::metrics::Metrics) by the serving backend.
+#[derive(Debug, Clone, Default)]
+pub struct WindowSignals {
+    /// Rows routed to each window this epoch (index = window id) — the
+    /// primary load signal every rebalancer consumes.
+    pub rows: Vec<u64>,
+    /// Mean request latency observed so far, µs (0 when unknown).
+    /// Informational: carried for placers that target a latency SLO; the
+    /// built-in [`AdaptivePlacer`](super::adaptive::AdaptivePlacer)
+    /// decides on `rows` + `queued_rows`.
+    pub mean_latency_us: f64,
+    /// Rows queued in the batcher at observation time: queue pressure
+    /// tightens the adaptive placer's rebalance hysteresis.
+    pub queued_rows: u64,
+}
+
+impl WindowSignals {
+    pub fn total_rows(&self) -> u64 {
+        self.rows.iter().sum()
+    }
+}
+
+/// A placement producer.  The three static arms are [`StaticPlacer`];
+/// [`AdaptivePlacer`](super::adaptive::AdaptivePlacer) additionally
+/// rebalances the group↔window assignment from observed load.
+pub trait Placer: Send + Sync + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Build the initial placement for a plan.
+    fn place(&self, map: &TopologyMap, plan: &WindowPlan, seed: u64) -> anyhow::Result<Placement>;
+
+    /// Propose a rebalanced placement from one epoch's signals; `None`
+    /// keeps the current one.  Windowed implementations must preserve the
+    /// paper's invariant ([`Placement::check_windowed_invariant`]): every
+    /// group on exactly one ≤reach window, every window covered.
+    fn rebalance(
+        &self,
+        current: &Placement,
+        map: &TopologyMap,
+        plan: &WindowPlan,
+        signals: &WindowSignals,
+    ) -> Option<Placement> {
+        let _ = (current, map, plan, signals);
+        None
+    }
+}
+
+/// The static policies as a [`Placer`]: naive / sm-to-chunk /
+/// group-to-chunk, computed once, never rebalanced.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticPlacer(pub PlacementPolicy);
+
+impl Placer for StaticPlacer {
+    fn name(&self) -> &'static str {
+        match self.0 {
+            PlacementPolicy::Naive => "static-naive",
+            PlacementPolicy::SmToChunk => "static-sm-to-chunk",
+            PlacementPolicy::GroupToChunk => "static-group-to-chunk",
+        }
+    }
+
+    fn place(&self, map: &TopologyMap, plan: &WindowPlan, seed: u64) -> anyhow::Result<Placement> {
+        Placement::build(self.0, map, plan, seed)
+    }
+}
+
+/// The live placement: a generation-stamped cell the dispatcher reads once
+/// per formed batch and a rebalancer writes between epochs.  Swaps never
+/// drain in-flight work — splits that already loaded the old `Arc` finish
+/// under it, the next batch routes under the new one.
+#[derive(Debug)]
+pub struct PlacementCell {
+    inner: RwLock<Arc<Placement>>,
+}
+
+impl PlacementCell {
+    pub fn new(placement: Placement) -> Self {
+        Self {
+            inner: RwLock::new(Arc::new(placement)),
+        }
+    }
+
+    /// The current placement (cheap: read lock + refcount bump).
+    pub fn load(&self) -> Arc<Placement> {
+        Arc::clone(&self.inner.read().unwrap())
+    }
+
+    /// Publish a new placement, stamping `generation = current + 1`.
+    /// Returns the new generation.
+    pub fn store(&self, mut placement: Placement) -> u64 {
+        let mut inner = self.inner.write().unwrap();
+        placement.generation = inner.generation + 1;
+        let generation = placement.generation;
+        *inner = Arc::new(placement);
+        generation
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.inner.read().unwrap().generation
     }
 }
 
@@ -264,6 +448,7 @@ mod tests {
             2,
         );
         let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 1).unwrap();
+        assert_eq!(p.generation, 0);
         let asg = p.sim_assignments(&map, &plan, &machine, 2);
         assert_eq!(asg.len(), topo.sm_count());
         // All SMs of one group read the same region.
@@ -274,5 +459,87 @@ mod tests {
                 assert_eq!(a.pattern.region(), &want);
             }
         }
+    }
+
+    #[test]
+    fn static_placer_matches_placement_build() {
+        let map = test_map();
+        let plan = plan(2);
+        for policy in [
+            PlacementPolicy::Naive,
+            PlacementPolicy::SmToChunk,
+            PlacementPolicy::GroupToChunk,
+        ] {
+            let a = StaticPlacer(policy).place(&map, &plan, 7).unwrap();
+            let b = Placement::build(policy, &map, &plan, 7).unwrap();
+            assert_eq!(a.groups_of_window, b.groups_of_window);
+            assert_eq!(a.window_of_group, b.window_of_group);
+            // Static placers never rebalance.
+            let signals = WindowSignals {
+                rows: vec![1_000_000, 1],
+                ..Default::default()
+            };
+            assert!(StaticPlacer(policy)
+                .rebalance(&a, &map, &plan, &signals)
+                .is_none());
+        }
+    }
+
+    #[test]
+    fn windowed_invariant_accepts_group_to_chunk() {
+        let map = test_map();
+        let plan = plan(2);
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        assert_eq!(p.check_windowed_invariant(&map, &plan), Ok(()));
+    }
+
+    #[test]
+    fn windowed_invariant_rejects_orphans_and_straddlers() {
+        let map = test_map();
+        let plan = plan(2);
+        let mut p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        // Orphan: strip window 0.
+        let moved = std::mem::take(&mut p.groups_of_window[0]);
+        assert!(p.check_windowed_invariant(&map, &plan).is_err());
+        // Straddler: a group listed under both windows.
+        p.groups_of_window[0] = moved;
+        let g = p.groups_of_window[0][0];
+        p.groups_of_window[1].push(g);
+        assert!(p.check_windowed_invariant(&map, &plan).is_err());
+    }
+
+    #[test]
+    fn validators_report_malformed_placements_without_panicking() {
+        let map = test_map();
+        let plan = plan(2);
+        let good = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        assert_eq!(good.check_servable(2, 4), Ok(()));
+        // A truncated window_of_group (shorter than the listed group ids)
+        // must come back as Err from both validators, not as an index
+        // panic inside them.
+        let mut truncated = good.clone();
+        truncated.window_of_group.clear();
+        assert!(truncated.check_servable(2, 4).is_err());
+        assert!(truncated.check_windowed_invariant(&map, &plan).is_err());
+        // Wrong window count and out-of-map group ids are Errs too.
+        assert!(good.check_servable(3, 4).is_err());
+        assert!(good.check_servable(2, 2).is_err());
+    }
+
+    #[test]
+    fn placement_cell_stamps_generations_without_blocking_readers() {
+        let map = test_map();
+        let plan = plan(2);
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+        let cell = PlacementCell::new(p.clone());
+        assert_eq!(cell.generation(), 0);
+        let old = cell.load();
+        assert_eq!(cell.store(p.clone()), 1);
+        assert_eq!(cell.store(p), 2);
+        assert_eq!(cell.generation(), 2);
+        // The reader that loaded before the swaps still holds generation 0:
+        // in-flight work is never drained or invalidated.
+        assert_eq!(old.generation, 0);
+        assert_eq!(cell.load().generation, 2);
     }
 }

@@ -38,58 +38,9 @@ use crate::service::backend::{submit_ticketed, Backend, Batch, Job, Pipeline, Ti
 use super::batcher::BatcherConfig;
 use super::chunks::WindowPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::placement::{Placement, PlacementPolicy};
+use super::placement::{Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer};
 use super::router::pad_indices;
-
-/// Host-side table (synthetic or user-provided).
-#[derive(Debug, Clone)]
-pub struct Table {
-    pub rows: u64,
-    pub d: usize,
-    pub data: Arc<Vec<f32>>,
-}
-
-impl Table {
-    /// Deterministic synthetic table: row r, column j holds
-    /// `r as f32 + j as f32 / 100.0` — lets tests verify any gather against
-    /// closed-form expectations without storing golden data.
-    pub fn synthetic(rows: u64, d: usize) -> Self {
-        let mut data = Vec::with_capacity(rows as usize * d);
-        for r in 0..rows {
-            for j in 0..d {
-                data.push(r as f32 + j as f32 / 100.0);
-            }
-        }
-        Self {
-            rows,
-            d,
-            data: Arc::new(data),
-        }
-    }
-
-    pub fn expected(&self, row: u64, j: usize) -> f32 {
-        self.data[row as usize * self.d + j]
-    }
-
-    /// A standalone copy of `rows` rows starting at `start_row` (fleet
-    /// sharding: each card holds only its shard).
-    pub fn slice_rows(&self, start_row: u64, rows: u64) -> Self {
-        let a = start_row as usize * self.d;
-        let b = (start_row + rows) as usize * self.d;
-        Self {
-            rows,
-            d: self.d,
-            data: Arc::new(self.data[a..b].to_vec()),
-        }
-    }
-
-    /// Slice one window's rows.
-    pub(crate) fn shard(&self, start_row: u64, rows: u64) -> &[f32] {
-        let a = start_row as usize * self.d;
-        let b = (start_row + rows) as usize * self.d;
-        &self.data[a..b]
-    }
-}
+use super::table::TableView;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -116,30 +67,35 @@ pub struct EmbeddingServer {
     pipeline: Pipeline,
     metrics: Arc<Metrics>,
     plan: Arc<WindowPlan>,
-    table: Table,
-    pub placement: Placement,
+    view: TableView,
+    placement: Arc<PlacementCell>,
+    /// The startup placement: the widest group↔window assignment this
+    /// server can honor (each worker uploaded only its startup windows'
+    /// shards), so live swaps are validated against it.
+    startup: Placement,
 }
 
 impl EmbeddingServer {
-    /// Start the server: probe map + table in, worker threads out.
+    /// Start the server: probe map + zero-copy table view in, worker
+    /// threads out.
     ///
-    /// `plan` must slice the table into windows whose row count matches an
+    /// `plan` must slice the view into windows whose row count matches an
     /// available artifact `n` (XLA static shapes).
     pub fn start(
         cfg: ServerConfig,
         map: &TopologyMap,
         plan: WindowPlan,
-        table: Table,
+        view: TableView,
     ) -> anyhow::Result<Self> {
-        if table.rows != plan.total_rows {
+        if view.rows() != plan.total_rows {
             return Err(anyhow!(
-                "table has {} rows but plan covers {}",
-                table.rows,
+                "table view has {} rows but plan covers {}",
+                view.rows(),
                 plan.total_rows
             ));
         }
-        let placement = Placement::build(cfg.policy, map, &plan, cfg.seed)?;
-        let metrics = Arc::new(Metrics::new());
+        let placement = StaticPlacer(cfg.policy).place(map, &plan, cfg.seed)?;
+        let metrics = Arc::new(Metrics::for_windows(plan.count()));
         let plan = Arc::new(plan);
 
         // --- workers: one per group that serves at least one window ------
@@ -163,7 +119,7 @@ impl EmbeddingServer {
                 windows: served.clone(),
                 artifacts_dir: cfg.artifacts_dir.clone(),
                 plan: Arc::clone(&plan),
-                table: table.clone(),
+                view: view.clone(),
                 metrics: Arc::clone(&metrics),
             };
             // Startup errors must fail `start`, not the thread: hand the
@@ -181,12 +137,13 @@ impl EmbeddingServer {
         }
 
         // --- dispatcher + queue (shared scaffolding) ----------------------
+        let cell = Arc::new(PlacementCell::new(placement.clone()));
         let pipeline = Pipeline::start(
             cfg.batcher.clone(),
             Arc::clone(&plan),
-            placement.clone(),
+            Arc::clone(&cell),
             Arc::clone(&metrics),
-            table.d,
+            view.d(),
             senders,
             workers,
         )?;
@@ -195,8 +152,9 @@ impl EmbeddingServer {
             pipeline,
             metrics,
             plan,
-            table,
-            placement,
+            view,
+            placement: cell,
+            startup: placement,
         })
     }
 
@@ -214,8 +172,35 @@ impl EmbeddingServer {
         &self.plan
     }
 
-    pub fn table(&self) -> &Table {
-        &self.table
+    pub fn table_view(&self) -> &TableView {
+        &self.view
+    }
+
+    /// The current live placement (generation-stamped).
+    pub fn placement(&self) -> Arc<Placement> {
+        self.placement.load()
+    }
+
+    /// Swap the live placement without draining in-flight tickets; the
+    /// next formed batch routes under it.  PJRT workers hold only the
+    /// window shards they uploaded at startup, so the new placement may
+    /// only assign a window to groups that already served it (subsets /
+    /// reorders — e.g. dropping a degraded group); anything wider needs a
+    /// restart.  Returns the new generation.
+    pub fn swap_placement(&self, placement: Placement) -> anyhow::Result<u64> {
+        placement
+            .check_servable(self.plan.count(), self.startup.window_of_group.len())
+            .map_err(|why| anyhow!("placement is unservable: {why}"))?;
+        for (w, groups) in placement.groups_of_window.iter().enumerate() {
+            for &g in groups {
+                if !self.startup.groups_of_window[w].contains(&g) {
+                    return Err(anyhow!(
+                        "group {g} holds no shard for window {w} (not in the startup placement)"
+                    ));
+                }
+            }
+        }
+        Ok(self.placement.store(placement))
     }
 
     /// Drain and stop all threads (idempotent; also runs on drop).
@@ -226,15 +211,19 @@ impl EmbeddingServer {
 
 impl Backend for EmbeddingServer {
     fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
-        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.table.rows, batch)
+        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.view.rows(), batch)
     }
 
     fn d(&self) -> usize {
-        self.table.d
+        self.view.d()
     }
 
     fn rows(&self) -> u64 {
-        self.table.rows
+        self.view.rows()
+    }
+
+    fn view(&self) -> Option<&TableView> {
+        Some(&self.view)
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -262,7 +251,9 @@ struct WorkerInit {
     windows: Vec<usize>,
     artifacts_dir: std::path::PathBuf,
     plan: Arc<WindowPlan>,
-    table: Table,
+    /// Zero-copy view of the served table; the worker uploads only its
+    /// windows' row slices to the device.
+    view: TableView,
     metrics: Arc<Metrics>,
 }
 
@@ -294,11 +285,11 @@ impl WorkerInit {
             .manifest()
             .by_entry("lookup")
             .iter()
-            .filter(|a| a.d == self.table.d)
+            .filter(|a| a.d == self.view.d())
             .map(|a| (a.b, a.name.clone()))
             .collect();
         if lookups.is_empty() {
-            return Err(anyhow!("no lookup artifacts for d={}", self.table.d));
+            return Err(anyhow!("no lookup artifacts for d={}", self.view.d()));
         }
         let n_required = rt
             .manifest()
@@ -316,8 +307,8 @@ impl WorkerInit {
                     win.rows
                 ));
             }
-            let host = self.table.shard(win.start_row, win.rows);
-            let buf = rt.upload_f32(host, &[win.rows as usize, self.table.d])?;
+            let host = self.view.rows_slice(win.start_row, win.rows);
+            let buf = rt.upload_f32(host, &[win.rows as usize, self.view.d()])?;
             shards.insert(w, buf);
         }
         for (_b, name) in &lookups {
@@ -329,7 +320,7 @@ impl WorkerInit {
             lookups,
             shards,
             metrics: self.metrics,
-            d: self.table.d,
+            d: self.view.d(),
         })
     }
 }

@@ -1,0 +1,226 @@
+//! Table storage: one shared, immutable f32 buffer and zero-copy views
+//! over row ranges of it.
+//!
+//! The serving stack never copies table data after construction.  A
+//! [`Table`] owns the backing storage (`Arc<[f32]>`); every consumer — a
+//! card shard in a fleet, a window shard uploaded by a PJRT worker, a sim
+//! worker's gather source — holds a [`TableView`]: `(storage, start_row,
+//! rows)` metadata over the same allocation.  Sharding a 10 GiB host
+//! table across 8 cards costs 8 refcount bumps, not 10 GiB of memcpy
+//! (ROADMAP ">10 GiB hosts" item; verified by a shared-`Arc` pointer
+//! identity test in `tests/adaptive_serving.rs`).
+
+use std::sync::Arc;
+
+/// Host-side table (synthetic or user-provided): the storage owner.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub rows: u64,
+    pub d: usize,
+    pub data: Arc<[f32]>,
+}
+
+impl Table {
+    /// Deterministic synthetic table: row r, column j holds
+    /// `r as f32 + j as f32 / 100.0` — lets tests verify any gather against
+    /// closed-form expectations without storing golden data.
+    pub fn synthetic(rows: u64, d: usize) -> Self {
+        let mut data = Vec::with_capacity(rows as usize * d);
+        for r in 0..rows {
+            for j in 0..d {
+                data.push(r as f32 + j as f32 / 100.0);
+            }
+        }
+        Self {
+            rows,
+            d,
+            data: data.into(),
+        }
+    }
+
+    /// Wrap an existing buffer (`data.len()` must be `rows * d`).
+    pub fn from_data(data: Vec<f32>, rows: u64, d: usize) -> anyhow::Result<Self> {
+        if data.len() as u64 != rows * d as u64 {
+            anyhow::bail!("{} f32s cannot hold {rows} rows x {d}", data.len());
+        }
+        Ok(Self {
+            rows,
+            d,
+            data: data.into(),
+        })
+    }
+
+    pub fn expected(&self, row: u64, j: usize) -> f32 {
+        self.data[row as usize * self.d + j]
+    }
+
+    /// Zero-copy view of the whole table (shares the storage `Arc`).
+    pub fn view(&self) -> TableView {
+        TableView {
+            storage: Arc::clone(&self.data),
+            start_row: 0,
+            rows: self.rows,
+            d: self.d,
+        }
+    }
+}
+
+/// A zero-copy window onto a [`Table`]'s rows: offset + length metadata
+/// over the shared storage.  Cloning or re-slicing a view never touches
+/// the f32 data.  Row indices on a view are *view-local* (0-based); the
+/// view remembers where it starts in the backing storage.
+#[derive(Debug, Clone)]
+pub struct TableView {
+    storage: Arc<[f32]>,
+    /// First row of this view in the storage's row space.
+    start_row: u64,
+    rows: u64,
+    d: usize,
+}
+
+impl TableView {
+    /// Rows visible through this view.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Row width (f32 elements per row).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// This view's first row in the backing storage's row space.
+    pub fn start_row(&self) -> u64 {
+        self.start_row
+    }
+
+    /// The shared backing storage — pointer identity across views proves
+    /// zero-copy sharding (`Arc::ptr_eq`).
+    pub fn storage(&self) -> &Arc<[f32]> {
+        &self.storage
+    }
+
+    /// One view-local row as a slice of `d` f32s.
+    pub fn row(&self, local_row: u64) -> &[f32] {
+        assert!(
+            local_row < self.rows,
+            "row {local_row} out of view ({} rows)",
+            self.rows
+        );
+        let a = (self.start_row + local_row) as usize * self.d;
+        &self.storage[a..a + self.d]
+    }
+
+    /// A contiguous view-local row range `[start_row, start_row + rows)` as
+    /// one slice (device-upload path: a window shard is always contiguous).
+    pub fn rows_slice(&self, start_row: u64, rows: u64) -> &[f32] {
+        assert!(
+            start_row + rows <= self.rows,
+            "rows [{start_row}, {}) out of view ({} rows)",
+            start_row + rows,
+            self.rows
+        );
+        let a = (self.start_row + start_row) as usize * self.d;
+        let b = (self.start_row + start_row + rows) as usize * self.d;
+        &self.storage[a..b]
+    }
+
+    /// Zero-copy sub-view of `rows` rows starting at view-local
+    /// `start_row`.  Offsets compose: a slice of a slice still indexes the
+    /// original storage directly.
+    pub fn slice_rows(&self, start_row: u64, rows: u64) -> TableView {
+        assert!(
+            start_row + rows <= self.rows,
+            "slice [{start_row}, {}) out of view ({} rows)",
+            start_row + rows,
+            self.rows
+        );
+        TableView {
+            storage: Arc::clone(&self.storage),
+            start_row: self.start_row + start_row,
+            rows,
+            d: self.d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_shares_storage_without_copying() {
+        let t = Table::synthetic(100, 4);
+        let v = t.view();
+        assert_eq!(v.rows(), 100);
+        assert_eq!(v.d(), 4);
+        assert!(Arc::ptr_eq(v.storage(), &t.data));
+        // Clones and slices alias the same allocation.
+        let s = v.slice_rows(25, 50);
+        assert!(Arc::ptr_eq(s.storage(), &t.data));
+        assert!(Arc::ptr_eq(s.clone().storage(), &t.data));
+    }
+
+    #[test]
+    fn slice_offsets_compose() {
+        let t = Table::synthetic(100, 4);
+        let a = t.view().slice_rows(10, 80); // storage rows [10, 90)
+        let b = a.slice_rows(5, 20); // storage rows [15, 35)
+        assert_eq!(b.start_row(), 15);
+        assert_eq!(b.rows(), 20);
+        for local in 0..20u64 {
+            let global = 15 + local;
+            assert_eq!(b.row(local), t.view().row(global));
+            assert_eq!(b.row(local)[0], t.expected(global, 0));
+        }
+    }
+
+    #[test]
+    fn rows_slice_matches_row_concatenation() {
+        let t = Table::synthetic(64, 3);
+        let v = t.view().slice_rows(16, 32);
+        let s = v.rows_slice(4, 8); // storage rows [20, 28)
+        assert_eq!(s.len(), 8 * 3);
+        for (k, row) in (20..28u64).enumerate() {
+            assert_eq!(&s[k * 3..(k + 1) * 3], t.view().row(row));
+        }
+    }
+
+    #[test]
+    fn overlapping_views_agree() {
+        let t = Table::synthetic(50, 2);
+        let a = t.view().slice_rows(0, 30);
+        let b = t.view().slice_rows(20, 30);
+        // Overlap rows [20, 30): both views read identical data.
+        for k in 0..10u64 {
+            assert_eq!(a.row(20 + k), b.row(k));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn row_out_of_bounds_panics() {
+        Table::synthetic(10, 2).view().row(10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn slice_out_of_bounds_panics() {
+        Table::synthetic(10, 2).view().slice_rows(5, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn sub_view_cannot_escape_parent() {
+        // A sub-view must not reach rows of the storage outside itself.
+        let t = Table::synthetic(100, 2);
+        let v = t.view().slice_rows(0, 10);
+        v.row(11); // storage row 11 exists, view row 11 does not
+    }
+
+    #[test]
+    fn from_data_validates_shape() {
+        assert!(Table::from_data(vec![0.0; 12], 4, 3).is_ok());
+        assert!(Table::from_data(vec![0.0; 11], 4, 3).is_err());
+    }
+}

@@ -39,11 +39,13 @@ pub type Result<T> = anyhow::Result<T>;
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
     pub use crate::config::{MachineConfig, GIB, LINE_BYTES};
-    pub use crate::coordinator::placement::PlacementPolicy;
+    pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptivePlacer};
+    pub use crate::coordinator::placement::{Placer, PlacementPolicy, StaticPlacer};
+    pub use crate::coordinator::table::{Table, TableView};
     pub use crate::probe::{report::TopologyMap, Prober};
     pub use crate::service::{
-        Backend, Service, SessionConfig, SimBackend, SimBackendConfig, SimTiming, Ticket,
-        TicketState,
+        Backend, GlobalAdmission, Service, SessionConfig, SimBackend, SimBackendConfig,
+        SimTiming, Ticket, TicketState,
     };
     pub use crate::sim::{
         Machine, Measurement, MeasurementSpec, MemRegion, Pattern, SmAssignment,

@@ -8,16 +8,17 @@ use std::time::Duration;
 
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
-    CardSpec, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+    AdaptiveConfig, CardSpec, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
 };
 use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
 use a100win::runtime::Runtime;
 use a100win::service::{
-    FleetService, OverloadPolicy, Service, SessionConfig, SimBackend, SimBackendConfig, SimTiming,
+    FleetService, GlobalAdmission, OverloadPolicy, Service, SessionConfig, SimBackend,
+    SimBackendConfig, SimTiming,
 };
 use a100win::sim::Machine;
-use a100win::workload::{drive, OpenLoopConfig, RequestGen, WorkloadSpec};
+use a100win::workload::{drive, synth::Distribution, OpenLoopConfig, RequestGen, WorkloadSpec};
 
 const USAGE: &str = "\
 a100win — full-speed random access to the entire (simulated) A100 memory
@@ -28,8 +29,10 @@ USAGE:
     a100win serve   [--backend sim|pjrt] [--policy naive|sm-to-chunk|group-to-chunk]
                     [--windows N] [--requests N] [--rows-per-request N]
                     [--cards N] [--rows-per-window N] [--artifacts DIR]
-    a100win bench-serve [--policy P] [--windows N] [--rows-per-request N]
-                    [--duration-ms N] [--rps A,B,C...]
+    a100win bench-serve [--backend sim] [--policy P] [--placer static|adaptive]
+                    [--windows N] [--rows-per-request N] [--duration-ms N]
+                    [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
+                    [--sim-timescale F]
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -48,7 +51,11 @@ SUBCOMMANDS:
     bench-serve
              open-loop Poisson QPS sweep against the sim-backed facade:
              offered vs achieved rps, latency percentiles (EXPERIMENTS.md
-             §Serve)
+             §Serve).  --skew zipf:<theta> front-loads traffic onto low
+             windows; --placer adaptive rebalances group↔window placement
+             from the observed load (EXPERIMENTS.md §Skew); --sim-timescale
+             paces completions by simulated device time so the wall-clock
+             knee is policy-dependent.
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -86,6 +93,15 @@ impl Args {
     }
 
     fn u64_flag(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    fn f64_flag(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.flag(name) {
             None => Ok(default),
             Some(v) => v
@@ -296,19 +312,24 @@ fn serve_sim(args: &Args) -> anyhow::Result<()> {
         SimBackendConfig::new(policy),
         &map,
         plan,
-        table.clone(),
+        table.view(),
         SimTiming::machine(machine),
     )?);
     let service = Service::new(backend.clone());
     // All CLI traffic flows through one admission-controlled session: the
-    // in-flight budget backpressures (Queue) instead of shedding.
-    let session = service.session(
+    // in-flight budget backpressures (Queue) instead of shedding.  The
+    // session also draws on a (here single-tenant) weighted global budget,
+    // the multi-tenant front door a fleet deployment shares.
+    let global = GlobalAdmission::new(128);
+    let session = service.session_with_budget(
         "cli",
         SessionConfig {
             max_in_flight: 64,
             overload: OverloadPolicy::Queue,
             deadline: None,
         },
+        &global,
+        1.0,
     );
 
     let t = std::time::Instant::now();
@@ -334,6 +355,12 @@ fn serve_sim(args: &Args) -> anyhow::Result<()> {
         m.rows as f64 * (SERVE_D as f64 * 4.0) / dt.as_secs_f64() / 1e6
     );
     println!("{}", m.report());
+    for t in global.report() {
+        println!(
+            "tenant '{}': weight {:.1}, guaranteed {} global slots, {} in flight",
+            t.tenant, t.weight, t.guaranteed, t.used
+        );
+    }
     println!("simulated device (per group, window-pinned placement):");
     for r in backend.sim_report() {
         println!(
@@ -341,6 +368,10 @@ fn serve_sim(args: &Args) -> anyhow::Result<()> {
             r.group, r.rows, r.sim_ms, r.simulated_gbps
         );
     }
+    println!(
+        "aggregate (makespan over groups): {:.1} GB/s",
+        backend.aggregate_sim_gbps()
+    );
     service.shutdown();
     Ok(())
 }
@@ -438,7 +469,7 @@ fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
         cfg,
         &map,
         plan,
-        table.clone(),
+        table.view(),
     )?));
 
     let t = std::time::Instant::now();
@@ -471,10 +502,32 @@ fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
 /// methodology for memory-system serving benchmarks (EXPERIMENTS.md
 /// §Serve).
 fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
+    match args.flag("backend").unwrap_or("sim") {
+        "sim" => {}
+        other => anyhow::bail!("bench-serve only supports --backend sim, got '{other}'"),
+    }
     let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
+    let adaptive = match args.flag("placer").unwrap_or("static") {
+        "static" => None,
+        "adaptive" => Some(AdaptiveConfig {
+            // Rebalance continuously while the sweep runs.
+            epoch: Some(Duration::from_millis(20)),
+            ..AdaptiveConfig::default()
+        }),
+        other => anyhow::bail!("--placer static|adaptive, got '{other}'"),
+    };
+    let skew = Distribution::parse(args.flag("skew").unwrap_or("uniform"))?;
     let windows = args.u64_flag("windows", 2)? as usize;
     let rows_per_request = args.u64_flag("rows-per-request", 256)? as usize;
     let duration = Duration::from_millis(args.u64_flag("duration-ms", 300)?);
+    let max_requests = match args.u64_flag("requests", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let timescale = args.f64_flag("sim-timescale", 0.0)?;
+    if !timescale.is_finite() || timescale < 0.0 {
+        anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
+    }
     let rps_list: Vec<f64> = match args.flag("rps") {
         None => vec![1_000.0, 4_000.0, 16_000.0, 64_000.0],
         Some(s) => s
@@ -494,27 +547,43 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let plan = WindowPlan::split(rows, (SERVE_D * 4) as u64, windows);
     // Probed timing: load generation measures the serving pipeline's
     // wall-clock behavior; skip per-window DES calibration at startup.
-    let service = Service::new(Arc::new(SimBackend::start(
-        SimBackendConfig::new(policy),
+    let mut cfg = SimBackendConfig::new(policy);
+    cfg.adaptive = adaptive;
+    cfg.sim_timescale = timescale;
+    let backend = Arc::new(SimBackend::start(
+        cfg,
         &map,
         plan,
-        table,
+        table.view(),
         SimTiming::Probed,
-    )?));
+    )?);
+    let service = Service::new(backend.clone());
 
     println!(
-        "open-loop sweep: policy {policy}, {windows} windows, {rows_per_request} rows/request, \
-         {} ms per point",
-        duration.as_millis()
+        "open-loop sweep: policy {policy}, placer {}, skew {skew:?}, {windows} windows, \
+         {rows_per_request} rows/request, {} ms per point{}",
+        args.flag("placer").unwrap_or("static"),
+        duration.as_millis(),
+        if timescale > 0.0 {
+            format!(", paced at {timescale}x sim time")
+        } else {
+            String::new()
+        }
     );
     println!(
         "{:>12} {:>12} {:>10} {:>10} {:>8} {:>8}",
         "offered_rps", "achieved_rps", "mean_us", "p99_us", "dropped", "errors"
     );
     for offered in rps_list {
-        let mut gen = RequestGen::new(WorkloadSpec::uniform(rows, rows_per_request, 42));
+        let mut gen = RequestGen::new(WorkloadSpec {
+            total_rows: rows,
+            distribution: skew,
+            request_rows: (rows_per_request, rows_per_request),
+            seed: 42,
+        });
         let cfg = OpenLoopConfig {
             duration,
+            max_requests,
             ..OpenLoopConfig::default()
         };
         let p = drive(&service, &mut gen, offered, &cfg);
@@ -523,7 +592,17 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             p.offered_rps, p.achieved_rps, p.mean_latency_us, p.p99_latency_us, p.dropped, p.errors
         );
     }
-    println!("{}", service.metrics().report());
+    let m = service.metrics();
+    println!("{}", m.report());
+    println!(
+        "per-window routed rows: {:?} (placement generation {})",
+        m.window_rows,
+        backend.placement().generation
+    );
+    println!(
+        "simulated aggregate (makespan over groups): {:.1} GB/s",
+        backend.aggregate_sim_gbps()
+    );
     service.shutdown();
     Ok(())
 }

@@ -45,9 +45,7 @@ impl TopologyMap {
     pub fn ground_truth(machine: &Machine) -> Self {
         let topo = machine.topology();
         Self {
-            groups: (0..topo.group_count())
-                .map(|g| topo.sms_in_group(g))
-                .collect(),
+            groups: topo.sm_groups(),
             reach_bytes: machine.config().tlb.reach_bytes(),
             solo_gbps: topo
                 .group_sizes()

@@ -26,9 +26,11 @@ use anyhow::{anyhow, Context};
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::placement::{Placement, PlacementCell};
 use crate::coordinator::router::Router;
+use crate::coordinator::table::TableView;
 
-use super::session::SlotGuard;
+use super::session::{GlobalSlotGuard, SlotGuard};
 
 /// One submission: shared row indices plus an optional completion deadline.
 ///
@@ -85,6 +87,8 @@ pub struct Ticket {
     metrics: Arc<Metrics>,
     /// Admission-control slot released when the ticket resolves or drops.
     pub(crate) slot: Option<SlotGuard>,
+    /// Cross-tenant budget slot (weighted fair sharing), same lifecycle.
+    pub(crate) global_slot: Option<GlobalSlotGuard>,
 }
 
 impl std::fmt::Debug for Ticket {
@@ -111,6 +115,7 @@ impl Ticket {
             buffered: None,
             metrics,
             slot: None,
+            global_slot: None,
         }
     }
 
@@ -159,9 +164,10 @@ impl Ticket {
     /// backend reports an error, or the deadline passes.
     pub fn wait(mut self) -> anyhow::Result<Vec<f32>> {
         let result = self.wait_inner();
-        // Release the admission slot the moment the request resolves (the
+        // Release the admission slots the moment the request resolves (the
         // whole ticket drops right after, but the intent is load-bearing).
         drop(self.slot.take());
+        drop(self.global_slot.take());
         result
     }
 
@@ -222,6 +228,13 @@ pub trait Backend: Send + Sync {
 
     /// Rows in this backend's (local) table.
     fn rows(&self) -> u64;
+
+    /// The zero-copy view this backend serves from, when it serves host
+    /// storage directly.  Pointer identity of `view().storage()` across
+    /// backends proves shared (un-copied) sharding.
+    fn view(&self) -> Option<&TableView> {
+        None
+    }
 
     fn metrics(&self) -> MetricsSnapshot;
 
@@ -317,12 +330,15 @@ pub(crate) enum WorkerMsg {
     Shutdown,
 }
 
-/// Split every request of a formed batch and fan sub-batches out to the
-/// per-group workers.  Requests whose deadline already passed are failed
-/// fast (counted in `Metrics::expired`) without touching a worker.
+/// Split every request of a formed batch under `placement` and fan
+/// sub-batches out to the per-group workers.  Requests whose deadline
+/// already passed are failed fast (counted in `Metrics::expired`) without
+/// touching a worker.  Per-window routed rows are recorded in `metrics` —
+/// the adaptive placer's load signal.
 pub(crate) fn dispatch_formed(
     formed: crate::coordinator::batcher::Batch<ResponseTx>,
     router: &mut Router<'_>,
+    placement: &Placement,
     senders: &[Option<mpsc::Sender<WorkerMsg>>],
     metrics: &Arc<Metrics>,
     d: usize,
@@ -337,7 +353,7 @@ pub(crate) fn dispatch_formed(
                 .send(Err(anyhow!("deadline expired before dispatch")));
             continue;
         }
-        let split = router.split(&req.rows);
+        let split = router.split(&req.rows, placement);
         let acc = Arc::new(RequestAcc::new(
             req.rows.len() * d,
             split.sub_batches.len(),
@@ -345,6 +361,7 @@ pub(crate) fn dispatch_formed(
             req.enqueued,
         ));
         for sb in split.sub_batches {
+            metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
             let job = Job {
                 window: sb.window,
                 local_rows: sb.local_rows,
@@ -376,10 +393,14 @@ pub(crate) struct Pipeline {
 
 impl Pipeline {
     /// Spawn the dispatcher over `senders` and adopt the worker handles.
+    /// The dispatcher loads `placement` once per formed batch, so a
+    /// [`PlacementCell::store`] from a rebalancer takes effect at the next
+    /// batch — in-flight splits finish under the generation they started
+    /// with (no drain).
     pub(crate) fn start(
         cfg: crate::coordinator::batcher::BatcherConfig,
         plan: Arc<crate::coordinator::chunks::WindowPlan>,
-        placement: crate::coordinator::placement::Placement,
+        placement: Arc<PlacementCell>,
         metrics: Arc<Metrics>,
         d: usize,
         senders: Vec<Option<mpsc::Sender<WorkerMsg>>>,
@@ -391,9 +412,10 @@ impl Pipeline {
             std::thread::Builder::new()
                 .name("a100win-dispatcher".into())
                 .spawn(move || {
-                    let mut router = Router::new(&plan, &placement);
+                    let mut router = Router::new(&plan);
                     while let Some(batch) = batcher.next_batch() {
-                        dispatch_formed(batch, &mut router, &senders, &metrics, d);
+                        let current = placement.load();
+                        dispatch_formed(batch, &mut router, &current, &senders, &metrics, d);
                     }
                     for s in senders.iter().flatten() {
                         let _ = s.send(WorkerMsg::Shutdown);

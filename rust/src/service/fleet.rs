@@ -22,7 +22,7 @@ use crate::coordinator::chunks::row_bytes_for_d;
 use crate::coordinator::cluster::{CardSpec, FleetPlan};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::placement::PlacementPolicy;
-use crate::coordinator::Table;
+use crate::coordinator::table::Table;
 
 use super::backend::{scatter_rows, Ticket, TicketState};
 use super::sim_backend::{SimBackend, SimBackendConfig, SimTiming};
@@ -124,6 +124,11 @@ impl FleetService {
     /// (capacity-weighted, reach-constrained — the plan comes from
     /// [`FleetPlan::build`]) and start one [`SimBackend`] per shard using
     /// that card's probed map, window plan, and group placement.
+    ///
+    /// **Zero-copy**: every card's backend receives a
+    /// [`TableView`](crate::coordinator::TableView) into the one shared
+    /// `Arc<[f32]>` — per-card memory is O(view metadata), so a >10 GiB
+    /// host table costs refcount bumps, not per-shard copies.
     pub fn build_sim(
         specs: Vec<(CardSpec, SimTiming)>,
         table: &Table,
@@ -132,10 +137,11 @@ impl FleetService {
     ) -> anyhow::Result<Self> {
         let cards: Vec<CardSpec> = specs.iter().map(|(c, _)| c.clone()).collect();
         let plan = FleetPlan::build(&cards, table.rows, row_bytes_for_d(table.d), seed)?;
+        let whole = table.view();
         let mut services = Vec::new();
         for shard in &plan.shards {
             let (spec, timing) = &specs[shard.card];
-            let local = table.slice_rows(shard.start_row, shard.rows);
+            let local = whole.slice_rows(shard.start_row, shard.rows);
             let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
             cfg.batcher = batcher.clone();
             cfg.seed = seed;

@@ -29,9 +29,12 @@
 //!   with `wait` (deadline-aware) or check it with `poll`.
 //! * [`Session`] — per-tenant admission control: an in-flight budget with
 //!   reject-or-queue overload handling, surfaced in
-//!   [`Metrics`](crate::coordinator::Metrics).
+//!   [`Metrics`](crate::coordinator::Metrics); [`GlobalAdmission`] adds a
+//!   cross-tenant budget with weighted fair sharing on top.
 //! * [`FleetService`] — the same facade over several probed cards via
-//!   [`crate::coordinator::FleetPlan`], merging rows in request order.
+//!   [`crate::coordinator::FleetPlan`], merging rows in request order —
+//!   each card serves a zero-copy
+//!   [`TableView`](crate::coordinator::TableView) of the one shared table.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -45,7 +48,7 @@
 //! let plan = WindowPlan::split(table.rows, 128, 2);
 //! let backend = SimBackend::start(
 //!     SimBackendConfig::new(PlacementPolicy::GroupToChunk),
-//!     &map, plan, table, SimTiming::machine(machine),
+//!     &map, plan, table.view(), SimTiming::machine(machine),
 //! ).unwrap();
 //! let service = Service::new(Arc::new(backend));
 //! let ticket = service.submit(Arc::new(vec![7, 99, 12345]), None).unwrap();
@@ -69,7 +72,9 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 
 pub use backend::{Backend, Batch, Ticket, TicketState};
 pub use fleet::{FleetService, FleetTicket};
-pub use session::{OverloadPolicy, Session, SessionConfig, SessionStats};
+pub use session::{
+    GlobalAdmission, OverloadPolicy, Session, SessionConfig, SessionStats, TenantShare,
+};
 pub use sim_backend::{GroupSimReport, SimBackend, SimBackendConfig, SimTiming};
 
 /// The serving facade: a cheaply clonable handle over one backend.
@@ -110,6 +115,23 @@ impl Service {
     /// Mint a per-tenant session with its own admission budget.
     pub fn session(&self, tenant: &str, cfg: SessionConfig) -> Session {
         Session::new(self.clone(), tenant, cfg)
+    }
+
+    /// Mint a per-tenant session that additionally draws on a shared
+    /// cross-tenant [`GlobalAdmission`] budget with weighted fair sharing:
+    /// `weight` reserves this tenant's guaranteed slice of the global
+    /// in-flight total.  Sessions under the same tenant name share one
+    /// reservation (refcounted — it is released when the last one drops,
+    /// with the latest `weight` winning).  Denials are counted in
+    /// [`Metrics::global_rejected`](crate::coordinator::Metrics).
+    pub fn session_with_budget(
+        &self,
+        tenant: &str,
+        cfg: SessionConfig,
+        global: &Arc<GlobalAdmission>,
+        weight: f64,
+    ) -> Session {
+        Session::with_global(self.clone(), tenant, cfg, global, weight)
     }
 
     /// Row width (f32 elements per row).

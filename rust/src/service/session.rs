@@ -12,6 +12,13 @@
 //! Slots are released by RAII: the [`SlotGuard`] rides inside the
 //! [`Ticket`] and frees the slot when the ticket resolves or is dropped —
 //! a tenant cannot leak budget by abandoning tickets.
+//!
+//! On top of the per-tenant budgets, a [`GlobalAdmission`] bounds the
+//! *fleet-wide* in-flight total with **weighted fair sharing**: each
+//! tenant's weight reserves it a guaranteed slice of the global budget
+//! (non-preemptive, so reservations are never lent out — a granted slot
+//! cannot be reclaimed), and un-reserved slack is first-come.  A noisy
+//! neighbor can exhaust the slack but never a quiet tenant's reservation.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -125,12 +132,234 @@ impl Drop for SlotGuard {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Cross-tenant budget with weighted fair sharing.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct TenantState {
+    name: String,
+    weight: f64,
+    used: usize,
+    /// Live sessions sharing this tenant id; the reservation stays active
+    /// until the last one deregisters (in-flight slots still drain
+    /// through `used` afterwards).
+    sessions: usize,
+    active: bool,
+}
+
+/// One tenant's slice of the global budget, for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantShare {
+    pub tenant: String,
+    pub weight: f64,
+    /// Reserved in-flight slots (`floor(capacity * w / Σw)` over active
+    /// tenants — floors, so reservations never overcommit the budget; a
+    /// tiny-weight tenant may have guarantee 0 and live off slack).
+    pub guaranteed: usize,
+    pub used: usize,
+}
+
+/// The fleet-wide in-flight budget, shared by many [`Session`]s.
+///
+/// Admission rule for tenant *i* (all under one lock, so the invariant is
+/// exact, not statistical):
+///
+/// * always deny when the budget is full;
+/// * grant while the tenant is within its guaranteed share;
+/// * beyond the share, grant only from *slack* — capacity not reserved for
+///   other tenants' unused guarantees — so a flood by one tenant can never
+///   consume another's reservation.
+///
+/// Shares are recomputed from the live weight table, so registering a new
+/// tenant shrinks everyone's guarantee proportionally from the next
+/// admission decision on (slots already granted under the old shares
+/// drain naturally; until they do, a freshly shrunk guarantee can be
+/// temporarily unmeetable).  Guarantees use floors, so their sum never
+/// exceeds the capacity — a tenant within its reported guarantee is never
+/// denied by other tenants' traffic.
+#[derive(Debug)]
+pub struct GlobalAdmission {
+    capacity: usize,
+    tenants: Mutex<Vec<TenantState>>,
+    freed: Condvar,
+}
+
+impl GlobalAdmission {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        assert!(capacity >= 1, "global budget must be >= 1");
+        Arc::new(Self {
+            capacity,
+            tenants: Mutex::new(Vec::new()),
+            freed: Condvar::new(),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register a tenant (or update its weight / add a session to it);
+    /// returns its id.  Fully drained dead tenants' slots are reused, so
+    /// the table is bounded by the peak number of concurrently live (or
+    /// still-draining) tenants, not by process lifetime.
+    pub fn register(&self, tenant: &str, weight: f64) -> usize {
+        assert!(weight > 0.0, "tenant weight must be positive");
+        let mut ts = self.tenants.lock().unwrap();
+        if let Some(i) = ts.iter().position(|t| t.name == tenant) {
+            ts[i].weight = weight;
+            ts[i].sessions += 1;
+            ts[i].active = true;
+            self.freed.notify_all();
+            return i;
+        }
+        let state = TenantState {
+            name: tenant.to_string(),
+            weight,
+            used: 0,
+            sessions: 1,
+            active: true,
+        };
+        // Reuse a fully dead slot (no sessions, nothing in flight): live
+        // guards index by id, so only a drained slot is safe to rename.
+        if let Some(i) = ts
+            .iter()
+            .position(|t| !t.active && t.sessions == 0 && t.used == 0)
+        {
+            ts[i] = state;
+            return i;
+        }
+        ts.push(state);
+        ts.len() - 1
+    }
+
+    /// Drop one session's claim on a tenant (called by [`Session`] on
+    /// drop); the reservation is released when the last session goes.
+    /// In-flight slots keep counting against the budget until their
+    /// guards drop; a freed reservation is redistributable immediately.
+    pub fn deregister(&self, i: usize) {
+        let mut ts = self.tenants.lock().unwrap();
+        if let Some(t) = ts.get_mut(i) {
+            t.sessions = t.sessions.saturating_sub(1);
+            if t.sessions == 0 {
+                t.active = false;
+            }
+        }
+        drop(ts);
+        self.freed.notify_all();
+    }
+
+    fn total_active_weight(ts: &[TenantState]) -> f64 {
+        ts.iter().filter(|t| t.active).map(|t| t.weight).sum()
+    }
+
+    fn guaranteed_with(&self, ts: &[TenantState], i: usize, total_w: f64) -> usize {
+        if !ts[i].active {
+            return 0;
+        }
+        (self.capacity as f64 * ts[i].weight / total_w) as usize
+    }
+
+    fn guaranteed(&self, ts: &[TenantState], i: usize) -> usize {
+        self.guaranteed_with(ts, i, Self::total_active_weight(ts))
+    }
+
+    fn allowed(&self, ts: &[TenantState], i: usize) -> bool {
+        let total_used: usize = ts.iter().map(|t| t.used).sum();
+        if total_used >= self.capacity {
+            return false;
+        }
+        // One weight pass shared by every guarantee below: admission stays
+        // O(tenants) under the lock.
+        let total_w = Self::total_active_weight(ts);
+        if ts[i].used < self.guaranteed_with(ts, i, total_w) {
+            return true;
+        }
+        // Beyond the share: only slack not reserved for others.
+        let reserved_others: usize = (0..ts.len())
+            .filter(|&j| j != i)
+            .map(|j| self.guaranteed_with(ts, j, total_w).saturating_sub(ts[j].used))
+            .sum();
+        total_used + reserved_others < self.capacity
+    }
+
+    /// Non-blocking acquire for tenant id `i` (Reject overload policy).
+    pub fn try_acquire(global: &Arc<Self>, i: usize) -> Option<GlobalSlotGuard> {
+        let mut ts = global.tenants.lock().unwrap();
+        if !global.allowed(&ts, i) {
+            return None;
+        }
+        ts[i].used += 1;
+        Some(GlobalSlotGuard {
+            global: Arc::clone(global),
+            tenant: i,
+        })
+    }
+
+    /// Blocking acquire (Queue overload policy); reports whether the
+    /// caller had to wait.
+    pub fn acquire_blocking(global: &Arc<Self>, i: usize) -> (GlobalSlotGuard, bool) {
+        let mut ts = global.tenants.lock().unwrap();
+        let mut blocked = false;
+        while !global.allowed(&ts, i) {
+            blocked = true;
+            ts = global.freed.wait(ts).unwrap();
+        }
+        ts[i].used += 1;
+        (
+            GlobalSlotGuard {
+                global: Arc::clone(global),
+                tenant: i,
+            },
+            blocked,
+        )
+    }
+
+    /// Total in-flight slots across all tenants.
+    pub fn used_total(&self) -> usize {
+        self.tenants.lock().unwrap().iter().map(|t| t.used).sum()
+    }
+
+    /// Per-tenant weights, guarantees, and usage for active tenants (the
+    /// multi-tenant view next to [`Metrics`]'s aggregate counters).
+    pub fn report(&self) -> Vec<TenantShare> {
+        let ts = self.tenants.lock().unwrap();
+        (0..ts.len())
+            .filter(|&i| ts[i].active)
+            .map(|i| TenantShare {
+                tenant: ts[i].name.clone(),
+                weight: ts[i].weight,
+                guaranteed: self.guaranteed(&ts, i),
+                used: ts[i].used,
+            })
+            .collect()
+    }
+}
+
+/// Releases one global in-flight slot on drop.
+#[derive(Debug)]
+pub struct GlobalSlotGuard {
+    global: Arc<GlobalAdmission>,
+    tenant: usize,
+}
+
+impl Drop for GlobalSlotGuard {
+    fn drop(&mut self) {
+        let mut ts = self.global.tenants.lock().unwrap();
+        ts[self.tenant].used -= 1;
+        drop(ts);
+        self.global.freed.notify_all();
+    }
+}
+
 /// One tenant's handle on the service.
 pub struct Session {
     tenant: String,
     cfg: SessionConfig,
     service: Service,
     slots: Arc<Slots>,
+    /// Cross-tenant budget and this tenant's id in it, when shared.
+    global: Option<(Arc<GlobalAdmission>, usize)>,
     stats: Arc<SessionStats>,
     metrics: Arc<Metrics>,
 }
@@ -144,9 +373,25 @@ impl Session {
             slots: Slots::new(cfg.max_in_flight),
             cfg,
             service,
+            global: None,
             stats: Arc::new(SessionStats::default()),
             metrics,
         }
+    }
+
+    /// A session that additionally answers to a cross-tenant
+    /// [`GlobalAdmission`] budget with the given fair-sharing weight.
+    pub(crate) fn with_global(
+        service: Service,
+        tenant: &str,
+        cfg: SessionConfig,
+        global: &Arc<GlobalAdmission>,
+        weight: f64,
+    ) -> Self {
+        let id = global.register(tenant, weight);
+        let mut s = Self::new(service, tenant, cfg);
+        s.global = Some((Arc::clone(global), id));
+        s
     }
 
     pub fn tenant(&self) -> &str {
@@ -163,10 +408,16 @@ impl Session {
     }
 
     /// Admission-controlled submit: acquires an in-flight slot per the
-    /// overload policy, then forwards to the service with the session's
-    /// default deadline.  The slot rides inside the ticket and frees when
-    /// the ticket resolves or is dropped.
+    /// overload policy — first from the session budget, then (when the
+    /// session shares a [`GlobalAdmission`]) from the weighted cross-tenant
+    /// budget — then forwards to the service with the session's default
+    /// deadline.  Both slots ride inside the ticket and free when the
+    /// ticket resolves or is dropped.
     pub fn submit(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Ticket> {
+        // `throttled` counts *submissions* that blocked, not budgets: a
+        // Queue-mode submission that waits on both the session and the
+        // global budget still increments once.
+        let mut blocked_any = false;
         let guard = match self.cfg.overload {
             OverloadPolicy::Reject => Slots::try_acquire(&self.slots).ok_or_else(|| {
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
@@ -179,22 +430,59 @@ impl Session {
             })?,
             OverloadPolicy::Queue => {
                 let (guard, blocked) = Slots::acquire_blocking(&self.slots);
-                if blocked {
-                    self.stats.throttled.fetch_add(1, Ordering::Relaxed);
-                    self.metrics.throttled.fetch_add(1, Ordering::Relaxed);
-                }
+                blocked_any |= blocked;
                 guard
             }
         };
+        // The local guard is held across the global acquire: a tenant
+        // queued on the shared budget still counts against its own cap.
+        let global_guard = match &self.global {
+            None => None,
+            Some((global, id)) => Some(match self.cfg.overload {
+                OverloadPolicy::Reject => {
+                    GlobalAdmission::try_acquire(global, *id).ok_or_else(|| {
+                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.global_rejected.fetch_add(1, Ordering::Relaxed);
+                        anyhow!(
+                            "tenant '{}' denied by the global admission budget ({})",
+                            self.tenant,
+                            global.capacity()
+                        )
+                    })?
+                }
+                OverloadPolicy::Queue => {
+                    let (g, blocked) = GlobalAdmission::acquire_blocking(global, *id);
+                    blocked_any |= blocked;
+                    g
+                }
+            }),
+        };
+        if blocked_any {
+            self.stats.throttled.fetch_add(1, Ordering::Relaxed);
+            self.metrics.throttled.fetch_add(1, Ordering::Relaxed);
+        }
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         let mut ticket = self.service.submit(rows, self.cfg.deadline)?;
         ticket.slot = Some(guard);
+        ticket.global_slot = global_guard;
         Ok(ticket)
     }
 
     /// Blocking convenience: submit + wait.
     pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
         self.submit(rows)?.wait()
+    }
+}
+
+impl Drop for Session {
+    /// Release this tenant's global reservation: dead tenants must not
+    /// keep capacity reserved forever (in-flight tickets still drain
+    /// through their guards).
+    fn drop(&mut self) {
+        if let Some((global, id)) = &self.global {
+            global.deregister(*id);
+        }
     }
 }
 
@@ -240,5 +528,153 @@ mod tests {
         let (g, blocked) = Slots::acquire_blocking(&s);
         assert!(!blocked);
         drop(g);
+    }
+
+    #[test]
+    fn global_budget_reserves_weighted_shares() {
+        // capacity 8, weights 3:1 -> guarantees 6 and 2.
+        let ga = GlobalAdmission::new(8);
+        let a = ga.register("a", 3.0);
+        let b = ga.register("b", 1.0);
+        let shares = ga.report();
+        assert_eq!(shares[a].guaranteed, 6);
+        assert_eq!(shares[b].guaranteed, 2);
+
+        // A floods: it gets exactly its guarantee (no slack to borrow —
+        // the rest is reserved for B).
+        let mut held = Vec::new();
+        while let Some(g) = GlobalAdmission::try_acquire(&ga, a) {
+            held.push(g);
+            assert!(held.len() <= 8, "runaway grant");
+        }
+        assert_eq!(held.len(), 6);
+
+        // B's reservation survives the flood.
+        let b1 = GlobalAdmission::try_acquire(&ga, b).unwrap();
+        let b2 = GlobalAdmission::try_acquire(&ga, b).unwrap();
+        assert!(GlobalAdmission::try_acquire(&ga, b).is_none(), "full");
+        assert_eq!(ga.used_total(), 8);
+        drop((b1, b2, held));
+        assert_eq!(ga.used_total(), 0);
+    }
+
+    #[test]
+    fn global_budget_slack_is_borrowable() {
+        // capacity 10, weights 1:1 over capacity 10 -> guarantees 5 and 5
+        // (no slack); with weights 2:1 guarantees are 6 and 3, slack 1 —
+        // the over-share tenant may take its guarantee plus the slack.
+        let ga = GlobalAdmission::new(10);
+        let a = ga.register("a", 2.0);
+        let _b = ga.register("b", 1.0);
+        let mut held = Vec::new();
+        while let Some(g) = GlobalAdmission::try_acquire(&ga, a) {
+            held.push(g);
+            assert!(held.len() <= 10, "runaway grant");
+        }
+        assert_eq!(held.len(), 7, "guarantee 6 + slack 1");
+    }
+
+    #[test]
+    fn single_tenant_uses_whole_budget() {
+        let ga = GlobalAdmission::new(4);
+        let a = ga.register("only", 1.0);
+        let held: Vec<_> = (0..4)
+            .map(|_| GlobalAdmission::try_acquire(&ga, a).unwrap())
+            .collect();
+        assert!(GlobalAdmission::try_acquire(&ga, a).is_none());
+        drop(held);
+        assert!(GlobalAdmission::try_acquire(&ga, a).is_some());
+    }
+
+    #[test]
+    fn global_blocking_acquire_wakes_on_release() {
+        let ga = GlobalAdmission::new(1);
+        let a = ga.register("a", 1.0);
+        let held = GlobalAdmission::try_acquire(&ga, a).unwrap();
+        let ga2 = Arc::clone(&ga);
+        let t = std::thread::spawn(move || {
+            let (g, blocked) = GlobalAdmission::acquire_blocking(&ga2, a);
+            drop(g);
+            blocked
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(held);
+        assert!(t.join().unwrap(), "second acquire must have blocked");
+        assert_eq!(ga.used_total(), 0);
+    }
+
+    #[test]
+    fn skewed_weights_never_overcommit_guarantees() {
+        // Floors: Σ guarantees ≤ capacity even under extreme weight skew,
+        // so a quiet tenant within its guarantee is never denied.
+        let ga = GlobalAdmission::new(8);
+        let a = ga.register("a", 50.0);
+        let b = ga.register("b", 1.0);
+        let c = ga.register("c", 1.0);
+        let shares = ga.report();
+        let sum: usize = shares.iter().map(|s| s.guaranteed).sum();
+        assert!(sum <= 8, "guarantees overcommit: {shares:?}");
+        // A floods, B takes a slot; C must still get its guarantee (if
+        // any) — and with guarantee 0 it simply has no reservation.
+        let mut held = Vec::new();
+        while let Some(g) = GlobalAdmission::try_acquire(&ga, a) {
+            held.push(g);
+        }
+        let _b1 = GlobalAdmission::try_acquire(&ga, b);
+        for _ in 0..shares[c].guaranteed {
+            assert!(
+                GlobalAdmission::try_acquire(&ga, c).is_some(),
+                "guaranteed slot denied"
+            );
+        }
+    }
+
+    #[test]
+    fn deregister_releases_reservation() {
+        // capacity 8, weights 1:1 -> 4 each; after B deregisters, A owns
+        // the whole budget again.
+        let ga = GlobalAdmission::new(8);
+        let a = ga.register("a", 1.0);
+        let b = ga.register("b", 1.0);
+        let mut held = Vec::new();
+        while let Some(g) = GlobalAdmission::try_acquire(&ga, a) {
+            held.push(g);
+        }
+        assert_eq!(held.len(), 4, "half the budget while B is active");
+        ga.deregister(b);
+        while let Some(g) = GlobalAdmission::try_acquire(&ga, a) {
+            held.push(g);
+        }
+        assert_eq!(held.len(), 8, "B's reservation must be released");
+        assert_eq!(ga.report().len(), 1, "report lists active tenants only");
+        // Re-registering reactivates the same slot.
+        assert_eq!(ga.register("b", 1.0), b);
+        assert_eq!(ga.report().len(), 2);
+    }
+
+    #[test]
+    fn session_refcount_and_slot_reuse() {
+        let ga = GlobalAdmission::new(8);
+        let t = ga.register("t", 2.0);
+        assert_eq!(ga.register("t", 2.0), t, "same-name session shares the id");
+        ga.deregister(t);
+        assert_eq!(ga.report().len(), 1, "one session still live");
+        ga.deregister(t);
+        assert_eq!(ga.report().len(), 0, "last session released the tenant");
+        // A drained dead slot is renamed for the next new tenant, bounding
+        // the table by concurrent tenants rather than process lifetime.
+        let u = ga.register("u", 1.0);
+        assert_eq!(u, t, "dead slot must be reused");
+        assert_eq!(ga.report()[0].tenant, "u");
+    }
+
+    #[test]
+    fn re_registering_updates_weight() {
+        let ga = GlobalAdmission::new(8);
+        let a = ga.register("a", 1.0);
+        let _b = ga.register("b", 1.0);
+        assert_eq!(ga.report()[a].guaranteed, 4);
+        assert_eq!(ga.register("a", 3.0), a, "same id on re-register");
+        assert_eq!(ga.report()[a].guaranteed, 6);
     }
 }

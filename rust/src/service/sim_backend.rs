@@ -1,7 +1,7 @@
-//! The hermetic backend: gathers execute host-side against the table while
-//! the discrete-event [`Machine`] supplies the *device* cost model — what
-//! each SM resource group's gather rate would be on the simulated A100
-//! given the placement it was pinned under.
+//! The hermetic backend: gathers execute host-side against a zero-copy
+//! [`TableView`] while the discrete-event [`Machine`] supplies the
+//! *device* cost model — what each SM resource group's gather rate would
+//! be on the simulated A100 given the placement it was pinned under.
 //!
 //! This is the facade implementation every serving scenario can run under
 //! tier-1: no PJRT, no artifacts, same batcher → dispatcher →
@@ -17,22 +17,40 @@
 //! whole-table placement they collapse exactly like Fig 1.  With
 //! [`SimTiming::Probed`] the DES is skipped and the probe map's
 //! `solo_gbps` is used directly (fast startup for load-generation tests).
+//!
+//! Two live knobs on top of the cost model:
+//!
+//! * **Pacing** (`sim_timescale > 0`): each group completes jobs no faster
+//!   than `sim_ns * timescale` of wall clock (a serial device per group),
+//!   so bench-serve's wall-clock knee becomes policy-dependent — thrashing
+//!   placements knee earlier, exactly like the real device would.
+//! * **Adaptive placement** (`adaptive: Some(..)`): a
+//!   [`Placer`]-produced placement lives in a generation-stamped
+//!   [`PlacementCell`]; [`SimBackend::rebalance_epoch`] (or a background
+//!   epoch thread) feeds per-window load signals to the placer and swaps
+//!   the deal without draining in-flight tickets.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
-use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::adaptive::{AdaptiveConfig, AdaptivePlacer};
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::chunks::WindowPlan;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::placement::{Placement, PlacementPolicy};
-use crate::coordinator::Table;
+use crate::coordinator::placement::{
+    Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
+};
+use crate::coordinator::table::TableView;
 use crate::probe::TopologyMap;
 use crate::sim::{Machine, MeasurementSpec, Pattern, SmId};
 
-use super::backend::{submit_ticketed, Backend, Batch, Job, Pipeline, Ticket, WorkerMsg};
+use super::backend::{
+    submit_ticketed, Backend, Batch, Job, Pipeline, ResponseTx, Ticket, WorkerMsg,
+};
 
 /// Where the per-(group, window) service rates come from.
 #[derive(Clone)]
@@ -59,6 +77,16 @@ pub struct SimBackendConfig {
     pub seed: u64,
     /// Accesses per SM for each calibration measurement.
     pub calib_accesses_per_sm: u64,
+    /// Skew-aware rebalancing: `Some` routes placement through an
+    /// [`AdaptivePlacer`] (initially the group-to-chunk deal; `policy` is
+    /// ignored for placement then) and enables epoch rebalancing.
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Wall-clock pacing of simulated device time: each group's job
+    /// completions are delayed so wall ≥ `sim_ns * sim_timescale`
+    /// (1.0 = a simulated nanosecond costs a wall nanosecond).  0 disables
+    /// pacing — gathers complete at host speed and device time is only
+    /// *accounted* (`sim_report`).
+    pub sim_timescale: f64,
 }
 
 impl SimBackendConfig {
@@ -68,6 +96,8 @@ impl SimBackendConfig {
             batcher: BatcherConfig::default(),
             seed: 0xC0FFEE,
             calib_accesses_per_sm: 2_000,
+            adaptive: None,
+            sim_timescale: 0.0,
         }
     }
 }
@@ -91,28 +121,96 @@ pub struct GroupSimReport {
     pub simulated_gbps: f64,
 }
 
+/// Everything the epoch rebalancer needs — shared between
+/// [`SimBackend::rebalance_epoch`] and the optional background thread.
+struct RebalanceCtx {
+    placer: Arc<dyn Placer>,
+    placement: Arc<PlacementCell>,
+    plan: Arc<WindowPlan>,
+    map: TopologyMap,
+    metrics: Arc<Metrics>,
+    batcher: Arc<Batcher<ResponseTx>>,
+    /// The placer's signal floor (0 for static placers): epochs below it
+    /// accumulate into the next one instead of being discarded.
+    min_epoch_rows: u64,
+    /// Per-window routed-row totals at the previous *committed* epoch
+    /// boundary.
+    last_rows: Mutex<Vec<u64>>,
+}
+
+impl RebalanceCtx {
+    /// Close one epoch: delta the per-window load counters, ask the placer
+    /// for a rebalanced deal, publish it.  Returns the new generation when
+    /// a swap happened.
+    fn epoch(&self) -> Option<u64> {
+        let totals = self.metrics.window_rows_snapshot();
+        let delta = {
+            let mut last = self.last_rows.lock().unwrap();
+            if last.len() != totals.len() {
+                *last = vec![0; totals.len()];
+            }
+            let delta: Vec<u64> = totals
+                .iter()
+                .zip(last.iter())
+                .map(|(t, l)| t.saturating_sub(*l))
+                .collect();
+            // Commit the baseline only when the epoch carried enough
+            // signal for the placer to decide on; a starved epoch rolls
+            // its rows into the next one, so persistent low-rate skew
+            // still accumulates to a rebalance instead of being dropped.
+            if delta.iter().sum::<u64>() >= self.min_epoch_rows {
+                *last = totals;
+            }
+            delta
+        };
+        let signals = WindowSignals {
+            rows: delta,
+            mean_latency_us: self.metrics.latency.mean_us(),
+            queued_rows: self.batcher.pending_rows() as u64,
+        };
+        let current = self.placement.load();
+        let next = self
+            .placer
+            .rebalance(&current, &self.map, &self.plan, &signals)?;
+        // Live-swap safety gate, active in release builds: a placement the
+        // router cannot serve (custom `Placer`s are untrusted) is dropped
+        // rather than published — stranding the swap, never the tickets.
+        if let Err(why) = next.check_servable(self.plan.count(), self.map.groups.len()) {
+            debug_assert!(false, "placer proposed an unservable placement: {why}");
+            return None;
+        }
+        Some(self.placement.store(next))
+    }
+}
+
 /// The running sim-backed server.
 pub struct SimBackend {
     pipeline: Pipeline,
     metrics: Arc<Metrics>,
     plan: Arc<WindowPlan>,
-    table: Table,
-    placement: Placement,
+    view: TableView,
+    placement: Arc<PlacementCell>,
     stats: Arc<Vec<GroupServeStats>>,
+    rebalance: Arc<RebalanceCtx>,
+    epoch_stop: Arc<AtomicBool>,
+    epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl SimBackend {
-    /// Start the backend with a placement built from `cfg.policy`.
+    /// Start the backend with a placement built by `cfg`'s placer (the
+    /// static `cfg.policy` arm, or the adaptive group-to-chunk deal when
+    /// `cfg.adaptive` is set).
     pub fn start(
         cfg: SimBackendConfig,
         map: &TopologyMap,
         plan: WindowPlan,
-        table: Table,
+        view: TableView,
         timing: SimTiming,
     ) -> anyhow::Result<Self> {
         map.validate()?;
-        let placement = Placement::build(cfg.policy, map, &plan, cfg.seed)?;
-        Self::start_with_placement(cfg, map, plan, placement, table, timing)
+        let placer = Self::placer_of(&cfg);
+        let placement = placer.place(map, &plan, cfg.seed)?;
+        Self::start_inner(cfg, map, plan, placement, view, timing)
     }
 
     /// Start with a prebuilt placement (fleet shards carry their own).
@@ -121,36 +219,54 @@ impl SimBackend {
         map: &TopologyMap,
         plan: WindowPlan,
         placement: Placement,
-        table: Table,
+        view: TableView,
         timing: SimTiming,
     ) -> anyhow::Result<Self> {
-        if table.rows != plan.total_rows {
+        Self::start_inner(cfg, map, plan, placement, view, timing)
+    }
+
+    fn placer_of(cfg: &SimBackendConfig) -> Arc<dyn Placer> {
+        match &cfg.adaptive {
+            Some(a) => Arc::new(AdaptivePlacer::new(a.clone())),
+            None => Arc::new(StaticPlacer(cfg.policy)),
+        }
+    }
+
+    fn start_inner(
+        cfg: SimBackendConfig,
+        map: &TopologyMap,
+        plan: WindowPlan,
+        placement: Placement,
+        view: TableView,
+        timing: SimTiming,
+    ) -> anyhow::Result<Self> {
+        if view.rows() != plan.total_rows {
             return Err(anyhow!(
-                "table has {} rows but plan covers {}",
-                table.rows,
+                "table view has {} rows but plan covers {}",
+                view.rows(),
                 plan.total_rows
             ));
         }
-        let metrics = Arc::new(Metrics::new());
+        // A mismatched placement must fail deterministically here, not as
+        // an index panic in the dispatcher mid-serving (the router only
+        // debug-asserts; prebuilt placements arrive via
+        // `start_with_placement`).
+        if let Err(why) = placement.check_servable(plan.count(), map.groups.len()) {
+            return Err(anyhow!("placement is unservable: {why}"));
+        }
+        let metrics = Arc::new(Metrics::for_windows(plan.count()));
         let plan = Arc::new(plan);
         let stats: Arc<Vec<GroupServeStats>> =
             Arc::new((0..map.groups.len()).map(|_| Default::default()).collect());
 
-        let mut served_by_group: Vec<Vec<usize>> = vec![Vec::new(); map.groups.len()];
-        for w in 0..plan.count() {
-            for &g in placement.serving_groups(w) {
-                served_by_group[g].push(w);
-            }
-        }
-        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> =
-            (0..map.groups.len()).map(|_| None).collect();
+        // One worker per group in the map — not just the initially-serving
+        // ones: a placement swap may hand any group any window, and the
+        // memoized per-window calibration happens lazily on first contact.
+        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> = Vec::new();
         let mut workers = Vec::new();
-        for (g, served) in served_by_group.iter().enumerate() {
-            if served.is_empty() {
-                continue;
-            }
+        for g in 0..map.groups.len() {
             let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            senders[g] = Some(tx);
+            senders.push(Some(tx));
             let mut worker = SimWorker {
                 group: g,
                 sms: map.groups[g].clone(),
@@ -161,10 +277,18 @@ impl SimBackend {
                 solo_gbps: map.solo_gbps[g].max(1e-9),
                 calib_accesses: cfg.calib_accesses_per_sm.max(1),
                 plan: Arc::clone(&plan),
-                table: table.clone(),
+                view: view.clone(),
                 metrics: Arc::clone(&metrics),
                 stats: Arc::clone(&stats),
                 ns_per_row: HashMap::new(),
+                // Non-finite or negative timescales disable pacing rather
+                // than poisoning every Duration computation downstream.
+                timescale: if cfg.sim_timescale.is_finite() {
+                    cfg.sim_timescale.max(0.0)
+                } else {
+                    0.0
+                },
+                next_free: None,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a100win-sim-g{g}"))
@@ -180,23 +304,66 @@ impl SimBackend {
             workers.push(handle);
         }
 
+        let cell = Arc::new(PlacementCell::new(placement));
         let pipeline = Pipeline::start(
             cfg.batcher.clone(),
             Arc::clone(&plan),
-            placement.clone(),
+            Arc::clone(&cell),
             Arc::clone(&metrics),
-            table.d,
+            view.d(),
             senders,
             workers,
         )?;
+
+        let rebalance = Arc::new(RebalanceCtx {
+            placer: Self::placer_of(&cfg),
+            placement: Arc::clone(&cell),
+            plan: Arc::clone(&plan),
+            map: map.clone(),
+            metrics: Arc::clone(&metrics),
+            batcher: Arc::clone(&pipeline.batcher),
+            min_epoch_rows: cfg.adaptive.as_ref().map_or(0, |a| a.min_epoch_rows),
+            last_rows: Mutex::new(vec![0; plan.count()]),
+        });
+
+        let epoch_stop = Arc::new(AtomicBool::new(false));
+        let epoch_thread = match cfg.adaptive.as_ref().and_then(|a| a.epoch) {
+            None => None,
+            Some(epoch) => {
+                let ctx = Arc::clone(&rebalance);
+                let stop = Arc::clone(&epoch_stop);
+                let tick = epoch
+                    .min(Duration::from_millis(5))
+                    .max(Duration::from_micros(100));
+                Some(
+                    std::thread::Builder::new()
+                        .name("a100win-rebalancer".into())
+                        .spawn(move || {
+                            let mut since = Duration::ZERO;
+                            while !stop.load(Ordering::Relaxed) {
+                                std::thread::sleep(tick);
+                                since += tick;
+                                if since >= epoch {
+                                    since = Duration::ZERO;
+                                    let _ = ctx.epoch();
+                                }
+                            }
+                        })
+                        .context("spawning rebalancer")?,
+                )
+            }
+        };
 
         Ok(Self {
             pipeline,
             metrics,
             plan,
-            table,
-            placement,
+            view,
+            placement: cell,
             stats,
+            rebalance,
+            epoch_stop,
+            epoch_thread: Mutex::new(epoch_thread),
         })
     }
 
@@ -204,12 +371,21 @@ impl SimBackend {
         &self.plan
     }
 
-    pub fn table(&self) -> &Table {
-        &self.table
+    pub fn table_view(&self) -> &TableView {
+        &self.view
     }
 
-    pub fn placement(&self) -> &Placement {
-        &self.placement
+    /// The current live placement (generation-stamped; swaps bump it).
+    pub fn placement(&self) -> Arc<Placement> {
+        self.placement.load()
+    }
+
+    /// Close one rebalance epoch by hand: feed the epoch's per-window load
+    /// to the placer and swap the placement if it proposes a new deal.
+    /// Returns the new generation when a swap happened.  (The background
+    /// thread configured by `AdaptiveConfig::epoch` calls exactly this.)
+    pub fn rebalance_epoch(&self) -> Option<u64> {
+        self.rebalance.epoch()
     }
 
     /// What the simulated device did: per-group rows, device time, and the
@@ -233,22 +409,52 @@ impl SimBackend {
             .collect()
     }
 
+    /// Device-side aggregate throughput implied by the busiest group
+    /// (makespan model: groups gather in parallel, so the slowest group's
+    /// simulated time bounds the run).  This is the number skew-aware
+    /// placement moves: balancing load across groups shrinks the max.
+    pub fn aggregate_sim_gbps(&self) -> f64 {
+        let total_rows: u64 = self
+            .stats
+            .iter()
+            .map(|s| s.rows.load(Ordering::Relaxed))
+            .sum();
+        let max_ns = self
+            .stats
+            .iter()
+            .map(|s| s.sim_ns.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0);
+        if max_ns == 0 {
+            return 0.0;
+        }
+        total_rows as f64 * self.plan.row_bytes as f64 / max_ns as f64
+    }
+
     fn stop(&self) {
+        self.epoch_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.epoch_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
         self.pipeline.stop();
     }
 }
 
 impl Backend for SimBackend {
     fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
-        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.table.rows, batch)
+        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.view.rows(), batch)
     }
 
     fn d(&self) -> usize {
-        self.table.d
+        self.view.d()
     }
 
     fn rows(&self) -> u64 {
-        self.table.rows
+        self.view.rows()
+    }
+
+    fn view(&self) -> Option<&TableView> {
+        Some(&self.view)
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -270,7 +476,8 @@ impl Drop for SimBackend {
     }
 }
 
-/// One group's worker: host gathers + simulated-device accounting.
+/// One group's worker: host gathers + simulated-device accounting (and,
+/// when pacing is on, completion delayed to the simulated rate).
 struct SimWorker {
     group: usize,
     /// The probe map's smids for this group (filtered against the machine
@@ -280,30 +487,63 @@ struct SimWorker {
     solo_gbps: f64,
     calib_accesses: u64,
     plan: Arc<WindowPlan>,
-    table: Table,
+    /// Zero-copy gather source (rows are plan-local).
+    view: TableView,
     metrics: Arc<Metrics>,
     stats: Arc<Vec<GroupServeStats>>,
     /// Memoized calibration results per window.
     ns_per_row: HashMap<usize, f64>,
+    /// Wall-clock multiplier on simulated time (see
+    /// [`SimBackendConfig::sim_timescale`]); 0 = unpaced.
+    timescale: f64,
+    /// When this group's simulated device frees up (pacing only): the
+    /// group is a serial device, jobs queue behind each other.
+    next_free: Option<Instant>,
 }
 
 impl SimWorker {
     fn execute(&mut self, job: Job) {
         let rate = self.ns_per_row(job.window);
         let w = self.plan.windows()[job.window];
-        let d = self.table.d;
+        let d = self.view.d();
         let mut rows = Vec::with_capacity(job.local_rows.len() * d);
         for &local in &job.local_rows {
-            let r = (w.start_row + local as u64) as usize;
-            rows.extend_from_slice(&self.table.data[r * d..(r + 1) * d]);
+            rows.extend_from_slice(self.view.row(w.start_row + local as u64));
         }
+        let cost_ns = job.local_rows.len() as f64 * rate;
         let st = &self.stats[self.group];
         st.rows
             .fetch_add(job.local_rows.len() as u64, Ordering::Relaxed);
-        st.sim_ns
-            .fetch_add((job.local_rows.len() as f64 * rate) as u64, Ordering::Relaxed);
+        st.sim_ns.fetch_add(cost_ns as u64, Ordering::Relaxed);
+        if self.timescale > 0.0 {
+            self.pace(cost_ns);
+        }
         job.acc.scatter(&job.positions, &rows, d);
         job.acc.finish_part(&self.metrics);
+    }
+
+    /// Delay completion so this group serves no faster than the simulated
+    /// device would: the job starts when the (serial) device frees up and
+    /// occupies it for `cost_ns * timescale` of wall time.  The per-job
+    /// delay is clamped to 60 s: a nonsensical timescale must degrade into
+    /// slow serving, never a `Duration` overflow panic that would strand
+    /// the job's ticket forever.
+    fn pace(&mut self, cost_ns: f64) {
+        let mut secs = cost_ns.max(0.0) * 1e-9 * self.timescale;
+        if !secs.is_finite() || secs > 60.0 {
+            secs = 60.0;
+        }
+        let cost = Duration::from_secs_f64(secs);
+        let now = Instant::now();
+        let start = match self.next_free {
+            Some(t) if t > now => t,
+            _ => now,
+        };
+        let free = start + cost;
+        self.next_free = Some(free);
+        if free > now {
+            std::thread::sleep(free - now);
+        }
     }
 
     /// Simulated device cost of one row gathered from `window` by this

@@ -150,6 +150,15 @@ impl Topology {
             .collect()
     }
 
+    /// All groups as smid lists, indexed by group id — the shape a
+    /// [`TopologyMap`](crate::probe::TopologyMap) carries (the probe must
+    /// *discover* this; ground-truth consumers read it directly).
+    pub fn sm_groups(&self) -> Vec<Vec<SmId>> {
+        (0..self.group_count())
+            .map(|g| self.sms_in_group(g))
+            .collect()
+    }
+
     /// Sizes of all groups, indexed by group id.
     pub fn group_sizes(&self) -> &[usize] {
         &self.group_sizes
@@ -257,6 +266,16 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn sm_groups_matches_per_group_listing() {
+        let t = a100();
+        let gs = t.sm_groups();
+        assert_eq!(gs.len(), t.group_count());
+        for (g, sms) in gs.iter().enumerate() {
+            assert_eq!(*sms, t.sms_in_group(g));
+        }
     }
 
     #[test]

@@ -39,6 +39,9 @@ pub struct OpenLoopConfig {
     /// Deadline attached to every request (None = unbounded); expiries
     /// count as errors.
     pub deadline: Option<Duration>,
+    /// Cap on generated arrivals (None = duration-bounded only) — CI smoke
+    /// runs bound work by request count, not wall clock.
+    pub max_requests: Option<u64>,
     pub seed: u64,
 }
 
@@ -48,6 +51,7 @@ impl Default for OpenLoopConfig {
             duration: Duration::from_millis(800),
             max_in_flight: 256,
             deadline: None,
+            max_requests: None,
             seed: 7,
         }
     }
@@ -73,6 +77,12 @@ pub fn drive(
         let u = rng.gen_f64().max(1e-12);
         t += -u.ln() / offered_rps;
         if t > cfg.duration.as_secs_f64() {
+            break;
+        }
+        if cfg
+            .max_requests
+            .is_some_and(|cap| arrivals.len() as u64 >= cap)
+        {
             break;
         }
         arrivals.push((Duration::from_secs_f64(t), Arc::new(gen.next_request())));

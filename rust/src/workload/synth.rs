@@ -1,4 +1,16 @@
 //! Synthetic request generators.
+//!
+//! Two flavors of skew matter to the serving stack and they are *not* the
+//! same thing:
+//!
+//! * [`Distribution::Zipf`] — zipf over row *rank*, rank 0 = row 0: hot
+//!   rows cluster at the front of the table, so the leading windows absorb
+//!   most traffic.  This is the **window-skew** stressor the adaptive
+//!   placer rebalances under (`a100win bench-serve --skew zipf:1.1`).
+//! * [`Distribution::ZipfScattered`] — the same rank skew, but hot ranks
+//!   are hashed over the whole table: row-level skew with near-uniform
+//!   per-window load (hot embedding rows in a shuffled table).  A
+//!   window-rebalancer can't (and shouldn't) react to it.
 
 use crate::util::rng::Rng;
 
@@ -7,10 +19,51 @@ use crate::util::rng::Rng;
 pub enum Distribution {
     /// The paper's benchmark: uniform random rows.
     Uniform,
-    /// Zipf-skewed rows (hot embedding rows), scattered over the table.
+    /// Zipf over row rank, unscattered: row 0 hottest, so low windows run
+    /// hot (window-level skew).  Valid for any `theta > 0` (bounded
+    /// continuous-rank inversion; `theta = 1` handled separately).
     Zipf { theta: f64 },
+    /// Zipf rank skew scattered pseudo-randomly over the table: hot *rows*
+    /// without hot *windows*.
+    ZipfScattered { theta: f64 },
     /// Sequential scan (control: TLB-friendly).
     Sequential,
+}
+
+impl Distribution {
+    /// Parse a CLI skew spec: `uniform`, `zipf:<theta>`,
+    /// `zipf-scattered:<theta>`, or `sequential`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let theta_of = |spec: &str, v: &str| -> anyhow::Result<f64> {
+            let theta: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{spec} expects a number, got '{v}'"))?;
+            // NB: a plain `theta <= 0.0` admits NaN (every comparison with
+            // NaN is false), which would degenerate into a row-0 point mass.
+            if !theta.is_finite() || theta <= 0.0 {
+                anyhow::bail!("{spec} theta must be a finite number > 0, got {theta}");
+            }
+            Ok(theta)
+        };
+        match s.split_once(':') {
+            None => match s {
+                "uniform" => Ok(Self::Uniform),
+                "sequential" => Ok(Self::Sequential),
+                _ => anyhow::bail!(
+                    "unknown skew '{s}' (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential)"
+                ),
+            },
+            Some(("zipf", v)) => Ok(Self::Zipf {
+                theta: theta_of("zipf", v)?,
+            }),
+            Some(("zipf-scattered", v)) => Ok(Self::ZipfScattered {
+                theta: theta_of("zipf-scattered", v)?,
+            }),
+            Some((other, _)) => anyhow::bail!(
+                "unknown skew '{other}' (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential)"
+            ),
+        }
+    }
 }
 
 /// Shape of the request stream.
@@ -73,16 +126,31 @@ impl RequestGen {
                 self.cursor += 1;
                 r
             }
-            Distribution::Zipf { theta } => {
-                // Inverse-power approximation (matches sim::access's
-                // sampler closely enough for load shaping): draw u in
-                // (0,1], rank ~ n * u^(1/(1-theta)), then scatter.
-                let u = self.rng.gen_f64().max(1e-12);
-                let alpha = 1.0 / (1.0 - theta);
-                let rank = ((n as f64) * u.powf(alpha)) as u64;
-                rank.min(n - 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) % n
+            Distribution::Zipf { theta } => self.zipf_rank(theta),
+            Distribution::ZipfScattered { theta } => {
+                // Fibonacci-hash the rank over the table: row-level skew,
+                // window-uniform load.
+                self.zipf_rank(theta).wrapping_mul(0x9E37_79B9_7F4A_7C15) % n
             }
         }
+    }
+
+    /// Bounded zipf(θ) rank in `[0, n)` by continuous inverse-CDF: the
+    /// rank density ∝ (1+x)^(-θ) on [0, n], inverted exactly for θ ≠ 1 and
+    /// via the log form at θ = 1 — valid for θ both below and above 1
+    /// (the prior `n·u^(1/(1-θ))` approximation degenerated for θ ≥ 1).
+    fn zipf_rank(&mut self, theta: f64) -> u64 {
+        let n = self.spec.total_rows as f64;
+        let u = self.rng.gen_f64().clamp(1e-12, 1.0);
+        let x = if (theta - 1.0).abs() < 1e-9 {
+            // F(x) = ln(1+x)/ln(1+n)
+            (1.0 + n).powf(u) - 1.0
+        } else {
+            // F(x) = ((1+x)^(1-θ) − 1) / ((1+n)^(1-θ) − 1)
+            let p = 1.0 - theta;
+            (1.0 + u * ((1.0 + n).powf(p) - 1.0)).powf(1.0 / p) - 1.0
+        };
+        (x as u64).min(self.spec.total_rows - 1)
     }
 }
 
@@ -139,6 +207,77 @@ mod tests {
         let max = *counts.values().max().unwrap();
         assert!(max > 200, "hottest row only {max} hits");
         assert!(counts.len() < 9_000);
+    }
+
+    /// Front-of-table concentration for a distribution, as the fraction of
+    /// draws landing in the first half of the row space.
+    fn front_half_fraction(dist: Distribution, n: u64, draws: usize) -> f64 {
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: n,
+            distribution: dist,
+            request_rows: (1, 1),
+            seed: 5,
+        });
+        let hits = (0..draws).filter(|_| g.next_request()[0] < n / 2).count();
+        hits as f64 / draws as f64
+    }
+
+    #[test]
+    fn zipf_above_one_skews_windows_but_covers_table() {
+        // theta > 1 used to degenerate under the old inverse-power
+        // approximation; the bounded inversion must stay well-defined:
+        // heavy front-half concentration, yet not a single point mass.
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: 65_536,
+            distribution: Distribution::Zipf { theta: 1.1 },
+            request_rows: (1, 1),
+            seed: 4,
+        });
+        let mut distinct = std::collections::HashSet::new();
+        let mut back_half = 0u32;
+        for _ in 0..20_000 {
+            let r = g.next_request()[0];
+            assert!(r < 65_536);
+            distinct.insert(r);
+            if r >= 32_768 {
+                back_half += 1;
+            }
+        }
+        assert!(distinct.len() > 100, "degenerate: {} rows", distinct.len());
+        assert!(back_half > 0, "tail never sampled");
+        let front = front_half_fraction(Distribution::Zipf { theta: 1.1 }, 65_536, 20_000);
+        assert!(front > 0.9, "window skew too weak: {front}");
+    }
+
+    #[test]
+    fn scattered_zipf_is_window_uniform() {
+        // Same rank skew, hashed over the table: per-half load near 50/50.
+        let front =
+            front_half_fraction(Distribution::ZipfScattered { theta: 1.1 }, 65_536, 20_000);
+        assert!((front - 0.5).abs() < 0.1, "scatter failed: {front}");
+    }
+
+    #[test]
+    fn skew_spec_parsing() {
+        assert_eq!(Distribution::parse("uniform").unwrap(), Distribution::Uniform);
+        assert_eq!(
+            Distribution::parse("sequential").unwrap(),
+            Distribution::Sequential
+        );
+        assert_eq!(
+            Distribution::parse("zipf:1.1").unwrap(),
+            Distribution::Zipf { theta: 1.1 }
+        );
+        assert_eq!(
+            Distribution::parse("zipf-scattered:0.9").unwrap(),
+            Distribution::ZipfScattered { theta: 0.9 }
+        );
+        assert!(Distribution::parse("zipf:0").is_err());
+        assert!(Distribution::parse("zipf:nan").is_err());
+        assert!(Distribution::parse("zipf:inf").is_err());
+        assert!(Distribution::parse("zipf:abc").is_err());
+        assert!(Distribution::parse("pareto:2").is_err());
+        assert!(Distribution::parse("bogus").is_err());
     }
 
     #[test]

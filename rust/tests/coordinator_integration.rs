@@ -44,7 +44,7 @@ fn start_server(windows: usize, policy: PlacementPolicy) -> (EmbeddingServer, Ta
         max_wait: std::time::Duration::from_millis(1),
         max_pending: 256,
     };
-    let server = EmbeddingServer::start(cfg, &map4(), plan, table.clone()).unwrap();
+    let server = EmbeddingServer::start(cfg, &map4(), plan, table.view()).unwrap();
     (server, table)
 }
 
@@ -164,7 +164,7 @@ fn windows_must_match_artifact_shape() {
     let table = Table::synthetic(rows, 32);
     let plan = WindowPlan::split(rows, 128, 1);
     let cfg = ServerConfig::new(Runtime::default_artifacts_dir().unwrap());
-    let err = EmbeddingServer::start(cfg, &map4(), plan, table);
+    let err = EmbeddingServer::start(cfg, &map4(), plan, table.view());
     assert!(err.is_err());
     let msg = format!("{:#}", err.err().unwrap());
     assert!(msg.contains("lowered for"), "unexpected error: {msg}");

@@ -44,7 +44,7 @@ fn start(windows: usize) -> (EmbeddingServer, Table) {
         max_wait: std::time::Duration::from_millis(1),
         max_pending: 512,
     };
-    let server = EmbeddingServer::start(cfg, &map6(), plan, table.clone()).unwrap();
+    let server = EmbeddingServer::start(cfg, &map6(), plan, table.view()).unwrap();
     (server, table)
 }
 
@@ -61,7 +61,7 @@ fn serve_mixed_workload_concurrently() {
                 let dist = if c % 2 == 0 {
                     Distribution::Uniform
                 } else {
-                    Distribution::Zipf { theta: 0.99 }
+                    Distribution::ZipfScattered { theta: 0.99 }
                 };
                 let mut gen = RequestGen::new(WorkloadSpec {
                     total_rows: table.rows,
@@ -176,7 +176,7 @@ fn probe_artifact_feeds_server() {
     let table = Table::synthetic(rows, meta.d);
     let plan = WindowPlan::split(rows, 128, 2);
     let cfg = ServerConfig::new(artifacts);
-    let server = EmbeddingServer::start(cfg, &loaded, plan, table.clone()).unwrap();
+    let server = EmbeddingServer::start(cfg, &loaded, plan, table.view()).unwrap();
     let out = server.lookup(Arc::new(vec![0, rows - 1])).unwrap();
     assert_eq!(out[0], table.expected(0, 0));
     assert_eq!(out[meta.d], table.expected(rows - 1, 0));

@@ -56,7 +56,7 @@ fn start_service(
     let mut cfg = SimBackendConfig::new(policy);
     cfg.batcher = batcher;
     cfg.calib_accesses_per_sm = 600; // keep DES calibration quick in tests
-    let backend = SimBackend::start(cfg, &map, plan, table.clone(), timing).unwrap();
+    let backend = SimBackend::start(cfg, &map, plan, table.view(), timing).unwrap();
     (Service::new(Arc::new(backend)), table)
 }
 
