@@ -32,7 +32,7 @@ fn bench_router() {
     let total_rows: u64 = 1 << 24; // 16M rows = 2 GiB of 128 B lines
     let plan = WindowPlan::split(total_rows, 128, 14);
     let placement = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
-    let mut router = Router::new(&plan);
+    let mut router = Router::new();
     let mut rng = Rng::seed_from_u64(1);
     let batch: Vec<u64> = (0..4096).map(|_| rng.gen_range(total_rows)).collect();
 
@@ -40,19 +40,19 @@ fn bench_router() {
     let iters = 2_000;
     let t = Instant::now();
     for _ in 0..iters {
-        black_box(router.split(black_box(&batch), &placement));
+        black_box(router.split(black_box(&batch), &plan, &placement));
     }
     let dt = t.elapsed();
     let rows_per_s = (iters as f64 * batch.len() as f64) / dt.as_secs_f64();
     println!("router split: {:.2} M rows/s (batch 4096, 14 windows)", rows_per_s / 1e6);
 
     benchkit::bench("router_split_4096", 10, 50, || {
-        black_box(router.split(black_box(&batch), &placement));
+        black_box(router.split(black_box(&batch), &plan, &placement));
     });
 
     // Zero-alloc steady state: shells recycled between splits.
     benchkit::bench("router_split_4096_recycled", 10, 50, || {
-        let split = router.split(black_box(&batch), &placement);
+        let split = router.split(black_box(&batch), &plan, &placement);
         black_box(&split);
         router.recycle(split);
     });
@@ -60,7 +60,7 @@ fn bench_router() {
     // Split + identity merge round trip.
     let d = 32;
     benchkit::bench("router_split_merge_4096x32", 5, 20, || {
-        let split = router.split(&batch, &placement);
+        let split = router.split(&batch, &plan, &placement);
         let parts: Vec<Vec<f32>> = split
             .sub_batches
             .iter()

@@ -64,7 +64,12 @@ impl AdaptivePlacer {
     /// window with the largest remaining capacity deficit against its load
     /// target; empty windows then steal the slowest group from the most
     /// over-provisioned multi-group window so coverage always holds.
-    fn deal(map: &TopologyMap, load_share: &[f64]) -> (Vec<Vec<usize>>, Vec<usize>) {
+    ///
+    /// Shared with the window re-splitter
+    /// ([`PlanSplitter`](super::replan::PlanSplitter)): re-split plans deal
+    /// groups over their new windows with exactly this logic, so re-deal
+    /// and re-split produce placements with identical balancing semantics.
+    pub(crate) fn deal(map: &TopologyMap, load_share: &[f64]) -> (Vec<Vec<usize>>, Vec<usize>) {
         let w = load_share.len();
         let g = map.groups.len();
         debug_assert!(g >= w);

@@ -31,12 +31,19 @@ impl Window {
 }
 
 /// The full partition of a table's row space into windows.
+///
+/// Windows need not be equal-width: [`WindowPlan::from_boundaries`] builds
+/// load-proportional plans (the re-splitting control plane's output), where
+/// a hot row range gets a narrow window and cold ranges are merged into
+/// wide ones.  Equal-width plans keep an O(1) `window_of`; boundary plans
+/// fall back to binary search over the (few, ≤ group-count) windows.
 #[derive(Debug, Clone)]
 pub struct WindowPlan {
     pub total_rows: u64,
     pub row_bytes: u64,
     windows: Vec<Window>,
-    /// Row width of all non-final windows (for O(1) lookup).
+    /// Row width of all non-final windows (for O(1) lookup); 0 when the
+    /// plan is non-uniform (`from_boundaries`) and lookup binary-searches.
     stride: u64,
 }
 
@@ -70,6 +77,63 @@ impl WindowPlan {
         }
     }
 
+    /// Build a (possibly non-uniform) plan from explicit window start rows.
+    /// `starts[0]` must be 0 and starts must be strictly increasing below
+    /// `total_rows`; window `i` spans `[starts[i], starts[i+1])` (the last
+    /// runs to `total_rows`).  This is the re-splitting control plane's
+    /// constructor: boundaries land wherever the observed load density says.
+    pub fn from_boundaries(
+        total_rows: u64,
+        row_bytes: u64,
+        starts: &[u64],
+    ) -> anyhow::Result<Self> {
+        if starts.first() != Some(&0) {
+            anyhow::bail!("boundary plan must start at row 0");
+        }
+        let mut windows = Vec::with_capacity(starts.len());
+        for (id, &start) in starts.iter().enumerate() {
+            let end = starts.get(id + 1).copied().unwrap_or(total_rows);
+            if end <= start || end > total_rows {
+                anyhow::bail!(
+                    "boundary {id} spans [{start}, {end}) over {total_rows} rows: \
+                     starts must be strictly increasing and below the table end"
+                );
+            }
+            windows.push(Window {
+                id,
+                start_row: start,
+                rows: end - start,
+            });
+        }
+        // Keep the O(1) stride path when the boundaries happen to be the
+        // uniform split (all non-final windows equal, final no larger).
+        let stride = match windows.split_last() {
+            Some((last, rest))
+                if rest
+                    .iter()
+                    .all(|w| w.rows == windows[0].rows)
+                    && last.rows <= windows[0].rows
+                    && !rest.is_empty() =>
+            {
+                windows[0].rows
+            }
+            Some((_only, [])) => total_rows,
+            _ => 0,
+        };
+        Ok(Self {
+            total_rows,
+            row_bytes,
+            windows,
+            stride,
+        })
+    }
+
+    /// The start rows of every window (inverse of
+    /// [`from_boundaries`](Self::from_boundaries)).
+    pub fn boundaries(&self) -> Vec<u64> {
+        self.windows.iter().map(|w| w.start_row).collect()
+    }
+
     /// Cut a table into as few windows as possible subject to the probed
     /// reach (the paper's construction: windows <= reach, one per group,
     /// group count permitting).
@@ -98,15 +162,30 @@ impl WindowPlan {
         self.windows.len()
     }
 
-    /// Window containing a global row (O(1)).
+    /// Window containing a global row (O(1) for uniform plans, O(log W)
+    /// for boundary plans — W never exceeds the group count).
     pub fn window_of(&self, row: u64) -> &Window {
         assert!(row < self.total_rows, "row {row} out of table");
-        let idx = (row / self.stride) as usize;
-        // Final window may be shorter than stride; idx can overshoot by one
-        // only when stride divides unevenly — clamp.
-        let idx = idx.min(self.windows.len() - 1);
+        let idx = if self.stride > 0 {
+            // Final window may be shorter than stride; idx can overshoot by
+            // one only when stride divides unevenly — clamp.
+            ((row / self.stride) as usize).min(self.windows.len() - 1)
+        } else {
+            self.windows.partition_point(|w| w.end_row() <= row)
+        };
         debug_assert!(self.windows[idx].contains(row));
         &self.windows[idx]
+    }
+
+    /// Are these the same window boundaries (ignoring ids/derived state)?
+    pub fn same_boundaries(&self, other: &WindowPlan) -> bool {
+        self.total_rows == other.total_rows
+            && self.windows.len() == other.windows.len()
+            && self
+                .windows
+                .iter()
+                .zip(&other.windows)
+                .all(|(a, b)| a.start_row == b.start_row)
     }
 
     /// Bytes spanned by one window.
@@ -203,6 +282,46 @@ mod tests {
     }
 
     #[test]
+    fn from_boundaries_builds_non_uniform_plans() {
+        let p = WindowPlan::from_boundaries(1000, 128, &[0, 100, 150, 900]).unwrap();
+        assert_eq!(p.count(), 4);
+        let sizes: Vec<u64> = p.windows().iter().map(|w| w.rows).collect();
+        assert_eq!(sizes, vec![100, 50, 750, 100]);
+        // Lookup agrees with containment at every boundary edge.
+        for row in [0u64, 99, 100, 149, 150, 899, 900, 999] {
+            let w = p.window_of(row);
+            assert!(w.contains(row), "row {row} -> window {}", w.id);
+        }
+        assert_eq!(p.window_of(99).id, 0);
+        assert_eq!(p.window_of(100).id, 1);
+        assert_eq!(p.window_of(999).id, 3);
+        assert_eq!(p.boundaries(), vec![0, 100, 150, 900]);
+    }
+
+    #[test]
+    fn from_boundaries_uniform_keeps_stride_semantics() {
+        let split = WindowPlan::split(10, 128, 3);
+        let rebuilt = WindowPlan::from_boundaries(10, 128, &split.boundaries()).unwrap();
+        assert!(split.same_boundaries(&rebuilt));
+        for row in 0..10 {
+            assert_eq!(split.window_of(row).id, rebuilt.window_of(row).id);
+        }
+        // Single-window plans work through both constructors.
+        let one = WindowPlan::from_boundaries(10, 128, &[0]).unwrap();
+        assert_eq!(one.count(), 1);
+        assert_eq!(one.window_of(9).id, 0);
+        assert!(!one.same_boundaries(&split));
+    }
+
+    #[test]
+    fn from_boundaries_rejects_malformed_starts() {
+        assert!(WindowPlan::from_boundaries(100, 128, &[1, 50]).is_err());
+        assert!(WindowPlan::from_boundaries(100, 128, &[0, 50, 50]).is_err());
+        assert!(WindowPlan::from_boundaries(100, 128, &[0, 120]).is_err());
+        assert!(WindowPlan::from_boundaries(100, 128, &[]).is_err());
+    }
+
+    #[test]
     fn region_of_maps_rows_to_bytes() {
         let p = WindowPlan::split(1000, 128, 2);
         let r = p.region_of(&p.windows()[1]);
@@ -233,6 +352,37 @@ mod prop_tests {
 
             // window_of + localize round-trip for random rows.
             for _ in 0..50 {
+                let row = g.u64(0, rows - 1);
+                let w = plan.window_of(row);
+                assert!(w.contains(row));
+                assert_eq!(w.start_row + w.localize(row), row);
+            }
+        });
+    }
+
+    #[test]
+    fn property_boundary_plans_partition_and_localize() {
+        prop::check("windowplan-boundaries", 60, |g| {
+            let rows = g.u64(16, 100_000);
+            let count = g.usize(1, 12.min(rows as usize));
+            // Random strictly-increasing starts beginning at 0.
+            let mut starts: Vec<u64> = vec![0];
+            let mut used = std::collections::BTreeSet::new();
+            used.insert(0u64);
+            while starts.len() < count {
+                let s = g.u64(1, rows - 1);
+                if used.insert(s) {
+                    starts.push(s);
+                }
+            }
+            starts.sort_unstable();
+            let plan = WindowPlan::from_boundaries(rows, 128, &starts).unwrap();
+            assert_eq!(plan.count(), starts.len());
+            assert_eq!(plan.windows().last().unwrap().end_row(), rows);
+            for w in plan.windows().windows(2) {
+                assert_eq!(w[0].end_row(), w[1].start_row);
+            }
+            for _ in 0..60 {
                 let row = g.u64(0, rows - 1);
                 let w = plan.window_of(row);
                 assert!(w.contains(row));

@@ -62,6 +62,11 @@ pub struct FleetPlan {
     pub shards: Vec<CardShard>,
     pub total_rows: u64,
     pub row_bytes: u64,
+    /// Migration stamp: 0 at [`build`](Self::build), bumped per published
+    /// re-sharding ([`with_ranges`](Self::with_ranges)).  In-flight fleet
+    /// tickets split under generation N merge under N even after N+1 goes
+    /// live.
+    pub generation: u64,
 }
 
 impl FleetPlan {
@@ -151,7 +156,97 @@ impl FleetPlan {
             shards,
             total_rows,
             row_bytes,
+            generation: 0,
         })
+    }
+
+    /// Build a plan from explicit per-card row counts (`rows_of[i]` rows
+    /// for card `i`, in card order; zero skips the card) — the fleet
+    /// rebalancer's constructor for migrated shard boundaries.  Validates
+    /// memory and reach per card exactly like [`build`](Self::build) and
+    /// stamps `generation`.
+    pub fn with_ranges(
+        cards: &[CardSpec],
+        rows_of: &[u64],
+        total_rows: u64,
+        row_bytes: u64,
+        seed: u64,
+        generation: u64,
+    ) -> anyhow::Result<Self> {
+        if cards.len() != rows_of.len() {
+            return Err(anyhow!(
+                "{} cards but {} row counts",
+                cards.len(),
+                rows_of.len()
+            ));
+        }
+        if rows_of.iter().sum::<u64>() != total_rows {
+            return Err(anyhow!("row counts do not tile the table"));
+        }
+        let mut shards = Vec::new();
+        let mut start = 0u64;
+        for (i, c) in cards.iter().enumerate() {
+            let rows = rows_of[i];
+            if rows == 0 {
+                continue;
+            }
+            if rows * row_bytes > c.memory_bytes {
+                return Err(anyhow!(
+                    "card {i} assigned {rows} rows but only fits {}",
+                    c.memory_bytes / row_bytes
+                ));
+            }
+            let plan =
+                WindowPlan::for_reach(rows, row_bytes, c.map.reach_bytes, c.map.groups.len())
+                    .with_context(|| format!("card {i}"))?;
+            let placement = Placement::build(PlacementPolicy::GroupToChunk, &c.map, &plan, seed)
+                .with_context(|| format!("card {i}"))?;
+            shards.push(CardShard {
+                card: i,
+                start_row: start,
+                rows,
+                plan,
+                placement,
+            });
+            start += rows;
+        }
+        if shards.is_empty() {
+            return Err(anyhow!("no card received any rows"));
+        }
+        Ok(Self {
+            shards,
+            total_rows,
+            row_bytes,
+            generation,
+        })
+    }
+
+    /// Rows per card under this plan (indexed by card id, zero when a card
+    /// holds no shard) — the rebalancer's geometry input.
+    pub fn rows_per_card(&self, cards: usize) -> Vec<u64> {
+        let mut out = vec![0u64; cards];
+        for s in &self.shards {
+            out[s.card] = s.rows;
+        }
+        out
+    }
+
+    /// Rows whose owning card differs between two plans over the same row
+    /// space — the migration volume a re-sharding implies (view re-slices,
+    /// never data copies).
+    pub fn rows_moved(&self, next: &FleetPlan) -> u64 {
+        debug_assert_eq!(self.total_rows, next.total_rows);
+        let mut kept = 0u64;
+        for a in &self.shards {
+            for b in &next.shards {
+                if a.card == b.card {
+                    let lo = a.start_row.max(b.start_row);
+                    let hi = a.end_row().min(b.end_row());
+                    kept += hi.saturating_sub(lo);
+                }
+            }
+        }
+        self.total_rows - kept
     }
 
     /// Two-level route: global row -> (shard index, card-local row).
@@ -282,6 +377,30 @@ mod tests {
                 assert!(!s.placement.serving_groups(w).is_empty());
             }
         }
+    }
+
+    #[test]
+    fn with_ranges_builds_and_validates_migrated_plans() {
+        let cards = vec![card(14, 8, 120.0, 80), card(14, 8, 120.0, 80)];
+        let rows = 100 * GIB / 128;
+        let old = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        assert_eq!(old.generation, 0);
+        // Shift a quarter of the table from card 0 to card 1.
+        let moved = rows / 4;
+        let new_rows = vec![old.shards[0].rows - moved, old.shards[1].rows + moved];
+        let next = FleetPlan::with_ranges(&cards, &new_rows, rows, 128, 0, 1).unwrap();
+        assert_eq!(next.generation, 1);
+        assert!(next.fits_reach(&cards));
+        assert_eq!(old.rows_moved(&next), moved);
+        assert_eq!(next.rows_per_card(2), new_rows);
+        // Routing stays total and consistent under the new boundaries.
+        let (si, local) = next.route(rows - 1).unwrap();
+        assert_eq!(next.shards[si].start_row + local, rows - 1);
+
+        // Over-memory assignments and non-tiling row counts are rejected.
+        assert!(FleetPlan::with_ranges(&cards, &[rows, 0], rows, 128, 0, 1).is_err());
+        assert!(FleetPlan::with_ranges(&cards, &[rows / 2, rows / 2 + 1], rows, 128, 0, 1)
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! The repartitioning control plane: one escalation policy over the three
+//! rebalancing levers, cheapest first —
+//!
+//! ```text
+//!   re-deal groups        (AdaptivePlacer::rebalance — swap the deal)
+//!     └─ not enough? → re-split window boundaries   (PlanSplitter::replan)
+//!           └─ not enough? → migrate rows across cards (FleetRebalancer)
+//! ```
+//!
+//! [`ControlPlane`] owns the *policy* (when is each lever permitted), not
+//! the levers themselves: a per-card epoch loop
+//! ([`SimBackend`](crate::service::SimBackend)) drives deal/re-split, the
+//! fleet epoch loop ([`FleetService`](crate::service::FleetService)) adds
+//! migration on top.  Each epoch the driver reports the observed capacity/
+//! load imbalance; [`permit`](ControlPlane::permit) answers with the
+//! strongest lever allowed right now (hysteresis per level: an imbalance
+//! must *persist* for `patience` epochs beyond what the cheaper lever fixed
+//! before the next one unlocks, and every action is followed by `cooldown`
+//! quiet epochs so fresh signals accumulate under the new layout).  The
+//! driver then tries levers cheapest-to-permitted and records what actually
+//! happened; the resulting [`Decision`] trace is the control plane's
+//! audit log (`a100win bench-serve` prints its tail).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// The repartitioning levers, cheapest first.  `Ord` follows cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lever {
+    /// Leave the layout alone this epoch.
+    Hold,
+    /// Re-deal SM groups across fixed window boundaries.
+    Redeal,
+    /// Re-split the window boundaries themselves.
+    Resplit,
+    /// Move row ranges across cards (fleet scope only).
+    Migrate,
+}
+
+impl std::fmt::Display for Lever {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Lever::Hold => "hold",
+            Lever::Redeal => "redeal",
+            Lever::Resplit => "resplit",
+            Lever::Migrate => "migrate",
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ControlPlaneConfig {
+    /// Load-share vs capacity-share deviation below which the layout is
+    /// considered healthy (streaks reset; nothing is permitted).
+    pub min_imbalance: f64,
+    /// Over-threshold epochs required per escalation step: the first
+    /// `patience` failing epochs permit only a re-deal, the next
+    /// `patience` unlock re-splitting, then migration.
+    pub patience: u32,
+    /// Quiet epochs after any applied lever, so the new layout collects
+    /// signal before being judged.
+    pub cooldown: u32,
+    /// The strongest lever this scope may use (`Resplit` for one card,
+    /// `Migrate` for a fleet).
+    pub max_lever: Lever,
+    /// Decisions retained in the audit trace.
+    pub trace_len: usize,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> Self {
+        Self {
+            min_imbalance: 0.10,
+            patience: 1,
+            cooldown: 1,
+            max_lever: Lever::Resplit,
+            trace_len: 64,
+        }
+    }
+}
+
+/// One epoch's audited outcome.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub epoch: u64,
+    /// The strongest lever the policy permitted this epoch.
+    pub permitted: Lever,
+    /// The lever that actually published a new generation (None: no-op —
+    /// healthy, cooling down, or every permitted lever declined).
+    pub acted: Option<Lever>,
+    /// The imbalance the epoch was judged on.
+    pub imbalance: f64,
+    /// Generation published by the acted lever.
+    pub generation: Option<u64>,
+    pub why: String,
+}
+
+#[derive(Debug)]
+struct PlaneState {
+    epoch: u64,
+    /// Consecutive over-threshold epochs (excluding cooldowns).
+    streak: u32,
+    cooldown_left: u32,
+    trace: VecDeque<Decision>,
+}
+
+/// The escalation policy + audit trace (see module docs).
+#[derive(Debug)]
+pub struct ControlPlane {
+    cfg: ControlPlaneConfig,
+    state: Mutex<PlaneState>,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: ControlPlaneConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(PlaneState {
+                epoch: 0,
+                streak: 0,
+                cooldown_left: 0,
+                trace: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ControlPlaneConfig {
+        &self.cfg
+    }
+
+    /// Open an epoch: given the observed imbalance, return the strongest
+    /// lever permitted right now.  The driver should attempt levers
+    /// cheapest-to-permitted (a permitted `Resplit` means "try the re-deal
+    /// first; if it declines or cannot help, re-split").
+    pub fn permit(&self, imbalance: f64) -> Lever {
+        let mut st = self.state.lock().unwrap();
+        st.epoch += 1;
+        if st.cooldown_left > 0 {
+            st.cooldown_left -= 1;
+            return Lever::Hold;
+        }
+        if imbalance.is_nan() || imbalance < self.cfg.min_imbalance {
+            // NaN-safe: an unmeasurable imbalance never escalates.
+            st.streak = 0;
+            return Lever::Hold;
+        }
+        st.streak += 1;
+        let step = (st.streak - 1) / self.cfg.patience.max(1);
+        let lever = match step {
+            0 => Lever::Redeal,
+            1 => Lever::Resplit,
+            _ => Lever::Migrate,
+        };
+        lever.min(self.cfg.max_lever)
+    }
+
+    /// Record the outcome of the epoch opened by the matching
+    /// [`permit`](Self::permit) call.  An applied lever starts the
+    /// cooldown; the streak is *not* reset — only a healthy epoch resets
+    /// it, so a lever that failed to fix the imbalance escalates.
+    pub fn record(
+        &self,
+        permitted: Lever,
+        acted: Option<Lever>,
+        imbalance: f64,
+        generation: Option<u64>,
+        why: impl Into<String>,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        if acted.is_some() {
+            st.cooldown_left = self.cfg.cooldown;
+        }
+        let d = Decision {
+            epoch: st.epoch,
+            permitted,
+            acted,
+            imbalance,
+            generation,
+            why: why.into(),
+        };
+        if st.trace.len() >= self.cfg.trace_len.max(1) {
+            st.trace.pop_front();
+        }
+        st.trace.push_back(d);
+    }
+
+    /// Open an epoch *outside* the escalation ladder — health transitions
+    /// act immediately, bypassing hysteresis — advancing the epoch counter
+    /// (so the decision trace stays strictly ordered) without touching
+    /// streaks or cooldowns.  Record the outcome with
+    /// [`record`](Self::record) as usual.
+    pub fn open_unladdered(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        st.epoch += 1;
+        st.epoch
+    }
+
+    /// Epochs opened so far.
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// The retained decision trace, oldest first.
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.state.lock().unwrap().trace.iter().cloned().collect()
+    }
+}
+
+/// The imbalance every scope is judged on: the largest deviation between a
+/// partition's observed load share and its provisioned capacity share.
+/// (Used per-window against the placement's group capacities, and per-card
+/// against the fleet's probed card capacities.)
+pub fn capacity_imbalance(load_share: &[f64], capacity_share: &[f64]) -> f64 {
+    debug_assert_eq!(load_share.len(), capacity_share.len());
+    load_share
+        .iter()
+        .zip(capacity_share)
+        .map(|(l, c)| (l - c).abs())
+        .fold(0.0f64, f64::max)
+}
+
+/// Normalize per-partition observed rows into load shares; `None` when the
+/// epoch carried no signal at all.
+pub fn load_shares(rows: &[u64]) -> Option<Vec<f64>> {
+    let total: u64 = rows.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    Some(rows.iter().map(|&r| r as f64 / total as f64).collect())
+}
+
+/// Delta observed counters against a committed baseline — the one
+/// epoch-signal rule every scope shares: the baseline only advances when
+/// the epoch carried at least `min_commit` total, so a starved epoch rolls
+/// its signal into the next one and persistent low-rate skew still
+/// accumulates to a decision instead of being dropped.  Resizes the
+/// baseline (zeroed) when the counter set changes shape.
+pub fn committed_delta(last: &mut Vec<u64>, totals: &[u64], min_commit: u64) -> Vec<u64> {
+    if last.len() != totals.len() {
+        *last = vec![0; totals.len()];
+    }
+    let delta: Vec<u64> = totals
+        .iter()
+        .zip(last.iter())
+        .map(|(t, l)| t.saturating_sub(*l))
+        .collect();
+    if delta.iter().sum::<u64>() >= min_commit {
+        last.clear();
+        last.extend_from_slice(totals);
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(max: Lever) -> ControlPlane {
+        ControlPlane::new(ControlPlaneConfig {
+            max_lever: max,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn healthy_epochs_hold_and_reset_streaks() {
+        let cp = plane(Lever::Migrate);
+        assert_eq!(cp.permit(0.02), Lever::Hold);
+        assert_eq!(cp.permit(0.5), Lever::Redeal);
+        cp.record(Lever::Redeal, None, 0.5, None, "placer declined");
+        // Healthy again: streak resets, so the next failure starts cheap.
+        assert_eq!(cp.permit(0.01), Lever::Hold);
+        assert_eq!(cp.permit(0.5), Lever::Redeal);
+    }
+
+    #[test]
+    fn persistent_imbalance_escalates_cheapest_first() {
+        let cp = plane(Lever::Migrate);
+        // Epoch 1: first failure — only the cheap lever is permitted; the
+        // re-deal applies and cooldown begins.
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+        cp.record(Lever::Redeal, Some(Lever::Redeal), 0.4, Some(1), "re-dealt");
+        // Epoch 2: cooling down.
+        assert_eq!(cp.permit(0.4), Lever::Hold);
+        cp.record(Lever::Hold, None, 0.4, None, "cooldown");
+        // Epoch 3: the re-deal did not fix it — re-split unlocks.
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+        cp.record(Lever::Resplit, Some(Lever::Resplit), 0.4, Some(2), "re-split");
+        assert_eq!(cp.permit(0.4), Lever::Hold); // cooldown again
+        // Epoch 5: still broken — migration unlocks.
+        assert_eq!(cp.permit(0.4), Lever::Migrate);
+    }
+
+    #[test]
+    fn declined_levers_escalate_without_cooldown() {
+        let cp = plane(Lever::Migrate);
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+        cp.record(Lever::Redeal, None, 0.4, None, "placer declined");
+        // No action → no cooldown → next epoch escalates immediately.
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+    }
+
+    #[test]
+    fn max_lever_caps_the_ladder() {
+        let cp = plane(Lever::Resplit);
+        for _ in 0..10 {
+            let lever = cp.permit(0.4);
+            assert!(lever <= Lever::Resplit);
+            cp.record(lever, None, 0.4, None, "declined");
+        }
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+    }
+
+    #[test]
+    fn trace_is_bounded_and_ordered() {
+        let cp = ControlPlane::new(ControlPlaneConfig {
+            trace_len: 4,
+            ..Default::default()
+        });
+        for i in 0..10 {
+            let lever = cp.permit(0.3);
+            cp.record(lever, None, 0.3, None, format!("epoch {i}"));
+        }
+        let trace = cp.decisions();
+        assert_eq!(trace.len(), 4);
+        assert!(trace.windows(2).all(|w| w[0].epoch < w[1].epoch));
+        assert_eq!(trace.last().unwrap().epoch, cp.epoch());
+    }
+
+    #[test]
+    fn unladdered_epochs_keep_the_trace_ordered() {
+        let cp = plane(Lever::Resplit);
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+        cp.record(Lever::Redeal, None, 0.4, None, "laddered");
+        // A health-path epoch advances the counter without a permit...
+        let e = cp.open_unladdered();
+        assert_eq!(e, 2);
+        cp.record(Lever::Redeal, Some(Lever::Redeal), 0.0, Some(1), "health");
+        // ...its applied action still starts the normal cooldown...
+        assert_eq!(cp.permit(0.4), Lever::Hold);
+        // ...and the ladder's streak survives intact: the next failing
+        // epoch escalates exactly as if the health epoch were regular.
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+        let trace = cp.decisions();
+        assert!(trace.windows(2).all(|w| w[0].epoch < w[1].epoch));
+    }
+
+    #[test]
+    fn nan_imbalance_is_held_not_escalated() {
+        let cp = plane(Lever::Migrate);
+        assert_eq!(cp.permit(f64::NAN), Lever::Hold);
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+    }
+
+    #[test]
+    fn capacity_imbalance_is_max_deviation() {
+        let im = capacity_imbalance(&[0.9, 0.1], &[0.5, 0.5]);
+        assert!((im - 0.4).abs() < 1e-12);
+        assert_eq!(capacity_imbalance(&[], &[]), 0.0);
+    }
+}

@@ -96,8 +96,23 @@ pub struct Metrics {
     pub global_rejected: AtomicU64,
     /// Rows routed per window (index = window id; the adaptive placer's
     /// load signal).  Sized by [`Metrics::for_windows`]; empty when the
-    /// owner tracks no placement.
+    /// owner tracks no placement.  Sized to the *maximum* window count
+    /// (one per SM group): a re-split may raise the live plan's count.
     pub window_rows: Vec<AtomicU64>,
+    /// Control-plane epochs that re-*dealt* groups under fixed window
+    /// boundaries (the cheapest repartitioning lever).
+    pub redeal_epochs: AtomicU64,
+    /// Control-plane epochs that re-*split* the window boundaries.
+    pub resplit_epochs: AtomicU64,
+    /// Control-plane epochs that migrated row ranges across cards (fleet
+    /// registries only).
+    pub migrate_epochs: AtomicU64,
+    /// Rows whose owning card changed across all migrations (zero-copy:
+    /// view re-slices, never data copies).
+    pub rows_migrated: AtomicU64,
+    /// Plan/placement generations published by the control plane (every
+    /// redeal, resplit, or migration bumps exactly one generation).
+    pub generations_published: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -143,6 +158,11 @@ impl Metrics {
             throttled: self.throttled.load(Ordering::Relaxed),
             global_rejected: self.global_rejected.load(Ordering::Relaxed),
             window_rows: self.window_rows_snapshot(),
+            redeal_epochs: self.redeal_epochs.load(Ordering::Relaxed),
+            resplit_epochs: self.resplit_epochs.load(Ordering::Relaxed),
+            migrate_epochs: self.migrate_epochs.load(Ordering::Relaxed),
+            rows_migrated: self.rows_migrated.load(Ordering::Relaxed),
+            generations_published: self.generations_published.load(Ordering::Relaxed),
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.quantile_us(0.50),
             p99_latency_us: self.latency.quantile_us(0.99),
@@ -166,6 +186,11 @@ pub struct MetricsSnapshot {
     pub global_rejected: u64,
     /// Rows routed per window (empty when the backend sizes no windows).
     pub window_rows: Vec<u64>,
+    pub redeal_epochs: u64,
+    pub resplit_epochs: u64,
+    pub migrate_epochs: u64,
+    pub rows_migrated: u64,
+    pub generations_published: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -177,6 +202,7 @@ impl MetricsSnapshot {
         format!(
             "requests={} rows={} batches={} padded={} errors={} rejected={} \
              shed={} shed_global={} expired={} throttled={} \
+             repartition(redeal/resplit/migrate)={}/{}/{} gens={} rows_migrated={} \
              latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
             self.requests,
             self.rows,
@@ -188,6 +214,11 @@ impl MetricsSnapshot {
             self.global_rejected,
             self.expired,
             self.throttled,
+            self.redeal_epochs,
+            self.resplit_epochs,
+            self.migrate_epochs,
+            self.generations_published,
+            self.rows_migrated,
             self.mean_latency_us,
             self.p50_latency_us,
             self.p99_latency_us,

@@ -16,8 +16,17 @@
 //!                   generation-stamped live [`PlacementCell`].
 //! * [`adaptive`]  — skew-aware [`AdaptivePlacer`]: rebalance the
 //!                   group↔window deal from per-window load signals.
+//! * [`replan`]    — [`PlanSplitter`]: re-split the window *boundaries*
+//!                   themselves when skew is hotter than the deal's group
+//!                   granularity can absorb.
+//! * [`controlplane`] — the repartitioning [`ControlPlane`]: one
+//!                   escalation policy (deal → re-split → migrate, cheapest
+//!                   lever first, hysteresis per level) with an audited
+//!                   decision trace; driven per card by
+//!                   [`crate::service::SimBackend`] and fleet-wide by
+//!                   [`crate::service::FleetService`].
 //! * [`router`]    — split requests by owning window (under the current
-//!                   placement generation), merge in order.
+//!                   plan + placement generation), merge in order.
 //! * [`batcher`]   — dynamic batching with deadline + backpressure.
 //! * [`server`]    — the PJRT [`crate::service::Backend`]: per-group
 //!                   worker threads executing AOT gather kernels via
@@ -34,8 +43,10 @@ pub mod adaptive;
 pub mod batcher;
 pub mod chunks;
 pub mod cluster;
+pub mod controlplane;
 pub mod metrics;
 pub mod placement;
+pub mod replan;
 pub mod router;
 pub mod server;
 pub mod state;
@@ -45,10 +56,12 @@ pub use adaptive::{AdaptiveConfig, AdaptivePlacer};
 pub use batcher::{Batcher, BatcherConfig};
 pub use chunks::{Window, WindowPlan};
 pub use cluster::{CardSpec, CardShard, FleetPlan};
+pub use controlplane::{capacity_imbalance, ControlPlane, ControlPlaneConfig, Decision, Lever};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use placement::{
     Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
 };
+pub use replan::{PlanSplitter, SplitterConfig};
 pub use router::{merge_rows, pad_indices, Router};
 pub use server::{EmbeddingServer, ServerConfig};
 pub use state::{CoordinatorState, GroupHealth};

@@ -316,39 +316,79 @@ impl Placer for StaticPlacer {
     }
 }
 
-/// The live placement: a generation-stamped cell the dispatcher reads once
-/// per formed batch and a rebalancer writes between epochs.  Swaps never
-/// drain in-flight work — splits that already loaded the old `Arc` finish
-/// under it, the next batch routes under the new one.
+/// The live serving epoch: a generation-stamped (window plan, placement)
+/// pair the dispatcher reads once per formed batch and the repartitioning
+/// control plane writes between epochs.  Two write paths:
+///
+/// * [`store`](Self::store) — re-*deal* groups under the current window
+///   boundaries (the cheapest lever), and
+/// * [`store_replan`](Self::store_replan) — re-*split* the boundaries
+///   themselves and deal groups over the new windows in one swap.
+///
+/// Swaps never drain in-flight work — splits that already loaded the old
+/// `Arc`s finish under them, the next batch routes under the new pair.
 #[derive(Debug)]
 pub struct PlacementCell {
-    inner: RwLock<Arc<Placement>>,
+    inner: RwLock<CellState>,
+}
+
+#[derive(Debug)]
+struct CellState {
+    plan: Arc<WindowPlan>,
+    placement: Arc<Placement>,
 }
 
 impl PlacementCell {
-    pub fn new(placement: Placement) -> Self {
+    pub fn new(plan: Arc<WindowPlan>, placement: Placement) -> Self {
         Self {
-            inner: RwLock::new(Arc::new(placement)),
+            inner: RwLock::new(CellState {
+                plan,
+                placement: Arc::new(placement),
+            }),
         }
     }
 
     /// The current placement (cheap: read lock + refcount bump).
     pub fn load(&self) -> Arc<Placement> {
-        Arc::clone(&self.inner.read().unwrap())
+        Arc::clone(&self.inner.read().unwrap().placement)
     }
 
-    /// Publish a new placement, stamping `generation = current + 1`.
-    /// Returns the new generation.
+    /// The current (plan, placement) pair under one lock acquisition — the
+    /// dispatcher's per-batch read, guaranteed mutually consistent.
+    pub fn load_planned(&self) -> (Arc<WindowPlan>, Arc<Placement>) {
+        let st = self.inner.read().unwrap();
+        (Arc::clone(&st.plan), Arc::clone(&st.placement))
+    }
+
+    /// The current window plan.
+    pub fn plan(&self) -> Arc<WindowPlan> {
+        Arc::clone(&self.inner.read().unwrap().plan)
+    }
+
+    /// Publish a re-dealt placement under the *current* window plan,
+    /// stamping `generation = current + 1`.  Returns the new generation.
     pub fn store(&self, mut placement: Placement) -> u64 {
         let mut inner = self.inner.write().unwrap();
-        placement.generation = inner.generation + 1;
+        placement.generation = inner.placement.generation + 1;
         let generation = placement.generation;
-        *inner = Arc::new(placement);
+        inner.placement = Arc::new(placement);
+        generation
+    }
+
+    /// Publish a re-*split* plan and its placement atomically (one write
+    /// lock: no batch can observe the new plan with the old placement).
+    /// Returns the new generation.
+    pub fn store_replan(&self, plan: WindowPlan, mut placement: Placement) -> u64 {
+        let mut inner = self.inner.write().unwrap();
+        placement.generation = inner.placement.generation + 1;
+        let generation = placement.generation;
+        inner.plan = Arc::new(plan);
+        inner.placement = Arc::new(placement);
         generation
     }
 
     pub fn generation(&self) -> u64 {
-        self.inner.read().unwrap().generation
+        self.inner.read().unwrap().placement.generation
     }
 }
 
@@ -531,7 +571,7 @@ mod tests {
         let map = test_map();
         let plan = plan(2);
         let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
-        let cell = PlacementCell::new(p.clone());
+        let cell = PlacementCell::new(Arc::new(plan), p.clone());
         assert_eq!(cell.generation(), 0);
         let old = cell.load();
         assert_eq!(cell.store(p.clone()), 1);
@@ -541,5 +581,27 @@ mod tests {
         // in-flight work is never drained or invalidated.
         assert_eq!(old.generation, 0);
         assert_eq!(cell.load().generation, 2);
+    }
+
+    #[test]
+    fn placement_cell_replan_swaps_plan_and_placement_together() {
+        let map = test_map();
+        let plan2 = plan(2);
+        let p2 = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan2, 0).unwrap();
+        let cell = PlacementCell::new(Arc::new(plan2.clone()), p2);
+        let (old_plan, old_placement) = cell.load_planned();
+        assert_eq!(old_plan.count(), 2);
+
+        // Re-split to 4 windows: the pair swaps atomically, generation bumps.
+        let plan4 = plan(4);
+        let p4 = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan4, 0).unwrap();
+        assert_eq!(cell.store_replan(plan4, p4), 1);
+        let (new_plan, new_placement) = cell.load_planned();
+        assert_eq!(new_plan.count(), 4);
+        assert_eq!(new_placement.groups_of_window.len(), 4);
+        assert_eq!(new_placement.generation, 1);
+        assert_eq!(cell.plan().count(), 4);
+        // The pre-swap reader still holds a mutually consistent old pair.
+        assert_eq!(old_plan.count(), old_placement.groups_of_window.len());
     }
 }

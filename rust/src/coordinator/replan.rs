@@ -1,0 +1,471 @@
+//! Window *re-splitting*: recompute the window boundaries themselves from
+//! observed per-window load — the control plane's second repartitioning
+//! lever, for skew hotter than group granularity can absorb.
+//!
+//! [`AdaptivePlacer`](super::adaptive::AdaptivePlacer) re-*deals* SM groups
+//! across **fixed** window boundaries, so its best response to a window
+//! carrying 95% of the load is to pin all-but-one group there — the one
+//! group left covering the cold windows caps the achievable balance at
+//! group granularity.  [`PlanSplitter`] moves the boundaries instead: it
+//! estimates a piecewise-constant load density from the epoch's per-window
+//! routed-row counts, then re-cuts the row space so each new window's load
+//! share matches the capacity share the group deal will be able to give it
+//! (narrow windows around hot row ranges, cold ranges merged into wide
+//! windows).  Cf. TileLens (arXiv 2607.04031) on transparent re-layout
+//! under large-granularity memory systems.
+//!
+//! Every emitted plan preserves the paper's serving constraint by
+//! construction: no window exceeds the probed TLB reach, window count never
+//! exceeds the group count, and the dealt placement keeps every group on
+//! exactly one window ([`Placement::check_windowed_invariant`] — property
+//! tested across random topologies and signals).
+//!
+//! Deterministic: same plan + signals + capacities → same boundaries.
+
+use crate::probe::TopologyMap;
+
+use super::adaptive::AdaptivePlacer;
+use super::chunks::WindowPlan;
+use super::placement::{Placement, PlacementPolicy, WindowSignals};
+
+/// Tuning for [`PlanSplitter`].
+#[derive(Debug, Clone)]
+pub struct SplitterConfig {
+    /// Hysteresis: only re-split when the **best possible re-deal** under
+    /// the current boundaries would still leave some window's load share at
+    /// least this far from its capacity share.  (A mismatch the cheap lever
+    /// can fix never justifies the expensive one.)
+    pub min_imbalance: f64,
+    /// Minimum rows observed in an epoch before re-splitting (starved
+    /// epochs carry no trustworthy density estimate).
+    pub min_epoch_rows: u64,
+    /// Floor on rows per emitted window, so degenerate densities can never
+    /// produce empty or near-empty windows.
+    pub min_window_rows: u64,
+}
+
+impl Default for SplitterConfig {
+    fn default() -> Self {
+        Self {
+            min_imbalance: 0.10,
+            min_epoch_rows: 256,
+            min_window_rows: 64,
+        }
+    }
+}
+
+/// The window-boundary re-splitter (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct PlanSplitter {
+    pub cfg: SplitterConfig,
+}
+
+impl PlanSplitter {
+    pub fn new(cfg: SplitterConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Propose re-split boundaries (and the group deal over them) from one
+    /// epoch's per-window load.  `None` keeps the current plan: signals too
+    /// thin, the mismatch is within what a re-deal can absorb, or the
+    /// recomputed boundaries come out identical.
+    pub fn replan(
+        &self,
+        plan: &WindowPlan,
+        map: &TopologyMap,
+        signals: &WindowSignals,
+    ) -> Option<(WindowPlan, Placement)> {
+        let w_now = plan.count();
+        let g = map.groups.len();
+        let total = signals.total_rows();
+        if signals.rows.len() != w_now
+            || total == 0
+            || total < self.cfg.min_epoch_rows
+            || g < w_now
+            || g == 0
+        {
+            return None;
+        }
+
+        // Smoothed piecewise-constant load density over the current
+        // windows (the uniform prior keeps cold regions at finite — wide,
+        // not infinite — width).
+        let density = LoadDensity::smoothed(
+            plan.windows()
+                .iter()
+                .zip(&signals.rows)
+                .map(|(w, &l)| (w.rows, l)),
+            plan.total_rows,
+        );
+        let shares = density.shares();
+
+        // Hysteresis: if the best re-deal under the *current* boundaries
+        // already balances load to capacity, the cheap lever suffices.
+        let total_cap: f64 = map.solo_gbps.iter().sum();
+        let (best_deal, _) = AdaptivePlacer::deal(map, shares);
+        let best_imbalance = (0..w_now)
+            .map(|w| {
+                let cap: f64 = best_deal[w].iter().map(|&q| map.solo_gbps[q]).sum();
+                (shares[w] - cap / total_cap).abs()
+            })
+            .fold(0.0f64, f64::max);
+        if best_imbalance < self.cfg.min_imbalance {
+            return None;
+        }
+
+        // Geometry bounds: windows may not exceed reach, may not dip under
+        // the row floor, and their count may not exceed the group count.
+        let min_rows = self.cfg.min_window_rows.max(1);
+        let max_window_rows = map.reach_bytes / plan.row_bytes;
+        if max_window_rows < min_rows {
+            return None;
+        }
+        let w_target = (g as u64).min(plan.total_rows / min_rows).max(1) as usize;
+        if (w_target as u64) * max_window_rows < plan.total_rows {
+            // Even at maximum granularity the reach cannot cover the table
+            // (should be unreachable while a valid current plan exists).
+            return None;
+        }
+
+        // Per-window load targets anticipate the deal's granularity: deal
+        // capacities round-robin (fastest first) over `w_target` windows
+        // and target each window's share of that capacity.
+        let mut order: Vec<usize> = (0..g).collect();
+        order.sort_by(|&a, &b| {
+            map.solo_gbps[b]
+                .partial_cmp(&map.solo_gbps[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut target_cap = vec![0.0f64; w_target];
+        for (k, &gi) in order.iter().enumerate() {
+            target_cap[k % w_target] += map.solo_gbps[gi];
+        }
+        let targets: Vec<f64> = target_cap.iter().map(|c| c / total_cap).collect();
+
+        // Cut boundaries at cumulative-load quantiles over the density,
+        // clamped so every window stays within [min_rows, max_window_rows]
+        // and the remainder always stays coverable by the windows still to
+        // come.
+        let mut starts: Vec<u64> = Vec::with_capacity(w_target);
+        let mut cursor: u64 = 0;
+        let mut want = 0.0f64;
+        for j in 0..w_target {
+            starts.push(cursor);
+            if j == w_target - 1 {
+                break;
+            }
+            want += targets[j];
+            let remaining = (w_target - 1 - j) as u64;
+            let lo = (cursor + min_rows)
+                .max(plan.total_rows.saturating_sub(remaining * max_window_rows));
+            let hi = (cursor + max_window_rows).min(plan.total_rows - remaining * min_rows);
+            if lo > hi {
+                return None; // defensive: infeasible geometry
+            }
+            cursor = density.row_at_load(want).clamp(lo, hi);
+        }
+
+        let new_plan = WindowPlan::from_boundaries(plan.total_rows, plan.row_bytes, &starts)
+            .expect("splitter emits strictly increasing in-range boundaries");
+        if new_plan.same_boundaries(plan) {
+            return None;
+        }
+
+        // Load share of each *new* window under the observed density, then
+        // the capacity-proportional group deal over them.
+        let new_shares: Vec<f64> = new_plan
+            .windows()
+            .iter()
+            .map(|w| density.load_between(w.start_row, w.end_row()))
+            .collect();
+        let (groups_of_window, window_of_group) = AdaptivePlacer::deal(map, &new_shares);
+        let placement = Placement {
+            policy: PlacementPolicy::GroupToChunk,
+            generation: 0, // stamped by PlacementCell::store_replan
+            groups_of_window,
+            window_of_group,
+        };
+        debug_assert!(new_plan.fits_reach(map.reach_bytes));
+        debug_assert_eq!(placement.check_windowed_invariant(map, &new_plan), Ok(()));
+        Some((new_plan, placement))
+    }
+}
+
+/// A smoothed piecewise-constant load density over contiguous row
+/// segments — the quantile machinery shared by both boundary re-cutters:
+/// [`PlanSplitter`] (segments = windows) and
+/// [`FleetRebalancer`](crate::service::FleetRebalancer) (segments = card
+/// shards).  Fixes to the interpolation apply to both levers at once.
+pub(crate) struct LoadDensity {
+    starts: Vec<u64>,
+    rows: Vec<u64>,
+    /// Smoothed load share per segment (sums to 1; every entry > 0).
+    shares: Vec<f64>,
+    /// `cum[i]` = load strictly before segment `i`; `cum[len]` = 1.
+    cum: Vec<f64>,
+    total_rows: u64,
+}
+
+impl LoadDensity {
+    /// Build from `(rows, observed_load)` segments tiling `[0, total_rows)`
+    /// in order, blending in a uniform prior so cold segments keep finite
+    /// (wide, not infinite) width under the quantile inverse.
+    pub(crate) fn smoothed(
+        segments: impl Iterator<Item = (u64, u64)>,
+        total_rows: u64,
+    ) -> Self {
+        const ALPHA: f64 = 0.05;
+        let segs: Vec<(u64, u64)> = segments.collect();
+        let n = segs.len().max(1);
+        let total_load: u64 = segs.iter().map(|&(_, l)| l).sum();
+        let mut starts = Vec::with_capacity(segs.len());
+        let mut rows = Vec::with_capacity(segs.len());
+        let mut shares = Vec::with_capacity(segs.len());
+        let mut cum = Vec::with_capacity(segs.len() + 1);
+        cum.push(0.0);
+        let mut acc = 0.0;
+        let mut cursor = 0u64;
+        for &(r, l) in &segs {
+            starts.push(cursor);
+            rows.push(r);
+            let share =
+                (l as f64 / total_load.max(1) as f64 + ALPHA / n as f64) / (1.0 + ALPHA);
+            shares.push(share);
+            acc += share;
+            cum.push(acc);
+            cursor += r;
+        }
+        debug_assert_eq!(cursor, total_rows, "segments must tile the row space");
+        Self {
+            starts,
+            rows,
+            shares,
+            cum,
+            total_rows,
+        }
+    }
+
+    /// Smoothed per-segment load shares (same order as the input).
+    pub(crate) fn shares(&self) -> &[f64] {
+        &self.shares
+    }
+
+    /// Row position where cumulative load reaches `want`, interpolating
+    /// inside the piecewise-constant density.
+    pub(crate) fn row_at_load(&self, want: f64) -> u64 {
+        for i in 0..self.shares.len() {
+            if want <= self.cum[i + 1] || i == self.shares.len() - 1 {
+                let density = self.shares[i] / self.rows[i] as f64; // > 0 via smoothing
+                let frac_rows = (((want - self.cum[i]) / density).max(0.0) as u64)
+                    .min(self.rows[i]);
+                return self.starts[i] + frac_rows;
+            }
+        }
+        self.total_rows
+    }
+
+    /// Load share carried by rows `[start, end)`.
+    pub(crate) fn load_between(&self, start: u64, end: u64) -> f64 {
+        debug_assert!(start <= end && end <= self.total_rows);
+        self.cum_at(end) - self.cum_at(start)
+    }
+
+    /// Cumulative load strictly before `row`.
+    fn cum_at(&self, row: u64) -> f64 {
+        if row >= self.total_rows {
+            return self.cum[self.shares.len()];
+        }
+        // Segments are few (≤ groups per card, ≤ cards per fleet).
+        let i = self.starts.partition_point(|&s| s <= row) - 1;
+        self.cum[i] + self.shares[i] * (row - self.starts[i]) as f64 / self.rows[i] as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(solo: &[f64], reach_bytes: u64) -> TopologyMap {
+        TopologyMap {
+            groups: (0..solo.len()).map(|q| vec![q * 2, q * 2 + 1]).collect(),
+            reach_bytes,
+            solo_gbps: solo.to_vec(),
+            independent: true,
+            card_id: "replan-test".into(),
+        }
+    }
+
+    fn signals(rows: &[u64]) -> WindowSignals {
+        WindowSignals {
+            rows: rows.to_vec(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn hot_window_is_split_into_narrow_windows() {
+        // 2 windows, 4 groups, 95% of load on window 0: a re-deal tops out
+        // at 3:1 capacity (imbalance 0.2), so the splitter must act.
+        let m = map(&[100.0; 4], 1 << 30);
+        let plan = WindowPlan::split(8_192, 128, 2);
+        let splitter = PlanSplitter::default();
+        let (new_plan, placement) = splitter
+            .replan(&plan, &m, &signals(&[9_500, 500]))
+            .expect("group granularity cannot absorb 95/5 skew");
+        assert_eq!(new_plan.count(), 4, "{:?}", new_plan.boundaries());
+        assert_eq!(placement.check_windowed_invariant(&m, &new_plan), Ok(()));
+        // The hot half of the row space ends up holding most of the
+        // windows; the cold half is merged into wide ones.
+        let hot_windows = new_plan
+            .windows()
+            .iter()
+            .filter(|w| w.start_row < 4_096)
+            .count();
+        assert!(hot_windows >= 3, "{:?}", new_plan.boundaries());
+        // Roughly equal load per new window: each new window's share of
+        // the observed density within ~2x of the 1/4 ideal.
+        let shares = [9_500.0 / 10_000.0, 500.0 / 10_000.0];
+        for w in new_plan.windows() {
+            let mut load = 0.0;
+            for half in 0..2u64 {
+                let (s, e) = (half * 4_096, (half + 1) * 4_096);
+                let ov = w.end_row().min(e).saturating_sub(w.start_row.max(s));
+                load += shares[half as usize] * ov as f64 / 4_096.0;
+            }
+            assert!(load > 0.10 && load < 0.45, "window {w:?} carries {load}");
+        }
+    }
+
+    #[test]
+    fn redeal_absorbable_skew_keeps_boundaries() {
+        // 70/30 over 2 windows with 4 equal groups: a 3:1 deal gives
+        // 75/25 capacity — within min_imbalance of the load, so the cheap
+        // lever suffices and the splitter stays quiet.
+        let m = map(&[100.0; 4], 1 << 30);
+        let plan = WindowPlan::split(8_192, 128, 2);
+        assert!(PlanSplitter::default()
+            .replan(&plan, &m, &signals(&[7_000, 3_000]))
+            .is_none());
+    }
+
+    #[test]
+    fn starved_epoch_never_replans() {
+        let m = map(&[100.0; 4], 1 << 30);
+        let plan = WindowPlan::split(8_192, 128, 2);
+        let s = PlanSplitter::default();
+        assert!(s.replan(&plan, &m, &signals(&[10, 0])).is_none());
+        assert!(s.replan(&plan, &m, &signals(&[0, 0])).is_none());
+        assert!(s.replan(&plan, &m, &signals(&[10_000])).is_none()); // wrong arity
+    }
+
+    #[test]
+    fn reach_bounds_every_emitted_window() {
+        // Tight reach: even cold ranges may not be merged past it.
+        let rows = 8_192u64;
+        let row_bytes = 128u64;
+        let reach = 3_000 * row_bytes;
+        let m = map(&[100.0; 4], reach);
+        let plan = WindowPlan::split(rows, row_bytes, 3);
+        let (new_plan, placement) = PlanSplitter::default()
+            .replan(&plan, &m, &signals(&[9_000, 600, 400]))
+            .expect("hot front third must trigger a re-split");
+        assert!(new_plan.fits_reach(reach));
+        assert_eq!(placement.check_windowed_invariant(&m, &new_plan), Ok(()));
+    }
+
+    #[test]
+    fn unequal_capacities_get_matching_load_targets() {
+        // Fastest group should end up alone on the heaviest new window.
+        let m = map(&[130.0, 90.0, 90.0, 90.0], 1 << 30);
+        let plan = WindowPlan::split(8_192, 128, 2);
+        let (new_plan, placement) = PlanSplitter::default()
+            .replan(&plan, &m, &signals(&[9_600, 400]))
+            .expect("skew beyond deal granularity");
+        assert_eq!(placement.check_windowed_invariant(&m, &new_plan), Ok(()));
+        // Every window got exactly one group (4 windows, 4 groups).
+        for w in 0..new_plan.count() {
+            assert_eq!(placement.serving_groups(w).len(), 1);
+        }
+    }
+
+    #[test]
+    fn replan_is_deterministic() {
+        let m = map(&[100.0, 99.0, 98.0, 97.0], 1 << 30);
+        let plan = WindowPlan::split(8_192, 128, 2);
+        let s = PlanSplitter::default();
+        let sig = signals(&[9_300, 700]);
+        let (pa, la) = s.replan(&plan, &m, &sig).unwrap();
+        let (pb, lb) = s.replan(&plan, &m, &sig).unwrap();
+        assert!(pa.same_boundaries(&pb));
+        assert_eq!(la.groups_of_window, lb.groups_of_window);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// The ISSUE's acceptance property: any splitter output preserves the
+    /// one-group-one-≤reach-window invariant across random signals and
+    /// topologies (and tiles the row space exactly).
+    #[test]
+    fn property_replan_keeps_invariant() {
+        prop::check("replan-invariant", 80, |g| {
+            let n_windows = g.usize(1, 6);
+            let n_groups = g.usize(n_windows, 12);
+            let row_bytes = 128u64;
+            let total_rows = g.u64(4_096, 200_000);
+            // Reach somewhere between "tight" and "roomy", but always
+            // feasible for the group count.
+            let min_reach_rows = total_rows.div_ceil(n_groups as u64).max(512);
+            let reach_rows = g.u64(min_reach_rows, total_rows.max(min_reach_rows + 1));
+            let map = TopologyMap {
+                groups: (0..n_groups).map(|q| vec![q * 2, q * 2 + 1]).collect(),
+                reach_bytes: reach_rows * row_bytes,
+                solo_gbps: (0..n_groups).map(|_| g.f64(60.0, 140.0)).collect(),
+                independent: true,
+                card_id: "prop".into(),
+            };
+            let Ok(mut plan) = WindowPlan::for_reach(
+                total_rows,
+                row_bytes,
+                map.reach_bytes,
+                n_windows.max(total_rows.div_ceil(reach_rows) as usize),
+            ) else {
+                return;
+            };
+            if plan.count() > n_groups {
+                return; // not servable at all; splitter precondition fails
+            }
+
+            let splitter = PlanSplitter::default();
+            for _ in 0..g.usize(1, 6) {
+                let rows: Vec<u64> = (0..plan.count()).map(|_| g.u64(0, 50_000)).collect();
+                let sig = WindowSignals {
+                    rows,
+                    ..Default::default()
+                };
+                if let Some((new_plan, placement)) = splitter.replan(&plan, &map, &sig) {
+                    // Tiles the row space.
+                    assert_eq!(new_plan.total_rows, total_rows);
+                    assert_eq!(new_plan.windows()[0].start_row, 0);
+                    assert_eq!(new_plan.windows().last().unwrap().end_row(), total_rows);
+                    for w in new_plan.windows().windows(2) {
+                        assert_eq!(w[0].end_row(), w[1].start_row);
+                    }
+                    // The paper's invariant, every time.
+                    assert!(new_plan.fits_reach(map.reach_bytes), "window exceeds reach");
+                    assert!(new_plan.count() <= n_groups);
+                    assert_eq!(
+                        placement.check_windowed_invariant(&map, &new_plan),
+                        Ok(()),
+                        "signals {sig:?}"
+                    );
+                    plan = new_plan;
+                }
+            }
+        });
+    }
+}

@@ -43,14 +43,15 @@ const NO_SLOT: u32 = u32::MAX;
 /// when callers return finished splits via [`Router::recycle`] — no
 /// sub-batch allocations either (EXPERIMENTS.md §Perf L3, serving path).
 ///
-/// The placement is *not* captured at construction: [`Router::split`]
-/// reads it per call, so dispatchers can route each formed batch under the
-/// current generation of a live
-/// [`PlacementCell`](super::placement::PlacementCell) — swapped placements
-/// take effect at the next batch with no drain and no router rebuild.
-#[derive(Debug)]
-pub struct Router<'a> {
-    plan: &'a WindowPlan,
+/// Neither the plan nor the placement is captured at construction:
+/// [`Router::split`] reads both per call, so dispatchers route each formed
+/// batch under the current generation of a live
+/// [`PlacementCell`](super::placement::PlacementCell) — re-*dealt*
+/// placements *and* re-*split* window plans take effect at the next batch
+/// with no drain and no router rebuild (the scratch grows on demand when a
+/// re-split raises the window count).
+#[derive(Debug, Default)]
+pub struct Router {
     /// Round-robin cursors per window for group selection.
     cursors: Vec<usize>,
     /// Scratch: window id -> index into the split being built (`NO_SLOT`
@@ -61,25 +62,31 @@ pub struct Router<'a> {
     pool: Vec<SubBatch>,
 }
 
-impl<'a> Router<'a> {
-    pub fn new(plan: &'a WindowPlan) -> Self {
-        Self {
-            plan,
-            cursors: vec![0; plan.count()],
-            window_slot: vec![NO_SLOT; plan.count()],
-            pool: Vec::new(),
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow the per-window scratch to cover `count` windows (no-op once
+    /// sized; cursors of shrunk plans keep their history harmlessly).
+    fn ensure_windows(&mut self, count: usize) {
+        if self.window_slot.len() < count {
+            self.window_slot.resize(count, NO_SLOT);
+            self.cursors.resize(count, 0);
         }
     }
 
     /// Split a request's global row indices into per-window sub-batches
-    /// under `placement` (must cover this router's window plan).  Each
-    /// sub-batch is assigned a serving group round-robin (cheap load
-    /// spreading; the probed capacities are balanced by construction).
-    pub fn split(&mut self, rows: &[u64], placement: &Placement) -> SplitBatch {
-        debug_assert_eq!(self.plan.count(), placement.groups_of_window.len());
+    /// under `plan` + `placement` (the placement must cover the plan's
+    /// windows).  Each sub-batch is assigned a serving group round-robin
+    /// (cheap load spreading; the probed capacities are balanced by
+    /// construction).
+    pub fn split(&mut self, rows: &[u64], plan: &WindowPlan, placement: &Placement) -> SplitBatch {
+        debug_assert_eq!(plan.count(), placement.groups_of_window.len());
+        self.ensure_windows(plan.count());
         let mut sub_batches: Vec<SubBatch> = Vec::new();
         for (pos, &row) in rows.iter().enumerate() {
-            let w = self.plan.window_of(row);
+            let w = plan.window_of(row);
             let sb_idx = match self.window_slot[w.id] {
                 NO_SLOT => {
                     let serving = placement.serving_groups(w.id);
@@ -124,10 +131,6 @@ impl<'a> Router<'a> {
             sb.positions.clear();
             self.pool.push(sb);
         }
-    }
-
-    pub fn plan(&self) -> &WindowPlan {
-        self.plan
     }
 }
 
@@ -189,9 +192,9 @@ mod tests {
     #[test]
     fn split_routes_every_index_to_owning_window() {
         let (plan, placement) = setup(4);
-        let mut router = Router::new(&plan);
+        let mut router = Router::new();
         let rows: Vec<u64> = vec![0, 9_999, 2_500, 5_000, 7_499, 1, 2_500];
-        let split = router.split(&rows, &placement);
+        let split = router.split(&rows, &plan, &placement);
         let mut covered = 0;
         for sb in &split.sub_batches {
             let w = &plan.windows()[sb.window];
@@ -209,9 +212,9 @@ mod tests {
     #[test]
     fn merge_restores_request_order() {
         let (plan, placement) = setup(4);
-        let mut router = Router::new(&plan);
+        let mut router = Router::new();
         let rows: Vec<u64> = vec![42, 9_000, 3, 7_777, 2_500, 42];
-        let split = router.split(&rows, &placement);
+        let split = router.split(&rows, &plan, &placement);
         // Fake per-row payload: row value replicated d times.
         let d = 4;
         let parts: Vec<Vec<f32>> = split
@@ -262,10 +265,10 @@ mod tests {
         };
         let plan = WindowPlan::split(100, 128, 1);
         let placement = Placement::build(PlacementPolicy::Naive, &map, &plan, 0).unwrap();
-        let mut router = Router::new(&plan);
+        let mut router = Router::new();
         let mut seen = std::collections::HashSet::new();
         for _ in 0..4 {
-            let split = router.split(&[1, 2, 3], &placement);
+            let split = router.split(&[1, 2, 3], &plan, &placement);
             seen.insert(split.sub_batches[0].group);
         }
         assert_eq!(seen.len(), 4, "round robin must cycle all groups");
@@ -274,15 +277,15 @@ mod tests {
     #[test]
     fn recycled_splits_reuse_shells_and_stay_correct() {
         let (plan, placement) = setup(4);
-        let mut router = Router::new(&plan);
+        let mut router = Router::new();
         let rows: Vec<u64> = vec![0, 9_999, 2_500, 5_000, 7_499, 1, 2_500];
-        let first = router.split(&rows, &placement);
+        let first = router.split(&rows, &plan, &placement);
         let sub_count = first.sub_batches.len();
         router.recycle(first);
         // Subsequent splits must produce identical routing out of the
         // recycled shells (cursors advanced round-robin, data reset).
         for _ in 0..3 {
-            let split = router.split(&rows, &placement);
+            let split = router.split(&rows, &plan, &placement);
             assert_eq!(split.sub_batches.len(), sub_count);
             let mut covered = 0;
             for sb in &split.sub_batches {
@@ -305,9 +308,9 @@ mod tests {
         // The placement is read per split: handing the router a different
         // placement reroutes the very next call, no rebuild, no drain.
         let (plan, placement) = setup(2);
-        let mut router = Router::new(&plan);
+        let mut router = Router::new();
         let rows: Vec<u64> = vec![1, 2, 9_999];
-        let before = router.split(&rows, &placement);
+        let before = router.split(&rows, &plan, &placement);
         for sb in &before.sub_batches {
             assert!(placement.serving_groups(sb.window).contains(&sb.group));
         }
@@ -322,7 +325,7 @@ mod tests {
                 .map(|&w| 1 - w)
                 .collect(),
         };
-        let after = router.split(&rows, &swapped);
+        let after = router.split(&rows, &plan, &swapped);
         for sb in &after.sub_batches {
             assert!(swapped.serving_groups(sb.window).contains(&sb.group));
         }
@@ -333,10 +336,10 @@ mod tests {
         prop::check("split-merge-identity", 50, |g| {
             let windows = g.usize(1, 4);
             let (plan, placement) = setup(windows);
-            let mut router = Router::new(&plan);
+            let mut router = Router::new();
             let len = g.usize(1, 300);
             let rows: Vec<u64> = (0..len).map(|_| g.u64(0, 9_999)).collect();
-            let split = router.split(&rows, &placement);
+            let split = router.split(&rows, &plan, &placement);
 
             // Sub-batch sizes sum to the request.
             let total: usize = split.sub_batches.iter().map(|s| s.local_rows.len()).sum();

@@ -27,7 +27,7 @@
 //! [`SimBackend`](crate::service::SimBackend).
 
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context};
 
@@ -40,6 +40,7 @@ use super::chunks::WindowPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::placement::{Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer};
 use super::router::pad_indices;
+use super::state::{CoordinatorState, GroupHealth};
 use super::table::TableView;
 
 /// Server configuration.
@@ -73,6 +74,14 @@ pub struct EmbeddingServer {
     /// server can honor (each worker uploaded only its startup windows'
     /// shards), so live swaps are validated against it.
     startup: Placement,
+    /// The probe map the server was started against (health transitions
+    /// re-deal with its capacities).
+    map: TopologyMap,
+    /// Versioned group-health view; [`set_group_health`] transitions drive
+    /// immediate placement swaps (ROADMAP item (a)).
+    ///
+    /// [`set_group_health`]: EmbeddingServer::set_group_health
+    state: Mutex<CoordinatorState>,
 }
 
 impl EmbeddingServer {
@@ -137,10 +146,9 @@ impl EmbeddingServer {
         }
 
         // --- dispatcher + queue (shared scaffolding) ----------------------
-        let cell = Arc::new(PlacementCell::new(placement.clone()));
+        let cell = Arc::new(PlacementCell::new(Arc::clone(&plan), placement.clone()));
         let pipeline = Pipeline::start(
             cfg.batcher.clone(),
-            Arc::clone(&plan),
             Arc::clone(&cell),
             Arc::clone(&metrics),
             view.d(),
@@ -148,6 +156,7 @@ impl EmbeddingServer {
             workers,
         )?;
 
+        let state = CoordinatorState::new(&placement, map.groups.len());
         Ok(Self {
             pipeline,
             metrics,
@@ -155,6 +164,8 @@ impl EmbeddingServer {
             view,
             placement: cell,
             startup: placement,
+            map: map.clone(),
+            state: Mutex::new(state),
         })
     }
 
@@ -201,6 +212,80 @@ impl EmbeddingServer {
             }
         }
         Ok(self.placement.store(placement))
+    }
+
+    /// Report a group health transition and swap the placement
+    /// *immediately* — no timer, no drain (ROADMAP item (a)).  Each window
+    /// keeps its startup groups minus Failed ones, ordered healthy-first,
+    /// so the swap always stays within the shards the workers uploaded.  A
+    /// window whose startup groups have *all* failed cannot be served
+    /// without re-uploading — that errors (restart required) rather than
+    /// silently routing to a group with no shard.  Returns the published
+    /// generation.
+    pub fn set_group_health(&self, group: usize, health: GroupHealth) -> anyhow::Result<u64> {
+        // Build AND publish under the state lock: two concurrent health
+        // transitions must publish in the order they updated the health
+        // table, or the later (staler) placement could re-include a group
+        // the earlier call just failed.  `swap_placement` never takes this
+        // lock, so holding it across the publish cannot deadlock.
+        let mut st = self.state.lock().unwrap();
+        // Pre-validate BEFORE committing the transition: an unservable
+        // outcome must leave both the health table and the placement
+        // untouched, never a health table that disagrees with what is
+        // actually being served.
+        let hypothetical = |g: usize| {
+            if g == group {
+                health
+            } else {
+                st.health.get(g).copied().unwrap_or(health)
+            }
+        };
+        for (w, startup_groups) in self.startup.groups_of_window.iter().enumerate() {
+            if startup_groups
+                .iter()
+                .all(|&g| hypothetical(g) == GroupHealth::Failed)
+            {
+                return Err(anyhow!(
+                    "every startup group of window {w} would be failed; \
+                     restart required to re-upload its shard"
+                ));
+            }
+        }
+        st.set_health(group, health, &self.map)?;
+        let mut groups_of_window = Vec::with_capacity(self.startup.groups_of_window.len());
+        for startup_groups in &self.startup.groups_of_window {
+            let mut live: Vec<usize> = startup_groups
+                .iter()
+                .copied()
+                .filter(|&g| st.health[g] != GroupHealth::Failed)
+                .collect();
+            debug_assert!(!live.is_empty(), "pre-validated above");
+            live.sort_by_key(|&g| match st.health[g] {
+                GroupHealth::Healthy => 0,
+                GroupHealth::Degraded => 1,
+                GroupHealth::Failed => 2,
+            });
+            groups_of_window.push(live);
+        }
+        let mut window_of_group = self.startup.window_of_group.clone();
+        for (w, gs) in groups_of_window.iter().enumerate() {
+            for &g in gs {
+                window_of_group[g] = w;
+            }
+        }
+        let placement = Placement {
+            policy: self.startup.policy,
+            generation: 0, // stamped by the cell
+            groups_of_window,
+            window_of_group,
+        };
+        self.swap_placement(placement)
+    }
+
+    /// The coordinator's versioned health view (epoch per transition,
+    /// degraded-reach flag).
+    pub fn health_state(&self) -> CoordinatorState {
+        self.state.lock().unwrap().clone()
     }
 
     /// Drain and stop all threads (idempotent; also runs on drop).

@@ -40,12 +40,14 @@ pub type Result<T> = anyhow::Result<T>;
 pub mod prelude {
     pub use crate::config::{MachineConfig, GIB, LINE_BYTES};
     pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptivePlacer};
+    pub use crate::coordinator::controlplane::{ControlPlane, ControlPlaneConfig, Lever};
     pub use crate::coordinator::placement::{Placer, PlacementPolicy, StaticPlacer};
+    pub use crate::coordinator::replan::{PlanSplitter, SplitterConfig};
     pub use crate::coordinator::table::{Table, TableView};
     pub use crate::probe::{report::TopologyMap, Prober};
     pub use crate::service::{
-        Backend, GlobalAdmission, Service, SessionConfig, SimBackend, SimBackendConfig,
-        SimTiming, Ticket, TicketState,
+        Backend, FleetConfig, FleetService, GlobalAdmission, Service, SessionConfig,
+        SimBackend, SimBackendConfig, SimTiming, Ticket, TicketState,
     };
     pub use crate::sim::{
         Machine, Measurement, MeasurementSpec, MemRegion, Pattern, SmAssignment,

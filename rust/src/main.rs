@@ -8,14 +8,15 @@ use std::time::Duration;
 
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
-    AdaptiveConfig, CardSpec, EmbeddingServer, PlacementPolicy, ServerConfig, Table, WindowPlan,
+    AdaptiveConfig, CardSpec, ControlPlaneConfig, Decision, EmbeddingServer, Lever,
+    PlacementPolicy, ServerConfig, SplitterConfig, Table, WindowPlan,
 };
 use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
 use a100win::runtime::Runtime;
 use a100win::service::{
-    FleetService, GlobalAdmission, OverloadPolicy, Service, SessionConfig, SimBackend,
-    SimBackendConfig, SimTiming,
+    FleetConfig, FleetService, GlobalAdmission, OverloadPolicy, Service, SessionConfig,
+    SimBackend, SimBackendConfig, SimTiming,
 };
 use a100win::sim::Machine;
 use a100win::workload::{drive, synth::Distribution, OpenLoopConfig, RequestGen, WorkloadSpec};
@@ -29,10 +30,10 @@ USAGE:
     a100win serve   [--backend sim|pjrt] [--policy naive|sm-to-chunk|group-to-chunk]
                     [--windows N] [--requests N] [--rows-per-request N]
                     [--cards N] [--rows-per-window N] [--artifacts DIR]
-    a100win bench-serve [--backend sim] [--policy P] [--placer static|adaptive]
+    a100win bench-serve [--backend sim] [--policy P] [--placer static|deal-only|adaptive]
                     [--windows N] [--rows-per-request N] [--duration-ms N]
                     [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
-                    [--sim-timescale F]
+                    [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -52,10 +53,14 @@ SUBCOMMANDS:
              open-loop Poisson QPS sweep against the sim-backed facade:
              offered vs achieved rps, latency percentiles (EXPERIMENTS.md
              §Serve).  --skew zipf:<theta> front-loads traffic onto low
-             windows; --placer adaptive rebalances group↔window placement
-             from the observed load (EXPERIMENTS.md §Skew); --sim-timescale
-             paces completions by simulated device time so the wall-clock
-             knee is policy-dependent.
+             windows; --skew-drift drift:zipf:1.1:2000 rotates the hotspot
+             every 2000 requests; --placer deal-only re-deals groups from
+             observed load, --placer adaptive additionally re-splits window
+             boundaries (the two-level control plane, EXPERIMENTS.md
+             §Repartition); --cards N>1 runs the sweep against a fleet
+             whose control plane may also migrate rows across cards
+             (zero-copy); --sim-timescale paces completions by simulated
+             device time so the wall-clock knee is policy-dependent.
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -507,16 +512,35 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("bench-serve only supports --backend sim, got '{other}'"),
     }
     let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
-    let adaptive = match args.flag("placer").unwrap_or("static") {
-        "static" => None,
-        "adaptive" => Some(AdaptiveConfig {
-            // Rebalance continuously while the sweep runs.
-            epoch: Some(Duration::from_millis(20)),
-            ..AdaptiveConfig::default()
-        }),
-        other => anyhow::bail!("--placer static|adaptive, got '{other}'"),
+    let placer_name = args.flag("placer").unwrap_or("static");
+    // The repartition ladder: static < deal-only (group re-deal) <
+    // adaptive (two-level: re-deal + window re-split).
+    let (adaptive, resplit) = match placer_name {
+        "static" => (None, None),
+        "deal-only" => (
+            Some(AdaptiveConfig {
+                // Rebalance continuously while the sweep runs.
+                epoch: Some(Duration::from_millis(20)),
+                ..AdaptiveConfig::default()
+            }),
+            None,
+        ),
+        "adaptive" | "two-level" => (
+            Some(AdaptiveConfig {
+                epoch: Some(Duration::from_millis(20)),
+                ..AdaptiveConfig::default()
+            }),
+            Some(SplitterConfig::default()),
+        ),
+        other => anyhow::bail!("--placer static|deal-only|adaptive, got '{other}'"),
     };
-    let skew = Distribution::parse(args.flag("skew").unwrap_or("uniform"))?;
+    // --skew-drift takes precedence: the rotating-hotspot stressor the
+    // control plane exists for.
+    let skew = match args.flag("skew-drift") {
+        Some(spec) => Distribution::parse(spec)?,
+        None => Distribution::parse(args.flag("skew").unwrap_or("uniform"))?,
+    };
+    let cards = args.u64_flag("cards", 1)? as usize;
     let windows = args.u64_flag("windows", 2)? as usize;
     let rows_per_request = args.u64_flag("rows-per-request", 256)? as usize;
     let duration = Duration::from_millis(args.u64_flag("duration-ms", 300)?);
@@ -540,6 +564,29 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?,
     };
 
+    if cards > 1 {
+        // --policy and --windows configure a single card's plan; silently
+        // ignoring them against a fleet would mislabel the sweep.
+        if args.flag("policy").is_some() || args.flag("windows").is_some() {
+            anyhow::bail!(
+                "--policy/--windows are per-card settings; with --cards > 1 every card \
+                 uses group-to-chunk over its reach-derived window plan"
+            );
+        }
+        return bench_serve_fleet(
+            cards,
+            adaptive,
+            resplit,
+            skew,
+            placer_name,
+            rps_list,
+            rows_per_request,
+            duration,
+            max_requests,
+            timescale,
+        );
+    }
+
     let machine = machine_with_seed(0xA100)?;
     let map = TopologyMap::ground_truth(&machine);
     let rows = 32_768u64 * windows as u64;
@@ -549,6 +596,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     // wall-clock behavior; skip per-window DES calibration at startup.
     let mut cfg = SimBackendConfig::new(policy);
     cfg.adaptive = adaptive;
+    cfg.resplit = resplit;
     cfg.sim_timescale = timescale;
     let backend = Arc::new(SimBackend::start(
         cfg,
@@ -560,9 +608,8 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let service = Service::new(backend.clone());
 
     println!(
-        "open-loop sweep: policy {policy}, placer {}, skew {skew:?}, {windows} windows, \
-         {rows_per_request} rows/request, {} ms per point{}",
-        args.flag("placer").unwrap_or("static"),
+        "open-loop sweep: policy {policy}, placer {placer_name}, skew {skew:?}, \
+         {windows} windows, {rows_per_request} rows/request, {} ms per point{}",
         duration.as_millis(),
         if timescale > 0.0 {
             format!(", paced at {timescale}x sim time")
@@ -577,7 +624,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     for offered in rps_list {
         let mut gen = RequestGen::new(WorkloadSpec {
             total_rows: rows,
-            distribution: skew,
+            distribution: skew.clone(),
             request_rows: (rows_per_request, rows_per_request),
             seed: 42,
         });
@@ -594,16 +641,151 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     }
     let m = service.metrics();
     println!("{}", m.report());
+    let live_plan = backend.plan();
+    let shown = live_plan.count().min(m.window_rows.len());
     println!(
-        "per-window routed rows: {:?} (placement generation {})",
-        m.window_rows,
+        "per-window routed rows: {:?} ({} windows, placement generation {})",
+        &m.window_rows[..shown],
+        live_plan.count(),
         backend.placement().generation
     );
     println!(
         "simulated aggregate (makespan over groups): {:.1} GB/s",
         backend.aggregate_sim_gbps()
     );
+    if placer_name != "static" {
+        print_decision_trace("card", &backend.control_decisions());
+    }
     service.shutdown();
+    Ok(())
+}
+
+/// Tail of a control plane's audited decision trace.
+fn print_decision_trace(scope: &str, decisions: &[Decision]) {
+    const SHOW: usize = 8;
+    let skip = decisions.len().saturating_sub(SHOW);
+    println!(
+        "{scope} control plane: {} decisions (showing last {})",
+        decisions.len(),
+        decisions.len() - skip
+    );
+    for d in &decisions[skip..] {
+        println!(
+            "  epoch {:>4}: permitted {:>7}, acted {:<7} imbalance {:.3}{} — {}",
+            d.epoch,
+            d.permitted.to_string(),
+            d.acted.map_or_else(|| "-".to_string(), |l| l.to_string()),
+            d.imbalance,
+            d.generation.map_or_else(String::new, |g| format!(" gen {g}")),
+            d.why
+        );
+    }
+}
+
+/// bench-serve against a fleet: the full two-level-plus-migration control
+/// plane under open-loop load (sim-backed, hermetic).
+#[allow(clippy::too_many_arguments)]
+fn bench_serve_fleet(
+    cards: usize,
+    adaptive: Option<AdaptiveConfig>,
+    resplit: Option<SplitterConfig>,
+    skew: Distribution,
+    placer_name: &str,
+    rps_list: Vec<f64>,
+    rows_per_request: usize,
+    duration: Duration,
+    max_requests: Option<u64>,
+    sim_timescale: f64,
+) -> anyhow::Result<()> {
+    // Probe map per card: enumeration seeds differ card to card (paper
+    // §1.1), so each shard gets its own TopologyMap + placement.
+    let mut specs = Vec::new();
+    for i in 0..cards {
+        let machine = machine_with_seed(0xA100 + 0x1111 * i as u64)?;
+        let spec = CardSpec {
+            map: TopologyMap::ground_truth(&machine),
+            memory_bytes: machine.config().memory.total_bytes,
+        };
+        specs.push((spec, SimTiming::Probed));
+    }
+    let rows = 32_768u64 * cards as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    // build_sim_with strips the per-card epoch timer itself: its fleet
+    // epoch thread is the one driver of every card's control plane.  The
+    // static arm pins the shard map too (max_lever Hold) so it stays an
+    // honest baseline — no migrations behind a "static" label.
+    let fleet_control = ControlPlaneConfig {
+        max_lever: if placer_name == "static" {
+            Lever::Hold
+        } else {
+            Lever::Migrate
+        },
+        ..ControlPlaneConfig::default()
+    };
+    let fleet = FleetService::build_sim_with(
+        specs,
+        &table,
+        FleetConfig {
+            adaptive,
+            resplit,
+            control: fleet_control,
+            epoch: Some(Duration::from_millis(20)),
+            sim_timescale,
+            ..FleetConfig::default()
+        },
+    )?;
+    println!(
+        "fleet open-loop sweep: {cards} cards, placer {placer_name}, skew {skew:?}, \
+         {rows_per_request} rows/request, {} ms per point, control epochs every 20 ms",
+        duration.as_millis()
+    );
+    println!(
+        "{:>12} {:>12} {:>10} {:>10} {:>8} {:>8}",
+        "offered_rps", "achieved_rps", "mean_us", "p99_us", "dropped", "errors"
+    );
+    for offered in rps_list {
+        let mut gen = RequestGen::new(WorkloadSpec {
+            total_rows: rows,
+            distribution: skew.clone(),
+            request_rows: (rows_per_request, rows_per_request),
+            seed: 42,
+        });
+        let cfg = OpenLoopConfig {
+            duration,
+            max_requests,
+            ..OpenLoopConfig::default()
+        };
+        let p = drive(&fleet, &mut gen, offered, &cfg);
+        println!(
+            "{:>12.0} {:>12.0} {:>10.0} {:>10} {:>8} {:>8}",
+            p.offered_rps, p.achieved_rps, p.mean_latency_us, p.p99_latency_us, p.dropped, p.errors
+        );
+    }
+    let plan = fleet.plan();
+    println!(
+        "fleet plan generation {} ({} shards):",
+        plan.generation,
+        plan.shards.len()
+    );
+    for s in &plan.shards {
+        println!(
+            "  card {}: rows [{}, {}) in {} windows",
+            s.card,
+            s.start_row,
+            s.end_row(),
+            s.plan.count()
+        );
+    }
+    println!("fleet: {}", fleet.fleet_metrics().report());
+    for (card, m) in fleet.per_card_metrics() {
+        println!("  card {card}: {}", m.report());
+    }
+    println!(
+        "aggregate simulated GB/s (sum over cards): {:.1}",
+        fleet.aggregate_sim_gbps()
+    );
+    print_decision_trace("fleet", &fleet.control_decisions());
+    fleet.shutdown();
     Ok(())
 }
 

@@ -318,8 +318,18 @@ impl RequestAcc {
 }
 
 /// One unit of work for a group worker.
+///
+/// Carries its window's geometry (`win_start_row`/`win_rows`, in the
+/// serving view's local row space) rather than a window id to be resolved
+/// against a plan: the window plan is *live* (the control plane re-splits
+/// boundaries between batches), so a job must stay executable under the
+/// plan generation it was routed with even after the plan has moved on.
 pub(crate) struct Job {
     pub(crate) window: usize,
+    /// First row of the job's window in the serving view's row space.
+    pub(crate) win_start_row: u64,
+    /// Rows in the job's window (the calibration cache key, with start).
+    pub(crate) win_rows: u64,
     pub(crate) local_rows: Vec<u32>,
     pub(crate) positions: Vec<u32>,
     pub(crate) acc: Arc<RequestAcc>,
@@ -337,7 +347,8 @@ pub(crate) enum WorkerMsg {
 /// the adaptive placer's load signal.
 pub(crate) fn dispatch_formed(
     formed: crate::coordinator::batcher::Batch<ResponseTx>,
-    router: &mut Router<'_>,
+    router: &mut Router,
+    plan: &crate::coordinator::chunks::WindowPlan,
     placement: &Placement,
     senders: &[Option<mpsc::Sender<WorkerMsg>>],
     metrics: &Arc<Metrics>,
@@ -353,7 +364,7 @@ pub(crate) fn dispatch_formed(
                 .send(Err(anyhow!("deadline expired before dispatch")));
             continue;
         }
-        let split = router.split(&req.rows, placement);
+        let split = router.split(&req.rows, plan, placement);
         let acc = Arc::new(RequestAcc::new(
             req.rows.len() * d,
             split.sub_batches.len(),
@@ -362,8 +373,11 @@ pub(crate) fn dispatch_formed(
         ));
         for sb in split.sub_batches {
             metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
+            let win = plan.windows()[sb.window];
             let job = Job {
                 window: sb.window,
+                win_start_row: win.start_row,
+                win_rows: win.rows,
                 local_rows: sb.local_rows,
                 positions: sb.positions,
                 acc: Arc::clone(&acc),
@@ -393,14 +407,14 @@ pub(crate) struct Pipeline {
 
 impl Pipeline {
     /// Spawn the dispatcher over `senders` and adopt the worker handles.
-    /// The dispatcher loads `placement` once per formed batch, so a
-    /// [`PlacementCell::store`] from a rebalancer takes effect at the next
-    /// batch — in-flight splits finish under the generation they started
-    /// with (no drain).
+    /// The dispatcher loads the (plan, placement) pair from `cell` once per
+    /// formed batch, so a [`PlacementCell::store`] (re-deal) or
+    /// [`PlacementCell::store_replan`] (window re-split) from the control
+    /// plane takes effect at the next batch — in-flight splits finish under
+    /// the generation they started with (no drain).
     pub(crate) fn start(
         cfg: crate::coordinator::batcher::BatcherConfig,
-        plan: Arc<crate::coordinator::chunks::WindowPlan>,
-        placement: Arc<PlacementCell>,
+        cell: Arc<PlacementCell>,
         metrics: Arc<Metrics>,
         d: usize,
         senders: Vec<Option<mpsc::Sender<WorkerMsg>>>,
@@ -412,10 +426,12 @@ impl Pipeline {
             std::thread::Builder::new()
                 .name("a100win-dispatcher".into())
                 .spawn(move || {
-                    let mut router = Router::new(&plan);
+                    let mut router = Router::new();
                     while let Some(batch) = batcher.next_batch() {
-                        let current = placement.load();
-                        dispatch_formed(batch, &mut router, &current, &senders, &metrics, d);
+                        let (plan, placement) = cell.load_planned();
+                        dispatch_formed(
+                            batch, &mut router, &plan, &placement, &senders, &metrics, d,
+                        );
                     }
                     for s in senders.iter().flatten() {
                         let _ = s.send(WorkerMsg::Shutdown);

@@ -1,4 +1,5 @@
-//! Fleet routing: one serving facade over several probed cards.
+//! Fleet routing: one serving facade over several probed cards, with
+//! live, zero-copy cross-card row migration.
 //!
 //! The paper stresses that the smid→group mapping "may vary card to card",
 //! so a fleet deployment probes every card once and composes the per-card
@@ -9,28 +10,92 @@
 //! request order** when the [`FleetTicket`] is redeemed.
 //!
 //! ```text
-//! global row ──► card shard (FleetPlan) ──► window ──► SM group
+//! global row ──► card shard (FleetPlan, generation-stamped) ──► window ──► SM group
 //! ```
+//!
+//! The shard map is *live*: [`FleetService::control_epoch`] (or the
+//! background thread enabled by [`FleetConfig::epoch`]) first drives each
+//! card's own control plane (group re-deal, window re-split), then judges
+//! the **per-card** load/capacity imbalance; when the fleet-scope
+//! [`ControlPlane`] escalates to [`Lever::Migrate`], a
+//! [`FleetRebalancer`] proposal re-cuts the card boundaries and the fleet
+//! publishes a new generation whose re-sized cards serve fresh
+//! [`TableView`] slices of the **same** shared `Arc<[f32]>` — refcount
+//! bumps and worker re-spawns, never a row of memcpy.  In-flight
+//! [`FleetTicket`]s pin their generation's `FleetState` (shard map *and*
+//! card services), so they merge under the shard map they were split with
+//! while new submissions route under the new one; a retired generation's
+//! backends drain and stop when the last ticket drops.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::{anyhow, Context};
 
+use crate::coordinator::adaptive::AdaptiveConfig;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::chunks::row_bytes_for_d;
 use crate::coordinator::cluster::{CardSpec, FleetPlan};
-use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::controlplane::{
+    capacity_imbalance, committed_delta, load_shares, ControlPlane, ControlPlaneConfig, Decision,
+    Lever,
+};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::PlacementPolicy;
-use crate::coordinator::table::Table;
+use crate::coordinator::replan::SplitterConfig;
+use crate::coordinator::table::{Table, TableView};
 
 use super::backend::{scatter_rows, Ticket, TicketState};
+use super::rebalance::{FleetRebalancer, RebalanceConfig};
 use super::sim_backend::{SimBackend, SimBackendConfig, SimTiming};
 use super::Service;
 
+/// Fleet construction + repartitioning knobs (see
+/// [`FleetService::build_sim_with`]).
+#[derive(Clone)]
+pub struct FleetConfig {
+    pub batcher: BatcherConfig,
+    pub seed: u64,
+    /// Per-card group re-dealing, applied to every (re)built card backend.
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Per-card window re-splitting (requires `adaptive`).
+    pub resplit: Option<SplitterConfig>,
+    /// Fleet-level migration tuning.
+    pub rebalance: RebalanceConfig,
+    /// Escalation policy of the fleet-scope control plane (its ladder runs
+    /// per-card levers first).  `max_lever` is honored: `Migrate` by
+    /// default, `Hold` pins the shard map (a static baseline arm).
+    pub control: ControlPlaneConfig,
+    /// Background control-epoch period; `None` = epochs are driven
+    /// manually via [`FleetService::control_epoch`].
+    pub epoch: Option<Duration>,
+    /// Wall-clock pacing of simulated device time, applied to every card
+    /// backend (see `SimBackendConfig::sim_timescale`); 0 = unpaced.
+    pub sim_timescale: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            seed: 0xF1EE7,
+            adaptive: None,
+            resplit: None,
+            rebalance: RebalanceConfig::default(),
+            control: ControlPlaneConfig {
+                max_lever: Lever::Migrate,
+                ..ControlPlaneConfig::default()
+            },
+            epoch: None,
+            sim_timescale: 0.0,
+        }
+    }
+}
+
 /// One card's share of an in-flight fleet request.
 struct FleetPart {
-    /// Index into `FleetService::cards` / `plan.shards`.
+    /// Index into the pinned generation's `cards` / `plan.shards`.
     shard: usize,
     ticket: Ticket,
     /// Original request positions of this card's rows.
@@ -38,11 +103,15 @@ struct FleetPart {
 }
 
 /// A claim on one in-flight fleet request; redeems to rows merged back in
-/// request order.
+/// request order.  Pins the generation it was split under: its shard map
+/// and card services stay alive (and correct) even if the fleet migrates
+/// rows and publishes a newer generation mid-flight.
 pub struct FleetTicket {
     parts: Vec<FleetPart>,
     request_len: usize,
     d: usize,
+    /// Keeps the submit-time generation's services alive until redemption.
+    _generation: Arc<FleetState>,
 }
 
 impl FleetTicket {
@@ -79,18 +148,295 @@ impl FleetTicket {
     }
 }
 
-/// The fleet-level facade: two-level routing over per-card services.
-pub struct FleetService {
-    plan: FleetPlan,
+/// One published generation: the shard map and its position-matched card
+/// services (plus, for sim-built fleets, the concrete backends so the
+/// control plane can drive their per-card epochs and read their simulated
+/// device accounting).
+struct FleetState {
+    plan: Arc<FleetPlan>,
     /// Position-matched to `plan.shards`.
     cards: Vec<Service>,
+    /// Position-matched to `plan.shards`; `None` for externally composed
+    /// services.
+    sims: Vec<Option<Arc<SimBackend>>>,
+}
+
+/// Everything shared between the facade handle and the background epoch
+/// thread.
+struct FleetCore {
+    state: RwLock<Arc<FleetState>>,
     d: usize,
+    /// Zero-copy whole-table view (re-sliced per migration); `None` when
+    /// the fleet was composed from external services — migration disabled.
+    whole: Option<TableView>,
+    /// Probe + timing per card (rebuild context); empty when external.
+    specs: Vec<(CardSpec, SimTiming)>,
+    cfg: FleetConfig,
+    plane: ControlPlane,
+    rebalancer: FleetRebalancer,
+    /// Fleet-scope registry: migration counters live here (per-card
+    /// counters live in each card's own registry).
+    metrics: Arc<Metrics>,
+    /// Serializes whole fleet epochs: the background thread and manual
+    /// [`FleetService::control_epoch`] calls must not both migrate from
+    /// the same stale state (two plans would claim the same generation).
+    gate: Mutex<()>,
+    /// Per-card routed-row totals at the previous committed epoch
+    /// boundary, indexed by card id.
+    last_card_rows: Mutex<Vec<u64>>,
+    epoch_stop: AtomicBool,
+    epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl FleetCore {
+    fn current(&self) -> Arc<FleetState> {
+        Arc::clone(&self.state.read().unwrap())
+    }
+
+    /// One fleet control epoch: per-card levers first (each card's own
+    /// control plane applies re-deals / re-splits), then the fleet ladder
+    /// judges per-card imbalance and — once escalation reaches
+    /// [`Lever::Migrate`] — applies a rebalancer proposal.  Returns the
+    /// new *fleet* generation when a migration published.
+    fn epoch(&self) -> Option<u64> {
+        let _serialized = self.gate.lock().unwrap();
+        let state = self.current();
+        let mut card_acted = false;
+        for sim in state.sims.iter().flatten() {
+            if sim.rebalance_epoch().is_some() {
+                card_acted = true;
+            }
+        }
+        if self.specs.is_empty() {
+            // Externally composed fleet: nothing to migrate with.
+            return None;
+        }
+
+        // Per-card load since the last committed epoch (indexed by card
+        // id; a card rebuilt by a migration restarts its counters, which
+        // the post-migration re-baseline absorbs).
+        let n = self.specs.len();
+        let mut totals = vec![0u64; n];
+        for (shard, svc) in state.plan.shards.iter().zip(&state.cards) {
+            totals[shard.card] = svc.metrics().rows;
+        }
+        let delta = {
+            let mut last = self.last_card_rows.lock().unwrap();
+            committed_delta(&mut *last, &totals, self.rebalancer.cfg.min_epoch_rows)
+        };
+
+        let imbalance = match load_shares(&delta) {
+            None => 0.0,
+            Some(load) => {
+                let total_cap: f64 = self.specs.iter().map(|(c, _)| c.capacity_gbps()).sum();
+                let caps: Vec<f64> = self
+                    .specs
+                    .iter()
+                    .map(|(c, _)| c.capacity_gbps() / total_cap)
+                    .collect();
+                capacity_imbalance(&load, &caps)
+            }
+        };
+
+        let permitted = self.plane.permit(imbalance);
+        if permitted < Lever::Migrate {
+            self.plane.record(
+                permitted,
+                card_acted.then_some(Lever::Redeal),
+                imbalance,
+                None,
+                if card_acted {
+                    "per-card levers acted; fleet holds"
+                } else {
+                    "within tolerance or cooling down"
+                },
+            );
+            return None;
+        }
+
+        let cards: Vec<CardSpec> = self.specs.iter().map(|(c, _)| c.clone()).collect();
+        let Some(proposal) = self.rebalancer.propose(&state.plan, &cards, &delta) else {
+            self.plane
+                .record(permitted, None, imbalance, None, "rebalancer declined");
+            return None;
+        };
+        match self.apply_migration(&state, &cards, &proposal.rows_of) {
+            Ok((generation, moved)) => {
+                self.metrics.migrate_epochs.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rows_migrated.fetch_add(moved, Ordering::Relaxed);
+                self.metrics
+                    .generations_published
+                    .fetch_add(1, Ordering::Relaxed);
+                self.plane.record(
+                    permitted,
+                    Some(Lever::Migrate),
+                    imbalance,
+                    Some(generation),
+                    format!("migrated {moved} rows across cards (zero-copy)"),
+                );
+                Some(generation)
+            }
+            Err(why) => {
+                self.plane.record(
+                    permitted,
+                    None,
+                    imbalance,
+                    None,
+                    format!("migration aborted: {why:#}"),
+                );
+                None
+            }
+        }
+    }
+
+    /// Build and publish the next generation for `rows_of`: untouched
+    /// cards keep their running services; re-sized cards get new backends
+    /// over fresh zero-copy slices of the shared table storage.
+    fn apply_migration(
+        &self,
+        old: &Arc<FleetState>,
+        cards: &[CardSpec],
+        rows_of: &[u64],
+    ) -> anyhow::Result<(u64, u64)> {
+        let whole = self
+            .whole
+            .as_ref()
+            .ok_or_else(|| anyhow!("fleet has no rebuild context"))?;
+        let next_plan = FleetPlan::with_ranges(
+            cards,
+            rows_of,
+            old.plan.total_rows,
+            old.plan.row_bytes,
+            self.cfg.seed,
+            old.plan.generation + 1,
+        )?;
+        let moved = old.plan.rows_moved(&next_plan);
+        if moved < self.cfg.rebalance.min_move_rows {
+            return Err(anyhow!("{moved} rows moved is below the migration floor"));
+        }
+
+        let mut services = Vec::with_capacity(next_plan.shards.len());
+        let mut sims = Vec::with_capacity(next_plan.shards.len());
+        for shard in &next_plan.shards {
+            // Reuse a card whose range is untouched: its backend, queue,
+            // metrics, and calibration all carry over.
+            let unchanged = old
+                .plan
+                .shards
+                .iter()
+                .position(|s| {
+                    s.card == shard.card
+                        && s.start_row == shard.start_row
+                        && s.rows == shard.rows
+                });
+            if let Some(i) = unchanged {
+                services.push(old.cards[i].clone());
+                sims.push(old.sims[i].clone());
+                continue;
+            }
+            let (spec, timing) = &self.specs[shard.card];
+            let backend = start_card_backend(&self.cfg, spec, timing, shard, whole)
+                .with_context(|| format!("rebuilding card {}", shard.card))?;
+            sims.push(Some(Arc::clone(&backend)));
+            services.push(Service::new(backend));
+        }
+
+        let generation = next_plan.generation;
+        let next = Arc::new(FleetState {
+            plan: Arc::new(next_plan),
+            cards: services,
+            sims,
+        });
+        *self.state.write().unwrap() = Arc::clone(&next);
+        // Re-baseline the per-card load counters under the new backends
+        // (rebuilt cards restart their registries at zero).
+        let mut totals = vec![0u64; self.specs.len()];
+        for (shard, svc) in next.plan.shards.iter().zip(&next.cards) {
+            totals[shard.card] = svc.metrics().rows;
+        }
+        *self.last_card_rows.lock().unwrap() = totals;
+        Ok((generation, moved))
+    }
+
+    fn stop(&self) {
+        self.epoch_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.epoch_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        for c in &self.current().cards {
+            c.shutdown();
+        }
+    }
+}
+
+/// Build one card's backend over its shard — a zero-copy slice of the
+/// shared table — wiring every fleet-level per-card setting.  The single
+/// constructor both `build_sim_with` (startup) and `apply_migration`
+/// (rebuild) use, so migrated cards can never silently run with different
+/// settings than startup cards.
+fn start_card_backend(
+    cfg: &FleetConfig,
+    spec: &CardSpec,
+    timing: &SimTiming,
+    shard: &crate::coordinator::cluster::CardShard,
+    whole: &TableView,
+) -> anyhow::Result<Arc<SimBackend>> {
+    let local = whole.slice_rows(shard.start_row, shard.rows);
+    let mut bcfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    bcfg.batcher = cfg.batcher.clone();
+    bcfg.seed = cfg.seed;
+    bcfg.adaptive = cfg.adaptive.clone();
+    bcfg.resplit = cfg.resplit.clone();
+    bcfg.sim_timescale = cfg.sim_timescale;
+    Ok(Arc::new(SimBackend::start_with_placement(
+        bcfg,
+        &spec.map,
+        shard.plan.clone(),
+        shard.placement.clone(),
+        local,
+        timing.clone(),
+    )?))
+}
+
+/// The fleet-level facade: two-level routing over per-card services, with
+/// the card boundaries themselves under control-plane management.
+pub struct FleetService {
+    core: Arc<FleetCore>,
 }
 
 impl FleetService {
     /// Compose a fleet from an existing plan and per-card services (each
-    /// serving exactly its shard's local row space).
+    /// serving exactly its shard's local row space).  Composed fleets have
+    /// no rebuild context, so the migration lever is disabled.
     pub fn new(plan: FleetPlan, cards: Vec<Service>) -> anyhow::Result<Self> {
+        let d = Self::validate(&plan, &cards)?;
+        let sims = cards.iter().map(|_| None).collect();
+        Ok(Self {
+            core: Arc::new(FleetCore {
+                state: RwLock::new(Arc::new(FleetState {
+                    plan: Arc::new(plan),
+                    cards,
+                    sims,
+                })),
+                d,
+                whole: None,
+                specs: Vec::new(),
+                cfg: FleetConfig::default(),
+                plane: ControlPlane::new(ControlPlaneConfig {
+                    max_lever: Lever::Migrate,
+                    ..ControlPlaneConfig::default()
+                }),
+                rebalancer: FleetRebalancer::default(),
+                metrics: Arc::new(Metrics::new()),
+                gate: Mutex::new(()),
+                last_card_rows: Mutex::new(Vec::new()),
+                epoch_stop: AtomicBool::new(false),
+                epoch_thread: Mutex::new(None),
+            }),
+        })
+    }
+
+    fn validate(plan: &FleetPlan, cards: &[Service]) -> anyhow::Result<usize> {
         if plan.shards.len() != cards.len() {
             return Err(anyhow!(
                 "{} shards but {} card services",
@@ -99,7 +445,7 @@ impl FleetService {
             ));
         }
         let mut d = None;
-        for (shard, svc) in plan.shards.iter().zip(&cards) {
+        for (shard, svc) in plan.shards.iter().zip(cards) {
             if svc.rows() != shard.rows {
                 return Err(anyhow!(
                     "card {} serves {} rows but its shard has {}",
@@ -116,8 +462,7 @@ impl FleetService {
                 _ => {}
             }
         }
-        let d = d.ok_or_else(|| anyhow!("empty fleet"))?;
-        Ok(Self { plan, cards, d })
+        d.ok_or_else(|| anyhow!("empty fleet"))
     }
 
     /// Build a hermetic fleet: shard `table` across simulated cards
@@ -135,61 +480,162 @@ impl FleetService {
         batcher: BatcherConfig,
         seed: u64,
     ) -> anyhow::Result<Self> {
+        Self::build_sim_with(
+            specs,
+            table,
+            FleetConfig {
+                batcher,
+                seed,
+                ..FleetConfig::default()
+            },
+        )
+    }
+
+    /// [`build_sim`](Self::build_sim) with full repartitioning control:
+    /// per-card adaptive/re-split configs are applied to every card
+    /// backend (and every backend rebuilt by a migration), and `cfg.epoch`
+    /// optionally starts the background fleet control-epoch thread.
+    pub fn build_sim_with(
+        specs: Vec<(CardSpec, SimTiming)>,
+        table: &Table,
+        mut cfg: FleetConfig,
+    ) -> anyhow::Result<Self> {
+        // One epoch driver per card: when the fleet runs its own epoch
+        // thread (which drives every card's control plane itself), strip
+        // any per-card epoch timer — two concurrent drivers would halve
+        // each card's hysteresis in wall time and race its plane state.
+        if cfg.epoch.is_some() {
+            if let Some(a) = cfg.adaptive.as_mut() {
+                a.epoch = None;
+            }
+        }
         let cards: Vec<CardSpec> = specs.iter().map(|(c, _)| c.clone()).collect();
-        let plan = FleetPlan::build(&cards, table.rows, row_bytes_for_d(table.d), seed)?;
+        let plan = FleetPlan::build(&cards, table.rows, row_bytes_for_d(table.d), cfg.seed)?;
         let whole = table.view();
         let mut services = Vec::new();
+        let mut sims = Vec::new();
         for shard in &plan.shards {
             let (spec, timing) = &specs[shard.card];
-            let local = whole.slice_rows(shard.start_row, shard.rows);
-            let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
-            cfg.batcher = batcher.clone();
-            cfg.seed = seed;
-            let backend = SimBackend::start_with_placement(
-                cfg,
-                &spec.map,
-                shard.plan.clone(),
-                shard.placement.clone(),
-                local,
-                timing.clone(),
-            )
-            .with_context(|| format!("starting card {}", shard.card))?;
-            services.push(Service::new(Arc::new(backend)));
+            let backend = start_card_backend(&cfg, spec, timing, shard, &whole)
+                .with_context(|| format!("starting card {}", shard.card))?;
+            sims.push(Some(Arc::clone(&backend)));
+            services.push(Service::new(backend));
         }
-        Self::new(plan, services)
+        let d = Self::validate(&plan, &services)?;
+
+        // The fleet plane runs at whatever ceiling the config asks for:
+        // `Migrate` by default (FleetConfig::default), `Hold` to pin the
+        // shard map (e.g. a static baseline arm).
+        let plane_cfg = cfg.control.clone();
+        let n_cards = specs.len();
+        let epoch = cfg.epoch;
+        let core = Arc::new(FleetCore {
+            state: RwLock::new(Arc::new(FleetState {
+                plan: Arc::new(plan),
+                cards: services,
+                sims,
+            })),
+            d,
+            whole: Some(whole),
+            specs,
+            rebalancer: FleetRebalancer::new(cfg.rebalance.clone()),
+            plane: ControlPlane::new(plane_cfg),
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            gate: Mutex::new(()),
+            last_card_rows: Mutex::new(vec![0; n_cards]),
+            epoch_stop: AtomicBool::new(false),
+            epoch_thread: Mutex::new(None),
+        });
+
+        if let Some(period) = epoch {
+            let ctx = Arc::clone(&core);
+            let tick = period
+                .min(Duration::from_millis(5))
+                .max(Duration::from_micros(100));
+            let handle = std::thread::Builder::new()
+                .name("a100win-fleet-controlplane".into())
+                .spawn(move || {
+                    let mut since = Duration::ZERO;
+                    while !ctx.epoch_stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(tick);
+                        since += tick;
+                        if since >= period {
+                            since = Duration::ZERO;
+                            let _ = ctx.epoch();
+                        }
+                    }
+                })
+                .context("spawning fleet control plane")?;
+            *core.epoch_thread.lock().unwrap() = Some(handle);
+        }
+        Ok(Self { core })
     }
 
-    pub fn plan(&self) -> &FleetPlan {
-        &self.plan
+    /// The current shard map (generation-stamped; migrations swap it).
+    pub fn plan(&self) -> Arc<FleetPlan> {
+        Arc::clone(&self.core.current().plan)
     }
 
-    /// Per-card services, position-matched to `plan().shards`.
-    pub fn cards(&self) -> &[Service] {
-        &self.cards
+    /// Per-card services of the current generation, position-matched to
+    /// [`plan`](Self::plan)`.shards` (cheap clones of shared handles).
+    pub fn cards(&self) -> Vec<Service> {
+        self.core.current().cards.clone()
     }
 
     pub fn d(&self) -> usize {
-        self.d
+        self.core.d
     }
 
     pub fn rows(&self) -> u64 {
-        self.plan.total_rows
+        self.core.current().plan.total_rows
+    }
+
+    /// Run one fleet control epoch by hand (per-card levers, then the
+    /// migration ladder).  Returns the new fleet generation when a
+    /// migration published.  The background thread configured by
+    /// [`FleetConfig::epoch`] calls exactly this.
+    pub fn control_epoch(&self) -> Option<u64> {
+        self.core.epoch()
+    }
+
+    /// The fleet control plane's audited decision trace, oldest first.
+    pub fn control_decisions(&self) -> Vec<Decision> {
+        self.core.plane.decisions()
+    }
+
+    /// Fleet-scope counters (migration epochs, rows migrated, generations).
+    pub fn fleet_metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+
+    /// Sum of per-card simulated aggregate GB/s (cards run in parallel).
+    pub fn aggregate_sim_gbps(&self) -> f64 {
+        self.core
+            .current()
+            .sims
+            .iter()
+            .flatten()
+            .map(|s| s.aggregate_sim_gbps())
+            .sum()
     }
 
     /// Split a request by card shard and submit each part; the returned
-    /// [`FleetTicket`] merges rows back in request order.
+    /// [`FleetTicket`] merges rows back in request order under the shard
+    /// map it was split with (migrations never disturb it).
     pub fn submit(
         &self,
         rows: Arc<Vec<u64>>,
         deadline: Option<Duration>,
     ) -> anyhow::Result<FleetTicket> {
-        let split = self.plan.split(&rows)?;
+        let state = self.core.current();
+        let split = state.plan.split(&rows)?;
         let mut parts = Vec::new();
         for (si, (locals, positions)) in split.into_iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
-            let ticket = self.cards[si]
+            let ticket = state.cards[si]
                 .submit(Arc::new(locals), deadline)
                 .with_context(|| format!("card shard {si}"))?;
             parts.push(FleetPart {
@@ -201,7 +647,8 @@ impl FleetService {
         Ok(FleetTicket {
             parts,
             request_len: rows.len(),
-            d: self.d,
+            d: self.core.d,
+            _generation: state,
         })
     }
 
@@ -210,19 +657,30 @@ impl FleetService {
         self.submit(rows, None)?.wait()
     }
 
-    /// Per-card metric snapshots as `(card id, snapshot)`.
+    /// Per-card metric snapshots of the current generation as
+    /// `(card id, snapshot)`.  A card rebuilt by a migration restarts its
+    /// registry (the fleet-scope counters in
+    /// [`fleet_metrics`](Self::fleet_metrics) are continuous).
     pub fn per_card_metrics(&self) -> Vec<(usize, MetricsSnapshot)> {
-        self.plan
+        let state = self.core.current();
+        state
+            .plan
             .shards
             .iter()
-            .zip(&self.cards)
+            .zip(&state.cards)
             .map(|(shard, svc)| (shard.card, svc.metrics()))
             .collect()
     }
 
     pub fn shutdown(&self) {
-        for c in &self.cards {
-            c.shutdown();
-        }
+        self.core.stop();
+    }
+}
+
+impl Drop for FleetService {
+    fn drop(&mut self) {
+        // The background control-plane thread holds the core alive; an
+        // un-shutdown fleet must not leak it (idempotent with shutdown()).
+        self.core.stop();
     }
 }

@@ -62,6 +62,7 @@
 
 pub mod backend;
 pub mod fleet;
+pub mod rebalance;
 pub mod session;
 pub mod sim_backend;
 
@@ -71,7 +72,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 
 pub use backend::{Backend, Batch, Ticket, TicketState};
-pub use fleet::{FleetService, FleetTicket};
+pub use fleet::{FleetConfig, FleetService, FleetTicket};
+pub use rebalance::{FleetRebalancer, MigrationProposal, RebalanceConfig};
 pub use session::{
     GlobalAdmission, OverloadPolicy, Session, SessionConfig, SessionStats, TenantShare,
 };

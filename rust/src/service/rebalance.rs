@@ -1,0 +1,236 @@
+//! Fleet-level row rebalancing: recompute the card shard boundaries from
+//! observed per-card load — the control plane's most expensive lever.
+//!
+//! A [`FleetPlan`](crate::coordinator::FleetPlan) shards the row space
+//! across cards proportionally to *probed capacity*; under skewed traffic
+//! a card holding a hot row range saturates while its peers idle, and no
+//! amount of intra-card repartitioning (re-deal, re-split) can shed load a
+//! card simply *owns*.  [`FleetRebalancer`] re-cuts the card boundaries at
+//! capacity-share quantiles of the observed load density (the same
+//! construction [`PlanSplitter`](crate::coordinator::PlanSplitter) uses
+//! one level down, with per-card memory and reach-coverage clamps instead
+//! of the per-window reach bound).
+//!
+//! Applying a proposal is **zero-copy**: the fleet re-slices the one
+//! shared `Arc<[f32]>` into new per-card
+//! [`TableView`](crate::coordinator::TableView)s — migration costs
+//! refcount bumps and worker re-spawns, never a row of memcpy (pointer
+//! identity asserted in `tests/repartition.rs`).
+
+use crate::coordinator::cluster::{CardSpec, FleetPlan};
+use crate::coordinator::controlplane::{capacity_imbalance, load_shares};
+use crate::coordinator::replan::LoadDensity;
+
+/// Tuning for [`FleetRebalancer`].
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Minimum per-card load/capacity share deviation before a migration
+    /// is proposed (migrations are expensive: higher floor than the
+    /// intra-card levers).
+    pub min_imbalance: f64,
+    /// Minimum rows observed fleet-wide in an epoch before proposing.
+    pub min_epoch_rows: u64,
+    /// Proposals moving fewer rows than this are dropped (a dribble of
+    /// boundary rows is not worth a card rebuild).
+    pub min_move_rows: u64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        Self {
+            min_imbalance: 0.15,
+            min_epoch_rows: 1_024,
+            min_move_rows: 64,
+        }
+    }
+}
+
+/// A proposed re-sharding: rows per card (card order) plus the imbalance
+/// that motivated it.  Turn it into a plan with
+/// [`FleetPlan::with_ranges`]; the implied volume is
+/// [`FleetPlan::rows_moved`].
+#[derive(Debug, Clone)]
+pub struct MigrationProposal {
+    pub rows_of: Vec<u64>,
+    pub imbalance: f64,
+}
+
+/// The fleet-level boundary re-cutter (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct FleetRebalancer {
+    pub cfg: RebalanceConfig,
+}
+
+impl FleetRebalancer {
+    pub fn new(cfg: RebalanceConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Propose new per-card row counts from one epoch's per-card routed
+    /// rows (`card_rows[i]` = rows card `i` served this epoch).  `None`
+    /// keeps the current shards: signal too thin, the imbalance is within
+    /// tolerance, or geometry (memory / reach coverage) forbids a better
+    /// cut.
+    pub fn propose(
+        &self,
+        plan: &FleetPlan,
+        cards: &[CardSpec],
+        card_rows: &[u64],
+    ) -> Option<MigrationProposal> {
+        let n = cards.len();
+        if n == 0 || card_rows.len() != n || plan.shards.is_empty() {
+            return None;
+        }
+        let total: u64 = card_rows.iter().sum();
+        if total < self.cfg.min_epoch_rows.max(1) {
+            return None;
+        }
+        let total_cap: f64 = cards.iter().map(|c| c.capacity_gbps()).sum();
+        if !total_cap.is_finite() || total_cap <= 0.0 {
+            return None;
+        }
+
+        let load = load_shares(card_rows)?;
+        let caps: Vec<f64> = cards
+            .iter()
+            .map(|c| c.capacity_gbps() / total_cap)
+            .collect();
+        let imbalance = capacity_imbalance(&load, &caps);
+        if imbalance < self.cfg.min_imbalance {
+            return None;
+        }
+
+        // Piecewise-constant load density over the current shards in
+        // global row order (the same smoothed-quantile machinery the
+        // window re-splitter uses one level down).
+        let density = LoadDensity::smoothed(
+            plan.shards.iter().map(|s| (s.rows, card_rows[s.card])),
+            plan.total_rows,
+        );
+
+        // Geometry: a card may hold at most min(memory, groups * reach)
+        // worth of rows (beyond groups * reach no valid window plan
+        // exists).
+        let max_rows: Vec<u64> = cards
+            .iter()
+            .map(|c| {
+                let mem = c.memory_bytes / plan.row_bytes;
+                let reach = (c.map.reach_bytes / plan.row_bytes)
+                    .saturating_mul(c.map.groups.len() as u64);
+                mem.min(reach)
+            })
+            .collect();
+        if max_rows.iter().sum::<u64>() < plan.total_rows {
+            return None;
+        }
+
+        // Cut card boundaries (card order = global row order) at
+        // capacity-share load quantiles, clamped so every suffix of cards
+        // can still absorb the remainder.
+        let mut rows_of = vec![0u64; n];
+        let mut cursor = 0u64;
+        let mut want = 0.0f64;
+        for i in 0..n - 1 {
+            want += caps[i];
+            let tail_max: u64 = max_rows[i + 1..].iter().sum();
+            let lo = cursor.max(plan.total_rows.saturating_sub(tail_max));
+            let hi = (cursor + max_rows[i]).min(plan.total_rows);
+            if lo > hi {
+                return None; // defensive: infeasible geometry
+            }
+            let cut = density.row_at_load(want).clamp(lo, hi);
+            rows_of[i] = cut - cursor;
+            cursor = cut;
+        }
+        rows_of[n - 1] = plan.total_rows - cursor;
+        if rows_of[n - 1] > max_rows[n - 1] {
+            return None; // defensive: the lo bounds should prevent this
+        }
+        if rows_of == plan.rows_per_card(n) {
+            return None;
+        }
+        Some(MigrationProposal { rows_of, imbalance })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GIB;
+    use crate::probe::TopologyMap;
+
+    fn card(groups: usize, gbps: f64, mem_gib: u64) -> CardSpec {
+        CardSpec {
+            map: TopologyMap {
+                groups: (0..groups).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+                reach_bytes: 64 * GIB,
+                solo_gbps: vec![gbps; groups],
+                independent: true,
+                card_id: format!("rb-{groups}x{gbps}"),
+            },
+            memory_bytes: mem_gib * GIB,
+        }
+    }
+
+    #[test]
+    fn hot_card_sheds_rows_to_its_peer() {
+        let cards = vec![card(4, 100.0, 80), card(4, 100.0, 80)];
+        let rows = 64 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        // Card 0 serves 90% of the traffic: it must shrink.
+        let prop = FleetRebalancer::default()
+            .propose(&plan, &cards, &[9_000, 1_000])
+            .expect("90/10 over equal cards must migrate");
+        assert!(prop.imbalance > 0.35);
+        assert!(
+            prop.rows_of[0] < plan.shards[0].rows,
+            "hot card kept {} of {} rows",
+            prop.rows_of[0],
+            plan.shards[0].rows
+        );
+        assert_eq!(prop.rows_of.iter().sum::<u64>(), rows);
+        // The proposal builds into a valid next-generation plan.
+        let next =
+            FleetPlan::with_ranges(&cards, &prop.rows_of, rows, 128, 0, plan.generation + 1)
+                .unwrap();
+        assert!(next.fits_reach(&cards));
+        assert!(plan.rows_moved(&next) > 0);
+    }
+
+    #[test]
+    fn balanced_load_and_thin_signal_hold() {
+        let cards = vec![card(4, 100.0, 80), card(4, 100.0, 80)];
+        let rows = 64 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        let rb = FleetRebalancer::default();
+        assert!(rb.propose(&plan, &cards, &[5_100, 4_900]).is_none());
+        assert!(rb.propose(&plan, &cards, &[9, 1]).is_none(), "starved epoch");
+        assert!(rb.propose(&plan, &cards, &[5_000]).is_none(), "wrong arity");
+    }
+
+    #[test]
+    fn memory_clamp_bounds_the_receiving_card() {
+        // The cold card is tiny: it cannot absorb the hot card's surplus.
+        let cards = vec![card(4, 100.0, 80), card(4, 100.0, 4)];
+        let rows = 66 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 0).unwrap();
+        // Load says card 1 should grow far beyond its 4 GiB.
+        if let Some(prop) = FleetRebalancer::default().propose(&plan, &cards, &[9_500, 500]) {
+            assert!(prop.rows_of[1] * 128 <= 4 * GIB);
+            assert!(
+                FleetPlan::with_ranges(&cards, &prop.rows_of, rows, 128, 0, 1).is_ok()
+            );
+        }
+    }
+
+    #[test]
+    fn proposal_is_deterministic() {
+        let cards = vec![card(4, 120.0, 80), card(4, 80.0, 80)];
+        let rows = 64 * GIB / 128;
+        let plan = FleetPlan::build(&cards, rows, 128, 3).unwrap();
+        let rb = FleetRebalancer::default();
+        let a = rb.propose(&plan, &cards, &[9_000, 1_000]).unwrap();
+        let b = rb.propose(&plan, &cards, &[9_000, 1_000]).unwrap();
+        assert_eq!(a.rows_of, b.rows_of);
+    }
+}

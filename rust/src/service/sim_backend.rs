@@ -8,27 +8,35 @@
 //! [`Router`](crate::coordinator::Router) split → per-group worker → merge
 //! pipeline as the PJRT [`EmbeddingServer`](crate::coordinator::EmbeddingServer).
 //!
-//! Timing model: serving a sub-batch of `k` rows from window `w` on group
-//! `g` costs `k * ns_per_row(g, w)` of simulated device time, where
-//! `ns_per_row` is calibrated once per (group, window) pair by running the
-//! DES with that group's SMs uniform-random over the window's byte region
-//! (then memoized).  Under `GroupToChunk` the regions sit below TLB reach
-//! and the rates land at the paper's full-speed plateau; under `Naive`
-//! whole-table placement they collapse exactly like Fig 1.  With
-//! [`SimTiming::Probed`] the DES is skipped and the probe map's
+//! Timing model: serving a sub-batch of `k` rows from a window on group
+//! `g` costs `k * ns_per_row(g, window)` of simulated device time, where
+//! `ns_per_row` is calibrated once per (group, window-geometry) pair by
+//! running the DES with that group's SMs uniform-random over the window's
+//! byte region (then memoized).  Under `GroupToChunk` the regions sit
+//! below TLB reach and the rates land at the paper's full-speed plateau;
+//! under `Naive` whole-table placement they collapse exactly like Fig 1.
+//! With [`SimTiming::Probed`] the DES is skipped and the probe map's
 //! `solo_gbps` is used directly (fast startup for load-generation tests).
 //!
-//! Two live knobs on top of the cost model:
+//! Live knobs on top of the cost model:
 //!
 //! * **Pacing** (`sim_timescale > 0`): each group completes jobs no faster
 //!   than `sim_ns * timescale` of wall clock (a serial device per group),
 //!   so bench-serve's wall-clock knee becomes policy-dependent — thrashing
 //!   placements knee earlier, exactly like the real device would.
-//! * **Adaptive placement** (`adaptive: Some(..)`): a
-//!   [`Placer`]-produced placement lives in a generation-stamped
-//!   [`PlacementCell`]; [`SimBackend::rebalance_epoch`] (or a background
-//!   epoch thread) feeds per-window load signals to the placer and swaps
-//!   the deal without draining in-flight tickets.
+//! * **Repartitioning** (`adaptive: Some(..)`): the live (plan, placement)
+//!   pair sits in a generation-stamped [`PlacementCell`]; each epoch
+//!   ([`SimBackend::rebalance_epoch`] or the background thread) the
+//!   embedded [`ControlPlane`] judges the load/capacity imbalance and
+//!   permits the cheapest fixing lever — a group re-*deal*
+//!   ([`AdaptivePlacer`]) first, then (with `resplit: Some(..)`) a window
+//!   boundary re-*split* ([`PlanSplitter`]) for skew hotter than group
+//!   granularity can absorb.  Swaps land at the next formed batch, never
+//!   draining in-flight tickets.
+//! * **Health** ([`SimBackend::set_group_health`]): a group marked
+//!   Degraded/Failed triggers an *immediate* control-plane epoch (no
+//!   timer wait) that re-deals the windows over the surviving groups;
+//!   recovery is folded back in by the next regular epoch.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -40,13 +48,19 @@ use anyhow::{anyhow, Context};
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptivePlacer};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::chunks::WindowPlan;
+use crate::coordinator::controlplane::{
+    capacity_imbalance, committed_delta, load_shares, ControlPlane, ControlPlaneConfig, Decision,
+    Lever,
+};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::{
     Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
 };
+use crate::coordinator::replan::{PlanSplitter, SplitterConfig};
+use crate::coordinator::state::{CoordinatorState, GroupHealth};
 use crate::coordinator::table::TableView;
 use crate::probe::TopologyMap;
-use crate::sim::{Machine, MeasurementSpec, Pattern, SmId};
+use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmId};
 
 use super::backend::{
     submit_ticketed, Backend, Batch, Job, Pipeline, ResponseTx, Ticket, WorkerMsg,
@@ -81,6 +95,14 @@ pub struct SimBackendConfig {
     /// [`AdaptivePlacer`] (initially the group-to-chunk deal; `policy` is
     /// ignored for placement then) and enables epoch rebalancing.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Two-level repartitioning: additionally let the control plane
+    /// re-*split* window boundaries when the re-deal cannot balance the
+    /// observed skew.  Requires `adaptive` (ignored without it).
+    pub resplit: Option<SplitterConfig>,
+    /// Escalation policy for the embedded [`ControlPlane`] (thresholds,
+    /// patience, cooldown).  `max_lever` is clamped to what this backend
+    /// can actually do: `Redeal` without `resplit`, `Resplit` with it.
+    pub control: ControlPlaneConfig,
     /// Wall-clock pacing of simulated device time: each group's job
     /// completions are delayed so wall ≥ `sim_ns * sim_timescale`
     /// (1.0 = a simulated nanosecond costs a wall nanosecond).  0 disables
@@ -97,7 +119,18 @@ impl SimBackendConfig {
             seed: 0xC0FFEE,
             calib_accesses_per_sm: 2_000,
             adaptive: None,
+            resplit: None,
+            control: ControlPlaneConfig::default(),
             sim_timescale: 0.0,
+        }
+    }
+
+    /// Convenience: enable both repartitioning levers with defaults.
+    pub fn two_level(policy: PlacementPolicy) -> Self {
+        Self {
+            adaptive: Some(AdaptiveConfig::default()),
+            resplit: Some(SplitterConfig::default()),
+            ..Self::new(policy)
         }
     }
 }
@@ -121,65 +154,296 @@ pub struct GroupSimReport {
     pub simulated_gbps: f64,
 }
 
-/// Everything the epoch rebalancer needs — shared between
-/// [`SimBackend::rebalance_epoch`] and the optional background thread.
-struct RebalanceCtx {
+/// Everything a control-plane epoch needs — shared between
+/// [`SimBackend::rebalance_epoch`], [`SimBackend::set_group_health`], and
+/// the optional background thread.
+struct ControlCtx {
     placer: Arc<dyn Placer>,
-    placement: Arc<PlacementCell>,
-    plan: Arc<WindowPlan>,
+    splitter: Option<PlanSplitter>,
+    plane: ControlPlane,
+    cell: Arc<PlacementCell>,
     map: TopologyMap,
     metrics: Arc<Metrics>,
     batcher: Arc<Batcher<ResponseTx>>,
     /// The placer's signal floor (0 for static placers): epochs below it
     /// accumulate into the next one instead of being discarded.
     min_epoch_rows: u64,
+    /// Serializes whole epochs (and health transitions with their
+    /// immediate epoch): without it, a timer epoch that read "all healthy"
+    /// could publish a health-blind re-deal *after* a concurrent
+    /// `set_group_health` swap, transiently re-including a Failed group.
+    gate: Mutex<()>,
     /// Per-window routed-row totals at the previous *committed* epoch
     /// boundary.
     last_rows: Mutex<Vec<u64>>,
+    /// Group health as last reported via `set_group_health`, plus the
+    /// versioned coordinator view of it (epochs, degraded-reach flag).
+    health: Mutex<CoordinatorState>,
 }
 
-impl RebalanceCtx {
-    /// Close one epoch: delta the per-window load counters, ask the placer
-    /// for a rebalanced deal, publish it.  Returns the new generation when
-    /// a swap happened.
-    fn epoch(&self) -> Option<u64> {
+impl ControlCtx {
+    /// Delta the per-window load counters since the last committed epoch
+    /// (see [`committed_delta`](crate::coordinator::controlplane::committed_delta):
+    /// starved epochs roll their rows into the next one).
+    fn window_delta(&self, windows: usize) -> Vec<u64> {
         let totals = self.metrics.window_rows_snapshot();
-        let delta = {
-            let mut last = self.last_rows.lock().unwrap();
-            if last.len() != totals.len() {
-                *last = vec![0; totals.len()];
-            }
-            let delta: Vec<u64> = totals
-                .iter()
-                .zip(last.iter())
-                .map(|(t, l)| t.saturating_sub(*l))
-                .collect();
-            // Commit the baseline only when the epoch carried enough
-            // signal for the placer to decide on; a starved epoch rolls
-            // its rows into the next one, so persistent low-rate skew
-            // still accumulates to a rebalance instead of being dropped.
-            if delta.iter().sum::<u64>() >= self.min_epoch_rows {
-                *last = totals;
-            }
-            delta
-        };
+        let mut last = self.last_rows.lock().unwrap();
+        let delta = committed_delta(&mut *last, &totals, self.min_epoch_rows);
+        delta.into_iter().take(windows).collect()
+    }
+
+    /// Close one epoch: observe, let the control plane pick the strongest
+    /// permitted lever, try levers cheapest-first, publish.  Returns the
+    /// new generation when a swap happened.
+    fn epoch(&self) -> Option<u64> {
+        let _serialized = self.gate.lock().unwrap();
+        self.epoch_inner()
+    }
+
+    fn epoch_inner(&self) -> Option<u64> {
+        let (plan, current) = self.cell.load_planned();
+        let w = plan.count();
         let signals = WindowSignals {
-            rows: delta,
+            rows: self.window_delta(w),
             mean_latency_us: self.metrics.latency.mean_us(),
             queued_rows: self.batcher.pending_rows() as u64,
         };
-        let current = self.placement.load();
-        let next = self
-            .placer
-            .rebalance(&current, &self.map, &self.plan, &signals)?;
-        // Live-swap safety gate, active in release builds: a placement the
-        // router cannot serve (custom `Placer`s are untrusted) is dropped
-        // rather than published — stranding the swap, never the tickets.
-        if let Err(why) = next.check_servable(self.plan.count(), self.map.groups.len()) {
-            debug_assert!(false, "placer proposed an unservable placement: {why}");
+
+        // Unhealthy groups override the escalation ladder: a Failed or
+        // Degraded group must come out of (or be deprioritized in) the
+        // deal now, not after hysteresis.
+        let all_healthy = {
+            let st = self.health.lock().unwrap();
+            st.health.iter().all(|&h| h == GroupHealth::Healthy)
+        };
+        if !all_healthy {
+            return self.health_epoch(&plan, &current, &signals);
+        }
+
+        let imbalance = match load_shares(&signals.rows) {
+            None => 0.0,
+            Some(load) => {
+                let total_cap: f64 = self.map.solo_gbps.iter().sum();
+                let caps: Vec<f64> = (0..w)
+                    .map(|wid| {
+                        current.groups_of_window[wid]
+                            .iter()
+                            .map(|&q| self.map.solo_gbps[q])
+                            .sum::<f64>()
+                            / total_cap
+                    })
+                    .collect();
+                capacity_imbalance(&load, &caps)
+            }
+        };
+
+        let permitted = self.plane.permit(imbalance);
+        if permitted == Lever::Hold {
+            self.plane
+                .record(permitted, None, imbalance, None, "healthy or cooling down");
             return None;
         }
-        Some(self.placement.store(next))
+
+        // Lever 1 (cheapest): re-deal groups under the current boundaries.
+        if let Some(next) = self.placer.rebalance(&current, &self.map, &plan, &signals) {
+            // Live-swap safety gate, active in release builds: a placement
+            // the router cannot serve (custom `Placer`s are untrusted) is
+            // dropped rather than published — stranding the swap, never
+            // the tickets.
+            if let Err(why) = next.check_servable(plan.count(), self.map.groups.len()) {
+                debug_assert!(false, "placer proposed an unservable placement: {why}");
+                self.plane
+                    .record(permitted, None, imbalance, None, "unservable re-deal dropped");
+                return None;
+            }
+            let generation = self.cell.store(next);
+            self.metrics.redeal_epochs.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .generations_published
+                .fetch_add(1, Ordering::Relaxed);
+            self.plane.record(
+                permitted,
+                Some(Lever::Redeal),
+                imbalance,
+                Some(generation),
+                "re-dealt groups over current windows",
+            );
+            return Some(generation);
+        }
+
+        // Lever 2: re-split the window boundaries themselves.
+        if permitted >= Lever::Resplit {
+            if let Some(splitter) = &self.splitter {
+                if let Some((new_plan, placement)) = splitter.replan(&plan, &self.map, &signals)
+                {
+                    if let Err(why) =
+                        placement.check_servable(new_plan.count(), self.map.groups.len())
+                    {
+                        debug_assert!(false, "splitter proposed an unservable plan: {why}");
+                        self.plane.record(
+                            permitted,
+                            None,
+                            imbalance,
+                            None,
+                            "unservable re-split dropped",
+                        );
+                        return None;
+                    }
+                    let count = new_plan.count();
+                    let generation = self.cell.store_replan(new_plan, placement);
+                    // Window ids changed meaning: re-baseline the signal.
+                    *self.last_rows.lock().unwrap() = self.metrics.window_rows_snapshot();
+                    self.metrics.resplit_epochs.fetch_add(1, Ordering::Relaxed);
+                    self.metrics
+                        .generations_published
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.plane.record(
+                        permitted,
+                        Some(Lever::Resplit),
+                        imbalance,
+                        Some(generation),
+                        format!("re-split boundaries into {count} windows"),
+                    );
+                    return Some(generation);
+                }
+            }
+        }
+
+        self.plane
+            .record(permitted, None, imbalance, None, "permitted levers declined");
+        None
+    }
+
+    /// The health lever: re-deal the current windows over the surviving
+    /// groups (Failed groups excluded, Degraded at half weight).  Runs
+    /// outside the escalation ladder, but only *eviction* bypasses
+    /// hysteresis: while a Failed group still sits on a serving list the
+    /// swap is unconditional (drain correctness); once every serving list
+    /// is clean, steady-state re-deals under long-lived Degraded/Failed
+    /// groups gate on the plane's `min_imbalance` so noisy load cannot
+    /// churn a generation per epoch.
+    fn health_epoch(
+        &self,
+        plan: &WindowPlan,
+        current: &Placement,
+        signals: &WindowSignals,
+    ) -> Option<u64> {
+        // Health bypasses the ladder but still opens a plane epoch, so the
+        // decision trace stays strictly epoch-ordered.
+        self.plane.open_unladdered();
+        let g = self.map.groups.len();
+        let w = plan.count();
+        let weights: Vec<f64> = {
+            let st = self.health.lock().unwrap();
+            (0..g)
+                .map(|q| match st.health[q] {
+                    GroupHealth::Failed => 0.0,
+                    GroupHealth::Degraded => self.map.solo_gbps[q] * 0.5,
+                    GroupHealth::Healthy => self.map.solo_gbps[q],
+                })
+                .collect()
+        };
+        let live: Vec<usize> = (0..g).filter(|&q| weights[q] > 0.0).collect();
+        if live.is_empty() {
+            self.plane
+                .record(Lever::Redeal, None, 1.0, None, "all groups failed");
+            return None;
+        }
+        let load_share: Vec<f64> =
+            load_shares(&signals.rows).unwrap_or_else(|| vec![1.0 / w as f64; w]);
+
+        // Steady-state hysteresis: when no failed group needs evicting,
+        // only act on a real load/weighted-capacity mismatch.
+        let must_evict = current
+            .groups_of_window
+            .iter()
+            .flatten()
+            .any(|&q| weights[q] == 0.0);
+        if !must_evict {
+            let total_weight: f64 = weights.iter().sum();
+            let caps: Vec<f64> = (0..w)
+                .map(|wid| {
+                    current.groups_of_window[wid]
+                        .iter()
+                        .map(|&q| weights[q])
+                        .sum::<f64>()
+                        / total_weight.max(1e-9)
+                })
+                .collect();
+            let imbalance = capacity_imbalance(&load_share, &caps);
+            if imbalance < self.plane.config().min_imbalance {
+                self.plane.record(
+                    Lever::Redeal,
+                    None,
+                    imbalance,
+                    None,
+                    "degraded but balanced; holding",
+                );
+                return None;
+            }
+        }
+
+        let mut groups_of_window: Vec<Vec<usize>> = vec![Vec::new(); w];
+        let mut window_of_group: Vec<usize> = (0..g)
+            .map(|q| current.window_of_group.get(q).copied().unwrap_or(0))
+            .collect();
+        if live.len() >= w {
+            // Capacity-proportional deal over the live sub-map; indices
+            // mapped back through `live`.
+            let sub_map = TopologyMap {
+                groups: live.iter().map(|&q| self.map.groups[q].clone()).collect(),
+                reach_bytes: self.map.reach_bytes,
+                solo_gbps: live.iter().map(|&q| weights[q]).collect(),
+                independent: self.map.independent,
+                card_id: self.map.card_id.clone(),
+            };
+            let (sub_gow, _) = AdaptivePlacer::deal(&sub_map, &load_share);
+            for (wid, subs) in sub_gow.into_iter().enumerate() {
+                for si in subs {
+                    groups_of_window[wid].push(live[si]);
+                    window_of_group[live[si]] = wid;
+                }
+            }
+        } else {
+            // Degraded-reach mode (the Fig-1 regime): fewer live groups
+            // than windows — live groups straddle several windows rather
+            // than failing the table.
+            for wid in 0..w {
+                let q = live[wid % live.len()];
+                groups_of_window[wid].push(q);
+                // Last assignment wins; serving correctness only reads
+                // groups_of_window.
+                window_of_group[q] = wid;
+            }
+        }
+        if groups_of_window == current.groups_of_window {
+            self.plane
+                .record(Lever::Redeal, None, 0.0, None, "health deal unchanged");
+            return None;
+        }
+        let next = Placement {
+            policy: PlacementPolicy::GroupToChunk,
+            generation: current.generation,
+            groups_of_window,
+            window_of_group,
+        };
+        if let Err(why) = next.check_servable(w, g) {
+            debug_assert!(false, "health deal unservable: {why}");
+            return None;
+        }
+        let generation = self.cell.store(next);
+        self.metrics.redeal_epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .generations_published
+            .fetch_add(1, Ordering::Relaxed);
+        self.plane.record(
+            Lever::Redeal,
+            Some(Lever::Redeal),
+            0.0,
+            Some(generation),
+            "health-driven re-deal over surviving groups",
+        );
+        Some(generation)
     }
 }
 
@@ -187,11 +451,11 @@ impl RebalanceCtx {
 pub struct SimBackend {
     pipeline: Pipeline,
     metrics: Arc<Metrics>,
-    plan: Arc<WindowPlan>,
+    row_bytes: u64,
     view: TableView,
     placement: Arc<PlacementCell>,
     stats: Arc<Vec<GroupServeStats>>,
-    rebalance: Arc<RebalanceCtx>,
+    control: Arc<ControlCtx>,
     epoch_stop: Arc<AtomicBool>,
     epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -254,8 +518,10 @@ impl SimBackend {
         if let Err(why) = placement.check_servable(plan.count(), map.groups.len()) {
             return Err(anyhow!("placement is unservable: {why}"));
         }
-        let metrics = Arc::new(Metrics::for_windows(plan.count()));
-        let plan = Arc::new(plan);
+        // The window-rows registry is sized for the *largest* plan a
+        // re-split can publish: one window per group.
+        let metrics = Arc::new(Metrics::for_windows(map.groups.len().max(plan.count())));
+        let row_bytes = plan.row_bytes;
         let stats: Arc<Vec<GroupServeStats>> =
             Arc::new((0..map.groups.len()).map(|_| Default::default()).collect());
 
@@ -276,7 +542,7 @@ impl SimBackend {
                 },
                 solo_gbps: map.solo_gbps[g].max(1e-9),
                 calib_accesses: cfg.calib_accesses_per_sm.max(1),
-                plan: Arc::clone(&plan),
+                row_bytes,
                 view: view.clone(),
                 metrics: Arc::clone(&metrics),
                 stats: Arc::clone(&stats),
@@ -304,10 +570,11 @@ impl SimBackend {
             workers.push(handle);
         }
 
-        let cell = Arc::new(PlacementCell::new(placement));
+        let windows = plan.count();
+        let state = CoordinatorState::new(&placement, map.groups.len());
+        let cell = Arc::new(PlacementCell::new(Arc::new(plan), placement));
         let pipeline = Pipeline::start(
             cfg.batcher.clone(),
-            Arc::clone(&plan),
             Arc::clone(&cell),
             Arc::clone(&metrics),
             view.d(),
@@ -315,22 +582,36 @@ impl SimBackend {
             workers,
         )?;
 
-        let rebalance = Arc::new(RebalanceCtx {
+        // The control plane may only pull levers this backend has.
+        let mut plane_cfg = cfg.control.clone();
+        plane_cfg.max_lever = if cfg.adaptive.is_some() && cfg.resplit.is_some() {
+            Lever::Resplit
+        } else {
+            Lever::Redeal
+        };
+        let control = Arc::new(ControlCtx {
             placer: Self::placer_of(&cfg),
-            placement: Arc::clone(&cell),
-            plan: Arc::clone(&plan),
+            splitter: cfg
+                .adaptive
+                .as_ref()
+                .and(cfg.resplit.as_ref())
+                .map(|s| PlanSplitter::new(s.clone())),
+            plane: ControlPlane::new(plane_cfg),
+            cell: Arc::clone(&cell),
             map: map.clone(),
             metrics: Arc::clone(&metrics),
             batcher: Arc::clone(&pipeline.batcher),
             min_epoch_rows: cfg.adaptive.as_ref().map_or(0, |a| a.min_epoch_rows),
-            last_rows: Mutex::new(vec![0; plan.count()]),
+            gate: Mutex::new(()),
+            last_rows: Mutex::new(vec![0; windows]),
+            health: Mutex::new(state),
         });
 
         let epoch_stop = Arc::new(AtomicBool::new(false));
         let epoch_thread = match cfg.adaptive.as_ref().and_then(|a| a.epoch) {
             None => None,
             Some(epoch) => {
-                let ctx = Arc::clone(&rebalance);
+                let ctx = Arc::clone(&control);
                 let stop = Arc::clone(&epoch_stop);
                 let tick = epoch
                     .min(Duration::from_millis(5))
@@ -357,18 +638,19 @@ impl SimBackend {
         Ok(Self {
             pipeline,
             metrics,
-            plan,
+            row_bytes,
             view,
             placement: cell,
             stats,
-            rebalance,
+            control,
             epoch_stop,
             epoch_thread: Mutex::new(epoch_thread),
         })
     }
 
-    pub fn plan(&self) -> &WindowPlan {
-        &self.plan
+    /// The current live window plan (re-splits swap it between batches).
+    pub fn plan(&self) -> Arc<WindowPlan> {
+        self.placement.plan()
     }
 
     pub fn table_view(&self) -> &TableView {
@@ -380,18 +662,51 @@ impl SimBackend {
         self.placement.load()
     }
 
-    /// Close one rebalance epoch by hand: feed the epoch's per-window load
-    /// to the placer and swap the placement if it proposes a new deal.
-    /// Returns the new generation when a swap happened.  (The background
-    /// thread configured by `AdaptiveConfig::epoch` calls exactly this.)
+    /// Close one control-plane epoch by hand: observe the epoch's
+    /// per-window load, pick the cheapest permitted lever (re-deal, then
+    /// re-split), publish.  Returns the new generation when a swap
+    /// happened.  (The background thread configured by
+    /// `AdaptiveConfig::epoch` calls exactly this.)
     pub fn rebalance_epoch(&self) -> Option<u64> {
-        self.rebalance.epoch()
+        self.control.epoch()
+    }
+
+    /// Report a group health transition and run an immediate control-plane
+    /// epoch (ROADMAP item (a): health events must not wait for the
+    /// timer).  Returns the generation published by the resulting swap, if
+    /// any.
+    pub fn set_group_health(
+        &self,
+        group: usize,
+        health: GroupHealth,
+    ) -> anyhow::Result<Option<u64>> {
+        // Transition + immediate epoch are one atomic unit under the epoch
+        // gate: a concurrent timer epoch cannot publish a health-blind
+        // re-deal built before this transition after its swap.
+        let _serialized = self.control.gate.lock().unwrap();
+        {
+            let mut st = self.control.health.lock().unwrap();
+            st.set_health(group, health, &self.control.map)?;
+        }
+        Ok(self.control.epoch_inner())
+    }
+
+    /// The coordinator's versioned view of group health (epochs bumped per
+    /// transition, degraded-reach flag when fewer live groups than
+    /// windows).
+    pub fn health_state(&self) -> CoordinatorState {
+        self.control.health.lock().unwrap().clone()
+    }
+
+    /// The control plane's audited decision trace, oldest first.
+    pub fn control_decisions(&self) -> Vec<Decision> {
+        self.control.plane.decisions()
     }
 
     /// What the simulated device did: per-group rows, device time, and the
     /// implied gather throughput under the active placement.
     pub fn sim_report(&self) -> Vec<GroupSimReport> {
-        let row_bytes = self.plan.row_bytes as f64;
+        let row_bytes = self.row_bytes as f64;
         self.stats
             .iter()
             .enumerate()
@@ -428,7 +743,16 @@ impl SimBackend {
         if max_ns == 0 {
             return 0.0;
         }
-        total_rows as f64 * self.plan.row_bytes as f64 / max_ns as f64
+        total_rows as f64 * self.row_bytes as f64 / max_ns as f64
+    }
+
+    /// Zero the simulated-device accounting (benchmark harness hook:
+    /// measure a steady state without the convergence phase's makespan).
+    pub fn reset_sim_stats(&self) {
+        for s in self.stats.iter() {
+            s.rows.store(0, Ordering::Relaxed);
+            s.sim_ns.store(0, Ordering::Relaxed);
+        }
     }
 
     fn stop(&self) {
@@ -478,6 +802,11 @@ impl Drop for SimBackend {
 
 /// One group's worker: host gathers + simulated-device accounting (and,
 /// when pacing is on, completion delayed to the simulated rate).
+///
+/// Plan-agnostic: jobs carry their window's geometry (start row + rows in
+/// the view's row space), so the worker stays correct across live window
+/// re-splits — a job formed under generation N executes identically after
+/// the control plane publishes generation N+1.
 struct SimWorker {
     group: usize,
     /// The probe map's smids for this group (filtered against the machine
@@ -486,13 +815,13 @@ struct SimWorker {
     machine: Option<Machine>,
     solo_gbps: f64,
     calib_accesses: u64,
-    plan: Arc<WindowPlan>,
-    /// Zero-copy gather source (rows are plan-local).
+    row_bytes: u64,
+    /// Zero-copy gather source (job rows are view-local).
     view: TableView,
     metrics: Arc<Metrics>,
     stats: Arc<Vec<GroupServeStats>>,
-    /// Memoized calibration results per window.
-    ns_per_row: HashMap<usize, f64>,
+    /// Memoized calibration results per window geometry (start, rows).
+    ns_per_row: HashMap<(u64, u64), f64>,
     /// Wall-clock multiplier on simulated time (see
     /// [`SimBackendConfig::sim_timescale`]); 0 = unpaced.
     timescale: f64,
@@ -503,12 +832,11 @@ struct SimWorker {
 
 impl SimWorker {
     fn execute(&mut self, job: Job) {
-        let rate = self.ns_per_row(job.window);
-        let w = self.plan.windows()[job.window];
+        let rate = self.ns_per_row(job.win_start_row, job.win_rows);
         let d = self.view.d();
         let mut rows = Vec::with_capacity(job.local_rows.len() * d);
         for &local in &job.local_rows {
-            rows.extend_from_slice(self.view.row(w.start_row + local as u64));
+            rows.extend_from_slice(self.view.row(job.win_start_row + local as u64));
         }
         let cost_ns = job.local_rows.len() as f64 * rate;
         let st = &self.stats[self.group];
@@ -546,13 +874,16 @@ impl SimWorker {
         }
     }
 
-    /// Simulated device cost of one row gathered from `window` by this
-    /// group (ns).  GB/s ≡ bytes/ns, so `ns_per_row = row_bytes / gbps`.
-    fn ns_per_row(&mut self, window: usize) -> f64 {
-        if let Some(&r) = self.ns_per_row.get(&window) {
+    /// Simulated device cost of one row gathered from the window spanning
+    /// view rows `[start, start + rows)` by this group (ns).  GB/s ≡
+    /// bytes/ns, so `ns_per_row = row_bytes / gbps`.  Keyed by the window
+    /// *geometry*, so re-split plans calibrate their new windows lazily on
+    /// first contact while identical geometry reuses the cache.
+    fn ns_per_row(&mut self, start: u64, rows: u64) -> f64 {
+        if let Some(&r) = self.ns_per_row.get(&(start, rows)) {
             return r;
         }
-        let row_bytes = self.plan.row_bytes as f64;
+        let row_bytes = self.row_bytes as f64;
         let rate = match &self.machine {
             Some(m) => {
                 let sms: Vec<SmId> = self
@@ -564,20 +895,21 @@ impl SimWorker {
                 if sms.is_empty() {
                     row_bytes / self.solo_gbps
                 } else {
-                    let region = self.plan.region_of(&self.plan.windows()[window]);
+                    let region =
+                        MemRegion::new(start * self.row_bytes, rows * self.row_bytes);
                     let mut spec = MeasurementSpec::uniform_all(
                         &sms,
                         Pattern::Uniform(region),
                         self.calib_accesses,
-                        0xCA11B ^ window as u64,
+                        0xCA11B ^ start ^ rows.rotate_left(32),
                     );
-                    spec.txn_bytes = self.plan.row_bytes;
+                    spec.txn_bytes = self.row_bytes;
                     row_bytes / m.run(&spec).gbps.max(1e-9)
                 }
             }
             None => row_bytes / self.solo_gbps,
         };
-        self.ns_per_row.insert(window, rate);
+        self.ns_per_row.insert((start, rows), rate);
         rate
     }
 }

@@ -7,6 +7,6 @@ pub mod openloop;
 pub mod synth;
 pub mod trace;
 
-pub use openloop::{drive, LoadPoint, OpenLoopConfig};
+pub use openloop::{drive, LoadPoint, LoadTarget, OpenLoopConfig};
 pub use synth::{RequestGen, WorkloadSpec};
 pub use trace::Trace;

@@ -3,16 +3,38 @@
 //! server's latency-throughput curve (closed-loop clients self-throttle
 //! and hide queueing collapse).
 //!
-//! Backend-agnostic: drives any [`Service`] — sim-backed for hermetic QPS
-//! sweeps (`a100win bench-serve`), PJRT-backed when artifacts exist.
+//! Backend-agnostic: drives any [`LoadTarget`] — a single [`Service`]
+//! (sim-backed for hermetic QPS sweeps via `a100win bench-serve`,
+//! PJRT-backed when artifacts exist) or a whole [`FleetService`]
+//! (`bench-serve --cards N`, where the repartitioning control plane
+//! migrates rows mid-sweep).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::service::Service;
+use crate::service::{FleetService, Service};
 use crate::util::rng::Rng;
 use crate::workload::RequestGen;
+
+/// Anything the open-loop driver can aim at: submit one request, block
+/// until it resolves.  Implementations must be shareable across the
+/// per-arrival threads.
+pub trait LoadTarget: Sync {
+    fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()>;
+}
+
+impl LoadTarget for Service {
+    fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()> {
+        self.submit(rows, deadline)?.wait().map(|_| ())
+    }
+}
+
+impl LoadTarget for FleetService {
+    fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()> {
+        self.submit(rows, deadline)?.wait().map(|_| ())
+    }
+}
 
 /// One point on the latency-throughput curve.
 #[derive(Debug, Clone)]
@@ -57,11 +79,11 @@ impl Default for OpenLoopConfig {
     }
 }
 
-/// Drive the service at `offered_rps` with Poisson arrivals; requests are
+/// Drive the target at `offered_rps` with Poisson arrivals; requests are
 /// executed by per-arrival threads so arrivals never block on service
 /// (open loop), up to the in-flight cap.
-pub fn drive(
-    service: &Service,
+pub fn drive<T: LoadTarget + ?Sized>(
+    service: &T,
     gen: &mut RequestGen,
     offered_rps: f64,
     cfg: &OpenLoopConfig,
@@ -120,11 +142,9 @@ pub fn drive(
             let deadline = cfg.deadline;
             s.spawn(move || {
                 let t0 = Instant::now();
-                let result = service
-                    .submit(rows, deadline)
-                    .and_then(|ticket| ticket.wait());
+                let result = service.run_request(rows, deadline);
                 match result {
-                    Ok(_) => {
+                    Ok(()) => {
                         let us = t0.elapsed().as_micros() as u64;
                         lat_sum_us.fetch_add(us, Ordering::Relaxed);
                         lat_max_us.fetch_max(us, Ordering::Relaxed);

@@ -1,7 +1,7 @@
 //! Synthetic request generators.
 //!
-//! Two flavors of skew matter to the serving stack and they are *not* the
-//! same thing:
+//! Three flavors of skew matter to the serving stack and they are *not*
+//! the same thing:
 //!
 //! * [`Distribution::Zipf`] — zipf over row *rank*, rank 0 = row 0: hot
 //!   rows cluster at the front of the table, so the leading windows absorb
@@ -11,11 +11,17 @@
 //!   are hashed over the whole table: row-level skew with near-uniform
 //!   per-window load (hot embedding rows in a shuffled table).  A
 //!   window-rebalancer can't (and shouldn't) react to it.
+//! * [`Distribution::Drift`] — a **moving** hotspot: the inner
+//!   distribution's row space is rotated by a third of the table every
+//!   `period` requests, so yesterday's hot window goes cold and a static
+//!   (or converged) placement is wrong again.  This is the repartitioning
+//!   control plane's stressor (`a100win bench-serve --skew-drift
+//!   drift:zipf:1.1:2000`).
 
 use crate::util::rng::Rng;
 
 /// Index distribution over the table's rows.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Distribution {
     /// The paper's benchmark: uniform random rows.
     Uniform,
@@ -28,11 +34,18 @@ pub enum Distribution {
     ZipfScattered { theta: f64 },
     /// Sequential scan (control: TLB-friendly).
     Sequential,
+    /// Rotating hotspot: draw from `inner`, then shift the row space by a
+    /// third of the table once per `period` requests (drift cannot nest).
+    Drift {
+        inner: Box<Distribution>,
+        period: u64,
+    },
 }
 
 impl Distribution {
     /// Parse a CLI skew spec: `uniform`, `zipf:<theta>`,
-    /// `zipf-scattered:<theta>`, or `sequential`.
+    /// `zipf-scattered:<theta>`, `sequential`, or
+    /// `drift:<inner-spec>:<period>` (e.g. `drift:zipf:1.1:5000`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let theta_of = |spec: &str, v: &str| -> anyhow::Result<f64> {
             let theta: f64 = v
@@ -50,7 +63,9 @@ impl Distribution {
                 "uniform" => Ok(Self::Uniform),
                 "sequential" => Ok(Self::Sequential),
                 _ => anyhow::bail!(
-                    "unknown skew '{s}' (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential)"
+                    "unknown skew '{s}' \
+                     (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential|\
+                      drift:<skew>:<period>)"
                 ),
             },
             Some(("zipf", v)) => Ok(Self::Zipf {
@@ -59,8 +74,27 @@ impl Distribution {
             Some(("zipf-scattered", v)) => Ok(Self::ZipfScattered {
                 theta: theta_of("zipf-scattered", v)?,
             }),
+            Some(("drift", rest)) => {
+                let (inner_spec, period_str) = rest.rsplit_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("drift expects drift:<skew>:<period>, got 'drift:{rest}'")
+                })?;
+                if inner_spec.starts_with("drift") {
+                    anyhow::bail!("drift cannot nest");
+                }
+                let period: u64 = period_str.parse().map_err(|_| {
+                    anyhow::anyhow!("drift period must be a number, got '{period_str}'")
+                })?;
+                if period == 0 {
+                    anyhow::bail!("drift period must be > 0");
+                }
+                Ok(Self::Drift {
+                    inner: Box::new(Self::parse(inner_spec)?),
+                    period,
+                })
+            }
             Some((other, _)) => anyhow::bail!(
-                "unknown skew '{other}' (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential)"
+                "unknown skew '{other}' \
+                 (uniform|zipf:<theta>|zipf-scattered:<theta>|sequential|drift:<skew>:<period>)"
             ),
         }
     }
@@ -87,23 +121,67 @@ impl WorkloadSpec {
     }
 }
 
+/// The drift-normalized base draw (no nesting, all-Copy payloads) so the
+/// request hot path never matches through a `Box`.
+#[derive(Debug, Clone, Copy)]
+enum BaseDist {
+    Uniform,
+    Sequential,
+    Zipf(f64),
+    ZipfScattered(f64),
+}
+
 /// Stateful generator producing one request (a row-index batch) at a time.
 #[derive(Debug, Clone)]
 pub struct RequestGen {
     spec: WorkloadSpec,
     rng: Rng,
     cursor: u64,
+    /// Requests generated so far (the drift rotation clock).
+    requests: u64,
+    base: BaseDist,
+    /// `Some(period)` when the spec is [`Distribution::Drift`].
+    drift_period: Option<u64>,
 }
 
 impl RequestGen {
     pub fn new(spec: WorkloadSpec) -> Self {
         assert!(spec.total_rows > 0);
         assert!(spec.request_rows.0 >= 1 && spec.request_rows.0 <= spec.request_rows.1);
+        let base_of = |d: &Distribution| match d {
+            Distribution::Uniform => BaseDist::Uniform,
+            Distribution::Sequential => BaseDist::Sequential,
+            Distribution::Zipf { theta } => BaseDist::Zipf(*theta),
+            Distribution::ZipfScattered { theta } => BaseDist::ZipfScattered(*theta),
+            Distribution::Drift { .. } => panic!("drift cannot nest"),
+        };
+        let (base, drift_period) = match &spec.distribution {
+            Distribution::Drift { inner, period } => (base_of(inner), Some((*period).max(1))),
+            other => (base_of(other), None),
+        };
         let rng = Rng::seed_from_u64(spec.seed);
         Self {
             spec,
             rng,
             cursor: 0,
+            requests: 0,
+            base,
+            drift_period,
+        }
+    }
+
+    /// Rows the current drift rotation shifts every draw by (0 without
+    /// drift): a third of the table, so the hot front lands in a
+    /// different window each period.
+    pub fn drift_offset(&self) -> u64 {
+        let n = self.spec.total_rows;
+        match self.drift_period {
+            None => 0,
+            Some(period) => {
+                let step = n.div_ceil(3).max(1);
+                let k = self.requests / period;
+                ((k as u128 * step as u128) % n as u128) as u64
+            }
         }
     }
 
@@ -114,24 +192,32 @@ impl RequestGen {
         } else {
             lo + self.rng.gen_index(hi - lo + 1)
         };
-        (0..len).map(|_| self.next_row()).collect()
+        let req = (0..len).map(|_| self.next_row()).collect();
+        self.requests += 1;
+        req
     }
 
     fn next_row(&mut self) -> u64 {
         let n = self.spec.total_rows;
-        match self.spec.distribution {
-            Distribution::Uniform => self.rng.gen_range(n),
-            Distribution::Sequential => {
+        let raw = match self.base {
+            BaseDist::Uniform => self.rng.gen_range(n),
+            BaseDist::Sequential => {
                 let r = self.cursor % n;
                 self.cursor += 1;
                 r
             }
-            Distribution::Zipf { theta } => self.zipf_rank(theta),
-            Distribution::ZipfScattered { theta } => {
+            BaseDist::Zipf(theta) => self.zipf_rank(theta),
+            BaseDist::ZipfScattered(theta) => {
                 // Fibonacci-hash the rank over the table: row-level skew,
                 // window-uniform load.
                 self.zipf_rank(theta).wrapping_mul(0x9E37_79B9_7F4A_7C15) % n
             }
+        };
+        let offset = self.drift_offset();
+        if offset == 0 {
+            raw
+        } else {
+            ((raw as u128 + offset as u128) % n as u128) as u64
         }
     }
 
@@ -272,12 +358,114 @@ mod tests {
             Distribution::parse("zipf-scattered:0.9").unwrap(),
             Distribution::ZipfScattered { theta: 0.9 }
         );
+        assert_eq!(
+            Distribution::parse("drift:zipf:1.1:5000").unwrap(),
+            Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: 5000
+            }
+        );
+        assert_eq!(
+            Distribution::parse("drift:uniform:10").unwrap(),
+            Distribution::Drift {
+                inner: Box::new(Distribution::Uniform),
+                period: 10
+            }
+        );
         assert!(Distribution::parse("zipf:0").is_err());
         assert!(Distribution::parse("zipf:nan").is_err());
         assert!(Distribution::parse("zipf:inf").is_err());
         assert!(Distribution::parse("zipf:abc").is_err());
         assert!(Distribution::parse("pareto:2").is_err());
         assert!(Distribution::parse("bogus").is_err());
+        assert!(Distribution::parse("drift:zipf:1.1:0").is_err());
+        assert!(Distribution::parse("drift:zipf:1.1").is_err(), "period required");
+        assert!(Distribution::parse("drift:drift:zipf:1.1:5:5").is_err(), "no nesting");
+        assert!(Distribution::parse("drift:zipf:1.1:abc").is_err());
+    }
+
+    #[test]
+    fn drift_rotates_the_hot_window() {
+        // zipf(1.1) front-loads the low rows; after one drift period the
+        // hot front must sit a third of the table away.
+        let n = 65_536u64;
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: n,
+            distribution: Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: 50,
+            },
+            request_rows: (8, 8),
+            seed: 11,
+        });
+        let third = n.div_ceil(3);
+        let front_frac = |g: &mut RequestGen, reqs: usize, lo: u64| {
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for _ in 0..reqs {
+                for r in g.next_request() {
+                    assert!(r < n);
+                    total += 1;
+                    // Within a third-of-table band starting at `lo`?
+                    if (r + n - lo) % n < third {
+                        hits += 1;
+                    }
+                }
+            }
+            hits as f64 / total as f64
+        };
+        // Period 1 (requests 0..50): hot band starts at row 0.
+        assert_eq!(g.drift_offset(), 0);
+        let p0 = front_frac(&mut g, 50, 0);
+        // Period 2 (requests 50..100): hot band starts a third in.
+        assert_eq!(g.drift_offset(), third);
+        let p1_old_band = front_frac(&mut g, 50, 0);
+        let mut g2 = RequestGen::new(WorkloadSpec {
+            total_rows: n,
+            distribution: Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: 50,
+            },
+            request_rows: (8, 8),
+            seed: 11,
+        });
+        for _ in 0..50 {
+            g2.next_request();
+        }
+        let p1_new_band = front_frac(&mut g2, 50, third);
+        assert!(p0 > 0.85, "initial hot band too weak: {p0}");
+        assert!(p1_new_band > 0.85, "rotated hot band too weak: {p1_new_band}");
+        assert!(
+            p1_old_band < 0.35,
+            "old band still hot after rotation: {p1_old_band}"
+        );
+    }
+
+    #[test]
+    fn drifted_uniform_stays_uniform() {
+        let n = 10_000u64;
+        let mut g = RequestGen::new(WorkloadSpec {
+            total_rows: n,
+            distribution: Distribution::Drift {
+                inner: Box::new(Distribution::Uniform),
+                period: 7,
+            },
+            request_rows: (16, 16),
+            seed: 3,
+        });
+        let mut front = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            for r in g.next_request() {
+                assert!(r < n);
+                total += 1;
+                if r < n / 2 {
+                    front += 1;
+                }
+            }
+        }
+        let frac = front as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.05, "drifted uniform skewed: {frac}");
     }
 
     #[test]

@@ -111,7 +111,9 @@ fn fleet_build_sim_shares_storage_without_copies() {
 
     // Acceptance: per-card memory is O(view metadata) — every card's
     // backend view aliases the host table's storage Arc (no table copy).
-    for (svc, shard) in fleet.cards().iter().zip(&fleet.plan().shards) {
+    let cards = fleet.cards();
+    let plan = fleet.plan();
+    for (svc, shard) in cards.iter().zip(&plan.shards) {
         let view = svc
             .backend()
             .view()
@@ -159,8 +161,8 @@ fn adaptive_beats_static_under_window_skew() {
 
     // Phase 1: identical skewed traffic to both; then the adaptive backend
     // closes an epoch and re-deals groups toward the hot window.
-    drive_requests(&static_backend, &mut workload(&table, skew), 30, &table);
-    drive_requests(&adaptive_backend, &mut workload(&table, skew), 30, &table);
+    drive_requests(&static_backend, &mut workload(&table, skew.clone()), 30, &table);
+    drive_requests(&adaptive_backend, &mut workload(&table, skew.clone()), 30, &table);
     let gen = adaptive_backend
         .rebalance_epoch()
         .expect("zipf(1.1) skew must trigger a rebalance");
@@ -172,7 +174,7 @@ fn adaptive_beats_static_under_window_skew() {
     assert_eq!(placement.groups_of_window[1].len(), 1);
 
     // Phase 2: continue the stream on both.
-    let mut gs = workload(&table, skew);
+    let mut gs = workload(&table, skew.clone());
     let mut ga = workload(&table, skew);
     for _ in 0..30 {
         gs.next_request();

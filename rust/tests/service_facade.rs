@@ -420,7 +420,8 @@ fn fleet_single_shard_requests_skip_other_cards() {
         ),
     ];
     let fleet = FleetService::build_sim(cards, &table, quick_batcher(), 2).unwrap();
-    let shard0 = &fleet.plan().shards[0];
+    let plan = fleet.plan();
+    let shard0 = &plan.shards[0];
     // All rows from shard 0 only.
     let rows: Arc<Vec<u64>> = Arc::new((0..64).map(|i| shard0.start_row + i).collect());
     let out = fleet.lookup(Arc::clone(&rows)).unwrap();
