@@ -1,0 +1,275 @@
+//! Bench: serving hot-path throughput — the lock-light, allocation-free
+//! slab/ring data path against the retained `--legacy-path` oracle
+//! (mutexed accumulator + mpsc channels + per-ticket `sync_channel` +
+//! per-job gather `Vec`).
+//!
+//! Closed-loop pipelined requests against the sim backend with *probed*
+//! timing (no DES at serve time, no pacing), so the numbers isolate the
+//! host serving software — exactly the overhead EXPERIMENTS.md §Perf L4
+//! targets.  Sweeps request batch sizes 1 / 64 / 1024 rows and 1–8 cards
+//! (cards > 1 run the fleet facade over zero-copy shards of one table).
+//!
+//! Emits `BENCH_serve.json` (in the crate directory under `cargo bench`)
+//! so the §Serve trajectory is comparable across PRs.
+//!
+//! Flags (after `--`): `--smoke` shrinks the sweep for CI;
+//! `--legacy-path` runs only the oracle arm (both arms run by default).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use a100win::coordinator::{BatcherConfig, CardSpec, Table, WindowPlan};
+use a100win::prelude::PlacementPolicy;
+use a100win::probe::TopologyMap;
+use a100win::service::{FleetService, Service, SimBackend, SimBackendConfig, SimTiming};
+use a100win::util::json::Json;
+use a100win::util::rng::Rng;
+
+const D: usize = 32;
+const ROWS_PER_CARD: u64 = 32_768;
+/// Pipelined in-flight tickets (closed loop, windowed).
+const DEPTH: usize = 64;
+
+/// A synthetic probed map: `groups` single-SM resource groups, reach far
+/// above the per-card table so placement never constrains the sweep (the
+/// bench measures the serving software, not the window construction).
+fn map(groups: usize, card: usize) -> TopologyMap {
+    TopologyMap {
+        groups: (0..groups).map(|g| vec![g]).collect(),
+        reach_bytes: 1 << 33,
+        solo_gbps: vec![100.0; groups],
+        independent: true,
+        card_id: format!("bench-card-{card}"),
+    }
+}
+
+fn quick_batcher() -> BatcherConfig {
+    BatcherConfig {
+        max_batch_rows: 8_192,
+        max_wait: std::time::Duration::from_micros(200),
+        max_pending: 4_096,
+    }
+}
+
+enum Target {
+    Single(Service),
+    Fleet(FleetService),
+}
+
+impl Target {
+    fn build(cards: usize, legacy: bool, table: &Table) -> Target {
+        let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+        cfg.batcher = quick_batcher();
+        cfg.legacy_path = legacy;
+        if cards == 1 {
+            let plan = WindowPlan::split(table.rows, (D * 4) as u64, 4);
+            let backend = Arc::new(
+                SimBackend::start(cfg, &map(4, 0), plan, table.view(), SimTiming::Probed)
+                    .expect("start sim backend"),
+            );
+            Target::Single(Service::new(backend))
+        } else {
+            let specs = (0..cards)
+                .map(|c| {
+                    (
+                        CardSpec {
+                            map: map(4, c),
+                            memory_bytes: ROWS_PER_CARD * (D * 4) as u64 * 2,
+                        },
+                        SimTiming::Probed,
+                    )
+                })
+                .collect();
+            let fleet = FleetService::build_sim_with(
+                specs,
+                table,
+                a100win::service::FleetConfig {
+                    batcher: quick_batcher(),
+                    legacy_path: legacy,
+                    ..Default::default()
+                },
+            )
+            .expect("build fleet");
+            Target::Fleet(fleet)
+        }
+    }
+
+    /// Run `requests` pipelined lookups of `batch` rows; returns wall
+    /// seconds.  Every response is length-checked and one in 64 is
+    /// verified row-by-row against the synthetic table (merged-row
+    /// correctness rides inside the measurement, cheaply).
+    fn drive(&self, table: &Table, requests: usize, batch: usize, seed: u64) -> f64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let payloads: Vec<Arc<Vec<u64>>> = (0..128)
+            .map(|_| Arc::new((0..batch).map(|_| rng.gen_range(table.rows)).collect()))
+            .collect();
+        let t0 = Instant::now();
+        match self {
+            Target::Single(service) => {
+                let mut inflight = std::collections::VecDeque::new();
+                for i in 0..requests {
+                    let rows = Arc::clone(&payloads[i % payloads.len()]);
+                    inflight.push_back((i, Arc::clone(&rows), service.submit(rows, None).unwrap()));
+                    if inflight.len() >= DEPTH {
+                        let (i, rows, t) = inflight.pop_front().unwrap();
+                        finish(service, table, i, &rows, t.wait().unwrap());
+                    }
+                }
+                while let Some((i, rows, t)) = inflight.pop_front() {
+                    finish(service, table, i, &rows, t.wait().unwrap());
+                }
+            }
+            Target::Fleet(fleet) => {
+                let mut inflight = std::collections::VecDeque::new();
+                for i in 0..requests {
+                    let rows = Arc::clone(&payloads[i % payloads.len()]);
+                    inflight.push_back((i, Arc::clone(&rows), fleet.submit(rows, None).unwrap()));
+                    if inflight.len() >= DEPTH {
+                        let (i, rows, t) = inflight.pop_front().unwrap();
+                        let out = t.wait().unwrap();
+                        verify(table, i, &rows, &out);
+                        fleet.recycle(out);
+                    }
+                }
+                while let Some((i, rows, t)) = inflight.pop_front() {
+                    let out = t.wait().unwrap();
+                    verify(table, i, &rows, &out);
+                    fleet.recycle(out);
+                }
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Target::Single(s) => s.shutdown(),
+            Target::Fleet(f) => f.shutdown(),
+        }
+    }
+}
+
+fn verify(table: &Table, i: usize, rows: &[u64], out: &[f32]) {
+    assert_eq!(out.len(), rows.len() * D, "short response");
+    if i % 64 == 0 {
+        for (k, &row) in rows.iter().enumerate() {
+            for j in 0..D {
+                assert_eq!(out[k * D + j], table.expected(row, j), "row {row} col {j}");
+            }
+        }
+    }
+}
+
+fn finish(service: &Service, table: &Table, i: usize, rows: &[u64], out: Vec<f32>) {
+    verify(table, i, rows, &out);
+    // Close the allocation loop: slabs go back to the backend pool.
+    service.recycle(out);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let legacy_only = args.iter().any(|a| a == "--legacy-path");
+
+    let card_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let batches: &[usize] = &[1, 64, 1024];
+    let paths: &[bool] = if legacy_only {
+        &[true]
+    } else {
+        &[false, true] // new first, then the oracle
+    };
+
+    println!(
+        "# Serve hot path ({}, d={D}, {} rows/card, depth {DEPTH})",
+        if smoke { "smoke" } else { "full" },
+        ROWS_PER_CARD
+    );
+    println!(
+        "{:>8} {:>6} {:>6} {:>10} {:>14} {:>10}",
+        "path", "cards", "batch", "requests", "requests/s", "ns/row"
+    );
+
+    let mut arms = Vec::new();
+    for &cards in card_counts {
+        let table = Table::synthetic(ROWS_PER_CARD * cards as u64, D);
+        for &legacy in paths {
+            let target = Target::build(cards, legacy, &table);
+            for &batch in batches {
+                // Equal *row* volume per point so every arm does
+                // comparable work; floor keeps tiny batches honest.
+                let total_rows: usize = if smoke { 65_536 } else { 1 << 20 };
+                let requests = (total_rows / batch).clamp(64, 16_384);
+                // Warmup: fill slab/shell pools and the calibration memo.
+                target.drive(&table, requests / 4, batch, 1);
+                let wall = target.drive(&table, requests, batch, 2);
+                let rps = requests as f64 / wall;
+                let ns_per_row = wall * 1e9 / (requests * batch) as f64;
+                let path = if legacy { "legacy" } else { "new" };
+                println!(
+                    "{path:>8} {cards:>6} {batch:>6} {requests:>10} {rps:>14.0} {ns_per_row:>10.1}"
+                );
+                arms.push((path, cards, batch, requests, rps, ns_per_row));
+            }
+            target.shutdown();
+        }
+    }
+
+    // Pair up new-vs-legacy speedups per (cards, batch).
+    let mut speedups = Vec::new();
+    for &(_, cards, batch, _, rps_new, _) in arms.iter().filter(|a| a.0 == "new") {
+        if let Some(&(_, _, _, _, rps_old, _)) = arms
+            .iter()
+            .find(|a| a.0 == "legacy" && a.1 == cards && a.2 == batch)
+        {
+            speedups.push((cards, batch, rps_new / rps_old));
+        }
+    }
+    for &(cards, batch, s) in &speedups {
+        println!("# speedup new/legacy @ cards={cards} batch={batch}: {s:.2}x");
+    }
+
+    let json = Json::obj(vec![
+        ("workload", Json::str("serve_hotpath")),
+        ("smoke", Json::num(if smoke { 1u32 } else { 0u32 })),
+        ("d", Json::num(D as u32)),
+        ("rows_per_card", Json::num(ROWS_PER_CARD as u32)),
+        ("depth", Json::num(DEPTH as u32)),
+        (
+            "arms",
+            Json::arr(
+                arms.iter()
+                    .map(|&(path, cards, batch, requests, rps, nsr)| {
+                        Json::obj(vec![
+                            ("path", Json::str(path)),
+                            ("cards", Json::num(cards as u32)),
+                            ("batch", Json::num(batch as u32)),
+                            ("requests", Json::num(requests as u32)),
+                            ("requests_per_s", Json::num(rps)),
+                            ("ns_per_row", Json::num(nsr)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup_new_vs_legacy",
+            Json::arr(
+                speedups
+                    .iter()
+                    .map(|&(cards, batch, s)| {
+                        Json::obj(vec![
+                            ("cards", Json::num(cards as u32)),
+                            ("batch", Json::num(batch as u32)),
+                            ("speedup", Json::num(s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, json.to_string_pretty()) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

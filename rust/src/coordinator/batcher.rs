@@ -8,6 +8,7 @@
 //! `try_submit` too).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -56,7 +57,6 @@ impl Default for BatcherConfig {
 
 struct State<T> {
     queue: VecDeque<PendingRequest<T>>,
-    pending_rows: usize,
     closed: bool,
 }
 
@@ -64,6 +64,10 @@ struct State<T> {
 pub struct Batcher<T> {
     cfg: BatcherConfig,
     state: Mutex<State<T>>,
+    /// Rows queued across pending requests, mirrored outside the lock so
+    /// the control plane's epoch sampling ([`Batcher::pending_rows`])
+    /// never contends with submitters on the queue mutex.
+    pending_rows: AtomicUsize,
     /// Signals consumers (batch ready / closed) and producers (space freed).
     cv: Condvar,
 }
@@ -75,9 +79,9 @@ impl<T> Batcher<T> {
             cfg,
             state: Mutex::new(State {
                 queue: VecDeque::new(),
-                pending_rows: 0,
                 closed: false,
             }),
+            pending_rows: AtomicUsize::new(0),
             cv: Condvar::new(),
         }
     }
@@ -97,7 +101,7 @@ impl<T> Batcher<T> {
         if st.closed {
             return Err(ticket);
         }
-        st.pending_rows += rows.len();
+        self.pending_rows.fetch_add(rows.len(), Ordering::Relaxed);
         st.queue.push_back(PendingRequest {
             rows,
             ticket,
@@ -119,7 +123,7 @@ impl<T> Batcher<T> {
         if st.closed || st.queue.len() >= self.cfg.max_pending {
             return Err(ticket);
         }
-        st.pending_rows += rows.len();
+        self.pending_rows.fetch_add(rows.len(), Ordering::Relaxed);
         st.queue.push_back(PendingRequest {
             rows,
             ticket,
@@ -137,7 +141,7 @@ impl<T> Batcher<T> {
         loop {
             if !st.queue.is_empty() {
                 let oldest_wait = st.queue.front().unwrap().enqueued.elapsed();
-                if st.pending_rows >= self.cfg.max_batch_rows
+                if self.pending_rows.load(Ordering::Relaxed) >= self.cfg.max_batch_rows
                     || oldest_wait >= self.cfg.max_wait
                     || st.closed
                 {
@@ -172,7 +176,7 @@ impl<T> Batcher<T> {
                 break;
             }
         }
-        st.pending_rows -= rows;
+        self.pending_rows.fetch_sub(rows, Ordering::Relaxed);
         self.cv.notify_all(); // wake blocked producers
         Batch { requests }
     }
@@ -189,9 +193,10 @@ impl<T> Batcher<T> {
     }
 
     /// Rows queued across all pending requests — the queue-depth signal the
-    /// adaptive placer samples at epoch boundaries.
+    /// adaptive placer samples at epoch boundaries.  Lock-free: epoch
+    /// sampling must not contend with submitters.
     pub fn pending_rows(&self) -> usize {
-        self.state.lock().unwrap().pending_rows
+        self.pending_rows.load(Ordering::Relaxed)
     }
 }
 

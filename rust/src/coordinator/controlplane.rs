@@ -229,26 +229,56 @@ pub fn load_shares(rows: &[u64]) -> Option<Vec<f64>> {
     Some(rows.iter().map(|&r| r as f64 / total as f64).collect())
 }
 
-/// Delta observed counters against a committed baseline — the one
+/// Delta observed counters against a committed atomic baseline — the one
 /// epoch-signal rule every scope shares: the baseline only advances when
-/// the epoch carried at least `min_commit` total, so a starved epoch rolls
-/// its signal into the next one and persistent low-rate skew still
-/// accumulates to a decision instead of being dropped.  Resizes the
-/// baseline (zeroed) when the counter set changes shape.
-pub fn committed_delta(last: &mut Vec<u64>, totals: &[u64], min_commit: u64) -> Vec<u64> {
-    if last.len() != totals.len() {
-        *last = vec![0; totals.len()];
-    }
+/// the epoch carried at least `min_commit` total, so a starved epoch
+/// rolls its signal into the next one and persistent low-rate skew still
+/// accumulates to a decision instead of being dropped.
+///
+/// The epoch drivers keep their committed-baseline registers as plain
+/// atomics (relaxed-counter writes, acquire/release at the epoch
+/// boundary) instead of a `Mutex<Vec<u64>>`, so reading an epoch signal
+/// never takes a lock the request path could ever see.  The baseline's
+/// length is fixed at construction (sized for the maximum counter set,
+/// like [`Metrics::for_windows`](crate::coordinator::Metrics::for_windows));
+/// shorter `totals` are treated as zero-extended.  Callers serialize
+/// epochs (they already hold the epoch gate), so the read-then-store pair
+/// is not racing other committers.
+pub fn committed_delta_atomic(
+    last: &[std::sync::atomic::AtomicU64],
+    totals: &[u64],
+    min_commit: u64,
+) -> Vec<u64> {
+    use std::sync::atomic::Ordering;
+    // A counter beyond the baseline's fixed size never panics mid-epoch
+    // (the epoch gate would be poisoned for the process): its baseline
+    // reads as zero and never advances, so that counter's "delta"
+    // degrades to its lifetime total — recent-skew detection is muted for
+    // it, identically in debug and release.  Current callers size the
+    // baseline to the registry's maximum, so this is a guard rail, not a
+    // supported mode.
     let delta: Vec<u64> = totals
         .iter()
-        .zip(last.iter())
-        .map(|(t, l)| t.saturating_sub(*l))
+        .enumerate()
+        .map(|(i, t)| t.saturating_sub(last.get(i).map_or(0, |a| a.load(Ordering::Acquire))))
         .collect();
     if delta.iter().sum::<u64>() >= min_commit {
-        last.clear();
-        last.extend_from_slice(totals);
+        for (i, &t) in totals.iter().enumerate() {
+            if let Some(slot) = last.get(i) {
+                slot.store(t, Ordering::Release);
+            }
+        }
     }
     delta
+}
+
+/// Reset an atomic committed baseline to `totals` (re-baselining after a
+/// re-split or migration invalidates the old counter meanings).
+pub fn rebaseline_atomic(last: &[std::sync::atomic::AtomicU64], totals: &[u64]) {
+    use std::sync::atomic::Ordering;
+    for (i, slot) in last.iter().enumerate() {
+        slot.store(totals.get(i).copied().unwrap_or(0), Ordering::Release);
+    }
 }
 
 #[cfg(test)]

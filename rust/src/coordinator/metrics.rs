@@ -6,12 +6,39 @@ use std::time::Duration;
 /// Log2-bucketed latency histogram, 1 µs .. ~1 s.
 const BUCKETS: usize = 22;
 
+/// Recording shards: every group worker records a latency per completed
+/// request, so a single counter line would be the one cache line the whole
+/// fleet of workers fights over.  Threads hash to a shard
+/// (thread-local, assigned round-robin) and record with relaxed adds;
+/// readers sum the shards (acquire loads, so a snapshot observes every
+/// count recorded before it).
+const SHARDS: usize = 8;
+
+/// Cache-line aligned so adjacent shards never share a boundary line —
+/// otherwise neighboring threads would still bounce one line per record
+/// and partially undo the sharding.
 #[derive(Debug, Default)]
-pub struct LatencyHistogram {
+#[repr(align(64))]
+struct LatencyShard {
     buckets: [AtomicU64; BUCKETS],
     count: AtomicU64,
     sum_us: AtomicU64,
     max_us: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    shards: [LatencyShard; SHARDS],
+}
+
+/// This thread's shard index (round-robin at first use).
+fn shard_index() -> usize {
+    use std::sync::atomic::AtomicUsize;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SHARD.with(|s| *s)
 }
 
 impl LatencyHistogram {
@@ -26,14 +53,20 @@ impl LatencyHistogram {
 
     pub fn record(&self, latency: Duration) {
         let us = latency.as_micros() as u64;
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
+        let shard = &self.shards[shard_index()];
+        // Count is added LAST with Release: a snapshot that acquires a
+        // count has the matching bucket/sum/max contributions too.
+        shard.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        shard.sum_us.fetch_add(us, Ordering::Relaxed);
+        shard.max_us.fetch_max(us, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Release);
     }
 
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.shards
+            .iter()
+            .map(|s| s.count.load(Ordering::Acquire))
+            .sum()
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -41,11 +74,20 @@ impl LatencyHistogram {
         if c == 0 {
             return 0.0;
         }
-        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        let sum: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.sum_us.load(Ordering::Relaxed))
+            .sum();
+        sum as f64 / c as f64
     }
 
     pub fn max_us(&self) -> u64 {
-        self.max_us.load(Ordering::Relaxed)
+        self.shards
+            .iter()
+            .map(|s| s.max_us.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Approximate quantile from the log buckets (upper bucket edge).
@@ -56,8 +98,10 @@ impl LatencyHistogram {
         }
         let want = ((total as f64) * q).ceil() as u64;
         let mut acc = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
+        for i in 0..BUCKETS {
+            for s in &self.shards {
+                acc += s.buckets[i].load(Ordering::Relaxed);
+            }
             if acc >= want {
                 return 1u64 << (i + 1);
             }

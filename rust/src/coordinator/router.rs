@@ -132,6 +132,22 @@ impl Router {
             self.pool.push(sb);
         }
     }
+
+    /// Adopt a pair of emptied (capacity-retaining) index vectors as a
+    /// pooled shell.  This is how shells that escaped into worker jobs
+    /// come home: workers clear them and send them back over their
+    /// return ring; the dispatcher drains the rings into this pool, so at
+    /// steady state [`Router::split`] allocates nothing per sub-batch.
+    pub fn adopt_shells(&mut self, mut local_rows: Vec<u32>, mut positions: Vec<u32>) {
+        local_rows.clear();
+        positions.clear();
+        self.pool.push(SubBatch {
+            window: 0,
+            group: 0,
+            local_rows,
+            positions,
+        });
+    }
 }
 
 /// Pad `local_rows` (i32 cast) up to `batch` entries, repeating index 0.

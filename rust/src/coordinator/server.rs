@@ -33,7 +33,12 @@ use anyhow::{anyhow, Context};
 
 use crate::probe::TopologyMap;
 use crate::runtime::Runtime;
-use crate::service::backend::{submit_ticketed, Backend, Batch, Job, Pipeline, Ticket, WorkerMsg};
+use crate::service::backend::{
+    submit_ticketed, Backend, Batch, DataPath, Job, Pipeline, Shells, Ticket, WorkQueue,
+    WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
+};
+use crate::service::ring;
+use crate::service::scatter::SlabPool;
 
 use super::batcher::BatcherConfig;
 use super::chunks::WindowPlan;
@@ -69,6 +74,10 @@ pub struct EmbeddingServer {
     metrics: Arc<Metrics>,
     plan: Arc<WindowPlan>,
     view: TableView,
+    /// The request pipeline `submit` runs (always the slab path here,
+    /// carrying the output pool workers scatter PJRT gather results into;
+    /// cached so submit pays no per-request construction).
+    path: DataPath,
     placement: Arc<PlacementCell>,
     /// The startup placement: the widest group↔window assignment this
     /// server can honor (each worker uploaded only its startup windows'
@@ -108,8 +117,11 @@ impl EmbeddingServer {
         let plan = Arc::new(plan);
 
         // --- workers: one per group that serves at least one window ------
-        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> =
-            (0..map.groups.len()).map(|_| None).collect();
+        // Jobs arrive over a bounded SPSC ring; emptied index shells ride
+        // a return ring back to the dispatcher's router pool.
+        let pool = SlabPool::new();
+        let mut senders: Vec<Option<WorkSender>> = (0..map.groups.len()).map(|_| None).collect();
+        let mut shell_returns: Vec<ring::Consumer<Shells>> = Vec::new();
         let mut workers = Vec::new();
         let mut served_by_group: Vec<Vec<usize>> = vec![Vec::new(); map.groups.len()];
         for w in 0..plan.count() {
@@ -121,8 +133,10 @@ impl EmbeddingServer {
             if served.is_empty() {
                 continue;
             }
-            let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            senders[g] = Some(tx);
+            let (tx, rx) = ring::spsc::<Job>(JOB_RING_CAP);
+            let (shell_tx, shell_rx) = ring::spsc::<Shells>(SHELL_RING_CAP);
+            senders[g] = Some(WorkSender::Ring(tx));
+            shell_returns.push(shell_rx);
             let worker = WorkerInit {
                 group: g,
                 windows: served.clone(),
@@ -136,7 +150,7 @@ impl EmbeddingServer {
             let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<()>>(1);
             let handle = std::thread::Builder::new()
                 .name(format!("a100win-worker-g{g}"))
-                .spawn(move || worker.run(rx, ready_tx))
+                .spawn(move || worker.run(WorkQueue::Ring(rx), shell_tx, ready_tx))
                 .context("spawning worker")?;
             ready_rx
                 .recv()
@@ -153,6 +167,7 @@ impl EmbeddingServer {
             Arc::clone(&metrics),
             view.d(),
             senders,
+            shell_returns,
             workers,
         )?;
 
@@ -162,6 +177,7 @@ impl EmbeddingServer {
             metrics,
             plan,
             view,
+            path: DataPath::Slab(pool),
             placement: cell,
             startup: placement,
             map: map.clone(),
@@ -296,7 +312,14 @@ impl EmbeddingServer {
 
 impl Backend for EmbeddingServer {
     fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
-        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.view.rows(), batch)
+        submit_ticketed(
+            &self.pipeline.batcher,
+            &self.metrics,
+            self.view.rows(),
+            self.view.d(),
+            &self.path,
+            batch,
+        )
     }
 
     fn d(&self) -> usize {
@@ -309,6 +332,12 @@ impl Backend for EmbeddingServer {
 
     fn view(&self) -> Option<&TableView> {
         Some(&self.view)
+    }
+
+    fn recycle(&self, buf: Vec<f32>) {
+        if let DataPath::Slab(pool) = &self.path {
+            pool.put(buf);
+        }
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -343,7 +372,12 @@ struct WorkerInit {
 }
 
 impl WorkerInit {
-    fn run(self, rx: mpsc::Receiver<WorkerMsg>, ready: mpsc::SyncSender<anyhow::Result<()>>) {
+    fn run(
+        self,
+        queue: WorkQueue,
+        shells: ring::Producer<Shells>,
+        ready: mpsc::SyncSender<anyhow::Result<()>>,
+    ) {
         let mut ctx = match self.setup() {
             Ok(ctx) => {
                 let _ = ready.send(Ok(()));
@@ -354,12 +388,7 @@ impl WorkerInit {
                 return;
             }
         };
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                WorkerMsg::Shutdown => break,
-                WorkerMsg::Job(job) => ctx.execute(job),
-            }
-        }
+        queue.for_each_job(|job| ctx.execute(job, &shells));
     }
 
     fn setup(self) -> anyhow::Result<WorkerCtx> {
@@ -455,40 +484,40 @@ impl WorkerCtx {
             .1
     }
 
-    fn execute(&mut self, job: Job) {
-        let result = self.gather(&job);
+    fn execute(&mut self, job: Job, shells: &ring::Producer<Shells>) {
+        let result = self.gather_scatter(&job);
         match result {
-            Ok(rows) => {
-                job.acc.scatter(&job.positions, &rows, self.d);
-                job.acc.finish_part(&self.metrics);
-            }
-            Err(e) => {
-                job.acc.fail_part(&self.metrics, &format!("{e:#}"));
-            }
+            Ok(()) => job.acc.finish_part(&self.metrics),
+            Err(e) => job.acc.fail_part(&self.metrics, &format!("{e:#}")),
         }
+        job.recycle_shells(Some(shells));
     }
 
     /// Gather `job.local_rows` from the job's window shard, decomposed into
-    /// padding-minimal executable batches.
-    fn gather(&mut self, job: &Job) -> anyhow::Result<Vec<f32>> {
+    /// padding-minimal executable batches, scattering each executed chunk
+    /// *directly* into the request's output buffer — the PJRT readback is
+    /// the only host copy left on this path (the old per-job accumulation
+    /// `Vec` + second locked copy are gone).
+    fn gather_scatter(&mut self, job: &Job) -> anyhow::Result<()> {
         let shard = self
             .shards
             .get(&job.window)
             .ok_or_else(|| anyhow!("group has no shard for window {}", job.window))?;
         let sizes: Vec<usize> = self.lookups.iter().map(|(b, _)| *b).collect();
         let plan = plan_batches(job.local_rows.len(), &sizes);
-        let mut out = Vec::with_capacity(job.local_rows.len() * self.d);
         let mut cursor = 0usize;
         for b in plan {
             let chunk = &job.local_rows[cursor..job.local_rows.len().min(cursor + b)];
+            let positions = &job.positions[cursor..cursor + chunk.len()];
             cursor += chunk.len();
             let name = self.artifact_for(b).to_string();
             let (padded, real) = pad_indices(chunk, b);
             self.metrics
                 .padded_rows
                 .fetch_add((b - real) as u64, Ordering::Relaxed);
-            // NB: `gather` needs &mut self for compile cache, but shards are
-            // disjoint borrows; clone the name to end the manifest borrow.
+            // NB: execution needs &mut self for the compile cache, but
+            // shards are disjoint borrows; clone the name to end the
+            // manifest borrow.
             let full = {
                 let rt = &mut self.rt;
                 let exe_name: &str = &name;
@@ -499,9 +528,10 @@ impl WorkerCtx {
                     .to_vec::<f32>()
                     .map_err(|e| anyhow!("gather result: {e:?}"))?
             };
-            out.extend_from_slice(&full[..real * self.d]);
+            // Padding never leaks: only the real rows are scattered.
+            job.acc.scatter(positions, &full[..real * self.d], self.d);
         }
-        Ok(out)
+        Ok(())
     }
 }
 

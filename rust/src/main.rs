@@ -34,6 +34,7 @@ USAGE:
                     [--windows N] [--rows-per-request N] [--duration-ms N]
                     [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
                     [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
+                    [--verify N]
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -60,7 +61,11 @@ SUBCOMMANDS:
              §Repartition); --cards N>1 runs the sweep against a fleet
              whose control plane may also migrate rows across cards
              (zero-copy); --sim-timescale paces completions by simulated
-             device time so the wall-clock knee is policy-dependent.
+             device time so the wall-clock knee is policy-dependent;
+             --verify N is the CI regression guard: after the sweep it
+             serves N fully-verified requests (every merged row checked
+             against the table) and asserts the repartition counters are
+             consistent (generations == redeals + resplits + migrations).
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -584,6 +589,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             duration,
             max_requests,
             timescale,
+            args.u64_flag("verify", 0)?,
         );
     }
 
@@ -656,8 +662,58 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     if placer_name != "static" {
         print_decision_trace("card", &backend.control_decisions());
     }
+    let verify_n = args.u64_flag("verify", 0)?;
+    if verify_n > 0 {
+        // Regression guard: the sweep above ran open-loop (results
+        // discarded); now prove merged-row correctness on the very same
+        // live backend, then check the repartition counter invariant.
+        let verified = serve_requests(
+            |rows| {
+                let ticket = service.submit(rows, None)?;
+                Ok(Box::new(move || ticket.wait()))
+            },
+            &table,
+            verify_n,
+            rows_per_request,
+        )?;
+        assert_repartition_counters("card", || service.metrics())?;
+        if placer_name != "static" {
+            anyhow::ensure!(
+                !backend.control_decisions().is_empty(),
+                "adaptive sweep produced no control-plane decisions"
+            );
+        }
+        println!("verify: {verify_n} requests ({verified} rows) checked; counters consistent");
+    }
     service.shutdown();
     Ok(())
+}
+
+/// The bench-serve `--verify` counter invariant: every published
+/// generation in a registry is attributable to exactly one lever.  The
+/// lever counter and `generations_published` are two separate relaxed
+/// increments, so a still-running background epoch thread can be observed
+/// between the pair — re-snapshot briefly before declaring the counters
+/// inconsistent.
+fn assert_repartition_counters(
+    scope: &str,
+    snapshot: impl Fn() -> a100win::coordinator::MetricsSnapshot,
+) -> anyhow::Result<()> {
+    let mut last = (0, 0);
+    for _ in 0..40 {
+        let m = snapshot();
+        let levers = m.redeal_epochs + m.resplit_epochs + m.migrate_epochs;
+        if m.generations_published == levers {
+            return Ok(());
+        }
+        last = (m.generations_published, levers);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    anyhow::bail!(
+        "{scope}: generations_published={} but redeal+resplit+migrate={} (never converged)",
+        last.0,
+        last.1
+    )
 }
 
 /// Tail of a control plane's audited decision trace.
@@ -696,6 +752,7 @@ fn bench_serve_fleet(
     duration: Duration,
     max_requests: Option<u64>,
     sim_timescale: f64,
+    verify_n: u64,
 ) -> anyhow::Result<()> {
     // Probe map per card: enumeration seeds differ card to card (paper
     // §1.1), so each shard gets its own TopologyMap + placement.
@@ -785,6 +842,33 @@ fn bench_serve_fleet(
         fleet.aggregate_sim_gbps()
     );
     print_decision_trace("fleet", &fleet.control_decisions());
+    if verify_n > 0 {
+        // Regression guard: merged-row correctness on the live (possibly
+        // migrated) fleet, then the counter invariant per registry.
+        let verified = serve_requests(
+            |rows| {
+                let ticket = fleet.submit(rows, None)?;
+                Ok(Box::new(move || ticket.wait()))
+            },
+            &table,
+            verify_n,
+            rows_per_request,
+        )?;
+        assert_repartition_counters("fleet", || fleet.fleet_metrics())?;
+        let card_ids: Vec<usize> = fleet.plan().shards.iter().map(|s| s.card).collect();
+        for (card, svc) in card_ids.into_iter().zip(fleet.cards()) {
+            assert_repartition_counters(&format!("card {card}"), || svc.metrics())?;
+        }
+        if placer_name != "static" {
+            anyhow::ensure!(
+                !fleet.control_decisions().is_empty(),
+                "adaptive fleet sweep produced no control-plane decisions"
+            );
+        }
+        println!(
+            "verify: {verify_n} requests ({verified} rows) merged in order; counters consistent"
+        );
+    }
     fleet.shutdown();
     Ok(())
 }

@@ -15,8 +15,19 @@
 //! Both share the same internal shape (batcher → dispatcher →
 //! [`Router`](crate::coordinator::Router) split → per-group workers →
 //! ordered merge), so the split/accumulate/respond machinery lives here:
-//! [`RequestAcc`], [`Job`], [`WorkerMsg`], [`dispatch_formed`] and
-//! [`submit_ticketed`].
+//! [`RequestAcc`], [`Job`], [`dispatch_formed`] and [`submit_ticketed`].
+//!
+//! **The hot path is allocation-free and lock-light after warmup**
+//! (EXPERIMENTS.md §Perf L4): request outputs come from a pooled
+//! [`SlabPool`] slab that workers scatter into *directly* over disjoint
+//! row ranges ([`ScatterBuf`] — no per-job gather `Vec`, no accumulator
+//! mutex); jobs travel over bounded SPSC [`ring`]s (one dispatcher → one
+//! worker each) whose emptied index shells ride a return ring back to the
+//! router's pool; and a request completes with one atomic countdown plus a
+//! park/unpark [`Completion`] instead of a `sync_channel` per ticket.  The
+//! pre-slab pipeline (mutexed accumulator + mpsc channels + per-job gather
+//! `Vec`) is retained behind [`DataPath::Legacy`] as the
+//! `benches/serve_hotpath.rs --legacy-path` oracle.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -30,6 +41,8 @@ use crate::coordinator::placement::{Placement, PlacementCell};
 use crate::coordinator::router::Router;
 use crate::coordinator::table::TableView;
 
+use super::ring::{self, Completion};
+use super::scatter::{ScatterBuf, SlabPool};
 use super::session::{GlobalSlotGuard, SlotGuard};
 
 /// One submission: shared row indices plus an optional completion deadline.
@@ -71,16 +84,27 @@ pub enum TicketState {
     Expired,
 }
 
-/// Response channel the workers complete into.  Capacity 1: exactly one
-/// response per request, so a worker send never blocks.
+/// Legacy response channel (capacity 1: one response per request, so a
+/// worker send never blocks).  Only the [`DataPath::Legacy`] oracle uses
+/// it; the default path completes through a [`Completion`].
 pub(crate) type ResponseTx = mpsc::SyncSender<anyhow::Result<Vec<f32>>>;
+
+/// How a ticket observes its result.
+enum TicketInner {
+    /// Already resolved at submit (e.g. the empty request) — channel-free.
+    Done,
+    /// Default path: the request accumulator's completion cell.
+    Slot(Arc<Completion>),
+    /// Legacy oracle path: a one-shot channel.
+    Channel(mpsc::Receiver<anyhow::Result<Vec<f32>>>),
+}
 
 /// A claim on one in-flight request.  Tickets carry their deadline;
 /// [`Ticket::wait`] returns an error (and counts `Metrics::expired`) if the
 /// result does not arrive in time.  Dropping a ticket abandons the request
 /// (the backend still completes it; the response is discarded).
 pub struct Ticket {
-    rx: mpsc::Receiver<anyhow::Result<Vec<f32>>>,
+    inner: TicketInner,
     deadline: Option<Instant>,
     submitted: Instant,
     buffered: Option<anyhow::Result<Vec<f32>>>,
@@ -103,13 +127,9 @@ impl std::fmt::Debug for Ticket {
 }
 
 impl Ticket {
-    pub(crate) fn new(
-        rx: mpsc::Receiver<anyhow::Result<Vec<f32>>>,
-        deadline: Option<Instant>,
-        metrics: Arc<Metrics>,
-    ) -> Self {
+    fn with_inner(inner: TicketInner, deadline: Option<Instant>, metrics: Arc<Metrics>) -> Self {
         Self {
-            rx,
+            inner,
             deadline,
             submitted: Instant::now(),
             buffered: None,
@@ -119,10 +139,28 @@ impl Ticket {
         }
     }
 
-    /// A ticket that is already resolved (e.g. the empty request).
+    /// A ticket completed by a [`Completion`] cell (default path).
+    pub(crate) fn from_completion(
+        done: Arc<Completion>,
+        deadline: Option<Instant>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::with_inner(TicketInner::Slot(done), deadline, metrics)
+    }
+
+    /// A ticket completed over a one-shot channel (legacy oracle path).
+    pub(crate) fn new(
+        rx: mpsc::Receiver<anyhow::Result<Vec<f32>>>,
+        deadline: Option<Instant>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::with_inner(TicketInner::Channel(rx), deadline, metrics)
+    }
+
+    /// A ticket that is already resolved (e.g. the empty request) — no
+    /// channel, no completion cell, nothing to wait on.
     pub(crate) fn resolved(result: anyhow::Result<Vec<f32>>, metrics: Arc<Metrics>) -> Self {
-        let (_tx, rx) = mpsc::sync_channel(1);
-        let mut t = Self::new(rx, None, metrics);
+        let mut t = Self::with_inner(TicketInner::Done, None, metrics);
         t.buffered = Some(result);
         t
     }
@@ -141,21 +179,28 @@ impl Ticket {
         if self.buffered.is_some() {
             return TicketState::Ready;
         }
-        match self.rx.try_recv() {
-            Ok(r) => {
+        let got = match &mut self.inner {
+            TicketInner::Done => Some(Err(anyhow!("resolved ticket already redeemed"))),
+            TicketInner::Slot(done) => done.try_take(),
+            TicketInner::Channel(rx) => match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Some(Err(anyhow!("backend dropped the request")))
+                }
+            },
+        };
+        match got {
+            Some(r) => {
                 self.buffered = Some(r);
                 TicketState::Ready
             }
-            Err(mpsc::TryRecvError::Empty) => {
+            None => {
                 if self.deadline.is_some_and(|d| Instant::now() >= d) {
                     TicketState::Expired
                 } else {
                     TicketState::Pending
                 }
-            }
-            Err(mpsc::TryRecvError::Disconnected) => {
-                self.buffered = Some(Err(anyhow!("backend dropped the request")));
-                TicketState::Ready
             }
         }
     }
@@ -175,23 +220,35 @@ impl Ticket {
         if let Some(r) = self.buffered.take() {
             return r;
         }
-        // A result that already arrived always wins, even past the
-        // deadline — wait and poll must agree on an identical state.
-        if let Ok(r) = self.rx.try_recv() {
-            return r;
-        }
-        match self.deadline {
-            None => self.rx.recv().context("backend dropped the request")?,
-            Some(d) => {
-                let now = Instant::now();
-                if d <= now {
-                    return Err(self.expire());
-                }
-                match self.rx.recv_timeout(d - now) {
+        match &mut self.inner {
+            TicketInner::Done => Err(anyhow!("resolved ticket already redeemed")),
+            TicketInner::Slot(done) => {
+                // A result that already arrived always wins, even past the
+                // deadline — wait and poll must agree on an identical
+                // state ([`Completion::wait`] checks readiness first).
+                match done.wait(self.deadline) {
                     Ok(r) => r,
-                    Err(mpsc::RecvTimeoutError::Timeout) => Err(self.expire()),
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        Err(anyhow!("backend dropped the request"))
+                    Err(()) => Err(self.expire()),
+                }
+            }
+            TicketInner::Channel(rx) => {
+                if let Ok(r) = rx.try_recv() {
+                    return r;
+                }
+                match self.deadline {
+                    None => rx.recv().context("backend dropped the request")?,
+                    Some(d) => {
+                        let now = Instant::now();
+                        if d <= now {
+                            return Err(self.expire());
+                        }
+                        match rx.recv_timeout(d - now) {
+                            Ok(r) => r,
+                            Err(mpsc::RecvTimeoutError::Timeout) => Err(self.expire()),
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                Err(anyhow!("backend dropped the request"))
+                            }
+                        }
                     }
                 }
             }
@@ -236,6 +293,12 @@ pub trait Backend: Send + Sync {
         None
     }
 
+    /// Return a redeemed result buffer's capacity to the backend's output
+    /// slab pool.  Purely an optimization: cooperating callers (the bench
+    /// harness, the open-loop driver) make the steady-state output path
+    /// allocation-free; everyone else just drops their `Vec`.
+    fn recycle(&self, _buf: Vec<f32>) {}
+
     fn metrics(&self) -> MetricsSnapshot;
 
     /// The live counter registry: the facade and sessions record admission
@@ -252,9 +315,9 @@ pub trait Backend: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// Scatter gathered `rows` (each `d` wide) into `out` at their original
-/// request `positions`.  The one ordered-merge loop in the crate: request
-/// accumulators, the fleet merge, and the router's `merge_rows` all call
-/// this.
+/// request `positions`.  The one ordered-merge loop in the crate: the
+/// legacy accumulator, the fleet merge, and the router's `merge_rows` all
+/// call this.
 pub(crate) fn scatter_rows(out: &mut [f32], positions: &[u32], rows: &[f32], d: usize) {
     debug_assert_eq!(rows.len(), positions.len() * d);
     for (k, &pos) in positions.iter().enumerate() {
@@ -262,58 +325,199 @@ pub(crate) fn scatter_rows(out: &mut [f32], positions: &[u32], rows: &[f32], d: 
     }
 }
 
-/// Per-request accumulator: workers scatter their slice, the last one
-/// responds on the ticket channel.
+/// Which request plumbing a backend runs.
+#[derive(Clone)]
+pub(crate) enum DataPath {
+    /// Default: pooled slab outputs, direct disjoint scatter, SPSC rings,
+    /// park/unpark completion.
+    Slab(Arc<SlabPool>),
+    /// The pre-slab pipeline (mutexed accumulator, mpsc worker channels,
+    /// `sync_channel(1)` tickets, per-job gather `Vec`), kept as the
+    /// `--legacy-path` perf oracle.
+    Legacy,
+}
+
+/// Where a request's rows accumulate.
+enum OutBuf {
+    Slab(ScatterBuf),
+    Legacy(Mutex<Vec<f32>>),
+}
+
+/// How the finished request reaches its ticket.
+enum Responder {
+    Slot(Arc<Completion>),
+    Channel(Mutex<Option<ResponseTx>>),
+}
+
+/// Per-request accumulator: workers scatter their sub-batch directly into
+/// the output buffer (disjoint row ranges — no lock), and the last
+/// [`RequestAcc::finish_part`] publishes the result: **one atomic
+/// decrement per sub-batch, one completion per request**, zero heap
+/// allocations and zero mutex acquisitions on the success path.
 pub(crate) struct RequestAcc {
-    out: Mutex<Vec<f32>>,
+    out: OutBuf,
     remaining: AtomicUsize,
-    ticket: Mutex<Option<ResponseTx>>,
-    failed: Mutex<Option<String>>,
-    start: Instant,
+    responder: Responder,
+    /// Rare path: a failed sub-batch flips the flag, then records the
+    /// message under a lock nothing on the success path touches.
+    failed: AtomicUsize,
+    failed_msg: Mutex<Option<String>>,
+    /// Latency-measurement origin: the batcher *enqueue* instant, matching
+    /// the pre-slab pipeline (which stamped after any producer-side
+    /// backpressure wait), so the histogram means the same thing on both
+    /// arms.  Written by the dispatcher in [`RequestAcc::arm`], read once
+    /// at completion — two uncontended per-*request* lock touches, which
+    /// keeps the whole struct compiler-checked Sync (no blanket unsafe)
+    /// while the per-sub-batch path stays mutex-free.
+    start: Mutex<Instant>,
 }
 
 impl RequestAcc {
-    pub(crate) fn new(len_floats: usize, parts: usize, ticket: ResponseTx, start: Instant) -> Self {
+    /// Default-path accumulator: slab output + completion cell.  Created
+    /// at submit with the part count unknown; [`RequestAcc::arm`] sets it
+    /// (and the latency origin) at dispatch, before any job is sent.
+    pub(crate) fn new_slab(pool: &Arc<SlabPool>, rows: usize, d: usize) -> Self {
         Self {
-            out: Mutex::new(vec![0.0; len_floats]),
+            out: OutBuf::Slab(ScatterBuf::new(pool, rows, d)),
+            remaining: AtomicUsize::new(0),
+            responder: Responder::Slot(Arc::new(Completion::new())),
+            failed: AtomicUsize::new(0),
+            failed_msg: Mutex::new(None),
+            start: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Legacy-path accumulator (created at dispatch, parts known).
+    pub(crate) fn new_legacy(
+        len_floats: usize,
+        parts: usize,
+        ticket: ResponseTx,
+        start: Instant,
+    ) -> Self {
+        Self {
+            out: OutBuf::Legacy(Mutex::new(vec![0.0; len_floats])),
             remaining: AtomicUsize::new(parts),
-            ticket: Mutex::new(Some(ticket)),
-            failed: Mutex::new(None),
-            start,
+            responder: Responder::Channel(Mutex::new(Some(ticket))),
+            failed: AtomicUsize::new(0),
+            failed_msg: Mutex::new(None),
+            start: Mutex::new(start),
+        }
+    }
+
+    /// The completion cell the ticket waits on (default path only).
+    pub(crate) fn completion(&self) -> Arc<Completion> {
+        match &self.responder {
+            Responder::Slot(c) => Arc::clone(c),
+            Responder::Channel(_) => unreachable!("legacy accumulators complete over channels"),
+        }
+    }
+
+    /// Set the sub-batch count and the latency origin (default path;
+    /// called by the dispatcher before the first job is sent, so the
+    /// countdown can never hit zero early and no reader races the write).
+    pub(crate) fn arm(&self, parts: usize, enqueued: Instant) {
+        debug_assert!(parts > 0);
+        *self.start.lock().unwrap() = enqueued;
+        self.remaining.store(parts, Ordering::Release);
+    }
+
+    /// Is this the legacy (gather-then-locked-scatter) path?
+    pub(crate) fn is_legacy(&self) -> bool {
+        matches!(self.out, OutBuf::Legacy(_))
+    }
+
+    /// Write one gathered row (`d` floats) at its request position —
+    /// the default path's single copy, lock-free by the disjointness
+    /// invariant.  Slab accumulators only: the legacy oracle scatters per
+    /// sub-batch (one lock) through [`RequestAcc::scatter`]; a per-row
+    /// lock here would silently distort the oracle's cost model.
+    #[inline]
+    pub(crate) fn write_row(&self, pos: u32, row: &[f32]) {
+        match &self.out {
+            OutBuf::Slab(buf) => buf.write_row(pos as usize, row),
+            OutBuf::Legacy(_) => {
+                unreachable!("legacy accumulators scatter per sub-batch, not per row")
+            }
         }
     }
 
     /// Scatter one sub-batch's gathered rows (each `d` wide) into the
     /// request buffer at their original positions.
     pub(crate) fn scatter(&self, positions: &[u32], rows: &[f32], d: usize) {
-        scatter_rows(&mut self.out.lock().unwrap(), positions, rows, d);
+        match &self.out {
+            OutBuf::Slab(buf) => buf.scatter(positions, rows),
+            OutBuf::Legacy(out) => scatter_rows(&mut out.lock().unwrap(), positions, rows, d),
+        }
     }
 
-    /// Mark one sub-batch done; the last part sends the response.
+    /// Mark one sub-batch done; the last part publishes the response.
     pub(crate) fn finish_part(&self, metrics: &Metrics) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let ticket = self.ticket.lock().unwrap().take();
-            if let Some(t) = ticket {
-                let failed = self.failed.lock().unwrap().take();
-                let result = match failed {
-                    Some(e) => Err(anyhow!(e)),
-                    None => Ok(std::mem::take(&mut *self.out.lock().unwrap())),
-                };
-                if result.is_err() {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let result = if self.failed.load(Ordering::Acquire) > 0 {
+                let msg = self
+                    .failed_msg
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .unwrap_or_else(|| "sub-batch failed".into());
+                if let OutBuf::Slab(buf) = &self.out {
+                    // The output never surfaces: keep its capacity pooled.
+                    buf.discard();
                 }
-                metrics.latency.record(self.start.elapsed());
-                // The waiter may have expired or dropped its ticket;
-                // discarding the response is correct then.
-                let _ = t.send(result);
-            }
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(msg))
+            } else {
+                Ok(match &self.out {
+                    OutBuf::Slab(buf) => buf.take(),
+                    OutBuf::Legacy(out) => std::mem::take(&mut *out.lock().unwrap()),
+                })
+            };
+            let start = *self.start.lock().unwrap();
+            metrics.latency.record(start.elapsed());
+            self.respond(result);
         }
     }
 
     /// Record a failure for this part and finish it.
     pub(crate) fn fail_part(&self, metrics: &Metrics, why: &str) {
-        *self.failed.lock().unwrap() = Some(why.to_string());
+        *self.failed_msg.lock().unwrap() = Some(why.to_string());
+        self.failed.fetch_add(1, Ordering::Release);
         self.finish_part(metrics);
+    }
+
+    /// Resolve the whole request with an error without touching the
+    /// countdown (dispatcher-side culls: no jobs were sent).
+    pub(crate) fn resolve_err(&self, err: anyhow::Error) {
+        if let OutBuf::Slab(buf) = &self.out {
+            buf.discard();
+        }
+        self.respond(Err(err));
+    }
+
+    fn respond(&self, result: anyhow::Result<Vec<f32>>) {
+        match &self.responder {
+            Responder::Slot(done) => done.complete(result),
+            Responder::Channel(tx) => {
+                if let Some(t) = tx.lock().unwrap().take() {
+                    // The waiter may have expired or dropped its ticket;
+                    // discarding the response is correct then.
+                    let _ = t.send(result);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for RequestAcc {
+    fn drop(&mut self) {
+        // The pipeline died with this request in flight (worker panic,
+        // ring torn down mid-job): the waiter must not park forever.  A
+        // normally-completed request is a no-op here.
+        if let Responder::Slot(done) = &self.responder {
+            if !done.is_claimed() {
+                done.complete(Err(anyhow!("backend dropped the request")));
+            }
+        }
     }
 }
 
@@ -335,9 +539,102 @@ pub(crate) struct Job {
     pub(crate) acc: Arc<RequestAcc>,
 }
 
+impl Job {
+    /// Recycle this job's index shells after execution: cleared and sent
+    /// back to the dispatcher's router pool over the worker's return ring
+    /// (dropped silently when the ring is full — the next split simply
+    /// allocates).
+    pub(crate) fn recycle_shells(mut self, ret: Option<&ring::Producer<Shells>>) {
+        if let Some(ret) = ret {
+            self.local_rows.clear();
+            self.positions.clear();
+            let _ = ret.try_send((self.local_rows, self.positions));
+        }
+    }
+}
+
+/// Emptied (capacity-retaining) index vectors riding back to the router.
+pub(crate) type Shells = (Vec<u32>, Vec<u32>);
+
+/// Bounded per-worker job ring (the dispatcher blocks when a worker falls
+/// this far behind — the same backpressure the batcher's `max_pending`
+/// gives the front door).  Shared by every backend that rings its
+/// workers.
+pub(crate) const JOB_RING_CAP: usize = 1024;
+
+/// Bounded per-worker shell-return ring (overflow just drops shells; the
+/// next split re-allocates).
+pub(crate) const SHELL_RING_CAP: usize = 1024;
+
+/// Legacy worker message (mpsc path only; rings close instead).
 pub(crate) enum WorkerMsg {
     Job(Job),
     Shutdown,
+}
+
+/// The dispatcher's handle on one worker's queue.
+pub(crate) enum WorkSender {
+    Ring(ring::Producer<Job>),
+    Legacy(mpsc::Sender<WorkerMsg>),
+}
+
+impl WorkSender {
+    /// Hand a job to the worker (blocking on ring backpressure); returns
+    /// the job when the worker is gone.
+    fn send(&self, job: Job) -> Result<(), Job> {
+        match self {
+            WorkSender::Ring(tx) => tx.send(job).map_err(|e| e.into_inner()),
+            WorkSender::Legacy(tx) => tx.send(WorkerMsg::Job(job)).map_err(|e| match e.0 {
+                WorkerMsg::Job(job) => job,
+                WorkerMsg::Shutdown => unreachable!("send() only wraps jobs"),
+            }),
+        }
+    }
+
+    /// Signal end of stream (the worker drains, then exits).
+    fn shutdown(&self) {
+        match self {
+            WorkSender::Ring(tx) => tx.close(),
+            WorkSender::Legacy(tx) => {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
+        }
+    }
+}
+
+/// The worker's end of its queue.
+pub(crate) enum WorkQueue {
+    Ring(ring::Consumer<Job>),
+    Legacy(mpsc::Receiver<WorkerMsg>),
+}
+
+impl WorkQueue {
+    /// Run `f` over every job until the queue ends (ring closed+drained,
+    /// or legacy Shutdown message).
+    pub(crate) fn for_each_job(self, mut f: impl FnMut(Job)) {
+        match self {
+            WorkQueue::Ring(rx) => {
+                while let Some(job) = rx.recv() {
+                    f(job);
+                }
+            }
+            WorkQueue::Legacy(rx) => {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        WorkerMsg::Shutdown => break,
+                        WorkerMsg::Job(job) => f(job),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// What rides through the batcher per request: the pre-built accumulator
+/// (default path) or the legacy response channel.
+pub(crate) enum ReqHandle {
+    Acc(Arc<RequestAcc>),
+    Legacy(ResponseTx),
 }
 
 /// Split every request of a formed batch under `placement` and fan
@@ -346,11 +643,11 @@ pub(crate) enum WorkerMsg {
 /// touching a worker.  Per-window routed rows are recorded in `metrics` —
 /// the adaptive placer's load signal.
 pub(crate) fn dispatch_formed(
-    formed: crate::coordinator::batcher::Batch<ResponseTx>,
+    formed: crate::coordinator::batcher::Batch<ReqHandle>,
     router: &mut Router,
     plan: &crate::coordinator::chunks::WindowPlan,
     placement: &Placement,
-    senders: &[Option<mpsc::Sender<WorkerMsg>>],
+    senders: &[Option<WorkSender>],
     metrics: &Arc<Metrics>,
     d: usize,
 ) {
@@ -359,18 +656,28 @@ pub(crate) fn dispatch_formed(
     for req in formed.requests {
         if req.deadline.is_some_and(|dl| dl <= now) {
             metrics.expired.fetch_add(1, Ordering::Relaxed);
-            let _ = req
-                .ticket
-                .send(Err(anyhow!("deadline expired before dispatch")));
+            let err = || anyhow!("deadline expired before dispatch");
+            match req.ticket {
+                ReqHandle::Acc(acc) => acc.resolve_err(err()),
+                ReqHandle::Legacy(tx) => {
+                    let _ = tx.send(Err(err()));
+                }
+            }
             continue;
         }
         let split = router.split(&req.rows, plan, placement);
-        let acc = Arc::new(RequestAcc::new(
-            req.rows.len() * d,
-            split.sub_batches.len(),
-            req.ticket,
-            req.enqueued,
-        ));
+        let acc = match req.ticket {
+            ReqHandle::Acc(acc) => {
+                acc.arm(split.sub_batches.len(), req.enqueued);
+                acc
+            }
+            ReqHandle::Legacy(tx) => Arc::new(RequestAcc::new_legacy(
+                req.rows.len() * d,
+                split.sub_batches.len(),
+                tx,
+                req.enqueued,
+            )),
+        };
         for sb in split.sub_batches {
             metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
             let win = plan.windows()[sb.window];
@@ -384,8 +691,9 @@ pub(crate) fn dispatch_formed(
             };
             match senders.get(sb.group).and_then(|s| s.as_ref()) {
                 Some(tx) => {
-                    if tx.send(WorkerMsg::Job(job)).is_err() {
-                        acc.fail_part(metrics, "worker channel closed");
+                    if let Err(job) = tx.send(job) {
+                        drop(job);
+                        acc.fail_part(metrics, "worker queue closed");
                     }
                 }
                 None => acc.fail_part(metrics, "no worker for group"),
@@ -400,7 +708,7 @@ pub(crate) fn dispatch_formed(
 /// differ in *what a worker does with a [`Job`]* — they spawn their own
 /// workers and hand the senders + handles here.
 pub(crate) struct Pipeline {
-    pub(crate) batcher: Arc<Batcher<ResponseTx>>,
+    pub(crate) batcher: Arc<Batcher<ReqHandle>>,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -411,13 +719,17 @@ impl Pipeline {
     /// formed batch, so a [`PlacementCell::store`] (re-deal) or
     /// [`PlacementCell::store_replan`] (window re-split) from the control
     /// plane takes effect at the next batch — in-flight splits finish under
-    /// the generation they started with (no drain).
+    /// the generation they started with (no drain).  `shell_returns` are
+    /// the workers' recycling rings: their emptied index vectors are
+    /// drained into the router pool between batches, closing the
+    /// allocation loop.
     pub(crate) fn start(
         cfg: crate::coordinator::batcher::BatcherConfig,
         cell: Arc<PlacementCell>,
         metrics: Arc<Metrics>,
         d: usize,
-        senders: Vec<Option<mpsc::Sender<WorkerMsg>>>,
+        senders: Vec<Option<WorkSender>>,
+        shell_returns: Vec<ring::Consumer<Shells>>,
         workers: Vec<std::thread::JoinHandle<()>>,
     ) -> anyhow::Result<Self> {
         let batcher = Arc::new(Batcher::new(cfg));
@@ -428,13 +740,18 @@ impl Pipeline {
                 .spawn(move || {
                     let mut router = Router::new();
                     while let Some(batch) = batcher.next_batch() {
+                        for ret in &shell_returns {
+                            while let Some((local_rows, positions)) = ret.try_recv() {
+                                router.adopt_shells(local_rows, positions);
+                            }
+                        }
                         let (plan, placement) = cell.load_planned();
                         dispatch_formed(
                             batch, &mut router, &plan, &placement, &senders, &metrics, d,
                         );
                     }
                     for s in senders.iter().flatten() {
-                        let _ = s.send(WorkerMsg::Shutdown);
+                        s.shutdown();
                     }
                 })
                 .context("spawning dispatcher")?
@@ -460,10 +777,15 @@ impl Pipeline {
 }
 
 /// The common `Backend::submit` body: validate, count, enqueue, ticket.
+/// On the default path the request's slab accumulator is built here
+/// (output length is known at submit) and armed with its sub-batch count
+/// by the dispatcher.
 pub(crate) fn submit_ticketed(
-    batcher: &Batcher<ResponseTx>,
+    batcher: &Batcher<ReqHandle>,
     metrics: &Arc<Metrics>,
     total_rows: u64,
+    d: usize,
+    path: &DataPath,
     batch: Batch,
 ) -> anyhow::Result<Ticket> {
     for &r in batch.rows.iter() {
@@ -479,11 +801,23 @@ pub(crate) fn submit_ticketed(
     if batch.rows.is_empty() {
         return Ok(Ticket::resolved(Ok(Vec::new()), Arc::clone(metrics)));
     }
-    let (tx, rx) = mpsc::sync_channel(1);
-    batcher
-        .submit(batch.rows, batch.deadline, tx)
-        .map_err(|_| anyhow!("backend is shutting down"))?;
-    Ok(Ticket::new(rx, batch.deadline, Arc::clone(metrics)))
+    match path {
+        DataPath::Slab(pool) => {
+            let acc = Arc::new(RequestAcc::new_slab(pool, batch.rows.len(), d));
+            let done = acc.completion();
+            batcher
+                .submit(batch.rows, batch.deadline, ReqHandle::Acc(acc))
+                .map_err(|_| anyhow!("backend is shutting down"))?;
+            Ok(Ticket::from_completion(done, batch.deadline, Arc::clone(metrics)))
+        }
+        DataPath::Legacy => {
+            let (tx, rx) = mpsc::sync_channel(1);
+            batcher
+                .submit(batch.rows, batch.deadline, ReqHandle::Legacy(tx))
+                .map_err(|_| anyhow!("backend is shutting down"))?;
+            Ok(Ticket::new(rx, batch.deadline, Arc::clone(metrics)))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -513,25 +847,34 @@ mod tests {
     }
 
     #[test]
+    fn completion_ticket_pending_then_ready() {
+        let done = Arc::new(Completion::new());
+        let mut t = Ticket::from_completion(Arc::clone(&done), None, metrics());
+        assert_eq!(t.poll(), TicketState::Pending);
+        done.complete(Ok(vec![5.0]));
+        assert_eq!(t.poll(), TicketState::Ready);
+        assert_eq!(t.wait().unwrap(), vec![5.0]);
+    }
+
+    #[test]
     fn ticket_deadline_expires() {
         let m = metrics();
-        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Vec<f32>>>(1);
-        let t = Ticket::new(
-            rx,
+        let done = Arc::new(Completion::new());
+        let t = Ticket::from_completion(
+            done,
             Some(Instant::now() + Duration::from_millis(10)),
             Arc::clone(&m),
         );
         let err = t.wait().unwrap_err();
         assert!(err.to_string().contains("deadline expired"), "{err}");
         assert_eq!(m.expired.load(Ordering::Relaxed), 1);
-        drop(tx);
     }
 
     #[test]
     fn ticket_poll_reports_expired() {
-        let (_tx, rx) = mpsc::sync_channel::<anyhow::Result<Vec<f32>>>(1);
-        let mut t = Ticket::new(
-            rx,
+        let done = Arc::new(Completion::new());
+        let mut t = Ticket::from_completion(
+            done,
             Some(Instant::now() - Duration::from_millis(1)),
             metrics(),
         );
@@ -548,10 +891,55 @@ mod tests {
     }
 
     #[test]
+    fn dropped_pipeline_resolves_slab_ticket_with_error() {
+        // The accumulator dropping un-completed (worker died mid-job) must
+        // wake the waiter with an error, mirroring channel disconnection.
+        let pool = SlabPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 2, 2));
+        let mut t = Ticket::from_completion(acc.completion(), None, metrics());
+        drop(acc);
+        assert_eq!(t.poll(), TicketState::Ready);
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+    }
+
+    fn slab_acc(rows: usize, d: usize, parts: usize) -> (Arc<RequestAcc>, Arc<Completion>) {
+        let pool = SlabPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, rows, d));
+        acc.arm(parts, Instant::now());
+        let done = acc.completion();
+        (acc, done)
+    }
+
+    #[test]
     fn request_acc_merges_parts_and_responds_once() {
         let m = metrics();
+        let (acc, done) = slab_acc(2, 2, 2);
+        acc.scatter(&[1], &[3.0, 4.0], 2);
+        acc.finish_part(&m);
+        assert!(done.try_take().is_none(), "must wait for all parts");
+        acc.scatter(&[0], &[1.0, 2.0], 2);
+        acc.finish_part(&m);
+        assert_eq!(done.try_take().unwrap().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.latency.count(), 1);
+    }
+
+    #[test]
+    fn request_acc_failure_propagates() {
+        let m = metrics();
+        let (acc, done) = slab_acc(1, 2, 2);
+        acc.fail_part(&m, "boom");
+        acc.finish_part(&m);
+        assert!(done.try_take().unwrap().is_err());
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn legacy_request_acc_merges_parts_and_responds_once() {
+        let m = metrics();
         let (tx, rx) = mpsc::sync_channel(1);
-        let acc = RequestAcc::new(4, 2, tx, Instant::now());
+        let acc = RequestAcc::new_legacy(4, 2, tx, Instant::now());
+        assert!(acc.is_legacy());
         acc.scatter(&[1], &[3.0, 4.0], 2);
         acc.finish_part(&m);
         assert!(rx.try_recv().is_err(), "must wait for all parts");
@@ -562,13 +950,27 @@ mod tests {
     }
 
     #[test]
-    fn request_acc_failure_propagates() {
+    fn legacy_request_acc_failure_propagates() {
         let m = metrics();
         let (tx, rx) = mpsc::sync_channel(1);
-        let acc = RequestAcc::new(2, 2, tx, Instant::now());
+        let acc = RequestAcc::new_legacy(2, 2, tx, Instant::now());
         acc.fail_part(&m, "boom");
         acc.finish_part(&m);
         assert!(rx.recv().unwrap().is_err());
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn write_row_is_the_single_copy() {
+        let m = metrics();
+        let (acc, done) = slab_acc(3, 2, 1);
+        acc.write_row(2, &[5.0, 6.0]);
+        acc.write_row(0, &[1.0, 2.0]);
+        acc.write_row(1, &[3.0, 4.0]);
+        acc.finish_part(&m);
+        assert_eq!(
+            done.try_take().unwrap().unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
     }
 }

@@ -27,7 +27,7 @@
 //! while new submissions route under the new one; a retired generation's
 //! backends drain and stop when the last ticket drops.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -38,8 +38,8 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::chunks::row_bytes_for_d;
 use crate::coordinator::cluster::{CardSpec, FleetPlan};
 use crate::coordinator::controlplane::{
-    capacity_imbalance, committed_delta, load_shares, ControlPlane, ControlPlaneConfig, Decision,
-    Lever,
+    capacity_imbalance, committed_delta_atomic, load_shares, rebaseline_atomic, ControlPlane,
+    ControlPlaneConfig, Decision, Lever,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::PlacementPolicy;
@@ -48,6 +48,8 @@ use crate::coordinator::table::{Table, TableView};
 
 use super::backend::{scatter_rows, Ticket, TicketState};
 use super::rebalance::{FleetRebalancer, RebalanceConfig};
+use super::ring::EpochGate;
+use super::scatter::SlabPool;
 use super::sim_backend::{SimBackend, SimBackendConfig, SimTiming};
 use super::Service;
 
@@ -73,6 +75,9 @@ pub struct FleetConfig {
     /// Wall-clock pacing of simulated device time, applied to every card
     /// backend (see `SimBackendConfig::sim_timescale`); 0 = unpaced.
     pub sim_timescale: f64,
+    /// Run every card on the pre-slab legacy request pipeline (the
+    /// `benches/serve_hotpath.rs --legacy-path` oracle).
+    pub legacy_path: bool,
 }
 
 impl Default for FleetConfig {
@@ -89,6 +94,7 @@ impl Default for FleetConfig {
             },
             epoch: None,
             sim_timescale: 0.0,
+            legacy_path: false,
         }
     }
 }
@@ -110,8 +116,13 @@ pub struct FleetTicket {
     parts: Vec<FleetPart>,
     request_len: usize,
     d: usize,
-    /// Keeps the submit-time generation's services alive until redemption.
-    _generation: Arc<FleetState>,
+    /// The submit-time generation: keeps its services alive until
+    /// redemption, and routes redeemed per-card slabs back to their
+    /// card's output pool.
+    generation: Arc<FleetState>,
+    /// Fleet-level pool the *merged* output buffer is drawn from
+    /// (returned via [`FleetService::recycle`]).
+    pool: Arc<SlabPool>,
 }
 
 impl FleetTicket {
@@ -136,13 +147,19 @@ impl FleetTicket {
     /// Redeem: wait for every card and merge rows into request order.
     pub fn wait(self) -> anyhow::Result<Vec<f32>> {
         let d = self.d;
-        let mut out = vec![0.0f32; self.request_len * d];
+        // Pooled (stale prefix contents possible): the card split covers
+        // every request position exactly once, so the scatters below
+        // overwrite the whole buffer before it surfaces.
+        let mut out = self.pool.get(self.request_len * d);
         for part in self.parts {
             let rows = part
                 .ticket
                 .wait()
                 .with_context(|| format!("card shard {}", part.shard))?;
             scatter_rows(&mut out, &part.positions, &rows, d);
+            // Return the card's slab to its pool: fleet steady state must
+            // be as allocation-free per card as the single-card path.
+            self.generation.cards[part.shard].recycle(rows);
         }
         Ok(out)
     }
@@ -166,6 +183,9 @@ struct FleetState {
 struct FleetCore {
     state: RwLock<Arc<FleetState>>,
     d: usize,
+    /// Pool for merged fleet outputs (cooperating callers return them via
+    /// [`FleetService::recycle`], mirroring the single-card path).
+    pool: Arc<SlabPool>,
     /// Zero-copy whole-table view (re-sliced per migration); `None` when
     /// the fleet was composed from external services — migration disabled.
     whole: Option<TableView>,
@@ -180,10 +200,13 @@ struct FleetCore {
     /// Serializes whole fleet epochs: the background thread and manual
     /// [`FleetService::control_epoch`] calls must not both migrate from
     /// the same stale state (two plans would claim the same generation).
-    gate: Mutex<()>,
+    /// An atomic spin gate — epochs are rare and never on the request
+    /// path.
+    gate: EpochGate,
     /// Per-card routed-row totals at the previous committed epoch
-    /// boundary, indexed by card id.
-    last_card_rows: Mutex<Vec<u64>>,
+    /// boundary, indexed by card id (atomics: epoch sampling takes no
+    /// lock).
+    last_card_rows: Vec<AtomicU64>,
     epoch_stop: AtomicBool,
     epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -199,7 +222,7 @@ impl FleetCore {
     /// [`Lever::Migrate`] — applies a rebalancer proposal.  Returns the
     /// new *fleet* generation when a migration published.
     fn epoch(&self) -> Option<u64> {
-        let _serialized = self.gate.lock().unwrap();
+        let _serialized = self.gate.lock();
         let state = self.current();
         let mut card_acted = false;
         for sim in state.sims.iter().flatten() {
@@ -220,10 +243,8 @@ impl FleetCore {
         for (shard, svc) in state.plan.shards.iter().zip(&state.cards) {
             totals[shard.card] = svc.metrics().rows;
         }
-        let delta = {
-            let mut last = self.last_card_rows.lock().unwrap();
-            committed_delta(&mut *last, &totals, self.rebalancer.cfg.min_epoch_rows)
-        };
+        let min_commit = self.rebalancer.cfg.min_epoch_rows;
+        let delta = committed_delta_atomic(&self.last_card_rows, &totals, min_commit);
 
         let imbalance = match load_shares(&delta) {
             None => 0.0,
@@ -354,7 +375,7 @@ impl FleetCore {
         for (shard, svc) in next.plan.shards.iter().zip(&next.cards) {
             totals[shard.card] = svc.metrics().rows;
         }
-        *self.last_card_rows.lock().unwrap() = totals;
+        rebaseline_atomic(&self.last_card_rows, &totals);
         Ok((generation, moved))
     }
 
@@ -388,6 +409,7 @@ fn start_card_backend(
     bcfg.adaptive = cfg.adaptive.clone();
     bcfg.resplit = cfg.resplit.clone();
     bcfg.sim_timescale = cfg.sim_timescale;
+    bcfg.legacy_path = cfg.legacy_path;
     Ok(Arc::new(SimBackend::start_with_placement(
         bcfg,
         &spec.map,
@@ -419,6 +441,7 @@ impl FleetService {
                     sims,
                 })),
                 d,
+                pool: SlabPool::new(),
                 whole: None,
                 specs: Vec::new(),
                 cfg: FleetConfig::default(),
@@ -428,8 +451,8 @@ impl FleetService {
                 }),
                 rebalancer: FleetRebalancer::default(),
                 metrics: Arc::new(Metrics::new()),
-                gate: Mutex::new(()),
-                last_card_rows: Mutex::new(Vec::new()),
+                gate: EpochGate::new(),
+                last_card_rows: Vec::new(),
                 epoch_stop: AtomicBool::new(false),
                 epoch_thread: Mutex::new(None),
             }),
@@ -536,14 +559,15 @@ impl FleetService {
                 sims,
             })),
             d,
+            pool: SlabPool::new(),
             whole: Some(whole),
             specs,
             rebalancer: FleetRebalancer::new(cfg.rebalance.clone()),
             plane: ControlPlane::new(plane_cfg),
             cfg,
             metrics: Arc::new(Metrics::new()),
-            gate: Mutex::new(()),
-            last_card_rows: Mutex::new(vec![0; n_cards]),
+            gate: EpochGate::new(),
+            last_card_rows: (0..n_cards).map(|_| AtomicU64::new(0)).collect(),
             epoch_stop: AtomicBool::new(false),
             epoch_thread: Mutex::new(None),
         });
@@ -648,13 +672,20 @@ impl FleetService {
             parts,
             request_len: rows.len(),
             d: self.core.d,
-            _generation: state,
+            generation: state,
+            pool: Arc::clone(&self.core.pool),
         })
     }
 
     /// Blocking convenience: submit + merge.
     pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
         self.submit(rows, None)?.wait()
+    }
+
+    /// Return a redeemed merged buffer's capacity to the fleet's output
+    /// pool (optional, like `Service::recycle`).
+    pub fn recycle(&self, buf: Vec<f32>) {
+        self.core.pool.put(buf);
     }
 
     /// Per-card metric snapshots of the current generation as

@@ -63,6 +63,8 @@
 pub mod backend;
 pub mod fleet;
 pub mod rebalance;
+pub(crate) mod ring;
+pub(crate) mod scatter;
 pub mod session;
 pub mod sim_backend;
 
@@ -112,6 +114,14 @@ impl Service {
     /// Blocking convenience: submit + wait.
     pub fn lookup(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Vec<f32>> {
         self.submit(rows, None)?.wait()
+    }
+
+    /// Return a redeemed result buffer's capacity to the backend's output
+    /// slab pool.  Optional: cooperating callers (bench harnesses, the
+    /// open-loop driver) make the steady-state output path allocation-free;
+    /// dropping the `Vec` instead is always correct.
+    pub fn recycle(&self, buf: Vec<f32>) {
+        self.backend.recycle(buf);
     }
 
     /// Mint a per-tenant session with its own admission budget.

@@ -1,0 +1,655 @@
+//! Lock-light primitives for the serving hot path: a bounded SPSC work
+//! ring, a one-shot park/unpark completion cell, and a spin epoch gate.
+//!
+//! All three are vendored-deps-only (std atomics + `thread::park`): the
+//! build runs with no network registry, so `crossbeam`-style queues are
+//! reimplemented at the small sizes this crate actually needs.
+//!
+//! * [`spsc`] — a single-producer single-consumer ring replacing the
+//!   per-worker `mpsc::Sender<WorkerMsg>`: one dispatcher thread feeds one
+//!   worker thread, so the general MPMC machinery (and its allocation per
+//!   send) is pure overhead.  Push/pop are a slot write plus one
+//!   release-store; blocking uses `park_timeout` with a Dekker-style
+//!   sleeping flag (the timeout bounds the lost-wakeup window, the flag
+//!   makes it rare).
+//! * [`Completion`] — a one-shot result cell replacing the per-ticket
+//!   `mpsc::sync_channel(1)`: the last sub-batch's atomic countdown
+//!   publishes the result and unparks the waiter; redeeming a ticket costs
+//!   no channel, no queue, no allocation.
+//! * [`EpochGate`] — an atomic-flag mutual-exclusion gate for control-plane
+//!   epochs (rare, never on the request path), replacing a `Mutex<()>`.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::thread::Thread;
+use std::time::{Duration, Instant};
+
+/// Backstop for the park handshake: a lost wakeup costs at most this much
+/// latency.  The SeqCst sleeping-flag protocol (set flag → re-check →
+/// park, peer checks the flag after every state change) already makes the
+/// unpark reliable, so this is belt-and-braces only — long enough that an
+/// *idle* worker costs ~10 timer wakeups/s, not a kilohertz poll.
+const PARK_BACKSTOP: Duration = Duration::from_millis(100);
+
+// ---------------------------------------------------------------------------
+// Bounded SPSC ring.
+// ---------------------------------------------------------------------------
+
+struct RingInner<T> {
+    /// Power-of-two slot array; slot `i & mask` holds sequence number `i`.
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next sequence the producer writes (monotonic, wraps via `mask`).
+    tail: AtomicUsize,
+    /// Next sequence the consumer reads.
+    head: AtomicUsize,
+    closed: AtomicBool,
+    /// Set by the (single) producer around each push attempt: the
+    /// consumer's drop-drain spins until no push is mid-flight, so a push
+    /// that raced past the close check can never strand an item.
+    pushing: AtomicBool,
+    /// Dekker flags: each side sets its flag, re-checks the queue, then
+    /// parks; the peer checks the flag after every state change.
+    cons_sleeping: AtomicBool,
+    prod_sleeping: AtomicBool,
+    /// Registered lazily on first blocking call from each side.
+    cons_thread: OnceLock<Thread>,
+    prod_thread: OnceLock<Thread>,
+}
+
+// The slots are only touched under the head/tail handoff protocol: each
+// slot is written by exactly one side at a time.
+unsafe impl<T: Send> Send for RingInner<T> {}
+unsafe impl<T: Send> Sync for RingInner<T> {}
+
+impl<T> RingInner<T> {
+    fn wake_consumer(&self) {
+        if self.cons_sleeping.load(Ordering::SeqCst) {
+            if let Some(t) = self.cons_thread.get() {
+                t.unpark();
+            }
+        }
+    }
+
+    fn wake_producer(&self) {
+        if self.prod_sleeping.load(Ordering::SeqCst) {
+            if let Some(t) = self.prod_thread.get() {
+                t.unpark();
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        if let Some(t) = self.cons_thread.get() {
+            t.unpark();
+        }
+        if let Some(t) = self.prod_thread.get() {
+            t.unpark();
+        }
+    }
+}
+
+impl<T> Drop for RingInner<T> {
+    fn drop(&mut self) {
+        // Both handles are gone: drain the undelivered items so their
+        // payloads drop (e.g. a Job's accumulator resolves its ticket).
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        for seq in head..tail {
+            unsafe {
+                (*self.slots[seq & self.mask].get()).assume_init_drop();
+            }
+        }
+    }
+}
+
+/// Why a send did not complete.
+#[derive(Debug)]
+pub(crate) enum SendError<T> {
+    /// The consumer side is gone (or the ring was closed).
+    Closed(T),
+    /// Non-blocking send found the ring full.
+    Full(T),
+}
+
+impl<T> SendError<T> {
+    pub(crate) fn into_inner(self) -> T {
+        match self {
+            SendError::Closed(v) | SendError::Full(v) => v,
+        }
+    }
+}
+
+/// Producer half (single thread).  Dropping it closes the ring.
+///
+/// `!Sync` (but `Send`): the slot-write protocol is only race-free with
+/// one producing thread, so the type system forbids sharing a `&Producer`
+/// across threads rather than leaving SPSC as a comment-level contract.
+pub(crate) struct Producer<T> {
+    inner: Arc<RingInner<T>>,
+    _single: std::marker::PhantomData<std::cell::Cell<()>>,
+}
+
+/// Consumer half (single thread, `!Sync` like [`Producer`]).  Dropping it
+/// closes the ring and fails queued items immediately.
+pub(crate) struct Consumer<T> {
+    inner: Arc<RingInner<T>>,
+    _single: std::marker::PhantomData<std::cell::Cell<()>>,
+}
+
+/// Create a bounded SPSC ring with capacity `cap` (rounded up to a power
+/// of two, minimum 2).
+pub(crate) fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = cap.max(2).next_power_of_two();
+    let slots = (0..cap)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect::<Vec<_>>()
+        .into_boxed_slice();
+    let inner = Arc::new(RingInner {
+        slots,
+        mask: cap - 1,
+        tail: AtomicUsize::new(0),
+        head: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+        pushing: AtomicBool::new(false),
+        cons_sleeping: AtomicBool::new(false),
+        prod_sleeping: AtomicBool::new(false),
+        cons_thread: OnceLock::new(),
+        prod_thread: OnceLock::new(),
+    });
+    (
+        Producer {
+            inner: Arc::clone(&inner),
+            _single: std::marker::PhantomData,
+        },
+        Consumer {
+            inner,
+            _single: std::marker::PhantomData,
+        },
+    )
+}
+
+impl<T: Send> Producer<T> {
+    /// Non-blocking push.
+    pub(crate) fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        let inner = &self.inner;
+        // Bracket the closed-check → publish window so the consumer's
+        // drop-drain can wait out a racing push instead of missing it.
+        inner.pushing.store(true, Ordering::SeqCst);
+        let result = self.try_send_inner(v);
+        inner.pushing.store(false, Ordering::SeqCst);
+        result
+    }
+
+    fn try_send_inner(&self, v: T) -> Result<(), SendError<T>> {
+        let inner = &self.inner;
+        if inner.closed.load(Ordering::SeqCst) {
+            return Err(SendError::Closed(v));
+        }
+        let tail = inner.tail.load(Ordering::Relaxed);
+        let head = inner.head.load(Ordering::SeqCst);
+        if tail.wrapping_sub(head) > inner.mask {
+            return Err(SendError::Full(v));
+        }
+        unsafe {
+            (*inner.slots[tail & inner.mask].get()).write(v);
+        }
+        inner.tail.store(tail.wrapping_add(1), Ordering::SeqCst);
+        inner.wake_consumer();
+        Ok(())
+    }
+
+    /// Blocking push: parks while the ring is full; fails only when the
+    /// ring is closed (consumer gone or explicit close).
+    pub(crate) fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut v = v;
+        loop {
+            match self.try_send(v) {
+                Ok(()) => return Ok(()),
+                Err(SendError::Closed(x)) => return Err(SendError::Closed(x)),
+                Err(SendError::Full(x)) => v = x,
+            }
+            let inner = &self.inner;
+            inner.prod_thread.get_or_init(std::thread::current);
+            inner.prod_sleeping.store(true, Ordering::SeqCst);
+            // Re-check after publishing the flag (Dekker): a pop or close
+            // that raced the store will see the flag and unpark us — or we
+            // see its effect here and skip parking.
+            let tail = inner.tail.load(Ordering::Relaxed);
+            let head = inner.head.load(Ordering::SeqCst);
+            if tail.wrapping_sub(head) <= inner.mask || inner.closed.load(Ordering::SeqCst) {
+                inner.prod_sleeping.store(false, Ordering::SeqCst);
+                continue;
+            }
+            std::thread::park_timeout(PARK_BACKSTOP);
+            inner.prod_sleeping.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Close the ring: the consumer drains what is queued, then sees end
+    /// of stream.
+    pub(crate) fn close(&self) {
+        self.inner.close();
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.inner.close();
+    }
+}
+
+impl<T> RingInner<T> {
+    /// Consumer-side pop (callable only from the consumer handle — single
+    /// consumer is the ring's contract).
+    fn pop_one(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        // SeqCst pairs with the close flag: a drain attempt after
+        // observing `closed` must see every push sequenced before it.
+        let tail = self.tail.load(Ordering::SeqCst);
+        if head == tail {
+            return None;
+        }
+        let v = unsafe { (*self.slots[head & self.mask].get()).assume_init_read() };
+        self.head.store(head.wrapping_add(1), Ordering::SeqCst);
+        self.wake_producer();
+        Some(v)
+    }
+}
+
+impl<T: Send> Consumer<T> {
+    /// Non-blocking pop.  `None` means "currently empty" (closed or not).
+    pub(crate) fn try_recv(&self) -> Option<T> {
+        self.inner.pop_one()
+    }
+
+    /// Blocking pop: parks while empty; `None` once the ring is closed
+    /// *and* drained (mirrors `mpsc::Receiver::recv`'s end of stream).
+    pub(crate) fn recv(&self) -> Option<T> {
+        loop {
+            if let Some(v) = self.try_recv() {
+                return Some(v);
+            }
+            let inner = &self.inner;
+            if inner.closed.load(Ordering::SeqCst) {
+                // Drain-after-close: one more pop attempt so items pushed
+                // before the close are never lost.
+                return self.try_recv();
+            }
+            inner.cons_thread.get_or_init(std::thread::current);
+            inner.cons_sleeping.store(true, Ordering::SeqCst);
+            let head = inner.head.load(Ordering::Relaxed);
+            let tail = inner.tail.load(Ordering::SeqCst);
+            if head != tail || inner.closed.load(Ordering::SeqCst) {
+                inner.cons_sleeping.store(false, Ordering::SeqCst);
+                continue;
+            }
+            std::thread::park_timeout(PARK_BACKSTOP);
+            inner.cons_sleeping.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        // Close first (so new pushes fail), then drain what is queued:
+        // a worker that dies must fail its pending jobs *now* — dropping
+        // a Job resolves its ticket with an error — not at pipeline
+        // teardown, or a deadline-less waiter would park until shutdown.
+        // A push that raced past the close check holds `pushing`, so
+        // spin the drain until no push is mid-flight and the ring stays
+        // empty (`RingInner::drop` remains the final backstop).
+        self.inner.close();
+        loop {
+            while self.inner.pop_one().is_some() {}
+            if !self.inner.pushing.load(Ordering::SeqCst) {
+                // Publish happens before `pushing` clears, so an empty
+                // ring with no in-flight push is final.
+                if self.inner.pop_one().is_none() {
+                    break;
+                }
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One-shot completion cell.
+// ---------------------------------------------------------------------------
+
+const PENDING: u8 = 0;
+const WAITING: u8 = 1;
+const READY: u8 = 2;
+
+/// One request's completion: the last worker publishes the result with one
+/// release-store and (only if the waiter is parked) one unpark — no
+/// channel, no allocation, no mutex.  Exactly one completer wins
+/// ([`Completion::complete`] is first-caller-takes-it) and exactly one
+/// waiter may block (the `Ticket` is an owned handle).
+pub(crate) struct Completion {
+    state: AtomicU8,
+    /// Gate so a defensive double-complete (e.g. accumulator drop after a
+    /// normal completion) never races the result cell.
+    claimed: AtomicBool,
+    result: UnsafeCell<Option<anyhow::Result<Vec<f32>>>>,
+    /// Written by the (single) waiter before it CASes `state` to WAITING;
+    /// read by the completer only after observing WAITING.
+    waiter: UnsafeCell<Option<Thread>>,
+}
+
+unsafe impl Send for Completion {}
+unsafe impl Sync for Completion {}
+
+impl Default for Completion {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Completion {
+    pub(crate) fn new() -> Self {
+        Self {
+            state: AtomicU8::new(PENDING),
+            claimed: AtomicBool::new(false),
+            result: UnsafeCell::new(None),
+            waiter: UnsafeCell::new(None),
+        }
+    }
+
+    /// Has a completer already claimed this cell?  (It may still be
+    /// mid-publish; use [`Completion::try_take`] to observe the result.)
+    pub(crate) fn is_claimed(&self) -> bool {
+        self.claimed.load(Ordering::Acquire)
+    }
+
+    /// Publish the result and wake the waiter.  The first caller wins;
+    /// later calls drop their result silently.
+    pub(crate) fn complete(&self, result: anyhow::Result<Vec<f32>>) {
+        if self
+            .claimed
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return;
+        }
+        unsafe {
+            *self.result.get() = Some(result);
+        }
+        let prev = self.state.swap(READY, Ordering::AcqRel);
+        if prev == WAITING {
+            // The waiter registered its handle before CASing to WAITING;
+            // the swap above synchronizes with that CAS.
+            if let Some(t) = unsafe { (*self.waiter.get()).take() } {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Non-blocking: take the result if it has been published.  Single
+    /// consumer (the owning ticket).
+    pub(crate) fn try_take(&self) -> Option<anyhow::Result<Vec<f32>>> {
+        if self.state.load(Ordering::Acquire) == READY {
+            unsafe { (*self.result.get()).take() }
+        } else {
+            None
+        }
+    }
+
+    /// Block until the result is published or `deadline` passes.
+    /// `Err(())` is the deadline; a result that arrives first always wins.
+    pub(crate) fn wait(&self, deadline: Option<Instant>) -> Result<anyhow::Result<Vec<f32>>, ()> {
+        let mut registered = false;
+        loop {
+            if let Some(r) = self.try_take() {
+                return Ok(r);
+            }
+            let now = Instant::now();
+            // 50 ms backstop: the unpark arrives immediately in practice;
+            // the timeout only bounds a lost wakeup.
+            let timeout = match deadline {
+                Some(d) if d <= now => return Err(()),
+                Some(d) => (d - now).min(Duration::from_millis(50)),
+                None => Duration::from_millis(50),
+            };
+            if !registered {
+                unsafe {
+                    *self.waiter.get() = Some(std::thread::current());
+                }
+                match self.state.compare_exchange(
+                    PENDING,
+                    WAITING,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => registered = true,
+                    // READY slipped in: consume on the next loop pass.
+                    Err(_) => continue,
+                }
+            }
+            std::thread::park_timeout(timeout);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epoch gate.
+// ---------------------------------------------------------------------------
+
+/// Atomic-flag mutual exclusion for control-plane epochs.  Epochs are
+/// rare (timer ticks and health transitions, never the request path), so
+/// an atomic gate is cheaper than a mutex and keeps the serving structs
+/// free of poisoning.  An epoch can be *long* (a fleet migration rebuilds
+/// card backends), so contenders back off to short sleeps after a few
+/// yields rather than busy-spinning a core for the whole rebuild.
+#[derive(Debug, Default)]
+pub(crate) struct EpochGate(AtomicBool);
+
+pub(crate) struct EpochGuard<'a>(&'a AtomicBool);
+
+impl EpochGate {
+    pub(crate) fn new() -> Self {
+        Self(AtomicBool::new(false))
+    }
+
+    /// Acquire the gate: a few yields, then sleep-backoff until free.
+    pub(crate) fn lock(&self) -> EpochGuard<'_> {
+        let mut attempts = 0u32;
+        while self
+            .0
+            .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            attempts += 1;
+            if attempts < 16 {
+                std::thread::yield_now();
+            } else {
+                // Epochs can be seconds-long (a fleet migration rebuilds
+                // card backends): back off to a coarse sleep so the rare
+                // contender (timer thread vs. a manual epoch) costs a few
+                // hundred wakeups/s, not a spinning core.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        EpochGuard(&self.0)
+    }
+}
+
+impl Drop for EpochGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = spsc::<u32>(4);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(rx.try_recv(), Some(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.try_recv(), Some(3));
+        assert!(rx.try_recv().is_none());
+    }
+
+    #[test]
+    fn full_ring_rejects_then_accepts() {
+        let (tx, rx) = spsc::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(SendError::Full(3))));
+        assert_eq!(rx.try_recv(), Some(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.try_recv(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let (tx, rx) = spsc::<u32>(8);
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        tx.close();
+        assert!(matches!(tx.try_send(9), Err(SendError::Closed(9))));
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), Some(8));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn consumer_drop_closes_producer() {
+        let (tx, rx) = spsc::<u32>(2);
+        drop(rx);
+        assert!(matches!(tx.send(1), Err(SendError::Closed(1))));
+    }
+
+    #[test]
+    fn consumer_drop_fails_queued_items_immediately() {
+        // A dead worker must resolve its queued jobs' tickets now, not at
+        // pipeline teardown: the consumer drop alone reclaims the queue.
+        let item = Arc::new(());
+        let (tx, rx) = spsc::<Arc<()>>(4);
+        tx.try_send(Arc::clone(&item)).unwrap();
+        drop(rx);
+        assert_eq!(Arc::strong_count(&item), 1, "queued item must drop with rx");
+        drop(tx);
+    }
+
+    #[test]
+    fn dropped_ring_drops_undelivered_items() {
+        let item = Arc::new(());
+        let (tx, rx) = spsc::<Arc<()>>(4);
+        tx.try_send(Arc::clone(&item)).unwrap();
+        tx.try_send(Arc::clone(&item)).unwrap();
+        drop(tx);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&item), 1, "ring must drop queued items");
+    }
+
+    /// Loom-style seeded interleaving test: a producer and consumer run
+    /// concurrently with pseudo-random yield/sleep points drawn from a
+    /// seeded RNG, across several seeds, and the consumer must observe
+    /// exactly the produced sequence in order (blocking on both full and
+    /// empty along the way — the ring is much smaller than the stream).
+    #[test]
+    fn seeded_interleavings_preserve_fifo_and_lose_nothing() {
+        for seed in 0..8u64 {
+            let (tx, rx) = spsc::<u64>(4);
+            let n: u64 = 2_000;
+            let producer = std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(seed);
+                for i in 0..n {
+                    if rng.gen_bool(0.05) {
+                        std::thread::yield_now();
+                    }
+                    if rng.gen_bool(0.002) {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                    tx.send(i).unwrap();
+                }
+                tx.close();
+            });
+            let mut rng = Rng::seed_from_u64(seed ^ 0xDEAD);
+            let mut expect = 0u64;
+            while let Some(v) = rx.recv() {
+                assert_eq!(v, expect, "seed {seed}: out of order or lost");
+                expect += 1;
+                if rng.gen_bool(0.05) {
+                    std::thread::yield_now();
+                }
+                if rng.gen_bool(0.002) {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            assert_eq!(expect, n, "seed {seed}: stream ended early");
+            producer.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn completion_immediate_and_waited() {
+        let c = Completion::new();
+        assert!(c.try_take().is_none());
+        c.complete(Ok(vec![1.0]));
+        assert_eq!(c.try_take().unwrap().unwrap(), vec![1.0]);
+        // Double-complete: first writer won; the cell is now consumed.
+        c.complete(Ok(vec![2.0]));
+        assert!(c.try_take().is_none());
+    }
+
+    #[test]
+    fn completion_wakes_parked_waiter() {
+        let c = Arc::new(Completion::new());
+        let c2 = Arc::clone(&c);
+        let t = std::thread::spawn(move || c2.wait(None).unwrap().unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        c.complete(Ok(vec![3.0, 4.0]));
+        assert_eq!(t.join().unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn completion_deadline_expires_but_result_wins_races() {
+        let c = Completion::new();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        assert!(c.wait(Some(deadline)).is_err(), "no result: must expire");
+        // A result that arrived first always wins, even past the deadline.
+        let c = Completion::new();
+        c.complete(Ok(vec![9.0]));
+        let past = Instant::now() - Duration::from_millis(1);
+        assert_eq!(c.wait(Some(past)).unwrap().unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn epoch_gate_mutual_exclusion() {
+        let gate = Arc::new(EpochGate::new());
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let gate = Arc::clone(&gate);
+            let counter = Arc::clone(&counter);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    let _g = gate.lock();
+                    // Non-atomic-looking increment under the gate: racy
+                    // unless the gate excludes.
+                    let v = counter.load(Ordering::Relaxed);
+                    counter.store(v + 1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 4_000);
+    }
+}

@@ -1,0 +1,301 @@
+//! Slab output buffers with single-copy scatter.
+//!
+//! The serving data path used to pay two copies per row — worker gathers
+//! into a fresh `Vec<f32>`, then copies again into a `Mutex<Vec<f32>>`
+//! request accumulator.  [`ScatterBuf`] removes both: workers write each
+//! gathered row *directly* into the request's output buffer at its final
+//! position, with no lock, because the router guarantees the positions of
+//! different sub-batches are disjoint (every request position lands in
+//! exactly one sub-batch — the same invariant the ordered-merge property
+//! test pins).  That makes concurrent `write_row` calls from different
+//! workers race-free by construction; debug builds additionally claim each
+//! position in an atomic bitmap and panic on any alias.
+//!
+//! Buffers come from a [`SlabPool`] and retain their capacity: a caller
+//! that returns finished results via `Service::recycle` makes the
+//! steady-state output path allocation-free (EXPERIMENTS.md §Perf L4).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Pooled, capacity-retaining `Vec<f32>` slabs for request outputs.
+///
+/// The pool itself is a mutexed free list, touched once per *request*
+/// (get on submit, put on recycle/failure) — never per sub-batch.
+#[derive(Debug, Default)]
+pub(crate) struct SlabPool {
+    /// Free list plus its total retained capacity in floats (both bounds
+    /// checked on put).
+    bufs: Mutex<(Vec<Vec<f32>>, usize)>,
+}
+
+/// Free-list count bound: beyond this the put is dropped (the allocator
+/// takes the slab back).  Sized to comfortably cover the default
+/// admission budgets.
+const MAX_POOLED: usize = 256;
+
+/// Free-list *byte* bound (in f32 elements, 64 MiB): a burst of huge
+/// requests must not pin count × largest-request memory for the life of
+/// the backend.
+const MAX_POOLED_FLOATS: usize = 16 << 20;
+
+impl SlabPool {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// A buffer of exactly `len` elements.  Reuses a pooled slab's
+    /// capacity when one is available; a reused slab keeps its previous
+    /// request's prefix contents (shrinking truncates for free, growing
+    /// zero-fills only the delta beyond the old length).  Stale data is
+    /// unobservable because [`ScatterBuf`]'s contract is that the writers
+    /// cover every position before the buffer surfaces — the disjointness
+    /// property test pins exactly that.
+    pub(crate) fn get(&self, len: usize) -> Vec<f32> {
+        let mut buf = {
+            let mut pool = self.bufs.lock().unwrap();
+            match pool.0.pop() {
+                Some(b) => {
+                    pool.1 -= b.capacity();
+                    b
+                }
+                None => Vec::new(),
+            }
+        };
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer's capacity to the pool.
+    pub(crate) fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.bufs.lock().unwrap();
+        if pool.0.len() < MAX_POOLED && pool.1 + buf.capacity() <= MAX_POOLED_FLOATS {
+            pool.1 += buf.capacity();
+            pool.0.push(buf);
+        }
+    }
+
+    #[cfg(test)]
+    fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap().0.len()
+    }
+}
+
+/// One request's output buffer, written in place by the workers.
+///
+/// Safety model: the buffer is logically partitioned into `rows` slots of
+/// `d` floats.  [`ScatterBuf::write_row`] writes one slot; the router
+/// invariant (each request position appears in exactly one sub-batch,
+/// exactly once) means no two writes — from any threads — touch the same
+/// slot, so plain raw-pointer copies are race-free.  The release/acquire
+/// chain of the request's sub-batch countdown orders every write before
+/// the final [`ScatterBuf::take`].  Debug builds verify the invariant at
+/// runtime with an atomic claim per slot.
+pub(crate) struct ScatterBuf {
+    data: UnsafeCell<Vec<f32>>,
+    /// Total floats (= rows * d).
+    len: usize,
+    /// Floats per row slot.
+    d: usize,
+    taken: AtomicBool,
+    pool: Arc<SlabPool>,
+    #[cfg(debug_assertions)]
+    claimed: Box<[AtomicBool]>,
+}
+
+unsafe impl Send for ScatterBuf {}
+unsafe impl Sync for ScatterBuf {}
+
+impl ScatterBuf {
+    /// Take a `rows * d` buffer from the pool.
+    pub(crate) fn new(pool: &Arc<SlabPool>, rows: usize, d: usize) -> Self {
+        assert!(d > 0, "row width must be positive");
+        let len = rows * d;
+        Self {
+            data: UnsafeCell::new(pool.get(len)),
+            len,
+            d,
+            taken: AtomicBool::new(false),
+            pool: Arc::clone(pool),
+            #[cfg(debug_assertions)]
+            claimed: (0..rows).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    /// Write one row (`d` floats) into its final position.  Callable
+    /// concurrently from many workers for *distinct* positions; aliased
+    /// positions are a router-invariant violation (panics in debug).
+    #[inline]
+    pub(crate) fn write_row(&self, pos: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row width mismatch");
+        let start = pos * self.d;
+        assert!(start + self.d <= self.len, "position {pos} out of buffer");
+        #[cfg(debug_assertions)]
+        {
+            let prev = self.claimed[pos].swap(true, Ordering::AcqRel);
+            assert!(!prev, "position {pos} written twice: sub-batch views alias");
+        }
+        unsafe {
+            let base = (*self.data.get()).as_mut_ptr();
+            std::ptr::copy_nonoverlapping(row.as_ptr(), base.add(start), self.d);
+        }
+    }
+
+    /// Scatter a sub-batch: `rows[k]` (each `d` wide) lands at
+    /// `positions[k]`.
+    pub(crate) fn scatter(&self, positions: &[u32], rows: &[f32]) {
+        debug_assert_eq!(rows.len(), positions.len() * self.d);
+        for (k, &pos) in positions.iter().enumerate() {
+            self.write_row(pos as usize, &rows[k * self.d..(k + 1) * self.d]);
+        }
+    }
+
+    /// Move the filled buffer out (last-finisher only: the request's
+    /// sub-batch countdown guarantees a unique caller, after all writes).
+    pub(crate) fn take(&self) -> Vec<f32> {
+        let prev = self.taken.swap(true, Ordering::AcqRel);
+        assert!(!prev, "ScatterBuf taken twice");
+        unsafe { std::mem::take(&mut *self.data.get()) }
+    }
+
+    /// Return the buffer to the pool without surfacing it (failure path).
+    pub(crate) fn discard(&self) {
+        if !self.taken.swap(true, Ordering::AcqRel) {
+            let buf = unsafe { std::mem::take(&mut *self.data.get()) };
+            self.pool.put(buf);
+        }
+    }
+}
+
+impl Drop for ScatterBuf {
+    fn drop(&mut self) {
+        // An un-taken buffer (request abandoned before completion) keeps
+        // its capacity in the pool rather than hitting the allocator.
+        if !*self.taken.get_mut() {
+            self.pool.put(std::mem::take(self.data.get_mut()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::{Placement, PlacementPolicy};
+    use crate::coordinator::{Router, WindowPlan};
+    use crate::probe::TopologyMap;
+    use crate::util::prop;
+
+    #[test]
+    fn pool_retains_capacity() {
+        let pool = SlabPool::new();
+        let buf = pool.get(128);
+        assert_eq!(buf.len(), 128);
+        pool.put(buf);
+        assert_eq!(pool.pooled(), 1);
+        let again = pool.get(64);
+        assert_eq!(again.len(), 64);
+        assert!(again.capacity() >= 128, "capacity must be retained");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_bounds_retained_capacity_bytes() {
+        let pool = SlabPool::new();
+        // with_capacity: reserves address space without touching pages.
+        pool.put(Vec::with_capacity(MAX_POOLED_FLOATS));
+        assert_eq!(pool.pooled(), 1);
+        pool.put(Vec::with_capacity(64));
+        assert_eq!(pool.pooled(), 1, "byte budget exhausted: put must drop");
+        let b = pool.get(16);
+        assert!(b.capacity() >= MAX_POOLED_FLOATS);
+        pool.put(Vec::with_capacity(64));
+        assert_eq!(pool.pooled(), 1, "budget freed by get: small put accepted");
+    }
+
+    #[test]
+    fn write_rows_land_at_positions() {
+        let pool = SlabPool::new();
+        let buf = ScatterBuf::new(&pool, 3, 2);
+        buf.write_row(2, &[5.0, 6.0]);
+        buf.write_row(0, &[1.0, 2.0]);
+        buf.scatter(&[1], &[3.0, 4.0]);
+        assert_eq!(buf.take(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "written twice")]
+    fn aliased_position_panics_in_debug() {
+        let pool = SlabPool::new();
+        let buf = ScatterBuf::new(&pool, 2, 1);
+        buf.write_row(1, &[1.0]);
+        buf.write_row(1, &[2.0]);
+    }
+
+    #[test]
+    fn dropped_buffer_returns_to_pool() {
+        let pool = SlabPool::new();
+        drop(ScatterBuf::new(&pool, 8, 4));
+        assert_eq!(pool.pooled(), 1);
+        let b = ScatterBuf::new(&pool, 8, 4);
+        b.discard();
+        drop(b);
+        assert_eq!(pool.pooled(), 1, "discard + drop must not double-pool");
+    }
+
+    /// The tentpole safety property, mirroring the router's split/merge
+    /// property test: for random requests split under a random plan, the
+    /// per-sub-batch views (a) never alias — each position is written at
+    /// most once, which the debug claim map enforces — and (b) cover the
+    /// request exactly, which writing identity payloads and checking every
+    /// output slot proves.  Sub-batches are scattered from separate
+    /// threads so the concurrent-writer contract is exercised, not just
+    /// stated.
+    #[test]
+    fn property_disjoint_views_cover_exactly_and_never_alias() {
+        let map = TopologyMap {
+            groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+            reach_bytes: 1 << 30,
+            solo_gbps: vec![100.0; 4],
+            independent: true,
+            card_id: "t".into(),
+        };
+        prop::check("scatterbuf-disjoint-cover", 40, |g| {
+            let windows = g.usize(1, 4);
+            let total_rows = 8_192u64;
+            let plan = WindowPlan::split(total_rows, 128, windows);
+            let placement =
+                Placement::build(PlacementPolicy::GroupToChunk, &map, &plan, 0).unwrap();
+            let mut router = Router::new();
+            let len = g.usize(1, 400);
+            let rows: Vec<u64> = (0..len).map(|_| g.u64(0, total_rows - 1)).collect();
+            let split = router.split(&rows, &plan, &placement);
+
+            let d = 2usize;
+            let pool = SlabPool::new();
+            let buf = ScatterBuf::new(&pool, len, d);
+            std::thread::scope(|s| {
+                for sb in &split.sub_batches {
+                    let w = plan.windows()[sb.window];
+                    let buf = &buf;
+                    s.spawn(move || {
+                        for (k, &local) in sb.local_rows.iter().enumerate() {
+                            let v = (w.start_row + local as u64) as f32;
+                            buf.write_row(sb.positions[k] as usize, &[v, v]);
+                        }
+                    });
+                }
+            });
+            let out = buf.take();
+            assert_eq!(out.len(), len * d);
+            for (i, &row) in rows.iter().enumerate() {
+                assert_eq!(out[i * d], row as f32, "position {i} not covered");
+                assert_eq!(out[i * d + 1], row as f32);
+            }
+        });
+    }
+}

@@ -20,7 +20,7 @@
 //! cannot be reclaimed), and un-reserved slack is first-come.  A noisy
 //! neighbor can exhaust the slack but never a quiet tenant's reservation.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -30,6 +30,72 @@ use crate::coordinator::metrics::Metrics;
 
 use super::backend::Ticket;
 use super::Service;
+
+/// Condvar backstop so a lost wakeup costs bounded latency, never a hang
+/// (the waiter-count handshake makes it rare).
+const WAIT_BACKSTOP: Duration = Duration::from_millis(50);
+
+/// The one parked blocking-acquire protocol both budget layers share:
+/// register as a waiter, re-try (closing the race with a release that ran
+/// between the caller's failed fast path and the registration), then wait
+/// with the timeout backstop.  Pair with [`wake_parked`] on release.
+fn acquire_parked<T>(
+    waiters: &AtomicUsize,
+    wait_lock: &Mutex<()>,
+    freed: &Condvar,
+    mut try_acquire: impl FnMut() -> Option<T>,
+) -> (T, bool) {
+    if let Some(g) = try_acquire() {
+        return (g, false);
+    }
+    waiters.fetch_add(1, Ordering::SeqCst);
+    let mut guard = wait_lock.lock().unwrap();
+    loop {
+        if let Some(g) = try_acquire() {
+            waiters.fetch_sub(1, Ordering::SeqCst);
+            return (g, true);
+        }
+        let (g, _timeout) = freed.wait_timeout(guard, WAIT_BACKSTOP).unwrap();
+        guard = g;
+    }
+}
+
+/// Release-side half of [`acquire_parked`]: notify only when someone is
+/// actually registered, so the uncontended release never locks.  `all`
+/// selects the wake breadth: per-session [`Slots`] waiters all share one
+/// predicate, so a single freed slot wakes one of them; the global budget
+/// wakes everyone because its waiters' predicates differ per tenant (the
+/// freed slot may be admissible to any of them).
+fn wake_parked(waiters: &AtomicUsize, wait_lock: &Mutex<()>, freed: &Condvar, all: bool) {
+    if waiters.load(Ordering::SeqCst) > 0 {
+        let _g = wait_lock.lock().unwrap();
+        if all {
+            freed.notify_all();
+        } else {
+            freed.notify_one();
+        }
+    }
+}
+
+/// Increment `gauge` only while it stays below `limit` (CAS loop).
+///
+/// Unlike fetch_add-then-undo, a *failed* attempt never perturbs the
+/// gauge — so one tenant hammering a full budget can never transiently
+/// inflate a shared counter and spuriously reject another tenant that is
+/// within its own bound.  The admission invariants stay exact, not
+/// statistical, without a lock.
+fn try_bump(gauge: &AtomicUsize, limit: usize) -> bool {
+    let mut cur = gauge.load(Ordering::Acquire);
+    loop {
+        if cur >= limit {
+            return false;
+        }
+        match gauge.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
 
 /// What to do with a submission beyond the in-flight budget.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,10 +134,17 @@ pub struct SessionStats {
 }
 
 /// The in-flight gauge: a counting semaphore with RAII release.
+///
+/// The fast path — an under-budget tenant acquiring or releasing a slot —
+/// is a single atomic add/sub, no mutex.  The mutex + condvar pair exists
+/// only for [`OverloadPolicy::Queue`] waiters, and the release side locks
+/// it only when the waiter counter says someone is actually parked.
 #[derive(Debug)]
 pub(crate) struct Slots {
     cap: usize,
-    used: Mutex<usize>,
+    used: AtomicUsize,
+    waiters: AtomicUsize,
+    wait_lock: Mutex<()>,
     freed: Condvar,
 }
 
@@ -79,41 +152,39 @@ impl Slots {
     fn new(cap: usize) -> Arc<Self> {
         Arc::new(Self {
             cap,
-            used: Mutex::new(0),
+            used: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            wait_lock: Mutex::new(()),
             freed: Condvar::new(),
         })
     }
 
+    /// Lock-free acquire: a bounded CAS increment, so `used` is always an
+    /// exact occupancy count (failed attempts leave no trace).
     fn try_acquire(slots: &Arc<Self>) -> Option<SlotGuard> {
-        let mut used = slots.used.lock().unwrap();
-        if *used >= slots.cap {
-            return None;
+        if try_bump(&slots.used, slots.cap) {
+            Some(SlotGuard {
+                slots: Arc::clone(slots),
+            })
+        } else {
+            None
         }
-        *used += 1;
-        Some(SlotGuard {
-            slots: Arc::clone(slots),
-        })
     }
 
     /// Block until a slot frees; reports whether the caller had to wait.
     fn acquire_blocking(slots: &Arc<Self>) -> (SlotGuard, bool) {
-        let mut used = slots.used.lock().unwrap();
-        let mut blocked = false;
-        while *used >= slots.cap {
-            blocked = true;
-            used = slots.freed.wait(used).unwrap();
-        }
-        *used += 1;
-        (
-            SlotGuard {
-                slots: Arc::clone(slots),
-            },
-            blocked,
-        )
+        acquire_parked(&slots.waiters, &slots.wait_lock, &slots.freed, || {
+            Self::try_acquire(slots)
+        })
+    }
+
+    fn release(&self) {
+        self.used.fetch_sub(1, Ordering::AcqRel);
+        wake_parked(&self.waiters, &self.wait_lock, &self.freed, false);
     }
 
     fn used(&self) -> usize {
-        *self.used.lock().unwrap()
+        self.used.load(Ordering::Acquire)
     }
 }
 
@@ -125,10 +196,7 @@ pub struct SlotGuard {
 
 impl Drop for SlotGuard {
     fn drop(&mut self) {
-        let mut used = self.slots.used.lock().unwrap();
-        *used -= 1;
-        drop(used);
-        self.slots.freed.notify_one();
+        self.slots.release();
     }
 }
 
@@ -136,16 +204,36 @@ impl Drop for SlotGuard {
 // Cross-tenant budget with weighted fair sharing.
 // ---------------------------------------------------------------------------
 
+/// One tenant's live admission counters — shared by the registry, every
+/// session of the tenant, and every outstanding slot guard, so acquire
+/// and release never need the registry lock.
+#[derive(Debug, Default)]
+pub(crate) struct TenantCounters {
+    /// Slots held within the tenant's guaranteed share.
+    reserved: AtomicUsize,
+    /// Slots borrowed from the shared slack.
+    borrowed: AtomicUsize,
+    /// `floor(capacity * w / Σw)` over active tenants; recomputed under
+    /// the registry lock whenever the weight table changes.
+    guaranteed: AtomicUsize,
+}
+
+impl TenantCounters {
+    fn used(&self) -> usize {
+        self.reserved.load(Ordering::Acquire) + self.borrowed.load(Ordering::Acquire)
+    }
+}
+
 #[derive(Debug)]
 struct TenantState {
     name: String,
     weight: f64,
-    used: usize,
     /// Live sessions sharing this tenant id; the reservation stays active
     /// until the last one deregisters (in-flight slots still drain
-    /// through `used` afterwards).
+    /// through the shared counters afterwards).
     sessions: usize,
     active: bool,
+    counters: Arc<TenantCounters>,
 }
 
 /// One tenant's slice of the global budget, for reporting.
@@ -162,14 +250,22 @@ pub struct TenantShare {
 
 /// The fleet-wide in-flight budget, shared by many [`Session`]s.
 ///
-/// Admission rule for tenant *i* (all under one lock, so the invariant is
-/// exact, not statistical):
+/// Admission rule for tenant *i*:
 ///
 /// * always deny when the budget is full;
 /// * grant while the tenant is within its guaranteed share;
 /// * beyond the share, grant only from *slack* — capacity not reserved for
-///   other tenants' unused guarantees — so a flood by one tenant can never
-///   consume another's reservation.
+///   tenants' guarantees — so a flood by one tenant can never consume
+///   another's reservation.
+///
+/// **The whole acquire/release path is lock-free**: every grant is a
+/// pair of CAS-bounded increments (the tenant's `reserved` against its
+/// cached guarantee — or the shared `slack_used` against `slack_cap` —
+/// then `total_used` against the capacity), so no interleaving can exceed
+/// the capacity or a reservation, denied attempts leave no trace on any
+/// shared gauge, and an under-budget tenant admits with two atomic RMWs.
+/// The registry lock is taken only by `register`/`deregister`/`report`,
+/// which recompute the per-tenant guarantee caches and the slack bound.
 ///
 /// Shares are recomputed from the live weight table, so registering a new
 /// tenant shrinks everyone's guarantee proportionally from the next
@@ -181,7 +277,15 @@ pub struct TenantShare {
 #[derive(Debug)]
 pub struct GlobalAdmission {
     capacity: usize,
+    /// Σ slots held, all tenants (reserved + borrowed).
+    total_used: AtomicUsize,
+    /// Slots currently borrowed from the slack.
+    slack_used: AtomicUsize,
+    /// `capacity - Σ guaranteed(active)` — the borrowable pool.
+    slack_cap: AtomicUsize,
     tenants: Mutex<Vec<TenantState>>,
+    waiters: AtomicUsize,
+    wait_lock: Mutex<()>,
     freed: Condvar,
 }
 
@@ -190,13 +294,36 @@ impl GlobalAdmission {
         assert!(capacity >= 1, "global budget must be >= 1");
         Arc::new(Self {
             capacity,
+            total_used: AtomicUsize::new(0),
+            slack_used: AtomicUsize::new(0),
+            slack_cap: AtomicUsize::new(capacity),
             tenants: Mutex::new(Vec::new()),
+            waiters: AtomicUsize::new(0),
+            wait_lock: Mutex::new(()),
             freed: Condvar::new(),
         })
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Recompute every active tenant's guarantee and the slack bound
+    /// (called under the registry lock on any weight-table change).
+    fn recompute_shares(&self, ts: &[TenantState]) {
+        let total_w: f64 = ts.iter().filter(|t| t.active).map(|t| t.weight).sum();
+        let mut guaranteed_sum = 0usize;
+        for t in ts {
+            let g = if t.active && total_w > 0.0 {
+                (self.capacity as f64 * t.weight / total_w) as usize
+            } else {
+                0
+            };
+            guaranteed_sum += g;
+            t.counters.guaranteed.store(g, Ordering::Release);
+        }
+        self.slack_cap
+            .store(self.capacity.saturating_sub(guaranteed_sum), Ordering::Release);
     }
 
     /// Register a tenant (or update its weight / add a session to it);
@@ -206,31 +333,37 @@ impl GlobalAdmission {
     pub fn register(&self, tenant: &str, weight: f64) -> usize {
         assert!(weight > 0.0, "tenant weight must be positive");
         let mut ts = self.tenants.lock().unwrap();
-        if let Some(i) = ts.iter().position(|t| t.name == tenant) {
+        let id = if let Some(i) = ts.iter().position(|t| t.name == tenant) {
             ts[i].weight = weight;
             ts[i].sessions += 1;
             ts[i].active = true;
-            self.freed.notify_all();
-            return i;
-        }
-        let state = TenantState {
-            name: tenant.to_string(),
-            weight,
-            used: 0,
-            sessions: 1,
-            active: true,
+            i
+        } else {
+            let state = TenantState {
+                name: tenant.to_string(),
+                weight,
+                sessions: 1,
+                active: true,
+                counters: Arc::new(TenantCounters::default()),
+            };
+            // Reuse a fully dead slot (no sessions, nothing in flight):
+            // live guards hold the counters Arc, so only a drained slot is
+            // safe to rename (its counters are replaced wholesale).
+            if let Some(i) = ts
+                .iter()
+                .position(|t| !t.active && t.sessions == 0 && t.counters.used() == 0)
+            {
+                ts[i] = state;
+                i
+            } else {
+                ts.push(state);
+                ts.len() - 1
+            }
         };
-        // Reuse a fully dead slot (no sessions, nothing in flight): live
-        // guards index by id, so only a drained slot is safe to rename.
-        if let Some(i) = ts
-            .iter()
-            .position(|t| !t.active && t.sessions == 0 && t.used == 0)
-        {
-            ts[i] = state;
-            return i;
-        }
-        ts.push(state);
-        ts.len() - 1
+        self.recompute_shares(&ts);
+        drop(ts);
+        self.wake_waiters();
+        id
     }
 
     /// Drop one session's claim on a tenant (called by [`Session`] on
@@ -245,110 +378,139 @@ impl GlobalAdmission {
                 t.active = false;
             }
         }
+        self.recompute_shares(&ts);
         drop(ts);
-        self.freed.notify_all();
+        self.wake_waiters();
     }
 
-    fn total_active_weight(ts: &[TenantState]) -> f64 {
-        ts.iter().filter(|t| t.active).map(|t| t.weight).sum()
+    /// This tenant's shared counters (sessions cache the Arc so their
+    /// submit path never touches the registry lock).
+    pub(crate) fn counters(&self, i: usize) -> Arc<TenantCounters> {
+        Arc::clone(&self.tenants.lock().unwrap()[i].counters)
     }
 
-    fn guaranteed_with(&self, ts: &[TenantState], i: usize, total_w: f64) -> usize {
-        if !ts[i].active {
-            return 0;
+    /// The lock-free admission core: CAS-bounded increments, tenant-local
+    /// gauge first.  Every success leaves `total_used <= capacity`, each
+    /// tenant's `reserved <= guaranteed` (modulo live guarantee shrinks),
+    /// and `slack_used <= slack_cap` — so reservations are never eaten by
+    /// borrowers under any interleaving.  Ordering matters for isolation:
+    /// a tenant beyond its guarantee fails on its *own* reserved gauge and
+    /// (with no slack) on the slack gauge — which within-guarantee grants
+    /// never consult — so a flood of denied attempts cannot perturb any
+    /// counter a quiet tenant's admission reads.
+    fn acquire_with(
+        global: &Arc<Self>,
+        counters: &Arc<TenantCounters>,
+    ) -> Option<GlobalSlotGuard> {
+        // Within the guarantee: tenant-local reservation, then the hard
+        // capacity bound (which only real grants ever bump).
+        if try_bump(&counters.reserved, counters.guaranteed.load(Ordering::Acquire)) {
+            if try_bump(&global.total_used, global.capacity) {
+                return Some(GlobalSlotGuard {
+                    global: Arc::clone(global),
+                    counters: Arc::clone(counters),
+                    borrowed: false,
+                });
+            }
+            // Full despite Σ guarantees <= capacity: only possible while
+            // old grants drain after a live guarantee shrink.
+            counters.reserved.fetch_sub(1, Ordering::AcqRel);
+            return None;
         }
-        (self.capacity as f64 * ts[i].weight / total_w) as usize
-    }
-
-    fn guaranteed(&self, ts: &[TenantState], i: usize) -> usize {
-        self.guaranteed_with(ts, i, Self::total_active_weight(ts))
-    }
-
-    fn allowed(&self, ts: &[TenantState], i: usize) -> bool {
-        let total_used: usize = ts.iter().map(|t| t.used).sum();
-        if total_used >= self.capacity {
-            return false;
+        // Beyond the share: borrow from the slack pool.
+        if try_bump(&global.slack_used, global.slack_cap.load(Ordering::Acquire)) {
+            if try_bump(&global.total_used, global.capacity) {
+                counters.borrowed.fetch_add(1, Ordering::AcqRel);
+                return Some(GlobalSlotGuard {
+                    global: Arc::clone(global),
+                    counters: Arc::clone(counters),
+                    borrowed: true,
+                });
+            }
+            global.slack_used.fetch_sub(1, Ordering::AcqRel);
         }
-        // One weight pass shared by every guarantee below: admission stays
-        // O(tenants) under the lock.
-        let total_w = Self::total_active_weight(ts);
-        if ts[i].used < self.guaranteed_with(ts, i, total_w) {
-            return true;
-        }
-        // Beyond the share: only slack not reserved for others.
-        let reserved_others: usize = (0..ts.len())
-            .filter(|&j| j != i)
-            .map(|j| self.guaranteed_with(ts, j, total_w).saturating_sub(ts[j].used))
-            .sum();
-        total_used + reserved_others < self.capacity
+        None
     }
 
     /// Non-blocking acquire for tenant id `i` (Reject overload policy).
     pub fn try_acquire(global: &Arc<Self>, i: usize) -> Option<GlobalSlotGuard> {
-        let mut ts = global.tenants.lock().unwrap();
-        if !global.allowed(&ts, i) {
-            return None;
-        }
-        ts[i].used += 1;
-        Some(GlobalSlotGuard {
-            global: Arc::clone(global),
-            tenant: i,
-        })
+        let counters = global.counters(i);
+        Self::acquire_with(global, &counters)
+    }
+
+    /// Non-blocking acquire via a session's cached counters — the
+    /// fully lock-free fast path.
+    pub(crate) fn try_acquire_cached(
+        global: &Arc<Self>,
+        counters: &Arc<TenantCounters>,
+    ) -> Option<GlobalSlotGuard> {
+        Self::acquire_with(global, counters)
     }
 
     /// Blocking acquire (Queue overload policy); reports whether the
     /// caller had to wait.
     pub fn acquire_blocking(global: &Arc<Self>, i: usize) -> (GlobalSlotGuard, bool) {
-        let mut ts = global.tenants.lock().unwrap();
-        let mut blocked = false;
-        while !global.allowed(&ts, i) {
-            blocked = true;
-            ts = global.freed.wait(ts).unwrap();
-        }
-        ts[i].used += 1;
-        (
-            GlobalSlotGuard {
-                global: Arc::clone(global),
-                tenant: i,
-            },
-            blocked,
-        )
+        let counters = global.counters(i);
+        Self::acquire_blocking_cached(global, &counters)
+    }
+
+    /// Blocking acquire via cached counters.
+    pub(crate) fn acquire_blocking_cached(
+        global: &Arc<Self>,
+        counters: &Arc<TenantCounters>,
+    ) -> (GlobalSlotGuard, bool) {
+        acquire_parked(&global.waiters, &global.wait_lock, &global.freed, || {
+            Self::acquire_with(global, counters)
+        })
+    }
+
+    fn wake_waiters(&self) {
+        wake_parked(&self.waiters, &self.wait_lock, &self.freed, true);
     }
 
     /// Total in-flight slots across all tenants.
     pub fn used_total(&self) -> usize {
-        self.tenants.lock().unwrap().iter().map(|t| t.used).sum()
+        self.total_used.load(Ordering::Acquire)
     }
 
     /// Per-tenant weights, guarantees, and usage for active tenants (the
     /// multi-tenant view next to [`Metrics`]'s aggregate counters).
     pub fn report(&self) -> Vec<TenantShare> {
         let ts = self.tenants.lock().unwrap();
-        (0..ts.len())
-            .filter(|&i| ts[i].active)
-            .map(|i| TenantShare {
-                tenant: ts[i].name.clone(),
-                weight: ts[i].weight,
-                guaranteed: self.guaranteed(&ts, i),
-                used: ts[i].used,
+        ts.iter()
+            .filter(|t| t.active)
+            .map(|t| TenantShare {
+                tenant: t.name.clone(),
+                weight: t.weight,
+                guaranteed: t.counters.guaranteed.load(Ordering::Acquire),
+                used: t.counters.used(),
             })
             .collect()
     }
 }
 
-/// Releases one global in-flight slot on drop.
+/// Releases one global in-flight slot on drop (lock-free: the guard
+/// carries its tenant's counters and its reserved/borrowed class).
 #[derive(Debug)]
 pub struct GlobalSlotGuard {
     global: Arc<GlobalAdmission>,
-    tenant: usize,
+    counters: Arc<TenantCounters>,
+    /// Granted from the slack pool (beyond the guarantee) rather than the
+    /// tenant's reservation: the class is fixed at grant time so releases
+    /// stay consistent even if guarantees were re-dealt in between.
+    borrowed: bool,
 }
 
 impl Drop for GlobalSlotGuard {
     fn drop(&mut self) {
-        let mut ts = self.global.tenants.lock().unwrap();
-        ts[self.tenant].used -= 1;
-        drop(ts);
-        self.global.freed.notify_all();
+        if self.borrowed {
+            self.counters.borrowed.fetch_sub(1, Ordering::AcqRel);
+            self.global.slack_used.fetch_sub(1, Ordering::AcqRel);
+        } else {
+            self.counters.reserved.fetch_sub(1, Ordering::AcqRel);
+        }
+        self.global.total_used.fetch_sub(1, Ordering::AcqRel);
+        self.global.wake_waiters();
     }
 }
 
@@ -358,8 +520,10 @@ pub struct Session {
     cfg: SessionConfig,
     service: Service,
     slots: Arc<Slots>,
-    /// Cross-tenant budget and this tenant's id in it, when shared.
-    global: Option<(Arc<GlobalAdmission>, usize)>,
+    /// Cross-tenant budget, this tenant's id in it, and the cached counter
+    /// block — the submit fast path acquires global slots without ever
+    /// touching the registry lock.
+    global: Option<(Arc<GlobalAdmission>, usize, Arc<TenantCounters>)>,
     stats: Arc<SessionStats>,
     metrics: Arc<Metrics>,
 }
@@ -389,8 +553,9 @@ impl Session {
         weight: f64,
     ) -> Self {
         let id = global.register(tenant, weight);
+        let counters = global.counters(id);
         let mut s = Self::new(service, tenant, cfg);
-        s.global = Some((Arc::clone(global), id));
+        s.global = Some((Arc::clone(global), id, counters));
         s
     }
 
@@ -438,9 +603,9 @@ impl Session {
         // queued on the shared budget still counts against its own cap.
         let global_guard = match &self.global {
             None => None,
-            Some((global, id)) => Some(match self.cfg.overload {
-                OverloadPolicy::Reject => {
-                    GlobalAdmission::try_acquire(global, *id).ok_or_else(|| {
+            Some((global, _id, counters)) => Some(match self.cfg.overload {
+                OverloadPolicy::Reject => GlobalAdmission::try_acquire_cached(global, counters)
+                    .ok_or_else(|| {
                         self.stats.rejected.fetch_add(1, Ordering::Relaxed);
                         self.metrics.admission_rejected.fetch_add(1, Ordering::Relaxed);
                         self.metrics.global_rejected.fetch_add(1, Ordering::Relaxed);
@@ -449,10 +614,9 @@ impl Session {
                             self.tenant,
                             global.capacity()
                         )
-                    })?
-                }
+                    })?,
                 OverloadPolicy::Queue => {
-                    let (g, blocked) = GlobalAdmission::acquire_blocking(global, *id);
+                    let (g, blocked) = GlobalAdmission::acquire_blocking_cached(global, counters);
                     blocked_any |= blocked;
                     g
                 }
@@ -480,7 +644,7 @@ impl Drop for Session {
     /// keep capacity reserved forever (in-flight tickets still drain
     /// through their guards).
     fn drop(&mut self) {
-        if let Some((global, id)) = &self.global {
+        if let Some((global, id, _counters)) = &self.global {
             global.deregister(*id);
         }
     }
@@ -666,6 +830,38 @@ mod tests {
         let u = ga.register("u", 1.0);
         assert_eq!(u, t, "dead slot must be reused");
         assert_eq!(ga.report()[0].tenant, "u");
+    }
+
+    #[test]
+    fn concurrent_lock_free_admission_holds_invariants() {
+        // Hammer the lock-free reserve-then-check path from many threads:
+        // the budget must never overshoot, a tenant's reserved grants must
+        // never exceed its guarantee, and everything must drain to zero.
+        let ga = GlobalAdmission::new(16);
+        let a = ga.register("a", 1.0);
+        let b = ga.register("b", 1.0);
+        let over = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for tid in [a, b, a, b, a, b] {
+                let ga = Arc::clone(&ga);
+                let over = Arc::clone(&over);
+                s.spawn(move || {
+                    let c = ga.counters(tid);
+                    for _ in 0..2_000 {
+                        if let Some(g) = GlobalAdmission::try_acquire_cached(&ga, &c) {
+                            if ga.used_total() > 16 {
+                                over.fetch_add(1, Ordering::Relaxed);
+                            }
+                            drop(g);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(over.load(Ordering::Relaxed), 0, "budget overshot");
+        assert_eq!(ga.used_total(), 0, "slots leaked");
+        let shares = ga.report();
+        assert!(shares.iter().all(|t| t.used == 0), "{shares:?}");
     }
 
     #[test]

@@ -49,8 +49,8 @@ use crate::coordinator::adaptive::{AdaptiveConfig, AdaptivePlacer};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::chunks::WindowPlan;
 use crate::coordinator::controlplane::{
-    capacity_imbalance, committed_delta, load_shares, ControlPlane, ControlPlaneConfig, Decision,
-    Lever,
+    capacity_imbalance, committed_delta_atomic, load_shares, rebaseline_atomic, ControlPlane,
+    ControlPlaneConfig, Decision, Lever,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::{
@@ -63,8 +63,11 @@ use crate::probe::TopologyMap;
 use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmId};
 
 use super::backend::{
-    submit_ticketed, Backend, Batch, Job, Pipeline, ResponseTx, Ticket, WorkerMsg,
+    submit_ticketed, Backend, Batch, DataPath, Job, Pipeline, ReqHandle, Shells, Ticket,
+    WorkQueue, WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
 };
+use super::ring::{self, EpochGate};
+use super::scatter::SlabPool;
 
 /// Where the per-(group, window) service rates come from.
 #[derive(Clone)]
@@ -109,6 +112,12 @@ pub struct SimBackendConfig {
     /// pacing — gathers complete at host speed and device time is only
     /// *accounted* (`sim_report`).
     pub sim_timescale: f64,
+    /// Run the pre-slab request pipeline (mutexed accumulator, mpsc worker
+    /// channels, per-ticket `sync_channel`, per-job gather `Vec`) instead
+    /// of the slab/ring path.  Kept as the perf oracle for
+    /// `benches/serve_hotpath.rs --legacy-path`; results are identical,
+    /// only the copy/lock/allocation count differs.
+    pub legacy_path: bool,
 }
 
 impl SimBackendConfig {
@@ -122,6 +131,7 @@ impl SimBackendConfig {
             resplit: None,
             control: ControlPlaneConfig::default(),
             sim_timescale: 0.0,
+            legacy_path: false,
         }
     }
 
@@ -164,7 +174,7 @@ struct ControlCtx {
     cell: Arc<PlacementCell>,
     map: TopologyMap,
     metrics: Arc<Metrics>,
-    batcher: Arc<Batcher<ResponseTx>>,
+    batcher: Arc<Batcher<ReqHandle>>,
     /// The placer's signal floor (0 for static placers): epochs below it
     /// accumulate into the next one instead of being discarded.
     min_epoch_rows: u64,
@@ -172,10 +182,12 @@ struct ControlCtx {
     /// immediate epoch): without it, a timer epoch that read "all healthy"
     /// could publish a health-blind re-deal *after* a concurrent
     /// `set_group_health` swap, transiently re-including a Failed group.
-    gate: Mutex<()>,
+    /// An atomic spin gate, not a mutex: epochs are rare and short.
+    gate: EpochGate,
     /// Per-window routed-row totals at the previous *committed* epoch
-    /// boundary.
-    last_rows: Mutex<Vec<u64>>,
+    /// boundary (atomics, sized like `metrics.window_rows` — the maximum
+    /// window count a re-split can publish).
+    last_rows: Vec<AtomicU64>,
     /// Group health as last reported via `set_group_health`, plus the
     /// versioned coordinator view of it (epochs, degraded-reach flag).
     health: Mutex<CoordinatorState>,
@@ -183,20 +195,20 @@ struct ControlCtx {
 
 impl ControlCtx {
     /// Delta the per-window load counters since the last committed epoch
-    /// (see [`committed_delta`](crate::coordinator::controlplane::committed_delta):
-    /// starved epochs roll their rows into the next one).
+    /// (see [`committed_delta_atomic`]: starved epochs roll their rows
+    /// into the next one).
     fn window_delta(&self, windows: usize) -> Vec<u64> {
         let totals = self.metrics.window_rows_snapshot();
-        let mut last = self.last_rows.lock().unwrap();
-        let delta = committed_delta(&mut *last, &totals, self.min_epoch_rows);
-        delta.into_iter().take(windows).collect()
+        let mut delta = committed_delta_atomic(&self.last_rows, &totals, self.min_epoch_rows);
+        delta.truncate(windows);
+        delta
     }
 
     /// Close one epoch: observe, let the control plane pick the strongest
     /// permitted lever, try levers cheapest-first, publish.  Returns the
     /// new generation when a swap happened.
     fn epoch(&self) -> Option<u64> {
-        let _serialized = self.gate.lock().unwrap();
+        let _serialized = self.gate.lock();
         self.epoch_inner()
     }
 
@@ -292,7 +304,7 @@ impl ControlCtx {
                     let count = new_plan.count();
                     let generation = self.cell.store_replan(new_plan, placement);
                     // Window ids changed meaning: re-baseline the signal.
-                    *self.last_rows.lock().unwrap() = self.metrics.window_rows_snapshot();
+                    rebaseline_atomic(&self.last_rows, &self.metrics.window_rows_snapshot());
                     self.metrics.resplit_epochs.fetch_add(1, Ordering::Relaxed);
                     self.metrics
                         .generations_published
@@ -456,6 +468,10 @@ pub struct SimBackend {
     placement: Arc<PlacementCell>,
     stats: Arc<Vec<GroupServeStats>>,
     control: Arc<ControlCtx>,
+    /// Which request pipeline `submit` runs (slab/ring default, or the
+    /// `legacy_path` oracle); the slab variant carries the output pool
+    /// that `Backend::recycle` feeds.
+    path: DataPath,
     epoch_stop: Arc<AtomicBool>,
     epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -528,11 +544,29 @@ impl SimBackend {
         // One worker per group in the map — not just the initially-serving
         // ones: a placement swap may hand any group any window, and the
         // memoized per-window calibration happens lazily on first contact.
-        let mut senders: Vec<Option<mpsc::Sender<WorkerMsg>>> = Vec::new();
+        //
+        // Each worker gets a bounded SPSC job ring from the dispatcher and
+        // a return ring carrying emptied index shells back (the default
+        // path); the legacy oracle keeps the original mpsc channels.
+        let path = if cfg.legacy_path {
+            DataPath::Legacy
+        } else {
+            DataPath::Slab(SlabPool::new())
+        };
+        let mut senders: Vec<Option<WorkSender>> = Vec::new();
+        let mut shell_returns: Vec<ring::Consumer<Shells>> = Vec::new();
         let mut workers = Vec::new();
         for g in 0..map.groups.len() {
-            let (tx, rx) = mpsc::channel::<WorkerMsg>();
-            senders.push(Some(tx));
+            let (sender, queue, shells) = if cfg.legacy_path {
+                let (tx, rx) = mpsc::channel();
+                (WorkSender::Legacy(tx), WorkQueue::Legacy(rx), None)
+            } else {
+                let (tx, rx) = ring::spsc::<Job>(JOB_RING_CAP);
+                let (shell_tx, shell_rx) = ring::spsc::<Shells>(SHELL_RING_CAP);
+                shell_returns.push(shell_rx);
+                (WorkSender::Ring(tx), WorkQueue::Ring(rx), Some(shell_tx))
+            };
+            senders.push(Some(sender));
             let mut worker = SimWorker {
                 group: g,
                 sms: map.groups[g].clone(),
@@ -547,6 +581,7 @@ impl SimBackend {
                 metrics: Arc::clone(&metrics),
                 stats: Arc::clone(&stats),
                 ns_per_row: HashMap::new(),
+                last_rate: None,
                 // Non-finite or negative timescales disable pacing rather
                 // than poisoning every Duration computation downstream.
                 timescale: if cfg.sim_timescale.is_finite() {
@@ -555,22 +590,15 @@ impl SimBackend {
                     0.0
                 },
                 next_free: None,
+                shells,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a100win-sim-g{g}"))
-                .spawn(move || {
-                    while let Ok(msg) = rx.recv() {
-                        match msg {
-                            WorkerMsg::Shutdown => break,
-                            WorkerMsg::Job(job) => worker.execute(job),
-                        }
-                    }
-                })
+                .spawn(move || queue.for_each_job(|job| worker.execute(job)))
                 .context("spawning sim worker")?;
             workers.push(handle);
         }
 
-        let windows = plan.count();
         let state = CoordinatorState::new(&placement, map.groups.len());
         let cell = Arc::new(PlacementCell::new(Arc::new(plan), placement));
         let pipeline = Pipeline::start(
@@ -579,6 +607,7 @@ impl SimBackend {
             Arc::clone(&metrics),
             view.d(),
             senders,
+            shell_returns,
             workers,
         )?;
 
@@ -602,8 +631,12 @@ impl SimBackend {
             metrics: Arc::clone(&metrics),
             batcher: Arc::clone(&pipeline.batcher),
             min_epoch_rows: cfg.adaptive.as_ref().map_or(0, |a| a.min_epoch_rows),
-            gate: Mutex::new(()),
-            last_rows: Mutex::new(vec![0; windows]),
+            gate: EpochGate::new(),
+            // Sized like the window-rows registry (maximum plan a re-split
+            // can publish), so re-splits never re-shape the baseline.
+            last_rows: (0..metrics.window_rows.len())
+                .map(|_| AtomicU64::new(0))
+                .collect(),
             health: Mutex::new(state),
         });
 
@@ -643,6 +676,7 @@ impl SimBackend {
             placement: cell,
             stats,
             control,
+            path,
             epoch_stop,
             epoch_thread: Mutex::new(epoch_thread),
         })
@@ -683,7 +717,7 @@ impl SimBackend {
         // Transition + immediate epoch are one atomic unit under the epoch
         // gate: a concurrent timer epoch cannot publish a health-blind
         // re-deal built before this transition after its swap.
-        let _serialized = self.control.gate.lock().unwrap();
+        let _serialized = self.control.gate.lock();
         {
             let mut st = self.control.health.lock().unwrap();
             st.set_health(group, health, &self.control.map)?;
@@ -766,7 +800,14 @@ impl SimBackend {
 
 impl Backend for SimBackend {
     fn submit(&self, batch: Batch) -> anyhow::Result<Ticket> {
-        submit_ticketed(&self.pipeline.batcher, &self.metrics, self.view.rows(), batch)
+        submit_ticketed(
+            &self.pipeline.batcher,
+            &self.metrics,
+            self.view.rows(),
+            self.view.d(),
+            &self.path,
+            batch,
+        )
     }
 
     fn d(&self) -> usize {
@@ -779,6 +820,14 @@ impl Backend for SimBackend {
 
     fn view(&self) -> Option<&TableView> {
         Some(&self.view)
+    }
+
+    fn recycle(&self, buf: Vec<f32>) {
+        // The legacy oracle never draws from the pool — pooling there
+        // would just pin dead memory.
+        if let DataPath::Slab(pool) = &self.path {
+            pool.put(buf);
+        }
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -822,32 +871,58 @@ struct SimWorker {
     stats: Arc<Vec<GroupServeStats>>,
     /// Memoized calibration results per window geometry (start, rows).
     ns_per_row: HashMap<(u64, u64), f64>,
+    /// Inline one-entry cache over the map: consecutive jobs almost always
+    /// share their window geometry (splits batch by window), so the steady
+    /// state skips even the hash lookup.
+    last_rate: Option<(u64, u64, f64)>,
     /// Wall-clock multiplier on simulated time (see
     /// [`SimBackendConfig::sim_timescale`]); 0 = unpaced.
     timescale: f64,
     /// When this group's simulated device frees up (pacing only): the
     /// group is a serial device, jobs queue behind each other.
     next_free: Option<Instant>,
+    /// Return ring for emptied job index shells (None on the legacy path).
+    shells: Option<ring::Producer<Shells>>,
 }
 
 impl SimWorker {
     fn execute(&mut self, job: Job) {
         let rate = self.ns_per_row(job.win_start_row, job.win_rows);
-        let d = self.view.d();
-        let mut rows = Vec::with_capacity(job.local_rows.len() * d);
-        for &local in &job.local_rows {
-            rows.extend_from_slice(self.view.row(job.win_start_row + local as u64));
+        let n = job.local_rows.len();
+        if job.acc.is_legacy() {
+            // Oracle path (--legacy-path): gather into a fresh Vec, then a
+            // second locked copy into the accumulator — the exact pre-slab
+            // pipeline the bench compares against.
+            let d = self.view.d();
+            let mut rows = Vec::with_capacity(n * d);
+            for &local in &job.local_rows {
+                rows.extend_from_slice(self.view.row(job.win_start_row + local as u64));
+            }
+            self.account(n, rate);
+            job.acc.scatter(&job.positions, &rows, d);
+        } else {
+            // Single copy: each row goes straight from the zero-copy view
+            // to its final position in the request's slab buffer (the
+            // positions of distinct sub-batches are disjoint, so no lock).
+            for (k, &local) in job.local_rows.iter().enumerate() {
+                job.acc
+                    .write_row(job.positions[k], self.view.row(job.win_start_row + local as u64));
+            }
+            self.account(n, rate);
         }
-        let cost_ns = job.local_rows.len() as f64 * rate;
+        job.acc.finish_part(&self.metrics);
+        job.recycle_shells(self.shells.as_ref());
+    }
+
+    /// Simulated-device accounting + optional pacing for `n` rows.
+    fn account(&mut self, n: usize, rate: f64) {
+        let cost_ns = n as f64 * rate;
         let st = &self.stats[self.group];
-        st.rows
-            .fetch_add(job.local_rows.len() as u64, Ordering::Relaxed);
+        st.rows.fetch_add(n as u64, Ordering::Relaxed);
         st.sim_ns.fetch_add(cost_ns as u64, Ordering::Relaxed);
         if self.timescale > 0.0 {
             self.pace(cost_ns);
         }
-        job.acc.scatter(&job.positions, &rows, d);
-        job.acc.finish_part(&self.metrics);
     }
 
     /// Delay completion so this group serves no faster than the simulated
@@ -880,7 +955,14 @@ impl SimWorker {
     /// *geometry*, so re-split plans calibrate their new windows lazily on
     /// first contact while identical geometry reuses the cache.
     fn ns_per_row(&mut self, start: u64, rows: u64) -> f64 {
+        // Inline fast path: unchanged window geometry skips even the map.
+        if let Some((s, r, rate)) = self.last_rate {
+            if s == start && r == rows {
+                return rate;
+            }
+        }
         if let Some(&r) = self.ns_per_row.get(&(start, rows)) {
+            self.last_rate = Some((start, rows, r));
             return r;
         }
         let row_bytes = self.row_bytes as f64;
@@ -910,6 +992,7 @@ impl SimWorker {
             None => row_bytes / self.solo_gbps,
         };
         self.ns_per_row.insert((start, rows), rate);
+        self.last_rate = Some((start, rows, rate));
         rate
     }
 }

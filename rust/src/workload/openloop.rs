@@ -26,13 +26,19 @@ pub trait LoadTarget: Sync {
 
 impl LoadTarget for Service {
     fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()> {
-        self.submit(rows, deadline)?.wait().map(|_| ())
+        let out = self.submit(rows, deadline)?.wait()?;
+        // Return the output slab to the backend pool: the sweep measures
+        // the serving pipeline, not the benchmark client's allocator.
+        self.recycle(out);
+        Ok(())
     }
 }
 
 impl LoadTarget for FleetService {
     fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()> {
-        self.submit(rows, deadline)?.wait().map(|_| ())
+        let out = self.submit(rows, deadline)?.wait()?;
+        self.recycle(out);
+        Ok(())
     }
 }
 

@@ -1,0 +1,121 @@
+//! Steady-state allocation accounting for the serving hot path, behind
+//! the `perf-assert` feature (it installs a process-global counting
+//! allocator, so it lives in its own test binary and is compiled out of
+//! ordinary tier-1 runs).
+//!
+//! The acceptance bar (ISSUE 5): after warmup, the request path performs
+//! **zero heap allocations per sub-batch** — the per-request cost is a
+//! small constant (the accumulator Arcs and the split's shell vector),
+//! independent of how many sub-batches the request fans out to and how
+//! many rows it carries.  Requests here fan out to 4 windows × 256 rows,
+//! so any per-sub-batch or per-row allocation would blow the constant
+//! bound by 4x / 1000x.
+#![cfg(feature = "perf-assert")]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use a100win::coordinator::{BatcherConfig, Table, WindowPlan};
+use a100win::prelude::PlacementPolicy;
+use a100win::probe::TopologyMap;
+use a100win::service::{Service, SimBackend, SimBackendConfig, SimTiming};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn map4() -> TopologyMap {
+    TopologyMap {
+        groups: (0..4).map(|g| vec![g]).collect(),
+        reach_bytes: 1 << 30,
+        solo_gbps: vec![100.0; 4],
+        independent: true,
+        card_id: "alloc-test".into(),
+    }
+}
+
+/// Allocation ceiling per request, averaged over the measured run.  The
+/// real steady-state cost is ~6 (two accumulator Arcs, the split's
+/// sub-batch vector, the formed-batch vector, and debug-build claim maps);
+/// 16 leaves headroom for allocator-internal noise while still failing
+/// loudly on any per-sub-batch (≥4/request here) or per-row
+/// (≥1024/request) regression.
+const MAX_ALLOCS_PER_REQUEST: u64 = 16;
+
+#[test]
+fn steady_state_request_path_is_allocation_free_per_sub_batch() {
+    let rows: u64 = 32_768;
+    let d = 8usize;
+    let windows = 4usize;
+    let table = Table::synthetic(rows, d);
+    let plan = WindowPlan::split(rows, (d * 4) as u64, windows);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    cfg.batcher = BatcherConfig {
+        max_batch_rows: 4_096,
+        max_wait: std::time::Duration::from_micros(100),
+        max_pending: 256,
+    };
+    let backend = Arc::new(
+        SimBackend::start(cfg, &map4(), plan, table.view(), SimTiming::Probed).unwrap(),
+    );
+    let service = Service::new(backend);
+
+    // Fixed payloads spanning all four windows (4 sub-batches per
+    // request), pre-generated so the *client's* request-building
+    // allocations never land in the measurement.
+    let per_window = rows / windows as u64;
+    let payloads: Vec<Arc<Vec<u64>>> = (0..32)
+        .map(|i| {
+            Arc::new(
+                (0..256u64)
+                    .map(|k| (k % windows as u64) * per_window + (i * 37 + k * 13) % per_window)
+                    .collect(),
+            )
+        })
+        .collect();
+
+    let run = |n: usize| {
+        for i in 0..n {
+            let rows = Arc::clone(&payloads[i % payloads.len()]);
+            let out = service.lookup(rows).expect("lookup");
+            service.recycle(out);
+        }
+    };
+
+    // Warmup: fill the slab pool, the router's shell pool (via the worker
+    // return rings), the batcher's deque, and the rate memos.
+    run(400);
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let measured = 200usize;
+    run(measured);
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let per_request = delta / measured as u64;
+    println!("allocations: {delta} over {measured} requests ({per_request}/request)");
+    assert!(
+        per_request <= MAX_ALLOCS_PER_REQUEST,
+        "steady-state request path allocates {per_request}/request (> {MAX_ALLOCS_PER_REQUEST}): \
+         a per-sub-batch or per-row allocation crept back in ({delta} total over {measured})"
+    );
+    service.shutdown();
+}
