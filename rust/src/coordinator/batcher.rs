@@ -55,6 +55,16 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Outcome of [`Batcher::next_batch_or_timeout`].
+#[derive(Debug)]
+pub enum BatchWait<T> {
+    Batch(Batch<T>),
+    /// `max_idle` elapsed with no batch ready.
+    TimedOut,
+    /// Closed and drained (terminal, like `next_batch() -> None`).
+    Closed,
+}
+
 struct State<T> {
     queue: VecDeque<PendingRequest<T>>,
     closed: bool,
@@ -155,6 +165,40 @@ impl<T> Batcher<T> {
                 return None;
             } else {
                 st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Like [`next_batch`](Self::next_batch), but give up after `max_idle`
+    /// without a formed batch — for dispatch loops that interleave other
+    /// work (retry/hedge re-dispatch) with batch formation and cannot park
+    /// indefinitely.
+    pub fn next_batch_or_timeout(&self, max_idle: Duration) -> BatchWait<T> {
+        let idle_deadline = Instant::now() + max_idle;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if !st.queue.is_empty() {
+                let oldest_wait = st.queue.front().unwrap().enqueued.elapsed();
+                if self.pending_rows.load(Ordering::Relaxed) >= self.cfg.max_batch_rows
+                    || oldest_wait >= self.cfg.max_wait
+                    || st.closed
+                {
+                    return BatchWait::Batch(self.drain_batch(&mut st));
+                }
+                if now >= idle_deadline {
+                    return BatchWait::TimedOut;
+                }
+                let remaining = (self.cfg.max_wait - oldest_wait).min(idle_deadline - now);
+                let (guard, _timeout) = self.cv.wait_timeout(st, remaining).unwrap();
+                st = guard;
+            } else if st.closed {
+                return BatchWait::Closed;
+            } else if now >= idle_deadline {
+                return BatchWait::TimedOut;
+            } else {
+                let (guard, _timeout) = self.cv.wait_timeout(st, idle_deadline - now).unwrap();
+                st = guard;
             }
         }
     }
@@ -299,6 +343,42 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests[0].deadline, Some(dl));
         assert_eq!(batch.requests[1].deadline, None);
+    }
+
+    #[test]
+    fn timeout_variant_times_out_batches_and_closes() {
+        let b: Batcher<u32> = Batcher::new(cfg(8, 10_000, 100));
+        // Empty queue: times out after max_idle.
+        let t = Instant::now();
+        assert!(matches!(
+            b.next_batch_or_timeout(Duration::from_millis(5)),
+            BatchWait::TimedOut
+        ));
+        assert!(t.elapsed() >= Duration::from_millis(4));
+        // A ready batch (size trigger) is returned immediately.
+        b.submit(rows(vec![1, 2, 3, 4]), None, 0).unwrap();
+        b.submit(rows(vec![5, 6, 7, 8]), None, 1).unwrap();
+        match b.next_batch_or_timeout(Duration::from_millis(5)) {
+            BatchWait::Batch(batch) => assert_eq!(batch.total_rows(), 8),
+            other => panic!("expected batch, got {other:?}"),
+        }
+        // A pending-but-untriggered request times out without draining...
+        b.submit(rows(vec![9]), None, 2).unwrap();
+        assert!(matches!(
+            b.next_batch_or_timeout(Duration::from_millis(2)),
+            BatchWait::TimedOut
+        ));
+        assert_eq!(b.pending(), 1);
+        // ...then drains on close, and the variant reports Closed after.
+        b.close();
+        assert!(matches!(
+            b.next_batch_or_timeout(Duration::from_millis(2)),
+            BatchWait::Batch(_)
+        ));
+        assert!(matches!(
+            b.next_batch_or_timeout(Duration::from_millis(2)),
+            BatchWait::Closed
+        ));
     }
 
     #[test]

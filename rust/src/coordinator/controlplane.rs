@@ -195,6 +195,14 @@ impl ControlPlane {
         st.epoch
     }
 
+    /// Append a pure audit entry: an unladdered epoch that held (no lever,
+    /// no imbalance judgment) but whose `why` belongs in the trace — e.g. a
+    /// circuit-breaker transition that will drive the *next* health epoch.
+    pub fn note(&self, why: impl Into<String>) {
+        self.open_unladdered();
+        self.record(Lever::Hold, None, 0.0, None, why);
+    }
+
     /// Epochs opened so far.
     pub fn epoch(&self) -> u64 {
         self.state.lock().unwrap().epoch

@@ -157,6 +157,22 @@ pub struct Metrics {
     /// Plan/placement generations published by the control plane (every
     /// redeal, resplit, or migration bumps exactly one generation).
     pub generations_published: AtomicU64,
+    /// Sub-batches re-dispatched by the resilience layer after a failure
+    /// (each retry attempt counts once).
+    pub retries: AtomicU64,
+    /// Speculative duplicate sub-batches dispatched for stragglers.
+    pub hedges: AtomicU64,
+    /// Hedged duplicates that completed before the original copy.
+    pub hedge_wins: AtomicU64,
+    /// Tickets resolved as [`Outcome::Partial`](crate::service::Outcome)
+    /// (completed rows + validity mask) instead of failing outright.
+    pub partials: AtomicU64,
+    /// Circuit-breaker transitions into `Open` (group evicted).
+    pub breaker_opens: AtomicU64,
+    /// Circuit-breaker transitions into `HalfOpen` (probation probing).
+    pub breaker_half_opens: AtomicU64,
+    /// Circuit-breaker transitions back to `Closed` (group recovered).
+    pub breaker_closes: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -207,6 +223,13 @@ impl Metrics {
             migrate_epochs: self.migrate_epochs.load(Ordering::Relaxed),
             rows_migrated: self.rows_migrated.load(Ordering::Relaxed),
             generations_published: self.generations_published.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            partials: self.partials.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_half_opens: self.breaker_half_opens.load(Ordering::Relaxed),
+            breaker_closes: self.breaker_closes.load(Ordering::Relaxed),
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.quantile_us(0.50),
             p99_latency_us: self.latency.quantile_us(0.99),
@@ -235,6 +258,13 @@ pub struct MetricsSnapshot {
     pub migrate_epochs: u64,
     pub rows_migrated: u64,
     pub generations_published: u64,
+    pub retries: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub partials: u64,
+    pub breaker_opens: u64,
+    pub breaker_half_opens: u64,
+    pub breaker_closes: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -247,6 +277,8 @@ impl MetricsSnapshot {
             "requests={} rows={} batches={} padded={} errors={} rejected={} \
              shed={} shed_global={} expired={} throttled={} \
              repartition(redeal/resplit/migrate)={}/{}/{} gens={} rows_migrated={} \
+             resilience(retry/hedge/hedgewin/partial)={}/{}/{}/{} \
+             breaker(open/half/close)={}/{}/{} \
              latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
             self.requests,
             self.rows,
@@ -263,6 +295,13 @@ impl MetricsSnapshot {
             self.migrate_epochs,
             self.generations_published,
             self.rows_migrated,
+            self.retries,
+            self.hedges,
+            self.hedge_wins,
+            self.partials,
+            self.breaker_opens,
+            self.breaker_half_opens,
+            self.breaker_closes,
             self.mean_latency_us,
             self.p50_latency_us,
             self.p99_latency_us,

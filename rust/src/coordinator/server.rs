@@ -169,6 +169,10 @@ impl EmbeddingServer {
             senders,
             shell_returns,
             workers,
+            // No resilience runtime on the PJRT path yet: device-side
+            // recovery semantics (re-executing a partially-run HLO gather)
+            // need real-hardware validation first.
+            None,
         )?;
 
         let state = CoordinatorState::new(&placement, map.groups.len());
@@ -318,6 +322,7 @@ impl Backend for EmbeddingServer {
             self.view.rows(),
             self.view.d(),
             &self.path,
+            false,
             batch,
         )
     }

@@ -15,11 +15,14 @@ use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
 use a100win::runtime::Runtime;
 use a100win::service::{
-    FleetConfig, FleetService, GlobalAdmission, OverloadPolicy, Service, SessionConfig,
-    SimBackend, SimBackendConfig, SimTiming,
+    FleetConfig, FleetService, GlobalAdmission, OverloadPolicy, ResilienceConfig, Service,
+    SessionConfig, SimBackend, SimBackendConfig, SimTiming,
 };
-use a100win::sim::Machine;
-use a100win::workload::{drive, synth::Distribution, OpenLoopConfig, RequestGen, WorkloadSpec};
+use a100win::sim::{FaultPlan, Machine};
+use a100win::workload::{
+    drive, drive_chaos, synth::Distribution, ChaosConfig, ChaosReport, OpenLoopConfig, RequestGen,
+    WorkloadSpec,
+};
 
 const USAGE: &str = "\
 a100win — full-speed random access to the entire (simulated) A100 memory
@@ -35,6 +38,7 @@ USAGE:
                     [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
                     [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
                     [--verify N]
+                    [--chaos [--seed N] [--deadline-ms N]]  (chaos soak, see below)
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -66,6 +70,16 @@ SUBCOMMANDS:
              serves N fully-verified requests (every merged row checked
              against the table) and asserts the repartition counters are
              consistent (generations == redeals + resplits + migrations).
+             --chaos replaces the QPS sweep with a verifying chaos soak:
+             a seeded fault schedule (worker stalls, group outages,
+             flapping health — sim/fault.rs) fires against the fully
+             armed resilience stack (retries, hedging, partial results,
+             circuit breakers) under drift:zipf load; every delivered
+             row is checked against the table and the run fails on any
+             corrupted row, malformed partial mask, total outage, or
+             unbounded failure-resolution p99.  --seed picks the fault
+             schedule, --deadline-ms the per-request deadline, --verify
+             N re-checks N requests after the soak settles.
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -85,11 +99,18 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let val = argv
-                    .get(i + 1)
-                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
-                flags.insert(name.to_string(), val.clone());
-                i += 2;
+                // A flag followed by another flag (or nothing) is boolean
+                // (`--chaos`); otherwise it consumes the next token.
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(name.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(name.to_string(), String::new());
+                        i += 1;
+                    }
+                }
             } else {
                 positional.push(a.clone());
                 i += 1;
@@ -100,6 +121,10 @@ impl Args {
 
     fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
+    }
+
+    fn bool_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
     }
 
     fn u64_flag(&self, name: &str, default: u64) -> anyhow::Result<u64> {
@@ -516,6 +541,9 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         "sim" => {}
         other => anyhow::bail!("bench-serve only supports --backend sim, got '{other}'"),
     }
+    if args.bool_flag("chaos") {
+        return cmd_chaos(args);
+    }
     let policy = PlacementPolicy::parse(args.flag("policy").unwrap_or("group-to-chunk"))?;
     let placer_name = args.flag("placer").unwrap_or("static");
     // The repartition ladder: static < deal-only (group re-deal) <
@@ -873,6 +901,212 @@ fn bench_serve_fleet(
     Ok(())
 }
 
+/// Chaos soak (`bench-serve --chaos`): drive a seeded fault schedule
+/// against the fully armed resilience stack under drifting zipf load and
+/// verify every delivered row against the table (EXPERIMENTS.md §Chaos).
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_flag("seed", 7)?;
+    let cards = args.u64_flag("cards", 1)? as usize;
+    let requests = args.u64_flag("requests", 400)? as usize;
+    let rows_per_request = (args.u64_flag("rows-per-request", 96)? as usize).max(1);
+    let windows = args.u64_flag("windows", 4)? as usize;
+    let timescale = args.f64_flag("sim-timescale", 8.0)?;
+    if !timescale.is_finite() || timescale < 0.0 {
+        anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
+    }
+    let deadline = Duration::from_millis(args.u64_flag("deadline-ms", 25)?);
+    let verify_n = args.u64_flag("verify", 0)?;
+
+    let chaos_cfg = ChaosConfig {
+        requests,
+        request_rows: ((rows_per_request / 4).max(1), rows_per_request),
+        distribution: Distribution::parse("drift:zipf:1.1:400")?,
+        seed,
+        deadline: Some(deadline),
+        concurrency: 8,
+    };
+
+    if cards > 1 {
+        return chaos_fleet(cards, timescale, seed, chaos_cfg, deadline, verify_n);
+    }
+
+    let machine = machine_with_seed(0xA100)?;
+    let map = TopologyMap::ground_truth(&machine);
+    let groups = map.groups.len();
+    let rows = 32_768u64 * windows as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    let plan = WindowPlan::split(rows, (SERVE_D * 4) as u64, windows);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::parse("group-to-chunk")?);
+    cfg.adaptive = Some(AdaptiveConfig {
+        epoch: Some(Duration::from_millis(20)),
+        ..AdaptiveConfig::default()
+    });
+    cfg.sim_timescale = timescale;
+    cfg.resilience = ResilienceConfig::full();
+    cfg.fault = Some(FaultPlan::chaos(seed, groups));
+    let backend = Arc::new(SimBackend::start(
+        cfg,
+        &map,
+        plan,
+        table.view(),
+        SimTiming::Probed,
+    )?);
+    let service = Service::new(backend.clone());
+
+    println!(
+        "chaos soak: 1 card ({groups} groups), seed {seed}, {requests} requests of up to \
+         {rows_per_request} rows, drift:zipf load, deadline {} ms, paced at {timescale}x sim time",
+        deadline.as_millis()
+    );
+    let report = drive_chaos(&service, &table, &chaos_cfg);
+    print_chaos_report("soak", &report, deadline)?;
+    if let Some((stalls, fails)) = backend.faults_injected() {
+        println!("injected faults: {stalls} stalls, {fails} hard failures");
+    }
+    println!("{}", service.metrics().report());
+    print_decision_trace("card", &backend.control_decisions());
+
+    if verify_n > 0 {
+        let vreport = drive_chaos(
+            &service,
+            &table,
+            &ChaosConfig {
+                requests: verify_n as usize,
+                request_rows: (rows_per_request, rows_per_request),
+                distribution: Distribution::Uniform,
+                seed: seed ^ 0xC0FFEE,
+                deadline: None,
+                concurrency: 4,
+            },
+        );
+        print_chaos_report("verify", &vreport, deadline)?;
+        println!(
+            "verify: {verify_n} requests checked against the table after the soak settled"
+        );
+    }
+    service.shutdown();
+    Ok(())
+}
+
+/// Fleet flavor of the chaos soak: every card gets its own decorrelated
+/// slice of the fault schedule ([`FaultPlan::for_card`]); partial results
+/// merge across cards in request order.
+fn chaos_fleet(
+    cards: usize,
+    timescale: f64,
+    seed: u64,
+    chaos_cfg: ChaosConfig,
+    deadline: Duration,
+    verify_n: u64,
+) -> anyhow::Result<()> {
+    let mut specs = Vec::new();
+    for i in 0..cards {
+        let machine = machine_with_seed(0xA100 + 0x1111 * i as u64)?;
+        let spec = CardSpec {
+            map: TopologyMap::ground_truth(&machine),
+            memory_bytes: machine.config().memory.total_bytes,
+        };
+        specs.push((spec, SimTiming::Probed));
+    }
+    let groups = specs[0].0.map.groups.len();
+    let rows = 32_768u64 * cards as u64;
+    let table = Table::synthetic(rows, SERVE_D);
+    let fleet = FleetService::build_sim_with(
+        specs,
+        &table,
+        FleetConfig {
+            adaptive: Some(AdaptiveConfig {
+                epoch: Some(Duration::from_millis(20)),
+                ..AdaptiveConfig::default()
+            }),
+            epoch: Some(Duration::from_millis(20)),
+            sim_timescale: timescale,
+            resilience: ResilienceConfig::full(),
+            fault: Some(FaultPlan::chaos(seed, groups)),
+            ..FleetConfig::default()
+        },
+    )?;
+
+    println!(
+        "chaos soak: {cards} cards ({groups} groups each), seed {seed}, {} requests of up to \
+         {} rows, drift:zipf load, deadline {} ms, paced at {timescale}x sim time",
+        chaos_cfg.requests,
+        chaos_cfg.request_rows.1,
+        deadline.as_millis()
+    );
+    let report = drive_chaos(&fleet, &table, &chaos_cfg);
+    print_chaos_report("soak", &report, deadline)?;
+    println!("fleet: {}", fleet.fleet_metrics().report());
+    for (card, m) in fleet.per_card_metrics() {
+        println!("  card {card}: {}", m.report());
+    }
+    print_decision_trace("fleet", &fleet.control_decisions());
+
+    if verify_n > 0 {
+        let vreport = drive_chaos(
+            &fleet,
+            &table,
+            &ChaosConfig {
+                requests: verify_n as usize,
+                request_rows: (chaos_cfg.request_rows.1, chaos_cfg.request_rows.1),
+                distribution: Distribution::Uniform,
+                seed: seed ^ 0xC0FFEE,
+                deadline: None,
+                concurrency: 4,
+            },
+        );
+        print_chaos_report("verify", &vreport, deadline)?;
+        println!(
+            "verify: {verify_n} requests merged in request order after the soak settled"
+        );
+    }
+    fleet.shutdown();
+    Ok(())
+}
+
+/// Print a soak report and enforce the chaos acceptance contract: zero
+/// corrupted rows, zero malformed masks, no total outage, and bounded
+/// failure-resolution tail.
+fn print_chaos_report(scope: &str, r: &ChaosReport, deadline: Duration) -> anyhow::Result<()> {
+    println!(
+        "{scope}: {} full, {} partial, {} failed (goodput {:.1}%)",
+        r.completed,
+        r.partials,
+        r.failed,
+        r.goodput() * 100.0
+    );
+    println!(
+        "  rows: {} verified exact, {} masked out (zero-filled), {} corrupted, \
+         {} mask violations",
+        r.valid_rows_checked, r.invalid_rows, r.corrupted_rows, r.mask_violations
+    );
+    println!(
+        "  p99: {} us to succeed, {} us to resolve a failure",
+        r.p99_us, r.failure_p99_us
+    );
+    anyhow::ensure!(
+        r.corrupted_rows == 0 && r.mask_violations == 0,
+        "{scope}: delivered corrupted rows ({}) or malformed masks ({})",
+        r.corrupted_rows,
+        r.mask_violations
+    );
+    anyhow::ensure!(
+        r.completed + r.partials > 0,
+        "{scope}: total outage — no request delivered any data"
+    );
+    // Failures must resolve fast: timeout path is bounded by the deadline,
+    // the fast-fail path by the retry budget's backoff ladder.  The bound
+    // is generous (4x deadline + scheduling slack) but real.
+    let bound = deadline * 4 + Duration::from_millis(100);
+    anyhow::ensure!(
+        r.failed == 0 || u128::from(r.failure_p99_us) <= bound.as_micros(),
+        "{scope}: failure-resolution p99 {} us exceeds bound {} us",
+        r.failure_p99_us,
+        bound.as_micros()
+    );
+    Ok(())
+}
+
 fn cmd_remote(args: &Args) -> anyhow::Result<()> {
     use a100win::sim::nvlink::{run_remote, NvlinkConfig, PeerSpec};
     use a100win::sim::MemRegion;
@@ -994,12 +1228,24 @@ mod tests {
     }
 
     #[test]
-    fn args_rejects_missing_value_and_bad_numbers() {
-        assert!(Args::parse(&["--seed".to_string()]).is_err());
+    fn args_rejects_bad_numbers() {
+        // A bare value-flag parses as boolean (empty value) and fails the
+        // typed accessor instead of failing parse.
+        let a = parse(&["--seed"]);
+        assert!(a.u64_flag("seed", 0).is_err());
         let a = parse(&["--seed", "abc"]);
         assert!(a.u64_flag("seed", 0).is_err());
         let a = parse(&["--effort", "bogus"]);
         assert!(a.effort().is_err());
+    }
+
+    #[test]
+    fn args_boolean_flags() {
+        let a = parse(&["--chaos", "--seed", "7", "--verify", "64"]);
+        assert!(a.bool_flag("chaos"));
+        assert!(!a.bool_flag("nope"));
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 7);
+        assert_eq!(a.u64_flag("verify", 0).unwrap(), 64);
     }
 
     #[test]

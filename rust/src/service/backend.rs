@@ -35,12 +35,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{BatchWait, Batcher};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::{Placement, PlacementCell};
 use crate::coordinator::router::Router;
 use crate::coordinator::table::TableView;
 
+use super::resilience::{PartToken, ResMsg, ResilienceCtx};
 use super::ring::{self, Completion};
 use super::scatter::{ScatterBuf, SlabPool};
 use super::session::{GlobalSlotGuard, SlotGuard};
@@ -84,6 +85,36 @@ pub enum TicketState {
     Expired,
 }
 
+/// What a deadline-aware redemption can deliver: everything, or — when the
+/// backend serves partial results
+/// ([`ResilienceConfig::partials`](super::ResilienceConfig)) — whatever
+/// completed before the request failed or expired, with a per-row validity
+/// mask.  Redeem with [`Ticket::wait_outcome`]; plain [`Ticket::wait`]
+/// keeps the all-or-nothing contract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Every requested row, in request order.
+    Full(Vec<f32>),
+    /// Graceful degradation: `rows` is full-size (request length × d), but
+    /// only positions with `valid[i] == true` carry data (others are
+    /// zeroed).
+    Partial { rows: Vec<f32>, valid: Vec<bool> },
+}
+
+impl Outcome {
+    /// The delivered buffer, discarding the mask.
+    pub fn into_rows(self) -> Vec<f32> {
+        match self {
+            Outcome::Full(rows) => rows,
+            Outcome::Partial { rows, .. } => rows,
+        }
+    }
+
+    pub fn is_partial(&self) -> bool {
+        matches!(self, Outcome::Partial { .. })
+    }
+}
+
 /// Legacy response channel (capacity 1: one response per request, so a
 /// worker send never blocks).  Only the [`DataPath::Legacy`] oracle uses
 /// it; the default path completes through a [`Completion`].
@@ -113,6 +144,10 @@ pub struct Ticket {
     pub(crate) slot: Option<SlotGuard>,
     /// Cross-tenant budget slot (weighted fair sharing), same lifecycle.
     pub(crate) global_slot: Option<GlobalSlotGuard>,
+    /// Partial-result source: when the backend serves partials, the ticket
+    /// keeps a handle on its accumulator so [`Ticket::wait_outcome`] can
+    /// salvage completed rows after a failure or deadline expiry.
+    pub(crate) partial: Option<Arc<RequestAcc>>,
 }
 
 impl std::fmt::Debug for Ticket {
@@ -136,6 +171,7 @@ impl Ticket {
             metrics,
             slot: None,
             global_slot: None,
+            partial: None,
         }
     }
 
@@ -255,6 +291,29 @@ impl Ticket {
         }
     }
 
+    /// Redeem the ticket, degrading gracefully: a fully-gathered request
+    /// returns [`Outcome::Full`]; on failure or deadline expiry, a backend
+    /// serving partials returns whatever sub-batches completed as
+    /// [`Outcome::Partial`] (counted in `Metrics::partials`).  Without
+    /// partials enabled this is `wait` with a `Full` wrapper.
+    pub fn wait_outcome(mut self) -> anyhow::Result<Outcome> {
+        let result = self.wait_inner();
+        drop(self.slot.take());
+        drop(self.global_slot.take());
+        match result {
+            Ok(rows) => Ok(Outcome::Full(rows)),
+            Err(err) => {
+                if let Some(acc) = self.partial.take() {
+                    if let Some((rows, valid)) = acc.take_partial() {
+                        self.metrics.partials.fetch_add(1, Ordering::Relaxed);
+                        return Ok(Outcome::Partial { rows, valid });
+                    }
+                }
+                Err(err)
+            }
+        }
+    }
+
     fn expire(&self) -> anyhow::Error {
         self.metrics.expired.fetch_add(1, Ordering::Relaxed);
         anyhow!("ticket deadline expired after {:?}", self.age())
@@ -370,20 +429,26 @@ pub(crate) struct RequestAcc {
     /// keeps the whole struct compiler-checked Sync (no blanket unsafe)
     /// while the per-sub-batch path stays mutex-free.
     start: Mutex<Instant>,
+    /// Partial delivery enabled: a failed request keeps its buffer so the
+    /// ticket can salvage completed rows instead of discarding them.
+    partials: bool,
 }
 
 impl RequestAcc {
     /// Default-path accumulator: slab output + completion cell.  Created
     /// at submit with the part count unknown; [`RequestAcc::arm`] sets it
-    /// (and the latency origin) at dispatch, before any job is sent.
-    pub(crate) fn new_slab(pool: &Arc<SlabPool>, rows: usize, d: usize) -> Self {
+    /// (and the latency origin) at dispatch, before any job is sent.  The
+    /// completion is pool-backed: an abandoned (never-redeemed) success
+    /// result returns its slab on drop instead of leaking capacity.
+    pub(crate) fn new_slab(pool: &Arc<SlabPool>, rows: usize, d: usize, partials: bool) -> Self {
         Self {
             out: OutBuf::Slab(ScatterBuf::new(pool, rows, d)),
             remaining: AtomicUsize::new(0),
-            responder: Responder::Slot(Arc::new(Completion::new())),
+            responder: Responder::Slot(Arc::new(Completion::with_pool(Arc::clone(pool)))),
             failed: AtomicUsize::new(0),
             failed_msg: Mutex::new(None),
             start: Mutex::new(Instant::now()),
+            partials,
         }
     }
 
@@ -401,6 +466,7 @@ impl RequestAcc {
             failed: AtomicUsize::new(0),
             failed_msg: Mutex::new(None),
             start: Mutex::new(start),
+            partials: false,
         }
     }
 
@@ -419,6 +485,15 @@ impl RequestAcc {
         debug_assert!(parts > 0);
         *self.start.lock().unwrap() = enqueued;
         self.remaining.store(parts, Ordering::Release);
+    }
+
+    /// Grow the countdown mid-flight: a retry that re-splits one failed
+    /// sub-batch into `1 + extra` pieces adds the extra parts *before* any
+    /// replacement job is sent, so the countdown cannot hit zero early.
+    pub(crate) fn add_parts(&self, extra: usize) {
+        if extra > 0 {
+            self.remaining.fetch_add(extra, Ordering::AcqRel);
+        }
     }
 
     /// Is this the legacy (gather-then-locked-scatter) path?
@@ -461,16 +536,27 @@ impl RequestAcc {
                     .take()
                     .unwrap_or_else(|| "sub-batch failed".into());
                 if let OutBuf::Slab(buf) = &self.out {
-                    // The output never surfaces: keep its capacity pooled.
-                    buf.discard();
+                    if !self.partials {
+                        // The output never surfaces: keep its capacity pooled.
+                        buf.discard();
+                    }
+                    // Partials: the buffer stays in place so the ticket can
+                    // salvage completed rows; its slab pools when the
+                    // accumulator drops.
                 }
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 Err(anyhow!(msg))
             } else {
-                Ok(match &self.out {
-                    OutBuf::Slab(buf) => buf.take(),
-                    OutBuf::Legacy(out) => std::mem::take(&mut *out.lock().unwrap()),
-                })
+                match &self.out {
+                    OutBuf::Slab(buf) => match buf.try_take() {
+                        Some(v) => Ok(v),
+                        // The waiter expired and already salvaged a partial;
+                        // the late full result yields to it (not a backend
+                        // error — the rows were all gathered).
+                        None => Err(anyhow!("result already delivered as partial")),
+                    },
+                    OutBuf::Legacy(out) => Ok(std::mem::take(&mut *out.lock().unwrap())),
+                }
             };
             let start = *self.start.lock().unwrap();
             metrics.latency.record(start.elapsed());
@@ -478,11 +564,29 @@ impl RequestAcc {
         }
     }
 
-    /// Record a failure for this part and finish it.
+    /// Record a failure for this part and finish it.  The *first* failure
+    /// message wins — it names the root cause; later failures are usually
+    /// downstream collateral (queue closures after a worker died) and are
+    /// still counted in `failed`.
     pub(crate) fn fail_part(&self, metrics: &Metrics, why: &str) {
-        *self.failed_msg.lock().unwrap() = Some(why.to_string());
+        {
+            let mut msg = self.failed_msg.lock().unwrap();
+            if msg.is_none() {
+                *msg = Some(why.to_string());
+            }
+        }
         self.failed.fetch_add(1, Ordering::Release);
         self.finish_part(metrics);
+    }
+
+    /// Salvage completed rows after a failure or expiry (slab path with
+    /// slot tracking only).  Copies out; late writers may still hold raw
+    /// pointers into the original buffer, which stays put until drop.
+    pub(crate) fn take_partial(&self) -> Option<(Vec<f32>, Vec<bool>)> {
+        match &self.out {
+            OutBuf::Slab(buf) => buf.take_partial(),
+            OutBuf::Legacy(_) => None,
+        }
     }
 
     /// Resolve the whole request with an error without touching the
@@ -537,6 +641,16 @@ pub(crate) struct Job {
     pub(crate) local_rows: Vec<u32>,
     pub(crate) positions: Vec<u32>,
     pub(crate) acc: Arc<RequestAcc>,
+    /// Retry generation: 0 for first dispatch, incremented per re-send.
+    /// Workers pass it back so the retry budget is enforced per sub-batch.
+    pub(crate) attempt: u32,
+    /// Hedging claim: when two copies of a sub-batch race (original +
+    /// speculative re-dispatch), the first completion claims the token and
+    /// writes; the loser stays silent.  `None` when hedging is off — the
+    /// hot path carries no extra state.
+    pub(crate) token: Option<Arc<PartToken>>,
+    /// This copy *is* the speculative one (for `Metrics::hedge_wins`).
+    pub(crate) hedge: bool,
 }
 
 impl Job {
@@ -649,6 +763,7 @@ pub(crate) fn dispatch_formed(
     placement: &Placement,
     senders: &[Option<WorkSender>],
     metrics: &Arc<Metrics>,
+    resilience: Option<&Arc<ResilienceCtx>>,
     d: usize,
 ) {
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -681,6 +796,21 @@ pub(crate) fn dispatch_formed(
         for sb in split.sub_batches {
             metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
             let win = plan.windows()[sb.window];
+            // Hedging: mint a claim token and remember the sub-batch
+            // (global rows + final positions) so the monitor can re-issue
+            // it to a sibling group if it straggles past the watermark.
+            let hedge_entry = match resilience {
+                Some(res) if res.hedge_enabled() => {
+                    let token = Arc::new(PartToken::new());
+                    let rows: Vec<u64> = sb
+                        .local_rows
+                        .iter()
+                        .map(|&l| win.start_row + l as u64)
+                        .collect();
+                    Some((res, token, rows, sb.positions.clone()))
+                }
+                _ => None,
+            };
             let job = Job {
                 window: sb.window,
                 win_start_row: win.start_row,
@@ -688,16 +818,127 @@ pub(crate) fn dispatch_formed(
                 local_rows: sb.local_rows,
                 positions: sb.positions,
                 acc: Arc::clone(&acc),
+                attempt: 0,
+                token: hedge_entry.as_ref().map(|(_, t, _, _)| Arc::clone(t)),
+                hedge: false,
             };
             match senders.get(sb.group).and_then(|s| s.as_ref()) {
                 Some(tx) => {
                     if let Err(job) = tx.send(job) {
                         drop(job);
                         acc.fail_part(metrics, "worker queue closed");
+                    } else if let Some((res, token, rows, positions)) = hedge_entry {
+                        res.register_hedge(token, sb.group, rows, positions, Arc::clone(&acc));
                     }
                 }
                 None => acc.fail_part(metrics, "no worker for group"),
             }
+        }
+    }
+}
+
+/// Re-dispatch a retry or hedge that flowed back to the dispatcher (the
+/// worker rings' single producer).  The rows are re-split under the *live*
+/// placement, so rows from a failed or breaker-evicted group land on
+/// whichever sibling serves their window now.
+fn redispatch(
+    msg: ResMsg,
+    router: &mut Router,
+    cell: &PlacementCell,
+    senders: &[Option<WorkSender>],
+    metrics: &Arc<Metrics>,
+    res: &Arc<ResilienceCtx>,
+) {
+    let (plan, placement) = cell.load_planned();
+    let split = router.split(&msg.rows, &plan, &placement);
+    if msg.hedge {
+        let token = Arc::clone(msg.token.as_ref().expect("hedge messages carry a claim token"));
+        let mut delivered = false;
+        // A hedge duplicates exactly one original sub-batch; if the live
+        // plan now splits those rows across windows the speculation is
+        // stale — abandon the copy rather than fan one token across
+        // several jobs.
+        if split.sub_batches.len() == 1 {
+            let mut sb = split.sub_batches.into_iter().next().unwrap();
+            // Prefer a sibling group over the straggling original.
+            let mut group = sb.group;
+            if msg.exclude == Some(group) {
+                if let Some(&alt) = placement
+                    .serving_groups(sb.window)
+                    .iter()
+                    .find(|&&g| Some(g) != msg.exclude)
+                {
+                    group = alt;
+                }
+            }
+            // Sub-split positions index msg.rows; remap to final request
+            // positions in place.
+            for p in sb.positions.iter_mut() {
+                *p = msg.positions[*p as usize];
+            }
+            let win = plan.windows()[sb.window];
+            let job = Job {
+                window: sb.window,
+                win_start_row: win.start_row,
+                win_rows: win.rows,
+                local_rows: sb.local_rows,
+                positions: sb.positions,
+                acc: Arc::clone(&msg.acc),
+                attempt: msg.attempt,
+                token: Some(Arc::clone(&token)),
+                hedge: true,
+            };
+            if let Some(tx) = senders.get(group).and_then(|s| s.as_ref()) {
+                delivered = tx.send(job).is_ok();
+            }
+        }
+        if !delivered && token.copy_failed() {
+            // The original failed concurrently and deferred to this copy;
+            // the part is ours to finish — retry it or fail the request.
+            if !(res.can_retry(msg.attempt)
+                && res.send_retry(msg.rows, msg.positions, Arc::clone(&msg.acc), msg.attempt))
+            {
+                msg.acc
+                    .fail_part(metrics, "hedge undeliverable after original failed");
+            }
+        }
+        return;
+    }
+    // Retry: grow the countdown for any extra sub-batches *before* sending,
+    // then fan out exactly like a fresh dispatch.  Retries carry no hedge
+    // token — a retry is already the recovery path; hedging it would
+    // compound speculation.
+    let extra = split.sub_batches.len().saturating_sub(1);
+    if split.sub_batches.is_empty() {
+        msg.acc.fail_part(metrics, "retry found no serving group");
+        return;
+    }
+    msg.acc.add_parts(extra);
+    for mut sb in split.sub_batches {
+        metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
+        for p in sb.positions.iter_mut() {
+            *p = msg.positions[*p as usize];
+        }
+        let win = plan.windows()[sb.window];
+        let job = Job {
+            window: sb.window,
+            win_start_row: win.start_row,
+            win_rows: win.rows,
+            local_rows: sb.local_rows,
+            positions: sb.positions,
+            acc: Arc::clone(&msg.acc),
+            attempt: msg.attempt,
+            token: None,
+            hedge: false,
+        };
+        match senders.get(sb.group).and_then(|s| s.as_ref()) {
+            Some(tx) => {
+                if let Err(job) = tx.send(job) {
+                    drop(job);
+                    msg.acc.fail_part(metrics, "worker queue closed");
+                }
+            }
+            None => msg.acc.fail_part(metrics, "no worker for group"),
         }
     }
 }
@@ -731,27 +972,104 @@ impl Pipeline {
         senders: Vec<Option<WorkSender>>,
         shell_returns: Vec<ring::Consumer<Shells>>,
         workers: Vec<std::thread::JoinHandle<()>>,
+        resilience: Option<Arc<ResilienceCtx>>,
     ) -> anyhow::Result<Self> {
         let batcher = Arc::new(Batcher::new(cfg));
         let dispatcher = {
             let batcher = Arc::clone(&batcher);
             std::thread::Builder::new()
                 .name("a100win-dispatcher".into())
-                .spawn(move || {
-                    let mut router = Router::new();
-                    while let Some(batch) = batcher.next_batch() {
-                        for ret in &shell_returns {
-                            while let Some((local_rows, positions)) = ret.try_recv() {
-                                router.adopt_shells(local_rows, positions);
+                .spawn(move || match resilience {
+                    None => {
+                        // Hot path, bit-identical to the resilience-free
+                        // pipeline: block on the batcher, dispatch, repeat.
+                        let mut router = Router::new();
+                        while let Some(batch) = batcher.next_batch() {
+                            for ret in &shell_returns {
+                                while let Some((local_rows, positions)) = ret.try_recv() {
+                                    router.adopt_shells(local_rows, positions);
+                                }
+                            }
+                            let (plan, placement) = cell.load_planned();
+                            dispatch_formed(
+                                batch, &mut router, &plan, &placement, &senders, &metrics, None,
+                                d,
+                            );
+                        }
+                        for s in senders.iter().flatten() {
+                            s.shutdown();
+                        }
+                    }
+                    Some(res) => {
+                        // Resilient dispatcher: the single producer for
+                        // every worker ring (preserving the SPSC
+                        // invariant), so retries and hedges from workers
+                        // and the monitor flow back here over one mpsc
+                        // channel and re-enter the rings in-line.
+                        let rx = res
+                            .take_receiver()
+                            .expect("resilience receiver taken once, by the dispatcher");
+                        let mut router = Router::new();
+                        let mut pending: Vec<ResMsg> = Vec::new();
+                        const IDLE_TICK: Duration = Duration::from_millis(1);
+                        loop {
+                            let now = Instant::now();
+                            let mut wait = IDLE_TICK;
+                            for m in &pending {
+                                wait = wait.min(m.due.saturating_duration_since(now));
+                            }
+                            let batch = match batcher.next_batch_or_timeout(wait) {
+                                BatchWait::Batch(b) => Some(b),
+                                BatchWait::TimedOut => None,
+                                BatchWait::Closed => break,
+                            };
+                            for ret in &shell_returns {
+                                while let Some((local_rows, positions)) = ret.try_recv() {
+                                    router.adopt_shells(local_rows, positions);
+                                }
+                            }
+                            while let Ok(m) = rx.try_recv() {
+                                pending.push(m);
+                            }
+                            let now = Instant::now();
+                            let mut i = 0;
+                            while i < pending.len() {
+                                if pending[i].due <= now {
+                                    let msg = pending.swap_remove(i);
+                                    redispatch(msg, &mut router, &cell, &senders, &metrics, &res);
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                            if let Some(batch) = batch {
+                                let (plan, placement) = cell.load_planned();
+                                dispatch_formed(
+                                    batch,
+                                    &mut router,
+                                    &plan,
+                                    &placement,
+                                    &senders,
+                                    &metrics,
+                                    Some(&res),
+                                    d,
+                                );
                             }
                         }
-                        let (plan, placement) = cell.load_planned();
-                        dispatch_formed(
-                            batch, &mut router, &plan, &placement, &senders, &metrics, d,
-                        );
-                    }
-                    for s in senders.iter().flatten() {
-                        s.shutdown();
+                        for s in senders.iter().flatten() {
+                            s.shutdown();
+                        }
+                        // Undelivered retries still own an outstanding part
+                        // of their request; fail them so waiters resolve.
+                        for msg in pending.drain(..) {
+                            let abandoned = match &msg.token {
+                                Some(tok) => tok.copy_failed(),
+                                None => true,
+                            };
+                            if abandoned {
+                                msg.acc
+                                    .fail_part(&metrics, "backend shut down before retry");
+                            }
+                        }
                     }
                 })
                 .context("spawning dispatcher")?
@@ -786,6 +1104,7 @@ pub(crate) fn submit_ticketed(
     total_rows: u64,
     d: usize,
     path: &DataPath,
+    partials: bool,
     batch: Batch,
 ) -> anyhow::Result<Ticket> {
     for &r in batch.rows.iter() {
@@ -803,12 +1122,15 @@ pub(crate) fn submit_ticketed(
     }
     match path {
         DataPath::Slab(pool) => {
-            let acc = Arc::new(RequestAcc::new_slab(pool, batch.rows.len(), d));
+            let acc = Arc::new(RequestAcc::new_slab(pool, batch.rows.len(), d, partials));
             let done = acc.completion();
+            let partial_src = partials.then(|| Arc::clone(&acc));
             batcher
                 .submit(batch.rows, batch.deadline, ReqHandle::Acc(acc))
                 .map_err(|_| anyhow!("backend is shutting down"))?;
-            Ok(Ticket::from_completion(done, batch.deadline, Arc::clone(metrics)))
+            let mut ticket = Ticket::from_completion(done, batch.deadline, Arc::clone(metrics));
+            ticket.partial = partial_src;
+            Ok(ticket)
         }
         DataPath::Legacy => {
             let (tx, rx) = mpsc::sync_channel(1);
@@ -895,7 +1217,7 @@ mod tests {
         // The accumulator dropping un-completed (worker died mid-job) must
         // wake the waiter with an error, mirroring channel disconnection.
         let pool = SlabPool::new();
-        let acc = Arc::new(RequestAcc::new_slab(&pool, 2, 2));
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 2, 2, false));
         let mut t = Ticket::from_completion(acc.completion(), None, metrics());
         drop(acc);
         assert_eq!(t.poll(), TicketState::Ready);
@@ -905,7 +1227,7 @@ mod tests {
 
     fn slab_acc(rows: usize, d: usize, parts: usize) -> (Arc<RequestAcc>, Arc<Completion>) {
         let pool = SlabPool::new();
-        let acc = Arc::new(RequestAcc::new_slab(&pool, rows, d));
+        let acc = Arc::new(RequestAcc::new_slab(&pool, rows, d, false));
         acc.arm(parts, Instant::now());
         let done = acc.completion();
         (acc, done)
@@ -972,5 +1294,58 @@ mod tests {
             done.try_take().unwrap().unwrap(),
             vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
         );
+    }
+
+    #[test]
+    fn first_failure_message_wins() {
+        // The root cause must surface, not whichever part failed last;
+        // later failures are still counted.
+        let m = metrics();
+        let (acc, done) = slab_acc(1, 2, 3);
+        acc.fail_part(&m, "worker died: injected fault");
+        acc.fail_part(&m, "worker queue closed");
+        acc.fail_part(&m, "worker queue closed");
+        let err = done.try_take().unwrap().unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert_eq!(acc.failed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn partial_outcome_salvages_completed_rows() {
+        let m = metrics();
+        let pool = SlabPool::with_claims(true);
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 2, 2, true));
+        acc.arm(2, Instant::now());
+        let mut ticket = Ticket::from_completion(acc.completion(), None, Arc::clone(&m));
+        ticket.partial = Some(Arc::clone(&acc));
+        acc.write_row(0, &[1.0, 2.0]);
+        acc.finish_part(&m);
+        acc.fail_part(&m, "injected fault");
+        match ticket.wait_outcome().unwrap() {
+            Outcome::Partial { rows, valid } => {
+                assert_eq!(rows, vec![1.0, 2.0, 0.0, 0.0]);
+                assert_eq!(valid, vec![true, false]);
+            }
+            other => panic!("expected partial, got {other:?}"),
+        }
+        assert_eq!(m.partials.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn full_success_without_partials_is_unchanged() {
+        let m = metrics();
+        let pool = SlabPool::with_claims(true);
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 1, 2, true));
+        acc.arm(1, Instant::now());
+        let mut ticket = Ticket::from_completion(acc.completion(), None, Arc::clone(&m));
+        ticket.partial = Some(Arc::clone(&acc));
+        acc.write_row(0, &[7.0, 8.0]);
+        acc.finish_part(&m);
+        assert_eq!(
+            ticket.wait_outcome().unwrap(),
+            Outcome::Full(vec![7.0, 8.0])
+        );
+        assert_eq!(m.partials.load(Ordering::Relaxed), 0);
     }
 }

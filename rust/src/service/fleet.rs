@@ -46,8 +46,11 @@ use crate::coordinator::placement::PlacementPolicy;
 use crate::coordinator::replan::SplitterConfig;
 use crate::coordinator::table::{Table, TableView};
 
-use super::backend::{scatter_rows, Ticket, TicketState};
+use crate::sim::FaultPlan;
+
+use super::backend::{scatter_rows, Outcome, Ticket, TicketState};
 use super::rebalance::{FleetRebalancer, RebalanceConfig};
+use super::resilience::ResilienceConfig;
 use super::ring::EpochGate;
 use super::scatter::SlabPool;
 use super::sim_backend::{SimBackend, SimBackendConfig, SimTiming};
@@ -78,6 +81,13 @@ pub struct FleetConfig {
     /// Run every card on the pre-slab legacy request pipeline (the
     /// `benches/serve_hotpath.rs --legacy-path` oracle).
     pub legacy_path: bool,
+    /// Per-card self-healing (retries, hedging, partials, breakers),
+    /// applied to every card backend — including backends rebuilt by a
+    /// migration.
+    pub resilience: ResilienceConfig,
+    /// Deterministic fault injection, decorrelated per card via
+    /// [`FaultPlan::for_card`] (same schedule shape, independent draws).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for FleetConfig {
@@ -95,6 +105,8 @@ impl Default for FleetConfig {
             epoch: None,
             sim_timescale: 0.0,
             legacy_path: false,
+            resilience: ResilienceConfig::default(),
+            fault: None,
         }
     }
 }
@@ -162,6 +174,65 @@ impl FleetTicket {
             self.generation.cards[part.shard].recycle(rows);
         }
         Ok(out)
+    }
+
+    /// Redeem with graceful degradation: a card that failed or delivered
+    /// only part of its shard contributes to the request-order validity
+    /// mask instead of failing the whole request.  `Full` when every card
+    /// delivered every row; `Err` only when *no* row was delivered (first
+    /// card error, with its shard context).
+    pub fn wait_outcome(self) -> anyhow::Result<Outcome> {
+        let d = self.d;
+        let mut out = self.pool.get(self.request_len * d);
+        let mut valid = vec![false; self.request_len];
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut degraded = false;
+        for part in self.parts {
+            match part.ticket.wait_outcome() {
+                Ok(Outcome::Full(rows)) => {
+                    scatter_rows(&mut out, &part.positions, &rows, d);
+                    for &p in &part.positions {
+                        valid[p as usize] = true;
+                    }
+                    self.generation.cards[part.shard].recycle(rows);
+                }
+                Ok(Outcome::Partial {
+                    rows,
+                    valid: card_valid,
+                }) => {
+                    degraded = true;
+                    // `rows`/`card_valid` are in the card sub-request's
+                    // order; scatter row-by-row through `positions`, zeroing
+                    // invalid slots (the merged buffer is pooled — stale).
+                    for (k, &p) in part.positions.iter().enumerate() {
+                        let span = p as usize * d..(p as usize + 1) * d;
+                        if card_valid[k] {
+                            out[span].copy_from_slice(&rows[k * d..(k + 1) * d]);
+                            valid[p as usize] = true;
+                        } else {
+                            out[span].fill(0.0);
+                        }
+                    }
+                    self.generation.cards[part.shard].recycle(rows);
+                }
+                Err(e) => {
+                    degraded = true;
+                    for &p in &part.positions {
+                        out[p as usize * d..(p as usize + 1) * d].fill(0.0);
+                    }
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("card shard {}", part.shard)));
+                    }
+                }
+            }
+        }
+        if !degraded {
+            return Ok(Outcome::Full(out));
+        }
+        if valid.iter().any(|&v| v) {
+            return Ok(Outcome::Partial { rows: out, valid });
+        }
+        Err(first_err.unwrap_or_else(|| anyhow!("no rows delivered")))
     }
 }
 
@@ -410,6 +481,8 @@ fn start_card_backend(
     bcfg.resplit = cfg.resplit.clone();
     bcfg.sim_timescale = cfg.sim_timescale;
     bcfg.legacy_path = cfg.legacy_path;
+    bcfg.resilience = cfg.resilience.clone();
+    bcfg.fault = cfg.fault.as_ref().map(|p| p.for_card(shard.card));
     Ok(Arc::new(SimBackend::start_with_placement(
         bcfg,
         &spec.map,

@@ -63,6 +63,7 @@
 pub mod backend;
 pub mod fleet;
 pub mod rebalance;
+pub mod resilience;
 pub(crate) mod ring;
 pub(crate) mod scatter;
 pub mod session;
@@ -73,9 +74,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 
-pub use backend::{Backend, Batch, Ticket, TicketState};
+pub use backend::{Backend, Batch, Outcome, Ticket, TicketState};
 pub use fleet::{FleetConfig, FleetService, FleetTicket};
 pub use rebalance::{FleetRebalancer, MigrationProposal, RebalanceConfig};
+pub use resilience::{BreakerConfig, BreakerState, HedgeConfig, ResilienceConfig, RetryPolicy};
 pub use session::{
     GlobalAdmission, OverloadPolicy, Session, SessionConfig, SessionStats, TenantShare,
 };

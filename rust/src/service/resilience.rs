@@ -1,0 +1,681 @@
+//! Self-healing serving: retries, straggler hedging, partial results, and
+//! per-group circuit breakers.
+//!
+//! The reach constraint makes failure recovery *routing*: a failed
+//! sub-batch's rows live in exactly one window, so the only way to retry
+//! them is to re-split against the **live** [`PlacementCell`] — after a
+//! health epoch evicted the failing group, the retry lands on a healthy
+//! sibling holding the same window.  Everything here feeds that loop:
+//!
+//! * [`RetryPolicy`] — per-sub-batch retry with a budget and exponential
+//!   backoff; the retried rows go back through the dispatcher (the job
+//!   rings are single-producer, so workers never re-enqueue directly —
+//!   they post a [`ResMsg`] on one mpsc channel the dispatcher drains).
+//! * [`HedgeConfig`] — sub-batches outstanding past a latency-quantile
+//!   watermark are speculatively re-dispatched to a sibling group serving
+//!   the same window; a [`PartToken`] makes completion first-wins, and the
+//!   scatter claim bitmap keeps duplicate writes detectable.
+//! * [`BreakerConfig`] — per-group closed→open→half-open breaker.  Open
+//!   maps to `GroupHealth::Failed` (evicted by the next health epoch),
+//!   half-open to `Degraded` (re-included at half weight — its live
+//!   traffic *is* the probe stream).  Transitions fire a hook into the
+//!   control plane so they appear in the decision trace.
+//! * Partial results ride on the scatter layer's per-slot state (see
+//!   [`super::scatter::ScatterBuf::take_partial`]) and surface as
+//!   [`super::backend::Outcome::Partial`].
+//!
+//! All of it is off by default and allocation-free when off: the hot path
+//! (PR 5) is untouched unless a [`ResilienceConfig`] turns a feature on.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::backend::RequestAcc;
+
+/// Per-sub-batch retry: up to `budget` re-dispatches with exponential
+/// backoff (`backoff * 2^attempt`), each re-routed through the live
+/// placement.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    pub budget: u32,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            budget: 3,
+            backoff: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Straggler hedging: a sub-batch outstanding longer than
+/// `max(min_after, latency quantile)` is speculatively duplicated onto a
+/// sibling group serving the same window; first completion wins.
+#[derive(Debug, Clone)]
+pub struct HedgeConfig {
+    /// Floor on the hedge watermark — never hedge sooner than this (keeps
+    /// cold-start quantiles from hedging everything).
+    pub min_after: Duration,
+    /// Latency quantile (of the request latency histogram) used as the
+    /// straggler watermark, e.g. 0.99.
+    pub quantile: f64,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        Self {
+            min_after: Duration::from_millis(3),
+            quantile: 0.99,
+        }
+    }
+}
+
+/// Per-group circuit breaker: `failure_threshold` consecutive failures
+/// open the breaker (group evicted); after `open_for` it half-opens
+/// (re-included at half weight — real traffic probes it);
+/// `probe_successes` consecutive successes close it again.
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    pub failure_threshold: u32,
+    pub open_for: Duration,
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 5,
+            open_for: Duration::from_millis(20),
+            probe_successes: 3,
+        }
+    }
+}
+
+/// The resilience feature set.  `Default` is everything off — the serving
+/// hot path is bit-identical to the non-resilient build until a feature
+/// is enabled.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceConfig {
+    pub retry: Option<RetryPolicy>,
+    pub hedge: Option<HedgeConfig>,
+    pub breaker: Option<BreakerConfig>,
+    /// Deliver completed rows + a per-row validity mask
+    /// ([`super::backend::Outcome::Partial`]) instead of failing the whole
+    /// ticket, via [`super::backend::Ticket::wait_outcome`].
+    pub partials: bool,
+}
+
+impl ResilienceConfig {
+    /// Everything on, at default settings (the chaos-soak posture).
+    pub fn full() -> Self {
+        Self {
+            retry: Some(RetryPolicy::default()),
+            hedge: Some(HedgeConfig::default()),
+            breaker: Some(BreakerConfig::default()),
+            partials: true,
+        }
+    }
+
+    /// Any feature enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.needs_ctx() || self.partials
+    }
+
+    /// Features that need the runtime context (retry/hedge/breaker);
+    /// partials ride on the scatter layer alone.
+    pub fn needs_ctx(&self) -> bool {
+        self.retry.is_some() || self.hedge.is_some() || self.breaker.is_some()
+    }
+}
+
+/// Breaker states, in the classic closed→open→half-open cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: traffic flows, consecutive failures counted.
+    Closed,
+    /// Tripped: the group is evicted from serving until `open_for` passes.
+    Open,
+    /// Probation: re-included at reduced weight; its live traffic is the
+    /// probe stream.
+    HalfOpen,
+}
+
+const ST_CLOSED: u8 = 0;
+const ST_OPEN: u8 = 1;
+const ST_HALF_OPEN: u8 = 2;
+
+fn state_of(v: u8) -> BreakerState {
+    match v {
+        ST_OPEN => BreakerState::Open,
+        ST_HALF_OPEN => BreakerState::HalfOpen,
+        _ => BreakerState::Closed,
+    }
+}
+
+struct GroupBreaker {
+    state: AtomicU8,
+    consec_failures: AtomicU32,
+    probe_successes: AtomicU32,
+    opened_at: Mutex<Option<Instant>>,
+}
+
+/// Per-group breaker bank.  Lock-free on the success/failure hot path;
+/// the `opened_at` mutex is only touched on transitions and ticks.
+pub(crate) struct CircuitBreaker {
+    cfg: BreakerConfig,
+    groups: Vec<GroupBreaker>,
+}
+
+impl CircuitBreaker {
+    fn new(cfg: BreakerConfig, groups: usize) -> Self {
+        Self {
+            cfg,
+            groups: (0..groups)
+                .map(|_| GroupBreaker {
+                    state: AtomicU8::new(ST_CLOSED),
+                    consec_failures: AtomicU32::new(0),
+                    probe_successes: AtomicU32::new(0),
+                    opened_at: Mutex::new(None),
+                })
+                .collect(),
+        }
+    }
+
+    pub(crate) fn state(&self, group: usize) -> BreakerState {
+        state_of(self.groups[group].state.load(Ordering::Acquire))
+    }
+
+    /// Record a failure; `Some(new_state)` on a transition.
+    fn on_failure(&self, group: usize) -> Option<BreakerState> {
+        let g = &self.groups[group];
+        match g.state.load(Ordering::Acquire) {
+            ST_CLOSED => {
+                let n = g.consec_failures.fetch_add(1, Ordering::AcqRel) + 1;
+                if n >= self.cfg.failure_threshold
+                    && g.state
+                        .compare_exchange(ST_CLOSED, ST_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                {
+                    *g.opened_at.lock().unwrap() = Some(Instant::now());
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            ST_HALF_OPEN => {
+                // A probe failed: straight back to open.
+                if g.state
+                    .compare_exchange(ST_HALF_OPEN, ST_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    g.probe_successes.store(0, Ordering::Release);
+                    *g.opened_at.lock().unwrap() = Some(Instant::now());
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// Record a success; `Some(new_state)` on a transition.
+    fn on_success(&self, group: usize) -> Option<BreakerState> {
+        let g = &self.groups[group];
+        match g.state.load(Ordering::Acquire) {
+            ST_CLOSED => {
+                g.consec_failures.store(0, Ordering::Release);
+                None
+            }
+            ST_HALF_OPEN => {
+                let n = g.probe_successes.fetch_add(1, Ordering::AcqRel) + 1;
+                if n >= self.cfg.probe_successes
+                    && g.state
+                        .compare_exchange(
+                            ST_HALF_OPEN,
+                            ST_CLOSED,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                {
+                    g.consec_failures.store(0, Ordering::Release);
+                    return Some(BreakerState::Closed);
+                }
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// Age open breakers into half-open; returns the groups that moved.
+    fn tick(&self, now: Instant) -> Vec<usize> {
+        let mut moved = Vec::new();
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.state.load(Ordering::Acquire) != ST_OPEN {
+                continue;
+            }
+            let due = g
+                .opened_at
+                .lock()
+                .unwrap()
+                .is_some_and(|t| now.duration_since(t) >= self.cfg.open_for);
+            if due
+                && g.state
+                    .compare_exchange(ST_OPEN, ST_HALF_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                g.probe_successes.store(0, Ordering::Release);
+                moved.push(i);
+            }
+        }
+        moved
+    }
+}
+
+/// First-completion-wins token shared by a sub-batch and its hedge
+/// copies.  `copies` counts outstanding copies so that *failure* only
+/// propagates when every copy has failed (the last failing copy claims
+/// the token and owns the part's fate).
+pub(crate) struct PartToken {
+    claimed: AtomicBool,
+    copies: AtomicU32,
+}
+
+impl PartToken {
+    pub(crate) fn new() -> Self {
+        Self {
+            claimed: AtomicBool::new(false),
+            copies: AtomicU32::new(1),
+        }
+    }
+
+    /// Claim the part.  The winner (and only the winner) scatters its rows
+    /// and finishes the part.
+    pub(crate) fn claim(&self) -> bool {
+        !self.claimed.swap(true, Ordering::AcqRel)
+    }
+
+    pub(crate) fn is_claimed(&self) -> bool {
+        self.claimed.load(Ordering::Acquire)
+    }
+
+    /// Another copy is being dispatched (called by the dispatcher before
+    /// the hedge job is sent).
+    pub(crate) fn add_copy(&self) {
+        self.copies.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// This copy failed.  True iff the failure must propagate: it was the
+    /// last outstanding copy *and* no copy had succeeded — in which case
+    /// this call claims the token and the caller owns the retry/fail path.
+    pub(crate) fn copy_failed(&self) -> bool {
+        self.copies.fetch_sub(1, Ordering::AcqRel) == 1 && self.claim()
+    }
+}
+
+/// A recovery work item posted back to the dispatcher (the only job-ring
+/// producer).  Rows are global row ids — the dispatcher re-splits them
+/// against the *current* placement generation.
+pub(crate) struct ResMsg {
+    /// Global row ids to re-dispatch.
+    pub rows: Vec<u64>,
+    /// Final output positions, parallel to `rows`.
+    pub positions: Vec<u32>,
+    pub acc: Arc<RequestAcc>,
+    /// Retry attempt this message carries (0 for hedges).
+    pub attempt: u32,
+    /// Dispatch no earlier than this (backoff; hedges are immediate).
+    pub due: Instant,
+    pub hedge: bool,
+    /// Hedge only: the token shared with the original copy.
+    pub token: Option<Arc<PartToken>>,
+    /// Hedge only: prefer a sibling group other than this one.
+    pub exclude: Option<usize>,
+}
+
+/// One outstanding hedge-eligible sub-batch, watched by the monitor.
+struct HedgeEntry {
+    token: Arc<PartToken>,
+    started: Instant,
+    group: usize,
+    rows: Vec<u64>,
+    positions: Vec<u32>,
+    acc: Arc<RequestAcc>,
+}
+
+type BreakerHook = Arc<dyn Fn(usize, BreakerState) + Send + Sync>;
+
+/// The shared resilience runtime: breaker bank, retry/hedge channel back
+/// to the dispatcher, hedge registry, and the monitor thread that ages
+/// breakers and fires hedges.
+pub(crate) struct ResilienceCtx {
+    pub(crate) cfg: ResilienceConfig,
+    metrics: Arc<Metrics>,
+    breaker: Option<CircuitBreaker>,
+    // `mpsc::Sender` is !Sync on older toolchains; the mutex makes the ctx
+    // shareable.  Workers clone their own sender at construction, so this
+    // lock is off the per-job path.
+    tx: Mutex<mpsc::Sender<ResMsg>>,
+    rx: Mutex<Option<mpsc::Receiver<ResMsg>>>,
+    registry: Mutex<Vec<HedgeEntry>>,
+    hook: Mutex<Option<BreakerHook>>,
+    stop: AtomicBool,
+    monitor: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl ResilienceCtx {
+    pub(crate) fn new(cfg: ResilienceConfig, metrics: Arc<Metrics>, groups: usize) -> Arc<Self> {
+        let (tx, rx) = mpsc::channel();
+        let breaker = cfg
+            .breaker
+            .clone()
+            .map(|bcfg| CircuitBreaker::new(bcfg, groups));
+        Arc::new(Self {
+            cfg,
+            metrics,
+            breaker,
+            tx: Mutex::new(tx),
+            rx: Mutex::new(Some(rx)),
+            registry: Mutex::new(Vec::new()),
+            hook: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            monitor: Mutex::new(None),
+        })
+    }
+
+    pub(crate) fn hedge_enabled(&self) -> bool {
+        self.cfg.hedge.is_some()
+    }
+
+    /// A sender for a worker thread (each worker owns its clone).
+    pub(crate) fn sender(&self) -> mpsc::Sender<ResMsg> {
+        self.tx.lock().unwrap().clone()
+    }
+
+    /// The dispatcher takes the single receiver at pipeline start.
+    pub(crate) fn take_receiver(&self) -> Option<mpsc::Receiver<ResMsg>> {
+        self.rx.lock().unwrap().take()
+    }
+
+    pub(crate) fn breaker_state(&self, group: usize) -> Option<BreakerState> {
+        self.breaker.as_ref().map(|b| b.state(group))
+    }
+
+    /// Wire breaker transitions into the control plane (health epoch +
+    /// decision trace).  Installed once the control context exists.
+    pub(crate) fn install_hook(&self, hook: BreakerHook) {
+        *self.hook.lock().unwrap() = Some(hook);
+    }
+
+    fn fire_hook(&self, group: usize, state: BreakerState) {
+        let hook = self.hook.lock().unwrap().clone();
+        if let Some(h) = hook {
+            h(group, state);
+        }
+    }
+
+    fn count_transition(&self, state: BreakerState) {
+        let counter = match state {
+            BreakerState::Open => &self.metrics.breaker_opens,
+            BreakerState::HalfOpen => &self.metrics.breaker_half_opens,
+            BreakerState::Closed => &self.metrics.breaker_closes,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job on `group` completed cleanly.
+    pub(crate) fn note_success(&self, group: usize) {
+        if let Some(b) = &self.breaker {
+            if let Some(state) = b.on_success(group) {
+                self.count_transition(state);
+                self.fire_hook(group, state);
+            }
+        }
+    }
+
+    /// A job on `group` failed (injected or structural).
+    pub(crate) fn note_failure(&self, group: usize) {
+        if let Some(b) = &self.breaker {
+            if let Some(state) = b.on_failure(group) {
+                self.count_transition(state);
+                self.fire_hook(group, state);
+            }
+        }
+    }
+
+    /// Whether a failure at `attempt` still has retry budget.
+    pub(crate) fn can_retry(&self, attempt: u32) -> bool {
+        self.cfg.retry.as_ref().is_some_and(|p| attempt < p.budget)
+    }
+
+    /// Post a retry for `rows` back to the dispatcher.  False if the
+    /// pipeline is gone (caller fails the part instead).
+    pub(crate) fn send_retry(
+        &self,
+        rows: Vec<u64>,
+        positions: Vec<u32>,
+        acc: Arc<RequestAcc>,
+        attempt: u32,
+    ) -> bool {
+        let Some(policy) = &self.cfg.retry else {
+            return false;
+        };
+        let backoff = policy.backoff * 2u32.saturating_pow(attempt.min(16));
+        let msg = ResMsg {
+            rows,
+            positions,
+            acc,
+            attempt: attempt + 1,
+            due: Instant::now() + backoff,
+            hedge: false,
+            token: None,
+            exclude: None,
+        };
+        if self.tx.lock().unwrap().send(msg).is_ok() {
+            self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Register a freshly dispatched sub-batch as hedge-eligible.  Called
+    /// by the dispatcher (hedge mode only — the extra clones are the price
+    /// of speculation, never paid when hedging is off).
+    pub(crate) fn register_hedge(
+        &self,
+        token: Arc<PartToken>,
+        group: usize,
+        rows: Vec<u64>,
+        positions: Vec<u32>,
+        acc: Arc<RequestAcc>,
+    ) {
+        self.registry.lock().unwrap().push(HedgeEntry {
+            token,
+            started: Instant::now(),
+            group,
+            rows,
+            positions,
+            acc,
+        });
+    }
+
+    /// Current hedge watermark: the configured latency quantile, floored
+    /// at `min_after`.
+    fn hedge_watermark(&self) -> Option<Duration> {
+        let h = self.cfg.hedge.as_ref()?;
+        let q = Duration::from_micros(self.metrics.latency.quantile_us(h.quantile));
+        Some(h.min_after.max(q))
+    }
+
+    /// One monitor pass: prune settled hedge entries, hedge stragglers,
+    /// age open breakers.  Public-in-crate so tests can drive it directly.
+    pub(crate) fn monitor_pass(&self, now: Instant) {
+        if let Some(watermark) = self.hedge_watermark() {
+            let mut due = Vec::new();
+            {
+                let mut reg = self.registry.lock().unwrap();
+                let mut i = 0;
+                while i < reg.len() {
+                    if reg[i].token.is_claimed() {
+                        reg.swap_remove(i);
+                    } else if now.duration_since(reg[i].started) >= watermark {
+                        due.push(reg.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            for e in due {
+                e.token.add_copy();
+                let msg = ResMsg {
+                    rows: e.rows,
+                    positions: e.positions,
+                    acc: e.acc,
+                    attempt: 0,
+                    due: now,
+                    hedge: true,
+                    token: Some(Arc::clone(&e.token)),
+                    exclude: Some(e.group),
+                };
+                if self.tx.lock().unwrap().send(msg).is_ok() {
+                    self.metrics.hedges.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // Pipeline gone: the copy never dispatches.
+                    e.token.copy_failed();
+                }
+            }
+        }
+        if let Some(b) = &self.breaker {
+            for group in b.tick(now) {
+                self.count_transition(BreakerState::HalfOpen);
+                self.fire_hook(group, BreakerState::HalfOpen);
+            }
+        }
+    }
+
+    /// Start the monitor thread (hedge aging + breaker ticks).  No-op when
+    /// neither feature needs one.
+    pub(crate) fn start_monitor(self: &Arc<Self>) {
+        if self.cfg.hedge.is_none() && self.cfg.breaker.is_none() {
+            return;
+        }
+        let ctx = Arc::clone(self);
+        let handle = thread::Builder::new()
+            .name("a100win-resilience".into())
+            .spawn(move || {
+                while !ctx.stop.load(Ordering::Acquire) {
+                    ctx.monitor_pass(Instant::now());
+                    thread::sleep(Duration::from_micros(500));
+                }
+            })
+            .expect("spawn resilience monitor");
+        *self.monitor.lock().unwrap() = Some(handle);
+    }
+
+    /// Stop the monitor thread (idempotent).
+    pub(crate) fn stop_monitor(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ResilienceCtx {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, probes: u32) -> CircuitBreaker {
+        CircuitBreaker::new(
+            BreakerConfig {
+                failure_threshold: threshold,
+                open_for: Duration::from_millis(5),
+                probe_successes: probes,
+            },
+            2,
+        )
+    }
+
+    #[test]
+    fn breaker_full_cycle() {
+        let b = breaker(3, 2);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_failure(0), Some(BreakerState::Open));
+        assert_eq!(b.state(0), BreakerState::Open);
+        // Other group untouched.
+        assert_eq!(b.state(1), BreakerState::Closed);
+        // Open ignores further traffic outcomes.
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_success(0), None);
+        // Not due yet.
+        assert!(b.tick(Instant::now()).is_empty());
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(b.tick(Instant::now()), vec![0]);
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        // Two probe successes close it.
+        assert_eq!(b.on_success(0), None);
+        assert_eq!(b.on_success(0), Some(BreakerState::Closed));
+        assert_eq!(b.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_failure_reopens() {
+        let b = breaker(1, 2);
+        assert_eq!(b.on_failure(0), Some(BreakerState::Open));
+        std::thread::sleep(Duration::from_millis(6));
+        assert_eq!(b.tick(Instant::now()), vec![0]);
+        assert_eq!(b.on_failure(0), Some(BreakerState::Open));
+        assert_eq!(b.state(0), BreakerState::Open);
+    }
+
+    #[test]
+    fn success_resets_consecutive_failures() {
+        let b = breaker(3, 1);
+        b.on_failure(0);
+        b.on_failure(0);
+        b.on_success(0);
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_failure(0), None);
+        assert_eq!(b.on_failure(0), Some(BreakerState::Open));
+    }
+
+    #[test]
+    fn part_token_first_completion_wins() {
+        let t = PartToken::new();
+        assert!(t.claim());
+        assert!(!t.claim());
+        assert!(t.is_claimed());
+    }
+
+    #[test]
+    fn part_token_failure_propagates_only_when_all_copies_fail() {
+        // Single copy fails -> propagate.
+        let t = PartToken::new();
+        assert!(t.copy_failed());
+        // Two copies: first failure is silent, second propagates.
+        let t = PartToken::new();
+        t.add_copy();
+        assert!(!t.copy_failed());
+        assert!(t.copy_failed());
+        // A success before the last failure suppresses propagation.
+        let t = PartToken::new();
+        t.add_copy();
+        assert!(t.claim());
+        assert!(!t.copy_failed());
+        assert!(!t.copy_failed());
+    }
+}

@@ -26,6 +26,8 @@ use std::sync::{Arc, OnceLock};
 use std::thread::Thread;
 use std::time::{Duration, Instant};
 
+use super::scatter::SlabPool;
+
 /// Backstop for the park handshake: a lost wakeup costs at most this much
 /// latency.  The SeqCst sleeping-flag protocol (set flag → re-check →
 /// park, peer checks the flag after every state change) already makes the
@@ -340,6 +342,10 @@ pub(crate) struct Completion {
     /// Written by the (single) waiter before it CASes `state` to WAITING;
     /// read by the completer only after observing WAITING.
     waiter: UnsafeCell<Option<Thread>>,
+    /// When set, a published-but-never-redeemed `Ok` buffer returns its
+    /// capacity to this pool at drop (an expired/abandoned ticket must not
+    /// leak the slab — under chaos soaks expiry is routine, not rare).
+    pool: Option<Arc<SlabPool>>,
 }
 
 unsafe impl Send for Completion {}
@@ -358,6 +364,15 @@ impl Completion {
             claimed: AtomicBool::new(false),
             result: UnsafeCell::new(None),
             waiter: UnsafeCell::new(None),
+            pool: None,
+        }
+    }
+
+    /// A completion whose unredeemed `Ok` buffer is pooled at drop.
+    pub(crate) fn with_pool(pool: Arc<SlabPool>) -> Self {
+        Self {
+            pool: Some(pool),
+            ..Self::new()
         }
     }
 
@@ -432,6 +447,21 @@ impl Completion {
                 }
             }
             std::thread::park_timeout(timeout);
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        // A ticket abandoned after its result was published (deadline
+        // expiry, caller dropped the handle) would otherwise free the
+        // output slab instead of recycling it.
+        if let Some(pool) = &self.pool {
+            if *self.state.get_mut() == READY {
+                if let Some(Ok(buf)) = self.result.get_mut().take() {
+                    pool.put(buf);
+                }
+            }
         }
     }
 }
@@ -627,6 +657,27 @@ mod tests {
         c.complete(Ok(vec![9.0]));
         let past = Instant::now() - Duration::from_millis(1);
         assert_eq!(c.wait(Some(past)).unwrap().unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn completion_drop_pools_unredeemed_result() {
+        let pool = SlabPool::new();
+        let c = Completion::with_pool(Arc::clone(&pool));
+        c.complete(Ok(pool.get(64)));
+        drop(c); // published but never redeemed: slab must return
+        assert_eq!(pool.pooled(), 1);
+        // A redeemed completion leaves nothing behind...
+        let c = Completion::with_pool(Arc::clone(&pool));
+        c.complete(Ok(pool.get(64)));
+        let buf = c.try_take().unwrap().unwrap();
+        drop(c);
+        assert_eq!(pool.pooled(), 0);
+        pool.put(buf);
+        // ...and an Err result has no buffer to recycle.
+        let c = Completion::with_pool(Arc::clone(&pool));
+        c.complete(Err(anyhow::anyhow!("boom")));
+        drop(c);
+        assert_eq!(pool.pooled(), 1);
     }
 
     #[test]

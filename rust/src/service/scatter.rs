@@ -16,7 +16,7 @@
 //! steady-state output path allocation-free (EXPERIMENTS.md §Perf L4).
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Pooled, capacity-retaining `Vec<f32>` slabs for request outputs.
@@ -28,6 +28,10 @@ pub(crate) struct SlabPool {
     /// Free list plus its total retained capacity in floats (both bounds
     /// checked on put).
     bufs: Mutex<(Vec<Vec<f32>>, usize)>,
+    /// Buffers minted from this pool track per-slot completion state even
+    /// in release builds, enabling [`ScatterBuf::take_partial`].  Set when
+    /// the backend serves partial results; costs one `AtomicU8` per row.
+    claims: bool,
 }
 
 /// Free-list count bound: beyond this the put is dropped (the allocator
@@ -43,6 +47,15 @@ const MAX_POOLED_FLOATS: usize = 16 << 20;
 impl SlabPool {
     pub(crate) fn new() -> Arc<Self> {
         Arc::new(Self::default())
+    }
+
+    /// A pool whose buffers carry per-slot claim state when `claims` is
+    /// set (required for partial results; debug builds claim regardless).
+    pub(crate) fn with_claims(claims: bool) -> Arc<Self> {
+        Arc::new(Self {
+            claims,
+            ..Self::default()
+        })
     }
 
     /// A buffer of exactly `len` elements.  Reuses a pooled slab's
@@ -80,7 +93,7 @@ impl SlabPool {
     }
 
     #[cfg(test)]
-    fn pooled(&self) -> usize {
+    pub(crate) fn pooled(&self) -> usize {
         self.bufs.lock().unwrap().0.len()
     }
 }
@@ -103,9 +116,18 @@ pub(crate) struct ScatterBuf {
     d: usize,
     taken: AtomicBool,
     pool: Arc<SlabPool>,
-    #[cfg(debug_assertions)]
-    claimed: Box<[AtomicBool]>,
+    /// Per-row slot state (empty → writing → done).  Always present in
+    /// debug builds (the alias assertion); present in release only for
+    /// pools with claims on, where the `done` state is what makes a
+    /// partial delivery's validity mask exact.
+    slots: Option<Box<[AtomicU8]>>,
 }
+
+/// Slot states: no write started / a writer is mid-copy / the row's write
+/// completed (its `Release` store pairs with `take_partial`'s `Acquire`).
+const SLOT_EMPTY: u8 = 0;
+const SLOT_WRITING: u8 = 1;
+const SLOT_DONE: u8 = 2;
 
 unsafe impl Send for ScatterBuf {}
 unsafe impl Sync for ScatterBuf {}
@@ -115,14 +137,14 @@ impl ScatterBuf {
     pub(crate) fn new(pool: &Arc<SlabPool>, rows: usize, d: usize) -> Self {
         assert!(d > 0, "row width must be positive");
         let len = rows * d;
+        let track = cfg!(debug_assertions) || pool.claims;
         Self {
             data: UnsafeCell::new(pool.get(len)),
             len,
             d,
             taken: AtomicBool::new(false),
             pool: Arc::clone(pool),
-            #[cfg(debug_assertions)]
-            claimed: (0..rows).map(|_| AtomicBool::new(false)).collect(),
+            slots: track.then(|| (0..rows).map(|_| AtomicU8::new(SLOT_EMPTY)).collect()),
         }
     }
 
@@ -134,14 +156,19 @@ impl ScatterBuf {
         assert_eq!(row.len(), self.d, "row width mismatch");
         let start = pos * self.d;
         assert!(start + self.d <= self.len, "position {pos} out of buffer");
-        #[cfg(debug_assertions)]
-        {
-            let prev = self.claimed[pos].swap(true, Ordering::AcqRel);
-            assert!(!prev, "position {pos} written twice: sub-batch views alias");
+        if let Some(slots) = &self.slots {
+            let prev = slots[pos].swap(SLOT_WRITING, Ordering::AcqRel);
+            assert!(
+                prev == SLOT_EMPTY,
+                "position {pos} written twice: sub-batch views alias"
+            );
         }
         unsafe {
             let base = (*self.data.get()).as_mut_ptr();
             std::ptr::copy_nonoverlapping(row.as_ptr(), base.add(start), self.d);
+        }
+        if let Some(slots) = &self.slots {
+            slots[pos].store(SLOT_DONE, Ordering::Release);
         }
     }
 
@@ -157,9 +184,52 @@ impl ScatterBuf {
     /// Move the filled buffer out (last-finisher only: the request's
     /// sub-batch countdown guarantees a unique caller, after all writes).
     pub(crate) fn take(&self) -> Vec<f32> {
-        let prev = self.taken.swap(true, Ordering::AcqRel);
-        assert!(!prev, "ScatterBuf taken twice");
-        unsafe { std::mem::take(&mut *self.data.get()) }
+        self.try_take().expect("ScatterBuf taken twice")
+    }
+
+    /// Move the filled buffer out, or `None` if it was already taken
+    /// (e.g. delivered early as a partial result).
+    pub(crate) fn try_take(&self) -> Option<Vec<f32>> {
+        if self.taken.swap(true, Ordering::AcqRel) {
+            None
+        } else {
+            Some(unsafe { std::mem::take(&mut *self.data.get()) })
+        }
+    }
+
+    /// Deliver what completed so far: a full-size buffer plus a per-row
+    /// validity mask (`true` = that row's write finished; invalid rows are
+    /// zeroed).  `None` when slot tracking is off or the buffer was
+    /// already taken.
+    ///
+    /// The completed rows are **copied out**, never moved: outstanding
+    /// sub-batches (stragglers, hedged losers) still hold raw pointers
+    /// into the original allocation, which stays in place until every
+    /// writer is done and the buffer drops.  Only rows whose slot reads
+    /// `done` (Acquire, pairing with the writer's Release) are read, so
+    /// the copy never races a mid-flight write.
+    pub(crate) fn take_partial(&self) -> Option<(Vec<f32>, Vec<bool>)> {
+        let slots = self.slots.as_ref()?;
+        if self.taken.swap(true, Ordering::AcqRel) {
+            return None;
+        }
+        let mut out = self.pool.get(self.len);
+        let mut valid = vec![false; slots.len()];
+        for (i, slot) in slots.iter().enumerate() {
+            let span = i * self.d..(i + 1) * self.d;
+            if slot.load(Ordering::Acquire) == SLOT_DONE {
+                valid[i] = true;
+                unsafe {
+                    let base = (*self.data.get()).as_ptr().add(i * self.d);
+                    std::ptr::copy_nonoverlapping(base, out[span].as_mut_ptr(), self.d);
+                }
+            } else {
+                // The pool reuses slabs with stale contents; an invalid
+                // row must read as zeros, not a previous request's data.
+                out[span].fill(0.0);
+            }
+        }
+        Some((out, valid))
     }
 
     /// Return the buffer to the pool without surfacing it (failure path).
@@ -173,11 +243,12 @@ impl ScatterBuf {
 
 impl Drop for ScatterBuf {
     fn drop(&mut self) {
-        // An un-taken buffer (request abandoned before completion) keeps
-        // its capacity in the pool rather than hitting the allocator.
-        if !*self.taken.get_mut() {
-            self.pool.put(std::mem::take(self.data.get_mut()));
-        }
+        // Whatever allocation is still here goes back to the pool: the
+        // un-taken case (request abandoned before completion) and the
+        // partial-delivery case (taken, but the original stayed in place
+        // for late writers).  `take`/`discard` leave an empty Vec behind,
+        // which `put` ignores.
+        self.pool.put(std::mem::take(self.data.get_mut()));
     }
 }
 
@@ -234,6 +305,50 @@ mod tests {
         let buf = ScatterBuf::new(&pool, 2, 1);
         buf.write_row(1, &[1.0]);
         buf.write_row(1, &[2.0]);
+    }
+
+    #[test]
+    fn take_partial_masks_missing_rows() {
+        let pool = SlabPool::with_claims(true);
+        let buf = ScatterBuf::new(&pool, 3, 2);
+        buf.write_row(0, &[1.0, 2.0]);
+        buf.write_row(2, &[5.0, 6.0]);
+        let (out, valid) = buf.take_partial().expect("claims on: partial available");
+        assert_eq!(valid, vec![true, false, true]);
+        assert_eq!(out, vec![1.0, 2.0, 0.0, 0.0, 5.0, 6.0]);
+        // The original buffer was not moved; a second take yields nothing.
+        assert!(buf.try_take().is_none());
+        assert!(buf.take_partial().is_none());
+    }
+
+    #[test]
+    fn take_partial_zeroes_stale_pool_contents() {
+        let pool = SlabPool::with_claims(true);
+        // Seed the pool with a dirty slab.
+        pool.put(vec![9.0f32; 8]);
+        let buf = ScatterBuf::new(&pool, 4, 1);
+        // Fill everything so the dirty slab is fully overwritten, then
+        // partial-deliver into a *second* dirty slab.
+        pool.put(vec![7.0f32; 8]);
+        buf.write_row(1, &[1.5]);
+        let (out, valid) = buf.take_partial().unwrap();
+        assert_eq!(valid, vec![false, true, false, false]);
+        assert_eq!(out, vec![0.0, 1.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn partial_taken_buffer_still_pools_on_drop() {
+        let pool = SlabPool::with_claims(true);
+        let buf = ScatterBuf::new(&pool, 8, 4);
+        buf.write_row(0, &[1.0; 4]);
+        let _ = buf.take_partial().unwrap();
+        let before = pool.pooled();
+        drop(buf);
+        assert_eq!(
+            pool.pooled(),
+            before + 1,
+            "the in-place original must return to the pool at drop"
+        );
     }
 
     #[test]

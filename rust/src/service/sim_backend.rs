@@ -60,12 +60,15 @@ use crate::coordinator::replan::{PlanSplitter, SplitterConfig};
 use crate::coordinator::state::{CoordinatorState, GroupHealth};
 use crate::coordinator::table::TableView;
 use crate::probe::TopologyMap;
-use crate::sim::{Machine, MeasurementSpec, MemRegion, Pattern, SmId};
+use crate::sim::{
+    FaultInjector, FaultPlan, JobFault, Machine, MeasurementSpec, MemRegion, Pattern, SmId,
+};
 
 use super::backend::{
     submit_ticketed, Backend, Batch, DataPath, Job, Pipeline, ReqHandle, Shells, Ticket,
     WorkQueue, WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
 };
+use super::resilience::{BreakerState, ResilienceConfig, ResilienceCtx};
 use super::ring::{self, EpochGate};
 use super::scatter::SlabPool;
 
@@ -118,6 +121,15 @@ pub struct SimBackendConfig {
     /// `benches/serve_hotpath.rs --legacy-path`; results are identical,
     /// only the copy/lock/allocation count differs.
     pub legacy_path: bool,
+    /// Self-healing knobs: retries, hedging, partial results, circuit
+    /// breakers.  The default (everything off) leaves the hot path
+    /// bit-identical to a resilience-free build.
+    pub resilience: ResilienceConfig,
+    /// Deterministic fault injection (tests and the chaos harness): a
+    /// seeded schedule of worker stalls, outages, and health flaps,
+    /// evaluated per job on each group's own job clock.  `None` injects
+    /// nothing and costs nothing.
+    pub fault: Option<FaultPlan>,
 }
 
 impl SimBackendConfig {
@@ -132,6 +144,8 @@ impl SimBackendConfig {
             control: ControlPlaneConfig::default(),
             sim_timescale: 0.0,
             legacy_path: false,
+            resilience: ResilienceConfig::default(),
+            fault: None,
         }
     }
 
@@ -365,13 +379,20 @@ impl ControlCtx {
             load_shares(&signals.rows).unwrap_or_else(|| vec![1.0 / w as f64; w]);
 
         // Steady-state hysteresis: when no failed group needs evicting,
-        // only act on a real load/weighted-capacity mismatch.
+        // only act on a real load/weighted-capacity mismatch.  Exception:
+        // a recovered group (half-open breaker, Degraded health) absent
+        // from *every* serving list must be folded back in now — probe
+        // traffic cannot reach a group no placement routes to, so the
+        // breaker could never close.
         let must_evict = current
             .groups_of_window
             .iter()
             .flatten()
             .any(|&q| weights[q] == 0.0);
-        if !must_evict {
+        let must_include = (0..g).any(|q| {
+            weights[q] > 0.0 && !current.groups_of_window.iter().any(|ws| ws.contains(&q))
+        });
+        if !must_evict && !must_include {
             let total_weight: f64 = weights.iter().sum();
             let caps: Vec<f64> = (0..w)
                 .map(|wid| {
@@ -472,6 +493,12 @@ pub struct SimBackend {
     /// `legacy_path` oracle); the slab variant carries the output pool
     /// that `Backend::recycle` feeds.
     path: DataPath,
+    /// Tickets carry a partial-result source (slab path only).
+    partials: bool,
+    /// The resilience runtime (retry/hedge/breaker), when any is enabled.
+    resilience: Option<Arc<ResilienceCtx>>,
+    /// The fault injector, when a plan is installed (test/chaos only).
+    injector: Option<Arc<FaultInjector>>,
     epoch_stop: Arc<AtomicBool>,
     epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -527,6 +554,14 @@ impl SimBackend {
                 plan.total_rows
             ));
         }
+        // The legacy oracle predates claim tokens and partial masks; its
+        // mutexed accumulator cannot express either.  Refuse the combination
+        // rather than silently double-writing under hedges.
+        if cfg.legacy_path && cfg.resilience.enabled() {
+            return Err(anyhow!(
+                "resilience features are not supported on --legacy-path"
+            ));
+        }
         // A mismatched placement must fail deterministically here, not as
         // an index panic in the dispatcher mid-serving (the router only
         // debug-asserts; prebuilt placements arrive via
@@ -551,8 +586,22 @@ impl SimBackend {
         let path = if cfg.legacy_path {
             DataPath::Legacy
         } else {
-            DataPath::Slab(SlabPool::new())
+            // Partial delivery needs the per-slot claim bitmap tracked in
+            // release builds too.
+            DataPath::Slab(SlabPool::with_claims(cfg.resilience.partials))
         };
+        // The resilience runtime exists only when a recovery feature is on;
+        // `None` keeps workers and dispatcher on the exact pre-existing
+        // code path.
+        let resilience = cfg
+            .resilience
+            .needs_ctx()
+            .then(|| ResilienceCtx::new(cfg.resilience.clone(), Arc::clone(&metrics), map.groups.len()));
+        let injector = cfg
+            .fault
+            .as_ref()
+            .filter(|p| !p.is_empty())
+            .map(|p| Arc::new(FaultInjector::new(p.clone(), map.groups.len())));
         let mut senders: Vec<Option<WorkSender>> = Vec::new();
         let mut shell_returns: Vec<ring::Consumer<Shells>> = Vec::new();
         let mut workers = Vec::new();
@@ -591,6 +640,8 @@ impl SimBackend {
                 },
                 next_free: None,
                 shells,
+                resilience: resilience.clone(),
+                injector: injector.clone(),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("a100win-sim-g{g}"))
@@ -609,6 +660,7 @@ impl SimBackend {
             senders,
             shell_returns,
             workers,
+            resilience.clone(),
         )?;
 
         // The control plane may only pull levers this backend has.
@@ -639,6 +691,32 @@ impl SimBackend {
                 .collect(),
             health: Mutex::new(state),
         });
+
+        // Wire breaker transitions into the control plane: a state change
+        // becomes a health transition + an immediate epoch (under the same
+        // gate `set_group_health` uses), audited in the decision trace.
+        // The breaker never routes traffic itself — eviction/re-inclusion
+        // always flows through the placement the dispatcher already reads.
+        if let Some(res) = &resilience {
+            if res.cfg.breaker.is_some() {
+                let ctx = Arc::clone(&control);
+                res.install_hook(Arc::new(move |group, state| {
+                    let health = match state {
+                        BreakerState::Closed => GroupHealth::Healthy,
+                        BreakerState::HalfOpen => GroupHealth::Degraded,
+                        BreakerState::Open => GroupHealth::Failed,
+                    };
+                    let _serialized = ctx.gate.lock();
+                    {
+                        let mut st = ctx.health.lock().unwrap();
+                        let _ = st.set_health(group, health, &ctx.map);
+                    }
+                    ctx.plane.note(format!("breaker: group {group} -> {state:?}"));
+                    let _ = ctx.epoch_inner();
+                }));
+            }
+            res.start_monitor();
+        }
 
         let epoch_stop = Arc::new(AtomicBool::new(false));
         let epoch_thread = match cfg.adaptive.as_ref().and_then(|a| a.epoch) {
@@ -677,6 +755,9 @@ impl SimBackend {
             stats,
             control,
             path,
+            partials: cfg.resilience.partials && !cfg.legacy_path,
+            resilience,
+            injector,
             epoch_stop,
             epoch_thread: Mutex::new(epoch_thread),
         })
@@ -789,7 +870,22 @@ impl SimBackend {
         }
     }
 
+    /// Stalls and failures the installed fault plan has injected so far
+    /// (None when no plan is installed) — the chaos harness's ground truth
+    /// that the schedule actually fired.
+    pub fn faults_injected(&self) -> Option<(u64, u64)> {
+        self.injector.as_ref().map(|i| i.injected())
+    }
+
+    /// The live breaker state for `group` (None when breakers are off).
+    pub fn breaker_state(&self, group: usize) -> Option<BreakerState> {
+        self.resilience.as_ref()?.breaker_state(group)
+    }
+
     fn stop(&self) {
+        if let Some(res) = &self.resilience {
+            res.stop_monitor();
+        }
         self.epoch_stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.epoch_thread.lock().unwrap().take() {
             let _ = t.join();
@@ -806,6 +902,7 @@ impl Backend for SimBackend {
             self.view.rows(),
             self.view.d(),
             &self.path,
+            self.partials,
             batch,
         )
     }
@@ -883,11 +980,27 @@ struct SimWorker {
     next_free: Option<Instant>,
     /// Return ring for emptied job index shells (None on the legacy path).
     shells: Option<ring::Producer<Shells>>,
+    /// Retry/hedge/breaker runtime (None when every feature is off).
+    resilience: Option<Arc<ResilienceCtx>>,
+    /// Deterministic fault schedule (None outside tests/chaos runs).
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl SimWorker {
     fn execute(&mut self, job: Job) {
-        let rate = self.ns_per_row(job.win_start_row, job.win_rows);
+        // Fault draw happens before any write: a failed job must leave the
+        // output buffer untouched (recovery re-gathers the same rows).
+        let fault = match &self.injector {
+            Some(inj) => inj.next_job(self.group),
+            None => JobFault::NONE,
+        };
+        if fault.fail {
+            self.fail_job(job);
+            return;
+        }
+        // A stall multiplies the simulated device cost; with pacing on it
+        // becomes real wall-clock straggling (what hedging races against).
+        let rate = self.ns_per_row(job.win_start_row, job.win_rows) * fault.stall_mult;
         let n = job.local_rows.len();
         if job.acc.is_legacy() {
             // Oracle path (--legacy-path): gather into a fresh Vec, then a
@@ -900,6 +1013,28 @@ impl SimWorker {
             }
             self.account(n, rate);
             job.acc.scatter(&job.positions, &rows, d);
+        } else if let Some(token) = &job.token {
+            // Hedge-tracked job (original or speculative copy): gather
+            // first, claim, then write — the losing copy must never touch
+            // the buffer, or the scatter claim bitmap would (correctly)
+            // trip on the duplicate.
+            let d = self.view.d();
+            let mut rows = Vec::with_capacity(n * d);
+            for &local in &job.local_rows {
+                rows.extend_from_slice(self.view.row(job.win_start_row + local as u64));
+            }
+            self.account(n, rate);
+            if token.claim() {
+                job.acc.scatter(&job.positions, &rows, d);
+                if job.hedge {
+                    self.metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                }
+                self.note_success();
+                job.acc.finish_part(&self.metrics);
+            }
+            // The loser: its sibling already finished the part.
+            job.recycle_shells(self.shells.as_ref());
+            return;
         } else {
             // Single copy: each row goes straight from the zero-copy view
             // to its final position in the request's slab buffer (the
@@ -910,8 +1045,48 @@ impl SimWorker {
             }
             self.account(n, rate);
         }
+        self.note_success();
         job.acc.finish_part(&self.metrics);
         job.recycle_shells(self.shells.as_ref());
+    }
+
+    /// Injected-failure path: nothing was written.  A hedged copy defers
+    /// to its surviving sibling; the last copy standing consumes retry
+    /// budget; only then does the part (and with it the request) fail.
+    fn fail_job(&mut self, job: Job) {
+        if let Some(res) = &self.resilience {
+            res.note_failure(self.group);
+            if let Some(tok) = &job.token {
+                if !tok.copy_failed() {
+                    // A sibling copy is in flight (or already won); the
+                    // part is its responsibility now.
+                    job.recycle_shells(self.shells.as_ref());
+                    return;
+                }
+            }
+            if res.can_retry(job.attempt) {
+                let rows: Vec<u64> = job
+                    .local_rows
+                    .iter()
+                    .map(|&l| job.win_start_row + l as u64)
+                    .collect();
+                if res.send_retry(rows, job.positions.clone(), Arc::clone(&job.acc), job.attempt)
+                {
+                    job.recycle_shells(self.shells.as_ref());
+                    return;
+                }
+            }
+        }
+        let why = format!("injected fault: group {} failed", self.group);
+        job.acc.fail_part(&self.metrics, &why);
+        job.recycle_shells(self.shells.as_ref());
+    }
+
+    #[inline]
+    fn note_success(&self) {
+        if let Some(res) = &self.resilience {
+            res.note_success(self.group);
+        }
     }
 
     /// Simulated-device accounting + optional pacing for `n` rows.

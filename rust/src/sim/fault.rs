@@ -1,0 +1,361 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The paper's reach constraint pins every row to one (group, window)
+//! pair, so a stalled or dead group is not noise the scheduler can route
+//! around implicitly — the serving layer has to recover *deliberately*.
+//! Real silicon shows wide per-unit latency variance (stragglers are the
+//! common case, not the exception); the DES simulator is uniquely placed
+//! to reproduce those failure modes on demand, with a fixed seed, inside
+//! tier-1 tests that never touch hardware.
+//!
+//! A [`FaultPlan`] is a pure-data schedule keyed on each group's **job
+//! clock** — the count of sub-batches that group has executed — so the
+//! same plan against the same request stream injects the same faults
+//! every run.  Three fault modes compose:
+//!
+//! * **stalls** — a latency multiplier (fixed, or Pareto heavy-tailed)
+//!   applied to the simulated per-row cost for a window of jobs; with
+//!   `sim_timescale > 0` these become wall-clock stragglers,
+//! * **outages** — every job in the window fails (a dead group/card),
+//! * **flapping** — the group alternates fail/serve with a period, the
+//!   nastiest case for naive health tracking.
+//!
+//! The [`FaultInjector`] is the runtime half: per-group atomic clocks plus
+//! seeded hash draws (no shared RNG state, so concurrent workers stay
+//! deterministic per-group).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// How a stalled job's simulated cost is inflated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StallKind {
+    /// Multiply the per-row cost by a constant.
+    Fixed(f64),
+    /// Draw a Pareto-distributed multiplier `x = 1/(1-u)^(1/alpha)`
+    /// (heavy tail: most jobs near 1x, rare jobs far out), clamped to
+    /// `max`.  Smaller `alpha` = heavier tail.
+    Pareto { alpha: f64, max: f64 },
+}
+
+/// Stall `group` for jobs `from_job..until_job` on its job clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallSpec {
+    pub group: usize,
+    pub from_job: u64,
+    pub until_job: u64,
+    pub kind: StallKind,
+}
+
+/// Fail every job `group` executes in `from_job..until_job`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageSpec {
+    pub group: usize,
+    pub from_job: u64,
+    pub until_job: u64,
+}
+
+/// Alternate `group` between failing and serving with `period` jobs per
+/// half-cycle, over `from_job..until_job` (starts in the failing half).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlapSpec {
+    pub group: usize,
+    pub from_job: u64,
+    pub until_job: u64,
+    pub period: u64,
+}
+
+/// A seeded, reproducible schedule of faults keyed on per-group job
+/// clocks.  Pure data: cloneable, comparable, and card-shardable via
+/// [`FaultPlan::for_card`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the Pareto stall draws (schedules themselves are exact).
+    pub seed: u64,
+    pub stalls: Vec<StallSpec>,
+    pub outages: Vec<OutageSpec>,
+    pub flaps: Vec<FlapSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    pub fn stall(mut self, group: usize, from_job: u64, until_job: u64, kind: StallKind) -> Self {
+        self.stalls.push(StallSpec {
+            group,
+            from_job,
+            until_job,
+            kind,
+        });
+        self
+    }
+
+    pub fn outage(mut self, group: usize, from_job: u64, until_job: u64) -> Self {
+        self.outages.push(OutageSpec {
+            group,
+            from_job,
+            until_job,
+        });
+        self
+    }
+
+    pub fn flap(mut self, group: usize, from_job: u64, until_job: u64, period: u64) -> Self {
+        self.flaps.push(FlapSpec {
+            group,
+            from_job,
+            until_job,
+            period,
+        });
+        self
+    }
+
+    /// The chaos-soak schedule: three distinct fault modes spread over the
+    /// first `groups` groups (all land on group 0 when there is only one).
+    ///
+    /// * group 0: a hard outage followed by a slow-recovery stall window
+    ///   (the group comes back, but limps before it is healthy),
+    /// * group 1: a permanent Pareto heavy tail (stragglers all run long),
+    /// * group 2: flapping health mid-run.
+    pub fn chaos(seed: u64, groups: usize) -> Self {
+        let g = |i: usize| i % groups.max(1);
+        Self::new(seed)
+            .outage(g(0), 40, 120)
+            .stall(g(0), 120, 240, StallKind::Fixed(6.0))
+            .stall(
+                g(1),
+                0,
+                u64::MAX,
+                StallKind::Pareto {
+                    alpha: 1.5,
+                    max: 40.0,
+                },
+            )
+            .flap(g(2), 60, 400, 25)
+    }
+
+    /// Derive a per-card variant: identical schedule shape, decorrelated
+    /// stall draws.  Fleet wiring hands card `i` `plan.for_card(i)` so the
+    /// cards do not stall in lockstep.
+    pub fn for_card(&self, card: usize) -> Self {
+        let mut plan = self.clone();
+        plan.seed = self.seed ^ (card as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        plan
+    }
+
+    /// True when the plan injects nothing (useful for cheap gating).
+    pub fn is_empty(&self) -> bool {
+        self.stalls.is_empty() && self.outages.is_empty() && self.flaps.is_empty()
+    }
+}
+
+/// The fault verdict for one job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobFault {
+    /// Latency multiplier to apply to the job's simulated cost (1.0 =
+    /// unaffected).  Overlapping stall windows multiply.
+    pub stall_mult: f64,
+    /// The job must fail instead of executing.
+    pub fail: bool,
+}
+
+impl JobFault {
+    pub const NONE: JobFault = JobFault {
+        stall_mult: 1.0,
+        fail: false,
+    };
+}
+
+/// Runtime half of the plan: per-group job clocks + counters.  One
+/// injector per backend; workers call [`FaultInjector::next_job`] once
+/// per sub-batch *before* touching the output buffer, so injected
+/// failures never leave partial writes behind.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    clocks: Vec<AtomicU64>,
+    stalls_injected: AtomicU64,
+    failures_injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, groups: usize) -> Self {
+        Self {
+            plan,
+            clocks: (0..groups).map(|_| AtomicU64::new(0)).collect(),
+            stalls_injected: AtomicU64::new(0),
+            failures_injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Advance `group`'s job clock and return the fault verdict for the
+    /// job at that tick.  Deterministic per (plan, group, tick) — the
+    /// clock is the only mutable state, and it only counts.
+    pub fn next_job(&self, group: usize) -> JobFault {
+        let t = self.clocks[group].fetch_add(1, Ordering::Relaxed);
+        self.fault_at(group, t)
+    }
+
+    /// The verdict at an explicit clock value (test oracle; `next_job` is
+    /// `fault_at(group, clock++)`).
+    pub fn fault_at(&self, group: usize, t: u64) -> JobFault {
+        let mut fault = JobFault::NONE;
+        for o in &self.plan.outages {
+            if o.group == group && t >= o.from_job && t < o.until_job {
+                fault.fail = true;
+            }
+        }
+        for f in &self.plan.flaps {
+            if f.group == group && t >= f.from_job && t < f.until_job && f.period > 0 {
+                // Starts failing: the first `period` jobs of the window fail,
+                // the next `period` serve, and so on.
+                if ((t - f.from_job) / f.period) % 2 == 0 {
+                    fault.fail = true;
+                }
+            }
+        }
+        for s in &self.plan.stalls {
+            if s.group == group && t >= s.from_job && t < s.until_job {
+                let mult = match s.kind {
+                    StallKind::Fixed(m) => m,
+                    StallKind::Pareto { alpha, max } => {
+                        let h = splitmix64(
+                            self.plan
+                                .seed
+                                .wrapping_add((group as u64).wrapping_mul(0xA076_1D64_78BD_642F))
+                                .wrapping_add(t.wrapping_mul(0xE703_7ED1_A0B4_28DB)),
+                        );
+                        let u = (h >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+                        (1.0 / (1.0 - u).powf(1.0 / alpha.max(1e-9))).min(max)
+                    }
+                };
+                fault.stall_mult *= mult.max(0.0);
+            }
+        }
+        if fault.fail {
+            self.failures_injected.fetch_add(1, Ordering::Relaxed);
+        } else if fault.stall_mult != 1.0 {
+            self.stalls_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+
+    /// (stalls injected, failures injected) so far.
+    pub fn injected(&self) -> (u64, u64) {
+        (
+            self.stalls_injected.load(Ordering::Relaxed),
+            self.failures_injected.load(Ordering::Relaxed),
+        )
+    }
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_plan_same_faults() {
+        let plan = FaultPlan::chaos(42, 3);
+        let a = FaultInjector::new(plan.clone(), 3);
+        let b = FaultInjector::new(plan, 3);
+        for g in 0..3 {
+            for _ in 0..500 {
+                assert_eq!(a.next_job(g), b.next_job(g));
+            }
+        }
+    }
+
+    #[test]
+    fn outage_window_fails_exactly() {
+        let inj = FaultInjector::new(FaultPlan::new(1).outage(0, 5, 8), 2);
+        for t in 0..12 {
+            let f = inj.fault_at(0, t);
+            assert_eq!(f.fail, (5..8).contains(&t), "t={t}");
+            assert!(!inj.fault_at(1, t).fail);
+        }
+    }
+
+    #[test]
+    fn flap_alternates_with_period() {
+        let inj = FaultInjector::new(FaultPlan::new(1).flap(0, 10, 30, 5), 1);
+        // 10..15 fail, 15..20 serve, 20..25 fail, 25..30 serve.
+        for t in 10..30u64 {
+            let expect = ((t - 10) / 5) % 2 == 0;
+            assert_eq!(inj.fault_at(0, t).fail, expect, "t={t}");
+        }
+        assert!(!inj.fault_at(0, 9).fail);
+        assert!(!inj.fault_at(0, 30).fail);
+    }
+
+    #[test]
+    fn pareto_stalls_are_heavy_tailed_and_clamped() {
+        let inj = FaultInjector::new(
+            FaultPlan::new(7).stall(
+                0,
+                0,
+                u64::MAX,
+                StallKind::Pareto {
+                    alpha: 1.2,
+                    max: 30.0,
+                },
+            ),
+            1,
+        );
+        let mut over_3x = 0;
+        for t in 0..2000 {
+            let m = inj.fault_at(0, t).stall_mult;
+            assert!((1.0..=30.0).contains(&m), "mult {m} at t={t}");
+            if m > 3.0 {
+                over_3x += 1;
+            }
+        }
+        // Pareto(1.2): P(X > 3) = 3^-1.2 ~ 0.27.  Loose band: the tail is
+        // present but not dominant.
+        assert!(
+            (200..1000).contains(&over_3x),
+            "{over_3x}/2000 draws over 3x"
+        );
+    }
+
+    #[test]
+    fn stalls_compose_and_clock_advances() {
+        let inj = FaultInjector::new(
+            FaultPlan::new(1)
+                .stall(0, 0, 10, StallKind::Fixed(2.0))
+                .stall(0, 5, 10, StallKind::Fixed(3.0)),
+            1,
+        );
+        assert_eq!(inj.next_job(0).stall_mult, 2.0); // t=0
+        for _ in 1..5 {
+            inj.next_job(0);
+        }
+        assert_eq!(inj.next_job(0).stall_mult, 6.0); // t=5: overlap multiplies
+        let (stalls, fails) = inj.injected();
+        assert_eq!(fails, 0);
+        assert_eq!(stalls, 6);
+    }
+
+    #[test]
+    fn for_card_decorrelates_draws_but_keeps_schedule() {
+        let base = FaultPlan::chaos(9, 4);
+        let other = base.for_card(3);
+        assert_eq!(base.outages, other.outages);
+        assert_eq!(base.flaps, other.flaps);
+        assert_ne!(base.seed, other.seed);
+        assert_eq!(base.for_card(0).seed, base.seed);
+        let a = FaultInjector::new(base, 4);
+        let b = FaultInjector::new(other, 4);
+        // Pareto group (group 1 in chaos()) draws differently per card.
+        let diff = (0..100).any(|t| a.fault_at(1, t).stall_mult != b.fault_at(1, t).stall_mult);
+        assert!(diff, "per-card seeds should decorrelate Pareto draws");
+    }
+}

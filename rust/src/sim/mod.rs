@@ -19,11 +19,15 @@
 //!   [`stats::Measurement`]s with throughput in the paper's GB/s units.
 //! * [`analytic`] — closed-form queueing predictions cross-validating the
 //!   DES (and vice versa).
+//! * [`fault`] — deterministic fault injection (stalls, outages, flapping
+//!   health) keyed on per-group job clocks, for the resilience layer's
+//!   chaos tests.
 
 pub mod access;
 pub mod analytic;
 pub mod calendar;
 pub mod engine;
+pub mod fault;
 pub mod hbm;
 pub mod nvlink;
 pub mod pages;
@@ -36,6 +40,7 @@ pub mod walker;
 
 pub use access::Pattern;
 pub use engine::{Machine, MeasurementSpec, SmAssignment};
+pub use fault::{FaultInjector, FaultPlan, JobFault, StallKind};
 pub use pages::MemRegion;
 pub use stats::{GroupStats, Measurement};
 pub use topology::{GroupId, SmId, Topology};

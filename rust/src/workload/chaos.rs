@@ -1,0 +1,362 @@
+//! Verifying chaos soak driver: the closed-loop counterpart to
+//! [`openloop`](super::openloop) that checks every returned row against
+//! the table's ground truth instead of discarding results.
+//!
+//! The open-loop driver measures *latency* under load; this driver
+//! measures *correctness* under faults.  It drives a target through a
+//! seeded fault schedule ([`crate::sim::FaultPlan`]) and asserts the
+//! resilience machinery's core contract: no lost or corrupted rows.
+//! Concretely, for every request it checks
+//!
+//! - `Full` outcomes element-wise against [`Table::expected`] — a hedged
+//!   duplicate that double-wrote, a retry that scattered into the wrong
+//!   slot, or a migration racing a redispatch all show up as a corrupted
+//!   row here;
+//! - `Partial` outcomes for mask consistency: the validity mask must be
+//!   exactly request-length, valid rows must verify, and invalid rows
+//!   must be zero-filled (never stale or half-written data);
+//! - `Err` outcomes only for bounded resolution time — a failure that is
+//!   slow to *fail* is an availability bug even when no data is wrong.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::table::Table;
+use crate::service::{FleetService, Outcome, Service};
+use crate::workload::synth::{Distribution, RequestGen, WorkloadSpec};
+
+/// Anything the chaos driver can aim at: submit one request and block
+/// until it resolves to a full result, a partial result, or an error.
+pub trait ChaosTarget: Sync {
+    fn run_outcome(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Outcome>;
+}
+
+impl ChaosTarget for Service {
+    fn run_outcome(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Outcome> {
+        self.submit(rows, deadline)?.wait_outcome()
+    }
+}
+
+impl ChaosTarget for FleetService {
+    fn run_outcome(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Outcome> {
+        self.submit(rows, deadline)?.wait_outcome()
+    }
+}
+
+/// Chaos soak configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Total requests to drive (closed loop: the soak is request-bounded,
+    /// not wall-clock-bounded, so CI runs are deterministic in size).
+    pub requests: usize,
+    /// Rows per request, drawn uniformly from this inclusive range.
+    pub request_rows: (usize, usize),
+    /// Row-id distribution (the acceptance soak uses `drift:zipf` so hot
+    /// windows move while faults fire).
+    pub distribution: Distribution,
+    /// Seeds both the request generator and nothing else — fault
+    /// schedules carry their own seed in the [`crate::sim::FaultPlan`].
+    pub seed: u64,
+    /// Deadline attached to every request (None = unbounded).
+    pub deadline: Option<Duration>,
+    /// Concurrent client threads (closed loop: each thread submits its
+    /// next request only after the previous one resolved).
+    pub concurrency: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            requests: 200,
+            request_rows: (16, 96),
+            distribution: Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: 400,
+            },
+            seed: 7,
+            deadline: Some(Duration::from_millis(50)),
+            concurrency: 4,
+        }
+    }
+}
+
+/// What the soak observed.  `corrupted_rows` and `mask_violations` are
+/// the hard-failure counters: any nonzero value means the resilience
+/// layer returned wrong data, which no amount of injected faultiness
+/// excuses.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    /// Requests that resolved `Full`.
+    pub completed: u64,
+    /// Requests that resolved `Partial`.
+    pub partials: u64,
+    /// Requests that resolved `Err`.
+    pub failed: u64,
+    /// Rows checked against the table and found exact.
+    pub valid_rows_checked: u64,
+    /// Rows a `Partial` mask declared missing (zero-filled, not checked).
+    pub invalid_rows: u64,
+    /// Rows that failed verification: a delivered row whose payload does
+    /// not match the table, or a masked-out row that was not zero-filled.
+    pub corrupted_rows: u64,
+    /// `Partial` outcomes whose mask length did not equal the request
+    /// length.
+    pub mask_violations: u64,
+    /// p99 resolution latency of successful (`Full` or `Partial`)
+    /// requests, microseconds.
+    pub p99_us: u64,
+    /// p99 resolution latency of failed requests, microseconds — failures
+    /// must be *fast*; a request that burns its whole retry budget before
+    /// erroring still has to resolve in bounded time.
+    pub failure_p99_us: u64,
+}
+
+impl ChaosReport {
+    /// Fraction of requests that returned at least some verified data.
+    pub fn goodput(&self) -> f64 {
+        let total = self.completed + self.partials + self.failed;
+        if total == 0 {
+            return 0.0;
+        }
+        (self.completed + self.partials) as f64 / total as f64
+    }
+
+    /// Panic if the soak observed any lost or corrupted rows.  Split out
+    /// from the driver so callers can inspect the report before dying.
+    pub fn assert_no_corruption(&self) {
+        assert_eq!(
+            self.corrupted_rows, 0,
+            "chaos soak delivered corrupted rows: {self:?}"
+        );
+        assert_eq!(
+            self.mask_violations, 0,
+            "chaos soak delivered malformed partial masks: {self:?}"
+        );
+    }
+}
+
+#[derive(Default)]
+struct LocalTally {
+    completed: u64,
+    partials: u64,
+    failed: u64,
+    valid_rows_checked: u64,
+    invalid_rows: u64,
+    corrupted_rows: u64,
+    mask_violations: u64,
+    latency: Vec<Duration>,
+    failure_latency: Vec<Duration>,
+}
+
+/// Verify one delivered row against the table.  A row is exact or it is
+/// corrupted — float equality is intentional: the pipeline moves bytes,
+/// it does not do arithmetic on them.
+fn row_exact(out: &[f32], k: usize, row: u64, table: &Table) -> bool {
+    let d = table.d;
+    (0..d).all(|j| out[k * d + j] == table.expected(row, j))
+}
+
+fn verify_full(out: &[f32], rows: &[u64], table: &Table, tally: &mut LocalTally) {
+    for (k, &row) in rows.iter().enumerate() {
+        if row_exact(out, k, row, table) {
+            tally.valid_rows_checked += 1;
+        } else {
+            tally.corrupted_rows += 1;
+        }
+    }
+}
+
+fn verify_partial(
+    out: &[f32],
+    valid: &[bool],
+    rows: &[u64],
+    table: &Table,
+    tally: &mut LocalTally,
+) {
+    if valid.len() != rows.len() {
+        tally.mask_violations += 1;
+        return;
+    }
+    let d = table.d;
+    for (k, &row) in rows.iter().enumerate() {
+        if valid[k] {
+            if row_exact(out, k, row, table) {
+                tally.valid_rows_checked += 1;
+            } else {
+                tally.corrupted_rows += 1;
+            }
+        } else {
+            // Masked-out rows must be zero-filled: stale slab contents
+            // leaking through the mask is a correctness bug.
+            if out[k * d..(k + 1) * d].iter().all(|&v| v == 0.0) {
+                tally.invalid_rows += 1;
+            } else {
+                tally.corrupted_rows += 1;
+            }
+        }
+    }
+}
+
+fn p99_us(mut lat: Vec<Duration>) -> u64 {
+    if lat.is_empty() {
+        return 0;
+    }
+    lat.sort_unstable();
+    let idx = ((lat.len() - 1) as f64 * 0.99) as usize;
+    lat[idx].as_micros() as u64
+}
+
+/// Drive `cfg.requests` verified requests at the target and tally what
+/// came back.  Request payloads are pre-drawn single-threaded from the
+/// seeded generator, so the offered row stream is identical across runs
+/// regardless of `concurrency` — only interleaving varies.
+pub fn drive_chaos<T: ChaosTarget + ?Sized>(
+    target: &T,
+    table: &Table,
+    cfg: &ChaosConfig,
+) -> ChaosReport {
+    let mut gen = RequestGen::new(WorkloadSpec {
+        total_rows: table.rows,
+        distribution: cfg.distribution.clone(),
+        request_rows: cfg.request_rows,
+        seed: cfg.seed,
+    });
+    let requests: Vec<Arc<Vec<u64>>> = (0..cfg.requests)
+        .map(|_| Arc::new(gen.next_request()))
+        .collect();
+
+    let next = AtomicUsize::new(0);
+    let tallies: Mutex<Vec<LocalTally>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        for _ in 0..cfg.concurrency.max(1) {
+            s.spawn(|| {
+                let mut tally = LocalTally::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(rows) = requests.get(i) else { break };
+                    let t0 = Instant::now();
+                    match target.run_outcome(Arc::clone(rows), cfg.deadline) {
+                        Ok(Outcome::Full(out)) => {
+                            tally.latency.push(t0.elapsed());
+                            tally.completed += 1;
+                            verify_full(&out, rows, table, &mut tally);
+                        }
+                        Ok(Outcome::Partial { rows: out, valid }) => {
+                            tally.latency.push(t0.elapsed());
+                            tally.partials += 1;
+                            verify_partial(&out, &valid, rows, table, &mut tally);
+                        }
+                        Err(_) => {
+                            tally.failure_latency.push(t0.elapsed());
+                            tally.failed += 1;
+                        }
+                    }
+                }
+                tallies.lock().unwrap().push(tally);
+            });
+        }
+    });
+
+    let mut report = ChaosReport::default();
+    let mut latency = Vec::new();
+    let mut failure_latency = Vec::new();
+    for t in tallies.into_inner().unwrap() {
+        report.completed += t.completed;
+        report.partials += t.partials;
+        report.failed += t.failed;
+        report.valid_rows_checked += t.valid_rows_checked;
+        report.invalid_rows += t.invalid_rows;
+        report.corrupted_rows += t.corrupted_rows;
+        report.mask_violations += t.mask_violations;
+        latency.extend(t.latency);
+        failure_latency.extend(t.failure_latency);
+    }
+    report.p99_us = p99_us(latency);
+    report.failure_p99_us = p99_us(failure_latency);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verify_full_flags_corruption() {
+        let table = Table::synthetic(64, 4);
+        let rows = vec![3u64, 7, 11];
+        let mut out = Vec::new();
+        for &r in &rows {
+            for j in 0..4 {
+                out.push(table.expected(r, j));
+            }
+        }
+        let mut tally = LocalTally::default();
+        verify_full(&out, &rows, &table, &mut tally);
+        assert_eq!(tally.valid_rows_checked, 3);
+        assert_eq!(tally.corrupted_rows, 0);
+
+        out[5] += 1.0; // corrupt one element of row index 1
+        let mut tally = LocalTally::default();
+        verify_full(&out, &rows, &table, &mut tally);
+        assert_eq!(tally.valid_rows_checked, 2);
+        assert_eq!(tally.corrupted_rows, 1);
+    }
+
+    #[test]
+    fn verify_partial_checks_mask_and_zero_fill() {
+        let table = Table::synthetic(64, 2);
+        let rows = vec![5u64, 9];
+        let mut out = vec![0.0f32; 4];
+        out[0] = table.expected(5, 0);
+        out[1] = table.expected(5, 1);
+
+        let mut tally = LocalTally::default();
+        verify_partial(&out, &[true, false], &rows, &table, &mut tally);
+        assert_eq!(tally.valid_rows_checked, 1);
+        assert_eq!(tally.invalid_rows, 1);
+        assert_eq!(tally.corrupted_rows, 0);
+        assert_eq!(tally.mask_violations, 0);
+
+        // Stale data leaking through a masked-out slot is corruption.
+        out[3] = 42.0;
+        let mut tally = LocalTally::default();
+        verify_partial(&out, &[true, false], &rows, &table, &mut tally);
+        assert_eq!(tally.corrupted_rows, 1);
+
+        // Wrong-length mask is a violation, rows are not inspected.
+        let mut tally = LocalTally::default();
+        verify_partial(&out, &[true], &rows, &table, &mut tally);
+        assert_eq!(tally.mask_violations, 1);
+        assert_eq!(tally.valid_rows_checked, 0);
+    }
+
+    #[test]
+    fn report_goodput_and_p99() {
+        let report = ChaosReport {
+            completed: 6,
+            partials: 2,
+            failed: 2,
+            ..Default::default()
+        };
+        assert!((report.goodput() - 0.8).abs() < 1e-9);
+        report.assert_no_corruption();
+
+        let lat: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        assert_eq!(p99_us(lat), 99);
+        assert_eq!(p99_us(Vec::new()), 0);
+    }
+}

@@ -3,10 +3,12 @@
 //! use case implies (uniform random cache-line access) plus skewed and
 //! trace-replay variants for the ablation studies.
 
+pub mod chaos;
 pub mod openloop;
 pub mod synth;
 pub mod trace;
 
+pub use chaos::{drive_chaos, ChaosConfig, ChaosReport, ChaosTarget};
 pub use openloop::{drive, LoadPoint, LoadTarget, OpenLoopConfig};
 pub use synth::{RequestGen, WorkloadSpec};
 pub use trace::Trace;

@@ -1,0 +1,410 @@
+//! Fault injection + self-healing serving, end to end — hermetic (sim
+//! backend, no artifacts, no real card).
+//!
+//! Covers the resilience acceptance surface:
+//! * an injected outage fails a ticket fast when every feature is off
+//!   (the baseline stays honest — no silent retries),
+//! * per-sub-batch retry reroutes around a dying group and the circuit
+//!   breaker walks its full closed -> open -> half-open -> closed cycle,
+//!   visible in `Metrics` and the control plane's decision trace,
+//! * straggler hedging rescues a stalled group's sub-batch via a sibling
+//!   (first completion wins; the claim bitmap keeps duplicates out),
+//! * partial results: a permanently dead window yields a `Partial`
+//!   outcome whose validity mask exactly matches the delivered rows,
+//! * a seeded chaos soak (stalls + outage + flapping health under
+//!   drifting zipf load) delivers zero corrupted rows,
+//! * fleet mode: killing one card's backend mid-flight degrades spanning
+//!   requests to `Partial` (surviving card's rows, request order) and
+//!   fails new submissions fast.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use a100win::coordinator::{CardSpec, PlacementPolicy, Table, WindowPlan};
+use a100win::probe::TopologyMap;
+use a100win::service::{
+    BreakerConfig, HedgeConfig, Outcome, ResilienceConfig, RetryPolicy, Service, SimBackend,
+    SimBackendConfig, SimTiming,
+};
+use a100win::service::{FleetConfig, FleetService};
+use a100win::sim::{FaultPlan, StallKind};
+use a100win::workload::chaos::{drive_chaos, ChaosConfig};
+use a100win::workload::synth::Distribution;
+
+/// A hand-rolled 2-group map with slow (controllable) probed rates:
+/// `ns_per_row = row_bytes / solo_gbps`, so 2 GB/s at 32 B rows = 16 ns
+/// of simulated time per row — pacing tests can size stalls exactly.
+fn map2() -> TopologyMap {
+    TopologyMap {
+        groups: vec![vec![0, 1], vec![2, 3]],
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![2.0, 2.0],
+        independent: true,
+        card_id: "resilience-test".into(),
+    }
+}
+
+fn map4() -> TopologyMap {
+    TopologyMap {
+        groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0, 119.0, 91.0, 90.0],
+        independent: true,
+        card_id: "resilience-test".into(),
+    }
+}
+
+fn start(
+    map: &TopologyMap,
+    rows: u64,
+    d: usize,
+    windows: usize,
+    mutate: impl FnOnce(&mut SimBackendConfig),
+) -> (Service, Arc<SimBackend>, Table) {
+    let table = Table::synthetic(rows, d);
+    let plan = WindowPlan::split(rows, (d * 4) as u64, windows);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    mutate(&mut cfg);
+    let backend = Arc::new(
+        SimBackend::start(cfg, map, plan, table.view(), SimTiming::Probed).unwrap(),
+    );
+    (Service::new(backend.clone()), backend, table)
+}
+
+fn verify(out: &[f32], rows: &[u64], table: &Table) {
+    assert_eq!(out.len(), rows.len() * table.d);
+    for (k, &row) in rows.iter().enumerate() {
+        for j in 0..table.d {
+            assert_eq!(
+                out[k * table.d + j],
+                table.expected(row, j),
+                "row {row} column {j}"
+            );
+        }
+    }
+}
+
+fn some_rows(n: usize, total: u64, salt: u64) -> Arc<Vec<u64>> {
+    Arc::new((0..n as u64).map(|i| (i * 37 + salt) % total).collect())
+}
+
+#[test]
+fn injected_outage_fails_fast_without_resilience() {
+    // Every group dead, every feature off: the ticket must surface the
+    // injected fault as a plain error (no retry, no partial).
+    let (service, backend, table) = start(&map2(), 4_096, 8, 1, |cfg| {
+        cfg.fault = Some(
+            FaultPlan::new(3)
+                .outage(0, 0, u64::MAX)
+                .outage(1, 0, u64::MAX),
+        );
+    });
+    let err = service
+        .submit(some_rows(64, table.rows, 0), None)
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("injected fault"),
+        "unexpected error: {err:#}"
+    );
+    let m = service.metrics();
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.retries, 0);
+    let (_, fails) = backend.faults_injected().unwrap();
+    assert!(fails >= 1);
+    service.shutdown();
+}
+
+#[test]
+fn retry_reroutes_and_breaker_walks_full_cycle() {
+    // Group 0's first 6 jobs fail.  Retries reroute each failed sub-batch
+    // through the live placement; after 3 consecutive failures the breaker
+    // opens (group evicted via an immediate health epoch), after `open_for`
+    // it half-opens (group re-included at half weight so real traffic
+    // probes it), and once the outage window has passed, probe successes
+    // close it again.  The whole cycle must be visible in Metrics and the
+    // decision trace.
+    let (service, backend, table) = start(&map2(), 8_192, 8, 1, |cfg| {
+        cfg.fault = Some(FaultPlan::new(5).outage(0, 0, 6));
+        cfg.resilience = ResilienceConfig {
+            retry: Some(RetryPolicy {
+                budget: 3,
+                backoff: Duration::from_micros(100),
+            }),
+            breaker: Some(BreakerConfig {
+                failure_threshold: 3,
+                open_for: Duration::from_millis(10),
+                probe_successes: 2,
+            }),
+            ..ResilienceConfig::default()
+        };
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut verified = 0u64;
+    let mut failed = 0u64;
+    let mut salt = 0u64;
+    loop {
+        salt += 1;
+        let rows = some_rows(128, table.rows, salt);
+        match service.submit(Arc::clone(&rows), None).unwrap().wait() {
+            Ok(out) => {
+                verify(&out, &rows, &table);
+                verified += 1;
+            }
+            Err(_) => failed += 1,
+        }
+        let m = service.metrics();
+        if m.breaker_closes >= 1 && verified > 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "breaker never closed: {} opens, {} half-opens, {} closes, \
+             {} retries ({verified} ok, {failed} failed)",
+            m.breaker_opens,
+            m.breaker_half_opens,
+            m.breaker_closes,
+            m.retries
+        );
+        // Give the monitor thread room to expire the open timer.
+        std::thread::sleep(Duration::from_micros(500));
+    }
+
+    let m = service.metrics();
+    assert!(m.retries >= 1, "no retries recorded");
+    assert!(m.breaker_opens >= 1);
+    assert!(m.breaker_half_opens >= 1);
+    assert!(m.breaker_closes >= 1);
+    // Goodput degraded, never collapsed: retries kept most requests whole.
+    assert!(verified > failed, "{verified} ok vs {failed} failed");
+    let trace = backend.control_decisions();
+    assert!(
+        trace.iter().any(|d| d.why.contains("breaker")),
+        "no breaker entries in the decision trace"
+    );
+    // Steady state after the cycle: lookups verify.
+    let rows = some_rows(64, table.rows, 999);
+    verify(
+        &service.submit(Arc::clone(&rows), None).unwrap().wait().unwrap(),
+        &rows,
+        &table,
+    );
+    service.shutdown();
+}
+
+#[test]
+fn hedging_rescues_stalled_group() {
+    // Group 0 stalls 400x forever; pacing (timescale 50) makes that real
+    // wall time: ~200 us per healthy job vs ~80 ms stalled.  The monitor
+    // hedges any sub-batch in flight past 2 ms to the sibling group; the
+    // sibling wins the claim and the ticket resolves fast and exact.
+    let (service, _backend, table) = start(&map2(), 4_096, 8, 1, |cfg| {
+        cfg.fault = Some(FaultPlan::new(9).stall(0, 0, u64::MAX, StallKind::Fixed(400.0)));
+        cfg.sim_timescale = 50.0;
+        cfg.resilience = ResilienceConfig {
+            hedge: Some(HedgeConfig {
+                min_after: Duration::from_millis(2),
+                quantile: 0.99,
+            }),
+            ..ResilienceConfig::default()
+        };
+    });
+
+    let mut wins = 0;
+    for salt in 0..20u64 {
+        let rows = some_rows(256, table.rows, salt * 7);
+        let out = service.submit(Arc::clone(&rows), None).unwrap().wait().unwrap();
+        verify(&out, &rows, &table);
+        wins = service.metrics().hedge_wins;
+        if wins >= 1 {
+            break;
+        }
+    }
+    let m = service.metrics();
+    assert!(m.hedges >= 1, "monitor never hedged a straggler");
+    assert!(wins >= 1, "no hedge ever won ({} dispatched)", m.hedges);
+    service.shutdown();
+}
+
+#[test]
+fn partial_outcome_masks_failed_window() {
+    // Two windows, one group each; group 1 permanently dead, no retry.
+    // A request spanning both windows must degrade to Partial: the
+    // surviving window's rows delivered and verified, the dead window's
+    // rows zero-filled and masked out.
+    let (service, _backend, table) = start(&map2(), 8_192, 8, 2, |cfg| {
+        cfg.fault = Some(FaultPlan::new(13).outage(1, 0, u64::MAX));
+        cfg.resilience = ResilienceConfig {
+            partials: true,
+            ..ResilienceConfig::default()
+        };
+    });
+
+    // Two rows in window 0 ([0, 4096)), two in window 1 ([4096, 8192)).
+    let rows: Vec<u64> = vec![10, 20, 4_100, 4_200];
+    let outcome = service
+        .submit(Arc::new(rows.clone()), None)
+        .unwrap()
+        .wait_outcome()
+        .unwrap();
+    let Outcome::Partial { rows: out, valid } = outcome else {
+        panic!("expected Partial, got {outcome:?}");
+    };
+    assert_eq!(valid.len(), rows.len());
+    assert_eq!(out.len(), rows.len() * table.d);
+    assert_eq!(
+        valid.iter().filter(|&&v| v).count(),
+        2,
+        "exactly the surviving window's rows should be valid: {valid:?}"
+    );
+    // One window survived wholesale: the mask is per-window consistent.
+    assert_eq!(valid[0], valid[1]);
+    assert_eq!(valid[2], valid[3]);
+    assert_ne!(valid[0], valid[2]);
+    for (k, &row) in rows.iter().enumerate() {
+        let span = &out[k * table.d..(k + 1) * table.d];
+        if valid[k] {
+            for (j, &v) in span.iter().enumerate() {
+                assert_eq!(v, table.expected(row, j), "row {row} column {j}");
+            }
+        } else {
+            assert!(span.iter().all(|&v| v == 0.0), "masked row {row} not zeroed");
+        }
+    }
+    assert_eq!(service.metrics().partials, 1);
+    service.shutdown();
+}
+
+#[test]
+fn chaos_soak_delivers_no_corrupted_rows() {
+    // The acceptance soak in miniature: seeded schedule with >= 3 fault
+    // modes (outage, fixed + heavy-tailed stalls, flapping health) against
+    // the fully armed stack under drifting zipf load.  Zero corrupted
+    // rows, zero malformed masks, no total outage.
+    let (service, backend, table) = start(&map4(), 16_384, 8, 2, |cfg| {
+        cfg.fault = Some(FaultPlan::chaos(11, 4));
+        cfg.resilience = ResilienceConfig::full();
+    });
+
+    let report = drive_chaos(
+        &service,
+        &table,
+        &ChaosConfig {
+            requests: 200,
+            request_rows: (16, 64),
+            distribution: Distribution::parse("drift:zipf:1.1:100").unwrap(),
+            seed: 17,
+            deadline: Some(Duration::from_millis(250)),
+            concurrency: 4,
+        },
+    );
+    assert_eq!(report.corrupted_rows, 0, "{report:?}");
+    assert_eq!(report.mask_violations, 0, "{report:?}");
+    assert!(report.completed > 0, "{report:?}");
+    assert!(report.valid_rows_checked > 0, "{report:?}");
+    let (stalls, fails) = backend.faults_injected().unwrap();
+    assert!(stalls >= 1 && fails >= 1, "schedule never fired: {stalls}/{fails}");
+    service.shutdown();
+}
+
+#[test]
+fn fleet_card_death_yields_partials_and_fast_errors() {
+    // Two sim cards, paced so jobs queue; kill card 1's backend with
+    // requests in flight.  Queued jobs fail immediately, spanning tickets
+    // degrade to Partial (card 0's rows, merged in request order), and
+    // new submissions fail fast naming the dead shard.
+    let mut specs = Vec::new();
+    for _ in 0..2 {
+        specs.push((
+            CardSpec {
+                map: map4(),
+                memory_bytes: 1 << 32,
+            },
+            SimTiming::Probed,
+        ));
+    }
+    let table = Table::synthetic(16_384, 8);
+    let fleet = FleetService::build_sim_with(
+        specs,
+        &table,
+        FleetConfig {
+            sim_timescale: 20_000.0,
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+    let shard1_start = fleet.plan().shards[1].start_row;
+
+    // Spanning requests: half the rows on each card.
+    let mut tickets = Vec::new();
+    for salt in 0..16u64 {
+        let rows: Arc<Vec<u64>> = Arc::new(
+            (0..32u64)
+                .map(|i| {
+                    let local = (i * 97 + salt * 13) % shard1_start;
+                    if i % 2 == 0 {
+                        local
+                    } else {
+                        shard1_start + local
+                    }
+                })
+                .collect(),
+        );
+        let ticket = fleet.submit(Arc::clone(&rows), None).unwrap();
+        tickets.push((rows, ticket));
+    }
+    // Kill card 1 mid-flight: its dispatcher closes the rings; queued
+    // jobs fail, the in-flight one may still complete.
+    fleet.cards()[1].shutdown();
+
+    let (mut full, mut partial, mut dead) = (0u64, 0u64, 0u64);
+    for (rows, ticket) in tickets {
+        match ticket.wait_outcome() {
+            Ok(Outcome::Full(out)) => {
+                verify(&out, &rows, &table);
+                full += 1;
+            }
+            Ok(Outcome::Partial { rows: out, valid }) => {
+                assert_eq!(valid.len(), rows.len());
+                assert_eq!(out.len(), rows.len() * table.d);
+                // Card 0's rows survive; merged in request order.
+                for (k, &row) in rows.iter().enumerate() {
+                    let span = &out[k * table.d..(k + 1) * table.d];
+                    if valid[k] {
+                        for (j, &v) in span.iter().enumerate() {
+                            assert_eq!(v, table.expected(row, j), "row {row} column {j}");
+                        }
+                    } else {
+                        assert!(row >= shard1_start, "card-0 row {row} masked out");
+                        assert!(span.iter().all(|&v| v == 0.0));
+                    }
+                }
+                assert!(valid.iter().any(|&v| v), "partial with no valid rows");
+                partial += 1;
+            }
+            Err(_) => dead += 1,
+        }
+    }
+    assert_eq!(full + partial + dead, 16);
+    assert!(
+        partial >= 1,
+        "no in-flight ticket degraded to Partial ({full} full, {dead} dead)"
+    );
+
+    // New spanning submissions fail fast, naming the dead shard.
+    let rows: Arc<Vec<u64>> = Arc::new(vec![1, shard1_start + 1]);
+    let err = match fleet.submit(Arc::clone(&rows), None) {
+        Err(e) => e,
+        Ok(t) => t.wait_outcome().map(|_| ()).unwrap_err(),
+    };
+    assert!(
+        format!("{err:#}").contains("card shard 1"),
+        "error does not name the dead shard: {err:#}"
+    );
+    // Requests entirely on the surviving card still serve.
+    let rows = some_rows(64, shard1_start, 3);
+    verify(&fleet.lookup(Arc::clone(&rows)).unwrap(), &rows, &table);
+    fleet.shutdown();
+}
