@@ -80,6 +80,7 @@ impl AdaptivePlacer {
         order.sort_by(|&a, &b| {
             map.solo_gbps[b]
                 .partial_cmp(&map.solo_gbps[a])
+                // PANIC: probed throughputs are finite, never NaN.
                 .unwrap()
                 .then(a.cmp(&b))
         });
@@ -92,9 +93,11 @@ impl AdaptivePlacer {
                 .max_by(|&a, &b| {
                     (target[a] - assigned[a])
                         .partial_cmp(&(target[b] - assigned[b]))
+                        // PANIC: targets and assignments are finite sums.
                         .unwrap()
                         .then(b.cmp(&a)) // ties: lower window id wins
                 })
+                // PANIC: w >= 1, so the candidate range is non-empty.
                 .unwrap();
             groups_of_window[wid].push(gi);
             assigned[wid] += map.solo_gbps[gi];
@@ -108,9 +111,12 @@ impl AdaptivePlacer {
                 .max_by(|&a, &b| {
                     (assigned[a] - target[a])
                         .partial_cmp(&(assigned[b] - target[b]))
+                        // PANIC: targets and assignments are finite sums.
                         .unwrap()
                         .then(b.cmp(&a))
                 })
+                // PANIC: invariant — with g >= w, some window holds >1 group
+                // whenever another is empty.
                 .expect("g >= w guarantees a multi-group donor");
             // Move the donor's slowest group.
             let k = (0..groups_of_window[donor].len())
@@ -119,9 +125,11 @@ impl AdaptivePlacer {
                     let gb = groups_of_window[donor][b];
                     map.solo_gbps[ga]
                         .partial_cmp(&map.solo_gbps[gb])
+                        // PANIC: probed throughputs are finite, never NaN.
                         .unwrap()
                         .then(ga.cmp(&gb))
                 })
+                // PANIC: the donor was selected for holding >1 group.
                 .unwrap();
             let moved = groups_of_window[donor].remove(k);
             assigned[donor] -= map.solo_gbps[moved];

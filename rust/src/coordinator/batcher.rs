@@ -150,6 +150,7 @@ impl<T> Batcher<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if !st.queue.is_empty() {
+                // PANIC: guarded by the emptiness check on the line above.
                 let oldest_wait = st.queue.front().unwrap().enqueued.elapsed();
                 if self.pending_rows.load(Ordering::Relaxed) >= self.cfg.max_batch_rows
                     || oldest_wait >= self.cfg.max_wait
@@ -179,6 +180,7 @@ impl<T> Batcher<T> {
         loop {
             let now = Instant::now();
             if !st.queue.is_empty() {
+                // PANIC: guarded by the emptiness check on the line above.
                 let oldest_wait = st.queue.front().unwrap().enqueued.elapsed();
                 if self.pending_rows.load(Ordering::Relaxed) >= self.cfg.max_batch_rows
                     || oldest_wait >= self.cfg.max_wait
@@ -214,6 +216,7 @@ impl<T> Batcher<T> {
                 break;
             }
             rows += next;
+            // PANIC: the `while let Some(front)` peek proved non-empty.
             let req = st.queue.pop_front().unwrap();
             requests.push(req);
             if rows >= self.cfg.max_batch_rows {

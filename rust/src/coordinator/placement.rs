@@ -111,6 +111,7 @@ impl Placement {
                 order.sort_by(|&a, &b| {
                     map.solo_gbps[b]
                         .partial_cmp(&map.solo_gbps[a])
+                        // PANIC: probed throughputs are finite, never NaN.
                         .unwrap()
                         .then(a.cmp(&b))
                 });

@@ -134,6 +134,7 @@ impl PlanSplitter {
         order.sort_by(|&a, &b| {
             map.solo_gbps[b]
                 .partial_cmp(&map.solo_gbps[a])
+                // PANIC: probed throughputs are finite, never NaN.
                 .unwrap()
                 .then(a.cmp(&b))
         });
@@ -167,6 +168,8 @@ impl PlanSplitter {
         }
 
         let new_plan = WindowPlan::from_boundaries(plan.total_rows, plan.row_bytes, &starts)
+            // PANIC: invariant — the clamp loop above keeps every boundary
+            // strictly increasing and in range by construction.
             .expect("splitter emits strictly increasing in-range boundaries");
         if new_plan.same_boundaries(plan) {
             return None;

@@ -415,6 +415,8 @@ impl WorkerInit {
             .by_entry("lookup")
             .first()
             .map(|a| a.n)
+            // PANIC: guarded — the emptiness bail above proves at least one
+            // lookup artifact exists in the manifest.
             .unwrap();
         let mut shards = std::collections::HashMap::new();
         for &w in &self.windows {
@@ -485,6 +487,8 @@ impl WorkerCtx {
             .lookups
             .iter()
             .find(|(ab, _)| *ab == b)
+            // PANIC: invariant — the planner only chooses batch sizes that
+            // exist in this worker's lookup table.
             .expect("plan_batches only emits available sizes")
             .1
     }

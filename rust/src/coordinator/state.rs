@@ -114,12 +114,16 @@ impl CoordinatorState {
                             .then(
                                 map.solo_gbps[gb]
                                     .partial_cmp(&map.solo_gbps[ga])
+                                    // PANIC: throughputs are finite, never NaN.
                                     .unwrap(),
                             )
                             .then(ga.cmp(&gb))
                     })
+                    // PANIC: at least one group survives (checked upstream),
+                    // so the load map is non-empty.
                     .unwrap();
                 self.assignment[w].push(best);
+                // PANIC: `best` was drawn from this map's own keys.
                 *load.get_mut(&best).unwrap() += 1;
             }
         }

@@ -22,6 +22,20 @@
 //! * [`workload`] — request/trace/open-loop generators; backend-agnostic
 //!   clients of the facade.
 //! * [`experiments`] — one driver per paper figure.
+//!
+//! ## Concurrency verification
+//!
+//! The lock-free serving primitives take their synchronization from the
+//! [`util::sync`] shim: plain `std` types in normal builds, the in-tree
+//! `interleave` model checker under `--features model`. The models live in
+//! `src/verify.rs`; the `palint` tool (`cargo run -p palint`) gates the
+//! `unsafe`/`Ordering::Relaxed`/panic/hot-path-allocation conventions.
+
+// Every `unsafe` operation inside an `unsafe fn` must be written in an
+// explicit `unsafe { }` block, and every such block carries a `// SAFETY:`
+// comment (also enforced by palint rule R1).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod config;
 pub mod coordinator;
@@ -32,6 +46,11 @@ pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workload;
+
+// Model-checked proofs for the five riskiest lock-free primitives; compiled
+// only under `--features model` (EXPERIMENTS.md §Verify).
+#[cfg(feature = "model")]
+mod verify;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -28,10 +28,16 @@
 //! pre-slab pipeline (mutexed accumulator + mpsc channels + per-job gather
 //! `Vec`) is retained behind [`DataPath::Legacy`] as the
 //! `benches/serve_hotpath.rs --legacy-path` oracle.
+//!
+//! The countdown + completion protocol takes its atomics and locks from
+//! the `util::sync` shim and is model-checked under `--features model`
+//! (`verify::completion_*`): every interleaving of N workers'
+//! `finish_part` countdowns against a parked waiter is explored.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{AtomicUsize, Mutex, Ordering};
 
 use anyhow::{anyhow, Context};
 
@@ -501,6 +507,7 @@ impl RequestAcc {
         matches!(self.out, OutBuf::Legacy(_))
     }
 
+    // hotpath: begin — per-sub-batch success path; no allocation (palint R4).
     /// Write one gathered row (`d` floats) at its request position —
     /// the default path's single copy, lock-free by the disjointness
     /// invariant.  Slab accumulators only: the legacy oracle scatters per
@@ -563,6 +570,7 @@ impl RequestAcc {
             self.respond(result);
         }
     }
+    // hotpath: end
 
     /// Record a failure for this part and finish it.  The *first* failure
     /// message wins — it names the root cause; later failures are usually
@@ -852,6 +860,8 @@ fn redispatch(
     let (plan, placement) = cell.load_planned();
     let split = router.split(&msg.rows, &plan, &placement);
     if msg.hedge {
+        // PANIC: invariant, not input — the monitor mints a token for every
+        // hedge it registers; a hedge message without one is a logic bug.
         let token = Arc::clone(msg.token.as_ref().expect("hedge messages carry a claim token"));
         let mut delivered = false;
         // A hedge duplicates exactly one original sub-batch; if the live
@@ -859,6 +869,7 @@ fn redispatch(
         // stale — abandon the copy rather than fan one token across
         // several jobs.
         if split.sub_batches.len() == 1 {
+            // PANIC: guarded by the length check on the line above.
             let mut sb = split.sub_batches.into_iter().next().unwrap();
             // Prefer a sibling group over the straggling original.
             let mut group = sb.group;
@@ -1008,6 +1019,9 @@ impl Pipeline {
                         // channel and re-enter the rings in-line.
                         let rx = res
                             .take_receiver()
+                            // PANIC: invariant — the context is built with
+                            // its receiver present and exactly one
+                            // dispatcher takes it.
                             .expect("resilience receiver taken once, by the dispatcher");
                         let mut router = Router::new();
                         let mut pending: Vec<ResMsg> = Vec::new();

@@ -574,6 +574,8 @@ impl ResilienceCtx {
                     thread::sleep(Duration::from_micros(500));
                 }
             })
+            // PANIC: thread-spawn failure at startup is unrecoverable
+            // resource exhaustion; there is no degraded mode to fall to.
             .expect("spawn resilience monitor");
         *self.monitor.lock().unwrap() = Some(handle);
     }

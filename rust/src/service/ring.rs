@@ -18,13 +18,32 @@
 //!   no channel, no queue, no allocation.
 //! * [`EpochGate`] — an atomic-flag mutual-exclusion gate for control-plane
 //!   epochs (rare, never on the request path), replacing a `Mutex<()>`.
+//!
+//! ## Verification
+//!
+//! All synchronization here comes from the [`crate::util::sync`] shim:
+//! plain `std` in normal builds, the `interleave` model checker under
+//! `--features model`. `src/verify.rs` exhaustively explores the SPSC
+//! send/recv handshake (including the sleeping-flag park/unpark *without*
+//! the `PARK_BACKSTOP` timeout), the close/drop-drain race, the
+//! `Completion` one-shot protocol, and `EpochGate` mutual exclusion.
+//!
+//! Ordering audit (PR 7): the Dekker handshake — store own sleeping flag,
+//! then load the peer-owned queue counter; peer stores the counter, then
+//! loads the flag — is `SeqCst` on all four accesses, as Dekker-style
+//! mutual exclusion requires (store-buffering reordering of a
+//! `Release` store past an `Acquire` load loses the wakeup). The model
+//! regression `verify::dekker_handshake_requires_seqcst` re-derives this:
+//! the same protocol under `Release`/`Acquire` deadlocks, under `SeqCst`
+//! it passes exhaustively.
 
-use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
-use std::thread::Thread;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::thread;
+use crate::util::sync::thread::Thread;
+use crate::util::sync::{AtomicBool, AtomicU8, AtomicUsize, CellSlot, Ordering};
 
 use super::scatter::SlabPool;
 
@@ -41,7 +60,7 @@ const PARK_BACKSTOP: Duration = Duration::from_millis(100);
 
 struct RingInner<T> {
     /// Power-of-two slot array; slot `i & mask` holds sequence number `i`.
-    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    slots: Box<[CellSlot<MaybeUninit<T>>]>,
     mask: usize,
     /// Next sequence the producer writes (monotonic, wraps via `mask`).
     tail: AtomicUsize,
@@ -57,13 +76,23 @@ struct RingInner<T> {
     cons_sleeping: AtomicBool,
     prod_sleeping: AtomicBool,
     /// Registered lazily on first blocking call from each side.
+    /// Deliberately `std` even under the model: each cell has exactly one
+    /// initializing thread (its own endpoint), so `get_or_init` can never
+    /// block on a descheduled model thread, and the peer's `get` is a
+    /// lock-free load — the shim's no-mixed-primitives rule is satisfied.
     cons_thread: OnceLock<Thread>,
     prod_thread: OnceLock<Thread>,
 }
 
-// The slots are only touched under the head/tail handoff protocol: each
-// slot is written by exactly one side at a time.
+// SAFETY: the slots are only touched under the head/tail handoff protocol
+// (each slot is owned by exactly one side at a time: the producer until the
+// tail store publishes it, the consumer after the acquire of that store),
+// so sending the ring or sharing &RingInner across the two endpoint
+// threads never produces concurrent slot access. T: Send bounds both
+// impls because items cross from producer to consumer thread.
 unsafe impl<T: Send> Send for RingInner<T> {}
+// SAFETY: see Send above; &RingInner only exposes atomics, OnceLock, and
+// the protocol-guarded slots.
 unsafe impl<T: Send> Sync for RingInner<T> {}
 
 impl<T> RingInner<T> {
@@ -101,6 +130,10 @@ impl<T> Drop for RingInner<T> {
         let head = *self.head.get_mut();
         let tail = *self.tail.get_mut();
         for seq in head..tail {
+            // SAFETY: &mut self proves both endpoints are gone, so every
+            // sequence in head..tail was fully written by a completed push
+            // (the tail store is the last step of a push) and never popped;
+            // each slot in that range holds an initialized T exactly once.
             unsafe {
                 (*self.slots[seq & self.mask].get()).assume_init_drop();
             }
@@ -147,7 +180,7 @@ pub(crate) struct Consumer<T> {
 pub(crate) fn spsc<T: Send>(cap: usize) -> (Producer<T>, Consumer<T>) {
     let cap = cap.max(2).next_power_of_two();
     let slots = (0..cap)
-        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .map(|_| CellSlot::new(MaybeUninit::uninit()))
         .collect::<Vec<_>>()
         .into_boxed_slice();
     let inner = Arc::new(RingInner {
@@ -187,21 +220,30 @@ impl<T: Send> Producer<T> {
     }
 
     fn try_send_inner(&self, v: T) -> Result<(), SendError<T>> {
+        // hotpath: begin (no allocation between here and the publish)
         let inner = &self.inner;
         if inner.closed.load(Ordering::SeqCst) {
             return Err(SendError::Closed(v));
         }
+        // RELAXED: tail is producer-owned — this thread is the only writer
+        // (Producer is !Sync), so it re-reads its own last store.
         let tail = inner.tail.load(Ordering::Relaxed);
         let head = inner.head.load(Ordering::SeqCst);
         if tail.wrapping_sub(head) > inner.mask {
             return Err(SendError::Full(v));
         }
+        // SAFETY: tail - head <= mask, so slot `tail & mask` is not owned
+        // by the consumer (it only reads slots below tail); this producer
+        // is the unique writer (single-producer contract, enforced by
+        // !Sync), and the slot's previous item was already popped or never
+        // written, so writing MaybeUninit here never overwrites a live T.
         unsafe {
             (*inner.slots[tail & inner.mask].get()).write(v);
         }
         inner.tail.store(tail.wrapping_add(1), Ordering::SeqCst);
         inner.wake_consumer();
         Ok(())
+        // hotpath: end
     }
 
     /// Blocking push: parks while the ring is full; fails only when the
@@ -215,18 +257,24 @@ impl<T: Send> Producer<T> {
                 Err(SendError::Full(x)) => v = x,
             }
             let inner = &self.inner;
-            inner.prod_thread.get_or_init(std::thread::current);
+            inner.prod_thread.get_or_init(thread::current);
+            // Dekker store side: the flag store and the head re-load below
+            // must both be SeqCst — with Release/Acquire the flag store may
+            // be reordered past the load (store-buffering), both sides see
+            // stale state, and the wakeup is lost (model-checked by
+            // verify::dekker_handshake_requires_seqcst).
             inner.prod_sleeping.store(true, Ordering::SeqCst);
             // Re-check after publishing the flag (Dekker): a pop or close
             // that raced the store will see the flag and unpark us — or we
             // see its effect here and skip parking.
+            // RELAXED: tail is producer-owned (see try_send_inner).
             let tail = inner.tail.load(Ordering::Relaxed);
             let head = inner.head.load(Ordering::SeqCst);
             if tail.wrapping_sub(head) <= inner.mask || inner.closed.load(Ordering::SeqCst) {
                 inner.prod_sleeping.store(false, Ordering::SeqCst);
                 continue;
             }
-            std::thread::park_timeout(PARK_BACKSTOP);
+            thread::park_timeout(PARK_BACKSTOP);
             inner.prod_sleeping.store(false, Ordering::SeqCst);
         }
     }
@@ -248,6 +296,9 @@ impl<T> RingInner<T> {
     /// Consumer-side pop (callable only from the consumer handle — single
     /// consumer is the ring's contract).
     fn pop_one(&self) -> Option<T> {
+        // hotpath: begin (no allocation on the pop path)
+        // RELAXED: head is consumer-owned — this thread is the only writer
+        // (Consumer is !Sync), so it re-reads its own last store.
         let head = self.head.load(Ordering::Relaxed);
         // SeqCst pairs with the close flag: a drain attempt after
         // observing `closed` must see every push sequenced before it.
@@ -255,10 +306,16 @@ impl<T> RingInner<T> {
         if head == tail {
             return None;
         }
+        // SAFETY: head < tail, and the SeqCst load of tail synchronizes
+        // with the producer's SeqCst store that published slot `head`, so
+        // the slot holds a fully written T; this consumer is its unique
+        // reader (single-consumer contract, enforced by !Sync) and the
+        // head store below retires the slot before any reuse.
         let v = unsafe { (*self.slots[head & self.mask].get()).assume_init_read() };
         self.head.store(head.wrapping_add(1), Ordering::SeqCst);
         self.wake_producer();
         Some(v)
+        // hotpath: end
     }
 }
 
@@ -281,15 +338,17 @@ impl<T: Send> Consumer<T> {
                 // before the close are never lost.
                 return self.try_recv();
             }
-            inner.cons_thread.get_or_init(std::thread::current);
+            inner.cons_thread.get_or_init(thread::current);
+            // Dekker store side: SeqCst required, see Producer::send.
             inner.cons_sleeping.store(true, Ordering::SeqCst);
+            // RELAXED: head is consumer-owned (see pop_one).
             let head = inner.head.load(Ordering::Relaxed);
             let tail = inner.tail.load(Ordering::SeqCst);
             if head != tail || inner.closed.load(Ordering::SeqCst) {
                 inner.cons_sleeping.store(false, Ordering::SeqCst);
                 continue;
             }
-            std::thread::park_timeout(PARK_BACKSTOP);
+            thread::park_timeout(PARK_BACKSTOP);
             inner.cons_sleeping.store(false, Ordering::SeqCst);
         }
     }
@@ -314,7 +373,7 @@ impl<T> Drop for Consumer<T> {
                     break;
                 }
             } else {
-                std::thread::yield_now();
+                thread::yield_now();
             }
         }
     }
@@ -338,17 +397,24 @@ pub(crate) struct Completion {
     /// Gate so a defensive double-complete (e.g. accumulator drop after a
     /// normal completion) never races the result cell.
     claimed: AtomicBool,
-    result: UnsafeCell<Option<anyhow::Result<Vec<f32>>>>,
+    result: CellSlot<Option<anyhow::Result<Vec<f32>>>>,
     /// Written by the (single) waiter before it CASes `state` to WAITING;
     /// read by the completer only after observing WAITING.
-    waiter: UnsafeCell<Option<Thread>>,
+    waiter: CellSlot<Option<Thread>>,
     /// When set, a published-but-never-redeemed `Ok` buffer returns its
     /// capacity to this pool at drop (an expired/abandoned ticket must not
     /// leak the slab — under chaos soaks expiry is routine, not rare).
     pool: Option<Arc<SlabPool>>,
 }
 
+// SAFETY: the result cell is written once by the winning completer (the
+// `claimed` CAS elects it) before the READY swap publishes it, and read
+// only by the single owning ticket after an Acquire of READY; the waiter
+// cell is written by the single waiter before its CAS to WAITING and read
+// by the completer only after observing WAITING. Every cell access is
+// therefore ordered by an atomic edge (model-checked in verify.rs).
 unsafe impl Send for Completion {}
+// SAFETY: see Send above.
 unsafe impl Sync for Completion {}
 
 impl Default for Completion {
@@ -362,8 +428,8 @@ impl Completion {
         Self {
             state: AtomicU8::new(PENDING),
             claimed: AtomicBool::new(false),
-            result: UnsafeCell::new(None),
-            waiter: UnsafeCell::new(None),
+            result: CellSlot::new(None),
+            waiter: CellSlot::new(None),
             pool: None,
         }
     }
@@ -392,6 +458,9 @@ impl Completion {
         {
             return;
         }
+        // SAFETY: the claimed CAS above elected this thread the unique
+        // writer, and no reader touches the cell until the READY swap
+        // below publishes it (try_take Acquire-loads READY first).
         unsafe {
             *self.result.get() = Some(result);
         }
@@ -399,6 +468,10 @@ impl Completion {
         if prev == WAITING {
             // The waiter registered its handle before CASing to WAITING;
             // the swap above synchronizes with that CAS.
+            // SAFETY: observing WAITING acquires the waiter's CAS, which
+            // happens after its write of the cell; the waiter never
+            // touches the cell again once registered, so this read is
+            // exclusive.
             if let Some(t) = unsafe { (*self.waiter.get()).take() } {
                 t.unpark();
             }
@@ -409,6 +482,10 @@ impl Completion {
     /// consumer (the owning ticket).
     pub(crate) fn try_take(&self) -> Option<anyhow::Result<Vec<f32>>> {
         if self.state.load(Ordering::Acquire) == READY {
+            // SAFETY: the Acquire of READY synchronizes with the
+            // completer's AcqRel swap, which happens after its write; the
+            // completer never touches the cell again after READY, and the
+            // owning ticket is the single reader.
             unsafe { (*self.result.get()).take() }
         } else {
             None
@@ -432,8 +509,12 @@ impl Completion {
                 None => Duration::from_millis(50),
             };
             if !registered {
+                // SAFETY: the single waiter (owning ticket) writes its
+                // handle before CASing state to WAITING; the completer
+                // reads it only after observing WAITING, so the write is
+                // exclusive.
                 unsafe {
-                    *self.waiter.get() = Some(std::thread::current());
+                    *self.waiter.get() = Some(thread::current());
                 }
                 match self.state.compare_exchange(
                     PENDING,
@@ -446,7 +527,7 @@ impl Completion {
                     Err(_) => continue,
                 }
             }
-            std::thread::park_timeout(timeout);
+            thread::park_timeout(timeout);
         }
     }
 }
@@ -496,13 +577,13 @@ impl EpochGate {
         {
             attempts += 1;
             if attempts < 16 {
-                std::thread::yield_now();
+                thread::yield_now();
             } else {
                 // Epochs can be seconds-long (a fleet migration rebuilds
                 // card backends): back off to a coarse sleep so the rare
                 // contender (timer thread vs. a manual epoch) costs a few
                 // hundred wakeups/s, not a spinning core.
-                std::thread::sleep(Duration::from_millis(5));
+                thread::sleep(Duration::from_millis(5));
             }
         }
         EpochGuard(&self.0)
@@ -593,16 +674,19 @@ mod tests {
     /// empty along the way — the ring is much smaller than the stream).
     #[test]
     fn seeded_interleavings_preserve_fifo_and_lose_nothing() {
-        for seed in 0..8u64 {
+        // Miri executes every access through its interpreter (~1000x
+        // slower) but checks each one for UB, so a short stream already
+        // buys the full protocol coverage; native runs keep the long one.
+        let (seeds, n): (u64, u64) = if cfg!(miri) { (2, 60) } else { (8, 2_000) };
+        for seed in 0..seeds {
             let (tx, rx) = spsc::<u64>(4);
-            let n: u64 = 2_000;
             let producer = std::thread::spawn(move || {
                 let mut rng = Rng::seed_from_u64(seed);
                 for i in 0..n {
                     if rng.gen_bool(0.05) {
                         std::thread::yield_now();
                     }
-                    if rng.gen_bool(0.002) {
+                    if !cfg!(miri) && rng.gen_bool(0.002) {
                         std::thread::sleep(Duration::from_micros(50));
                     }
                     tx.send(i).unwrap();
@@ -617,7 +701,7 @@ mod tests {
                 if rng.gen_bool(0.05) {
                     std::thread::yield_now();
                 }
-                if rng.gen_bool(0.002) {
+                if !cfg!(miri) && rng.gen_bool(0.002) {
                     std::thread::sleep(Duration::from_micros(50));
                 }
             }
@@ -684,12 +768,13 @@ mod tests {
     fn epoch_gate_mutual_exclusion() {
         let gate = Arc::new(EpochGate::new());
         let counter = Arc::new(AtomicUsize::new(0));
+        let (threads, rounds) = if cfg!(miri) { (3, 40) } else { (4, 1_000) };
         let mut handles = Vec::new();
-        for _ in 0..4 {
+        for _ in 0..threads {
             let gate = Arc::clone(&gate);
             let counter = Arc::clone(&counter);
             handles.push(std::thread::spawn(move || {
-                for _ in 0..1_000 {
+                for _ in 0..rounds {
                     let _g = gate.lock();
                     // Non-atomic-looking increment under the gate: racy
                     // unless the gate excludes.
@@ -701,6 +786,6 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(counter.load(Ordering::Relaxed), 4_000);
+        assert_eq!(counter.load(Ordering::Relaxed), threads * rounds);
     }
 }

@@ -15,9 +15,9 @@
 //! that returns finished results via `Service::recycle` makes the
 //! steady-state output path allocation-free (EXPERIMENTS.md §Perf L4).
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{AtomicBool, AtomicU8, CellSlot, Mutex, Ordering};
 
 /// Pooled, capacity-retaining `Vec<f32>` slabs for request outputs.
 ///
@@ -108,8 +108,13 @@ impl SlabPool {
 /// chain of the request's sub-batch countdown orders every write before
 /// the final [`ScatterBuf::take`].  Debug builds verify the invariant at
 /// runtime with an atomic claim per slot.
+///
+/// Model checking (`--features model`, `verify::scatter_*`): the claim
+/// bitmap is exercised under concurrent duplicate writes — the PR-6
+/// hedging race — and the checker's `RaceCell` flags any interleaving
+/// where a data write could alias.
 pub(crate) struct ScatterBuf {
-    data: UnsafeCell<Vec<f32>>,
+    data: CellSlot<Vec<f32>>,
     /// Total floats (= rows * d).
     len: usize,
     /// Floats per row slot.
@@ -129,7 +134,13 @@ const SLOT_EMPTY: u8 = 0;
 const SLOT_WRITING: u8 = 1;
 const SLOT_DONE: u8 = 2;
 
+// SAFETY: `data` is the only non-Sync field; it is written through raw
+// pointers only under the disjoint-slot contract above (distinct `write_row`
+// positions touch disjoint ranges; move-out is gated by the `taken` swap),
+// so sending the buffer or sharing `&ScatterBuf` across threads is sound.
 unsafe impl Send for ScatterBuf {}
+// SAFETY: see the Send impl — shared access is what the slot partition and
+// the `taken` flag are designed to make race-free.
 unsafe impl Sync for ScatterBuf {}
 
 impl ScatterBuf {
@@ -139,7 +150,7 @@ impl ScatterBuf {
         let len = rows * d;
         let track = cfg!(debug_assertions) || pool.claims;
         Self {
-            data: UnsafeCell::new(pool.get(len)),
+            data: CellSlot::new(pool.get(len)),
             len,
             d,
             taken: AtomicBool::new(false),
@@ -148,6 +159,7 @@ impl ScatterBuf {
         }
     }
 
+    // hotpath: begin — per-row scatter; no allocation permitted (palint R4).
     /// Write one row (`d` floats) into its final position.  Callable
     /// concurrently from many workers for *distinct* positions; aliased
     /// positions are a router-invariant violation (panics in debug).
@@ -163,6 +175,12 @@ impl ScatterBuf {
                 "position {pos} written twice: sub-batch views alias"
             );
         }
+        // SAFETY: `start + d <= len` is asserted above, and the router
+        // invariant (each position in exactly one sub-batch, once) makes
+        // writes from concurrent callers disjoint; the buffer cannot be
+        // moved out concurrently because `take`/`discard` run only after
+        // the sub-batch countdown's Release/Acquire chain orders every
+        // write before them.
         unsafe {
             let base = (*self.data.get()).as_mut_ptr();
             std::ptr::copy_nonoverlapping(row.as_ptr(), base.add(start), self.d);
@@ -180,10 +198,13 @@ impl ScatterBuf {
             self.write_row(pos as usize, &rows[k * self.d..(k + 1) * self.d]);
         }
     }
+    // hotpath: end
 
     /// Move the filled buffer out (last-finisher only: the request's
     /// sub-batch countdown guarantees a unique caller, after all writes).
     pub(crate) fn take(&self) -> Vec<f32> {
+        // PANIC: invariant, not input — the sub-batch countdown hands the
+        // buffer to exactly one last finisher; a second take is a logic bug.
         self.try_take().expect("ScatterBuf taken twice")
     }
 
@@ -193,6 +214,10 @@ impl ScatterBuf {
         if self.taken.swap(true, Ordering::AcqRel) {
             None
         } else {
+            // SAFETY: the AcqRel swap on `taken` admits exactly one mover,
+            // and callers invoke take/try_take only after the sub-batch
+            // countdown proves all writers finished — so no `write_row`
+            // pointer into the Vec is live when it is moved out.
             Some(unsafe { std::mem::take(&mut *self.data.get()) })
         }
     }
@@ -219,6 +244,10 @@ impl ScatterBuf {
             let span = i * self.d..(i + 1) * self.d;
             if slot.load(Ordering::Acquire) == SLOT_DONE {
                 valid[i] = true;
+                // SAFETY: only rows whose slot reads SLOT_DONE (Acquire,
+                // pairing with the writer's Release store) are read, so the
+                // copy never overlaps a mid-flight write; the allocation
+                // stays in place (copied, not moved) for late writers.
                 unsafe {
                     let base = (*self.data.get()).as_ptr().add(i * self.d);
                     std::ptr::copy_nonoverlapping(base, out[span].as_mut_ptr(), self.d);
@@ -235,6 +264,8 @@ impl ScatterBuf {
     /// Return the buffer to the pool without surfacing it (failure path).
     pub(crate) fn discard(&self) {
         if !self.taken.swap(true, Ordering::AcqRel) {
+            // SAFETY: same unique-mover argument as `try_take` — the swap
+            // on `taken` admits exactly one caller to move the Vec out.
             let buf = unsafe { std::mem::take(&mut *self.data.get()) };
             self.pool.put(buf);
         }
@@ -379,7 +410,10 @@ mod tests {
             independent: true,
             card_id: "t".into(),
         };
-        prop::check("scatterbuf-disjoint-cover", 40, |g| {
+        // Miri interprets every raw-pointer write; a handful of iterations
+        // already exercises the disjointness contract it checks for UB.
+        let iters = if cfg!(miri) { 4 } else { 40 };
+        prop::check("scatterbuf-disjoint-cover", iters, |g| {
             let windows = g.usize(1, 4);
             let total_rows = 8_192u64;
             let plan = WindowPlan::split(total_rows, 128, windows);

@@ -19,10 +19,17 @@
 //! (non-preemptive, so reservations are never lent out — a granted slot
 //! cannot be reclaimed), and un-reserved slack is first-come.  A noisy
 //! neighbor can exhaust the slack but never a quiet tenant's reservation.
+//!
+//! All synchronization here comes from the `util::sync` shim: under
+//! `--features model` the CAS admission core and the parked-waiter
+//! handshake run inside the `interleave` checker (`verify::admission_*`),
+//! where `wait_timeout` never times out — so a passing model proves the
+//! wakeup protocol sound without its latency backstop.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::util::sync::{AtomicU64, AtomicUsize, Condvar, Mutex, Ordering};
 
 use anyhow::anyhow;
 
@@ -841,13 +848,20 @@ mod tests {
         let a = ga.register("a", 1.0);
         let b = ga.register("b", 1.0);
         let over = Arc::new(AtomicU64::new(0));
+        // Miri's interpreter makes each CAS ~1000x slower; a short hammer
+        // still drives the reserve-then-check interleavings it can catch.
+        let (threads, iters): (&[usize], usize) = if cfg!(miri) {
+            (&[a, b, a], 50)
+        } else {
+            (&[a, b, a, b, a, b], 2_000)
+        };
         std::thread::scope(|s| {
-            for tid in [a, b, a, b, a, b] {
+            for &tid in threads {
                 let ga = Arc::clone(&ga);
                 let over = Arc::clone(&over);
                 s.spawn(move || {
                     let c = ga.counters(tid);
-                    for _ in 0..2_000 {
+                    for _ in 0..iters {
                         if let Some(g) = GlobalAdmission::try_acquire_cached(&ga, &c) {
                             if ga.used_total() > 16 {
                                 over.fetch_add(1, Ordering::Relaxed);

@@ -12,9 +12,13 @@
 //! * [`benchkit`] — warmup/median benchmark harness + table/CSV output
 //!                  (for `criterion`)
 //! * [`threads`]  — scoped parallel map (for `rayon`)
+//! * [`sync`]     — concurrency shim: `std` primitives normally, the
+//!                  in-tree `interleave` model checker under
+//!                  `--features model` (for `loom`/`shuttle`)
 
 pub mod benchkit;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod threads;

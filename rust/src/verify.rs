@@ -1,0 +1,451 @@
+//! Model-checked proofs for the serving path's lock-free primitives.
+//!
+//! Compiled only under `--features model`, where the `util::sync` shim
+//! routes every atomic, lock, cell access, and park/unpark of the ported
+//! modules through the in-tree `interleave` checker (see its crate docs).
+//! Each test here drives the *real* crate primitive — not a replica —
+//! through every interleaving the bounded DFS reaches (default: all
+//! schedules with at most 2 preemptive context switches, plus stale-read
+//! choices for `Relaxed` visibility), so a pass is a proof over that
+//! bounded space, not a lucky run.  `model_random` supplements the
+//! exhaustive passes with seeded unbounded-preemption schedules for depth.
+//!
+//! The five modeled protocols (EXPERIMENTS.md §Verify):
+//!
+//! 1. SPSC ring send/recv handshake, including the Dekker sleeping-flag
+//!    park/unpark with its `PARK_BACKSTOP` removed (the model's `park`
+//!    never times out — correctness cannot lean on the backstop).
+//! 2. The ring's close/drop-drain race (`pushing` bracket): no queued item
+//!    is ever leaked or double-freed, under any interleaving.
+//! 3. `Completion` one-shot + the request countdown (`RequestAcc`):
+//!    N workers' `finish_part` vs. a parked waiter.
+//! 4. `ScatterBuf`'s claim bitmap under duplicate writes (the PR-6 hedging
+//!    race): token-guarded duplicates are clean; unguarded duplicates are
+//!    *detected* in every schedule (the alias assertion fires before the
+//!    data race can execute).
+//! 5. `GlobalAdmission`'s lock-free CAS admission and its parked-waiter
+//!    wakeup (whose `wait_timeout` backstop is likewise disabled).
+//!
+//! Plus the ordering regression behind the PR's audit:
+//! [`tests::dekker_handshake_requires_seqcst`] re-derives *why* the ring's
+//! four Dekker accesses are `SeqCst` — the same protocol with the
+//! plausible-looking `Release`/`Acquire` orderings loses the wakeup
+//! (store-buffering) and the checker reports the deadlock.
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, OnceLock};
+    use std::time::Instant;
+
+    use interleave::{explore, Config, FailureKind};
+
+    use crate::coordinator::metrics::Metrics;
+    use crate::service::backend::RequestAcc;
+    use crate::service::ring::{spsc, Completion, EpochGate};
+    use crate::service::scatter::{ScatterBuf, SlabPool};
+    use crate::service::session::GlobalAdmission;
+    use crate::util::sync::thread::{self, Thread};
+    use crate::util::sync::{AtomicBool, AtomicUsize, CellSlot, Ordering};
+
+    /// Assert an exhaustive clean pass: no failure AND the bounded state
+    /// space was fully explored (a capped-out run is not a proof).
+    fn assert_exhaustive_clean(what: &str, f: impl Fn()) {
+        assert_exhaustive_clean_with(what, Config::default(), f);
+    }
+
+    /// As [`assert_exhaustive_clean`] with an explicit config — the larger
+    /// models raise `max_executions` so the DFS can actually exhaust their
+    /// bounded space instead of tripping the default cap.
+    fn assert_exhaustive_clean_with(what: &str, cfg: Config, f: impl Fn()) {
+        let r = explore(cfg, f);
+        if let Some(fl) = r.failure {
+            panic!(
+                "{what}: {:?} after {} executions: {} (schedule {:?})",
+                fl.kind, r.executions, fl.message, fl.schedule
+            );
+        }
+        assert!(
+            r.complete,
+            "{what}: state space not exhausted in {} executions",
+            r.executions
+        );
+    }
+
+    // -----------------------------------------------------------------
+    // T0: the Dekker-orderings regression (ring audit, PR 7).
+    // -----------------------------------------------------------------
+
+    /// A minimal replica of the ring's sleep handshake, parameterized by
+    /// memory ordering.  Consumer side: set own sleeping flag, re-check
+    /// the peer-owned counter, park.  Producer side: bump the counter,
+    /// check the flag, unpark.  Exactly the four accesses the ring audit
+    /// covers (`service::ring` module docs, "Ordering audit").
+    fn dekker(store_ord: Ordering, load_ord: Ordering) -> impl Fn() {
+        move || {
+            let item = Arc::new(AtomicUsize::new(0));
+            let sleeping = Arc::new(AtomicBool::new(false));
+            let me: Arc<OnceLock<Thread>> = Arc::new(OnceLock::new());
+            let consumer = thread::spawn({
+                let item = Arc::clone(&item);
+                let sleeping = Arc::clone(&sleeping);
+                let me = Arc::clone(&me);
+                move || loop {
+                    if item.load(load_ord) != 0 {
+                        return;
+                    }
+                    let _ = me.set(thread::current());
+                    sleeping.store(true, store_ord);
+                    // Dekker re-check after publishing the flag.
+                    if item.load(load_ord) != 0 {
+                        sleeping.store(false, store_ord);
+                        return;
+                    }
+                    // No timeout backstop: the handshake must be correct.
+                    thread::park();
+                    sleeping.store(false, store_ord);
+                }
+            });
+            item.store(1, store_ord);
+            if sleeping.load(load_ord) {
+                if let Some(t) = me.get() {
+                    t.unpark();
+                }
+            }
+            consumer.join().unwrap();
+        }
+    }
+
+    /// The PR's ordering audit, as a machine-checked fact: the handshake
+    /// is wakeup-correct under `SeqCst` (exhaustively), and the
+    /// plausible-looking `Release`/`Acquire` version — which a Dekker
+    /// protocol must NOT use — loses the wakeup via store-buffering and
+    /// deadlocks.  If someone "optimizes" the ring's orderings back down,
+    /// the clean half of this test is the spec they break (and the ring
+    /// models below fail outright).
+    #[test]
+    fn dekker_handshake_requires_seqcst() {
+        assert_exhaustive_clean(
+            "SeqCst Dekker handshake",
+            dekker(Ordering::SeqCst, Ordering::SeqCst),
+        );
+
+        let r = explore(
+            Config::default(),
+            dekker(Ordering::Release, Ordering::Acquire),
+        );
+        match r.failure {
+            Some(f) => assert_eq!(
+                f.kind,
+                FailureKind::Deadlock,
+                "Release/Acquire Dekker must fail as a lost-wakeup deadlock, got {f:?}"
+            ),
+            None => panic!(
+                "Release/Acquire Dekker explored {} executions without finding \
+                 the store-buffering lost wakeup — checker regression",
+                r.executions
+            ),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // T1: the SPSC ring.
+    // -----------------------------------------------------------------
+
+    /// Producer pushes a stream longer than the ring through blocking
+    /// `send` (parks on full), then closes; consumer drains with blocking
+    /// `recv` (parks on empty).  FIFO with nothing lost, under every
+    /// bounded schedule — including the ones where both sides sleep and
+    /// wake each other through the Dekker flags.
+    #[test]
+    fn spsc_blocking_handshake_exhaustive() {
+        let cfg = Config {
+            max_executions: 400_000,
+            max_ops: 400_000,
+            ..Config::default()
+        };
+        assert_exhaustive_clean_with("SPSC send/recv handshake", cfg, || {
+            let (tx, rx) = spsc::<u64>(2);
+            let producer = thread::spawn(move || {
+                for i in 0..3u64 {
+                    tx.send(i).unwrap();
+                }
+                tx.close();
+            });
+            let mut expect = 0u64;
+            while let Some(v) = rx.recv() {
+                assert_eq!(v, expect, "out of order or lost");
+                expect += 1;
+            }
+            assert_eq!(expect, 3, "stream ended early");
+            producer.join().unwrap();
+        });
+    }
+
+    /// Depth supplement: a longer stream under seeded unbounded-preemption
+    /// schedules (too deep to exhaust; EXPERIMENTS.md §Verify lists the
+    /// seed so a failure reproduces).
+    #[test]
+    fn spsc_blocking_handshake_randomized() {
+        interleave::model_random(0xA100, 150, || {
+            let (tx, rx) = spsc::<u64>(2);
+            let producer = thread::spawn(move || {
+                for i in 0..6u64 {
+                    tx.send(i).unwrap();
+                }
+                tx.close();
+            });
+            let mut expect = 0u64;
+            while let Some(v) = rx.recv() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+            assert_eq!(expect, 6);
+            producer.join().unwrap();
+        });
+    }
+
+    /// T2: the close/drop-drain race.  A consumer dropped while a push is
+    /// mid-flight (the `pushing` bracket) must account for the item in
+    /// every interleaving: delivered-and-dropped by the drain, or refused
+    /// as `Closed` and dropped by the producer — never leaked into a slot
+    /// both sides have abandoned, never dropped twice (the `RaceCell`
+    /// slots would flag the double access).
+    #[test]
+    fn spsc_consumer_drop_drain_never_strands_items() {
+        assert_exhaustive_clean("SPSC drop-drain", || {
+            let item = Arc::new(());
+            let (tx, rx) = spsc::<Arc<()>>(2);
+            let probe = Arc::clone(&item);
+            let producer = thread::spawn(move || {
+                let _ = tx.try_send(probe);
+                // tx drops here: the ring closes from the producer side.
+            });
+            drop(rx); // races the push: close + spin-out `pushing` + drain
+            producer.join().unwrap();
+            assert_eq!(
+                Arc::strong_count(&item),
+                1,
+                "queued item leaked (or freed twice and we'd have raced)"
+            );
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // T3: Completion one-shot + the request countdown.
+    // -----------------------------------------------------------------
+
+    /// Two workers scatter disjoint rows and count the request down
+    /// (`finish_part`) while the waiter parks on the `Completion`; the
+    /// last worker must publish exactly once and wake the waiter in every
+    /// schedule.  This is the whole default-path completion protocol —
+    /// claim CAS, result cell, WAITING/READY state machine, park/unpark —
+    /// driven end to end through `RequestAcc`.
+    #[test]
+    fn completion_countdown_exhaustive() {
+        let cfg = Config {
+            max_executions: 400_000,
+            max_ops: 400_000,
+            ..Config::default()
+        };
+        assert_exhaustive_clean_with("Completion + countdown", cfg, || {
+            let metrics = Arc::new(Metrics::new());
+            let pool = SlabPool::new();
+            let acc = Arc::new(RequestAcc::new_slab(&pool, 2, 1, false));
+            acc.arm(2, Instant::now());
+            let done = acc.completion();
+            for i in 0..2u32 {
+                let acc = Arc::clone(&acc);
+                let m = Arc::clone(&metrics);
+                thread::spawn(move || {
+                    acc.write_row(i, &[(i + 1) as f32]);
+                    acc.finish_part(&m);
+                });
+            }
+            let out = done
+                .wait(None)
+                .expect("no deadline set")
+                .expect("both parts succeeded");
+            assert_eq!(out, vec![1.0, 2.0]);
+        });
+    }
+
+    /// A completer racing a defensive double-complete (the accumulator
+    /// Drop backstop does this) must publish the first result exactly once
+    /// — the loser's result is silently dropped, the waiter never sees two.
+    #[test]
+    fn completion_double_complete_is_idempotent() {
+        assert_exhaustive_clean("Completion double-complete", || {
+            let done = Arc::new(Completion::new());
+            let racer = {
+                let done = Arc::clone(&done);
+                thread::spawn(move || done.complete(Ok(vec![1.0])))
+            };
+            done.complete(Ok(vec![2.0]));
+            racer.join().unwrap();
+            let got = done.try_take().expect("claimed cell must publish");
+            let v = got.unwrap();
+            assert!(v == vec![1.0] || v == vec![2.0]);
+            assert!(done.try_take().is_none(), "one-shot: second take empty");
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // T4: ScatterBuf claim bitmap under duplicate writes (hedging race).
+    // -----------------------------------------------------------------
+
+    /// The PR-6 hedging protocol: two copies of one sub-batch race, a
+    /// claim token (here the same CAS shape as `resilience::PartToken`)
+    /// elects the writer, the loser stays silent.  Clean in every
+    /// schedule — exactly one row lands, `take` sees it.
+    #[test]
+    fn scatter_hedged_duplicate_with_token_is_clean() {
+        assert_exhaustive_clean("ScatterBuf hedged duplicate (token)", || {
+            let pool = SlabPool::with_claims(true);
+            let buf = Arc::new(ScatterBuf::new(&pool, 1, 1));
+            let token = Arc::new(AtomicBool::new(false));
+            let hedge = {
+                let buf = Arc::clone(&buf);
+                let token = Arc::clone(&token);
+                thread::spawn(move || {
+                    if token
+                        .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        buf.write_row(0, &[2.0]);
+                    }
+                })
+            };
+            if token
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                buf.write_row(0, &[1.0]);
+            }
+            hedge.join().unwrap();
+            let out = buf.take();
+            assert!(out == vec![1.0] || out == vec![2.0], "one copy must win");
+        });
+    }
+
+    /// The same race *without* the token — the bug hedging would have
+    /// without PR 6's claim protocol.  The claim bitmap must catch the
+    /// alias in **every** schedule: the checker finds a Panic (the
+    /// "written twice" assertion), never a DataRace — i.e. the bitmap's
+    /// swap fires before the aliased data write can execute.
+    #[test]
+    fn scatter_unguarded_duplicate_is_always_detected() {
+        let r = explore(Config::default(), || {
+            let pool = SlabPool::with_claims(true);
+            let buf = Arc::new(ScatterBuf::new(&pool, 1, 1));
+            let rogue = {
+                let buf = Arc::clone(&buf);
+                thread::spawn(move || buf.write_row(0, &[2.0]))
+            };
+            buf.write_row(0, &[1.0]);
+            rogue.join().unwrap();
+        });
+        match r.failure {
+            Some(f) => {
+                assert_eq!(
+                    f.kind,
+                    FailureKind::Panic,
+                    "the claim bitmap must fire before any racy write, got {f:?}"
+                );
+                assert!(
+                    f.message.contains("written twice"),
+                    "wrong panic: {}",
+                    f.message
+                );
+            }
+            None => panic!(
+                "unguarded duplicate write went undetected in {} executions",
+                r.executions
+            ),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // T5: EpochGate + GlobalAdmission.
+    // -----------------------------------------------------------------
+
+    /// Mutual exclusion of the CAS gate, proven on a `RaceCell`: the
+    /// unsynchronized counter inside the critical section would be flagged
+    /// as a data race by the checker in any schedule where both threads
+    /// got through the gate together.
+    #[test]
+    fn epoch_gate_excludes_exhaustively() {
+        assert_exhaustive_clean("EpochGate mutual exclusion", || {
+            let gate = Arc::new(EpochGate::new());
+            let cell = Arc::new(CellSlot::new(0usize));
+            let t = {
+                let gate = Arc::clone(&gate);
+                let cell = Arc::clone(&cell);
+                thread::spawn(move || {
+                    let _g = gate.lock();
+                    // SAFETY: the gate serializes access; the RaceCell
+                    // aborts the model if it ever fails to.
+                    unsafe { *cell.get() += 1 };
+                })
+            };
+            {
+                let _g = gate.lock();
+                // SAFETY: as above.
+                unsafe { *cell.get() += 1 };
+            }
+            t.join().unwrap();
+            // SAFETY: the spawned thread was joined, so this read is
+            // ordered after both increments; no access is concurrent.
+            assert_eq!(unsafe { *cell.get() }, 2);
+        });
+    }
+
+    /// The lock-free admission core: two tenants (capacity 2, weights 1:1
+    /// so each is guaranteed one slot) acquire and release concurrently.
+    /// In every schedule both within-guarantee grants succeed, the budget
+    /// never overshoots, and everything drains to zero.
+    #[test]
+    fn admission_cas_invariants_exhaustive() {
+        assert_exhaustive_clean("GlobalAdmission CAS invariants", || {
+            let ga = GlobalAdmission::new(2);
+            let a = ga.register("a", 1.0);
+            let b = ga.register("b", 1.0);
+            let t = {
+                let ga = Arc::clone(&ga);
+                thread::spawn(move || {
+                    let g = GlobalAdmission::try_acquire(&ga, b)
+                        .expect("within guarantee: must admit");
+                    assert!(ga.used_total() <= 2, "budget overshot");
+                    drop(g);
+                })
+            };
+            let g = GlobalAdmission::try_acquire(&ga, a).expect("within guarantee: must admit");
+            assert!(ga.used_total() <= 2, "budget overshot");
+            drop(g);
+            t.join().unwrap();
+            assert_eq!(ga.used_total(), 0, "slots leaked");
+        });
+    }
+
+    /// The parked-waiter handshake under a full budget, with the
+    /// `wait_timeout` backstop disabled by the model: a blocked acquirer
+    /// must be woken by the release in every schedule, or the checker
+    /// reports the lost wakeup as a deadlock.
+    #[test]
+    fn admission_blocking_wakeup_exhaustive() {
+        assert_exhaustive_clean("GlobalAdmission blocking wakeup", || {
+            let ga = GlobalAdmission::new(1);
+            let a = ga.register("a", 1.0);
+            let held = GlobalAdmission::try_acquire(&ga, a).expect("empty budget");
+            let waiter = {
+                let ga = Arc::clone(&ga);
+                thread::spawn(move || {
+                    let (g, _blocked) = GlobalAdmission::acquire_blocking(&ga, a);
+                    drop(g);
+                })
+            };
+            drop(held); // must wake the (possibly parked) waiter
+            waiter.join().unwrap();
+            assert_eq!(ga.used_total(), 0);
+        });
+    }
+}

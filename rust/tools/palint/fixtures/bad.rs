@@ -1,0 +1,41 @@
+// palint seed fixture: every rule must fire on this file.  Never
+// compiled — exercised by `tests/fixtures.rs`, and usable by hand:
+// `cargo run -p palint -- tools/palint/fixtures/bad.rs` exits non-zero
+// (R1 is path-independent; R2/R3/R4 need a serving-tree path, which the
+// integration test spoofs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static HEAD: AtomicUsize = AtomicUsize::new(0);
+
+pub fn r1_undocumented_unsafe(p: *mut u8) {
+    unsafe {
+        *p = 1;
+    }
+}
+
+pub fn r2_unjustified_relaxed() -> usize {
+    let head = HEAD.load(Ordering::Relaxed);
+    head
+}
+
+pub fn r3_unwrap(v: Option<usize>) -> usize {
+    v.unwrap()
+}
+
+pub fn r3_expect(v: Option<usize>) -> usize {
+    v.expect("boom")
+}
+
+pub fn r3_panic() {
+    panic!("boom");
+}
+
+// hotpath: begin
+pub fn r4_alloc_in_hotpath() -> Vec<u8> {
+    let b = Box::new(7u8);
+    let mut v = Vec::with_capacity(4);
+    v.push(*b);
+    v.to_vec()
+}
+// hotpath: end

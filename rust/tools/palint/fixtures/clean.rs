@@ -1,0 +1,47 @@
+// palint seed fixture: the justified twin of bad.rs — zero findings even
+// when linted under a serving-tree path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static HEAD: AtomicUsize = AtomicUsize::new(0);
+
+pub fn r1_documented_unsafe(p: *mut u8) {
+    // SAFETY: caller guarantees `p` is valid for writes (fixture contract).
+    unsafe {
+        *p = 1;
+    }
+}
+
+pub fn r2_justified_relaxed() -> usize {
+    // RELAXED: single-writer counter; the value is only read for telemetry.
+    let head = HEAD.load(Ordering::Relaxed);
+    head
+}
+
+pub fn r3_no_panics(v: Option<usize>) -> usize {
+    v.unwrap_or(0)
+}
+
+pub fn r3_poison_allowance(m: &std::sync::Mutex<usize>) -> usize {
+    *m.lock().unwrap()
+}
+
+pub fn r3_justified(v: Option<usize>) -> usize {
+    // PANIC: invariant, not input — the fixture's caller always passes Some.
+    v.expect("fixture invariant")
+}
+
+// hotpath: begin
+pub fn r4_no_alloc(x: &mut [u8]) {
+    x[0] = 1;
+}
+// hotpath: end
+
+#[cfg(test)]
+mod tests {
+    // Everything after the test fence is ignored by palint.
+    #[test]
+    fn ignored() {
+        Option::<usize>::None.unwrap();
+    }
+}

@@ -1,0 +1,506 @@
+//! palint — project-local static lint for the serving path's concurrency
+//! hygiene.  Zero dependencies by design: it must run offline on a bare
+//! toolchain as a CI hard gate (`cargo run -p palint` from `rust/`).
+//!
+//! Rules (companion to the model-checking layer, see EXPERIMENTS §Verify):
+//!
+//! * **R1 — undocumented `unsafe`.**  Every use of the `unsafe` keyword
+//!   (block, fn, impl, trait) must carry a `// SAFETY:` justification on
+//!   the same line or in the contiguous comment/attribute block directly
+//!   above.
+//! * **R2 — unjustified `Relaxed`.**  In the hot lock-free files
+//!   (`service/{ring,scatter,backend,session}.rs`,
+//!   `coordinator/placement.rs`), an `Ordering::Relaxed` on a line that
+//!   names a hot-protocol atomic (`head`, `tail`, `sleeping`, `pushing`,
+//!   `closed`, `state`, `claimed`, `taken`, `remaining`, `generation`,
+//!   `slots[`) needs a `// RELAXED:` justification.  Telemetry counters
+//!   (other names) are exempt.
+//! * **R3 — panic hygiene.**  Non-test code under `service/` and
+//!   `coordinator/` may not call `.unwrap()`, `.expect(…)`, `panic!`,
+//!   `todo!`, or `unimplemented!`.  Exemptions: lock-poison unwraps
+//!   (`.lock()`/`.read()`/`.write()`/`.wait*` on the same line, or a bare
+//!   `.unwrap()` continuation directly under such a call) and sites
+//!   justified with `// PANIC:`.  `unreachable!` is deliberately allowed —
+//!   it documents dead arms, it does not hide fallible paths.
+//! * **R4 — hot-path allocation.**  Between `// hotpath: begin` and
+//!   `// hotpath: end` fences in `ring.rs`, `scatter.rs`, `backend.rs`:
+//!   `Box::new`, `Vec::with_capacity`, `.to_vec(` and `vec![` are banned
+//!   outright, with no justification override.
+//!
+//! Mechanics: string/char-literal contents and comments are blanked before
+//! token matching (so `panic!` in a doc string never fires); justification
+//! markers are read from the *raw* lines.  Everything from the first
+//! `#[cfg(test)]` / `#[cfg(all(test, …))]` line to EOF is skipped — test
+//! modules live at file tails throughout this repo.
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Files whose `Ordering::Relaxed` uses are audited against hot atomics.
+const HOT_ORDERING_FILES: &[&str] = &[
+    "service/ring.rs",
+    "service/scatter.rs",
+    "service/backend.rs",
+    "service/session.rs",
+    "coordinator/placement.rs",
+];
+
+/// Atomic field names that belong to correctness-critical protocols.
+const HOT_ATOMS: &[&str] = &[
+    "head",
+    "tail",
+    "sleeping",
+    "pushing",
+    "closed",
+    "state",
+    "claimed",
+    "taken",
+    "remaining",
+    "generation",
+];
+
+/// Files that may carry `// hotpath:` allocation fences.
+const HOTPATH_FILES: &[&str] = &["service/ring.rs", "service/scatter.rs", "service/backend.rs"];
+
+/// Tokens banned inside a hotpath fence.
+const ALLOC_TOKENS: &[&str] = &["Box::new", "Vec::with_capacity", ".to_vec(", "vec!["];
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `word` occurs in `line` with non-identifier characters (or edges) on
+/// both sides.  ASCII tokens only.
+fn has_word(line: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_word_char(line[..p].chars().next_back().unwrap_or(' '));
+        let after = p + word.len();
+        let after_ok =
+            after >= line.len() || !is_word_char(line[after..].chars().next().unwrap_or(' '));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = after;
+    }
+    false
+}
+
+/// Blank out comment bodies and string/char-literal contents, preserving
+/// newlines (and the quote delimiters) so line numbers and most column
+/// structure survive.
+pub fn strip_source(text: &str) -> String {
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust nests them).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"…" / r#"…"# (only when `r` is not the tail of an
+        // identifier).
+        if c == 'r' && (i == 0 || !is_word_char(b[i - 1])) {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                for _ in i..=j {
+                    out.push(' ');
+                }
+                i = j + 1;
+                while i < n {
+                    if b[i] == '"' {
+                        let mut k = i + 1;
+                        let mut h = 0usize;
+                        while k < n && h < hashes && b[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            for _ in i..k {
+                                out.push(' ');
+                            }
+                            i = k;
+                            break;
+                        }
+                    }
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // String literal.
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(if b[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                }
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                out.push('\'');
+                out.push(' ');
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < n {
+                    out.push('\'');
+                    i += 1;
+                }
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i += 3;
+            } else {
+                out.push('\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// `marker` appears on the flagged raw line, or anywhere in the contiguous
+/// block of comment/attribute/blank lines directly above it.
+fn justified(raw: &[&str], i: usize, marker: &str) -> bool {
+    if raw[i].contains(marker) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+            if t.contains(marker) {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// The nearest preceding line of actual code (skipping blanks and
+/// comment-only lines), as stripped text.
+fn prev_code_line<'a>(code: &'a [String], i: usize) -> Option<&'a str> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = code[j].trim();
+        if !t.is_empty() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+/// Run every rule over one file's text.  `path` is used both for
+/// reporting and for rule scoping (R2/R3/R4 apply only to matching
+/// paths), so callers can spoof it to lint fixture text as if it lived in
+/// the serving tree.
+pub fn scan_file(path: &str, text: &str) -> Vec<Finding> {
+    let p = norm(path);
+    let hot_ordering = HOT_ORDERING_FILES.iter().any(|f| p.ends_with(f));
+    let hotpath_file = HOTPATH_FILES.iter().any(|f| p.ends_with(f));
+    let svc_coord = p.contains("service/") || p.contains("coordinator/");
+
+    let stripped = strip_source(text);
+    let raw: Vec<&str> = text.lines().collect();
+    let code: Vec<String> = stripped.lines().map(str::to_owned).collect();
+    debug_assert_eq!(raw.len(), code.len());
+
+    // Skip everything from the first test fence to EOF (test modules live
+    // at file tails in this repo).
+    let cut = raw
+        .iter()
+        .position(|l| {
+            let t = l.trim();
+            t.starts_with("#[cfg(test)") || t.starts_with("#[cfg(all(test")
+        })
+        .unwrap_or(raw.len());
+
+    let mut findings = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        findings.push(Finding { file: path.to_owned(), line: line + 1, rule, msg });
+    };
+    let mut in_hotpath = false;
+
+    for i in 0..cut {
+        let rl = raw[i];
+        let cl = &code[i];
+
+        if hotpath_file {
+            if rl.contains("hotpath: begin") {
+                in_hotpath = true;
+            } else if rl.contains("hotpath: end") {
+                in_hotpath = false;
+            }
+        }
+
+        // R1: undocumented unsafe.
+        if has_word(cl, "unsafe") && !justified(&raw, i, "SAFETY:") {
+            push(i, "R1", "`unsafe` without a `// SAFETY:` justification".into());
+        }
+
+        // R2: unjustified Relaxed on hot atomics.
+        if hot_ordering
+            && cl.contains("Ordering::Relaxed")
+            && (HOT_ATOMS.iter().any(|a| has_word(cl, a)) || cl.contains("slots["))
+            && !justified(&raw, i, "RELAXED:")
+        {
+            push(
+                i,
+                "R2",
+                "`Ordering::Relaxed` on a hot-protocol atomic without `// RELAXED:`".into(),
+            );
+        }
+
+        // R3: panic hygiene in the serving/coordination layers.
+        if svc_coord {
+            if cl.contains(".unwrap()") {
+                let poison_same_line = cl.contains(".lock().unwrap()")
+                    || cl.contains(".read().unwrap()")
+                    || cl.contains(".write().unwrap()")
+                    || cl.contains(".wait(")
+                    || cl.contains(".wait_timeout(");
+                let poison_continuation = cl.trim_start().starts_with(".unwrap()")
+                    && prev_code_line(&code, i).is_some_and(|pl| {
+                        pl.ends_with(".lock()")
+                            || pl.ends_with(".read()")
+                            || pl.ends_with(".write()")
+                    });
+                if !poison_same_line && !poison_continuation && !justified(&raw, i, "PANIC:") {
+                    push(i, "R3", "`.unwrap()` in serving code without `// PANIC:`".into());
+                }
+            }
+            if cl.contains(".expect(") && !justified(&raw, i, "PANIC:") {
+                push(i, "R3", "`.expect(…)` in serving code without `// PANIC:`".into());
+            }
+            for mac in ["panic!(", "todo!(", "unimplemented!("] {
+                if cl.contains(mac) && !justified(&raw, i, "PANIC:") {
+                    push(i, "R3", format!("`{mac}…)` in serving code without `// PANIC:`"));
+                }
+            }
+        }
+
+        // R4: allocation inside a hotpath fence.  No override: move the
+        // allocation out of the fence or shrink the fence.
+        if in_hotpath {
+            for tok in ALLOC_TOKENS {
+                if cl.contains(tok) {
+                    push(i, "R4", format!("allocation `{tok}` inside a `// hotpath:` fence"));
+                }
+            }
+        }
+    }
+
+    if in_hotpath {
+        push(cut.saturating_sub(1), "R4", "unclosed `// hotpath: begin` fence".into());
+    }
+
+    findings
+}
+
+/// Scan a file or directory tree (deterministic order).  Directories named
+/// `target` or `fixtures` are skipped.
+pub fn scan_path(
+    path: &Path,
+    findings: &mut Vec<Finding>,
+    files_scanned: &mut usize,
+) -> io::Result<()> {
+    if path.is_dir() {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(path)?.collect::<Result<Vec<_>, _>>()?.into_iter().collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            let name = e.file_name();
+            if p.is_dir() {
+                if name == "target" || name == "fixtures" {
+                    continue;
+                }
+                scan_path(&p, findings, files_scanned)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                scan_path(&p, findings, files_scanned)?;
+            }
+        }
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)?;
+    *files_scanned += 1;
+    findings.extend(scan_file(&path.display().to_string(), &text));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(path: &str, text: &str) -> Vec<&'static str> {
+        scan_file(path, text).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_strings() {
+        let s = strip_source("let x = \"panic!(boom)\"; // unsafe here\n");
+        assert!(!s.contains("panic!"));
+        assert!(!s.contains("unsafe"));
+        assert!(s.contains("let x = \""));
+    }
+
+    #[test]
+    fn strip_preserves_line_count() {
+        let src = "a\n/* b\nc */\nr#\"d\ne\"#\n\"f\\\ng\"\n";
+        assert_eq!(src.lines().count(), strip_source(src).lines().count());
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let s = strip_source("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(s.contains("&'a str"));
+    }
+
+    #[test]
+    fn r1_fires_without_safety_and_not_with() {
+        assert_eq!(rules("m.rs", "unsafe { x() }\n"), vec!["R1"]);
+        assert!(rules("m.rs", "// SAFETY: fixture.\nunsafe { x() }\n").is_empty());
+        // Same-line marker also counts.
+        assert!(rules("m.rs", "unsafe { x() } // SAFETY: fixture.\n").is_empty());
+        // `unsafe_op_in_unsafe_fn` is not the keyword.
+        assert!(rules("m.rs", "#![deny(unsafe_op_in_unsafe_fn)]\n").is_empty());
+    }
+
+    #[test]
+    fn r2_scopes_to_hot_files_and_hot_names() {
+        let hot = "let tail = t.load(Ordering::Relaxed);\n";
+        assert_eq!(rules("src/service/ring.rs", hot), vec!["R2"]);
+        // Not a hot file: no finding.
+        assert!(rules("src/service/fleet.rs", hot).is_empty());
+        // Hot file but a telemetry counter name: no finding.
+        let counter = "stats.submitted.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(rules("src/service/session.rs", counter).is_empty());
+        // Justified: no finding.
+        let ok = "// RELAXED: producer-owned.\nlet tail = t.load(Ordering::Relaxed);\n";
+        assert!(rules("src/service/ring.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r3_allowances() {
+        let p = "src/coordinator/batcher.rs";
+        assert_eq!(rules(p, "v.unwrap();\n"), vec!["R3"]);
+        assert!(rules(p, "m.lock().unwrap();\n").is_empty());
+        assert!(rules(p, "cv.wait(st).unwrap();\n").is_empty());
+        assert!(rules(p, "cv.wait_timeout(st, d).unwrap();\n").is_empty());
+        // Multiline poison continuation.
+        assert!(rules(p, "let g = m\n    .lock()\n    .unwrap()\n    .take();\n").is_empty());
+        // `.unwrap_or_else` is not `.unwrap()`.
+        assert!(rules(p, "v.unwrap_or_else(|| 0);\n").is_empty());
+        // PANIC: justification clears every token.
+        assert!(rules(p, "// PANIC: fixture.\nv.expect(\"boom\");\n").is_empty());
+        assert_eq!(rules(p, "panic!(\"boom\");\n"), vec!["R3"]);
+        // unreachable! documents dead arms and is allowed.
+        assert!(rules(p, "unreachable!(\"dead arm\");\n").is_empty());
+        // Out of scope: other layers may unwrap.
+        assert!(rules("src/util/threads.rs", "v.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn r4_fences() {
+        let p = "src/service/scatter.rs";
+        let src =
+            "// hotpath: begin\nlet b = Box::new(1);\n// hotpath: end\nlet c = Box::new(2);\n";
+        let f = scan_file(p, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "R4");
+        assert_eq!(f[0].line, 2);
+        // Unclosed fence is itself a finding.
+        assert!(scan_file(p, "// hotpath: begin\n").iter().any(|f| f.rule == "R4"));
+        // Fences are inert outside the hot files.
+        assert!(scan_file("src/service/fleet.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_fence_cuts_to_eof() {
+        let src =
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { v.unwrap(); unsafe { x() } }\n}\n";
+        assert!(rules("src/service/ring.rs", src).is_empty());
+    }
+}

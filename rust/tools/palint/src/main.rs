@@ -1,0 +1,75 @@
+//! CLI for the palint lint gate.
+//!
+//! ```text
+//! cargo run -p palint                      # lint the serving crate's src/
+//! cargo run -p palint -- path/a path/b     # lint explicit files/dirs
+//! cargo run -p palint -- --report out.txt  # also write the report to a file
+//! ```
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut report: Option<PathBuf> = None;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--report" => match args.next() {
+                Some(p) => report = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("palint: --report requires a file argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: palint [--report FILE] [PATH ...]");
+                return ExitCode::SUCCESS;
+            }
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        // Default targets: the serving crate's src tree plus palint's own
+        // sources (fixtures are skipped), located relative to this tool's
+        // manifest so the gate works from any cwd.
+        let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+        roots.push(PathBuf::from(&manifest).join("../../src"));
+        roots.push(PathBuf::from(&manifest));
+    }
+
+    let mut findings = Vec::new();
+    let mut scanned = 0usize;
+    for r in &roots {
+        let r = r.canonicalize().unwrap_or_else(|_| r.clone());
+        if let Err(e) = palint::scan_path(&r, &mut findings, &mut scanned) {
+            eprintln!("palint: {}: {e}", r.display());
+            return ExitCode::from(2);
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+
+    let mut out = String::new();
+    for f in &findings {
+        out.push_str(&format!("{f}\n"));
+    }
+    out.push_str(&format!(
+        "palint: {} finding(s) across {} file(s)\n",
+        findings.len(),
+        scanned
+    ));
+    print!("{out}");
+    if let Some(p) = &report {
+        if let Err(e) = std::fs::write(p, &out) {
+            eprintln!("palint: write {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

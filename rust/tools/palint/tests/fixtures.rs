@@ -1,0 +1,34 @@
+//! The seeded fixture pair is palint's own regression gate: `bad.rs` must
+//! trip every rule, `clean.rs` none — both linted as if they lived in the
+//! serving tree so the path-scoped rules (R2/R3/R4) apply.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+#[test]
+fn bad_fixture_trips_every_rule() {
+    let findings = palint::scan_file("src/service/ring.rs", &fixture("bad.rs"));
+    let rules: BTreeSet<&str> = findings.iter().map(|f| f.rule).collect();
+    for rule in ["R1", "R2", "R3", "R4"] {
+        assert!(rules.contains(rule), "{rule} did not fire: {findings:#?}");
+    }
+}
+
+#[test]
+fn bad_fixture_is_nonzero_even_under_its_real_path() {
+    // R1 has no path scoping, so a plain CLI run on the fixture file exits
+    // non-zero too.
+    let findings = palint::scan_file("tools/palint/fixtures/bad.rs", &fixture("bad.rs"));
+    assert!(findings.iter().any(|f| f.rule == "R1"), "{findings:#?}");
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let findings = palint::scan_file("src/service/ring.rs", &fixture("clean.rs"));
+    assert!(findings.is_empty(), "{findings:#?}");
+}

@@ -1,0 +1,298 @@
+//! Model-aware atomics, API-compatible with `std::sync::atomic`.
+//!
+//! Each wrapper embeds the real `std` atomic as a *mirror*: in pass-through
+//! mode (no active execution on this thread) every method delegates to it
+//! 1:1; under a model execution the operation routes through the scheduler
+//! and the mirror is kept at the model's newest value (updated while the
+//! execution lock serializes threads), so `get_mut`/`into_inner` after the
+//! execution — and location initialization on first touch — stay exact.
+
+pub use std::sync::atomic::Ordering;
+
+use crate::ctx;
+
+/// Model-aware equivalent of [`std::sync::atomic::fence`].
+pub fn fence(ord: Ordering) {
+    match ctx::current() {
+        Some(c) => c.exec.fence(c.tid, ord),
+        None => std::sync::atomic::fence(ord),
+    }
+}
+
+macro_rules! model_int_atomic {
+    ($name:ident, $std:ty, $prim:ty) => {
+        pub struct $name {
+            plain: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self { plain: <$std>::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                &self.plain as *const _ as usize
+            }
+
+            /// Mirror value for location init; only read while this thread
+            /// is the single active model thread, so never racy.
+            fn init(&self) -> u64 {
+                self.plain.load(Ordering::Relaxed) as u64
+            }
+
+            pub fn load(&self, ord: Ordering) -> $prim {
+                match ctx::current() {
+                    Some(c) => {
+                        c.exec.atomic_load(c.tid, self.addr(), ord, self.init()) as $prim
+                    }
+                    None => self.plain.load(ord),
+                }
+            }
+
+            pub fn store(&self, val: $prim, ord: Ordering) {
+                match ctx::current() {
+                    Some(c) => c.exec.atomic_store(
+                        c.tid,
+                        self.addr(),
+                        ord,
+                        val as u64,
+                        self.init(),
+                        |v| self.plain.store(v as $prim, Ordering::Relaxed),
+                    ),
+                    None => self.plain.store(val, ord),
+                }
+            }
+
+            pub fn swap(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |_| val, |p| p.swap(val, ord))
+            }
+
+            pub fn fetch_add(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |old| old.wrapping_add(val), |p| p.fetch_add(val, ord))
+            }
+
+            pub fn fetch_sub(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |old| old.wrapping_sub(val), |p| p.fetch_sub(val, ord))
+            }
+
+            pub fn fetch_or(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |old| old | val, |p| p.fetch_or(val, ord))
+            }
+
+            pub fn fetch_and(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |old| old & val, |p| p.fetch_and(val, ord))
+            }
+
+            pub fn fetch_max(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw(ord, move |old| old.max(val), |p| p.fetch_max(val, ord))
+            }
+
+            fn rmw(
+                &self,
+                ord: Ordering,
+                compute: impl Fn($prim) -> $prim,
+                plain: impl FnOnce(&$std) -> $prim,
+            ) -> $prim {
+                match ctx::current() {
+                    Some(c) => c.exec.atomic_rmw(
+                        c.tid,
+                        self.addr(),
+                        ord,
+                        self.init(),
+                        |old| compute(old as $prim) as u64,
+                        |v| self.plain.store(v as $prim, Ordering::Relaxed),
+                    ) as $prim,
+                    None => plain(&self.plain),
+                }
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                match ctx::current() {
+                    Some(c) => c
+                        .exec
+                        .atomic_cas(
+                            c.tid,
+                            self.addr(),
+                            current as u64,
+                            new as u64,
+                            success,
+                            failure,
+                            self.init(),
+                            |v| self.plain.store(v as $prim, Ordering::Relaxed),
+                        )
+                        .map(|v| v as $prim)
+                        .map_err(|v| v as $prim),
+                    None => self.plain.compare_exchange(current, new, success, failure),
+                }
+            }
+
+            /// Modeled as a strong CAS: never fails spuriously. Spurious
+            /// failures only add retry iterations, which the scheduler's
+            /// interleaving choices already cover.
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                match ctx::current() {
+                    Some(_) => self.compare_exchange(current, new, success, failure),
+                    None => self
+                        .plain
+                        .compare_exchange_weak(current, new, success, failure),
+                }
+            }
+
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.plain.get_mut()
+            }
+
+            pub fn into_inner(self) -> $prim {
+                self.plain.into_inner()
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(0)
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                // Debug reads bypass the scheduler: diagnostics only.
+                write!(f, "{:?}", self.plain)
+            }
+        }
+    };
+}
+
+model_int_atomic!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+model_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+model_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+pub struct AtomicBool {
+    plain: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self {
+            plain: std::sync::atomic::AtomicBool::new(v),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.plain as *const _ as usize
+    }
+
+    fn init(&self) -> u64 {
+        self.plain.load(Ordering::Relaxed) as u64
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        match ctx::current() {
+            Some(c) => c.exec.atomic_load(c.tid, self.addr(), ord, self.init()) != 0,
+            None => self.plain.load(ord),
+        }
+    }
+
+    pub fn store(&self, val: bool, ord: Ordering) {
+        match ctx::current() {
+            Some(c) => c.exec.atomic_store(
+                c.tid,
+                self.addr(),
+                ord,
+                val as u64,
+                self.init(),
+                |v| self.plain.store(v != 0, Ordering::Relaxed),
+            ),
+            None => self.plain.store(val, ord),
+        }
+    }
+
+    pub fn swap(&self, val: bool, ord: Ordering) -> bool {
+        match ctx::current() {
+            Some(c) => {
+                c.exec.atomic_rmw(
+                    c.tid,
+                    self.addr(),
+                    ord,
+                    self.init(),
+                    |_| val as u64,
+                    |v| self.plain.store(v != 0, Ordering::Relaxed),
+                ) != 0
+            }
+            None => self.plain.swap(val, ord),
+        }
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        match ctx::current() {
+            Some(c) => c
+                .exec
+                .atomic_cas(
+                    c.tid,
+                    self.addr(),
+                    current as u64,
+                    new as u64,
+                    success,
+                    failure,
+                    self.init(),
+                    |v| self.plain.store(v != 0, Ordering::Relaxed),
+                )
+                .map(|v| v != 0)
+                .map_err(|v| v != 0),
+            None => self.plain.compare_exchange(current, new, success, failure),
+        }
+    }
+
+    /// See the integer atomics: modeled as a strong CAS.
+    pub fn compare_exchange_weak(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        match ctx::current() {
+            Some(_) => self.compare_exchange(current, new, success, failure),
+            None => self
+                .plain
+                .compare_exchange_weak(current, new, success, failure),
+        }
+    }
+
+    pub fn get_mut(&mut self) -> &mut bool {
+        self.plain.get_mut()
+    }
+
+    pub fn into_inner(self) -> bool {
+        self.plain.into_inner()
+    }
+}
+
+impl Default for AtomicBool {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.plain)
+    }
+}

@@ -1,0 +1,50 @@
+//! [`RaceCell`]: an `UnsafeCell` that the model checker watches.
+//!
+//! API-compatible with `core::cell::UnsafeCell` for the operations the
+//! serving path uses (`get`, `get_mut`, `into_inner`). In pass-through mode
+//! `get()` is exactly `UnsafeCell::get`. Under a model execution every
+//! `get()` is recorded with the caller's vector clock; two accesses by
+//! different threads without a happens-before edge between them are flagged
+//! as a data race and the execution aborts *before* the unsynchronized
+//! pointer is dereferenced — the checker fails the schedule instead of
+//! executing the UB.
+//!
+//! Conservative by design: every `get()` counts as a write (the serving
+//! path hands these pointers out precisely to write through them), so
+//! read-read false positives are possible in principle but do not occur in
+//! the ported primitives, where reads of one-shot cells are always ordered
+//! by an acquire on the owning flag.
+
+use std::cell::UnsafeCell;
+
+use crate::ctx;
+
+pub struct RaceCell<T> {
+    inner: UnsafeCell<T>,
+}
+
+impl<T> RaceCell<T> {
+    pub const fn new(v: T) -> Self {
+        RaceCell {
+            inner: UnsafeCell::new(v),
+        }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner()
+    }
+
+    /// Raw pointer to the contents; under the model, records the access and
+    /// aborts the execution on an unordered racing access.
+    pub fn get(&self) -> *mut T {
+        if let Some(c) = ctx::current() {
+            c.exec.cell_access(c.tid, self.inner.get() as usize);
+        }
+        self.inner.get()
+    }
+
+    /// Exclusive access needs no race tracking: `&mut self` proves it.
+    pub fn get_mut(&mut self) -> &mut T {
+        self.inner.get_mut()
+    }
+}

@@ -1,0 +1,31 @@
+//! Vector clocks over a fixed thread universe.
+//!
+//! The checker serializes at most [`MAX_THREADS`] model threads per
+//! execution, so a clock is a flat array — no allocation, cheap joins.
+
+/// Maximum model threads per execution (including the main/runner thread).
+pub const MAX_THREADS: usize = 8;
+
+/// A vector clock: component `i` is the last observed tick of thread `i`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct VClock([u64; MAX_THREADS]);
+
+impl VClock {
+    pub(crate) fn get(&self, i: usize) -> u64 {
+        self.0[i]
+    }
+
+    pub(crate) fn bump(&mut self, i: usize) {
+        self.0[i] += 1;
+    }
+
+    /// Pointwise max: after `a.join(b)`, everything `b` has observed is
+    /// also observed by `a` (the happens-before edge of an acquire).
+    pub(crate) fn join(&mut self, other: &VClock) {
+        for i in 0..MAX_THREADS {
+            if other.0[i] > self.0[i] {
+                self.0[i] = other.0[i];
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Thread-local execution context: which model execution (if any) the
+//! current OS thread belongs to. Absent context = pass-through mode, where
+//! every shim primitive behaves exactly like its `std` counterpart.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::exec::Exec;
+
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub(crate) exec: Arc<Exec>,
+    pub(crate) tid: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Ctx>> = RefCell::new(None);
+}
+
+pub(crate) fn current() -> Option<Ctx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set(v: Option<Ctx>) {
+    CURRENT.with(|c| *c.borrow_mut() = v);
+}
+
+pub(crate) fn in_model() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}

@@ -1,0 +1,863 @@
+//! Execution core: one serialized schedule of real OS threads.
+//!
+//! Every visible operation (atomic access, mutex op, park/unpark, spawn,
+//! join, yield) funnels through [`Exec`]: the calling thread takes the
+//! global state lock, lets the scheduler decide whether to hand the CPU to
+//! another runnable thread (a *choice point*, recorded for DFS replay),
+//! performs the operation against the modeled memory, and releases the
+//! lock. Exactly one model thread runs user code at a time, so the modeled
+//! memory needs no synchronization of its own.
+//!
+//! Memory model (documented approximation, slightly *stronger* than C11):
+//! - Per-location bounded store history; a non-SC load may observe a stale
+//!   store (a scheduler-visible value choice) unless a newer store to the
+//!   same location happens-before the reader.
+//! - Acquire loads of release stores join vector clocks (synchronizes-with).
+//! - RMWs always read the newest store (modification-order totality).
+//! - SeqCst ops couple through one global SC clock, and an SC load never
+//!   observes a store older than the newest SC store to that location.
+//! - `compare_exchange_weak` never fails spuriously (strict subset of real
+//!   behaviors; spurious failures only add retries).
+//!
+//! Abort discipline: the first failure (race, deadlock, panic, op budget)
+//! sets `aborting`; blocked threads unwind via [`Abort`] panics, and every
+//! operation reachable from `Drop` glue degrades to a non-scheduling,
+//! non-panicking best-effort variant so teardown never double-panics.
+
+use std::collections::HashMap;
+use std::panic::panic_any;
+use std::sync::atomic::Ordering;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::clock::{VClock, MAX_THREADS};
+use crate::rng::Rng;
+use crate::{Config, Failure, FailureKind};
+
+/// Panic payload used to unwind model threads when an execution aborts.
+/// Never surfaces to user code: spawn wrappers and the runner catch it.
+pub(crate) struct Abort;
+
+/// Store identity for the location-initializing pseudo-store.
+const NO_WRITER: usize = usize::MAX;
+
+pub(crate) enum Mode {
+    /// Replay `prefix`, then take first-choice (0) everywhere after it.
+    Dfs { prefix: Vec<u8> },
+    /// Seeded uniform choice at every choice point.
+    Random { rng: Rng },
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    Runnable,
+    Blocked(&'static str),
+    Finished,
+}
+
+/// One recorded scheduler/value decision; DFS increments the deepest
+/// `chosen` with alternatives left to enumerate the next execution.
+pub(crate) struct ChoicePoint {
+    pub(crate) chosen: u8,
+    pub(crate) options: u8,
+}
+
+struct StoreRec {
+    val: u64,
+    seq: u64,
+    clock: VClock,
+    writer: usize,
+    release: bool,
+}
+
+struct Loc {
+    stores: Vec<StoreRec>,
+    /// Sequence number of the newest SeqCst store to this location.
+    sc_seq: u64,
+    /// Newest store sequence each thread has observed (read-read coherence).
+    last_seen: [u64; MAX_THREADS],
+}
+
+impl Loc {
+    fn new(init: u64) -> Self {
+        Loc {
+            stores: vec![StoreRec {
+                val: init,
+                seq: 0,
+                clock: VClock::default(),
+                writer: NO_WRITER,
+                release: true,
+            }],
+            sc_seq: 0,
+            last_seen: [0; MAX_THREADS],
+        }
+    }
+}
+
+#[derive(Default)]
+struct MutexSt {
+    holder: Option<usize>,
+    waiters: Vec<usize>,
+    /// Clock released into the mutex by unlockers, acquired by lockers.
+    clock: VClock,
+}
+
+pub(crate) struct ExecState {
+    mode: Mode,
+    pub(crate) record: Vec<ChoicePoint>,
+    cursor: usize,
+    active: usize,
+    threads: Vec<TState>,
+    clocks: Vec<VClock>,
+    park_token: Vec<bool>,
+    park_clock: Vec<VClock>,
+    /// joiners[target] = threads blocked joining `target`.
+    joiners: Vec<Vec<usize>>,
+    preemptions: usize,
+    stale_reads: usize,
+    pub(crate) failure: Option<Failure>,
+    aborting: bool,
+    live_os: usize,
+    finished: usize,
+    cfg: Config,
+    locs: HashMap<usize, Loc>,
+    mutexes: HashMap<usize, MutexSt>,
+    condvars: HashMap<usize, Vec<usize>>,
+    /// RaceCell access log: addr -> [(thread, epoch of last access)].
+    cells: HashMap<usize, Vec<(usize, u64)>>,
+    sc_clock: VClock,
+    next_seq: u64,
+    ops: u64,
+}
+
+fn is_acquire(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn is_release(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+impl ExecState {
+    fn decide(&mut self, options: u8) -> u8 {
+        debug_assert!(options >= 1);
+        let mut chosen = if options == 1 {
+            0
+        } else {
+            match &mut self.mode {
+                Mode::Dfs { prefix } => {
+                    if self.cursor < prefix.len() {
+                        prefix[self.cursor]
+                    } else {
+                        0
+                    }
+                }
+                Mode::Random { rng } => rng.below(options),
+            }
+        };
+        if chosen >= options {
+            chosen = options - 1;
+        }
+        self.cursor += 1;
+        self.record.push(ChoicePoint { chosen, options });
+        chosen
+    }
+
+    fn runnable_except(&self, me: usize) -> Vec<usize> {
+        self.threads
+            .iter()
+            .enumerate()
+            .filter(|&(i, t)| i != me && *t == TState::Runnable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn schedule_trace(&self) -> Vec<u8> {
+        self.record.iter().map(|c| c.chosen).collect()
+    }
+
+    fn fail(&mut self, kind: FailureKind, message: String) {
+        if self.failure.is_none() {
+            self.failure = Some(Failure {
+                kind,
+                message,
+                schedule: self.schedule_trace(),
+            });
+        }
+        self.aborting = true;
+    }
+
+    fn deadlock(&mut self) {
+        let mut parts = Vec::new();
+        for (i, t) in self.threads.iter().enumerate() {
+            if let TState::Blocked(why) = t {
+                parts.push(format!("t{i}:{why}"));
+            }
+        }
+        self.fail(
+            FailureKind::Deadlock,
+            format!(
+                "deadlock: no runnable thread, blocked = [{}]",
+                parts.join(", ")
+            ),
+        );
+    }
+
+    fn sc_sync(&mut self, me: usize) {
+        let my = self.clocks[me].clone();
+        self.sc_clock.join(&my);
+        let sc = self.sc_clock.clone();
+        self.clocks[me].join(&sc);
+    }
+
+    /// Apply a store of `val` to `addr` by `me` with `ord` semantics.
+    fn push_store(&mut self, me: usize, addr: usize, ord: Ordering, val: u64, init: u64) {
+        if matches!(ord, Ordering::SeqCst) {
+            self.sc_sync(me);
+        }
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        let clock = self.clocks[me].clone();
+        let depth = self.cfg.stale_depth;
+        let release = is_release(ord);
+        let loc = self.locs.entry(addr).or_insert_with(|| Loc::new(init));
+        loc.stores.push(StoreRec {
+            val,
+            seq,
+            clock,
+            writer: me,
+            release,
+        });
+        while loc.stores.len() > depth + 1 {
+            loc.stores.remove(0);
+        }
+        loc.last_seen[me] = seq;
+        if matches!(ord, Ordering::SeqCst) {
+            loc.sc_seq = seq;
+        }
+    }
+
+    /// Pick which store a load by `me` observes; stale picks are recorded
+    /// choice points so DFS enumerates them like scheduler branches.
+    fn do_load(&mut self, me: usize, addr: usize, ord: Ordering, init: u64) -> u64 {
+        let sc = matches!(ord, Ordering::SeqCst);
+        let stale_ok = self.stale_reads < self.cfg.stale_budget;
+        let depth = self.cfg.stale_depth;
+        let my_clock = self.clocks[me].clone();
+        let cands: Vec<usize> = {
+            let loc = self.locs.entry(addr).or_insert_with(|| Loc::new(init));
+            let n = loc.stores.len();
+            let mut cands = vec![n - 1];
+            if stale_ok && depth > 0 {
+                let mut k = n - 1;
+                while k > 0 && cands.len() <= depth {
+                    k -= 1;
+                    let s = &loc.stores[k];
+                    if s.seq < loc.last_seen[me] {
+                        break;
+                    }
+                    if sc && s.seq < loc.sc_seq {
+                        break;
+                    }
+                    // A newer store that happens-before the reader hides
+                    // this one (and everything older).
+                    let hidden = loc.stores[k + 1..].iter().any(|s2| {
+                        s2.writer != NO_WRITER
+                            && my_clock.get(s2.writer) >= s2.clock.get(s2.writer)
+                    });
+                    if hidden {
+                        break;
+                    }
+                    cands.push(k);
+                }
+            }
+            cands
+        };
+        let c = self.decide(cands.len() as u8) as usize;
+        if c != 0 {
+            self.stale_reads += 1;
+        }
+        let (val, seq, srelease, sclock) = {
+            let loc = self.locs.get_mut(&addr).expect("loc exists");
+            let s = &loc.stores[cands[c]];
+            let out = (s.val, s.seq, s.release, s.clock.clone());
+            if out.1 > loc.last_seen[me] {
+                loc.last_seen[me] = out.1;
+            }
+            out
+        };
+        let _ = seq;
+        if is_acquire(ord) && srelease {
+            self.clocks[me].join(&sclock);
+        }
+        if sc {
+            self.sc_sync(me);
+        }
+        val
+    }
+
+    /// Peek the newest store (RMWs and failed CAS always read newest).
+    fn newest(&mut self, addr: usize, init: u64) -> (u64, bool, VClock, u64) {
+        let loc = self.locs.entry(addr).or_insert_with(|| Loc::new(init));
+        let s = loc.stores.last().expect("non-empty store history");
+        (s.val, s.release, s.clock.clone(), s.seq)
+    }
+
+    fn do_rmw(
+        &mut self,
+        me: usize,
+        addr: usize,
+        ord: Ordering,
+        init: u64,
+        new: u64,
+    ) -> u64 {
+        if matches!(ord, Ordering::SeqCst) {
+            self.sc_sync(me);
+        }
+        let (old, srelease, sclock, _seq) = self.newest(addr, init);
+        if is_acquire(ord) && srelease {
+            self.clocks[me].join(&sclock);
+        }
+        self.push_store(me, addr, ord, new, init);
+        old
+    }
+}
+
+pub(crate) struct Exec {
+    state: Mutex<ExecState>,
+    cv: Condvar,
+}
+
+impl Exec {
+    pub(crate) fn new(cfg: Config, mode: Mode) -> Self {
+        let st = ExecState {
+            mode,
+            record: Vec::new(),
+            cursor: 0,
+            active: 0,
+            threads: vec![TState::Runnable],
+            clocks: vec![VClock::default()],
+            park_token: vec![false],
+            park_clock: vec![VClock::default()],
+            joiners: vec![Vec::new()],
+            preemptions: 0,
+            stale_reads: 0,
+            failure: None,
+            aborting: false,
+            live_os: 0,
+            finished: 0,
+            cfg,
+            locs: HashMap::new(),
+            mutexes: HashMap::new(),
+            condvars: HashMap::new(),
+            cells: HashMap::new(),
+            sc_clock: VClock::default(),
+            next_seq: 0,
+            ops: 0,
+        };
+        Exec {
+            state: Mutex::new(st),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ExecState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn abort_unwind(&self, st: MutexGuard<'_, ExecState>) -> ! {
+        self.cv.notify_all();
+        drop(st);
+        panic_any(Abort)
+    }
+
+    /// Wait until `me` is runnable AND scheduled; unwinds on abort.
+    fn wait_turn<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+    ) -> MutexGuard<'a, ExecState> {
+        loop {
+            if st.aborting {
+                self.abort_unwind(st);
+            }
+            if st.threads[me] == TState::Runnable && st.active == me {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Scheduling decision at the start of a visible op. `yielding` ops
+    /// (yield_now / spin back-off / sleep) must hand the CPU to another
+    /// runnable thread when one exists, so DFS cannot unroll spin loops
+    /// into unbounded schedules.
+    fn sched<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+        yielding: bool,
+    ) -> MutexGuard<'a, ExecState> {
+        let others = st.runnable_except(me);
+        if others.is_empty() {
+            return st;
+        }
+        if yielding {
+            let c = st.decide(others.len() as u8) as usize;
+            st.active = others[c];
+            self.cv.notify_all();
+            return self.wait_turn(st, me);
+        }
+        if st.preemptions >= st.cfg.preemption_bound {
+            return st;
+        }
+        let c = st.decide((others.len() + 1) as u8) as usize;
+        if c > 0 {
+            st.preemptions += 1;
+            st.active = others[c - 1];
+            self.cv.notify_all();
+            return self.wait_turn(st, me);
+        }
+        st
+    }
+
+    /// Common op prologue. In aborting mode, returns a degraded guard:
+    /// no scheduling, no panics — safe to reach from `Drop` glue while an
+    /// `Abort` unwind is in flight.
+    fn op_begin(&self, me: usize, yielding: bool) -> MutexGuard<'_, ExecState> {
+        let mut st = self.lock();
+        if st.aborting {
+            return st;
+        }
+        st.ops += 1;
+        if st.ops > st.cfg.max_ops {
+            let budget = st.cfg.max_ops;
+            st.fail(
+                FailureKind::Livelock,
+                format!("op budget exceeded ({budget} ops in one execution)"),
+            );
+            self.abort_unwind(st);
+        }
+        let mut st = self.sched(st, me, yielding);
+        st.clocks[me].bump(me);
+        st
+    }
+
+    /// Block `me` (already queued on the relevant wait list by the caller),
+    /// hand the CPU to some runnable thread, and return once rescheduled.
+    fn block<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+        why: &'static str,
+    ) -> MutexGuard<'a, ExecState> {
+        st.threads[me] = TState::Blocked(why);
+        let runnable = st.runnable_except(me);
+        if runnable.is_empty() {
+            st.deadlock();
+            self.abort_unwind(st);
+        }
+        let c = st.decide(runnable.len() as u8) as usize;
+        st.active = runnable[c];
+        self.cv.notify_all();
+        self.wait_turn(st, me)
+    }
+
+    // ----- lifecycle ------------------------------------------------------
+
+    /// Register a child thread (spawn happens-before its first op).
+    pub(crate) fn register_thread(&self, me: usize) -> usize {
+        let mut st = self.op_begin(me, false);
+        let tid = st.threads.len();
+        if tid >= MAX_THREADS {
+            st.fail(
+                FailureKind::Panic,
+                format!("model limit: more than {MAX_THREADS} threads per execution"),
+            );
+            self.abort_unwind(st);
+        }
+        let mut child = st.clocks[me].clone();
+        child.bump(tid);
+        st.threads.push(TState::Runnable);
+        st.clocks.push(child);
+        st.park_token.push(false);
+        st.park_clock.push(VClock::default());
+        st.joiners.push(Vec::new());
+        st.live_os += 1;
+        tid
+    }
+
+    /// First wait of a freshly spawned OS thread: parked until scheduled.
+    pub(crate) fn thread_start(&self, tid: usize) {
+        let st = self.lock();
+        let _st = self.wait_turn(st, tid);
+    }
+
+    /// Called by the spawn wrapper after user code returned or panicked.
+    pub(crate) fn finish_thread(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.lock();
+        st.threads[tid] = TState::Finished;
+        st.finished += 1;
+        let joiners = std::mem::take(&mut st.joiners[tid]);
+        for j in joiners {
+            if matches!(st.threads[j], TState::Blocked(_)) {
+                st.threads[j] = TState::Runnable;
+            }
+        }
+        if let Some(msg) = panic_msg {
+            if !st.aborting {
+                st.fail(FailureKind::Panic, format!("thread t{tid} panicked: {msg}"));
+            }
+        }
+        if !st.aborting && st.active == tid {
+            let runnable = st.runnable_except(tid);
+            if runnable.is_empty() {
+                if st.finished < st.threads.len() {
+                    st.deadlock();
+                }
+            } else {
+                let c = st.decide(runnable.len() as u8) as usize;
+                st.active = runnable[c];
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// OS thread fully exited (after ctx teardown).
+    pub(crate) fn os_exit(&self) {
+        let mut st = self.lock();
+        st.live_os -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Record a panic that escaped the runner's closure (main thread).
+    pub(crate) fn record_panic_payload(&self, payload: &(dyn std::any::Any + Send)) {
+        if payload.is::<Abort>() {
+            return;
+        }
+        let msg = crate::payload_msg(payload);
+        let mut st = self.lock();
+        if !st.aborting {
+            st.fail(FailureKind::Panic, format!("main thread panicked: {msg}"));
+        }
+        self.cv.notify_all();
+    }
+
+    /// Retire the main thread, drive remaining threads to completion, and
+    /// wait for every spawned OS thread to exit so state is quiesced.
+    pub(crate) fn finish_main_and_wait(&self) {
+        let mut st = self.lock();
+        st.threads[0] = TState::Finished;
+        st.finished += 1;
+        for j in std::mem::take(&mut st.joiners[0]) {
+            if matches!(st.threads[j], TState::Blocked(_)) {
+                st.threads[j] = TState::Runnable;
+            }
+        }
+        loop {
+            if st.finished >= st.threads.len() {
+                break;
+            }
+            if !st.aborting {
+                let runnable: Vec<usize> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, t)| *t == TState::Runnable)
+                    .map(|(i, _)| i)
+                    .collect();
+                if runnable.is_empty() {
+                    st.deadlock();
+                } else if st.threads[st.active] != TState::Runnable {
+                    let c = st.decide(runnable.len() as u8) as usize;
+                    st.active = runnable[c];
+                }
+            }
+            self.cv.notify_all();
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        while st.live_os > 0 {
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Extract the recorded schedule and failure after the run quiesced.
+    pub(crate) fn outcome(&self) -> (Vec<ChoicePoint>, Option<Failure>) {
+        let mut st = self.lock();
+        (std::mem::take(&mut st.record), st.failure.take())
+    }
+
+    // ----- atomics --------------------------------------------------------
+
+    pub(crate) fn atomic_load(&self, me: usize, addr: usize, ord: Ordering, init: u64) -> u64 {
+        let mut st = self.op_begin(me, false);
+        st.do_load(me, addr, ord, init)
+    }
+
+    pub(crate) fn atomic_store(
+        &self,
+        me: usize,
+        addr: usize,
+        ord: Ordering,
+        val: u64,
+        init: u64,
+        mirror: impl FnOnce(u64),
+    ) {
+        let mut st = self.op_begin(me, false);
+        st.push_store(me, addr, ord, val, init);
+        // Mirror the model's newest value into the real atomic while the
+        // state lock serializes us, so `get_mut` after the execution (and
+        // location init on first touch) observe the model's final value.
+        mirror(val);
+        drop(st);
+    }
+
+    /// `new = f(old)` computed by the caller from the newest value read
+    /// under this same lock acquisition via the `compute` closure.
+    pub(crate) fn atomic_rmw(
+        &self,
+        me: usize,
+        addr: usize,
+        ord: Ordering,
+        init: u64,
+        compute: impl FnOnce(u64) -> u64,
+        mirror: impl FnOnce(u64),
+    ) -> u64 {
+        let mut st = self.op_begin(me, false);
+        let (old, _, _, _) = st.newest(addr, init);
+        let new = compute(old);
+        let old2 = st.do_rmw(me, addr, ord, init, new);
+        debug_assert_eq!(old, old2);
+        mirror(new);
+        drop(st);
+        old
+    }
+
+    pub(crate) fn atomic_cas(
+        &self,
+        me: usize,
+        addr: usize,
+        expect: u64,
+        new: u64,
+        ok: Ordering,
+        err: Ordering,
+        init: u64,
+        mirror: impl FnOnce(u64),
+    ) -> Result<u64, u64> {
+        let mut st = self.op_begin(me, false);
+        let (cur, srelease, sclock, seq) = st.newest(addr, init);
+        if cur == expect {
+            let old = st.do_rmw(me, addr, ok, init, new);
+            debug_assert_eq!(old, cur);
+            mirror(new);
+            Ok(cur)
+        } else {
+            // Failed CAS is a load of the newest value with `err` ordering.
+            if is_acquire(err) && srelease {
+                st.clocks[me].join(&sclock);
+            }
+            if matches!(err, Ordering::SeqCst) {
+                st.sc_sync(me);
+            }
+            let loc = st.locs.get_mut(&addr).expect("loc exists");
+            if seq > loc.last_seen[me] {
+                loc.last_seen[me] = seq;
+            }
+            Err(cur)
+        }
+    }
+
+    pub(crate) fn fence(&self, me: usize, ord: Ordering) {
+        let mut st = self.op_begin(me, false);
+        if matches!(ord, Ordering::SeqCst) {
+            st.sc_sync(me);
+        }
+        drop(st);
+    }
+
+    // ----- race cells -----------------------------------------------------
+
+    /// Record an access to a plain (non-atomic) shared cell; flags a data
+    /// race — and aborts *before* the racing access executes — when a prior
+    /// access by another thread is not ordered before this one.
+    pub(crate) fn cell_access(&self, me: usize, addr: usize) {
+        let mut st = self.op_begin(me, false);
+        if st.aborting {
+            return;
+        }
+        let my = st.clocks[me].clone();
+        let mut race_with: Option<usize> = None;
+        if let Some(entries) = st.cells.get(&addr) {
+            for &(t, epoch) in entries {
+                if t != me && my.get(t) < epoch {
+                    race_with = Some(t);
+                    break;
+                }
+            }
+        }
+        if let Some(t) = race_with {
+            st.fail(
+                FailureKind::DataRace,
+                format!(
+                    "data race on cell {addr:#x}: t{me} accesses without \
+                     happens-before ordering after t{t}'s access"
+                ),
+            );
+            self.abort_unwind(st);
+        }
+        let epoch = my.get(me);
+        let entries = st.cells.entry(addr).or_default();
+        entries.retain(|&(t, _)| t != me);
+        entries.push((me, epoch));
+    }
+
+    // ----- mutex / condvar ------------------------------------------------
+
+    pub(crate) fn mutex_lock(&self, me: usize, addr: usize) {
+        let mut st = self.op_begin(me, false);
+        loop {
+            if st.aborting {
+                // Degraded teardown: force-take so Drop-glue never hangs.
+                st.mutexes.entry(addr).or_default().holder = Some(me);
+                return;
+            }
+            let grabbed = {
+                let m = st.mutexes.entry(addr).or_default();
+                if m.holder.is_none() {
+                    m.holder = Some(me);
+                    Some(m.clock.clone())
+                } else {
+                    if !m.waiters.contains(&me) {
+                        m.waiters.push(me);
+                    }
+                    None
+                }
+            };
+            match grabbed {
+                Some(c) => {
+                    st.clocks[me].join(&c);
+                    return;
+                }
+                None => st = self.block(st, me, "mutex"),
+            }
+        }
+    }
+
+    pub(crate) fn mutex_unlock(&self, me: usize, addr: usize) {
+        let mut st = self.op_begin(me, false);
+        let my = st.clocks[me].clone();
+        let wake = {
+            let m = st.mutexes.entry(addr).or_default();
+            m.holder = None;
+            m.clock.join(&my);
+            std::mem::take(&mut m.waiters)
+        };
+        for w in wake {
+            if matches!(st.threads[w], TState::Blocked(_)) {
+                st.threads[w] = TState::Runnable;
+            }
+        }
+    }
+
+    /// Atomically (w.r.t. the model) release the mutex, register on the
+    /// condvar, block until notified, then re-acquire the mutex.
+    pub(crate) fn condvar_wait(&self, me: usize, cv_addr: usize, mx_addr: usize) {
+        {
+            let mut st = self.op_begin(me, false);
+            if st.aborting {
+                return; // spurious wakeup; legal for condvars
+            }
+            let my = st.clocks[me].clone();
+            let wake = {
+                let m = st.mutexes.entry(mx_addr).or_default();
+                m.holder = None;
+                m.clock.join(&my);
+                std::mem::take(&mut m.waiters)
+            };
+            for w in wake {
+                if matches!(st.threads[w], TState::Blocked(_)) {
+                    st.threads[w] = TState::Runnable;
+                }
+            }
+            st.condvars.entry(cv_addr).or_default().push(me);
+            let _st = self.block(st, me, "condvar");
+        }
+        self.mutex_lock(me, mx_addr);
+    }
+
+    pub(crate) fn condvar_notify(&self, me: Option<usize>, cv_addr: usize, all: bool) {
+        let mut st = match me {
+            Some(me) => self.op_begin(me, false),
+            None => self.lock(),
+        };
+        let woken: Vec<usize> = {
+            let list = st.condvars.entry(cv_addr).or_default();
+            if all {
+                std::mem::take(list)
+            } else if list.is_empty() {
+                Vec::new()
+            } else {
+                vec![list.remove(0)]
+            }
+        };
+        for w in woken {
+            if matches!(st.threads[w], TState::Blocked(_)) {
+                st.threads[w] = TState::Runnable;
+            }
+        }
+    }
+
+    // ----- park / unpark / join / yield ----------------------------------
+
+    pub(crate) fn park(&self, me: usize) {
+        let mut st = self.op_begin(me, false);
+        loop {
+            if st.aborting {
+                return; // spurious wakeup; park permits them
+            }
+            if st.park_token[me] {
+                st.park_token[me] = false;
+                let c = st.park_clock[me].clone();
+                st.clocks[me].join(&c);
+                return;
+            }
+            st = self.block(st, me, "park");
+        }
+    }
+
+    pub(crate) fn unpark(&self, me: Option<usize>, target: usize) {
+        let mut st = match me {
+            Some(me) => self.op_begin(me, false),
+            None => self.lock(),
+        };
+        st.park_token[target] = true;
+        if let Some(me) = me {
+            let my = st.clocks[me].clone();
+            st.park_clock[target].join(&my);
+        }
+        if matches!(st.threads[target], TState::Blocked("park")) {
+            st.threads[target] = TState::Runnable;
+        }
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn join_block(&self, me: usize, target: usize) {
+        let mut st = self.op_begin(me, false);
+        loop {
+            if st.aborting {
+                return; // fall through to the OS join; the target unwinds
+            }
+            if matches!(st.threads[target], TState::Finished) {
+                // Join synchronizes-with everything the target did.
+                let c = st.clocks[target].clone();
+                st.clocks[me].join(&c);
+                return;
+            }
+            st.joiners[target].push(me);
+            st = self.block(st, me, "join");
+        }
+    }
+
+    pub(crate) fn yield_op(&self, me: usize) {
+        let _st = self.op_begin(me, true);
+    }
+}

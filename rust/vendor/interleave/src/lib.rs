@@ -1,0 +1,258 @@
+//! interleave — in-tree model checker for the a100win lock-free serving path.
+//!
+//! Shuttle/loom-style checker with zero external dependencies: real OS
+//! threads are serialized one-at-a-time by a global scheduler, every
+//! atomic/mutex/park operation is a recorded choice point, and the driver
+//! replays choice prefixes to explore interleavings — exhaustive DFS under
+//! a context-switch (preemption) bound, or seeded randomized scheduling for
+//! larger models. Per-location vector clocks flag unsynchronized accesses
+//! to [`cell::RaceCell`]s *before* the racing access executes, and a
+//! bounded per-location store history models `Relaxed` visibility (a store
+//! published without release/acquire ordering may be observed stale).
+//!
+//! The model is deliberately a documented approximation, slightly stronger
+//! than C11 where exactness would cost tractability (see `exec.rs` docs):
+//! it can miss some exotic weak-memory behaviors, but every failure it
+//! reports corresponds to a real schedule + visibility choice.
+//!
+//! Usage from a `#[test]`:
+//!
+//! ```ignore
+//! interleave::model(|| {
+//!     let flag = Arc::new(interleave::atomic::AtomicBool::new(false));
+//!     let t = interleave::thread::spawn({ let f = flag.clone(); move || f.store(true, Ordering::SeqCst) });
+//!     // ... assertions ...
+//!     t.join().unwrap();
+//! });
+//! ```
+//!
+//! Caveats:
+//! - At most [`clock::MAX_THREADS`] threads per execution (incl. main).
+//! - Construct all model state *inside* the closure: executions replay the
+//!   closure from scratch, and the checker keys locations by address, so
+//!   freeing and reallocating an atomic at the same address within one
+//!   execution confuses the per-location history.
+//! - `park_timeout` behaves as `park` under the model: a passing model
+//!   proves the protocol correct *without* its timeout backstops.
+
+mod clock;
+mod ctx;
+mod exec;
+mod rng;
+
+pub mod atomic;
+pub mod cell;
+pub mod sync;
+pub mod thread;
+
+use exec::{ChoicePoint, Exec, Mode};
+use rng::Rng;
+use std::sync::Arc;
+
+/// Exploration limits. Defaults keep small 2–3 thread models exhaustive in
+/// well under a second while bounding pathological state spaces.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Max *preemptive* context switches per execution (switches at a
+    /// non-yielding op while the current thread could continue). The classic
+    /// small-bound hypothesis: most concurrency bugs need <= 2 preemptions.
+    pub preemption_bound: usize,
+    /// How many stale (non-newest) stores a relaxed load may observe
+    /// (per-location history depth beyond the newest store).
+    pub stale_depth: usize,
+    /// Max stale-value choices across one execution (keeps the value-choice
+    /// branching factor bounded independently of schedule length).
+    pub stale_budget: usize,
+    /// Hard cap on DFS executions; exceeded => `Report::complete == false`.
+    pub max_executions: usize,
+    /// Per-execution op budget; exceeded => Livelock failure.
+    pub max_ops: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            preemption_bound: 2,
+            stale_depth: 1,
+            stale_budget: 2,
+            max_executions: 50_000,
+            max_ops: 200_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Every unfinished thread was blocked (lost wakeup, missed unpark...).
+    Deadlock,
+    /// Unordered concurrent accesses to a [`cell::RaceCell`].
+    DataRace,
+    /// User code panicked (assertion failure inside the model).
+    Panic,
+    /// Per-execution op budget exceeded (unbounded spin under the model).
+    Livelock,
+}
+
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub kind: FailureKind,
+    pub message: String,
+    /// Choice trace reproducing the failing execution (for diagnostics).
+    pub schedule: Vec<u8>,
+}
+
+#[derive(Debug)]
+pub struct Report {
+    /// Executions explored.
+    pub executions: usize,
+    /// True iff DFS exhausted the (bounded) state space with no failure.
+    pub complete: bool,
+    pub failure: Option<Failure>,
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Suppress panic output from inside model executions: aborts and probed
+/// assertion failures unwind by design and are re-reported by the driver.
+fn install_hook() {
+    use std::sync::Once;
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if ctx::in_model() {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+fn run_once(cfg: &Config, mode: Mode, f: &dyn Fn()) -> (Vec<ChoicePoint>, Option<Failure>) {
+    let exec = Arc::new(Exec::new(cfg.clone(), mode));
+    ctx::set(Some(ctx::Ctx {
+        exec: exec.clone(),
+        tid: 0,
+    }));
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f()));
+    if let Err(p) = &r {
+        exec.record_panic_payload(p.as_ref());
+    }
+    exec.finish_main_and_wait();
+    ctx::set(None);
+    exec.outcome()
+}
+
+/// Backtrack: find the deepest choice with an untried alternative.
+fn next_prefix(record: &[ChoicePoint]) -> Option<Vec<u8>> {
+    let mut i = record.len();
+    while i > 0 {
+        i -= 1;
+        if record[i].chosen + 1 < record[i].options {
+            let mut p: Vec<u8> = record[..i].iter().map(|c| c.chosen).collect();
+            p.push(record[i].chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Exhaustive bounded DFS over schedules + stale-visibility choices.
+/// Stops at the first failure (its `schedule` reproduces it).
+pub fn explore(cfg: Config, f: impl Fn()) -> Report {
+    install_hook();
+    let mut prefix: Vec<u8> = Vec::new();
+    let mut executions = 0usize;
+    loop {
+        let (record, failure) = run_once(&cfg, Mode::Dfs { prefix }, &f);
+        executions += 1;
+        if failure.is_some() {
+            return Report {
+                executions,
+                complete: false,
+                failure,
+            };
+        }
+        match next_prefix(&record) {
+            None => {
+                return Report {
+                    executions,
+                    complete: true,
+                    failure: None,
+                }
+            }
+            Some(p) => {
+                if executions >= cfg.max_executions {
+                    return Report {
+                        executions,
+                        complete: false,
+                        failure: None,
+                    };
+                }
+                prefix = p;
+            }
+        }
+    }
+}
+
+/// Seeded randomized (shuttle-style) exploration: `iters` executions with
+/// uniform choices; preemption bound is still honored from `cfg`.
+pub fn explore_random(cfg: Config, seed: u64, iters: usize, f: impl Fn()) -> Report {
+    install_hook();
+    let mut executions = 0usize;
+    for i in 0..iters {
+        let rng = Rng::seed_from_u64(seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let (_, failure) = run_once(&cfg, Mode::Random { rng }, &f);
+        executions += 1;
+        if failure.is_some() {
+            return Report {
+                executions,
+                complete: false,
+                failure,
+            };
+        }
+    }
+    Report {
+        executions,
+        complete: false,
+        failure: None,
+    }
+}
+
+fn expect_clean(what: &str, r: Report) {
+    if let Some(fl) = r.failure {
+        panic!(
+            "{what} failed after {} executions: {:?}: {} (schedule {:?})",
+            r.executions, fl.kind, fl.message, fl.schedule
+        );
+    }
+}
+
+/// Run `f` under the default exhaustive configuration; panic on any race,
+/// deadlock, livelock, or in-model assertion failure.
+pub fn model(f: impl Fn()) {
+    expect_clean("model checking", explore(Config::default(), f));
+}
+
+/// [`model`] with an explicit configuration.
+pub fn model_with(cfg: Config, f: impl Fn()) {
+    expect_clean("model checking", explore(cfg, f));
+}
+
+/// Randomized supplement for state spaces too large to exhaust: `iters`
+/// seeded executions with unbounded preemptions.
+pub fn model_random(seed: u64, iters: usize, f: impl Fn()) {
+    let cfg = Config {
+        preemption_bound: usize::MAX,
+        ..Config::default()
+    };
+    expect_clean("randomized model checking", explore_random(cfg, seed, iters, f));
+}

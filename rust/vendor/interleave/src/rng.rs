@@ -1,0 +1,29 @@
+//! Tiny deterministic RNG for randomized (shuttle-style) scheduling.
+//!
+//! xorshift64* — not cryptographic, but plenty for schedule sampling,
+//! and dependency-free so the vendored crate stays self-contained.
+
+#[derive(Clone, Debug)]
+pub(crate) struct Rng(u64);
+
+impl Rng {
+    pub(crate) fn seed_from_u64(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Rng(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform-ish choice in `0..n` (n >= 1, tiny n so modulo bias is moot).
+    pub(crate) fn below(&mut self, n: u8) -> u8 {
+        debug_assert!(n >= 1);
+        (self.next_u64() % n as u64) as u8
+    }
+}

@@ -1,0 +1,260 @@
+//! Model-aware `Mutex` and `Condvar`, API-compatible with `std::sync`
+//! for sized contents (all the serving path needs).
+//!
+//! Pass-through mode delegates to the embedded `std` primitives. Under a
+//! model execution the *model* mutex (keyed by address, serialized by the
+//! scheduler) is what orders threads; the real `std::sync::Mutex` is still
+//! locked around data access so the contents stay memory-safe even if the
+//! model has a bug, but it can never contend: the model admits one holder
+//! at a time, and the real lock is always released before the model lock.
+//!
+//! `Condvar::wait` atomically (w.r.t. the model) releases the mutex and
+//! registers as a waiter, so genuine lost-wakeup bugs in *user* code are
+//! still observable as model deadlocks while the primitive itself cannot
+//! drop notifications. `wait_timeout` never times out under the model: a
+//! passing model proves the protocol sound without its timeout backstops.
+//!
+//! Model mutexes are keyed by address: keep them at a stable address for
+//! the duration of an execution (the serving path owns them via `Arc`).
+
+use std::mem::ManuallyDrop;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError};
+use std::time::Duration;
+
+use crate::ctx;
+
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T: 'a> {
+    /// Real guard; dropped manually so Condvar can take it without running
+    /// our model-unlock Drop glue.
+    std_g: ManuallyDrop<std::sync::MutexGuard<'a, T>>,
+    owner: &'a Mutex<T>,
+    model: bool,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex {
+            inner: std::sync::Mutex::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match ctx::current() {
+            Some(c) => {
+                c.exec.mutex_lock(c.tid, self.addr());
+                // The model admitted us; the real lock is uncontended.
+                let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+                Ok(MutexGuard {
+                    std_g: ManuallyDrop::new(g),
+                    owner: self,
+                    model: true,
+                })
+            }
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    std_g: ManuallyDrop::new(g),
+                    owner: self,
+                    model: false,
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    std_g: ManuallyDrop::new(p.into_inner()),
+                    owner: self,
+                    model: false,
+                })),
+            },
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.inner)
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.std_g
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.std_g
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the real lock first so the next model holder can take it
+        // without contention, then release the model lock.
+        // SAFETY: std_g is dropped exactly once: here, or never — Condvar
+        // disassembles the guard via `forget` before this Drop could run.
+        unsafe { ManuallyDrop::drop(&mut self.std_g) };
+        if self.model {
+            if let Some(c) = ctx::current() {
+                c.exec.mutex_unlock(c.tid, self.owner.addr());
+            }
+        }
+    }
+}
+
+/// Mirrors `std::sync::WaitTimeoutResult`; under the model it never
+/// reports a timeout (waits are genuine blocking waits).
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar {
+            inner: std::sync::Condvar::new(),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    /// Take the real guard out of `guard` without running the model-unlock
+    /// Drop glue, returning it and the owning mutex.
+    fn disassemble<'a, T>(
+        mut guard: MutexGuard<'a, T>,
+    ) -> (std::sync::MutexGuard<'a, T>, &'a Mutex<T>) {
+        // SAFETY: guard is forgotten right after, so std_g is taken exactly
+        // once and MutexGuard::drop never runs on it.
+        let std_g = unsafe { ManuallyDrop::take(&mut guard.std_g) };
+        let owner = guard.owner;
+        std::mem::forget(guard);
+        (std_g, owner)
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match ctx::current() {
+            Some(c) => {
+                let (std_g, owner) = Self::disassemble(guard);
+                // Drop the real lock before blocking in the model; the
+                // model release + waiter registration happen atomically
+                // inside condvar_wait, so no notify can slip between them.
+                drop(std_g);
+                c.exec.condvar_wait(c.tid, self.addr(), owner.addr());
+                let g = owner.inner.lock().unwrap_or_else(|p| p.into_inner());
+                Ok(MutexGuard {
+                    std_g: ManuallyDrop::new(g),
+                    owner,
+                    model: true,
+                })
+            }
+            None => {
+                let (std_g, owner) = Self::disassemble(guard);
+                match self.inner.wait(std_g) {
+                    Ok(g) => Ok(MutexGuard {
+                        std_g: ManuallyDrop::new(g),
+                        owner,
+                        model: false,
+                    }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        std_g: ManuallyDrop::new(p.into_inner()),
+                        owner,
+                        model: false,
+                    })),
+                }
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match ctx::current() {
+            Some(_) => {
+                // Under the model the backstop never fires: the protocol
+                // must be wakeup-correct on its own or the checker reports
+                // a deadlock.
+                match self.wait(guard) {
+                    Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                    Err(p) => Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(false)))),
+                }
+            }
+            None => {
+                let (std_g, owner) = Self::disassemble(guard);
+                match self.inner.wait_timeout(std_g, dur) {
+                    Ok((g, t)) => Ok((
+                        MutexGuard {
+                            std_g: ManuallyDrop::new(g),
+                            owner,
+                            model: false,
+                        },
+                        WaitTimeoutResult(t.timed_out()),
+                    )),
+                    Err(p) => {
+                        let (g, t) = p.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard {
+                                std_g: ManuallyDrop::new(g),
+                                owner,
+                                model: false,
+                            },
+                            WaitTimeoutResult(t.timed_out()),
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match ctx::current() {
+            Some(c) => c.exec.condvar_notify(Some(c.tid), self.addr(), false),
+            None => self.inner.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match ctx::current() {
+            Some(c) => c.exec.condvar_notify(Some(c.tid), self.addr(), true),
+            None => self.inner.notify_all(),
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}

@@ -1,0 +1,169 @@
+//! Model-aware thread operations, API-compatible with `std::thread` for
+//! the subset the serving path uses: `spawn`, `JoinHandle::join`,
+//! `current`, `Thread::unpark`, `park`, `park_timeout`, `yield_now`,
+//! `sleep`.
+//!
+//! In pass-through mode everything delegates to `std`. Under a model
+//! execution, spawned threads are real OS threads registered with the
+//! scheduler: they start parked, run only when scheduled, and report their
+//! completion (or panic) back to the execution. `park_timeout` behaves as
+//! `park` — a passing model proves the wakeup protocol correct without its
+//! backstop timeouts — and `sleep`/`yield_now` are pure scheduling points.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ctx;
+use crate::exec::{Abort, Exec};
+
+pub struct JoinHandle<T> {
+    os: Option<std::thread::JoinHandle<std::thread::Result<T>>>,
+    model: Option<(Arc<Exec>, usize)>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(mut self) -> std::thread::Result<T> {
+        if let Some((exec, tid)) = self.model.take() {
+            if let Some(c) = ctx::current() {
+                if Arc::ptr_eq(&exec, &c.exec) {
+                    exec.join_block(c.tid, tid);
+                }
+            }
+        }
+        match self.os.take().expect("join consumes the handle").join() {
+            Ok(r) => r,
+            Err(p) => Err(p),
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.os
+            .as_ref()
+            .map(|h| h.is_finished())
+            .unwrap_or(true)
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match ctx::current() {
+        None => {
+            let os = std::thread::spawn(move || catch_unwind(AssertUnwindSafe(f)));
+            JoinHandle {
+                os: Some(os),
+                model: None,
+            }
+        }
+        Some(c) => {
+            let tid = c.exec.register_thread(c.tid);
+            let exec = c.exec.clone();
+            let os = std::thread::spawn(move || {
+                ctx::set(Some(ctx::Ctx {
+                    exec: exec.clone(),
+                    tid,
+                }));
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    // Parked until the scheduler picks this thread first.
+                    exec.thread_start(tid);
+                    f()
+                }));
+                let panic_msg = match &r {
+                    Ok(_) => None,
+                    Err(p) if p.is::<Abort>() => None,
+                    Err(p) => Some(crate::payload_msg(p.as_ref())),
+                };
+                exec.finish_thread(tid, panic_msg);
+                ctx::set(None);
+                exec.os_exit();
+                r
+            });
+            JoinHandle {
+                os: Some(os),
+                model: Some((c.exec.clone(), tid)),
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Kind {
+    Os(std::thread::Thread),
+    Model { exec: Arc<Exec>, tid: usize },
+}
+
+/// Handle to a thread, as returned by [`current`]; supports `unpark`.
+#[derive(Clone)]
+pub struct Thread {
+    kind: Kind,
+}
+
+impl Thread {
+    pub fn unpark(&self) {
+        match &self.kind {
+            Kind::Os(t) => t.unpark(),
+            Kind::Model { exec, tid } => {
+                let me = ctx::current()
+                    .and_then(|c| Arc::ptr_eq(&c.exec, exec).then_some(c.tid));
+                exec.unpark(me, *tid);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Thread {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.kind {
+            Kind::Os(t) => write!(f, "{t:?}"),
+            Kind::Model { tid, .. } => write!(f, "ModelThread(t{tid})"),
+        }
+    }
+}
+
+pub fn current() -> Thread {
+    match ctx::current() {
+        Some(c) => Thread {
+            kind: Kind::Model {
+                exec: c.exec,
+                tid: c.tid,
+            },
+        },
+        None => Thread {
+            kind: Kind::Os(std::thread::current()),
+        },
+    }
+}
+
+pub fn park() {
+    match ctx::current() {
+        Some(c) => c.exec.park(c.tid),
+        None => std::thread::park(),
+    }
+}
+
+/// Under the model this is `park` without the timeout: the model proves
+/// the protocol correct without its belt-and-braces backstops.
+pub fn park_timeout(dur: Duration) {
+    match ctx::current() {
+        Some(c) => c.exec.park(c.tid),
+        None => std::thread::park_timeout(dur),
+    }
+}
+
+pub fn yield_now() {
+    match ctx::current() {
+        Some(c) => c.exec.yield_op(c.tid),
+        None => std::thread::yield_now(),
+    }
+}
+
+/// Under the model, sleeping is just a yield: time does not pass.
+pub fn sleep(dur: Duration) {
+    match ctx::current() {
+        Some(c) => c.exec.yield_op(c.tid),
+        None => std::thread::sleep(dur),
+    }
+}
