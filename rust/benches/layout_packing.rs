@@ -1,0 +1,340 @@
+//! Bench: TLB-aware hot-row packing (the repack lever, coordinator::remap)
+//! against the identity layout.
+//!
+//! The machine is deliberately stressed: each serving window (8 MiB) is
+//! *larger* than a group's TLB reach (4 MiB), so the identity layout lives
+//! on the paper's Fig-1 cliff (page-walk queueing), while the packed hot
+//! prefix (≤ 2 MiB, page-granule aligned) fits comfortably under reach.
+//! Two arms:
+//!
+//! * **serve** — the full serving stack (SimBackend, DES-calibrated
+//!   timing) under zipf(1.1), drifting zipf, and uniform traffic, with the
+//!   repack lever on vs off; scored on simulated aggregate GB/s (per-phase
+//!   makespan, like tests/repartition.rs).
+//! * **layout** — the DES directly: one group reading uniformly from the
+//!   hot-prefix region vs the whole window; reports TLB/uTLB hit rates and
+//!   GB/s, the microarchitectural account of *why* packing wins.
+//!
+//! Emits `BENCH_layout.json` (crate dir under `cargo bench`).  Flags
+//! (after `--`): `--smoke` shrinks the sweep for CI and skips the ratio
+//! assertion (the full run asserts packed ≥ 1.2x identity under zipf and
+//! parity within 5% under uniform).
+
+use std::sync::Arc;
+
+use a100win::config::MachineConfig;
+use a100win::coordinator::{
+    AdaptiveConfig, BatcherConfig, ControlPlaneConfig, Lever, PlacementPolicy, RemapConfig, Table,
+    WindowPlan,
+};
+use a100win::probe::TopologyMap;
+use a100win::service::{Backend, Service, SimBackend, SimBackendConfig, SimTiming};
+use a100win::sim::{Machine, MeasurementSpec, MemRegion, Pattern};
+use a100win::util::json::Json;
+use a100win::workload::{synth::Distribution, RequestGen, WorkloadSpec};
+
+const D: usize = 32;
+const ROW_BYTES: u64 = (D * 4) as u64; // 128 B, the paper's cache line
+const WINDOWS: usize = 2;
+const ROWS_PER_REQUEST: usize = 512;
+
+/// Per-group TLB reach 4 MiB (64 x 64 KiB pages) over a 16 MiB table cut
+/// into two 8 MiB windows: identity over-reaches 2x, the packed prefix
+/// (max_hot_fraction 0.25 -> 2 MiB) fits.
+fn stressed_machine() -> Machine {
+    let mut cfg = MachineConfig::tiny_test();
+    cfg.tlb.entries = 64;
+    cfg.memory.total_bytes = 16 << 20;
+    Machine::new(cfg).expect("stressed tiny machine is valid")
+}
+
+fn remap_config() -> RemapConfig {
+    RemapConfig {
+        page_bytes: 1 << 16, // the stressed machine's page
+        ..RemapConfig::default()
+    }
+}
+
+fn quick_batcher() -> BatcherConfig {
+    BatcherConfig {
+        max_batch_rows: 8_192,
+        max_wait: std::time::Duration::from_micros(200),
+        max_pending: 4_096,
+    }
+}
+
+/// Eager escalation for manual epochs: the ladder walks redeal -> resplit
+/// (declined, no splitter) -> migrate (declined, single card) -> repack in
+/// a handful of epochs instead of minutes of patience.
+fn eager_control() -> ControlPlaneConfig {
+    ControlPlaneConfig {
+        min_imbalance: 0.05,
+        patience: 1,
+        cooldown: 0,
+        max_lever: Lever::Repack, // clamped per backend anyway
+        trace_len: 256,
+    }
+}
+
+fn start_backend(machine: &Machine, table: &Table, remap: bool) -> Arc<SimBackend> {
+    let map = TopologyMap::ground_truth(machine);
+    let plan = WindowPlan::split(table.rows, ROW_BYTES, WINDOWS);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    cfg.batcher = quick_batcher();
+    cfg.control = eager_control();
+    cfg.adaptive = Some(AdaptiveConfig::default());
+    cfg.calib_accesses_per_sm = 3_000;
+    if remap {
+        cfg.remap = Some(remap_config());
+    }
+    Arc::new(
+        SimBackend::start(
+            cfg,
+            &map,
+            plan,
+            table.view(),
+            SimTiming::machine(machine.clone()),
+        )
+        .expect("start sim backend"),
+    )
+}
+
+fn spec(table: &Table, dist: Distribution) -> WorkloadSpec {
+    WorkloadSpec {
+        total_rows: table.rows,
+        distribution: dist,
+        request_rows: (ROWS_PER_REQUEST, ROWS_PER_REQUEST),
+        seed: 99,
+    }
+}
+
+/// Drive `warm` convergence requests (epoch after each, so the control
+/// plane can learn the hot set and publish a repack), reset the simulated
+/// accounting, then drive `measured` requests and return (aggregate GB/s
+/// over the measured phase, packed windows live at the end).
+fn run_serve_arm(
+    backend: &Arc<SimBackend>,
+    table: &Table,
+    mut gen: RequestGen,
+    warm: usize,
+    measured: usize,
+) -> (f64, usize) {
+    let dyn_backend: Arc<dyn Backend> = Arc::clone(backend);
+    let service = Service::new(dyn_backend);
+    for _ in 0..warm {
+        let rows = Arc::new(gen.next_request());
+        let out = service.lookup(Arc::clone(&rows)).expect("lookup");
+        service.recycle(out);
+        backend.rebalance_epoch();
+    }
+    backend.reset_sim_stats();
+    for i in 0..measured {
+        let rows = Arc::new(gen.next_request());
+        let out = service.lookup(Arc::clone(&rows)).expect("lookup");
+        if i % 64 == 0 {
+            assert_eq!(out.len(), rows.len() * D, "short response");
+            for (k, &row) in rows.iter().enumerate() {
+                for j in 0..D {
+                    assert_eq!(out[k * D + j], table.expected(row, j), "row {row} col {j}");
+                }
+            }
+        }
+        service.recycle(out);
+        // Keep epochs ticking so drift arms can re-pack mid-measurement.
+        backend.rebalance_epoch();
+        backend
+            .remap_plan()
+            .check(&backend.plan())
+            .expect("published remap plan violates invariants");
+    }
+    let report = backend.sim_report();
+    let total_rows: u64 = report.iter().map(|r| r.rows).sum();
+    let max_ns = report.iter().map(|r| r.sim_ms * 1e6).fold(0.0f64, f64::max);
+    let gbps = if max_ns > 0.0 {
+        total_rows as f64 * ROW_BYTES as f64 / max_ns
+    } else {
+        0.0
+    };
+    (gbps, backend.remap_plan().packed_windows())
+}
+
+/// The DES account: one group reading `region` uniformly; the packed arm's
+/// region is the hot prefix, the identity arm's the whole window.
+fn layout_measure(machine: &Machine, region: MemRegion, accesses: u64) -> (f64, f64, f64) {
+    let map = TopologyMap::ground_truth(machine);
+    let mut spec = MeasurementSpec::uniform_all(
+        &map.groups[0],
+        Pattern::Uniform(region),
+        accesses,
+        0x9AC4ED,
+    );
+    spec.txn_bytes = ROW_BYTES;
+    let m = machine.run(&spec);
+    (m.gbps, m.tlb_hit_rate, m.utlb_hit_rate)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+
+    let machine = stressed_machine();
+    let rows = machine.config().memory.total_bytes / ROW_BYTES;
+    let table = Table::synthetic(rows, D);
+    let window_bytes = rows / WINDOWS as u64 * ROW_BYTES;
+    let reach = machine.config().tlb.reach_bytes();
+    assert!(
+        window_bytes > reach,
+        "bench premise broken: window {window_bytes} B must exceed reach {reach} B"
+    );
+
+    let (warm, measured) = if smoke { (60, 60) } else { (150, 250) };
+    println!(
+        "# Layout packing ({}, d={D}, {rows} rows, {WINDOWS} windows of {} MiB, reach {} MiB)",
+        if smoke { "smoke" } else { "full" },
+        window_bytes >> 20,
+        reach >> 20,
+    );
+
+    // --- serve arms --------------------------------------------------------
+    let arms: &[(&str, Distribution)] = &[
+        ("zipf1.1", Distribution::Zipf { theta: 1.1 }),
+        (
+            "drift-zipf1.1",
+            Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: (warm / 2) as u64,
+            },
+        ),
+        ("uniform", Distribution::Uniform),
+    ];
+    println!(
+        "{:>14} {:>9} {:>12} {:>12} {:>8}",
+        "workload", "layout", "gbps", "packed_wins", "ratio"
+    );
+    let mut serve_rows = Vec::new();
+    for (name, dist) in arms {
+        let mut gbps_of = [0.0f64; 2];
+        let mut packed_of = [0usize; 2];
+        for (i, remap) in [false, true].into_iter().enumerate() {
+            let backend = start_backend(&machine, &table, remap);
+            let gen = RequestGen::new(spec(&table, dist.clone()));
+            let (gbps, packed) = run_serve_arm(&backend, &table, gen, warm, measured);
+            let m = backend.metrics();
+            if remap {
+                assert_eq!(
+                    m.generations_published,
+                    m.redeal_epochs + m.resplit_epochs + m.migrate_epochs + m.repack_epochs,
+                    "repartition counters inconsistent"
+                );
+            }
+            backend.shutdown();
+            gbps_of[i] = gbps;
+            packed_of[i] = packed;
+            println!(
+                "{:>14} {:>9} {:>12.2} {:>12} {:>8}",
+                name,
+                if remap { "packed" } else { "identity" },
+                gbps,
+                packed,
+                "-"
+            );
+        }
+        let ratio = gbps_of[1] / gbps_of[0].max(1e-12);
+        println!("{:>14} {:>9} {:>12} {:>12} {:>8.2}", name, "ratio", "-", "-", ratio);
+        serve_rows.push((*name, gbps_of[0], gbps_of[1], packed_of[1], ratio));
+    }
+
+    // --- direct DES layout account ----------------------------------------
+    let accesses = if smoke { 2_000 } else { 10_000 };
+    let hot_bytes = window_bytes / 4; // max_hot_fraction
+    let (id_gbps, id_tlb, id_utlb) = layout_measure(
+        &machine,
+        MemRegion::new(0, window_bytes),
+        accesses,
+    );
+    let (pk_gbps, pk_tlb, pk_utlb) = layout_measure(
+        &machine,
+        MemRegion::new(0, hot_bytes),
+        accesses,
+    );
+    println!(
+        "# DES layout account: identity window {:.1} GB/s (tlb {:.3}, utlb {:.3}) \
+         vs packed prefix {:.1} GB/s (tlb {:.3}, utlb {:.3})",
+        id_gbps, id_tlb, id_utlb, pk_gbps, pk_tlb, pk_utlb
+    );
+
+    // --- acceptance (full mode only; smoke just emits the numbers) --------
+    if !smoke {
+        let zipf = serve_rows.iter().find(|r| r.0 == "zipf1.1").unwrap();
+        assert!(
+            zipf.3 > 0,
+            "zipf arm never packed a window: the ratio would be vacuous"
+        );
+        assert!(
+            zipf.4 >= 1.2,
+            "packed {:.2} GB/s not >= 1.2x identity {:.2} GB/s under zipf(1.1)",
+            zipf.2,
+            zipf.1
+        );
+        let uni = serve_rows.iter().find(|r| r.0 == "uniform").unwrap();
+        assert!(
+            (uni.4 - 1.0).abs() <= 0.05,
+            "uniform parity broken: packed {:.2} vs identity {:.2} GB/s",
+            uni.2,
+            uni.1
+        );
+        assert!(
+            pk_tlb > id_tlb,
+            "packed prefix must improve the TLB hit rate ({pk_tlb:.3} vs {id_tlb:.3})"
+        );
+    }
+
+    let json = Json::obj(vec![
+        ("workload", Json::str("layout_packing")),
+        ("smoke", Json::num(if smoke { 1u32 } else { 0u32 })),
+        ("d", Json::num(D as u32)),
+        ("rows", Json::num(rows as u32)),
+        ("windows", Json::num(WINDOWS as u32)),
+        ("window_bytes", Json::num(window_bytes as u32)),
+        ("reach_bytes", Json::num(reach as u32)),
+        (
+            "serve",
+            Json::arr(
+                serve_rows
+                    .iter()
+                    .map(|&(name, id, pk, packed, ratio)| {
+                        Json::obj(vec![
+                            ("skew", Json::str(name)),
+                            ("identity_gbps", Json::num(id)),
+                            ("packed_gbps", Json::num(pk)),
+                            ("packed_windows", Json::num(packed as u32)),
+                            ("ratio", Json::num(ratio)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "layout",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("region", Json::str("identity_window")),
+                    ("gbps", Json::num(id_gbps)),
+                    ("tlb_hit_rate", Json::num(id_tlb)),
+                    ("utlb_hit_rate", Json::num(id_utlb)),
+                ]),
+                Json::obj(vec![
+                    ("region", Json::str("packed_prefix")),
+                    ("gbps", Json::num(pk_gbps)),
+                    ("tlb_hit_rate", Json::num(pk_tlb)),
+                    ("utlb_hit_rate", Json::num(pk_utlb)),
+                ]),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_layout.json";
+    match std::fs::write(path, json.to_string_pretty()) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -1,11 +1,16 @@
-//! The repartitioning control plane: one escalation policy over the three
-//! rebalancing levers, cheapest first —
+//! The repartitioning control plane: one escalation policy over the four
+//! rebalancing levers, cheapest data movement first —
 //!
 //! ```text
 //!   re-deal groups        (AdaptivePlacer::rebalance — swap the deal)
 //!     └─ not enough? → re-split window boundaries   (PlanSplitter::replan)
 //!           └─ not enough? → migrate rows across cards (FleetRebalancer)
+//!                 └─ not enough? → repack hot rows in-window (RowRemap)
 //! ```
+//!
+//! Repack sits last because it is the only lever that *copies row data*
+//! (into a packed page-aligned slab) rather than re-pointing zero-copy
+//! views — the routing levers must have had their chance first.
 //!
 //! [`ControlPlane`] owns the *policy* (when is each lever permitted), not
 //! the levers themselves: a per-card epoch loop
@@ -35,6 +40,9 @@ pub enum Lever {
     Resplit,
     /// Move row ranges across cards (fleet scope only).
     Migrate,
+    /// Repack a window's hot rows into a page-aligned prefix (the only
+    /// lever that copies data; see `coordinator::remap`).
+    Repack,
 }
 
 impl std::fmt::Display for Lever {
@@ -44,6 +52,7 @@ impl std::fmt::Display for Lever {
             Lever::Redeal => "redeal",
             Lever::Resplit => "resplit",
             Lever::Migrate => "migrate",
+            Lever::Repack => "repack",
         })
     }
 }
@@ -55,13 +64,15 @@ pub struct ControlPlaneConfig {
     pub min_imbalance: f64,
     /// Over-threshold epochs required per escalation step: the first
     /// `patience` failing epochs permit only a re-deal, the next
-    /// `patience` unlock re-splitting, then migration.
+    /// `patience` unlock re-splitting, then migration, then repacking.
     pub patience: u32,
     /// Quiet epochs after any applied lever, so the new layout collects
     /// signal before being judged.
     pub cooldown: u32,
     /// The strongest lever this scope may use (`Resplit` for one card,
-    /// `Migrate` for a fleet).
+    /// `Migrate` for a fleet, `Repack` when the card also owns a hot-row
+    /// remap layer — a per-card scope without migration simply declines
+    /// the `Migrate` rung and escalates past it on the next epoch).
     pub max_lever: Lever,
     /// Decisions retained in the audit trace.
     pub trace_len: usize,
@@ -149,7 +160,8 @@ impl ControlPlane {
         let lever = match step {
             0 => Lever::Redeal,
             1 => Lever::Resplit,
-            _ => Lever::Migrate,
+            2 => Lever::Migrate,
+            _ => Lever::Repack,
         };
         lever.min(self.cfg.max_lever)
     }
@@ -327,6 +339,37 @@ mod tests {
         assert_eq!(cp.permit(0.4), Lever::Hold); // cooldown again
         // Epoch 5: still broken — migration unlocks.
         assert_eq!(cp.permit(0.4), Lever::Migrate);
+    }
+
+    #[test]
+    fn repack_is_the_last_rung() {
+        let cp = plane(Lever::Repack);
+        // Streaks 1..=3 walk the routing levers (all declining, so no
+        // cooldown intervenes); streak 4 reaches the copying lever.
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+        cp.record(Lever::Redeal, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+        cp.record(Lever::Resplit, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Migrate);
+        cp.record(Lever::Migrate, None, 0.4, None, "no fleet scope: declined");
+        assert_eq!(cp.permit(0.4), Lever::Repack);
+        cp.record(Lever::Repack, Some(Lever::Repack), 0.4, Some(1), "repacked");
+        // Applied lever cools down, then the ladder stays at the top.
+        assert_eq!(cp.permit(0.4), Lever::Hold);
+        assert_eq!(cp.permit(0.4), Lever::Repack);
+        // A healthy epoch resets all the way down.
+        assert_eq!(cp.permit(0.0), Lever::Hold);
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+    }
+
+    #[test]
+    fn migrate_cap_never_permits_repack() {
+        let cp = plane(Lever::Migrate);
+        for _ in 0..10 {
+            let lever = cp.permit(0.4);
+            assert!(lever <= Lever::Migrate);
+            cp.record(lever, None, 0.4, None, "declined");
+        }
     }
 
     #[test]

@@ -20,11 +20,15 @@
 //!                   themselves when skew is hotter than the deal's group
 //!                   granularity can absorb.
 //! * [`controlplane`] — the repartitioning [`ControlPlane`]: one
-//!                   escalation policy (deal → re-split → migrate, cheapest
-//!                   lever first, hysteresis per level) with an audited
-//!                   decision trace; driven per card by
-//!                   [`crate::service::SimBackend`] and fleet-wide by
+//!                   escalation policy (deal → re-split → migrate →
+//!                   repack, cheapest data movement first, hysteresis per
+//!                   level) with an audited decision trace; driven per card
+//!                   by [`crate::service::SimBackend`] and fleet-wide by
 //!                   [`crate::service::FleetService`].
+//! * [`remap`]     — TLB-aware hot-row packing: per-window logical→physical
+//!                   row permutations ([`RemapPlan`]) densifying learned
+//!                   hot sets into page-aligned prefixes, published live
+//!                   through the [`PlacementCell`] like re-splits.
 //! * [`router`]    — split requests by owning window (under the current
 //!                   plan + placement generation), merge in order.
 //! * [`batcher`]   — dynamic batching with deadline + backpressure.
@@ -46,6 +50,7 @@ pub mod cluster;
 pub mod controlplane;
 pub mod metrics;
 pub mod placement;
+pub mod remap;
 pub mod replan;
 pub mod router;
 pub mod server;
@@ -57,10 +62,11 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use chunks::{Window, WindowPlan};
 pub use cluster::{CardSpec, CardShard, FleetPlan};
 pub use controlplane::{capacity_imbalance, ControlPlane, ControlPlaneConfig, Decision, Lever};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, RowFreqSketch};
 pub use placement::{
     Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
 };
+pub use remap::{RemapConfig, RemapPlan, WindowRemap};
 pub use replan::{PlanSplitter, SplitterConfig};
 pub use router::{merge_rows, pad_indices, Router};
 pub use server::{EmbeddingServer, ServerConfig};

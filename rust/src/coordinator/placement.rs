@@ -26,6 +26,7 @@ use crate::sim::{Machine, Pattern, SmAssignment};
 use crate::util::rng::Rng;
 
 use super::chunks::WindowPlan;
+use super::remap::RemapPlan;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlacementPolicy {
@@ -322,12 +323,19 @@ impl Placer for StaticPlacer {
 /// control plane writes between epochs.  Two write paths:
 ///
 /// * [`store`](Self::store) — re-*deal* groups under the current window
-///   boundaries (the cheapest lever), and
+///   boundaries (the cheapest lever),
 /// * [`store_replan`](Self::store_replan) — re-*split* the boundaries
-///   themselves and deal groups over the new windows in one swap.
+///   themselves and deal groups over the new windows in one swap, and
+/// * [`store_remap`](Self::store_remap) — publish a re-*packed* per-window
+///   row layout ([`RemapPlan`]) under the current plan + placement.
+///
+/// The cell also carries the live [`RemapPlan`] so a batch's routing state
+/// is one mutually-consistent triple: a re-split resets the remap to
+/// identity (the old permutations describe windows that no longer exist),
+/// a re-deal keeps it (boundaries unchanged).
 ///
 /// Swaps never drain in-flight work — splits that already loaded the old
-/// `Arc`s finish under them, the next batch routes under the new pair.
+/// `Arc`s finish under them, the next batch routes under the new triple.
 #[derive(Debug)]
 pub struct PlacementCell {
     inner: RwLock<CellState>,
@@ -337,6 +345,7 @@ pub struct PlacementCell {
 struct CellState {
     plan: Arc<WindowPlan>,
     placement: Arc<Placement>,
+    remap: Arc<RemapPlan>,
 }
 
 impl PlacementCell {
@@ -345,6 +354,7 @@ impl PlacementCell {
             inner: RwLock::new(CellState {
                 plan,
                 placement: Arc::new(placement),
+                remap: Arc::new(RemapPlan::identity()),
             }),
         }
     }
@@ -359,6 +369,22 @@ impl PlacementCell {
     pub fn load_planned(&self) -> (Arc<WindowPlan>, Arc<Placement>) {
         let st = self.inner.read().unwrap();
         (Arc::clone(&st.plan), Arc::clone(&st.placement))
+    }
+
+    /// The full routing triple (plan, placement, remap) under one lock
+    /// acquisition — what the remap-aware dispatcher reads per batch.
+    pub fn load_routed(&self) -> (Arc<WindowPlan>, Arc<Placement>, Arc<RemapPlan>) {
+        let st = self.inner.read().unwrap();
+        (
+            Arc::clone(&st.plan),
+            Arc::clone(&st.placement),
+            Arc::clone(&st.remap),
+        )
+    }
+
+    /// The current remap plan.
+    pub fn remap(&self) -> Arc<RemapPlan> {
+        Arc::clone(&self.inner.read().unwrap().remap)
     }
 
     /// The current window plan.
@@ -378,13 +404,32 @@ impl PlacementCell {
 
     /// Publish a re-*split* plan and its placement atomically (one write
     /// lock: no batch can observe the new plan with the old placement).
-    /// Returns the new generation.
+    /// The live remap resets to identity — its permutations describe
+    /// window boundaries that no longer exist.  Returns the new generation.
     pub fn store_replan(&self, plan: WindowPlan, mut placement: Placement) -> u64 {
         let mut inner = self.inner.write().unwrap();
         placement.generation = inner.placement.generation + 1;
         let generation = placement.generation;
         inner.plan = Arc::new(plan);
         inner.placement = Arc::new(placement);
+        if !inner.remap.is_identity() {
+            inner.remap = Arc::new(RemapPlan::identity());
+        }
+        generation
+    }
+
+    /// Publish a re-*packed* row layout under the current plan/placement,
+    /// stamping a fresh generation on both the placement and the remap (a
+    /// repack is a published epoch like any other lever's).  Returns the
+    /// new generation.
+    pub fn store_remap(&self, mut remap: RemapPlan) -> u64 {
+        let mut inner = self.inner.write().unwrap();
+        let mut placement = (*inner.placement).clone();
+        placement.generation += 1;
+        let generation = placement.generation;
+        remap.generation = generation;
+        inner.placement = Arc::new(placement);
+        inner.remap = Arc::new(remap);
         generation
     }
 
@@ -582,6 +627,54 @@ mod tests {
         // in-flight work is never drained or invalidated.
         assert_eq!(old.generation, 0);
         assert_eq!(cell.load().generation, 2);
+    }
+
+    #[test]
+    fn placement_cell_remap_rides_the_generation_stream() {
+        use crate::coordinator::remap::{RemapConfig, WindowRemap};
+        use crate::coordinator::table::Table;
+
+        let map = test_map();
+        let rows = 1 << 10;
+        let plan2 = WindowPlan::split(rows, 32, 2);
+        let table = Table::synthetic(rows, 8);
+        let p = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan2, 0).unwrap();
+        let cell = PlacementCell::new(Arc::new(plan2.clone()), p.clone());
+
+        // Fresh cells serve the identity remap.
+        let (_, _, remap0) = cell.load_routed();
+        assert!(remap0.is_identity());
+        assert_eq!(remap0.generation, 0);
+
+        // A published repack bumps the shared generation and is visible in
+        // the routed triple; a pre-swap reader still holds identity.
+        let cfg = RemapConfig {
+            page_bytes: 32 * 8,
+            ..RemapConfig::default()
+        };
+        let w0 = plan2.windows()[0];
+        let wr = WindowRemap::pack(&table.view(), &w0, &[3, 1, 9], 0.7, &cfg).unwrap();
+        let mut rp = RemapPlan::with_windows(2);
+        rp.set_window(0, Some(wr));
+        assert_eq!(cell.store_remap(rp), 1);
+        let (_, placement1, remap1) = cell.load_routed();
+        assert_eq!(placement1.generation, 1);
+        assert_eq!(remap1.generation, 1);
+        assert!(!remap1.is_identity());
+        assert!(remap0.is_identity());
+
+        // A re-deal keeps the remap (boundaries unchanged)...
+        assert_eq!(cell.store(p), 2);
+        assert!(!cell.remap().is_identity());
+        // ...but a re-split resets it to identity.
+        let plan4 = WindowPlan::split(rows, 32, 4);
+        let p4 = Placement::build(PlacementPolicy::GroupToChunk, &map, &plan4, 0).unwrap();
+        assert_eq!(cell.store_replan(plan4, p4), 3);
+        let (plan_now, _, remap_now) = cell.load_routed();
+        assert_eq!(plan_now.count(), 4);
+        assert!(remap_now.is_identity());
+        // The in-flight reader's packed slab survives untouched.
+        assert!(remap1.window_remap(0).is_some());
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! TLB-aware hot-row packing: live logical→physical row remaps per window.
+//!
+//! The paper's reach constraint makes *packing density inside a window* the
+//! remaining layout lever: every gathered row costs a translation, so the
+//! fewer distinct pages the hot rows straddle, the fewer uTLB misses and
+//! page walks per request (TileLens, arxiv 2607.04031, measures the same
+//! effect on real silicon).  A [`WindowRemap`] is a per-window permutation
+//! of *local* row ids — the hot set, learned from the decayed row-frequency
+//! sketch in `coordinator::metrics`, is packed contiguously into a
+//! page-granule-aligned prefix of a freshly copied slab; cold rows keep
+//! their original slots except for the ones displaced out of the prefix,
+//! which take the slots the hot rows vacated.  A [`RemapPlan`] collects the
+//! per-window remaps (`None` = identity fast path) and is published through
+//! the `PlacementCell` exactly like a re-split: generation-stamped, picked
+//! up by the dispatcher at the next formed batch, no drain — in-flight jobs
+//! pin the old packed slab through its `Arc` until they finish.
+//!
+//! Nothing here allocates on the serving hot path: `row()` is one index
+//! through the permutation into the packed slab.  All copying happens once,
+//! on the control-plane epoch thread, when a repack is published.
+
+use std::sync::Arc;
+
+use crate::coordinator::chunks::{Window, WindowPlan};
+use crate::coordinator::table::TableView;
+
+/// Tuning for the repack lever.
+#[derive(Debug, Clone)]
+pub struct RemapConfig {
+    /// Translation granule the hot prefix is aligned to (the simulated
+    /// card's TLB page; clamped per window by [`granule_rows`]).
+    ///
+    /// [`granule_rows`]: RemapConfig::granule_rows
+    pub page_bytes: u64,
+    /// Cap on the packed prefix as a fraction of the window's rows.
+    pub max_hot_fraction: f64,
+    /// Minimum guaranteed traffic share the candidate hot set must carry
+    /// before a repack is worth the copy (uniform traffic never qualifies).
+    pub min_hot_share: f64,
+    /// Hysteresis: skip republishing when the new hot set overlaps the
+    /// live remap's hot set by at least this fraction.
+    pub min_overlap_to_hold: f64,
+    /// Capacity of the row-frequency sketch feeding hot-set learning.
+    pub sketch_rows: usize,
+}
+
+impl Default for RemapConfig {
+    fn default() -> Self {
+        Self {
+            page_bytes: 2 << 20,
+            max_hot_fraction: 0.25,
+            min_hot_share: 0.3,
+            min_overlap_to_hold: 0.875,
+            sketch_rows: 1024,
+        }
+    }
+}
+
+impl RemapConfig {
+    /// Packing granule in *rows* for a window: the TLB page, halved until
+    /// the window holds at least four granules (a window that cannot fit
+    /// several granules has nothing to densify), never below one row.
+    pub fn granule_rows(&self, row_bytes: u64, window_rows: u64) -> u64 {
+        let mut rows = (self.page_bytes / row_bytes.max(1)).max(1);
+        while rows > 1 && rows * 4 > window_rows {
+            rows /= 2;
+        }
+        rows
+    }
+}
+
+/// A packed layout for one window: a true permutation of the window's local
+/// rows plus the packed copy of the window's data in physical order.
+#[derive(Debug)]
+pub struct WindowRemap {
+    /// The window this remap was built for (geometry is re-checked at
+    /// dispatch so a stale remap never crosses a re-split boundary).
+    window: Window,
+    /// Logical local row -> physical local row; a full permutation.
+    perm: Box<[u32]>,
+    /// Rows in the packed hot prefix (a multiple of `page_rows`).
+    hot_rows: u32,
+    /// Packing granule in rows the prefix is aligned to.
+    page_rows: u32,
+    /// Traffic share the hot set carried when the remap was planned.
+    hot_share: f64,
+    /// Packed copy of the window's rows, physical order.  Fresh allocation;
+    /// the original table storage is untouched (mirrors the PR-4 zero-copy
+    /// migration: swap by `Arc`, never mutate shared slabs).
+    storage: Arc<[f32]>,
+    d: usize,
+}
+
+impl WindowRemap {
+    /// Build a packed remap for `window` over the full-table `view`.
+    ///
+    /// `hot_candidates` are window-local row ids, most frequent first
+    /// (duplicates and out-of-range ids are ignored); `hot_share` is the
+    /// traffic share they carry.  Returns `None` when there is nothing
+    /// worth packing (no candidates, granule cap zero, or the prefix would
+    /// swallow the whole window — identity is already optimal then).
+    pub fn pack(
+        view: &TableView,
+        window: &Window,
+        hot_candidates: &[u32],
+        hot_share: f64,
+        cfg: &RemapConfig,
+    ) -> Option<Arc<WindowRemap>> {
+        let rows = window.rows as usize;
+        let d = view.d();
+        let row_bytes = crate::coordinator::chunks::row_bytes_for_d(d);
+        let page_rows = cfg.granule_rows(row_bytes, window.rows);
+
+        // Dedup + bounds-filter the candidates, order preserved.
+        let mut is_hot = vec![false; rows];
+        let mut hot: Vec<u32> = Vec::with_capacity(hot_candidates.len().min(rows));
+        for &c in hot_candidates {
+            if (c as usize) < rows && !is_hot[c as usize] {
+                is_hot[c as usize] = true;
+                hot.push(c);
+            }
+        }
+        if hot.is_empty() {
+            return None;
+        }
+
+        // Prefix size: candidates rounded UP to a granule multiple, capped
+        // at max_hot_fraction of the window (floored to a granule multiple).
+        let cap = ((window.rows as f64 * cfg.max_hot_fraction) as u64 / page_rows) * page_rows;
+        let hot_n = (hot.len() as u64)
+            .div_ceil(page_rows)
+            .saturating_mul(page_rows)
+            .min(cap);
+        if hot_n == 0 || hot_n >= window.rows {
+            return None;
+        }
+        let hot_n = hot_n as usize;
+        if hot.len() > hot_n {
+            for &h in &hot[hot_n..] {
+                is_hot[h as usize] = false;
+            }
+            hot.truncate(hot_n);
+        } else {
+            // Pad with the lowest-id cold rows so the prefix fills whole
+            // granules (they were about to live there anyway).
+            let mut l = 0u32;
+            while hot.len() < hot_n {
+                if !is_hot[l as usize] {
+                    is_hot[l as usize] = true;
+                    hot.push(l);
+                }
+                l += 1;
+            }
+        }
+
+        // Permutation: hot row i -> physical slot i; cold rows displaced
+        // from the prefix take (in order) the slots vacated by hot rows
+        // that lived beyond the prefix; everything else stays put.
+        let mut perm: Vec<u32> = (0..rows as u32).collect();
+        for (i, &h) in hot.iter().enumerate() {
+            perm[h as usize] = i as u32;
+        }
+        let mut vacated: Vec<u32> = hot.iter().copied().filter(|&h| h as usize >= hot_n).collect();
+        vacated.sort_unstable();
+        let mut next_slot = vacated.into_iter();
+        for l in 0..hot_n {
+            if !is_hot[l] {
+                // Counts match by construction: #cold-in-prefix == #hot-beyond.
+                let slot = next_slot.next()?;
+                perm[l] = slot;
+            }
+        }
+
+        // Packed slab: physical order, one pass over the inverse.
+        let mut inv = vec![0u32; rows];
+        for (l, &p) in perm.iter().enumerate() {
+            inv[p as usize] = l as u32;
+        }
+        let mut packed: Vec<f32> = Vec::with_capacity(rows * d);
+        for &l in &inv {
+            packed.extend_from_slice(view.row(window.start_row + l as u64));
+        }
+
+        Some(Arc::new(WindowRemap {
+            window: *window,
+            perm: perm.into_boxed_slice(),
+            hot_rows: hot_n as u32,
+            page_rows: page_rows as u32,
+            hot_share: hot_share.clamp(0.0, 1.0),
+            storage: packed.into(),
+            d,
+        }))
+    }
+
+    /// The window geometry this remap was built for.
+    pub fn window(&self) -> &Window {
+        &self.window
+    }
+
+    /// Does this remap still describe `w` (same id, start, rows)?  The
+    /// dispatcher drops remaps whose geometry a re-split invalidated.
+    pub fn matches(&self, w: &Window) -> bool {
+        self.window.id == w.id && self.window.start_row == w.start_row && self.window.rows == w.rows
+    }
+
+    /// Rows in the packed hot prefix.
+    pub fn hot_rows(&self) -> u32 {
+        self.hot_rows
+    }
+
+    /// Packing granule (rows).
+    pub fn page_rows(&self) -> u32 {
+        self.page_rows
+    }
+
+    /// Traffic share the hot set carried at planning time.
+    pub fn hot_share(&self) -> f64 {
+        self.hot_share
+    }
+
+    /// The hot set as logical local ids (prefix of the inverse permutation).
+    pub fn hot_logical_rows(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.hot_rows as usize];
+        for (l, &p) in self.perm.iter().enumerate() {
+            if (p as usize) < out.len() {
+                out[p as usize] = l as u32;
+            }
+        }
+        out
+    }
+
+    /// The packed slab (for `Arc::ptr_eq` pinning tests).
+    pub fn storage(&self) -> &Arc<[f32]> {
+        &self.storage
+    }
+
+    // hotpath: begin
+    /// Physical local slot of a logical local row.
+    #[inline]
+    pub fn physical_of(&self, logical_local: u32) -> u32 {
+        self.perm[logical_local as usize]
+    }
+
+    /// One logical local row, read through the permutation from the packed
+    /// slab.  Content-identical to the unpacked `TableView` row.
+    #[inline]
+    pub fn row(&self, logical_local: u32) -> &[f32] {
+        let p = self.perm[logical_local as usize] as usize * self.d;
+        &self.storage[p..p + self.d]
+    }
+    // hotpath: end
+
+    /// Full invariant check: true permutation, geometry matches the plan,
+    /// granule-aligned prefix, packed slab the right shape.
+    pub fn check(&self, plan: &WindowPlan) -> anyhow::Result<()> {
+        let w = plan
+            .windows()
+            .iter()
+            .find(|w| w.id == self.window.id)
+            .ok_or_else(|| anyhow::anyhow!("remap window {} not in plan", self.window.id))?;
+        if !self.matches(w) {
+            anyhow::bail!(
+                "remap geometry [{}, +{}) disagrees with plan window {} [{}, +{})",
+                self.window.start_row,
+                self.window.rows,
+                w.id,
+                w.start_row,
+                w.rows
+            );
+        }
+        let rows = self.window.rows as usize;
+        if self.perm.len() != rows {
+            anyhow::bail!("perm len {} != window rows {rows}", self.perm.len());
+        }
+        let mut seen = vec![false; rows];
+        for &p in self.perm.iter() {
+            let p = p as usize;
+            if p >= rows || seen[p] {
+                anyhow::bail!("perm is not a permutation (slot {p})");
+            }
+            seen[p] = true;
+        }
+        if self.page_rows == 0 || self.hot_rows == 0 {
+            anyhow::bail!("degenerate remap: page_rows or hot_rows is zero");
+        }
+        if self.hot_rows as u64 >= self.window.rows {
+            anyhow::bail!("hot prefix swallows the window");
+        }
+        if self.hot_rows % self.page_rows != 0 {
+            anyhow::bail!(
+                "hot prefix of {} rows not aligned to {}-row granule",
+                self.hot_rows,
+                self.page_rows
+            );
+        }
+        if self.storage.len() != rows * self.d {
+            anyhow::bail!(
+                "packed slab holds {} f32s, window needs {}",
+                self.storage.len(),
+                rows * self.d
+            );
+        }
+        if !(0.0..=1.0).contains(&self.hot_share) {
+            anyhow::bail!("hot_share {} outside [0, 1]", self.hot_share);
+        }
+        Ok(())
+    }
+}
+
+/// The published per-window remap set.  `None` entries (and windows beyond
+/// the vec) are identity — the dispatcher and workers read straight from
+/// the shared table storage for those.
+#[derive(Debug, Clone, Default)]
+pub struct RemapPlan {
+    /// Generation stamped by the `PlacementCell` at publication.
+    pub generation: u64,
+    windows: Vec<Option<Arc<WindowRemap>>>,
+}
+
+impl RemapPlan {
+    /// The identity remap: every window unpacked.
+    pub fn identity() -> Self {
+        Self::default()
+    }
+
+    /// Identity over `count` windows (slots ready for `set_window`).
+    pub fn with_windows(count: usize) -> Self {
+        Self {
+            generation: 0,
+            windows: vec![None; count],
+        }
+    }
+
+    /// No window is packed.
+    pub fn is_identity(&self) -> bool {
+        self.windows.iter().all(|w| w.is_none())
+    }
+
+    /// The remap for a window, if it is packed.
+    pub fn window_remap(&self, window: usize) -> Option<&Arc<WindowRemap>> {
+        self.windows.get(window).and_then(|w| w.as_ref())
+    }
+
+    /// Install (or clear) one window's remap, growing the slot vec.
+    pub fn set_window(&mut self, window: usize, remap: Option<Arc<WindowRemap>>) {
+        if self.windows.len() <= window {
+            self.windows.resize(window + 1, None);
+        }
+        self.windows[window] = remap;
+    }
+
+    /// Number of packed windows.
+    pub fn packed_windows(&self) -> usize {
+        self.windows.iter().filter(|w| w.is_some()).count()
+    }
+
+    /// Total rows living in packed hot prefixes.
+    pub fn total_hot_rows(&self) -> u64 {
+        self.windows
+            .iter()
+            .flatten()
+            .map(|r| r.hot_rows() as u64)
+            .sum()
+    }
+
+    /// Check every packed window against the plan it serves.
+    pub fn check(&self, plan: &WindowPlan) -> anyhow::Result<()> {
+        for (i, remap) in self.windows.iter().enumerate() {
+            if let Some(r) = remap {
+                if r.window().id != i {
+                    anyhow::bail!("slot {i} holds remap for window {}", r.window().id);
+                }
+                r.check(plan)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::table::Table;
+
+    fn plan_one(rows: u64) -> (Table, WindowPlan) {
+        let t = Table::synthetic(rows, 8);
+        let p = WindowPlan::split(rows, crate::coordinator::chunks::row_bytes_for_d(8), 1);
+        (t, p)
+    }
+
+    fn small_cfg() -> RemapConfig {
+        RemapConfig {
+            page_bytes: 8 * 32, // 8-row granule at d=8 (row_bytes 32)
+            ..RemapConfig::default()
+        }
+    }
+
+    #[test]
+    fn identity_plan_is_identity() {
+        let (_, p) = plan_one(128);
+        let id = RemapPlan::identity();
+        assert!(id.is_identity());
+        assert_eq!(id.packed_windows(), 0);
+        assert!(id.window_remap(0).is_none());
+        id.check(&p).unwrap();
+    }
+
+    #[test]
+    fn pack_builds_a_checked_permutation() {
+        let (t, p) = plan_one(128);
+        let w = p.windows()[0];
+        let cfg = small_cfg();
+        // Hot rows scattered through the window, deliberately unsorted.
+        let hot = [100u32, 3, 77, 12, 99, 5];
+        let r = WindowRemap::pack(&t.view(), &w, &hot, 0.8, &cfg).unwrap();
+        r.check(&p).unwrap();
+        // 6 candidates round up to one 8-row granule.
+        assert_eq!(r.hot_rows(), 8);
+        assert_eq!(r.page_rows(), 8);
+        // The named hot rows land in the prefix, in frequency order.
+        for (i, &h) in hot.iter().enumerate() {
+            assert_eq!(r.physical_of(h), i as u32);
+        }
+        // Every row's content survives the permutation.
+        for l in 0..128u32 {
+            assert_eq!(r.row(l), t.view().row(l as u64), "row {l}");
+        }
+    }
+
+    #[test]
+    fn pack_caps_prefix_at_max_hot_fraction() {
+        let (t, p) = plan_one(128);
+        let w = p.windows()[0];
+        let cfg = small_cfg();
+        // 64 candidates, but the cap is 0.25 * 128 = 32 rows.
+        let hot: Vec<u32> = (0..64).map(|i| (i * 2) as u32).collect();
+        let r = WindowRemap::pack(&t.view(), &w, &hot, 0.9, &cfg).unwrap();
+        r.check(&p).unwrap();
+        assert_eq!(r.hot_rows(), 32);
+        // Truncation keeps the most frequent candidates.
+        for (i, &h) in hot[..32].iter().enumerate() {
+            assert_eq!(r.physical_of(h), i as u32);
+        }
+    }
+
+    #[test]
+    fn pack_declines_when_nothing_to_pack() {
+        let (t, p) = plan_one(128);
+        let w = p.windows()[0];
+        let cfg = small_cfg();
+        // No candidates at all.
+        assert!(WindowRemap::pack(&t.view(), &w, &[], 0.5, &cfg).is_none());
+        // Candidates all out of range are filtered to nothing.
+        assert!(WindowRemap::pack(&t.view(), &w, &[500, 900], 0.5, &cfg).is_none());
+        // A window too small to hold a granule-aligned prefix under the cap.
+        let tiny = Window {
+            id: 0,
+            start_row: 0,
+            rows: 8,
+        };
+        assert!(WindowRemap::pack(&t.view(), &tiny, &[1], 0.5, &cfg).is_none());
+    }
+
+    #[test]
+    fn stale_geometry_is_detected() {
+        let (t, p) = plan_one(128);
+        let w = p.windows()[0];
+        let cfg = small_cfg();
+        let r = WindowRemap::pack(&t.view(), &w, &[1, 2, 3], 0.7, &cfg).unwrap();
+        assert!(r.matches(&w));
+        // A re-split moved the boundary: same id, different rows.
+        let moved = Window {
+            id: 0,
+            start_row: 0,
+            rows: 64,
+        };
+        assert!(!r.matches(&moved));
+        let replan = WindowPlan::split(128, 32, 2);
+        assert!(r.check(&replan).is_err());
+    }
+
+    #[test]
+    fn plan_slots_grow_and_check() {
+        let (t, p2) = {
+            let t = Table::synthetic(256, 8);
+            let p = WindowPlan::split(256, 32, 2);
+            (t, p)
+        };
+        let cfg = small_cfg();
+        let w1 = p2.windows()[1];
+        let r = WindowRemap::pack(&t.view(), &w1, &[9, 4, 40], 0.6, &cfg).unwrap();
+        let mut plan = RemapPlan::identity();
+        plan.set_window(1, Some(Arc::clone(&r)));
+        assert!(!plan.is_identity());
+        assert_eq!(plan.packed_windows(), 1);
+        assert_eq!(plan.total_hot_rows(), r.hot_rows() as u64);
+        plan.check(&p2).unwrap();
+        // A remap parked in the wrong slot fails the plan check.
+        let mut wrong = RemapPlan::identity();
+        wrong.set_window(0, Some(r));
+        assert!(wrong.check(&p2).is_err());
+    }
+
+    #[test]
+    fn granule_clamps_to_small_windows() {
+        let cfg = RemapConfig::default();
+        // 2 MiB page over 128-byte rows = 16384 rows; a 32768-row window
+        // holds only 2 of those, so the granule halves until >= 4 fit.
+        let g = cfg.granule_rows(128, 32_768);
+        assert!(g <= 32_768 / 4);
+        assert!(g.is_power_of_two());
+        // Huge windows keep the full page granule.
+        assert_eq!(cfg.granule_rows(128, 1 << 20), 16_384);
+        // Degenerate windows clamp to one row.
+        assert_eq!(cfg.granule_rows(128, 2), 1);
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::coordinator::table::Table;
+    use crate::util::prop;
+
+    #[test]
+    fn property_packed_remaps_hold_every_invariant() {
+        prop::check("remap-invariants", 60, |g| {
+            let d = *g.pick(&[4usize, 8, 32]);
+            let windows = g.usize(1, 3);
+            let rows_per = g.u64(32, 1024);
+            let total = rows_per * windows as u64;
+            let t = Table::synthetic(total, d);
+            let row_bytes = crate::coordinator::chunks::row_bytes_for_d(d);
+            let plan = WindowPlan::split(total, row_bytes, windows);
+            let cfg = RemapConfig {
+                page_bytes: row_bytes * (1 << g.usize(0, 4)),
+                max_hot_fraction: g.f64(0.1, 0.5),
+                ..RemapConfig::default()
+            };
+            let mut rplan = RemapPlan::with_windows(windows);
+            for w in plan.windows() {
+                let n_hot = g.usize(1, (w.rows as usize / 2).max(1));
+                // Candidates may repeat and run out of range; pack filters.
+                let hot: Vec<u32> = (0..n_hot)
+                    .map(|_| g.u64(0, w.rows + w.rows / 4) as u32)
+                    .collect();
+                let share = g.f64(0.0, 1.0);
+                if let Some(r) = WindowRemap::pack(&t.view(), w, &hot, share, &cfg) {
+                    // Invariants: permutation, alignment, geometry, shape.
+                    r.check(&plan).unwrap();
+                    assert_eq!(r.hot_rows() % r.page_rows(), 0);
+                    assert!((r.hot_rows() as u64) < w.rows);
+                    assert!(
+                        r.hot_rows() as u64
+                            <= ((w.rows as f64 * cfg.max_hot_fraction) as u64
+                                / r.page_rows() as u64
+                                + 1)
+                                * r.page_rows() as u64
+                    );
+                    // Logical<->physical round-trip is exact.
+                    let mut seen = vec![false; w.rows as usize];
+                    for l in 0..w.rows as u32 {
+                        let p = r.physical_of(l);
+                        assert!(!seen[p as usize]);
+                        seen[p as usize] = true;
+                    }
+                    // Content identity: packed rows == source rows.
+                    for l in 0..w.rows as u32 {
+                        assert_eq!(r.row(l), t.view().row(w.start_row + l as u64));
+                    }
+                    rplan.set_window(w.id, Some(r));
+                }
+            }
+            rplan.check(&plan).unwrap();
+        });
+    }
+
+    #[test]
+    fn property_hot_candidates_land_in_prefix() {
+        prop::check("remap-hot-prefix", 40, |g| {
+            let t = Table::synthetic(512, 8);
+            let plan = WindowPlan::split(512, 32, 1);
+            let w = plan.windows()[0];
+            let cfg = RemapConfig {
+                page_bytes: 32 * 8,
+                max_hot_fraction: 0.25,
+                ..RemapConfig::default()
+            };
+            let n = g.usize(1, 100);
+            let mut hot: Vec<u32> = (0..n).map(|_| g.u64(0, 511) as u32).collect();
+            hot.dedup();
+            if let Some(r) = WindowRemap::pack(&t.view(), &w, &hot, 0.5, &cfg) {
+                let prefix = r.hot_rows();
+                let mut uniq = std::collections::HashSet::new();
+                for &h in &hot {
+                    if uniq.insert(h) && (uniq.len() as u32) <= prefix {
+                        assert!(
+                            r.physical_of(h) < prefix,
+                            "hot row {h} fell outside the {prefix}-row prefix"
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

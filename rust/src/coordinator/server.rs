@@ -34,7 +34,7 @@ use anyhow::{anyhow, Context};
 use crate::probe::TopologyMap;
 use crate::runtime::Runtime;
 use crate::service::backend::{
-    submit_ticketed, Backend, Batch, DataPath, Job, Pipeline, Shells, Ticket, WorkQueue,
+    submit_ticketed, AccPool, Backend, Batch, DataPath, Job, Pipeline, Shells, Ticket, WorkQueue,
     WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
 };
 use crate::service::ring;
@@ -120,6 +120,7 @@ impl EmbeddingServer {
         // Jobs arrive over a bounded SPSC ring; emptied index shells ride
         // a return ring back to the dispatcher's router pool.
         let pool = SlabPool::new();
+        let accs = AccPool::new();
         let mut senders: Vec<Option<WorkSender>> = (0..map.groups.len()).map(|_| None).collect();
         let mut shell_returns: Vec<ring::Consumer<Shells>> = Vec::new();
         let mut workers = Vec::new();
@@ -168,6 +169,7 @@ impl EmbeddingServer {
             view.d(),
             senders,
             shell_returns,
+            Some(Arc::clone(&accs)),
             workers,
             // No resilience runtime on the PJRT path yet: device-side
             // recovery semantics (re-executing a partially-run HLO gather)
@@ -181,7 +183,7 @@ impl EmbeddingServer {
             metrics,
             plan,
             view,
-            path: DataPath::Slab(pool),
+            path: DataPath::Slab { pool, accs },
             placement: cell,
             startup: placement,
             map: map.clone(),
@@ -340,7 +342,7 @@ impl Backend for EmbeddingServer {
     }
 
     fn recycle(&self, buf: Vec<f32>) {
-        if let DataPath::Slab(pool) = &self.path {
+        if let DataPath::Slab { pool, .. } = &self.path {
             pool.put(buf);
         }
     }
@@ -495,11 +497,11 @@ impl WorkerCtx {
 
     fn execute(&mut self, job: Job, shells: &ring::Producer<Shells>) {
         let result = self.gather_scatter(&job);
-        match result {
+        let done = match result {
             Ok(()) => job.acc.finish_part(&self.metrics),
             Err(e) => job.acc.fail_part(&self.metrics, &format!("{e:#}")),
-        }
-        job.recycle_shells(Some(shells));
+        };
+        job.recycle_shells(Some(shells), done);
     }
 
     /// Gather `job.local_rows` from the job's window shard, decomposed into

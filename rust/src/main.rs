@@ -9,7 +9,7 @@ use std::time::Duration;
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
     AdaptiveConfig, CardSpec, ControlPlaneConfig, Decision, EmbeddingServer, Lever,
-    PlacementPolicy, ServerConfig, SplitterConfig, Table, WindowPlan,
+    PlacementPolicy, RemapConfig, ServerConfig, SplitterConfig, Table, WindowPlan,
 };
 use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
@@ -37,7 +37,7 @@ USAGE:
                     [--windows N] [--rows-per-request N] [--duration-ms N]
                     [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
                     [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
-                    [--verify N]
+                    [--remap] [--verify N]
                     [--chaos [--seed N] [--deadline-ms N]]  (chaos soak, see below)
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
@@ -66,10 +66,15 @@ SUBCOMMANDS:
              whose control plane may also migrate rows across cards
              (zero-copy); --sim-timescale paces completions by simulated
              device time so the wall-clock knee is policy-dependent;
-             --verify N is the CI regression guard: after the sweep it
-             serves N fully-verified requests (every merged row checked
-             against the table) and asserts the repartition counters are
-             consistent (generations == redeals + resplits + migrations).
+             --remap arms the fourth lever, TLB-aware hot-row repacking:
+             learned hot rows are copied into page-aligned window prefixes
+             and published live like a re-split (implies adaptive
+             epoching); --verify N is the CI regression guard: after the
+             sweep it serves N fully-verified requests (every merged row
+             checked against the table), asserts the repartition counters
+             are consistent (generations == redeals + resplits +
+             migrations + repacks), and audits the published remap plan's
+             permutation invariants.
              --chaos replaces the QPS sweep with a verifying chaos soak:
              a seeded fault schedule (worker stalls, group outages,
              flapping health — sim/fault.rs) fires against the fully
@@ -567,6 +572,17 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         ),
         other => anyhow::bail!("--placer static|deal-only|adaptive, got '{other}'"),
     };
+    // --remap arms the repack lever.  Its hot-set signal rides the same
+    // epoch machinery as re-deals, so it implies adaptive epoching even
+    // under --placer static.
+    let remap = args.bool_flag("remap").then(RemapConfig::default);
+    let adaptive = match (adaptive, &remap) {
+        (None, Some(_)) => Some(AdaptiveConfig {
+            epoch: Some(Duration::from_millis(20)),
+            ..AdaptiveConfig::default()
+        }),
+        (a, _) => a,
+    };
     // --skew-drift takes precedence: the rotating-hotspot stressor the
     // control plane exists for.
     let skew = match args.flag("skew-drift") {
@@ -598,6 +614,12 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     };
 
     if cards > 1 {
+        if remap.is_some() {
+            anyhow::bail!(
+                "--remap is per-card for now; the fleet control plane's migrate lever \
+                 re-homes whole shards instead (run --remap with --cards 1)"
+            );
+        }
         // --policy and --windows configure a single card's plan; silently
         // ignoring them against a fleet would mislabel the sweep.
         if args.flag("policy").is_some() || args.flag("windows").is_some() {
@@ -631,6 +653,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SimBackendConfig::new(policy);
     cfg.adaptive = adaptive;
     cfg.resplit = resplit;
+    cfg.remap = remap.clone();
     cfg.sim_timescale = timescale;
     let backend = Arc::new(SimBackend::start(
         cfg,
@@ -687,6 +710,15 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         "simulated aggregate (makespan over groups): {:.1} GB/s",
         backend.aggregate_sim_gbps()
     );
+    if remap.is_some() {
+        let rp = backend.remap_plan();
+        println!(
+            "remap: generation {}, {} packed window(s), {} hot rows in page-aligned prefixes",
+            rp.generation,
+            rp.packed_windows(),
+            rp.total_hot_rows()
+        );
+    }
     if placer_name != "static" {
         print_decision_trace("card", &backend.control_decisions());
     }
@@ -711,6 +743,12 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 "adaptive sweep produced no control-plane decisions"
             );
         }
+        // Whatever remap plan is live after the verified traffic must be a
+        // true in-window permutation (identity plans pass trivially).
+        backend
+            .remap_plan()
+            .check(&backend.plan())
+            .map_err(|e| anyhow::anyhow!("published remap plan violates invariants: {e:#}"))?;
         println!("verify: {verify_n} requests ({verified} rows) checked; counters consistent");
     }
     service.shutdown();
@@ -730,7 +768,7 @@ fn assert_repartition_counters(
     let mut last = (0, 0);
     for _ in 0..40 {
         let m = snapshot();
-        let levers = m.redeal_epochs + m.resplit_epochs + m.migrate_epochs;
+        let levers = m.redeal_epochs + m.resplit_epochs + m.migrate_epochs + m.repack_epochs;
         if m.generations_published == levers {
             return Ok(());
         }
@@ -738,7 +776,7 @@ fn assert_repartition_counters(
         std::thread::sleep(Duration::from_millis(5));
     }
     anyhow::bail!(
-        "{scope}: generations_published={} but redeal+resplit+migrate={} (never converged)",
+        "{scope}: generations_published={} but redeal+resplit+migrate+repack={} (never converged)",
         last.0,
         last.1
     )

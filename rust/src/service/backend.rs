@@ -44,6 +44,7 @@ use anyhow::{anyhow, Context};
 use crate::coordinator::batcher::{BatchWait, Batcher};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::{Placement, PlacementCell};
+use crate::coordinator::remap::{RemapPlan, WindowRemap};
 use crate::coordinator::router::Router;
 use crate::coordinator::table::TableView;
 
@@ -394,12 +395,75 @@ pub(crate) fn scatter_rows(out: &mut [f32], positions: &[u32], rows: &[f32], d: 
 #[derive(Clone)]
 pub(crate) enum DataPath {
     /// Default: pooled slab outputs, direct disjoint scatter, SPSC rings,
-    /// park/unpark completion.
-    Slab(Arc<SlabPool>),
+    /// park/unpark completion.  Carries both the output-slab pool and the
+    /// accumulator-shell pool ([`AccPool`]): a request's *entire* per-flight
+    /// state recycles, so the steady state allocates nothing at submit.
+    Slab {
+        pool: Arc<SlabPool>,
+        accs: Arc<AccPool>,
+    },
     /// The pre-slab pipeline (mutexed accumulator, mpsc worker channels,
     /// `sync_channel(1)` tickets, per-job gather `Vec`), kept as the
     /// `--legacy-path` perf oracle.
     Legacy,
+}
+
+/// Recycled [`RequestAcc`] shells: the last two per-request heap
+/// allocations (the accumulator `Arc` and its completion `Arc`) ride the
+/// workers' shell-return rings back to the dispatcher, land here, and are
+/// reissued at submit.  An entry is only reusable when nothing else still
+/// holds it (`Arc::get_mut`) — a partial-salvage ticket or late hedge copy
+/// keeps its accumulator alive and the pool simply drops that entry.
+pub(crate) struct AccPool {
+    accs: Mutex<Vec<Arc<RequestAcc>>>,
+}
+
+/// Pooled accumulator cap; overflow just drops (same shape as
+/// [`SlabPool`]'s bound).
+const MAX_POOLED_ACCS: usize = 256;
+
+impl AccPool {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            accs: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Park a retired accumulator for reuse (bounded; overflow drops).
+    pub(crate) fn put(&self, acc: Arc<RequestAcc>) {
+        let Ok(mut accs) = self.accs.lock() else {
+            return;
+        };
+        if accs.len() < MAX_POOLED_ACCS {
+            accs.push(acc);
+        }
+    }
+
+    /// Reissue a pooled accumulator reset for a fresh request, or `None`
+    /// when the pool is empty or the candidate is still shared (the caller
+    /// allocates fresh; the shared candidate is dropped, not re-queued —
+    /// its other holder owns its fate now).
+    pub(crate) fn get(
+        &self,
+        pool: &Arc<SlabPool>,
+        rows: usize,
+        d: usize,
+        partials: bool,
+    ) -> Option<Arc<RequestAcc>> {
+        let mut cand = self.accs.lock().ok()?.pop()?;
+        match Arc::get_mut(&mut cand) {
+            Some(acc) => {
+                acc.reset_for_reuse(pool, rows, d, partials);
+                Some(cand)
+            }
+            None => None,
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn pooled(&self) -> usize {
+        self.accs.lock().unwrap().len()
+    }
 }
 
 /// Where a request's rows accumulate.
@@ -455,6 +519,37 @@ impl RequestAcc {
             failed_msg: Mutex::new(None),
             start: Mutex::new(Instant::now()),
             partials,
+        }
+    }
+
+    /// Rebuild a retired accumulator in place for a fresh request
+    /// ([`AccPool`] reuse path; caller proved exclusive ownership via
+    /// `Arc::get_mut`).  The output slab comes from the pool and the
+    /// completion cell is reused when the old ticket has fully let go —
+    /// after warmup a recycled request allocates nothing at submit.
+    pub(crate) fn reset_for_reuse(
+        &mut self,
+        pool: &Arc<SlabPool>,
+        rows: usize,
+        d: usize,
+        partials: bool,
+    ) {
+        self.out = OutBuf::Slab(ScatterBuf::new(pool, rows, d));
+        self.remaining.store(0, Ordering::Release);
+        self.failed.store(0, Ordering::Release);
+        *self.failed_msg.lock().unwrap() = None;
+        *self.start.lock().unwrap() = Instant::now();
+        self.partials = partials;
+        match &mut self.responder {
+            Responder::Slot(done) => match Arc::get_mut(done) {
+                Some(c) => c.reset(),
+                // The previous ticket still holds the cell (e.g. it was
+                // never redeemed): leave it theirs, mint a fresh one.
+                None => *done = Arc::new(Completion::with_pool(Arc::clone(pool))),
+            },
+            Responder::Channel(_) => {
+                self.responder = Responder::Slot(Arc::new(Completion::with_pool(Arc::clone(pool))));
+            }
         }
     }
 
@@ -533,7 +628,9 @@ impl RequestAcc {
     }
 
     /// Mark one sub-batch done; the last part publishes the response.
-    pub(crate) fn finish_part(&self, metrics: &Metrics) {
+    /// Returns `true` for that final part — the caller that retired the
+    /// request may hand the accumulator shell back for pooling.
+    pub(crate) fn finish_part(&self, metrics: &Metrics) -> bool {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             let result = if self.failed.load(Ordering::Acquire) > 0 {
                 let msg = self
@@ -568,15 +665,18 @@ impl RequestAcc {
             let start = *self.start.lock().unwrap();
             metrics.latency.record(start.elapsed());
             self.respond(result);
+            return true;
         }
+        false
     }
     // hotpath: end
 
-    /// Record a failure for this part and finish it.  The *first* failure
-    /// message wins — it names the root cause; later failures are usually
-    /// downstream collateral (queue closures after a worker died) and are
-    /// still counted in `failed`.
-    pub(crate) fn fail_part(&self, metrics: &Metrics, why: &str) {
+    /// Record a failure for this part and finish it (returning whether
+    /// this was the final part, as [`RequestAcc::finish_part`] does).  The
+    /// *first* failure message wins — it names the root cause; later
+    /// failures are usually downstream collateral (queue closures after a
+    /// worker died) and are still counted in `failed`.
+    pub(crate) fn fail_part(&self, metrics: &Metrics, why: &str) -> bool {
         {
             let mut msg = self.failed_msg.lock().unwrap();
             if msg.is_none() {
@@ -584,7 +684,7 @@ impl RequestAcc {
             }
         }
         self.failed.fetch_add(1, Ordering::Release);
-        self.finish_part(metrics);
+        self.finish_part(metrics)
     }
 
     /// Salvage completed rows after a failure or expiry (slab path with
@@ -648,6 +748,13 @@ pub(crate) struct Job {
     pub(crate) win_rows: u64,
     pub(crate) local_rows: Vec<u32>,
     pub(crate) positions: Vec<u32>,
+    /// Live layout permutation for this job's window, when the published
+    /// [`RemapPlan`] has one whose geometry matches the routed window: the
+    /// worker gathers through the packed storage instead of the base view.
+    /// Pinned per job (like the window geometry above) so a repack landing
+    /// mid-flight never mixes layouts within one sub-batch.  `None` =
+    /// identity layout, the zero-cost default.
+    pub(crate) remap: Option<Arc<WindowRemap>>,
     pub(crate) acc: Arc<RequestAcc>,
     /// Retry generation: 0 for first dispatch, incremented per re-send.
     /// Workers pass it back so the retry budget is enforced per sub-batch.
@@ -662,21 +769,40 @@ pub(crate) struct Job {
 }
 
 impl Job {
-    /// Recycle this job's index shells after execution: cleared and sent
-    /// back to the dispatcher's router pool over the worker's return ring
-    /// (dropped silently when the ring is full — the next split simply
-    /// allocates).
-    pub(crate) fn recycle_shells(mut self, ret: Option<&ring::Producer<Shells>>) {
+    /// Recycle this job's shells after execution: the cleared index
+    /// vectors ride the worker's return ring back to the dispatcher's
+    /// router pool (dropped silently when the ring is full — the next
+    /// split simply allocates).  When this job's `finish_part` retired the
+    /// whole request (`done`), the accumulator `Arc` rides along too so
+    /// the dispatcher can park it in the [`AccPool`].
+    pub(crate) fn recycle_shells(self, ret: Option<&ring::Producer<Shells>>, done: bool) {
+        let Job {
+            mut local_rows,
+            mut positions,
+            acc,
+            ..
+        } = self;
         if let Some(ret) = ret {
-            self.local_rows.clear();
-            self.positions.clear();
-            let _ = ret.try_send((self.local_rows, self.positions));
+            local_rows.clear();
+            positions.clear();
+            let _ = ret.try_send(Shells {
+                local_rows,
+                positions,
+                acc: done.then_some(acc),
+            });
         }
     }
 }
 
-/// Emptied (capacity-retaining) index vectors riding back to the router.
-pub(crate) type Shells = (Vec<u32>, Vec<u32>);
+/// Emptied (capacity-retaining) per-flight state riding back to the
+/// dispatcher: the index vectors return to the router pool on every job;
+/// the accumulator shell returns to the [`AccPool`] on the job that
+/// finished its request.
+pub(crate) struct Shells {
+    pub(crate) local_rows: Vec<u32>,
+    pub(crate) positions: Vec<u32>,
+    pub(crate) acc: Option<Arc<RequestAcc>>,
+}
 
 /// Bounded per-worker job ring (the dispatcher blocks when a worker falls
 /// this far behind — the same backpressure the batcher's `max_pending`
@@ -763,12 +889,17 @@ pub(crate) enum ReqHandle {
 /// sub-batches out to the per-group workers.  Requests whose deadline
 /// already passed are failed fast (counted in `Metrics::expired`) without
 /// touching a worker.  Per-window routed rows are recorded in `metrics` —
-/// the adaptive placer's load signal.
+/// the adaptive placer's load signal — and sampled into the row-frequency
+/// sketch when one is enabled, the repack lever's hot-set signal.  Each
+/// sub-batch pins its window's live [`WindowRemap`] (if the published
+/// `remap` plan has one with matching geometry) so workers gather from
+/// the packed layout.
 pub(crate) fn dispatch_formed(
     formed: crate::coordinator::batcher::Batch<ReqHandle>,
     router: &mut Router,
     plan: &crate::coordinator::chunks::WindowPlan,
     placement: &Placement,
+    remap: &RemapPlan,
     senders: &[Option<WorkSender>],
     metrics: &Arc<Metrics>,
     resilience: Option<&Arc<ResilienceCtx>>,
@@ -802,8 +933,13 @@ pub(crate) fn dispatch_formed(
             )),
         };
         for sb in split.sub_batches {
-            metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
             let win = plan.windows()[sb.window];
+            metrics.record_window_rows(sb.window, sb.local_rows.len() as u64);
+            metrics.record_routed_rows(win.start_row, &sb.local_rows);
+            let win_remap = remap
+                .window_remap(sb.window)
+                .filter(|r| r.matches(&win))
+                .cloned();
             // Hedging: mint a claim token and remember the sub-batch
             // (global rows + final positions) so the monitor can re-issue
             // it to a sibling group if it straggles past the watermark.
@@ -825,6 +961,7 @@ pub(crate) fn dispatch_formed(
                 win_rows: win.rows,
                 local_rows: sb.local_rows,
                 positions: sb.positions,
+                remap: win_remap,
                 acc: Arc::clone(&acc),
                 attempt: 0,
                 token: hedge_entry.as_ref().map(|(_, t, _, _)| Arc::clone(t)),
@@ -857,7 +994,7 @@ fn redispatch(
     metrics: &Arc<Metrics>,
     res: &Arc<ResilienceCtx>,
 ) {
-    let (plan, placement) = cell.load_planned();
+    let (plan, placement, remap) = cell.load_routed();
     let split = router.split(&msg.rows, &plan, &placement);
     if msg.hedge {
         // PANIC: invariant, not input — the monitor mints a token for every
@@ -894,6 +1031,10 @@ fn redispatch(
                 win_rows: win.rows,
                 local_rows: sb.local_rows,
                 positions: sb.positions,
+                remap: remap
+                    .window_remap(sb.window)
+                    .filter(|r| r.matches(&win))
+                    .cloned(),
                 acc: Arc::clone(&msg.acc),
                 attempt: msg.attempt,
                 token: Some(Arc::clone(&token)),
@@ -937,6 +1078,10 @@ fn redispatch(
             win_rows: win.rows,
             local_rows: sb.local_rows,
             positions: sb.positions,
+            remap: remap
+                .window_remap(sb.window)
+                .filter(|r| r.matches(&win))
+                .cloned(),
             acc: Arc::clone(&msg.acc),
             attempt: msg.attempt,
             token: None,
@@ -967,14 +1112,16 @@ pub(crate) struct Pipeline {
 
 impl Pipeline {
     /// Spawn the dispatcher over `senders` and adopt the worker handles.
-    /// The dispatcher loads the (plan, placement) pair from `cell` once per
-    /// formed batch, so a [`PlacementCell::store`] (re-deal) or
-    /// [`PlacementCell::store_replan`] (window re-split) from the control
+    /// The dispatcher loads the (plan, placement, remap) triple from `cell`
+    /// once per formed batch, so a [`PlacementCell::store`] (re-deal),
+    /// [`PlacementCell::store_replan`] (window re-split) or
+    /// [`PlacementCell::store_remap`] (hot-row repack) from the control
     /// plane takes effect at the next batch — in-flight splits finish under
     /// the generation they started with (no drain).  `shell_returns` are
     /// the workers' recycling rings: their emptied index vectors are
-    /// drained into the router pool between batches, closing the
-    /// allocation loop.
+    /// drained into the router pool between batches, and retired
+    /// accumulator shells into `acc_pool`, closing the allocation loop.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn start(
         cfg: crate::coordinator::batcher::BatcherConfig,
         cell: Arc<PlacementCell>,
@@ -982,10 +1129,21 @@ impl Pipeline {
         d: usize,
         senders: Vec<Option<WorkSender>>,
         shell_returns: Vec<ring::Consumer<Shells>>,
+        acc_pool: Option<Arc<AccPool>>,
         workers: Vec<std::thread::JoinHandle<()>>,
         resilience: Option<Arc<ResilienceCtx>>,
     ) -> anyhow::Result<Self> {
         let batcher = Arc::new(Batcher::new(cfg));
+        let drain_shells = move |router: &mut Router, shell_returns: &[ring::Consumer<Shells>]| {
+            for ret in shell_returns {
+                while let Some(sh) = ret.try_recv() {
+                    router.adopt_shells(sh.local_rows, sh.positions);
+                    if let (Some(pool), Some(acc)) = (&acc_pool, sh.acc) {
+                        pool.put(acc);
+                    }
+                }
+            }
+        };
         let dispatcher = {
             let batcher = Arc::clone(&batcher);
             std::thread::Builder::new()
@@ -996,15 +1154,11 @@ impl Pipeline {
                         // pipeline: block on the batcher, dispatch, repeat.
                         let mut router = Router::new();
                         while let Some(batch) = batcher.next_batch() {
-                            for ret in &shell_returns {
-                                while let Some((local_rows, positions)) = ret.try_recv() {
-                                    router.adopt_shells(local_rows, positions);
-                                }
-                            }
-                            let (plan, placement) = cell.load_planned();
+                            drain_shells(&mut router, &shell_returns);
+                            let (plan, placement, remap) = cell.load_routed();
                             dispatch_formed(
-                                batch, &mut router, &plan, &placement, &senders, &metrics, None,
-                                d,
+                                batch, &mut router, &plan, &placement, &remap, &senders,
+                                &metrics, None, d,
                             );
                         }
                         for s in senders.iter().flatten() {
@@ -1037,11 +1191,7 @@ impl Pipeline {
                                 BatchWait::TimedOut => None,
                                 BatchWait::Closed => break,
                             };
-                            for ret in &shell_returns {
-                                while let Some((local_rows, positions)) = ret.try_recv() {
-                                    router.adopt_shells(local_rows, positions);
-                                }
-                            }
+                            drain_shells(&mut router, &shell_returns);
                             while let Ok(m) = rx.try_recv() {
                                 pending.push(m);
                             }
@@ -1056,12 +1206,13 @@ impl Pipeline {
                                 }
                             }
                             if let Some(batch) = batch {
-                                let (plan, placement) = cell.load_planned();
+                                let (plan, placement, remap) = cell.load_routed();
                                 dispatch_formed(
                                     batch,
                                     &mut router,
                                     &plan,
                                     &placement,
+                                    &remap,
                                     &senders,
                                     &metrics,
                                     Some(&res),
@@ -1135,8 +1286,14 @@ pub(crate) fn submit_ticketed(
         return Ok(Ticket::resolved(Ok(Vec::new()), Arc::clone(metrics)));
     }
     match path {
-        DataPath::Slab(pool) => {
-            let acc = Arc::new(RequestAcc::new_slab(pool, batch.rows.len(), d, partials));
+        DataPath::Slab { pool, accs } => {
+            // Steady state: the accumulator shell (the request's two Arc
+            // allocations) comes back from the pool; a fresh one is built
+            // only while the pool warms up or the candidate is shared.
+            let acc = match accs.get(pool, batch.rows.len(), d, partials) {
+                Some(acc) => acc,
+                None => Arc::new(RequestAcc::new_slab(pool, batch.rows.len(), d, partials)),
+            };
             let done = acc.completion();
             let partial_src = partials.then(|| Arc::clone(&acc));
             batcher
@@ -1323,6 +1480,94 @@ mod tests {
         assert!(err.to_string().contains("injected fault"), "{err}");
         assert_eq!(acc.failed.load(Ordering::Relaxed), 3);
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn acc_pool_recycles_shells_and_resets_state() {
+        let m = metrics();
+        let pool = SlabPool::new();
+        let accs = AccPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 1, 2, false));
+        acc.arm(1, Instant::now());
+        let done = acc.completion();
+        acc.write_row(0, &[1.0, 2.0]);
+        assert!(acc.finish_part(&m), "final part retires the request");
+        assert_eq!(done.try_take().unwrap().unwrap(), vec![1.0, 2.0]);
+        drop(done); // ticket fully redeemed: the completion cell is free too
+        accs.put(acc);
+        assert_eq!(accs.pooled(), 1);
+        // Reissue for a *different* shape; the reset shell must behave
+        // exactly like a fresh accumulator.
+        let acc2 = accs.get(&pool, 2, 2, false).expect("pool reissues the shell");
+        acc2.arm(2, Instant::now());
+        let done2 = acc2.completion();
+        acc2.write_row(1, &[5.0, 6.0]);
+        assert!(!acc2.finish_part(&m), "one part still outstanding");
+        acc2.write_row(0, &[3.0, 4.0]);
+        assert!(acc2.finish_part(&m));
+        assert_eq!(done2.try_take().unwrap().unwrap(), vec![3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(accs.pooled(), 0);
+    }
+
+    #[test]
+    fn acc_pool_declines_shared_candidates() {
+        let pool = SlabPool::new();
+        let accs = AccPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 1, 2, false));
+        let held = Arc::clone(&acc); // e.g. a partial-salvage ticket
+        accs.put(acc);
+        assert!(accs.get(&pool, 1, 2, false).is_none());
+        assert_eq!(accs.pooled(), 0, "shared candidate drops, never re-queues");
+        drop(held);
+    }
+
+    #[test]
+    fn reset_mints_a_fresh_completion_when_the_ticket_still_holds_it() {
+        let m = metrics();
+        let pool = SlabPool::new();
+        let accs = AccPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 1, 2, false));
+        acc.arm(1, Instant::now());
+        let done = acc.completion(); // an abandoned, never-redeemed ticket
+        acc.write_row(0, &[1.0, 2.0]);
+        assert!(acc.finish_part(&m));
+        accs.put(acc);
+        let acc2 = accs.get(&pool, 1, 2, false).expect("shell is exclusive");
+        let done2 = acc2.completion();
+        assert!(
+            !Arc::ptr_eq(&done, &done2),
+            "a still-held completion must not be recycled under its waiter"
+        );
+        assert_eq!(done.try_take().unwrap().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn finishing_job_sends_acc_back_over_the_shell_ring() {
+        let m = metrics();
+        let pool = SlabPool::new();
+        let acc = Arc::new(RequestAcc::new_slab(&pool, 1, 2, false));
+        acc.arm(1, Instant::now());
+        let (shell_tx, shell_rx) = ring::spsc::<Shells>(4);
+        let job = Job {
+            window: 0,
+            win_start_row: 0,
+            win_rows: 8,
+            local_rows: vec![0],
+            positions: vec![0],
+            remap: None,
+            acc: Arc::clone(&acc),
+            attempt: 0,
+            token: None,
+            hedge: false,
+        };
+        job.acc.write_row(0, &[1.0, 2.0]);
+        let done = job.acc.finish_part(&m);
+        drop(acc);
+        job.recycle_shells(Some(&shell_tx), done);
+        let sh = shell_rx.try_recv().expect("shells ride back");
+        assert!(sh.local_rows.is_empty() && sh.positions.is_empty());
+        let acc = sh.acc.expect("the finishing job returns its accumulator");
+        assert_eq!(Arc::strong_count(&acc), 1, "shell is exclusively pooled");
     }
 
     #[test]

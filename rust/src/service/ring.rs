@@ -530,6 +530,25 @@ impl Completion {
             thread::park_timeout(timeout);
         }
     }
+
+    /// Rewind an exclusively-owned cell to its pristine state so the
+    /// accumulator pool can reuse it for a fresh request.  The caller
+    /// proved exclusivity (`Arc::get_mut`), so no waiter can be parked and
+    /// no completer mid-publish: plain `get_mut` access, no atomics.  An
+    /// unredeemed pooled `Ok` buffer is recycled exactly as in `Drop`.
+    pub(crate) fn reset(&mut self) {
+        if let Some(pool) = &self.pool {
+            if *self.state.get_mut() == READY {
+                if let Some(Ok(buf)) = self.result.get_mut().take() {
+                    pool.put(buf);
+                }
+            }
+        }
+        *self.state.get_mut() = PENDING;
+        *self.claimed.get_mut() = false;
+        *self.result.get_mut() = None;
+        *self.waiter.get_mut() = None;
+    }
 }
 
 impl Drop for Completion {

@@ -17,34 +17,84 @@
 
 use std::sync::Arc;
 
-use crate::util::sync::{AtomicBool, AtomicU8, CellSlot, Mutex, Ordering};
+use crate::util::sync::{AtomicBool, AtomicU8, AtomicUsize, CellSlot, Mutex, Ordering};
 
 /// Pooled, capacity-retaining `Vec<f32>` slabs for request outputs.
 ///
-/// The pool itself is a mutexed free list, touched once per *request*
-/// (get on submit, put on recycle/failure) — never per sub-batch.
-#[derive(Debug, Default)]
+/// The free list is **striped**: several independent mutexed lists, with
+/// gets and puts spread round-robin so concurrent submitters and the
+/// dispatcher's recycle loop rarely contend on the same lock.  A get whose
+/// home stripe is empty *steals* — it scans the remaining stripes before
+/// giving up and allocating — so striping never costs a pooled slab, only
+/// a little lock locality.  Each stripe carries `1/n` of the global count
+/// and byte budgets, keeping the total bound unchanged.
+///
+/// Under `--features model` the default collapses to a single stripe so
+/// the model checker's state space stays where PR-7 tuned it; the
+/// steal path itself is modeled explicitly over a two-stripe pool
+/// (`verify::slab_pool_*`).
+#[derive(Debug)]
 pub(crate) struct SlabPool {
-    /// Free list plus its total retained capacity in floats (both bounds
-    /// checked on put).
-    bufs: Mutex<(Vec<Vec<f32>>, usize)>,
+    /// Striped free lists: slabs plus each stripe's retained capacity in
+    /// floats (both bounds checked on put).
+    stripes: Box<[Mutex<(Vec<Vec<f32>>, usize)>]>,
+    /// Round-robin cursor spreading traffic across stripes.
+    next: AtomicUsize,
+    /// Per-stripe count bound (global bound / stripes).
+    stripe_slabs: usize,
+    /// Per-stripe float bound (global bound / stripes).
+    stripe_floats: usize,
     /// Buffers minted from this pool track per-slot completion state even
     /// in release builds, enabling [`ScatterBuf::take_partial`].  Set when
     /// the backend serves partial results; costs one `AtomicU8` per row.
     claims: bool,
 }
 
-/// Free-list count bound: beyond this the put is dropped (the allocator
-/// takes the slab back).  Sized to comfortably cover the default
-/// admission budgets.
+/// Free-list count bound across all stripes: beyond this the put is
+/// dropped (the allocator takes the slab back).  Sized to comfortably
+/// cover the default admission budgets.
 const MAX_POOLED: usize = 256;
 
-/// Free-list *byte* bound (in f32 elements, 64 MiB): a burst of huge
-/// requests must not pin count × largest-request memory for the life of
-/// the backend.
+/// Free-list *byte* bound across all stripes (in f32 elements, 64 MiB): a
+/// burst of huge requests must not pin count × largest-request memory for
+/// the life of the backend.
 const MAX_POOLED_FLOATS: usize = 16 << 20;
 
+/// Default stripe count (normal builds).  Eight covers the contention the
+/// serve bench sees (submitters × dispatcher) without fragmenting the
+/// byte budget into uselessly small stripes.
+const DEFAULT_STRIPES: usize = 8;
+
+impl Default for SlabPool {
+    fn default() -> Self {
+        Self::build(Self::default_stripes(), false)
+    }
+}
+
 impl SlabPool {
+    /// One stripe under the model feature (bounded state space for the
+    /// PR-7 completion/scatter models), [`DEFAULT_STRIPES`] otherwise.
+    fn default_stripes() -> usize {
+        if cfg!(feature = "model") {
+            1
+        } else {
+            DEFAULT_STRIPES
+        }
+    }
+
+    fn build(stripes: usize, claims: bool) -> Self {
+        let stripes = stripes.max(1);
+        Self {
+            stripes: (0..stripes)
+                .map(|_| Mutex::new((Vec::new(), 0)))
+                .collect(),
+            next: AtomicUsize::new(0),
+            stripe_slabs: (MAX_POOLED / stripes).max(1),
+            stripe_floats: (MAX_POOLED_FLOATS / stripes).max(1),
+            claims,
+        }
+    }
+
     pub(crate) fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
@@ -52,49 +102,66 @@ impl SlabPool {
     /// A pool whose buffers carry per-slot claim state when `claims` is
     /// set (required for partial results; debug builds claim regardless).
     pub(crate) fn with_claims(claims: bool) -> Arc<Self> {
-        Arc::new(Self {
-            claims,
-            ..Self::default()
-        })
+        Arc::new(Self::build(Self::default_stripes(), claims))
+    }
+
+    /// A pool with an explicit stripe count — the concurrency models pin
+    /// the steal path over exactly two stripes, and the bounds tests pin
+    /// the budget math over one.
+    #[cfg(test)]
+    pub(crate) fn with_stripes(stripes: usize) -> Arc<Self> {
+        Arc::new(Self::build(stripes, false))
     }
 
     /// A buffer of exactly `len` elements.  Reuses a pooled slab's
-    /// capacity when one is available; a reused slab keeps its previous
-    /// request's prefix contents (shrinking truncates for free, growing
-    /// zero-fills only the delta beyond the old length).  Stale data is
-    /// unobservable because [`ScatterBuf`]'s contract is that the writers
-    /// cover every position before the buffer surfaces — the disjointness
-    /// property test pins exactly that.
+    /// capacity when one is available — from the home stripe, else stolen
+    /// from any other; a reused slab keeps its previous request's prefix
+    /// contents (shrinking truncates for free, growing zero-fills only the
+    /// delta beyond the old length).  Stale data is unobservable because
+    /// [`ScatterBuf`]'s contract is that the writers cover every position
+    /// before the buffer surfaces — the disjointness property test pins
+    /// exactly that.
     pub(crate) fn get(&self, len: usize) -> Vec<f32> {
-        let mut buf = {
-            let mut pool = self.bufs.lock().unwrap();
-            match pool.0.pop() {
-                Some(b) => {
-                    pool.1 -= b.capacity();
-                    b
-                }
-                None => Vec::new(),
+        let n = self.stripes.len();
+        // RELAXED: the cursor only spreads traffic; list contents are
+        // ordered by each stripe's mutex, not by this counter.
+        let home = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let mut buf = Vec::new();
+        for k in 0..n {
+            let mut stripe = self.stripes[(home + k) % n].lock().unwrap();
+            if let Some(b) = stripe.0.pop() {
+                stripe.1 -= b.capacity();
+                buf = b;
+                break;
             }
-        };
+        }
         buf.resize(len, 0.0);
         buf
     }
 
-    /// Return a buffer's capacity to the pool.
+    /// Return a buffer's capacity to the pool (round-robin stripe; a full
+    /// stripe drops the slab rather than overflowing into a sibling —
+    /// the budgets are per-stripe by construction).
     pub(crate) fn put(&self, buf: Vec<f32>) {
         if buf.capacity() == 0 {
             return;
         }
-        let mut pool = self.bufs.lock().unwrap();
-        if pool.0.len() < MAX_POOLED && pool.1 + buf.capacity() <= MAX_POOLED_FLOATS {
-            pool.1 += buf.capacity();
-            pool.0.push(buf);
+        let n = self.stripes.len();
+        // RELAXED: see `get` — distribution only.
+        let home = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let mut stripe = self.stripes[home].lock().unwrap();
+        if stripe.0.len() < self.stripe_slabs && stripe.1 + buf.capacity() <= self.stripe_floats {
+            stripe.1 += buf.capacity();
+            stripe.0.push(buf);
         }
     }
 
     #[cfg(test)]
     pub(crate) fn pooled(&self) -> usize {
-        self.bufs.lock().unwrap().0.len()
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap().0.len())
+            .sum()
     }
 }
 
@@ -306,7 +373,8 @@ mod tests {
 
     #[test]
     fn pool_bounds_retained_capacity_bytes() {
-        let pool = SlabPool::new();
+        // One stripe so the stripe budget *is* the global budget.
+        let pool = SlabPool::with_stripes(1);
         // with_capacity: reserves address space without touching pages.
         pool.put(Vec::with_capacity(MAX_POOLED_FLOATS));
         assert_eq!(pool.pooled(), 1);
@@ -316,6 +384,33 @@ mod tests {
         assert!(b.capacity() >= MAX_POOLED_FLOATS);
         pool.put(Vec::with_capacity(64));
         assert_eq!(pool.pooled(), 1, "budget freed by get: small put accepted");
+    }
+
+    #[test]
+    fn get_steals_from_sibling_stripes() {
+        let pool = SlabPool::with_stripes(4);
+        pool.put(Vec::with_capacity(128));
+        assert_eq!(pool.pooled(), 1);
+        // Wherever the round-robin cursor points, the lone pooled slab
+        // must be found — an empty home stripe steals, never allocates.
+        for _ in 0..8 {
+            let b = pool.get(16);
+            assert!(b.capacity() >= 128, "home-stripe miss must steal");
+            pool.put(b);
+        }
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn stripe_budgets_partition_the_global_bound() {
+        let pool = SlabPool::with_stripes(4);
+        // Per-stripe slab cap is MAX_POOLED / 4; pushing well past the
+        // global bound must saturate at it (puts rotate stripes evenly).
+        for _ in 0..MAX_POOLED * 2 {
+            pool.put(Vec::with_capacity(8));
+        }
+        assert!(pool.pooled() <= MAX_POOLED);
+        assert!(pool.pooled() >= MAX_POOLED / 2, "stripes should fill");
     }
 
     #[test]

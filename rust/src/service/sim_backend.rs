@@ -56,6 +56,7 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::placement::{
     Placement, PlacementCell, PlacementPolicy, Placer, StaticPlacer, WindowSignals,
 };
+use crate::coordinator::remap::{RemapConfig, RemapPlan, WindowRemap};
 use crate::coordinator::replan::{PlanSplitter, SplitterConfig};
 use crate::coordinator::state::{CoordinatorState, GroupHealth};
 use crate::coordinator::table::TableView;
@@ -65,8 +66,8 @@ use crate::sim::{
 };
 
 use super::backend::{
-    submit_ticketed, Backend, Batch, DataPath, Job, Pipeline, ReqHandle, Shells, Ticket,
-    WorkQueue, WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
+    submit_ticketed, AccPool, Backend, Batch, DataPath, Job, Pipeline, ReqHandle, Shells,
+    Ticket, WorkQueue, WorkSender, JOB_RING_CAP, SHELL_RING_CAP,
 };
 use super::resilience::{BreakerState, ResilienceConfig, ResilienceCtx};
 use super::ring::{self, EpochGate};
@@ -105,9 +106,17 @@ pub struct SimBackendConfig {
     /// re-*split* window boundaries when the re-deal cannot balance the
     /// observed skew.  Requires `adaptive` (ignored without it).
     pub resplit: Option<SplitterConfig>,
+    /// TLB-aware hot-row packing: `Some` enables the repack lever — routed
+    /// rows feed a decayed frequency sketch, and when the control plane
+    /// escalates past re-deal/re-split, hot rows are densified into
+    /// page-aligned window prefixes published as a live [`RemapPlan`].
+    /// Requires `adaptive` (the epoch machinery); ignored without it.
+    pub remap: Option<RemapConfig>,
     /// Escalation policy for the embedded [`ControlPlane`] (thresholds,
     /// patience, cooldown).  `max_lever` is clamped to what this backend
-    /// can actually do: `Redeal` without `resplit`, `Resplit` with it.
+    /// can actually do: `Redeal` without `resplit`, `Resplit` with it,
+    /// `Repack` when `remap` is enabled (the per-card ladder skips the
+    /// fleet-only `Migrate` rung by honest decline).
     pub control: ControlPlaneConfig,
     /// Wall-clock pacing of simulated device time: each group's job
     /// completions are delayed so wall ≥ `sim_ns * sim_timescale`
@@ -141,6 +150,7 @@ impl SimBackendConfig {
             calib_accesses_per_sm: 2_000,
             adaptive: None,
             resplit: None,
+            remap: None,
             control: ControlPlaneConfig::default(),
             sim_timescale: 0.0,
             legacy_path: false,
@@ -189,6 +199,10 @@ struct ControlCtx {
     map: TopologyMap,
     metrics: Arc<Metrics>,
     batcher: Arc<Batcher<ReqHandle>>,
+    /// Repack-lever tuning (None disables the lever entirely).
+    remap_cfg: Option<RemapConfig>,
+    /// Zero-copy gather source the repack lever builds packed slabs from.
+    view: TableView,
     /// The placer's signal floor (0 for static placers): epochs below it
     /// accumulate into the next one instead of being discarded.
     min_epoch_rows: u64,
@@ -227,6 +241,14 @@ impl ControlCtx {
     }
 
     fn epoch_inner(&self) -> Option<u64> {
+        // Age the hot-set signal once per epoch: the sketch must track the
+        // *current* skew, not everything since startup, or drift could
+        // never displace a stale hot set.
+        if self.remap_cfg.is_some() {
+            if let Some(sketch) = &self.metrics.row_freq {
+                sketch.decay();
+            }
+        }
         let (plan, current) = self.cell.load_planned();
         let w = plan.count();
         let signals = WindowSignals {
@@ -335,9 +357,107 @@ impl ControlCtx {
             }
         }
 
+        // Lever 3 (migrate) is fleet-wide — FleetService moves shards
+        // between cards; a per-card backend declines that rung honestly
+        // and the plane's streak escalates past it to the next epoch's
+        // permit.  Lever 4 (repack): copy learned hot rows into
+        // page-aligned packed prefixes — the only lever that moves row
+        // *data* within a card, so it sits last on the ladder.
+        if permitted >= Lever::Repack && self.remap_cfg.is_some() {
+            return self.plan_repack(&plan, permitted, imbalance);
+        }
+
         self.plane
             .record(permitted, None, imbalance, None, "permitted levers declined");
         None
+    }
+
+    /// The repack lever: read the decayed row-frequency sketch, group the
+    /// surviving hot rows by window, and pack every window whose hot set
+    /// carries at least `min_hot_share` of the *guaranteed* observed
+    /// traffic into a page-aligned prefix.  Windows whose live remap still
+    /// covers the learned hot set (`min_overlap_to_hold`) carry it over
+    /// unchanged — hysteresis against re-copying a stable hot set.
+    fn plan_repack(&self, plan: &WindowPlan, permitted: Lever, imbalance: f64) -> Option<u64> {
+        // PANIC: guarded by the remap_cfg.is_some() gate at the call site.
+        let cfg = self.remap_cfg.as_ref().expect("repack lever needs a config");
+        let sketch = self.metrics.row_freq.as_ref()?;
+        let observed = sketch.observed();
+        if observed == 0 {
+            self.plane
+                .record(permitted, None, imbalance, None, "repack: no routed-row signal yet");
+            return None;
+        }
+        // Sketch rows are global; bucket them by owning window as local
+        // ids, keeping the sketch's hottest-first order per window.
+        let w = plan.count();
+        let mut cands: Vec<Vec<u32>> = vec![Vec::new(); w];
+        let mut guaranteed: Vec<u64> = vec![0; w];
+        for (row, count) in sketch.top() {
+            if row >= plan.total_rows {
+                continue; // stale entry from before a table change
+            }
+            let win = plan.window_of(row);
+            cands[win.id].push((row - win.start_row) as u32);
+            guaranteed[win.id] += count;
+        }
+
+        let live = self.cell.remap();
+        let mut next = RemapPlan::with_windows(w);
+        let mut packed = 0usize;
+        let mut carried = 0usize;
+        let mut rows_packed = 0u64;
+        for win in plan.windows() {
+            let wid = win.id;
+            let share = guaranteed[wid] as f64 / observed as f64;
+            // Hold: the live packing still covers (almost all of) the
+            // learned hot set — keep the existing slab, no copy.
+            if let Some(cur) = live.window_remap(wid) {
+                if cur.matches(win) && !cands[wid].is_empty() {
+                    let cur_hot: std::collections::HashSet<u32> =
+                        cur.hot_logical_rows().into_iter().collect();
+                    let overlap = cands[wid].iter().filter(|c| cur_hot.contains(c)).count();
+                    if overlap as f64 / cands[wid].len() as f64 >= cfg.min_overlap_to_hold {
+                        next.set_window(wid, Some(Arc::clone(cur)));
+                        carried += 1;
+                        continue;
+                    }
+                }
+            }
+            if share < cfg.min_hot_share || cands[wid].is_empty() {
+                continue; // identity: traffic here is too flat to pack
+            }
+            if let Some(remap) = WindowRemap::pack(&self.view, win, &cands[wid], share, cfg) {
+                rows_packed += remap.hot_rows() as u64;
+                packed += 1;
+                next.set_window(wid, Some(remap));
+            }
+        }
+        if packed == 0 {
+            let why = if carried > 0 {
+                "repack: live packing still covers the hot set"
+            } else {
+                "repack: no window clears the hot-share floor"
+            };
+            self.plane.record(permitted, None, imbalance, None, why);
+            return None;
+        }
+        let generation = self.cell.store_remap(next);
+        self.metrics.repack_epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .rows_repacked
+            .fetch_add(rows_packed, Ordering::Relaxed);
+        self.metrics
+            .generations_published
+            .fetch_add(1, Ordering::Relaxed);
+        self.plane.record(
+            permitted,
+            Some(Lever::Repack),
+            imbalance,
+            Some(generation),
+            format!("repacked {packed} window(s): {rows_packed} hot rows into page-aligned prefixes"),
+        );
+        Some(generation)
     }
 
     /// The health lever: re-deal the current windows over the surviving
@@ -571,7 +691,14 @@ impl SimBackend {
         }
         // The window-rows registry is sized for the *largest* plan a
         // re-split can publish: one window per group.
-        let metrics = Arc::new(Metrics::for_windows(map.groups.len().max(plan.count())));
+        let metrics = Metrics::for_windows(map.groups.len().max(plan.count()));
+        // The repack lever learns its hot set from a space-bounded
+        // row-frequency sketch fed by the dispatcher; without `--remap`
+        // the sketch (and its hot-path sampling cost) does not exist.
+        let metrics = Arc::new(match &cfg.remap {
+            Some(rc) => metrics.with_row_sketch(rc.sketch_rows),
+            None => metrics,
+        });
         let row_bytes = plan.row_bytes;
         let stats: Arc<Vec<GroupServeStats>> =
             Arc::new((0..map.groups.len()).map(|_| Default::default()).collect());
@@ -588,7 +715,14 @@ impl SimBackend {
         } else {
             // Partial delivery needs the per-slot claim bitmap tracked in
             // release builds too.
-            DataPath::Slab(SlabPool::with_claims(cfg.resilience.partials))
+            DataPath::Slab {
+                pool: SlabPool::with_claims(cfg.resilience.partials),
+                accs: AccPool::new(),
+            }
+        };
+        let acc_pool = match &path {
+            DataPath::Slab { accs, .. } => Some(Arc::clone(accs)),
+            DataPath::Legacy => None,
         };
         // The resilience runtime exists only when a recovery feature is on;
         // `None` keeps workers and dispatcher on the exact pre-existing
@@ -659,13 +793,18 @@ impl SimBackend {
             view.d(),
             senders,
             shell_returns,
+            acc_pool,
             workers,
             resilience.clone(),
         )?;
 
-        // The control plane may only pull levers this backend has.
+        // The control plane may only pull levers this backend has.  Repack
+        // sits above re-split on the ladder, so enabling it implies the
+        // adaptive signal plumbing is on too.
         let mut plane_cfg = cfg.control.clone();
-        plane_cfg.max_lever = if cfg.adaptive.is_some() && cfg.resplit.is_some() {
+        plane_cfg.max_lever = if cfg.adaptive.is_some() && cfg.remap.is_some() {
+            Lever::Repack
+        } else if cfg.adaptive.is_some() && cfg.resplit.is_some() {
             Lever::Resplit
         } else {
             Lever::Redeal
@@ -682,6 +821,8 @@ impl SimBackend {
             map: map.clone(),
             metrics: Arc::clone(&metrics),
             batcher: Arc::clone(&pipeline.batcher),
+            remap_cfg: cfg.remap.clone(),
+            view: view.clone(),
             min_epoch_rows: cfg.adaptive.as_ref().map_or(0, |a| a.min_epoch_rows),
             gate: EpochGate::new(),
             // Sized like the window-rows registry (maximum plan a re-split
@@ -775,6 +916,13 @@ impl SimBackend {
     /// The current live placement (generation-stamped; swaps bump it).
     pub fn placement(&self) -> Arc<Placement> {
         self.placement.load()
+    }
+
+    /// The live hot-row remap plan (identity until the repack lever
+    /// publishes a packing).  Harnesses use this to audit invariants
+    /// mid-serving via [`RemapPlan::check`].
+    pub fn remap_plan(&self) -> Arc<RemapPlan> {
+        self.placement.remap()
     }
 
     /// Close one control-plane epoch by hand: observe the epoch's
@@ -922,7 +1070,7 @@ impl Backend for SimBackend {
     fn recycle(&self, buf: Vec<f32>) {
         // The legacy oracle never draws from the pool — pooling there
         // would just pin dead memory.
-        if let DataPath::Slab(pool) = &self.path {
+        if let DataPath::Slab { pool, .. } = &self.path {
             pool.put(buf);
         }
     }
@@ -1000,7 +1148,18 @@ impl SimWorker {
         }
         // A stall multiplies the simulated device cost; with pacing on it
         // becomes real wall-clock straggling (what hedging races against).
-        let rate = self.ns_per_row(job.win_start_row, job.win_rows) * fault.stall_mult;
+        // A pinned remap prices the packed layout: hot hits land in the
+        // page-aligned prefix (TLB-dense), misses pay the full window.
+        let base = match &job.remap {
+            Some(r) => self.remapped_ns_per_row(
+                r.hot_rows() as u64,
+                r.hot_share(),
+                job.win_start_row,
+                job.win_rows,
+            ),
+            None => self.ns_per_row(job.win_start_row, job.win_rows),
+        };
+        let rate = base * fault.stall_mult;
         let n = job.local_rows.len();
         if job.acc.is_legacy() {
             // Oracle path (--legacy-path): gather into a fresh Vec, then a
@@ -1024,30 +1183,45 @@ impl SimWorker {
                 rows.extend_from_slice(self.view.row(job.win_start_row + local as u64));
             }
             self.account(n, rate);
-            if token.claim() {
+            let done = if token.claim() {
                 job.acc.scatter(&job.positions, &rows, d);
                 if job.hedge {
                     self.metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
                 }
                 self.note_success();
-                job.acc.finish_part(&self.metrics);
-            }
-            // The loser: its sibling already finished the part.
-            job.recycle_shells(self.shells.as_ref());
+                job.acc.finish_part(&self.metrics)
+            } else {
+                // The loser: its sibling already finished the part.
+                false
+            };
+            job.recycle_shells(self.shells.as_ref(), done);
             return;
         } else {
-            // Single copy: each row goes straight from the zero-copy view
+            // Single copy: each row goes straight from the zero-copy source
             // to its final position in the request's slab buffer (the
             // positions of distinct sub-batches are disjoint, so no lock).
-            for (k, &local) in job.local_rows.iter().enumerate() {
-                job.acc
-                    .write_row(job.positions[k], self.view.row(job.win_start_row + local as u64));
+            // Under a pinned remap the source is the packed slab — same
+            // bytes per logical row, permuted physical order.
+            match &job.remap {
+                Some(r) => {
+                    for (k, &local) in job.local_rows.iter().enumerate() {
+                        job.acc.write_row(job.positions[k], r.row(local));
+                    }
+                }
+                None => {
+                    for (k, &local) in job.local_rows.iter().enumerate() {
+                        job.acc.write_row(
+                            job.positions[k],
+                            self.view.row(job.win_start_row + local as u64),
+                        );
+                    }
+                }
             }
             self.account(n, rate);
         }
         self.note_success();
-        job.acc.finish_part(&self.metrics);
-        job.recycle_shells(self.shells.as_ref());
+        let done = job.acc.finish_part(&self.metrics);
+        job.recycle_shells(self.shells.as_ref(), done);
     }
 
     /// Injected-failure path: nothing was written.  A hedged copy defers
@@ -1060,7 +1234,7 @@ impl SimWorker {
                 if !tok.copy_failed() {
                     // A sibling copy is in flight (or already won); the
                     // part is its responsibility now.
-                    job.recycle_shells(self.shells.as_ref());
+                    job.recycle_shells(self.shells.as_ref(), false);
                     return;
                 }
             }
@@ -1072,14 +1246,14 @@ impl SimWorker {
                     .collect();
                 if res.send_retry(rows, job.positions.clone(), Arc::clone(&job.acc), job.attempt)
                 {
-                    job.recycle_shells(self.shells.as_ref());
+                    job.recycle_shells(self.shells.as_ref(), false);
                     return;
                 }
             }
         }
         let why = format!("injected fault: group {} failed", self.group);
-        job.acc.fail_part(&self.metrics, &why);
-        job.recycle_shells(self.shells.as_ref());
+        let done = job.acc.fail_part(&self.metrics, &why);
+        job.recycle_shells(self.shells.as_ref(), done);
     }
 
     #[inline]
@@ -1169,5 +1343,21 @@ impl SimWorker {
         self.ns_per_row.insert((start, rows), rate);
         self.last_rate = Some((start, rows, rate));
         rate
+    }
+
+    /// Packed-layout cost model: a share `s` of accesses hits the hot
+    /// prefix (priced as a window of `hot_rows` rows — denser pages, fewer
+    /// TLB entries, so the DES machine quotes a faster rate when the full
+    /// window over-reaches the group's TLB), the rest still pays the full
+    /// window's scattered rate.  Both legs memoize through `ns_per_row`:
+    /// `(start, hot_rows)` and `(start, rows)` are distinct cache keys.
+    fn remapped_ns_per_row(&mut self, hot_rows: u64, hot_share: f64, start: u64, rows: u64) -> f64 {
+        let full = self.ns_per_row(start, rows);
+        if hot_rows == 0 || hot_rows >= rows {
+            return full;
+        }
+        let hot = self.ns_per_row(start, hot_rows);
+        let s = hot_share.clamp(0.0, 1.0);
+        s * hot + (1.0 - s) * full
     }
 }

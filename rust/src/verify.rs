@@ -10,7 +10,7 @@
 //! bounded space, not a lucky run.  `model_random` supplements the
 //! exhaustive passes with seeded unbounded-preemption schedules for depth.
 //!
-//! The five modeled protocols (EXPERIMENTS.md §Verify):
+//! The six modeled protocols (EXPERIMENTS.md §Verify):
 //!
 //! 1. SPSC ring send/recv handshake, including the Dekker sleeping-flag
 //!    park/unpark with its `PARK_BACKSTOP` removed (the model's `park`
@@ -25,6 +25,10 @@
 //!    data race can execute).
 //! 5. `GlobalAdmission`'s lock-free CAS admission and its parked-waiter
 //!    wakeup (whose `wait_timeout` backstop is likewise disabled).
+//! 6. The striped `SlabPool`'s steal path: concurrent gets over a
+//!    two-stripe pool hand the lone pooled slab to exactly one caller
+//!    (conservation — never duplicated, never stranded), and a get racing
+//!    a put never loses the slab, in every schedule.
 //!
 //! Plus the ordering regression behind the PR's audit:
 //! [`tests::dekker_handshake_requires_seqcst`] re-derives *why* the ring's
@@ -423,6 +427,56 @@ mod tests {
             drop(g);
             t.join().unwrap();
             assert_eq!(ga.used_total(), 0, "slots leaked");
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // T6: the striped SlabPool's steal path (PR 8).
+    // -----------------------------------------------------------------
+
+    /// Two concurrent `get`s race for one pooled slab over a two-stripe
+    /// pool.  Whatever stripe the round-robin cursor lands on, exactly
+    /// one caller receives the retained capacity (its home hit or a steal
+    /// from the sibling stripe) and the other allocates fresh — the slab
+    /// is never handed out twice and never stranded.  The exhaustive pass
+    /// is also the deadlock-freedom proof for the steal scan's
+    /// stripe-at-a-time locking.
+    #[test]
+    fn slab_pool_steal_hands_the_slab_to_exactly_one_getter() {
+        assert_exhaustive_clean("SlabPool steal conservation", || {
+            let pool = SlabPool::with_stripes(2);
+            pool.put(Vec::with_capacity(128));
+            let racer = {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || pool.get(16).capacity())
+            };
+            let mine = pool.get(16).capacity();
+            let theirs = racer.join().unwrap();
+            let winners =
+                usize::from(mine >= 128) + usize::from(theirs >= 128);
+            assert_eq!(winners, 1, "pooled slab duplicated or stranded");
+            assert_eq!(pool.pooled(), 0, "both stripes must be drained");
+        });
+    }
+
+    /// A `get` racing a `put`: in every interleaving the slab ends up in
+    /// exactly one place — stolen by the getter, or retained in a stripe
+    /// for the next caller.  Never dropped, never double-pooled.
+    #[test]
+    fn slab_pool_concurrent_put_get_never_loses_the_slab() {
+        assert_exhaustive_clean("SlabPool put/get conservation", || {
+            let pool = SlabPool::with_stripes(2);
+            let putter = {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || pool.put(Vec::with_capacity(256)))
+            };
+            let got = pool.get(16).capacity() >= 256;
+            putter.join().unwrap();
+            assert_eq!(
+                usize::from(got) + pool.pooled(),
+                1,
+                "slab lost or duplicated across the put/get race"
+            );
         });
     }
 
