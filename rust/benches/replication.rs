@@ -1,0 +1,345 @@
+//! Bench: hot-window read replication (the replicate lever, the fifth
+//! rung of the fleet ladder) against migration-only repartitioning.
+//!
+//! The fleet is three equal simulated cards; under zipf(1.1) one shard
+//! owns nearly every access, and no boundary migration can shed it — the
+//! hottest rows sit at the *start* of shard 0, and moving the boundary
+//! only sheds its cold tail.  Replication puts zero-copy read replicas of
+//! the hot shard on the other cards and routes over them with
+//! power-of-two-choices on live queue depth, so every card's bandwidth
+//! serves the hotspot.  Arms:
+//!
+//! * **migration-only** — the four-rung ladder (`max_lever: Migrate`).
+//! * **replicated** — the same fleet with [`ReplicateConfig`] armed
+//!   (`capacity_fraction: 0.0`: manual epochs measure wall-clock demand
+//!   against *simulated* bandwidth, which no open loop can meet).
+//!
+//! Scored on fleet makespan GB/s (units run in parallel; the slowest
+//! bounds the fleet) with the per-device aggregate reported alongside.
+//! After the zipf measurement the replicated arm's load turns uniform and
+//! the bench audits the subside path: every replica must retire (the
+//! exit-share check), witnessed in the decision trace.
+//!
+//! Emits `BENCH_replication.json` (crate dir under `cargo bench`).  Flags
+//! (after `--`): `--smoke` shrinks the sweep for CI and skips the
+//! assertions (the full run asserts replicated >= 1.4x migration-only
+//! under zipf and drift, parity within 5% under uniform, and zero live
+//! replicas after the subside).
+
+use std::sync::Arc;
+
+use a100win::coordinator::{
+    AdaptiveConfig, BatcherConfig, CardSpec, ControlPlaneConfig, Lever, ReplicateConfig, Table,
+};
+use a100win::probe::TopologyMap;
+use a100win::service::{FleetConfig, FleetService, RebalanceConfig, SimTiming};
+use a100win::util::json::Json;
+use a100win::workload::{synth::Distribution, RequestGen, WorkloadSpec};
+
+const D: usize = 32;
+const ROW_BYTES: u64 = (D * 4) as u64; // 128 B, the paper's cache line
+const CARDS: usize = 3;
+const ROWS: u64 = 16_384;
+const ROWS_PER_REQUEST: usize = 512;
+
+fn map(card: usize) -> TopologyMap {
+    TopologyMap {
+        groups: vec![vec![0, 1], vec![2, 3]],
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![100.0, 100.0],
+        independent: true,
+        card_id: format!("replication-card{card}"),
+    }
+}
+
+/// Every card can host a whole-table replica on top of its own shard.
+fn card(i: usize) -> CardSpec {
+    CardSpec {
+        map: map(i),
+        memory_bytes: ROWS * ROW_BYTES,
+    }
+}
+
+fn quick_batcher() -> BatcherConfig {
+    BatcherConfig {
+        max_batch_rows: 8_192,
+        max_wait: std::time::Duration::from_micros(200),
+        max_pending: 4_096,
+    }
+}
+
+fn build_fleet(table: &Table, replicate: bool) -> FleetService {
+    FleetService::build_sim_with(
+        (0..CARDS).map(|i| (card(i), SimTiming::Probed)).collect(),
+        table,
+        FleetConfig {
+            batcher: quick_batcher(),
+            seed: 7,
+            adaptive: Some(AdaptiveConfig::default()),
+            rebalance: RebalanceConfig {
+                min_imbalance: 0.15,
+                min_epoch_rows: 512,
+                min_move_rows: 16,
+            },
+            // Eager escalation for manual epochs: the ladder walks
+            // redeal -> resplit -> migrate -> repack -> replicate in a
+            // handful of failing epochs instead of minutes of patience.
+            control: ControlPlaneConfig {
+                min_imbalance: 0.10,
+                patience: 1,
+                cooldown: 0,
+                max_lever: Lever::Migrate, // raised to Replicate when armed
+                trace_len: 512,
+            },
+            replicate: replicate.then(|| ReplicateConfig {
+                capacity_fraction: 0.0,
+                ..ReplicateConfig::default()
+            }),
+            ..FleetConfig::default()
+        },
+    )
+    .expect("start sim fleet")
+}
+
+fn spec(dist: Distribution) -> WorkloadSpec {
+    WorkloadSpec {
+        total_rows: ROWS,
+        distribution: dist,
+        request_rows: (ROWS_PER_REQUEST, ROWS_PER_REQUEST),
+        seed: 99,
+    }
+}
+
+fn verify(out: &[f32], rows: &[u64], table: &Table) {
+    assert_eq!(out.len(), rows.len() * D, "short response");
+    for (k, &row) in rows.iter().enumerate() {
+        for j in 0..D {
+            assert_eq!(out[k * D + j], table.expected(row, j), "row {row} col {j}");
+        }
+    }
+}
+
+struct ArmResult {
+    makespan_gbps: f64,
+    aggregate_gbps: f64,
+    replicas_created: u64,
+    replicas_live: usize,
+}
+
+/// Drive `warm` convergence requests (control epoch after each, so the
+/// ladder can escalate and publish), reset the simulated accounting, then
+/// drive `measured` requests and score the measured phase.
+fn run_arm(
+    fleet: &FleetService,
+    table: &Table,
+    gen: &mut RequestGen,
+    warm: usize,
+    measured: usize,
+) -> ArmResult {
+    for _ in 0..warm {
+        let rows = Arc::new(gen.next_request());
+        let out = fleet.lookup(Arc::clone(&rows)).expect("lookup");
+        fleet.recycle(out);
+        fleet.control_epoch();
+    }
+    fleet.reset_sim_stats();
+    for i in 0..measured {
+        let rows = Arc::new(gen.next_request());
+        let out = fleet.lookup(Arc::clone(&rows)).expect("lookup");
+        if i % 64 == 0 {
+            verify(&out, &rows, table);
+        }
+        fleet.recycle(out);
+        // Keep epochs ticking so drift arms can re-replicate (and the
+        // subsided ones de-replicate) mid-measurement.
+        fleet.control_epoch();
+        fleet
+            .replica_set()
+            .check(&fleet.plan(), CARDS)
+            .expect("published replica set violates invariants");
+    }
+    let m = fleet.fleet_metrics();
+    assert_eq!(
+        m.generations_published,
+        m.redeal_epochs + m.resplit_epochs + m.migrate_epochs + m.repack_epochs
+            + m.replicate_epochs,
+        "fleet repartition counters inconsistent"
+    );
+    ArmResult {
+        makespan_gbps: fleet.makespan_sim_gbps(),
+        aggregate_gbps: fleet.aggregate_sim_gbps(),
+        replicas_created: m.replicas_created,
+        replicas_live: fleet.replica_set().count(),
+    }
+}
+
+/// Turn the load uniform and audit the subside path: the hot shard's
+/// combined share collapses under the exit floor and every replica
+/// retires.  Returns (epochs until empty, drop witnessed in the trace).
+fn run_subside(fleet: &FleetService, budget: usize) -> (usize, bool) {
+    let mut gen = RequestGen::new(WorkloadSpec {
+        seed: 4242,
+        ..spec(Distribution::Uniform)
+    });
+    let mut epochs = budget;
+    for i in 0..budget {
+        let rows = Arc::new(gen.next_request());
+        let out = fleet.lookup(Arc::clone(&rows)).expect("lookup");
+        fleet.recycle(out);
+        fleet.control_epoch();
+        if fleet.replica_set().is_empty() {
+            epochs = i + 1;
+            break;
+        }
+    }
+    let dropped = fleet
+        .control_decisions()
+        .iter()
+        .any(|d| d.acted == Some(Lever::Replicate) && d.why.contains("dropped"));
+    (epochs, dropped)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+
+    let table = Table::synthetic(ROWS, D);
+    let (warm, measured) = if smoke { (40, 40) } else { (120, 200) };
+    println!(
+        "# Replication ({}, d={D}, {ROWS} rows, {CARDS} cards)",
+        if smoke { "smoke" } else { "full" },
+    );
+
+    let arms: &[(&str, Distribution)] = &[
+        ("zipf1.1", Distribution::Zipf { theta: 1.1 }),
+        (
+            "drift-zipf1.1",
+            Distribution::Drift {
+                inner: Box::new(Distribution::Zipf { theta: 1.1 }),
+                period: (warm + measured) as u64 / 3,
+            },
+        ),
+        ("uniform", Distribution::Uniform),
+    ];
+
+    println!(
+        "{:>14} {:>11} {:>13} {:>13} {:>9} {:>8}",
+        "workload", "ladder", "makespan_gbps", "device_gbps", "replicas", "ratio"
+    );
+    let mut rows_out = Vec::new();
+    let mut subside = None;
+    for (name, dist) in arms {
+        let mut arm_of: Vec<ArmResult> = Vec::new();
+        for replicate in [false, true] {
+            let fleet = build_fleet(&table, replicate);
+            let mut gen = RequestGen::new(spec(dist.clone()));
+            let r = run_arm(&fleet, &table, &mut gen, warm, measured);
+            if !replicate {
+                assert_eq!(r.replicas_created, 0, "unarmed fleet must never replicate");
+            }
+            println!(
+                "{:>14} {:>11} {:>13.2} {:>13.2} {:>9} {:>8}",
+                name,
+                if replicate { "replicated" } else { "migration" },
+                r.makespan_gbps,
+                r.aggregate_gbps,
+                r.replicas_created,
+                "-"
+            );
+            // The subside audit rides the replicated zipf arm: flat load
+            // must retire every replica (decision-trace witnessed).
+            if replicate && *name == "zipf1.1" {
+                subside = Some(run_subside(&fleet, 80));
+            }
+            fleet.shutdown();
+            arm_of.push(r);
+        }
+        let ratio = arm_of[1].makespan_gbps / arm_of[0].makespan_gbps.max(1e-12);
+        println!(
+            "{:>14} {:>11} {:>13} {:>13} {:>9} {:>8.2}",
+            name, "ratio", "-", "-", "-", ratio
+        );
+        rows_out.push((*name, arm_of.remove(0), arm_of.remove(0), ratio));
+    }
+    let (subside_epochs, subside_witnessed) = subside.expect("zipf arm always runs");
+    println!(
+        "# subside: replicas empty after {subside_epochs} uniform epochs \
+         (drop in decision trace: {subside_witnessed})"
+    );
+
+    // --- acceptance (full mode only; smoke just emits the numbers) --------
+    if !smoke {
+        for skew in ["zipf1.1", "drift-zipf1.1"] {
+            let r = rows_out.iter().find(|r| r.0 == skew).unwrap();
+            assert!(
+                r.2.replicas_created >= 1,
+                "{skew}: replicate lever never fired — the ratio would be vacuous"
+            );
+            assert!(
+                r.3 >= 1.4,
+                "{skew}: replicated {:.2} GB/s not >= 1.4x migration-only {:.2} GB/s",
+                r.2.makespan_gbps,
+                r.1.makespan_gbps
+            );
+        }
+        let uni = rows_out.iter().find(|r| r.0 == "uniform").unwrap();
+        assert_eq!(
+            uni.2.replicas_created, 0,
+            "uniform load must never clear the hot-share gate"
+        );
+        assert!(
+            (uni.3 - 1.0).abs() <= 0.05,
+            "uniform parity broken: replicated {:.2} vs migration-only {:.2} GB/s",
+            uni.2.makespan_gbps,
+            uni.1.makespan_gbps
+        );
+        assert!(
+            subside_epochs < 80 && subside_witnessed,
+            "subsided load left replicas standing (empty after {subside_epochs} epochs, \
+             trace witnessed: {subside_witnessed})"
+        );
+    }
+
+    let json = Json::obj(vec![
+        ("workload", Json::str("replication")),
+        ("smoke", Json::num(if smoke { 1u32 } else { 0u32 })),
+        ("d", Json::num(D as u32)),
+        ("rows", Json::num(ROWS as u32)),
+        ("cards", Json::num(CARDS as u32)),
+        (
+            "arms",
+            Json::arr(
+                rows_out
+                    .iter()
+                    .map(|(name, mig, rep, ratio)| {
+                        Json::obj(vec![
+                            ("skew", Json::str(name)),
+                            ("migration_makespan_gbps", Json::num(mig.makespan_gbps)),
+                            ("replicated_makespan_gbps", Json::num(rep.makespan_gbps)),
+                            ("migration_device_gbps", Json::num(mig.aggregate_gbps)),
+                            ("replicated_device_gbps", Json::num(rep.aggregate_gbps)),
+                            ("replicas_created", Json::num(rep.replicas_created as u32)),
+                            ("replicas_live_end", Json::num(rep.replicas_live as u32)),
+                            ("ratio", Json::num(*ratio)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "subside",
+            Json::obj(vec![
+                ("epochs_to_empty", Json::num(subside_epochs as u32)),
+                (
+                    "trace_witnessed",
+                    Json::num(if subside_witnessed { 1u32 } else { 0u32 }),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_replication.json";
+    match std::fs::write(path, json.to_string_pretty()) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -1,4 +1,4 @@
-//! The repartitioning control plane: one escalation policy over the four
+//! The repartitioning control plane: one escalation policy over the five
 //! rebalancing levers, cheapest data movement first —
 //!
 //! ```text
@@ -6,11 +6,16 @@
 //!     └─ not enough? → re-split window boundaries   (PlanSplitter::replan)
 //!           └─ not enough? → migrate rows across cards (FleetRebalancer)
 //!                 └─ not enough? → repack hot rows in-window (RowRemap)
+//!                       └─ not enough? → replicate the hot shard (ReplicaSet)
 //! ```
 //!
-//! Repack sits last because it is the only lever that *copies row data*
-//! (into a packed page-aligned slab) rather than re-pointing zero-copy
-//! views — the routing levers must have had their chance first.
+//! Repack is the only lever that *copies row data* (into a packed
+//! page-aligned slab) rather than re-pointing zero-copy views — the routing
+//! levers must have had their chance first.  Replicate sits above even
+//! that: it *spends another card's capacity* (a zero-copy read replica of
+//! the hot shard, routed by power-of-two-choices over queue depth), the one
+//! lever left when a single window is hotter than one card's bandwidth and
+//! no amount of re-layout on the owning card can help.
 //!
 //! [`ControlPlane`] owns the *policy* (when is each lever permitted), not
 //! the levers themselves: a per-card epoch loop
@@ -43,6 +48,10 @@ pub enum Lever {
     /// Repack a window's hot rows into a page-aligned prefix (the only
     /// lever that copies data; see `coordinator::remap`).
     Repack,
+    /// Give a saturated shard zero-copy read replicas on additional cards
+    /// (fleet scope only; see `coordinator::replicate`).  The most
+    /// expensive lever: it spends another card's bandwidth.
+    Replicate,
 }
 
 impl std::fmt::Display for Lever {
@@ -53,6 +62,7 @@ impl std::fmt::Display for Lever {
             Lever::Resplit => "resplit",
             Lever::Migrate => "migrate",
             Lever::Repack => "repack",
+            Lever::Replicate => "replicate",
         })
     }
 }
@@ -71,8 +81,9 @@ pub struct ControlPlaneConfig {
     pub cooldown: u32,
     /// The strongest lever this scope may use (`Resplit` for one card,
     /// `Migrate` for a fleet, `Repack` when the card also owns a hot-row
-    /// remap layer — a per-card scope without migration simply declines
-    /// the `Migrate` rung and escalates past it on the next epoch).
+    /// remap layer, `Replicate` for a fleet armed with read replication —
+    /// a per-card scope without migration simply declines the `Migrate`
+    /// rung and escalates past it on the next epoch).
     pub max_lever: Lever,
     /// Decisions retained in the audit trace.
     pub trace_len: usize,
@@ -161,7 +172,8 @@ impl ControlPlane {
             0 => Lever::Redeal,
             1 => Lever::Resplit,
             2 => Lever::Migrate,
-            _ => Lever::Repack,
+            3 => Lever::Repack,
+            _ => Lever::Replicate,
         };
         lever.min(self.cfg.max_lever)
     }
@@ -358,6 +370,33 @@ mod tests {
         assert_eq!(cp.permit(0.4), Lever::Hold);
         assert_eq!(cp.permit(0.4), Lever::Repack);
         // A healthy epoch resets all the way down.
+        assert_eq!(cp.permit(0.0), Lever::Hold);
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+    }
+
+    #[test]
+    fn replicate_is_the_fifth_rung() {
+        let cp = plane(Lever::Replicate);
+        // Four declining rungs, then the ladder tops out at replication.
+        assert_eq!(cp.permit(0.4), Lever::Redeal);
+        cp.record(Lever::Redeal, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Resplit);
+        cp.record(Lever::Resplit, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Migrate);
+        cp.record(Lever::Migrate, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Repack);
+        cp.record(Lever::Repack, None, 0.4, None, "declined");
+        assert_eq!(cp.permit(0.4), Lever::Replicate);
+        cp.record(
+            Lever::Replicate,
+            Some(Lever::Replicate),
+            0.4,
+            Some(1),
+            "replicated",
+        );
+        // Cooldown, then the ladder stays at the top until healthy.
+        assert_eq!(cp.permit(0.4), Lever::Hold);
+        assert_eq!(cp.permit(0.4), Lever::Replicate);
         assert_eq!(cp.permit(0.0), Lever::Hold);
         assert_eq!(cp.permit(0.4), Lever::Redeal);
     }

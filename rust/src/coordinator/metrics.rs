@@ -291,6 +291,14 @@ pub struct Metrics {
     /// Rows copied into packed hot prefixes across all repacks (unlike
     /// migration this lever *does* move data — exactly these rows, once).
     pub rows_repacked: AtomicU64,
+    /// Control-plane epochs that changed the replica set — created *or*
+    /// dropped replicas (the fifth lever; fleet registries only).
+    pub replicate_epochs: AtomicU64,
+    /// Read replicas brought up across all replicate epochs (each is a
+    /// zero-copy `TableView` slice on an extra card, never a data copy).
+    pub replicas_created: AtomicU64,
+    /// Read replicas retired after load subsided (de-replication).
+    pub replicas_dropped: AtomicU64,
     /// Plan/placement generations published by the control plane (every
     /// redeal, resplit, or migration bumps exactly one generation).
     pub generations_published: AtomicU64,
@@ -379,6 +387,9 @@ impl Metrics {
             rows_migrated: self.rows_migrated.load(Ordering::Relaxed),
             repack_epochs: self.repack_epochs.load(Ordering::Relaxed),
             rows_repacked: self.rows_repacked.load(Ordering::Relaxed),
+            replicate_epochs: self.replicate_epochs.load(Ordering::Relaxed),
+            replicas_created: self.replicas_created.load(Ordering::Relaxed),
+            replicas_dropped: self.replicas_dropped.load(Ordering::Relaxed),
             generations_published: self.generations_published.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
             hedges: self.hedges.load(Ordering::Relaxed),
@@ -416,6 +427,9 @@ pub struct MetricsSnapshot {
     pub rows_migrated: u64,
     pub repack_epochs: u64,
     pub rows_repacked: u64,
+    pub replicate_epochs: u64,
+    pub replicas_created: u64,
+    pub replicas_dropped: u64,
     pub generations_published: u64,
     pub retries: u64,
     pub hedges: u64,
@@ -435,8 +449,8 @@ impl MetricsSnapshot {
         format!(
             "requests={} rows={} batches={} padded={} errors={} rejected={} \
              shed={} shed_global={} expired={} throttled={} \
-             repartition(redeal/resplit/migrate/repack)={}/{}/{}/{} gens={} \
-             rows_migrated={} rows_repacked={} \
+             repartition(redeal/resplit/migrate/repack/replicate)={}/{}/{}/{}/{} gens={} \
+             rows_migrated={} rows_repacked={} replicas(up/down)={}/{} \
              resilience(retry/hedge/hedgewin/partial)={}/{}/{}/{} \
              breaker(open/half/close)={}/{}/{} \
              latency(mean/p50/p99/max µs)={:.0}/{}/{}/{}",
@@ -454,9 +468,12 @@ impl MetricsSnapshot {
             self.resplit_epochs,
             self.migrate_epochs,
             self.repack_epochs,
+            self.replicate_epochs,
             self.generations_published,
             self.rows_migrated,
             self.rows_repacked,
+            self.replicas_created,
+            self.replicas_dropped,
             self.retries,
             self.hedges,
             self.hedge_wins,

@@ -21,14 +21,19 @@
 //!                   granularity can absorb.
 //! * [`controlplane`] — the repartitioning [`ControlPlane`]: one
 //!                   escalation policy (deal → re-split → migrate →
-//!                   repack, cheapest data movement first, hysteresis per
-//!                   level) with an audited decision trace; driven per card
-//!                   by [`crate::service::SimBackend`] and fleet-wide by
-//!                   [`crate::service::FleetService`].
+//!                   repack → replicate, cheapest data movement first,
+//!                   hysteresis per level) with an audited decision trace;
+//!                   driven per card by [`crate::service::SimBackend`] and
+//!                   fleet-wide by [`crate::service::FleetService`].
 //! * [`remap`]     — TLB-aware hot-row packing: per-window logical→physical
 //!                   row permutations ([`RemapPlan`]) densifying learned
 //!                   hot sets into page-aligned prefixes, published live
 //!                   through the [`PlacementCell`] like re-splits.
+//! * [`replicate`] — hot-shard read replication: the generation-stamped
+//!                   [`ReplicaSet`] giving a saturated shard zero-copy
+//!                   replicas on additional cards, routed by
+//!                   power-of-two-choices over live queue depth (fifth
+//!                   control-plane lever, fleet scope).
 //! * [`router`]    — split requests by owning window (under the current
 //!                   plan + placement generation), merge in order.
 //! * [`batcher`]   — dynamic batching with deadline + backpressure.
@@ -52,6 +57,7 @@ pub mod metrics;
 pub mod placement;
 pub mod remap;
 pub mod replan;
+pub mod replicate;
 pub mod router;
 pub mod server;
 pub mod state;
@@ -68,6 +74,7 @@ pub use placement::{
 };
 pub use remap::{RemapConfig, RemapPlan, WindowRemap};
 pub use replan::{PlanSplitter, SplitterConfig};
+pub use replicate::{Replica, ReplicaSet, ReplicateConfig};
 pub use router::{merge_rows, pad_indices, Router};
 pub use server::{EmbeddingServer, ServerConfig};
 pub use state::{CoordinatorState, GroupHealth};

@@ -17,7 +17,11 @@
 //! skew-aware rebalancing via
 //! [`AdaptivePlacer`](super::adaptive::AdaptivePlacer)), and a
 //! [`PlacementCell`] publishes generation-stamped swaps to the dispatch
-//! path without draining in-flight tickets.
+//! path without draining in-flight tickets.  At fleet scope the same
+//! publish-by-generation discipline covers hot-shard read replicas: a
+//! [`ReplicaSet`](super::replicate::ReplicaSet) stamps which cards
+//! additionally serve the hot shard (`service/fleet.rs` routes over it
+//! by power-of-two-choices).
 
 use std::sync::{Arc, RwLock};
 

@@ -1,0 +1,227 @@
+//! Hot-shard read replication: the fifth (and most expensive) control-plane
+//! lever.
+//!
+//! Every other lever rearranges *one* card's bandwidth — re-deal, re-split,
+//! and repack re-shape a card's TLB windows, migration re-homes whole row
+//! ranges.  None of them helps when a single window's offered load exceeds
+//! one card's calibrated bandwidth: per-channel HBM ceilings are a hard
+//! wall only aggregation across copies can move (cf. *Benchmarking High
+//! Bandwidth Memory on FPGAs*, arXiv 2005.04324).  A [`ReplicaSet`] is the
+//! published description of that aggregation: for each replicated shard, a
+//! list of *additional* cards serving a zero-copy replica — the replica's
+//! backend is another `TableView::slice_rows` over the same shared
+//! `Arc<[f32]>` (a refcount bump, not a copy), covering exactly the owner's
+//! global row range so local row ids are identical on every copy.
+//!
+//! The set is generation-stamped and published exactly like a plan /
+//! placement / remap swap through the fleet's state cell (the fleet-scope
+//! analog of the single-card `PlacementCell`): in-flight `FleetTicket`s pin
+//! their submit-time state — replica services included — through its `Arc`,
+//! so de-replication needs no drain; a retired replica's backend stops when
+//! the last pinned ticket redeems.
+//!
+//! Reads route by power-of-two-choices over live per-card queue depth
+//! (`service::fleet` owns the gauges); this module owns only the published
+//! *description* and its invariants.
+
+use crate::coordinator::cluster::FleetPlan;
+
+/// Tuning for the replicate lever.
+#[derive(Debug, Clone)]
+pub struct ReplicateConfig {
+    /// Minimum share of an epoch's routed rows the hottest shard must carry
+    /// before it counts as a single-window hotspot (uniform traffic over
+    /// `n` cards sits near `1/n` and never qualifies).
+    pub hot_share_min: f64,
+    /// Demand threshold: the hot shard's observed row rate, in bytes/s,
+    /// must exceed this fraction of the owning card's calibrated aggregate
+    /// bandwidth before a replica is worth another card's capacity.
+    pub capacity_fraction: f64,
+    /// Hysteresis floor: when the replicated shard's combined load share
+    /// (owner + replicas) falls below this, the replicas are dropped.
+    pub exit_share: f64,
+    /// Cap on replicas per shard (each costs one extra card's bandwidth).
+    pub max_replicas: usize,
+}
+
+impl Default for ReplicateConfig {
+    fn default() -> Self {
+        Self {
+            hot_share_min: 0.5,
+            capacity_fraction: 0.5,
+            exit_share: 0.35,
+            max_replicas: 2,
+        }
+    }
+}
+
+/// One read replica: `shard`'s row range served (additionally) by `card`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Replica {
+    /// Index into the fleet plan's shard list.
+    pub shard: usize,
+    /// The card hosting the replica (never the shard's owning card).
+    pub card: usize,
+}
+
+/// The published replica description: generation-stamped, immutable once
+/// published (a change is a fresh `ReplicaSet` and a generation bump, never
+/// a mutation — the same publish discipline as `RemapPlan`).
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaSet {
+    /// Generation stamped at publication (fleet plan generation space).
+    pub generation: u64,
+    replicas: Vec<Replica>,
+}
+
+impl ReplicaSet {
+    /// The empty set: every shard served only by its owner.
+    pub fn identity() -> Self {
+        Self::default()
+    }
+
+    /// A set holding `replicas` (validate with [`check`](Self::check)
+    /// before publishing).
+    pub fn with_replicas(generation: u64, replicas: Vec<Replica>) -> Self {
+        Self {
+            generation,
+            replicas,
+        }
+    }
+
+    /// No shard is replicated.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Total replicas across all shards.
+    pub fn count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// All replicas, publication order.
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    /// The replica cards serving `shard` (besides its owner).
+    pub fn cards_of(&self, shard: usize) -> impl Iterator<Item = usize> + '_ {
+        self.replicas
+            .iter()
+            .filter(move |r| r.shard == shard)
+            .map(|r| r.card)
+    }
+
+    /// Replica count for one shard.
+    pub fn replicas_of(&self, shard: usize) -> usize {
+        self.replicas.iter().filter(|r| r.shard == shard).count()
+    }
+
+    /// Invariants against the plan the set serves: every replica names a
+    /// real shard and a real card, never the shard's own owner, and no
+    /// (shard, card) pair repeats — a duplicate would double-count a queue
+    /// in the power-of-two-choices sample.
+    pub fn check(&self, plan: &FleetPlan, n_cards: usize) -> anyhow::Result<()> {
+        for (i, r) in self.replicas.iter().enumerate() {
+            let shard = plan
+                .shards
+                .get(r.shard)
+                .ok_or_else(|| anyhow::anyhow!("replica {i} names shard {} not in plan", r.shard))?;
+            if r.card >= n_cards {
+                anyhow::bail!("replica {i} names card {} of {n_cards}", r.card);
+            }
+            if r.card == shard.card {
+                anyhow::bail!(
+                    "replica {i} of shard {} lives on its owner card {}",
+                    r.shard,
+                    shard.card
+                );
+            }
+            if self.replicas[..i]
+                .iter()
+                .any(|p| p.shard == r.shard && p.card == r.card)
+            {
+                anyhow::bail!("duplicate replica: shard {} on card {}", r.shard, r.card);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster::CardSpec;
+    use crate::probe::TopologyMap;
+
+    fn plan3() -> FleetPlan {
+        let specs: Vec<CardSpec> = (0..3)
+            .map(|i| CardSpec {
+                map: TopologyMap {
+                    groups: (0..4).map(|g| vec![g]).collect(),
+                    reach_bytes: 1 << 30,
+                    solo_gbps: vec![100.0; 4],
+                    independent: true,
+                    card_id: format!("replica-test-{i}"),
+                },
+                memory_bytes: 1 << 30,
+            })
+            .collect();
+        FleetPlan::build(&specs, 3 * 1024, 128, 7).unwrap()
+    }
+
+    #[test]
+    fn identity_is_empty_and_checks() {
+        let plan = plan3();
+        let set = ReplicaSet::identity();
+        assert!(set.is_empty());
+        assert_eq!(set.count(), 0);
+        assert_eq!(set.replicas_of(0), 0);
+        set.check(&plan, 3).unwrap();
+    }
+
+    #[test]
+    fn replicas_resolve_per_shard() {
+        let plan = plan3();
+        let owner0 = plan.shards[0].card;
+        let others: Vec<usize> = (0..3).filter(|&c| c != owner0).collect();
+        let set = ReplicaSet::with_replicas(
+            5,
+            others
+                .iter()
+                .map(|&card| Replica { shard: 0, card })
+                .collect(),
+        );
+        set.check(&plan, 3).unwrap();
+        assert_eq!(set.count(), 2);
+        assert_eq!(set.replicas_of(0), 2);
+        assert_eq!(set.replicas_of(1), 0);
+        let cards: Vec<usize> = set.cards_of(0).collect();
+        assert_eq!(cards, others);
+    }
+
+    #[test]
+    fn check_rejects_bad_replicas() {
+        let plan = plan3();
+        let owner0 = plan.shards[0].card;
+        // Owner card as its own replica.
+        let set = ReplicaSet::with_replicas(1, vec![Replica { shard: 0, card: owner0 }]);
+        assert!(set.check(&plan, 3).is_err());
+        // Shard out of range.
+        let set = ReplicaSet::with_replicas(1, vec![Replica { shard: 99, card: 0 }]);
+        assert!(set.check(&plan, 3).is_err());
+        // Card out of range.
+        let set = ReplicaSet::with_replicas(1, vec![Replica { shard: 0, card: 99 }]);
+        assert!(set.check(&plan, 3).is_err());
+        // Duplicate (shard, card) pair.
+        let other = (0..3).find(|&c| c != owner0).unwrap();
+        let set = ReplicaSet::with_replicas(
+            1,
+            vec![
+                Replica { shard: 0, card: other },
+                Replica { shard: 0, card: other },
+            ],
+        );
+        assert!(set.check(&plan, 3).is_err());
+    }
+}

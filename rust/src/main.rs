@@ -9,7 +9,8 @@ use std::time::Duration;
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
     AdaptiveConfig, CardSpec, ControlPlaneConfig, Decision, EmbeddingServer, Lever,
-    PlacementPolicy, RemapConfig, ServerConfig, SplitterConfig, Table, WindowPlan,
+    PlacementPolicy, RemapConfig, ReplicateConfig, ServerConfig, SplitterConfig, Table,
+    WindowPlan,
 };
 use a100win::experiments::{self, Effort};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
@@ -37,7 +38,7 @@ USAGE:
                     [--windows N] [--rows-per-request N] [--duration-ms N]
                     [--rps A,B,C...] [--requests N] [--skew uniform|zipf:T|zipf-scattered:T]
                     [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
-                    [--remap] [--verify N]
+                    [--remap] [--replicate] [--verify N]
                     [--chaos [--seed N] [--deadline-ms N]]  (chaos soak, see below)
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
@@ -69,12 +70,18 @@ SUBCOMMANDS:
              --remap arms the fourth lever, TLB-aware hot-row repacking:
              learned hot rows are copied into page-aligned window prefixes
              and published live like a re-split (implies adaptive
-             epoching); --verify N is the CI regression guard: after the
+             epoching, and with --cards > 1 rides each card's own control
+             plane under the fleet's epoch driver);
+             --replicate (needs --cards > 1) arms the fifth lever:
+             a shard hotter than its owner card gets zero-copy read
+             replicas on other cards, routed by power-of-two-choices over
+             live queue depth, dropped again when the hotspot subsides;
+             --verify N is the CI regression guard: after the
              sweep it serves N fully-verified requests (every merged row
              checked against the table), asserts the repartition counters
              are consistent (generations == redeals + resplits +
-             migrations + repacks), and audits the published remap plan's
-             permutation invariants.
+             migrations + repacks + replications), and audits the
+             published remap plan's permutation invariants.
              --chaos replaces the QPS sweep with a verifying chaos soak:
              a seeded fault schedule (worker stalls, group outages,
              flapping health — sim/fault.rs) fires against the fully
@@ -576,8 +583,19 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     // epoch machinery as re-deals, so it implies adaptive epoching even
     // under --placer static.
     let remap = args.bool_flag("remap").then(RemapConfig::default);
-    let adaptive = match (adaptive, &remap) {
-        (None, Some(_)) => Some(AdaptiveConfig {
+    // --replicate arms the fifth lever (fleet scope): hot-shard read
+    // replication with power-of-two-choices routing.  The observed-demand
+    // gate is disabled (capacity_fraction 0.0) because open-loop
+    // wall-clock demand can never meet a *simulated*-bandwidth bar — the
+    // hot-share gate alone decides (see `ReplicateConfig`).
+    let replicate = args.bool_flag("replicate").then(|| ReplicateConfig {
+        capacity_fraction: 0.0,
+        ..ReplicateConfig::default()
+    });
+    // Both levers ride the same epoch machinery as re-deals, so they
+    // imply adaptive epoching even under --placer static.
+    let adaptive = match (adaptive, remap.is_some() || replicate.is_some()) {
+        (None, true) => Some(AdaptiveConfig {
             epoch: Some(Duration::from_millis(20)),
             ..AdaptiveConfig::default()
         }),
@@ -613,13 +631,10 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?,
     };
 
+    if replicate.is_some() && cards < 2 {
+        anyhow::bail!("--replicate needs --cards > 1 (a replica lives on another card)");
+    }
     if cards > 1 {
-        if remap.is_some() {
-            anyhow::bail!(
-                "--remap is per-card for now; the fleet control plane's migrate lever \
-                 re-homes whole shards instead (run --remap with --cards 1)"
-            );
-        }
         // --policy and --windows configure a single card's plan; silently
         // ignoring them against a fleet would mislabel the sweep.
         if args.flag("policy").is_some() || args.flag("windows").is_some() {
@@ -632,6 +647,8 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             cards,
             adaptive,
             resplit,
+            remap,
+            replicate,
             skew,
             placer_name,
             rps_list,
@@ -768,7 +785,11 @@ fn assert_repartition_counters(
     let mut last = (0, 0);
     for _ in 0..40 {
         let m = snapshot();
-        let levers = m.redeal_epochs + m.resplit_epochs + m.migrate_epochs + m.repack_epochs;
+        let levers = m.redeal_epochs
+            + m.resplit_epochs
+            + m.migrate_epochs
+            + m.repack_epochs
+            + m.replicate_epochs;
         if m.generations_published == levers {
             return Ok(());
         }
@@ -776,7 +797,8 @@ fn assert_repartition_counters(
         std::thread::sleep(Duration::from_millis(5));
     }
     anyhow::bail!(
-        "{scope}: generations_published={} but redeal+resplit+migrate+repack={} (never converged)",
+        "{scope}: generations_published={} but \
+         redeal+resplit+migrate+repack+replicate={} (never converged)",
         last.0,
         last.1
     )
@@ -811,6 +833,8 @@ fn bench_serve_fleet(
     cards: usize,
     adaptive: Option<AdaptiveConfig>,
     resplit: Option<SplitterConfig>,
+    remap: Option<RemapConfig>,
+    replicate: Option<ReplicateConfig>,
     skew: Distribution,
     placer_name: &str,
     rps_list: Vec<f64>,
@@ -836,21 +860,26 @@ fn bench_serve_fleet(
     // build_sim_with strips the per-card epoch timer itself: its fleet
     // epoch thread is the one driver of every card's control plane.  The
     // static arm pins the shard map too (max_lever Hold) so it stays an
-    // honest baseline — no migrations behind a "static" label.
+    // honest baseline — no migrations behind a "static" label — unless
+    // --replicate was asked for explicitly (build_sim_with then raises
+    // the ceiling to the fifth rung).
     let fleet_control = ControlPlaneConfig {
-        max_lever: if placer_name == "static" {
+        max_lever: if placer_name == "static" && replicate.is_none() {
             Lever::Hold
         } else {
             Lever::Migrate
         },
         ..ControlPlaneConfig::default()
     };
+    let replicate_armed = replicate.is_some();
     let fleet = FleetService::build_sim_with(
         specs,
         &table,
         FleetConfig {
             adaptive,
             resplit,
+            remap,
+            replicate,
             control: fleet_control,
             epoch: Some(Duration::from_millis(20)),
             sim_timescale,
@@ -903,6 +932,19 @@ fn bench_serve_fleet(
     for (card, m) in fleet.per_card_metrics() {
         println!("  card {card}: {}", m.report());
     }
+    if replicate_armed {
+        let rs = fleet.replica_set();
+        println!(
+            "replica set: generation {}, {} live replica(s)",
+            rs.generation,
+            rs.count()
+        );
+        for (shard, card, svc) in fleet.replica_cards() {
+            println!("  shard {shard} replicated on card {card}: {}", svc.metrics().report());
+        }
+        let depths = fleet.queue_depths();
+        println!("queue depths (per card): {depths:?}");
+    }
     println!(
         "aggregate simulated GB/s (sum over cards): {:.1}",
         fleet.aggregate_sim_gbps()
@@ -924,6 +966,12 @@ fn bench_serve_fleet(
         let card_ids: Vec<usize> = fleet.plan().shards.iter().map(|s| s.card).collect();
         for (card, svc) in card_ids.into_iter().zip(fleet.cards()) {
             assert_repartition_counters(&format!("card {card}"), || svc.metrics())?;
+        }
+        for (shard, card, svc) in fleet.replica_cards() {
+            assert_repartition_counters(
+                &format!("replica of shard {shard} on card {card}"),
+                || svc.metrics(),
+            )?;
         }
         if placer_name != "static" {
             anyhow::ensure!(

@@ -26,29 +26,41 @@
 //! card services), so they merge under the shard map they were split with
 //! while new submissions route under the new one; a retired generation's
 //! backends drain and stop when the last ticket drops.
+//!
+//! Above migration sits the fifth lever, **replication**
+//! ([`Lever::Replicate`]): when one shard's load exceeds what any single
+//! card can serve (migration can only move the wall, not raise it), the
+//! fleet publishes a generation-stamped
+//! [`ReplicaSet`](crate::coordinator::ReplicaSet) whose replicas are
+//! zero-copy views of the same shard range on additional cards, and
+//! [`FleetService::submit`] routes each sub-batch by power-of-two-choices
+//! over live per-card queue depth.  De-replication is the same swap in
+//! reverse — tickets pinned to the old state drain naturally, no barrier.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
 use crate::coordinator::adaptive::AdaptiveConfig;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::chunks::row_bytes_for_d;
-use crate::coordinator::cluster::{CardSpec, FleetPlan};
+use crate::coordinator::chunks::{row_bytes_for_d, WindowPlan};
+use crate::coordinator::cluster::{CardShard, CardSpec, FleetPlan};
 use crate::coordinator::controlplane::{
     capacity_imbalance, committed_delta_atomic, load_shares, rebaseline_atomic, ControlPlane,
     ControlPlaneConfig, Decision, Lever,
 };
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::placement::PlacementPolicy;
+use crate::coordinator::placement::{Placement, PlacementPolicy};
+use crate::coordinator::remap::RemapConfig;
 use crate::coordinator::replan::SplitterConfig;
+use crate::coordinator::replicate::{Replica, ReplicaSet, ReplicateConfig};
 use crate::coordinator::table::{Table, TableView};
 
 use crate::sim::FaultPlan;
 
-use super::backend::{scatter_rows, Outcome, Ticket, TicketState};
+use super::backend::{scatter_rows, Backend, Outcome, Ticket, TicketState};
 use super::rebalance::{FleetRebalancer, RebalanceConfig};
 use super::resilience::ResilienceConfig;
 use super::ring::EpochGate;
@@ -88,6 +100,20 @@ pub struct FleetConfig {
     /// Deterministic fault injection, decorrelated per card via
     /// [`FaultPlan::for_card`] (same schedule shape, independent draws).
     pub fault: Option<FaultPlan>,
+    /// Per-card TLB-aware hot-row repacking (the repack lever), applied to
+    /// every (re)built card backend.  Requires `adaptive` (ignored without
+    /// it, like the per-card `resplit`).
+    pub remap: Option<RemapConfig>,
+    /// Arm the fifth lever: hot-shard read replication routed by
+    /// power-of-two-choices over live queue depth.  Note that
+    /// `capacity_fraction == 0.0` disables the observed-demand gate —
+    /// open-loop wall-clock demand can never meet a *simulated*-bandwidth
+    /// bar, so CLI arms gate on hot-share alone (see
+    /// [`ReplicateConfig`]).
+    pub replicate: Option<ReplicateConfig>,
+    /// Pin each card's simulation workers to distinct cores
+    /// (`util::threads::pin_to_core`, Linux only); off by default.
+    pub pin_cores: bool,
 }
 
 impl Default for FleetConfig {
@@ -107,17 +133,51 @@ impl Default for FleetConfig {
             legacy_path: false,
             resilience: ResilienceConfig::default(),
             fault: None,
+            remap: None,
+            replicate: None,
+            pin_cores: false,
         }
+    }
+}
+
+/// One unit of a card's queue-depth gauge, held for the lifetime of an
+/// in-flight part.  The decrement rides `Drop`, so every path — redeem,
+/// per-card error, abandoned ticket — releases exactly once and the gauge
+/// can never leak upward or go negative.
+struct DepthGuard(Arc<AtomicU64>);
+
+impl DepthGuard {
+    fn acquire(gauge: &Arc<AtomicU64>) -> Self {
+        // RELAXED: the depth gauge is a routing heuristic (the
+        // power-of-two-choices sample), not a synchronization edge; the
+        // increment here and the decrement in `Drop` pair on the same
+        // atomic, so the value is exact, just not ordered.
+        gauge.fetch_add(1, Ordering::Relaxed);
+        Self(Arc::clone(gauge))
+    }
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        // RELAXED: see `acquire` — paired decrement on a heuristic gauge.
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
 /// One card's share of an in-flight fleet request.
 struct FleetPart {
-    /// Index into the pinned generation's `cards` / `plan.shards`.
+    /// Index into the pinned generation's `plan.shards`.
     shard: usize,
+    /// Serving unit the part was routed to: the shard's owner
+    /// (`unit == shard`) or a replica (`unit >= cards.len()` indexes
+    /// `replica_units`).  Redeemed slabs recycle to this unit's pool.
+    unit: usize,
     ticket: Ticket,
     /// Original request positions of this card's rows.
     positions: Vec<u32>,
+    /// Held for the part's lifetime; dropping releases the routed card's
+    /// queue-depth unit (see [`DepthGuard`]).
+    _depth: DepthGuard,
 }
 
 /// A claim on one in-flight fleet request; redeems to rows merged back in
@@ -169,9 +229,11 @@ impl FleetTicket {
                 .wait()
                 .with_context(|| format!("card shard {}", part.shard))?;
             scatter_rows(&mut out, &part.positions, &rows, d);
-            // Return the card's slab to its pool: fleet steady state must
-            // be as allocation-free per card as the single-card path.
-            self.generation.cards[part.shard].recycle(rows);
+            // Return the slab to the unit that served it (owner card or
+            // replica): fleet steady state must be as allocation-free per
+            // card as the single-card path, and a replica's slab in the
+            // owner's pool would cross backends.
+            self.generation.unit_service(part.unit).recycle(rows);
         }
         Ok(out)
     }
@@ -194,7 +256,7 @@ impl FleetTicket {
                     for &p in &part.positions {
                         valid[p as usize] = true;
                     }
-                    self.generation.cards[part.shard].recycle(rows);
+                    self.generation.unit_service(part.unit).recycle(rows);
                 }
                 Ok(Outcome::Partial {
                     rows,
@@ -213,7 +275,7 @@ impl FleetTicket {
                             out[span].fill(0.0);
                         }
                     }
-                    self.generation.cards[part.shard].recycle(rows);
+                    self.generation.unit_service(part.unit).recycle(rows);
                 }
                 Err(e) => {
                     degraded = true;
@@ -236,6 +298,20 @@ impl FleetTicket {
     }
 }
 
+/// One live read replica: an additional card serving a zero-copy view of
+/// a shard's exact global row range (so card-local row ids are identical
+/// to the owner's and no re-indexing is needed to route to it).
+#[derive(Clone)]
+struct ReplicaUnit {
+    /// Index into `plan.shards` of the replicated shard.
+    shard: usize,
+    /// Host card id (never the shard's owner; see `ReplicaSet::check`).
+    card: usize,
+    svc: Service,
+    /// `Some` for sim-built replicas (simulated-bandwidth accounting).
+    sim: Option<Arc<SimBackend>>,
+}
+
 /// One published generation: the shard map and its position-matched card
 /// services (plus, for sim-built fleets, the concrete backends so the
 /// control plane can drive their per-card epochs and read their simulated
@@ -247,6 +323,89 @@ struct FleetState {
     /// Position-matched to `plan.shards`; `None` for externally composed
     /// services.
     sims: Vec<Option<Arc<SimBackend>>>,
+    /// The published replica description (generation-stamped; swapped with
+    /// the state exactly like the plan — see `coordinator::replicate`).
+    replicas: Arc<ReplicaSet>,
+    /// Live replica services, position-matched to `replicas.replicas()`.
+    replica_units: Vec<ReplicaUnit>,
+    /// Per-card in-flight depth gauges (the P2C routing signal), indexed
+    /// by card id and *shared across generations* (each publish clones the
+    /// `Arc`s), so a migration or replica swap never zeroes live depth.
+    depth: Vec<Arc<AtomicU64>>,
+}
+
+impl FleetState {
+    /// Resolve a serving unit id: `unit < cards.len()` is the owner of
+    /// shard `unit`, anything beyond indexes `replica_units`.
+    fn unit_service(&self, unit: usize) -> &Service {
+        if unit < self.cards.len() {
+            &self.cards[unit]
+        } else {
+            &self.replica_units[unit - self.cards.len()].svc
+        }
+    }
+
+    // hotpath: begin — per-sub-batch routing; no allocation.
+    /// Pick the serving unit for shard `si`: the owner when the shard is
+    /// unreplicated, otherwise power-of-two-choices — sample two distinct
+    /// candidates (owner + replicas) from the rotating counter and take
+    /// the one whose card queue is shallower.
+    fn pick_unit(&self, si: usize, rr: &AtomicU64) -> (usize, usize) {
+        let owner = (si, self.plan.shards[si].card);
+        if self.replicas.is_empty() {
+            return owner;
+        }
+        let n = 1 + self.replicas.replicas_of(si);
+        if n < 2 {
+            return owner;
+        }
+        // RELAXED: the rotation only diversifies which two candidates get
+        // sampled; any interleaving of concurrent increments is fine.
+        let t = rr.fetch_add(1, Ordering::Relaxed) as usize;
+        let a = t % n;
+        let b = {
+            let b = (t / n) % (n - 1);
+            if b >= a {
+                b + 1
+            } else {
+                b
+            }
+        };
+        let (ua, ca) = self.candidate(si, a);
+        let (ub, cb) = self.candidate(si, b);
+        // RELAXED: depth reads are a heuristic snapshot — a stale value
+        // costs one suboptimal pick, never correctness (both candidates
+        // serve the identical row range).
+        let da = self.depth[ca].load(Ordering::Relaxed);
+        let db = self.depth[cb].load(Ordering::Relaxed);
+        if db < da {
+            (ub, cb)
+        } else {
+            (ua, ca)
+        }
+    }
+
+    /// Candidate `j` for shard `si`: 0 is the owner, `k + 1` the shard's
+    /// k-th replica unit (unit ids past `cards.len()` index
+    /// `replica_units`).
+    fn candidate(&self, si: usize, j: usize) -> (usize, usize) {
+        if j == 0 {
+            return (si, self.plan.shards[si].card);
+        }
+        let mut seen = 0;
+        for (k, unit) in self.replica_units.iter().enumerate() {
+            if unit.shard == si {
+                seen += 1;
+                if seen == j {
+                    return (self.cards.len() + k, unit.card);
+                }
+            }
+        }
+        // Units are position-matched to the published set; a miss would be
+        // a publish bug.  Fail safe to the owner.
+        (si, self.plan.shards[si].card)
+    }
+    // hotpath: end
 }
 
 /// Everything shared between the facade handle and the background epoch
@@ -278,8 +437,28 @@ struct FleetCore {
     /// boundary, indexed by card id (atomics: epoch sampling takes no
     /// lock).
     last_card_rows: Vec<AtomicU64>,
+    /// Replica-unit routed-row totals at the previous committed epoch,
+    /// indexed by *host* card id (a card hosts at most one replica).
+    last_replica_rows: Vec<AtomicU64>,
+    /// Wall-clock instant of the previous fleet epoch — the denominator
+    /// of the replicate lever's observed-demand estimate.
+    last_epoch_at: Mutex<Instant>,
+    /// Rotation counter seeding the power-of-two-choices sample.
+    rr: AtomicU64,
     epoch_stop: AtomicBool,
     epoch_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// What the replicate lever did with its turn (see `FleetCore::epoch`).
+enum ReplicateOutcome {
+    /// No single-shard hotspot (or no host with headroom): fall through to
+    /// the migration path.
+    Declined,
+    /// The epoch was spent — a decision was recorded — but nothing
+    /// published (e.g. the replica backend failed to build).
+    Spent,
+    /// A new replica set published at this generation.
+    Published(u64),
 }
 
 impl FleetCore {
@@ -288,10 +467,13 @@ impl FleetCore {
     }
 
     /// One fleet control epoch: per-card levers first (each card's own
-    /// control plane applies re-deals / re-splits), then the fleet ladder
-    /// judges per-card imbalance and — once escalation reaches
-    /// [`Lever::Migrate`] — applies a rebalancer proposal.  Returns the
-    /// new *fleet* generation when a migration published.
+    /// control plane applies re-deals / re-splits / repacks), then the
+    /// fleet ladder judges per-card imbalance — [`Lever::Migrate`] applies
+    /// a rebalancer proposal, [`Lever::Replicate`] (when armed) gives a
+    /// single-shard hotspot a zero-copy replica first.  De-replication is
+    /// judged every epoch regardless of the ladder: dropping a replica is
+    /// de-escalation, not an escalation that must be earned.  Returns the
+    /// published generation when anything published.
     fn epoch(&self) -> Option<u64> {
         let _serialized = self.gate.lock();
         let state = self.current();
@@ -301,10 +483,27 @@ impl FleetCore {
                 card_acted = true;
             }
         }
+        for unit in &state.replica_units {
+            if let Some(sim) = &unit.sim {
+                if sim.rebalance_epoch().is_some() {
+                    card_acted = true;
+                }
+            }
+        }
         if self.specs.is_empty() {
             // Externally composed fleet: nothing to migrate with.
             return None;
         }
+
+        // Wall-clock span since the previous epoch: denominator of the
+        // replicate lever's observed-demand gate.
+        let dt = {
+            let mut last = self.last_epoch_at.lock().unwrap();
+            let now = Instant::now();
+            let dt = now.duration_since(*last);
+            *last = now;
+            dt
+        };
 
         // Per-card load since the last committed epoch (indexed by card
         // id; a card rebuilt by a migration restarts its counters, which
@@ -317,7 +516,20 @@ impl FleetCore {
         let min_commit = self.rebalancer.cfg.min_epoch_rows;
         let delta = committed_delta_atomic(&self.last_card_rows, &totals, min_commit);
 
-        let imbalance = match load_shares(&delta) {
+        // Replica traffic keeps its own committed baseline, indexed by
+        // host card (a card hosts at most one replica unit).
+        let mut rtotals = vec![0u64; n];
+        for unit in &state.replica_units {
+            rtotals[unit.card] = unit.svc.metrics().rows;
+        }
+        let rdelta = committed_delta_atomic(&self.last_replica_rows, &rtotals, min_commit);
+
+        // A card's load is everything it served this epoch — its own shard
+        // plus any replica it hosts; that is what its HBM actually saw.
+        let combined: Vec<u64> = delta.iter().zip(&rdelta).map(|(a, b)| a + b).collect();
+        let total_delta: u64 = combined.iter().sum();
+
+        let imbalance = match load_shares(&combined) {
             None => 0.0,
             Some(load) => {
                 let total_cap: f64 = self.specs.iter().map(|(c, _)| c.capacity_gbps()).sum();
@@ -331,6 +543,16 @@ impl FleetCore {
         };
 
         let permitted = self.plane.permit(imbalance);
+
+        // De-replication first, *before* the ladder's early return: a
+        // fleet whose replicas absorbed the hotspot reads as healthy, and
+        // healthy must not mean the replicas are retained forever.
+        if let Some(generation) =
+            self.try_dereplicate(&state, &delta, &rdelta, total_delta, permitted, imbalance)
+        {
+            return Some(generation);
+        }
+
         if permitted < Lever::Migrate {
             self.plane.record(
                 permitted,
@@ -346,8 +568,17 @@ impl FleetCore {
             return None;
         }
 
+        if permitted >= Lever::Replicate {
+            match self.try_replicate(&state, &delta, &rdelta, total_delta, dt, permitted, imbalance)
+            {
+                ReplicateOutcome::Published(generation) => return Some(generation),
+                ReplicateOutcome::Spent => return None,
+                ReplicateOutcome::Declined => {}
+            }
+        }
+
         let cards: Vec<CardSpec> = self.specs.iter().map(|(c, _)| c.clone()).collect();
-        let Some(proposal) = self.rebalancer.propose(&state.plan, &cards, &delta) else {
+        let Some(proposal) = self.rebalancer.propose(&state.plan, &cards, &combined) else {
             self.plane
                 .record(permitted, None, imbalance, None, "rebalancer declined");
             return None;
@@ -379,6 +610,216 @@ impl FleetCore {
                 None
             }
         }
+    }
+
+    /// Rows shard `si` routed this epoch, owner and replicas combined.
+    fn shard_rows(&self, state: &FleetState, si: usize, delta: &[u64], rdelta: &[u64]) -> u64 {
+        let mut rows = delta[state.plan.shards[si].card];
+        for card in state.replicas.cards_of(si) {
+            rows += rdelta[card];
+        }
+        rows
+    }
+
+    /// Drop every replica once the replicated shard's combined (owner +
+    /// replicas) load share falls under the exit floor.  Returns the new
+    /// replica-set generation when a drop published.
+    fn try_dereplicate(
+        &self,
+        state: &Arc<FleetState>,
+        delta: &[u64],
+        rdelta: &[u64],
+        total_delta: u64,
+        permitted: Lever,
+        imbalance: f64,
+    ) -> Option<u64> {
+        let rcfg = self.cfg.replicate.as_ref()?;
+        if state.replicas.is_empty() || total_delta == 0 {
+            return None;
+        }
+        // All published replicas cover one shard at a time (see
+        // `try_replicate`).
+        let si = state.replicas.replicas()[0].shard;
+        let share = self.shard_rows(state, si, delta, rdelta) as f64 / total_delta as f64;
+        if share >= rcfg.exit_share {
+            return None;
+        }
+        let dropped = state.replicas.count() as u64;
+        let generation = state.replicas.generation + 1;
+        self.publish_replicas(state, ReplicaSet::with_replicas(generation, Vec::new()), Vec::new());
+        self.metrics.replicate_epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.replicas_dropped.fetch_add(dropped, Ordering::Relaxed);
+        self.metrics
+            .generations_published
+            .fetch_add(1, Ordering::Relaxed);
+        self.plane.record(
+            permitted,
+            Some(Lever::Replicate),
+            imbalance,
+            Some(generation),
+            format!(
+                "dropped {dropped} replica(s) of shard {si}: hot share {share:.2} \
+                 under exit floor {:.2}",
+                rcfg.exit_share
+            ),
+        );
+        Some(generation)
+    }
+
+    /// Give the hottest shard a zero-copy replica on the least-loaded
+    /// other card, when the hotspot is genuinely single-window (share
+    /// gate) and hot enough to be worth another card's bandwidth (demand
+    /// gate, when enabled).
+    #[allow(clippy::too_many_arguments)]
+    fn try_replicate(
+        &self,
+        state: &Arc<FleetState>,
+        delta: &[u64],
+        rdelta: &[u64],
+        total_delta: u64,
+        dt: Duration,
+        permitted: Lever,
+        imbalance: f64,
+    ) -> ReplicateOutcome {
+        let Some(rcfg) = self.cfg.replicate.as_ref() else {
+            return ReplicateOutcome::Declined;
+        };
+        let Some(whole) = self.whole.as_ref() else {
+            return ReplicateOutcome::Declined;
+        };
+        let n = self.specs.len();
+        if n < 2 || total_delta == 0 {
+            return ReplicateOutcome::Declined;
+        }
+        let shares: Vec<f64> = (0..state.plan.shards.len())
+            .map(|si| self.shard_rows(state, si, delta, rdelta) as f64 / total_delta as f64)
+            .collect();
+        let Some((si, &share)) = shares
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+        else {
+            return ReplicateOutcome::Declined;
+        };
+        // Uniform traffic over n cards sits near 1/n and never clears the
+        // share gate — replication is strictly for single-window hotspots.
+        if share < rcfg.hot_share_min {
+            return ReplicateOutcome::Declined;
+        }
+        if !state.replicas.is_empty() && state.replicas.replicas()[0].shard != si {
+            // The hotspot moved off the replicated shard; the exit check
+            // retires the stale replicas once their share collapses.
+            return ReplicateOutcome::Declined;
+        }
+        if state.replicas.replicas_of(si) >= rcfg.max_replicas {
+            return ReplicateOutcome::Declined;
+        }
+        let shard = &state.plan.shards[si];
+        let owner = shard.card;
+        // Observed demand on the hot shard vs the owner's calibrated
+        // bandwidth.  `capacity_fraction == 0` disables this gate: wall
+        // clock and simulated device time are different clocks, so
+        // open-loop CLI traffic can never meet a simulated-bandwidth bar.
+        let demand_gbps =
+            self.shard_rows(state, si, delta, rdelta) as f64 * state.plan.row_bytes as f64
+                / dt.as_secs_f64().max(1e-9)
+                / 1e9;
+        let cap = self.specs[owner].0.capacity_gbps();
+        if rcfg.capacity_fraction > 0.0 && demand_gbps < rcfg.capacity_fraction * cap {
+            return ReplicateOutcome::Declined;
+        }
+        // Host: the least-loaded card that is not the owner and not
+        // already serving this shard, with room for the replica rows.
+        let Some(host) = (0..n)
+            .filter(|&c| c != owner && !state.replicas.cards_of(si).any(|r| r == c))
+            .filter(|&c| shard.rows * state.plan.row_bytes <= self.specs[c].0.memory_bytes)
+            .min_by_key(|&c| delta[c] + rdelta[c])
+        else {
+            return ReplicateOutcome::Declined;
+        };
+        let (spec, timing) = &self.specs[host];
+        let backend = match start_replica_backend(
+            &self.cfg,
+            spec,
+            timing,
+            shard,
+            state.plan.row_bytes,
+            whole,
+            host,
+        ) {
+            Ok(b) => b,
+            Err(why) => {
+                self.plane.record(
+                    permitted,
+                    None,
+                    imbalance,
+                    None,
+                    format!("replication aborted: {why:#}"),
+                );
+                return ReplicateOutcome::Spent;
+            }
+        };
+        let generation = state.replicas.generation + 1;
+        let mut replicas = state.replicas.replicas().to_vec();
+        replicas.push(Replica { shard: si, card: host });
+        let set = ReplicaSet::with_replicas(generation, replicas);
+        if let Err(why) = set.check(&state.plan, n) {
+            backend.shutdown();
+            self.plane.record(
+                permitted,
+                None,
+                imbalance,
+                None,
+                format!("replication aborted: {why:#}"),
+            );
+            return ReplicateOutcome::Spent;
+        }
+        let mut units = state.replica_units.clone();
+        units.push(ReplicaUnit {
+            shard: si,
+            card: host,
+            svc: Service::new(Arc::clone(&backend)),
+            sim: Some(backend),
+        });
+        self.publish_replicas(state, set, units);
+        self.metrics.replicate_epochs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.replicas_created.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .generations_published
+            .fetch_add(1, Ordering::Relaxed);
+        self.plane.record(
+            permitted,
+            Some(Lever::Replicate),
+            imbalance,
+            Some(generation),
+            format!(
+                "replicated shard {si} (rows [{}, {})) onto card {host}: \
+                 share {share:.2}, {demand_gbps:.1} GB/s offered (zero-copy)",
+                shard.start_row,
+                shard.end_row()
+            ),
+        );
+        ReplicateOutcome::Published(generation)
+    }
+
+    /// Publish a new replica set + units over the current plan and cards
+    /// (the replica analog of `apply_migration`'s swap), then re-baseline
+    /// the replica load counters for the new unit set.
+    fn publish_replicas(&self, old: &Arc<FleetState>, set: ReplicaSet, units: Vec<ReplicaUnit>) {
+        let next = Arc::new(FleetState {
+            plan: Arc::clone(&old.plan),
+            cards: old.cards.clone(),
+            sims: old.sims.clone(),
+            replicas: Arc::new(set),
+            replica_units: units,
+            depth: old.depth.clone(),
+        });
+        *self.state.write().unwrap() = Arc::clone(&next);
+        let mut rtotals = vec![0u64; self.specs.len()];
+        for unit in &next.replica_units {
+            rtotals[unit.card] = unit.svc.metrics().rows;
+        }
+        rebaseline_atomic(&self.last_replica_rows, &rtotals);
     }
 
     /// Build and publish the next generation for `rows_of`: untouched
@@ -434,12 +875,26 @@ impl FleetCore {
         }
 
         let generation = next_plan.generation;
+        // Migration re-cuts shard boundaries, so any replica's row range
+        // is stale by construction: the new generation publishes an empty
+        // replica set (counted as dropped; if the hotspot survives the
+        // rebalance it re-escalates and re-replicates under the new cuts).
+        let dropped = old.replicas.count() as u64;
         let next = Arc::new(FleetState {
             plan: Arc::new(next_plan),
             cards: services,
             sims,
+            replicas: Arc::new(ReplicaSet::with_replicas(
+                old.replicas.generation + u64::from(dropped > 0),
+                Vec::new(),
+            )),
+            replica_units: Vec::new(),
+            depth: old.depth.clone(),
         });
         *self.state.write().unwrap() = Arc::clone(&next);
+        if dropped > 0 {
+            self.metrics.replicas_dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
         // Re-baseline the per-card load counters under the new backends
         // (rebuilt cards restart their registries at zero).
         let mut totals = vec![0u64; self.specs.len()];
@@ -447,6 +902,7 @@ impl FleetCore {
             totals[shard.card] = svc.metrics().rows;
         }
         rebaseline_atomic(&self.last_card_rows, &totals);
+        rebaseline_atomic(&self.last_replica_rows, &vec![0u64; self.specs.len()]);
         Ok((generation, moved))
     }
 
@@ -455,8 +911,12 @@ impl FleetCore {
         if let Some(t) = self.epoch_thread.lock().unwrap().take() {
             let _ = t.join();
         }
-        for c in &self.current().cards {
+        let state = self.current();
+        for c in &state.cards {
             c.shutdown();
+        }
+        for unit in &state.replica_units {
+            unit.svc.shutdown();
         }
     }
 }
@@ -470,24 +930,67 @@ fn start_card_backend(
     cfg: &FleetConfig,
     spec: &CardSpec,
     timing: &SimTiming,
-    shard: &crate::coordinator::cluster::CardShard,
+    shard: &CardShard,
     whole: &TableView,
 ) -> anyhow::Result<Arc<SimBackend>> {
     let local = whole.slice_rows(shard.start_row, shard.rows);
+    Ok(Arc::new(SimBackend::start_with_placement(
+        card_backend_config(cfg, shard.card),
+        &spec.map,
+        shard.plan.clone(),
+        shard.placement.clone(),
+        local,
+        timing.clone(),
+    )?))
+}
+
+/// The per-card [`SimBackendConfig`] every fleet backend — startup,
+/// migration rebuild, or replica — is started with, so no path can
+/// silently diverge on a setting.
+fn card_backend_config(cfg: &FleetConfig, card: usize) -> SimBackendConfig {
     let mut bcfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
     bcfg.batcher = cfg.batcher.clone();
     bcfg.seed = cfg.seed;
     bcfg.adaptive = cfg.adaptive.clone();
     bcfg.resplit = cfg.resplit.clone();
+    bcfg.remap = cfg.remap.clone();
     bcfg.sim_timescale = cfg.sim_timescale;
     bcfg.legacy_path = cfg.legacy_path;
     bcfg.resilience = cfg.resilience.clone();
-    bcfg.fault = cfg.fault.as_ref().map(|p| p.for_card(shard.card));
+    bcfg.fault = cfg.fault.as_ref().map(|p| p.for_card(card));
+    bcfg.pin_cores = cfg.pin_cores;
+    bcfg
+}
+
+/// Build a replica backend on `host`: the same zero-copy slice as the
+/// owner (same global row range, so card-local row ids match and routing
+/// needs no re-indexing), but with windows and placement rebuilt for the
+/// *host* card's probed map — reach and group count vary card to card,
+/// per the paper, so the owner's plan would mis-window the replica.
+fn start_replica_backend(
+    cfg: &FleetConfig,
+    spec: &CardSpec,
+    timing: &SimTiming,
+    shard: &CardShard,
+    row_bytes: u64,
+    whole: &TableView,
+    host: usize,
+) -> anyhow::Result<Arc<SimBackend>> {
+    let local = whole.slice_rows(shard.start_row, shard.rows);
+    let plan = WindowPlan::for_reach(
+        shard.rows,
+        row_bytes,
+        spec.map.reach_bytes,
+        spec.map.groups.len(),
+    )
+    .with_context(|| format!("replica window plan on card {host}"))?;
+    let placement = Placement::build(PlacementPolicy::GroupToChunk, &spec.map, &plan, cfg.seed)
+        .with_context(|| format!("replica placement on card {host}"))?;
     Ok(Arc::new(SimBackend::start_with_placement(
-        bcfg,
+        card_backend_config(cfg, host),
         &spec.map,
-        shard.plan.clone(),
-        shard.placement.clone(),
+        plan,
+        placement,
         local,
         timing.clone(),
     )?))
@@ -506,12 +1009,16 @@ impl FleetService {
     pub fn new(plan: FleetPlan, cards: Vec<Service>) -> anyhow::Result<Self> {
         let d = Self::validate(&plan, &cards)?;
         let sims = cards.iter().map(|_| None).collect();
+        let n_gauges = plan.shards.iter().map(|s| s.card + 1).max().unwrap_or(0);
         Ok(Self {
             core: Arc::new(FleetCore {
                 state: RwLock::new(Arc::new(FleetState {
                     plan: Arc::new(plan),
                     cards,
                     sims,
+                    replicas: Arc::new(ReplicaSet::identity()),
+                    replica_units: Vec::new(),
+                    depth: (0..n_gauges).map(|_| Arc::new(AtomicU64::new(0))).collect(),
                 })),
                 d,
                 pool: SlabPool::new(),
@@ -526,6 +1033,9 @@ impl FleetService {
                 metrics: Arc::new(Metrics::new()),
                 gate: EpochGate::new(),
                 last_card_rows: Vec::new(),
+                last_replica_rows: Vec::new(),
+                last_epoch_at: Mutex::new(Instant::now()),
+                rr: AtomicU64::new(0),
                 epoch_stop: AtomicBool::new(false),
                 epoch_thread: Mutex::new(None),
             }),
@@ -621,8 +1131,13 @@ impl FleetService {
 
         // The fleet plane runs at whatever ceiling the config asks for:
         // `Migrate` by default (FleetConfig::default), `Hold` to pin the
-        // shard map (e.g. a static baseline arm).
-        let plane_cfg = cfg.control.clone();
+        // shard map (e.g. a static baseline arm).  Arming replication
+        // raises a migration-capable ceiling to the fifth rung — a plane
+        // pinned below `Migrate` stays pinned.
+        let mut plane_cfg = cfg.control.clone();
+        if cfg.replicate.is_some() && plane_cfg.max_lever >= Lever::Migrate {
+            plane_cfg.max_lever = Lever::Replicate;
+        }
         let n_cards = specs.len();
         let epoch = cfg.epoch;
         let core = Arc::new(FleetCore {
@@ -630,6 +1145,9 @@ impl FleetService {
                 plan: Arc::new(plan),
                 cards: services,
                 sims,
+                replicas: Arc::new(ReplicaSet::identity()),
+                replica_units: Vec::new(),
+                depth: (0..n_cards).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             })),
             d,
             pool: SlabPool::new(),
@@ -641,6 +1159,9 @@ impl FleetService {
             metrics: Arc::new(Metrics::new()),
             gate: EpochGate::new(),
             last_card_rows: (0..n_cards).map(|_| AtomicU64::new(0)).collect(),
+            last_replica_rows: (0..n_cards).map(|_| AtomicU64::new(0)).collect(),
+            last_epoch_at: Mutex::new(Instant::now()),
+            rr: AtomicU64::new(0),
             epoch_stop: AtomicBool::new(false),
             epoch_thread: Mutex::new(None),
         });
@@ -707,14 +1228,94 @@ impl FleetService {
     }
 
     /// Sum of per-card simulated aggregate GB/s (cards run in parallel).
+    /// Replicas are priced as parallel devices: a replicated shard's
+    /// bandwidth is the owner's plus every replica's.
     pub fn aggregate_sim_gbps(&self) -> f64 {
-        self.core
-            .current()
+        let state = self.core.current();
+        let owners: f64 = state
             .sims
             .iter()
             .flatten()
             .map(|s| s.aggregate_sim_gbps())
-            .sum()
+            .sum();
+        let replicas: f64 = state
+            .replica_units
+            .iter()
+            .filter_map(|u| u.sim.as_ref())
+            .map(|s| s.aggregate_sim_gbps())
+            .sum();
+        owners + replicas
+    }
+
+    /// Fleet makespan throughput: units run in parallel, so the slowest
+    /// unit's simulated device time bounds the fleet — total routed bytes
+    /// over that bound.  Unlike [`aggregate_sim_gbps`]
+    /// (Self::aggregate_sim_gbps), which prices per-device achieved
+    /// bandwidth, this collapses under imbalance: a fleet whose hot card
+    /// serves everything scores roughly one card's bandwidth.
+    pub fn makespan_sim_gbps(&self) -> f64 {
+        let state = self.core.current();
+        let mut total_rows = 0u64;
+        let mut max_ns = 0f64;
+        let sims = state
+            .sims
+            .iter()
+            .flatten()
+            .chain(state.replica_units.iter().filter_map(|u| u.sim.as_ref()));
+        for sim in sims {
+            let report = sim.sim_report();
+            total_rows += report.iter().map(|r| r.rows).sum::<u64>();
+            let ns = report.iter().map(|r| r.sim_ms * 1e6).fold(0.0f64, f64::max);
+            max_ns = max_ns.max(ns);
+        }
+        if max_ns <= 0.0 {
+            return 0.0;
+        }
+        total_rows as f64 * state.plan.row_bytes as f64 / max_ns
+    }
+
+    /// Zero every unit's simulated-device accounting (benchmark harness
+    /// hook: measure a steady state without the convergence phase).
+    pub fn reset_sim_stats(&self) {
+        let state = self.core.current();
+        for sim in state.sims.iter().flatten() {
+            sim.reset_sim_stats();
+        }
+        for unit in &state.replica_units {
+            if let Some(sim) = &unit.sim {
+                sim.reset_sim_stats();
+            }
+        }
+    }
+
+    /// The published replica set of the current generation (empty until
+    /// the replicate lever fires; see [`ReplicaSet`]).
+    pub fn replica_set(&self) -> Arc<ReplicaSet> {
+        Arc::clone(&self.core.current().replicas)
+    }
+
+    /// Live replica services of the current generation as
+    /// `(shard index, host card, service)` — cheap handle clones,
+    /// position-matched to [`replica_set`](Self::replica_set).
+    pub fn replica_cards(&self) -> Vec<(usize, usize, Service)> {
+        self.core
+            .current()
+            .replica_units
+            .iter()
+            .map(|u| (u.shard, u.card, u.svc.clone()))
+            .collect()
+    }
+
+    /// Per-card in-flight queue depths (the power-of-two-choices routing
+    /// signal), indexed by card id.
+    pub fn queue_depths(&self) -> Vec<u64> {
+        // RELAXED: monitoring snapshot of a heuristic gauge.
+        self.core
+            .current()
+            .depth
+            .iter()
+            .map(|g| g.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Split a request by card shard and submit each part; the returned
@@ -732,13 +1333,23 @@ impl FleetService {
             if locals.is_empty() {
                 continue;
             }
-            let ticket = state.cards[si]
+            // Owner unless the shard is replicated; then the shallower of
+            // two sampled candidate queues (power-of-two-choices).  The
+            // depth unit is acquired before submission so concurrent picks
+            // see this part immediately, and its guard releases on every
+            // exit path (including the `?` below).
+            let (unit, card) = state.pick_unit(si, &self.core.rr);
+            let depth = DepthGuard::acquire(&state.depth[card]);
+            let ticket = state
+                .unit_service(unit)
                 .submit(Arc::new(locals), deadline)
-                .with_context(|| format!("card shard {si}"))?;
+                .with_context(|| format!("card shard {si} (unit {unit})"))?;
             parts.push(FleetPart {
                 shard: si,
+                unit,
                 ticket,
                 positions,
+                _depth: depth,
             });
         }
         Ok(FleetTicket {

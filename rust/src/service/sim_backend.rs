@@ -139,6 +139,11 @@ pub struct SimBackendConfig {
     /// evaluated per job on each group's own job clock.  `None` injects
     /// nothing and costs nothing.
     pub fault: Option<FaultPlan>,
+    /// Pin each group's worker thread to its own core
+    /// ([`crate::util::threads::pin_to_core`], best effort, Linux only):
+    /// NUMA hygiene for long-lived gather loops.  Off by default — CI
+    /// runners and laptops share cores with everything else.
+    pub pin_cores: bool,
 }
 
 impl SimBackendConfig {
@@ -156,6 +161,7 @@ impl SimBackendConfig {
             legacy_path: false,
             resilience: ResilienceConfig::default(),
             fault: None,
+            pin_cores: false,
         }
     }
 
@@ -777,9 +783,17 @@ impl SimBackend {
                 resilience: resilience.clone(),
                 injector: injector.clone(),
             };
+            let pin = cfg.pin_cores;
             let handle = std::thread::Builder::new()
                 .name(format!("a100win-sim-g{g}"))
-                .spawn(move || queue.for_each_job(|job| worker.execute(job)))
+                .spawn(move || {
+                    if pin {
+                        // Best effort: an unpinnable core (shrunk cpuset,
+                        // exotic arch) must not take the worker down.
+                        let _ = crate::util::threads::pin_to_core(g);
+                    }
+                    queue.for_each_job(|job| worker.execute(job))
+                })
                 .context("spawning sim worker")?;
             workers.push(handle);
         }

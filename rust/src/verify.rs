@@ -10,7 +10,7 @@
 //! bounded space, not a lucky run.  `model_random` supplements the
 //! exhaustive passes with seeded unbounded-preemption schedules for depth.
 //!
-//! The six modeled protocols (EXPERIMENTS.md §Verify):
+//! The seven modeled protocols (EXPERIMENTS.md §Verify):
 //!
 //! 1. SPSC ring send/recv handshake, including the Dekker sleeping-flag
 //!    park/unpark with its `PARK_BACKSTOP` removed (the model's `park`
@@ -29,6 +29,12 @@
 //!    two-stripe pool hand the lone pooled slab to exactly one caller
 //!    (conservation — never duplicated, never stranded), and a get racing
 //!    a put never loses the slab, in every schedule.
+//! 7. The replication router (PR 9): the queue-depth gauge discipline
+//!    (`DepthGuard`'s paired inc/dec never underflows, P2C samples are
+//!    bounded by the true in-flight count) and the replica-set generation
+//!    swap — a routed reader's pinned snapshot stays coherent and its
+//!    depth unit balances through the *shared* gauge even when the
+//!    publisher retires that generation mid-request.
 //!
 //! Plus the ordering regression behind the PR's audit:
 //! [`tests::dekker_handshake_requires_seqcst`] re-derives *why* the ring's
@@ -49,7 +55,7 @@ mod tests {
     use crate::service::scatter::{ScatterBuf, SlabPool};
     use crate::service::session::GlobalAdmission;
     use crate::util::sync::thread::{self, Thread};
-    use crate::util::sync::{AtomicBool, AtomicUsize, CellSlot, Ordering};
+    use crate::util::sync::{AtomicBool, AtomicU64, AtomicUsize, CellSlot, Mutex, Ordering};
 
     /// Assert an exhaustive clean pass: no failure AND the bounded state
     /// space was fully explored (a capped-out run is not a proof).
@@ -477,6 +483,102 @@ mod tests {
                 1,
                 "slab lost or duplicated across the put/get race"
             );
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // T7: the replication router (PR 9).
+    // -----------------------------------------------------------------
+
+    /// The depth-gauge discipline behind power-of-two-choices routing, as
+    /// a minimal replica of `fleet::DepthGuard` (the fleet itself runs on
+    /// std atomics; like T0, the protocol *shape* is what is proven).
+    /// Two routed requests race: each samples both gauges (`Relaxed`, so
+    /// the checker also explores stale snapshots), routes to the
+    /// shallower, increments before submission, and decrements on drop.
+    /// In every schedule no sample ever exceeds the true in-flight count,
+    /// no decrement underflows, and both gauges drain to zero.
+    #[test]
+    fn depth_gauge_p2c_routing_never_underflows() {
+        assert_exhaustive_clean("depth gauge P2C discipline", || {
+            let gauges = Arc::new([AtomicU64::new(0), AtomicU64::new(0)]);
+            let route = |gauges: &Arc<[AtomicU64; 2]>| {
+                // RELAXED-equivalent snapshot: stale is allowed, the pick
+                // is only a heuristic — the guard pairing is the proof
+                // obligation.
+                let da = gauges[0].load(Ordering::Relaxed);
+                let db = gauges[1].load(Ordering::Relaxed);
+                assert!(da <= 2 && db <= 2, "sample exceeds in-flight count");
+                let pick = usize::from(db < da);
+                gauges[pick].fetch_add(1, Ordering::Relaxed);
+                let prev = gauges[pick].fetch_sub(1, Ordering::Relaxed);
+                assert!(prev >= 1, "depth gauge underflow");
+            };
+            let racer = {
+                let gauges = Arc::clone(&gauges);
+                thread::spawn(move || route(&gauges))
+            };
+            route(&gauges);
+            racer.join().unwrap();
+            assert_eq!(gauges[0].load(Ordering::Relaxed), 0, "gauge 0 leaked");
+            assert_eq!(gauges[1].load(Ordering::Relaxed), 0, "gauge 1 leaked");
+        });
+    }
+
+    /// The replica-set generation swap under a concurrently routed read:
+    /// the publisher builds the next generation *completely* (stamp and
+    /// unit list together, `publish_replicas`' shape) and swaps it behind
+    /// the state lock, while a reader pins the old snapshot, acquires a
+    /// depth unit through it, and releases after the swap.  In every
+    /// schedule the reader's snapshot is internally coherent (stamp
+    /// matches units — never torn), the retired generation stays alive
+    /// for the pinned reader, and the *shared* gauge balances across the
+    /// swap (the guard's decrement lands on the same gauge the new
+    /// generation routes by).
+    #[test]
+    fn replica_generation_swap_keeps_pinned_readers_coherent() {
+        struct Gen {
+            stamp: u64,
+            units: Vec<usize>,
+            gauge: Arc<AtomicU64>,
+        }
+        assert_exhaustive_clean("replica generation swap", || {
+            let gauge = Arc::new(AtomicU64::new(0));
+            let state = Arc::new(Mutex::new(Arc::new(Gen {
+                stamp: 0,
+                units: Vec::new(),
+                gauge: Arc::clone(&gauge),
+            })));
+            let reader = {
+                let state = Arc::clone(&state);
+                thread::spawn(move || {
+                    let snap = Arc::clone(&state.lock().unwrap());
+                    assert_eq!(
+                        snap.units.len() as u64,
+                        snap.stamp,
+                        "torn replica publish"
+                    );
+                    // DepthGuard::acquire under the pinned generation...
+                    snap.gauge.fetch_add(1, Ordering::Relaxed);
+                    // ...raced by the publisher's swap; the release must
+                    // still balance through the shared gauge.
+                    let prev = snap.gauge.fetch_sub(1, Ordering::Relaxed);
+                    assert!(prev >= 1, "depth gauge underflow across the swap");
+                })
+            };
+            // Publisher: retire generation 0 with a fully built successor
+            // sharing the same gauge (exactly `publish_replicas`).
+            let next = Arc::new(Gen {
+                stamp: 1,
+                units: vec![7],
+                gauge: Arc::clone(&gauge),
+            });
+            *state.lock().unwrap() = next;
+            reader.join().unwrap();
+            let live = Arc::clone(&state.lock().unwrap());
+            assert_eq!(live.stamp, 1);
+            assert_eq!(live.units, vec![7]);
+            assert_eq!(live.gauge.load(Ordering::Relaxed), 0, "gauge leaked");
         });
     }
 

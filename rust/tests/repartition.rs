@@ -282,6 +282,7 @@ fn migration_is_zero_copy_and_ticket_safe_mid_serving() {
             epoch: None, // manual control epochs
             sim_timescale: 0.0,
             legacy_path: false,
+            ..FleetConfig::default()
         },
     )
     .unwrap();

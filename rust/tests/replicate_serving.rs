@@ -1,0 +1,391 @@
+//! The replicate lever (hot-window read replication + power-of-two-choices
+//! routing, the fifth rung of the fleet ladder) end to end — hermetic (no
+//! `pjrt` feature, no artifacts):
+//!
+//! * **Live replication**: under zipf(1.1) the fleet ladder escalates past
+//!   migration and publishes a replica set mid-serving with pipelined
+//!   tickets in flight — every response stays row-identical, every replica
+//!   view aliases the one shared table slab (`Arc` pointer identity — no
+//!   row is copied), and the replica set passes its invariants against the
+//!   plan.
+//! * **P2C routing**: with replicas live, the hot shard's traffic spreads
+//!   over owner + replicas (every replica actually serves rows), sampled
+//!   in-flight queue depths stay within 2x of the mean, and the depth
+//!   gauges drain to zero once every ticket is redeemed.
+//! * **Uniform floor**: flat traffic never clears the hot-share gate, so
+//!   no replica is ever created.
+//! * **De-replication**: when the hotspot subsides the exit-share check
+//!   retires every replica (no drain — a ticket submitted before the drop
+//!   pins its generation and merges correctly), witnessed in the decision
+//!   trace, and the counter identity
+//!   `generations == redeal + resplit + migrate + repack + replicate`
+//!   holds throughout.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+use a100win::coordinator::{
+    AdaptiveConfig, BatcherConfig, CardSpec, ControlPlaneConfig, Lever, ReplicateConfig, Table,
+};
+use a100win::probe::TopologyMap;
+use a100win::service::{FleetConfig, FleetService, FleetTicket, RebalanceConfig, SimTiming};
+use a100win::workload::{synth::Distribution, RequestGen, WorkloadSpec};
+
+const CARDS: usize = 3;
+const D: usize = 4;
+const TOTAL_ROWS: u64 = 8_192;
+const ROW_BYTES: u64 = (D * 4) as u64;
+
+fn map(card: usize) -> TopologyMap {
+    TopologyMap {
+        groups: vec![vec![0, 1], vec![2, 3]],
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![100.0, 100.0],
+        independent: true,
+        card_id: format!("replicate-card{card}"),
+    }
+}
+
+/// Every card can host a whole-table replica on top of its own shard.
+fn card(i: usize) -> CardSpec {
+    CardSpec {
+        map: map(i),
+        memory_bytes: TOTAL_ROWS * ROW_BYTES,
+    }
+}
+
+fn quick_batcher() -> BatcherConfig {
+    BatcherConfig {
+        max_batch_rows: 4096,
+        max_wait: Duration::from_millis(1),
+        max_pending: 512,
+    }
+}
+
+/// A replication-armed fleet with an eager ladder: act on the first
+/// failing epoch, no cooldown (manual epochs are already rate-limited by
+/// the request loop), so the ladder walks redeal -> resplit -> migrate ->
+/// repack -> replicate in a handful of failing epochs.
+fn build_fleet(table: &Table, replicate: bool) -> FleetService {
+    FleetService::build_sim_with(
+        (0..CARDS).map(|i| (card(i), SimTiming::Probed)).collect(),
+        table,
+        FleetConfig {
+            batcher: quick_batcher(),
+            seed: 5,
+            adaptive: Some(AdaptiveConfig::default()),
+            rebalance: RebalanceConfig {
+                min_imbalance: 0.15,
+                min_epoch_rows: 512,
+                min_move_rows: 16,
+            },
+            control: ControlPlaneConfig {
+                min_imbalance: 0.10,
+                patience: 1,
+                cooldown: 0,
+                max_lever: Lever::Migrate, // raised to Replicate when armed
+                trace_len: 512,
+            },
+            // capacity_fraction 0: the demand gate compares wall-clock
+            // demand against *simulated* bandwidth, which no test loop can
+            // meet; the hot-share gate alone decides.
+            replicate: replicate.then(|| ReplicateConfig {
+                capacity_fraction: 0.0,
+                ..ReplicateConfig::default()
+            }),
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn spec(distribution: Distribution, seed: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        total_rows: TOTAL_ROWS,
+        distribution,
+        request_rows: (512, 512),
+        seed,
+    }
+}
+
+fn verify(out: &[f32], rows: &[u64], table: &Table) {
+    assert_eq!(out.len(), rows.len() * D);
+    for (k, &row) in rows.iter().enumerate() {
+        for j in 0..D {
+            assert_eq!(
+                out[k * D + j],
+                table.expected(row, j),
+                "row {row} column {j}"
+            );
+        }
+    }
+}
+
+/// Zero-copy discipline for the whole fleet: every owner card *and* every
+/// replica unit serves a view whose backing store is the one shared table
+/// slab, and each replica's view covers exactly its shard's row range.
+fn check_zero_copy(fleet: &FleetService, table: &Table) {
+    for svc in fleet.cards() {
+        let view = svc.backend().view().expect("sim backends expose views");
+        assert!(
+            Arc::ptr_eq(view.storage(), &table.data),
+            "owner card view does not alias the shared table slab"
+        );
+    }
+    let plan = fleet.plan();
+    for (shard, card, svc) in fleet.replica_cards() {
+        let view = svc.backend().view().expect("sim backends expose views");
+        assert!(
+            Arc::ptr_eq(view.storage(), &table.data),
+            "replica of shard {shard} on card {card} copied table data"
+        );
+        assert_eq!(view.start_row(), plan.shards[shard].start_row);
+        assert_eq!(view.rows(), plan.shards[shard].rows);
+    }
+    fleet
+        .replica_set()
+        .check(&plan, CARDS)
+        .expect("published replica set violates invariants");
+}
+
+/// `generations == redeal + resplit + migrate + repack + replicate` at
+/// fleet scope.
+fn check_counters(fleet: &FleetService) {
+    let m = fleet.fleet_metrics();
+    assert_eq!(
+        m.generations_published,
+        m.redeal_epochs + m.resplit_epochs + m.migrate_epochs + m.repack_epochs
+            + m.replicate_epochs,
+        "generation counters inconsistent"
+    );
+}
+
+/// Drive pipelined zipf traffic with a control epoch per submit until the
+/// replicate lever has published, verifying every drained response.
+/// Returns the in-flight queue at the moment replication went live.
+fn escalate_to_replication(
+    fleet: &FleetService,
+    table: &Table,
+    gen: &mut RequestGen,
+) -> VecDeque<(FleetTicket, Arc<Vec<u64>>)> {
+    let mut inflight: VecDeque<(FleetTicket, Arc<Vec<u64>>)> = VecDeque::new();
+    for _ in 0..60 {
+        let rows = Arc::new(gen.next_request());
+        let ticket = fleet.submit(Arc::clone(&rows), None).unwrap();
+        inflight.push_back((ticket, rows));
+        fleet.control_epoch();
+        if inflight.len() >= 8 {
+            let (t, rows) = inflight.pop_front().unwrap();
+            verify(&t.wait().unwrap(), &rows, table);
+        }
+        if fleet.fleet_metrics().replicas_created > 0 {
+            return inflight;
+        }
+    }
+    panic!("zipf(1.1) never escalated to a replication in 60 epochs");
+}
+
+// ---------------------------------------------------------------------------
+// 1. Live replication: zero-copy, ticket-safe, P2C-routed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replication_is_live_zero_copy_and_p2c_routed() {
+    let table = Table::synthetic(TOTAL_ROWS, D);
+    let fleet = build_fleet(&table, true);
+    let mut gen = RequestGen::new(spec(Distribution::Zipf { theta: 1.1 }, 31));
+
+    // Publication lands while old-generation tickets are in flight —
+    // exactly the swap generation pinning must make safe.
+    let mut inflight = escalate_to_replication(&fleet, &table, &mut gen);
+
+    let set = fleet.replica_set();
+    assert!(!set.is_empty(), "counter says created but set is empty");
+    assert!(set.generation > 0);
+    assert_eq!(
+        set.count(),
+        fleet.replica_cards().len(),
+        "replica units not position-matched to the set"
+    );
+    check_zero_copy(&fleet, &table);
+
+    // Tickets split before the publication merge correctly after it.
+    for (t, rows) in inflight.drain(..) {
+        verify(&t.wait().unwrap(), &rows, &table);
+    }
+
+    // P2C phase: keep a depth-8 pipeline and sample the live queue depths
+    // once the pipeline is full.
+    let mut depth_sum = vec![0u64; CARDS];
+    let mut samples = 0u64;
+    for _ in 0..120 {
+        let rows = Arc::new(gen.next_request());
+        let ticket = fleet.submit(Arc::clone(&rows), None).unwrap();
+        inflight.push_back((ticket, rows));
+        if inflight.len() >= 8 {
+            let depths = fleet.queue_depths();
+            assert_eq!(depths.len(), CARDS);
+            for (s, d) in depth_sum.iter_mut().zip(&depths) {
+                *s += d;
+            }
+            samples += 1;
+            let (t, rows) = inflight.pop_front().unwrap();
+            verify(&t.wait().unwrap(), &rows, &table);
+        }
+    }
+    for (t, rows) in inflight.drain(..) {
+        verify(&t.wait().unwrap(), &rows, &table);
+    }
+
+    // Every replica actually served rows — the hot shard's traffic really
+    // spread over the candidates (without P2C the owner serves it all).
+    for (shard, card, svc) in fleet.replica_cards() {
+        assert!(
+            svc.metrics().rows > 0,
+            "replica of shard {shard} on card {card} never served a row"
+        );
+    }
+
+    // Depth skew under zipf(1.1): sampled in-flight depth per card stays
+    // within 2x of the fleet mean.
+    assert!(samples > 0);
+    let means: Vec<f64> = depth_sum.iter().map(|&s| s as f64 / samples as f64).collect();
+    let mean = means.iter().sum::<f64>() / CARDS as f64;
+    let max = means.iter().fold(0.0f64, |a, &b| a.max(b));
+    assert!(mean > 0.0, "no in-flight depth was ever observed");
+    assert!(
+        max / mean <= 2.0,
+        "queue-depth skew: per-card means {means:?} (max/mean {:.2} > 2.0)",
+        max / mean
+    );
+
+    // Every guard released: the gauges drain to zero with nothing in
+    // flight.
+    assert_eq!(fleet.queue_depths(), vec![0; CARDS], "depth gauge leaked");
+
+    // Full-table row-content identity through the replicated map.
+    let all: Arc<Vec<u64>> = Arc::new((0..TOTAL_ROWS).step_by(37).collect());
+    verify(&fleet.lookup(Arc::clone(&all)).unwrap(), &all, &table);
+
+    check_counters(&fleet);
+    let m = fleet.fleet_metrics();
+    assert!(m.replicate_epochs >= 1);
+    assert!(m.replicas_created >= 1);
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 2. Uniform traffic never clears the hot-share gate.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uniform_traffic_never_replicates() {
+    let table = Table::synthetic(TOTAL_ROWS, D);
+    let fleet = build_fleet(&table, true);
+    let mut gen = RequestGen::new(spec(Distribution::Uniform, 3));
+    for i in 0..60 {
+        let rows = Arc::new(gen.next_request());
+        let out = fleet.lookup(Arc::clone(&rows)).unwrap();
+        if i % 20 == 0 {
+            verify(&out, &rows, &table);
+        }
+        fleet.control_epoch();
+    }
+    let m = fleet.fleet_metrics();
+    assert_eq!(m.replicas_created, 0, "uniform load must not replicate");
+    assert_eq!(m.replicate_epochs, 0);
+    assert!(fleet.replica_set().is_empty());
+    assert!(fleet.replica_cards().is_empty());
+    check_counters(&fleet);
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 3. De-replication when the hotspot subsides: no drain, trace-audited.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replicas_retire_when_the_hotspot_subsides() {
+    let table = Table::synthetic(TOTAL_ROWS, D);
+    let fleet = build_fleet(&table, true);
+    let mut gen = RequestGen::new(spec(Distribution::Zipf { theta: 1.1 }, 31));
+    let inflight = escalate_to_replication(&fleet, &table, &mut gen);
+    for (t, rows) in inflight {
+        verify(&t.wait().unwrap(), &rows, &table);
+    }
+    let set = fleet.replica_set();
+    assert!(!set.is_empty());
+
+    // A ticket submitted under the replicated generation, redeemed only
+    // *after* the drop below: its pinned generation keeps the retired
+    // replica backends alive (no drain barrier).
+    let pinned_rows: Arc<Vec<u64>> =
+        Arc::new((0..1_000u64).map(|i| (i * 7) % TOTAL_ROWS).collect());
+    let pinned = fleet.submit(Arc::clone(&pinned_rows), None).unwrap();
+
+    // Flat traffic collapses the hot shard's combined share under the
+    // exit floor; the drop is judged every epoch (de-escalation is not
+    // ladder-gated).
+    let mut uni = RequestGen::new(spec(Distribution::Uniform, 4242));
+    let mut retired_at = None;
+    for i in 0..80 {
+        let rows = Arc::new(uni.next_request());
+        verify(&fleet.lookup(Arc::clone(&rows)).unwrap(), &rows, &table);
+        fleet.control_epoch();
+        if fleet.replica_set().is_empty() {
+            retired_at = Some(i);
+            break;
+        }
+    }
+    let retired_at = retired_at.expect("uniform load never retired the replicas in 80 epochs");
+    assert!(fleet.replica_cards().is_empty(), "units outlived the set");
+    assert!(
+        fleet.replica_set().generation > set.generation,
+        "the empty set must publish a new replica generation"
+    );
+
+    // The pinned ticket still merges row-identically through the retired
+    // generation (epoch {retired_at} dropped it).
+    verify(&pinned.wait().unwrap(), &pinned_rows, &table);
+    assert_eq!(fleet.queue_depths(), vec![0; CARDS], "depth gauge leaked");
+
+    // Audited: the decision trace carries the drop, and the counters
+    // balance.
+    let dropped = fleet
+        .control_decisions()
+        .iter()
+        .any(|d| d.acted == Some(Lever::Replicate) && d.why.contains("dropped"));
+    assert!(dropped, "no drop decision in the trace (retired at {retired_at})");
+    let m = fleet.fleet_metrics();
+    assert!(m.replicas_dropped >= 1);
+    assert!(m.replicate_epochs >= 2, "one create + one drop at minimum");
+    check_counters(&fleet);
+
+    // Serving stays correct after the retirement.
+    let all: Arc<Vec<u64>> = Arc::new((0..TOTAL_ROWS).step_by(41).collect());
+    verify(&fleet.lookup(Arc::clone(&all)).unwrap(), &all, &table);
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 4. An unarmed fleet never replicates, whatever the skew.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unarmed_fleet_never_replicates() {
+    let table = Table::synthetic(TOTAL_ROWS, D);
+    let fleet = build_fleet(&table, false);
+    let mut gen = RequestGen::new(spec(Distribution::Zipf { theta: 1.1 }, 31));
+    for _ in 0..30 {
+        let rows = Arc::new(gen.next_request());
+        verify(&fleet.lookup(Arc::clone(&rows)).unwrap(), &rows, &table);
+        fleet.control_epoch();
+    }
+    let m = fleet.fleet_metrics();
+    assert_eq!(m.replicas_created, 0);
+    assert_eq!(m.replicate_epochs, 0);
+    assert!(fleet.replica_set().is_empty());
+    check_counters(&fleet);
+    fleet.shutdown();
+}

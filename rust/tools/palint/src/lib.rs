@@ -9,12 +9,12 @@
 //!   the same line or in the contiguous comment/attribute block directly
 //!   above.
 //! * **R2 — unjustified `Relaxed`.**  In the hot lock-free files
-//!   (`service/{ring,scatter,backend,session}.rs`,
+//!   (`service/{ring,scatter,backend,session,fleet}.rs`,
 //!   `coordinator/placement.rs`), an `Ordering::Relaxed` on a line that
 //!   names a hot-protocol atomic (`head`, `tail`, `sleeping`, `pushing`,
 //!   `closed`, `state`, `claimed`, `taken`, `remaining`, `generation`,
-//!   `slots[`) needs a `// RELAXED:` justification.  Telemetry counters
-//!   (other names) are exempt.
+//!   `depth`, `rr`, `slots[`) needs a `// RELAXED:` justification.
+//!   Telemetry counters (other names) are exempt.
 //! * **R3 — panic hygiene.**  Non-test code under `service/` and
 //!   `coordinator/` may not call `.unwrap()`, `.expect(…)`, `panic!`,
 //!   `todo!`, or `unimplemented!`.  Exemptions: lock-poison unwraps
@@ -23,7 +23,8 @@
 //!   justified with `// PANIC:`.  `unreachable!` is deliberately allowed —
 //!   it documents dead arms, it does not hide fallible paths.
 //! * **R4 — hot-path allocation.**  Between `// hotpath: begin` and
-//!   `// hotpath: end` fences in `ring.rs`, `scatter.rs`, `backend.rs`:
+//!   `// hotpath: end` fences in `ring.rs`, `scatter.rs`, `backend.rs`,
+//!   `fleet.rs`:
 //!   `Box::new`, `Vec::with_capacity`, `.to_vec(` and `vec![` are banned
 //!   outright, with no justification override.
 //!
@@ -58,6 +59,7 @@ const HOT_ORDERING_FILES: &[&str] = &[
     "service/scatter.rs",
     "service/backend.rs",
     "service/session.rs",
+    "service/fleet.rs",
     "coordinator/placement.rs",
 ];
 
@@ -73,10 +75,19 @@ const HOT_ATOMS: &[&str] = &[
     "taken",
     "remaining",
     "generation",
+    // Replication routing (fleet.rs): queue-depth gauges and the P2C
+    // rotation counter.
+    "depth",
+    "rr",
 ];
 
 /// Files that may carry `// hotpath:` allocation fences.
-const HOTPATH_FILES: &[&str] = &["service/ring.rs", "service/scatter.rs", "service/backend.rs"];
+const HOTPATH_FILES: &[&str] = &[
+    "service/ring.rs",
+    "service/scatter.rs",
+    "service/backend.rs",
+    "service/fleet.rs",
+];
 
 /// Tokens banned inside a hotpath fence.
 const ALLOC_TOKENS: &[&str] = &["Box::new", "Vec::with_capacity", ".to_vec(", "vec!["];
@@ -453,7 +464,13 @@ mod tests {
         let hot = "let tail = t.load(Ordering::Relaxed);\n";
         assert_eq!(rules("src/service/ring.rs", hot), vec!["R2"]);
         // Not a hot file: no finding.
-        assert!(rules("src/service/fleet.rs", hot).is_empty());
+        assert!(rules("src/coordinator/cluster.rs", hot).is_empty());
+        // fleet.rs joined the hot set with the replication router: the
+        // depth gauges and the P2C rotation counter are audited.
+        let depth = "let da = self.depth[ca].load(Ordering::Relaxed);\n";
+        assert_eq!(rules("src/service/fleet.rs", depth), vec!["R2"]);
+        let rr = "let t = rr.fetch_add(1, Ordering::Relaxed);\n";
+        assert_eq!(rules("src/service/fleet.rs", rr), vec!["R2"]);
         // Hot file but a telemetry counter name: no finding.
         let counter = "stats.submitted.fetch_add(1, Ordering::Relaxed);\n";
         assert!(rules("src/service/session.rs", counter).is_empty());
@@ -494,7 +511,9 @@ mod tests {
         // Unclosed fence is itself a finding.
         assert!(scan_file(p, "// hotpath: begin\n").iter().any(|f| f.rule == "R4"));
         // Fences are inert outside the hot files.
-        assert!(scan_file("src/service/fleet.rs", src).is_empty());
+        assert!(scan_file("src/coordinator/cluster.rs", src).is_empty());
+        // fleet.rs carries fences around the P2C routing path.
+        assert_eq!(scan_file("src/service/fleet.rs", src).len(), 1);
     }
 
     #[test]
