@@ -1,0 +1,199 @@
+//! Bench: what the network front door costs — the loopback TCP binary
+//! protocol (single pinned connection, then a pooled multi-connection
+//! closed loop) against the in-process facade baseline on the same sim
+//! backend with *probed* timing (no DES at serve time, no pacing), so
+//! the delta isolates framing + syscalls + the connection pool, exactly
+//! the overhead EXPERIMENTS.md §Net budgets.
+//!
+//! Emits `BENCH_net.json` (in the crate directory under `cargo bench`)
+//! so the wire-overhead trajectory is comparable across PRs.
+//!
+//! Flags (after `--`): `--smoke` shrinks the sweep for CI.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use a100win::coordinator::{BatcherConfig, Table, WindowPlan};
+use a100win::net::{ClientConfig, NetClient, NetConfig, NetServer, RemotePool, Target};
+use a100win::prelude::PlacementPolicy;
+use a100win::probe::TopologyMap;
+use a100win::service::{Service, SimBackend, SimBackendConfig, SimTiming};
+use a100win::util::json::Json;
+use a100win::util::rng::Rng;
+
+const D: usize = 32;
+const ROWS: u64 = 32_768;
+const POOL_CONNS: usize = 4;
+
+fn map4() -> TopologyMap {
+    TopologyMap {
+        groups: (0..4).map(|g| vec![g]).collect(),
+        reach_bytes: 1 << 33,
+        solo_gbps: vec![100.0; 4],
+        independent: true,
+        card_id: "net-bench".into(),
+    }
+}
+
+fn backend(table: &Table) -> Arc<SimBackend> {
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    cfg.batcher = BatcherConfig {
+        max_batch_rows: 8_192,
+        max_wait: std::time::Duration::from_micros(200),
+        max_pending: 4_096,
+    };
+    let plan = WindowPlan::split(table.rows, (D * 4) as u64, 4);
+    Arc::new(
+        SimBackend::start(cfg, &map4(), plan, table.view(), SimTiming::Probed)
+            .expect("start sim backend"),
+    )
+}
+
+fn payloads(table: &Table, batch: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..128)
+        .map(|_| (0..batch).map(|_| rng.gen_range(table.rows)).collect())
+        .collect()
+}
+
+fn spot_check(table: &Table, i: usize, rows: &[u64], out: &[f32]) {
+    assert_eq!(out.len(), rows.len() * D, "short response");
+    if i % 64 == 0 {
+        for (k, &row) in rows.iter().enumerate() {
+            for j in 0..D {
+                assert_eq!(out[k * D + j], table.expected(row, j), "row {row} col {j}");
+            }
+        }
+    }
+}
+
+/// In-process baseline: the facade without any wire.
+fn run_local(service: &Service, table: &Table, requests: usize, batch: usize) -> f64 {
+    let pay = payloads(table, batch, 11);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let rows = &pay[i % pay.len()];
+        let out = service.lookup(Arc::new(rows.clone())).expect("local lookup");
+        spot_check(table, i, rows, &out);
+        service.recycle(out);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// One pinned connection, strict request→response: the per-round-trip
+/// floor of the wire path (framing + 2 syscalls + decode, no pooling).
+fn run_remote_pinned(client: &mut NetClient, table: &Table, requests: usize, batch: usize) -> f64 {
+    let pay = payloads(table, batch, 11);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let rows = &pay[i % pay.len()];
+        let partial = client
+            .lookup_reuse(rows, None)
+            .expect("remote lookup");
+        assert!(!partial, "clean loopback run went partial");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Pooled closed loop: `POOL_CONNS` threads each running request→response
+/// through the shared pool — the `bench-serve --remote` shape.
+fn run_remote_pool(pool: &RemotePool, table: &Table, requests: usize, batch: usize) -> f64 {
+    let per_thread = requests / POOL_CONNS;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..POOL_CONNS {
+            let pay = payloads(table, batch, 11 + t as u64);
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    pool.request_pinned(&pay[i % pay.len()], None)
+                        .expect("pooled remote lookup");
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let batches: &[usize] = &[16, 256, 2048];
+    let total_rows: usize = if smoke { 65_536 } else { 1 << 20 };
+
+    let table = Table::synthetic(ROWS, D);
+    let service = Service::new(backend(&table));
+    let mut server = NetServer::start(
+        Target::Single(Service::new(backend(&table))),
+        NetConfig::default(),
+    )
+    .expect("start net server");
+    let addr = server.addr().to_string();
+    let mut pinned = NetClient::connect(&addr, ClientConfig::default()).expect("connect");
+    let pool = RemotePool::new(addr, ClientConfig::default(), POOL_CONNS);
+    pool.connect_warm(POOL_CONNS).expect("warm pool");
+
+    println!("# Network edge ({}, d={D}, {ROWS} rows)", if smoke { "smoke" } else { "full" });
+    println!(
+        "{:>14} {:>6} {:>10} {:>14} {:>10}",
+        "arm", "batch", "requests", "requests/s", "us/req"
+    );
+
+    let mut arms = Vec::new();
+    for &batch in batches {
+        let requests = (total_rows / batch).max(POOL_CONNS * 8);
+        // Warmup fills every pool (slabs, shells, frame buffers) so the
+        // measured loops see steady state.
+        run_local(&service, &table, 64, batch);
+        run_remote_pinned(&mut pinned, &table, 64, batch);
+        run_remote_pool(&pool, &table, POOL_CONNS * 8, batch);
+        let runs: [(&str, f64); 3] = [
+            ("local", run_local(&service, &table, requests, batch)),
+            (
+                "remote-pinned",
+                run_remote_pinned(&mut pinned, &table, requests, batch),
+            ),
+            (
+                "remote-pooled",
+                run_remote_pool(&pool, &table, requests, batch),
+            ),
+        ];
+        for (arm, secs) in runs {
+            let rps = requests as f64 / secs;
+            let us = secs * 1e6 / requests as f64;
+            println!("{arm:>14} {batch:>6} {requests:>10} {rps:>14.0} {us:>10.2}");
+            arms.push((arm, batch, requests, rps, us));
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("workload", Json::str("net_edge")),
+        ("smoke", Json::num(if smoke { 1u32 } else { 0u32 })),
+        ("d", Json::num(D as u32)),
+        ("rows", Json::num(ROWS as u32)),
+        ("pool_conns", Json::num(POOL_CONNS as u32)),
+        (
+            "arms",
+            Json::arr(
+                arms.iter()
+                    .map(|&(arm, batch, requests, rps, us)| {
+                        Json::obj(vec![
+                            ("arm", Json::str(arm)),
+                            ("batch", Json::num(batch as u32)),
+                            ("requests", Json::num(requests as u32)),
+                            ("requests_per_s", Json::num(rps)),
+                            ("us_per_request", Json::num(us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_net.json";
+    match std::fs::write(path, json.to_string_pretty()) {
+        Ok(()) => println!("[json] wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    service.shutdown();
+    let report = server.drain(std::time::Duration::from_secs(5));
+    assert!(report.completed, "bench drain left work behind: {report:?}");
+}

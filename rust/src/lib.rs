@@ -19,8 +19,11 @@
 //!   placement, routing, batching, the PJRT server, fleet plans, metrics.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas gather
 //!   kernels (`artifacts/*.hlo.txt`); python never runs at request time.
+//! * [`net`] — the network front door over the facade: a fault-tolerant
+//!   length-prefixed binary protocol plus an HTTP health/lookup channel,
+//!   with explicit overload shedding and a graceful-drain lifecycle.
 //! * [`workload`] — request/trace/open-loop generators; backend-agnostic
-//!   clients of the facade.
+//!   clients of the facade (local or remote via [`net::RemotePool`]).
 //! * [`experiments`] — one driver per paper figure.
 //!
 //! ## Concurrency verification
@@ -40,6 +43,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod net;
 pub mod probe;
 pub mod runtime;
 pub mod service;
@@ -63,6 +67,9 @@ pub mod prelude {
     pub use crate::coordinator::placement::{Placer, PlacementPolicy, StaticPlacer};
     pub use crate::coordinator::replan::{PlanSplitter, SplitterConfig};
     pub use crate::coordinator::table::{Table, TableView};
+    pub use crate::net::{
+        ClientConfig, NetClient, NetConfig, NetFaultPlan, NetServer, RemotePool, Target,
+    };
     pub use crate::probe::{report::TopologyMap, Prober};
     pub use crate::service::{
         Backend, FleetConfig, FleetService, GlobalAdmission, Service, SessionConfig,

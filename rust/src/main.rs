@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use a100win::config::MachineConfig;
 use a100win::coordinator::{
@@ -12,14 +12,17 @@ use a100win::coordinator::{
     PlacementPolicy, RemapConfig, ReplicateConfig, ServerConfig, SplitterConfig, Table,
     WindowPlan,
 };
+use a100win::coordinator::GroupHealth;
 use a100win::experiments::{self, Effort};
+use a100win::net::{ClientConfig, NetClient, NetConfig, NetFaultPlan, NetServer, RemotePool, Target};
 use a100win::probe::{ProbeConfig, Prober, TopologyMap};
 use a100win::runtime::Runtime;
 use a100win::service::{
-    FleetConfig, FleetService, GlobalAdmission, OverloadPolicy, ResilienceConfig, Service,
-    SessionConfig, SimBackend, SimBackendConfig, SimTiming,
+    FleetConfig, FleetService, GlobalAdmission, Outcome, OverloadPolicy, ResilienceConfig,
+    Service, SessionConfig, SimBackend, SimBackendConfig, SimTiming,
 };
-use a100win::sim::{FaultPlan, Machine};
+use a100win::sim::{FaultPlan, Machine, StallKind};
+use a100win::util::json::Json;
 use a100win::workload::{
     drive, drive_chaos, synth::Distribution, ChaosConfig, ChaosReport, OpenLoopConfig, RequestGen,
     WorkloadSpec,
@@ -40,6 +43,11 @@ USAGE:
                     [--skew-drift drift:SKEW:PERIOD] [--cards N] [--sim-timescale F]
                     [--remap] [--replicate] [--verify N]
                     [--chaos [--seed N] [--deadline-ms N]]  (chaos soak, see below)
+                    [--remote [--conns N]]  (drive over loopback TCP, see below)
+    a100win serve-net [--port N] [--http-port N] [--cards N] [--windows N]
+                    [--rows-per-window N] [--max-conns N] [--global-slots N]
+                    [--sim-timescale F] [--selfcheck N] [--duration-ms N]
+                    [--drain-ms N]
     a100win explain [--seed N]
     a100win remote  [--peers N] [--region-gib N]
     a100win analytic [--region-gib N]
@@ -92,6 +100,25 @@ SUBCOMMANDS:
              unbounded failure-resolution p99.  --seed picks the fault
              schedule, --deadline-ms the per-request deadline, --verify
              N re-checks N requests after the soak settles.
+             --remote runs the sweep (or, with --chaos, the soak) through
+             the network front door: an in-process serve-net server on
+             loopback TCP driven by a pooled binary-protocol client
+             (--conns N connections).  The remote chaos soak additionally
+             injects deterministic *transport* faults client-side (torn
+             frames, half-closes, connection drops) and finishes with a
+             graceful-drain demonstration: in-flight requests complete
+             while a new connection is refused with an explicit shed
+             response.
+    serve-net
+             serve the binary wire protocol on --port (0 = ephemeral) and
+             the HTTP health/lookup channel on --http-port.  Overload is
+             shed explicitly (Shed frames / HTTP 429+503), slow-loris
+             clients are disconnected, and shutdown is a graceful drain:
+             stop accepting, finish in-flight tickets, release slabs.
+             --selfcheck N verifies N requests end-to-end over loopback
+             (plus /healthz, /readyz, and a JSON lookup) and exits via
+             drain; otherwise the server runs for --duration-ms then
+             drains (--drain-ms bounds the wait).
     explain  print machine config, ground-truth topology, and what the
              paper's technique does on this card
     remote   NVLink ingress experiment: the paper's OTHER 64GB TLB (§1.2)
@@ -129,6 +156,23 @@ impl Args {
             }
         }
         Ok(Self { positional, flags })
+    }
+
+    /// Reject any flag the subcommand does not define.  A typo'd flag
+    /// must be an error, not a silent no-op: `--choas` quietly running
+    /// the *benchmark* instead of the chaos soak is how a CI gate rots.
+    fn reject_unknown(&self, cmd: &str, allowed: &[&str]) -> anyhow::Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        if let Some(first) = unknown.first() {
+            anyhow::bail!("unknown flag --{first} for '{cmd}' (see `a100win help`)");
+        }
+        Ok(())
     }
 
     fn flag(&self, name: &str) -> Option<&str> {
@@ -181,11 +225,13 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..])?;
+    args.reject_unknown(cmd, allowed_flags(cmd))?;
     match cmd {
         "probe" => cmd_probe(&args),
         "fig" => cmd_fig(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "serve-net" => cmd_serve_net(&args),
         "explain" => cmd_explain(&args),
         "remote" => cmd_remote(&args),
         "analytic" => cmd_analytic(&args),
@@ -196,6 +242,63 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         other => {
             anyhow::bail!("unknown subcommand '{other}' (try `a100win help`)")
         }
+    }
+}
+
+/// The full flag vocabulary per subcommand ([`Args::reject_unknown`]).
+fn allowed_flags(cmd: &str) -> &'static [&'static str] {
+    match cmd {
+        "probe" => &["seed", "out", "effort"],
+        "fig" => &["seed", "effort"],
+        "serve" => &[
+            "backend",
+            "policy",
+            "windows",
+            "requests",
+            "rows-per-request",
+            "cards",
+            "rows-per-window",
+            "artifacts",
+        ],
+        "bench-serve" => &[
+            "backend",
+            "policy",
+            "placer",
+            "windows",
+            "rows-per-request",
+            "duration-ms",
+            "rps",
+            "requests",
+            "skew",
+            "skew-drift",
+            "cards",
+            "sim-timescale",
+            "remap",
+            "replicate",
+            "verify",
+            "chaos",
+            "seed",
+            "deadline-ms",
+            "remote",
+            "conns",
+        ],
+        "serve-net" => &[
+            "port",
+            "http-port",
+            "cards",
+            "windows",
+            "rows-per-window",
+            "max-conns",
+            "global-slots",
+            "sim-timescale",
+            "selfcheck",
+            "duration-ms",
+            "drain-ms",
+        ],
+        "explain" => &["seed"],
+        "remote" => &["peers", "region-gib"],
+        "analytic" => &["region-gib"],
+        _ => &[],
     }
 }
 
@@ -553,6 +656,10 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         "sim" => {}
         other => anyhow::bail!("bench-serve only supports --backend sim, got '{other}'"),
     }
+    if args.bool_flag("remote") {
+        // The sweep (or soak) through the network front door.
+        return cmd_bench_remote(args);
+    }
     if args.bool_flag("chaos") {
         return cmd_chaos(args);
     }
@@ -619,17 +726,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     if !timescale.is_finite() || timescale < 0.0 {
         anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
     }
-    let rps_list: Vec<f64> = match args.flag("rps") {
-        None => vec![1_000.0, 4_000.0, 16_000.0, 64_000.0],
-        Some(s) => s
-            .split(',')
-            .map(|x| {
-                x.trim()
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("--rps expects numbers, got '{x}'"))
-            })
-            .collect::<anyhow::Result<_>>()?,
-    };
+    let rps_list = parse_rps(args)?;
 
     if replicate.is_some() && cards < 2 {
         anyhow::bail!("--replicate needs --cards > 1 (a replica lives on another card)");
@@ -1193,6 +1290,592 @@ fn print_chaos_report(scope: &str, r: &ChaosReport, deadline: Duration) -> anyho
     Ok(())
 }
 
+/// The QPS ladder shared by the local and remote sweeps.
+fn parse_rps(args: &Args) -> anyhow::Result<Vec<f64>> {
+    match args.flag("rps") {
+        None => Ok(vec![1_000.0, 4_000.0, 16_000.0, 64_000.0]),
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--rps expects numbers, got '{x}'"))
+            })
+            .collect(),
+    }
+}
+
+/// Build a sim-backed serving target (one card or a fleet) and put the
+/// network edge in front of it.  `fault` sees the backend's group count
+/// and may return a deterministic fault schedule; `resilient` arms the
+/// full retry/hedge/partial/breaker stack plus adaptive epoching (so
+/// health flaps are observed and healed).  The single-card path wires a
+/// `/readyz` probe to group health: ready while at least one group is
+/// live, so a balancer stops routing on total outage before clients see
+/// errors.
+fn start_net_server(
+    cards: usize,
+    windows: usize,
+    rows_per_window: u64,
+    timescale: f64,
+    fault: impl FnOnce(usize) -> Option<FaultPlan>,
+    resilient: bool,
+    net: NetConfig,
+) -> anyhow::Result<(NetServer, Table)> {
+    if cards > 1 {
+        let mut specs = Vec::new();
+        for i in 0..cards {
+            let machine = machine_with_seed(0xA100 + 0x1111 * i as u64)?;
+            let spec = CardSpec {
+                map: TopologyMap::ground_truth(&machine),
+                memory_bytes: machine.config().memory.total_bytes,
+            };
+            specs.push((spec, SimTiming::Probed));
+        }
+        let groups = specs[0].0.map.groups.len();
+        let rows = rows_per_window * cards as u64;
+        let table = Table::synthetic(rows, SERVE_D);
+        let mut cfg = FleetConfig {
+            epoch: Some(Duration::from_millis(20)),
+            sim_timescale: timescale,
+            fault: fault(groups),
+            ..FleetConfig::default()
+        };
+        if resilient {
+            cfg.adaptive = Some(AdaptiveConfig {
+                epoch: Some(Duration::from_millis(20)),
+                ..AdaptiveConfig::default()
+            });
+            cfg.resilience = ResilienceConfig::full();
+        }
+        let fleet = Arc::new(FleetService::build_sim_with(specs, &table, cfg)?);
+        let server = NetServer::start(Target::Fleet(fleet), net)?;
+        Ok((server, table))
+    } else {
+        let machine = machine_with_seed(0xA100)?;
+        let map = TopologyMap::ground_truth(&machine);
+        let groups = map.groups.len();
+        let rows = rows_per_window * windows.max(1) as u64;
+        let table = Table::synthetic(rows, SERVE_D);
+        let plan = WindowPlan::split(rows, (SERVE_D * 4) as u64, windows);
+        let mut cfg = SimBackendConfig::new(PlacementPolicy::parse("group-to-chunk")?);
+        cfg.sim_timescale = timescale;
+        cfg.fault = fault(groups);
+        if resilient {
+            cfg.adaptive = Some(AdaptiveConfig {
+                epoch: Some(Duration::from_millis(20)),
+                ..AdaptiveConfig::default()
+            });
+            cfg.resilience = ResilienceConfig::full();
+        }
+        let backend = Arc::new(SimBackend::start(
+            cfg,
+            &map,
+            plan,
+            table.view(),
+            SimTiming::Probed,
+        )?);
+        let probe_backend = Arc::clone(&backend);
+        let ready: a100win::net::server::ReadyProbe = Box::new(move || {
+            probe_backend
+                .health_state()
+                .health
+                .iter()
+                .any(|h| !matches!(h, GroupHealth::Failed))
+        });
+        let server =
+            NetServer::start_with_probe(Target::Single(Service::new(backend)), net, Some(ready))?;
+        Ok((server, table))
+    }
+}
+
+fn cmd_serve_net(args: &Args) -> anyhow::Result<()> {
+    let port = args.u64_flag("port", 0)?;
+    let http_port = args.u64_flag("http-port", 0)?;
+    let cards = args.u64_flag("cards", 1)? as usize;
+    let windows = args.u64_flag("windows", 2)? as usize;
+    let rows_per_window = args.u64_flag("rows-per-window", 32_768)?;
+    let max_conns = args.u64_flag("max-conns", 64)? as usize;
+    let global_slots = args.u64_flag("global-slots", 256)? as usize;
+    let timescale = args.f64_flag("sim-timescale", 0.0)?;
+    if !timescale.is_finite() || timescale < 0.0 {
+        anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
+    }
+    let selfcheck = args.u64_flag("selfcheck", 0)?;
+    let duration = Duration::from_millis(args.u64_flag("duration-ms", 2_000)?);
+    let drain_budget = Duration::from_millis(args.u64_flag("drain-ms", 5_000)?);
+
+    let net = NetConfig {
+        addr: format!("127.0.0.1:{port}"),
+        http_addr: Some(format!("127.0.0.1:{http_port}")),
+        max_conns,
+        global_slots,
+        ..NetConfig::default()
+    };
+    let (mut server, table) =
+        start_net_server(cards, windows, rows_per_window, timescale, |_| None, false, net)?;
+    println!(
+        "serve-net: binary protocol on {}, http on {} ({} rows x {} f32, {} card{})",
+        server.addr(),
+        server
+            .http_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|| "-".into()),
+        table.rows,
+        SERVE_D,
+        cards,
+        if cards == 1 { "" } else { "s" }
+    );
+    if selfcheck > 0 {
+        selfcheck_net(&server, &table, selfcheck)?;
+    } else {
+        std::thread::sleep(duration);
+    }
+    let report = server.drain(drain_budget);
+    println!(
+        "drain: completed={} after {} ms ({} in flight at start, {} conns refused)",
+        report.completed,
+        report.waited.as_millis(),
+        report.in_flight_at_start,
+        report.refused_conns
+    );
+    println!("net: {}", server.metrics());
+    server.shutdown();
+    anyhow::ensure!(report.completed, "graceful drain left in-flight work behind");
+    Ok(())
+}
+
+/// `serve-net --selfcheck N`: N verified lookups over loopback TCP, then
+/// `/healthz`, `/readyz`, and one JSON lookup over the HTTP channel.
+fn selfcheck_net(server: &NetServer, table: &Table, n: u64) -> anyhow::Result<()> {
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, ClientConfig::default())?;
+    anyhow::ensure!(
+        client.d() == table.d && client.rows() == table.rows,
+        "HelloAck shape mismatch: ({}, {}) vs table ({}, {})",
+        client.d(),
+        client.rows(),
+        table.d,
+        table.rows
+    );
+    let d = table.d;
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(table.rows, 64, 11));
+    let mut verified = 0u64;
+    for _ in 0..n {
+        let rows = gen.next_request();
+        match client.lookup(&rows, None)? {
+            Outcome::Full(data) => {
+                anyhow::ensure!(data.len() == rows.len() * d, "short response");
+                for (k, &row) in rows.iter().enumerate() {
+                    for j in 0..d {
+                        anyhow::ensure!(
+                            data[k * d + j] == table.expected(row, j),
+                            "row {row} column {j}: got {} want {}",
+                            data[k * d + j],
+                            table.expected(row, j)
+                        );
+                    }
+                }
+                verified += rows.len() as u64;
+            }
+            Outcome::Partial { .. } => {
+                anyhow::bail!("selfcheck got a partial result with no deadline and no faults")
+            }
+        }
+    }
+    println!("selfcheck: {n} TCP requests, {verified} rows verified");
+
+    let Some(http) = server.http_addr() else {
+        return Ok(());
+    };
+    let http = http.to_string();
+    let (status, body) = http_request(
+        &http,
+        "GET /healthz HTTP/1.1\r\nHost: a100win\r\nConnection: close\r\n\r\n",
+    )?;
+    let state = Json::parse(&body)
+        .ok()
+        .and_then(|j| j.get("state").and_then(Json::as_str).map(String::from));
+    anyhow::ensure!(
+        status == 200 && state.as_deref() == Some("serving"),
+        "healthz: status {status}, state {state:?}"
+    );
+    let (status, _) = http_request(
+        &http,
+        "GET /readyz HTTP/1.1\r\nHost: a100win\r\nConnection: close\r\n\r\n",
+    )?;
+    anyhow::ensure!(status == 200, "readyz: not ready (status {status})");
+    let lookup_body = "{\"rows\":[0,1,2]}";
+    let req = format!(
+        "POST /v1/lookup HTTP/1.1\r\nHost: a100win\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{lookup_body}",
+        lookup_body.len()
+    );
+    let (status, body) = http_request(&http, &req)?;
+    anyhow::ensure!(status == 200, "http lookup: status {status}, body {body}");
+    let parsed = Json::parse(&body)?;
+    let data = parsed
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("http lookup response has no \"data\": {body}"))?;
+    anyhow::ensure!(
+        data.len() == 3 * d,
+        "http lookup: {} values for 3 rows of d={d}",
+        data.len()
+    );
+    for (k, row) in (0u64..3).enumerate() {
+        for j in 0..d {
+            let got = data[k * d + j]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric value in \"data\""))?;
+            anyhow::ensure!(
+                got as f32 == table.expected(row, j),
+                "http lookup row {row} column {j}: got {got} want {}",
+                table.expected(row, j)
+            );
+        }
+    }
+    println!("selfcheck: /healthz, /readyz, and a JSON lookup verified");
+    Ok(())
+}
+
+/// Minimal HTTP client for the selfcheck: one request, `Connection:
+/// close`, returns (status, body).
+fn http_request(addr: &str, request: &str) -> anyhow::Result<(u16, String)> {
+    use std::io::{Read as _, Write as _};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(request.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.get(..3))
+        .and_then(|code| code.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response: {resp:.60}"))?;
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+/// `bench-serve --remote`: the open-loop sweep (or chaos soak) through
+/// the network front door — an in-process `serve-net` server on loopback
+/// driven by a pooled binary-protocol client.
+fn cmd_bench_remote(args: &Args) -> anyhow::Result<()> {
+    if args.u64_flag("cards", 1)? > 1 {
+        anyhow::bail!("--remote drives a single-card server; drop --cards");
+    }
+    for f in ["placer", "remap", "replicate", "policy"] {
+        anyhow::ensure!(
+            !args.bool_flag(f),
+            "--{f} does not apply to --remote (the server pins group-to-chunk placement)"
+        );
+    }
+    if args.bool_flag("chaos") {
+        return remote_chaos(args);
+    }
+    let windows = args.u64_flag("windows", 2)? as usize;
+    let rows_per_request = args.u64_flag("rows-per-request", 256)? as usize;
+    let duration = Duration::from_millis(args.u64_flag("duration-ms", 300)?);
+    let max_requests = match args.u64_flag("requests", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let timescale = args.f64_flag("sim-timescale", 0.0)?;
+    if !timescale.is_finite() || timescale < 0.0 {
+        anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
+    }
+    let conns = (args.u64_flag("conns", 8)? as usize).max(1);
+    let skew = match args.flag("skew-drift") {
+        Some(spec) => Distribution::parse(spec)?,
+        None => Distribution::parse(args.flag("skew").unwrap_or("uniform"))?,
+    };
+    let rps_list = parse_rps(args)?;
+
+    let (mut server, table) =
+        start_net_server(1, windows, 32_768, timescale, |_| None, false, NetConfig::default())?;
+    let pool = RemotePool::new(server.addr().to_string(), ClientConfig::default(), conns);
+    let warmed = pool.connect_warm(conns)?;
+    let (d, rows) = pool.probe()?;
+    anyhow::ensure!(
+        d == table.d && rows == table.rows,
+        "HelloAck shape mismatch: ({d}, {rows}) vs table ({}, {})",
+        table.d,
+        table.rows
+    );
+    println!(
+        "remote open-loop sweep: {} on loopback TCP, {warmed} pooled conns, skew {skew:?}, \
+         {windows} windows, {rows_per_request} rows/request, {} ms per point{}",
+        server.addr(),
+        duration.as_millis(),
+        if timescale > 0.0 {
+            format!(", paced at {timescale}x sim time")
+        } else {
+            String::new()
+        }
+    );
+    println!(
+        "{:>12} {:>12} {:>10} {:>10} {:>8} {:>8}",
+        "offered_rps", "achieved_rps", "mean_us", "p99_us", "dropped", "errors"
+    );
+    for offered in rps_list {
+        let mut gen = RequestGen::new(WorkloadSpec {
+            total_rows: table.rows,
+            distribution: skew.clone(),
+            request_rows: (rows_per_request, rows_per_request),
+            seed: 42,
+        });
+        let cfg = OpenLoopConfig {
+            duration,
+            max_requests,
+            ..OpenLoopConfig::default()
+        };
+        let p = drive(&pool, &mut gen, offered, &cfg);
+        println!(
+            "{:>12.0} {:>12.0} {:>10.0} {:>10} {:>8} {:>8}",
+            p.offered_rps, p.achieved_rps, p.mean_latency_us, p.p99_latency_us, p.dropped, p.errors
+        );
+    }
+
+    let verify_n = args.u64_flag("verify", 0)?;
+    if verify_n > 0 {
+        // Same regression guard as the local sweep, through the wire:
+        // every returned row decoded from frames and checked.
+        let vreport = drive_chaos(
+            &pool,
+            &table,
+            &ChaosConfig {
+                requests: verify_n as usize,
+                request_rows: (rows_per_request, rows_per_request),
+                distribution: Distribution::Uniform,
+                seed: 0xC0FFEE,
+                deadline: None,
+                concurrency: 4,
+            },
+        );
+        anyhow::ensure!(
+            vreport.failed == 0 && vreport.partials == 0,
+            "remote verify: {} failures, {} partials on a clean loopback path",
+            vreport.failed,
+            vreport.partials
+        );
+        anyhow::ensure!(
+            vreport.corrupted_rows == 0 && vreport.mask_violations == 0,
+            "remote verify delivered corrupted rows: {vreport:?}"
+        );
+        println!(
+            "verify: {verify_n} requests ({} rows) checked over the wire",
+            vreport.valid_rows_checked
+        );
+    }
+    println!("net: {}", server.metrics());
+    println!("pool: {} conns dialed for {} slots", pool.dials(), conns);
+    let report = server.drain(Duration::from_secs(10));
+    println!(
+        "drain: completed={} after {} ms ({} in flight at start, {} conns refused)",
+        report.completed,
+        report.waited.as_millis(),
+        report.in_flight_at_start,
+        report.refused_conns
+    );
+    server.shutdown();
+    anyhow::ensure!(report.completed, "graceful drain left in-flight work behind");
+    Ok(())
+}
+
+/// `bench-serve --remote --chaos`: backend faults (stalls, outages,
+/// flapping health) *and* client-side transport faults (torn frames,
+/// half-closes, dropped connections) fire together against the armed
+/// resilience stack; every delivered row is verified, then the run ends
+/// with a drain-under-load demonstration.
+fn remote_chaos(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64_flag("seed", 7)?;
+    let requests = args.u64_flag("requests", 400)? as usize;
+    let rows_per_request = (args.u64_flag("rows-per-request", 96)? as usize).max(1);
+    let windows = args.u64_flag("windows", 4)? as usize;
+    let timescale = args.f64_flag("sim-timescale", 8.0)?;
+    if !timescale.is_finite() || timescale < 0.0 {
+        anyhow::bail!("--sim-timescale must be a finite non-negative number, got {timescale}");
+    }
+    let deadline = Duration::from_millis(args.u64_flag("deadline-ms", 250)?);
+    let verify_n = args.u64_flag("verify", 0)?;
+    let conns = (args.u64_flag("conns", 8)? as usize).max(1);
+
+    let (mut server, table) = start_net_server(
+        1,
+        windows,
+        32_768,
+        timescale,
+        |groups| Some(FaultPlan::chaos(seed, groups)),
+        true,
+        NetConfig::default(),
+    )?;
+    let pool = RemotePool::with_faults(
+        server.addr().to_string(),
+        ClientConfig::default(),
+        conns,
+        NetFaultPlan::chaos(seed),
+    );
+    println!(
+        "remote chaos soak: seed {seed}, {requests} requests of up to {rows_per_request} rows \
+         over {conns} loopback conns, backend + transport faults, deadline {} ms, \
+         paced at {timescale}x sim time",
+        deadline.as_millis()
+    );
+    let report = drive_chaos(
+        &pool,
+        &table,
+        &ChaosConfig {
+            requests,
+            request_rows: ((rows_per_request / 4).max(1), rows_per_request),
+            distribution: Distribution::parse("drift:zipf:1.1:400")?,
+            seed,
+            deadline: Some(deadline),
+            concurrency: 8,
+        },
+    );
+    print_chaos_report("net-soak", &report, deadline)?;
+    println!(
+        "pool: {} conns dialed for {} slots (re-dials replace poisoned conns)",
+        pool.dials(),
+        conns
+    );
+    println!("net: {}", server.metrics());
+
+    if verify_n > 0 {
+        // Fresh pool, no transport faults, no deadline: after the soak
+        // settles every row must come back exact.
+        let clean = RemotePool::new(server.addr().to_string(), ClientConfig::default(), 4);
+        let vreport = drive_chaos(
+            &clean,
+            &table,
+            &ChaosConfig {
+                requests: verify_n as usize,
+                request_rows: (rows_per_request, rows_per_request),
+                distribution: Distribution::Uniform,
+                seed: seed ^ 0xC0FFEE,
+                deadline: None,
+                concurrency: 4,
+            },
+        );
+        print_chaos_report("net-verify", &vreport, deadline)?;
+        println!("verify: {verify_n} requests checked over a clean connection pool");
+    }
+
+    let drained = server.drain(Duration::from_secs(10));
+    println!(
+        "drain: completed={} after {} ms ({} in flight at start, {} conns refused)",
+        drained.completed,
+        drained.waited.as_millis(),
+        drained.in_flight_at_start,
+        drained.refused_conns
+    );
+    server.shutdown();
+    anyhow::ensure!(drained.completed, "graceful drain left in-flight work behind");
+
+    drain_under_load_demo(seed)
+}
+
+/// The acceptance demo for the drain lifecycle, on a fresh server whose
+/// every group is stalled hard (paced wall clock makes one request take
+/// on the order of 100 ms): a drain started mid-request must wait for
+/// it, refuse a new connection with an explicit `shed(draining)`
+/// response, and report completion.  Resilience stays OFF so a hedge or
+/// retry cannot shortcut the stall and close the observation window.
+fn drain_under_load_demo(seed: u64) -> anyhow::Result<()> {
+    let stall_all = |groups: usize| {
+        let mut plan = FaultPlan::new(seed);
+        for g in 0..groups {
+            plan = plan.stall(g, 0, u64::MAX, StallKind::Fixed(200_000.0));
+        }
+        Some(plan)
+    };
+    let (mut server, table) =
+        start_net_server(1, 2, 32_768, 20.0, stall_all, false, NetConfig::default())?;
+    let addr = server.addr().to_string();
+    let mut client = NetClient::connect(&addr, ClientConfig::default())?;
+    let rows: Vec<u64> = (0..256u64).map(|i| (i * 97) % table.rows).collect();
+    let rows_ref = &rows;
+
+    let (outcome, in_flight_seen, drained, shed_msg) = std::thread::scope(|s| {
+        let lookup = s.spawn(move || client.lookup(rows_ref, None));
+        // Wait until the request is admitted before starting the drain.
+        let mut in_flight_seen = 0;
+        for _ in 0..5_000 {
+            in_flight_seen = server.in_flight();
+            if in_flight_seen > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Race a connect loop against the drain: once the state flips to
+        // draining, a new connection must be *answered* with a shed
+        // frame, not silently dropped.
+        let addr = addr.clone();
+        let shed_probe = s.spawn(move || {
+            let give_up = Instant::now() + Duration::from_secs(20);
+            loop {
+                match NetClient::connect(&addr, ClientConfig::default()) {
+                    Ok(_) => {
+                        if Instant::now() >= give_up {
+                            return String::new();
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return format!("{e:#}"),
+                }
+            }
+        });
+        let drained = server.drain(Duration::from_secs(30));
+        let outcome = lookup
+            .join()
+            .map_err(|_| anyhow::anyhow!("lookup thread panicked"));
+        let shed_msg = shed_probe
+            .join()
+            .map_err(|_| anyhow::anyhow!("shed probe thread panicked"));
+        (outcome, in_flight_seen, drained, shed_msg)
+    });
+
+    let data = match outcome?? {
+        Outcome::Full(data) => data,
+        Outcome::Partial { .. } => anyhow::bail!("drain demo: stalled request came back partial"),
+    };
+    let d = table.d;
+    anyhow::ensure!(data.len() == rows.len() * d, "drain demo: short response");
+    for (k, &row) in rows.iter().enumerate() {
+        for j in 0..d {
+            anyhow::ensure!(
+                data[k * d + j] == table.expected(row, j),
+                "drain demo: row {row} column {j} corrupted"
+            );
+        }
+    }
+    let shed_msg = shed_msg?;
+    anyhow::ensure!(
+        in_flight_seen > 0,
+        "drain demo: never observed the request in flight"
+    );
+    anyhow::ensure!(
+        drained.completed,
+        "drain demo: drain timed out with work in flight"
+    );
+    anyhow::ensure!(
+        shed_msg.contains("shed(draining)"),
+        "drain demo: mid-drain connection not refused with shed(draining); got '{shed_msg}'"
+    );
+    println!(
+        "drain-under-load: in-flight request completed ({} rows verified), new connection \
+         refused with shed(draining), drain waited {} ms",
+        rows.len(),
+        drained.waited.as_millis()
+    );
+    server.shutdown();
+    Ok(())
+}
+
 fn cmd_remote(args: &Args) -> anyhow::Result<()> {
     use a100win::sim::nvlink::{run_remote, NvlinkConfig, PeerSpec};
     use a100win::sim::MemRegion;
@@ -1337,5 +2020,46 @@ mod tests {
     #[test]
     fn unknown_subcommand_errors() {
         assert!(run(&["bogus".to_string()]).is_err());
+    }
+
+    fn run_str(argv: &[&str]) -> anyhow::Result<()> {
+        run(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn unknown_flag_rejected_not_ignored() {
+        // The typo'd chaos gate: --choas must error, not silently run the
+        // plain benchmark.
+        let err = run_str(&["bench-serve", "--choas"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown flag --choas"), "got: {msg}");
+        assert!(msg.contains("bench-serve"), "got: {msg}");
+    }
+
+    #[test]
+    fn unknown_flag_reports_first_alphabetically() {
+        // Deterministic error regardless of HashMap iteration order.
+        let a = parse(&["--zzz", "1", "--aaa", "2"]);
+        let err = a.reject_unknown("probe", &["seed"]).unwrap_err();
+        assert!(format!("{err:#}").contains("--aaa"), "got: {err:#}");
+    }
+
+    #[test]
+    fn known_flags_pass_rejection() {
+        let a = parse(&["--seed", "42", "--out", "x.json", "--effort", "quick"]);
+        a.reject_unknown("probe", allowed_flags("probe")).unwrap();
+        // Every flag named in USAGE for bench-serve is in its vocabulary.
+        for f in ["chaos", "remote", "conns", "deadline-ms", "verify"] {
+            assert!(
+                allowed_flags("bench-serve").contains(&f),
+                "bench-serve vocabulary is missing --{f}"
+            );
+        }
+        for f in ["port", "http-port", "selfcheck", "drain-ms"] {
+            assert!(
+                allowed_flags("serve-net").contains(&f),
+                "serve-net vocabulary is missing --{f}"
+            );
+        }
     }
 }

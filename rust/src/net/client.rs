@@ -1,0 +1,403 @@
+//! Binary-channel client and a multi-connection pool.
+//!
+//! [`NetClient`] is one connection: handshake on connect, then
+//! `Lookup` → response round trips with *reused* frame/result buffers —
+//! steady-state lookups through [`NetClient::lookup_into`] (and the
+//! pool's [`RemotePool::request_pinned`]) do not allocate, which is what
+//! the `hotpath_alloc` perf-assert counts per connection.
+//!
+//! Poison discipline: any transport error, torn frame, or protocol
+//! desync marks the client poisoned — it refuses further use, and
+//! [`RemotePool`] discards it at check-in and dials a replacement on the
+//! next checkout.  Server-side *refusals* (`Error` frames: over budget,
+//! draining, deadline, bad request) do **not** poison: the connection is
+//! intact and the error message carries a machine-matchable prefix
+//! (`shed(...)`, `deadline`) so drivers can classify them.
+//!
+//! [`RemotePool`] is the remote analog of handing `Service` to the
+//! workload drivers: `workload::openloop` and `workload::chaos` drive it
+//! through the same target traits, optionally with a deterministic
+//! client-side fault schedule ([`super::faults::NetFaultPlan`]) so the
+//! soak exercises the server's torn-frame and half-close seams.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::service::Outcome;
+
+use super::codec::{begin_frame, read_frame, send_frame, FrameEvent, Transport};
+use super::faults::{FaultyTransport, NetFaultInjector, NetFaultPlan};
+use super::protocol::{self, Frame, RespHead};
+
+/// Client-side tuning.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Tenant name sent in the `Hello` (admission budgets key on it).
+    pub tenant: String,
+    /// TCP connect budget.
+    pub connect_timeout: Duration,
+    /// Budget for one full response (first byte and rest alike).
+    pub resp_timeout: Duration,
+    /// Frame payload ceiling (must be ≥ the server's for big responses).
+    pub max_frame: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            tenant: "bench".into(),
+            connect_timeout: Duration::from_secs(2),
+            resp_timeout: Duration::from_secs(10),
+            max_frame: protocol::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// One binary-channel connection (handshake already done).
+pub struct NetClient {
+    transport: Box<dyn Transport>,
+    cfg: ClientConfig,
+    /// Reusable receive-payload buffer.
+    buf: Vec<u8>,
+    /// Reusable frame-assembly buffer.
+    out: Vec<u8>,
+    /// Reusable error-message buffer (refilled by the response decoder).
+    msg: String,
+    /// Spare result buffers for the pooled no-allocation path.
+    spare_data: Vec<f32>,
+    spare_valid: Vec<bool>,
+    next_req: u64,
+    d: usize,
+    rows: u64,
+    broken: bool,
+}
+
+impl NetClient {
+    /// Connect and complete the `Hello`/`HelloAck` handshake.
+    pub fn connect(addr: &str, cfg: ClientConfig) -> anyhow::Result<Self> {
+        Self::connect_with(addr, cfg, None)
+    }
+
+    /// [`NetClient::connect`] with a client-side fault injector wrapped
+    /// around the stream (the handshake itself runs through it too).
+    pub fn connect_with(
+        addr: &str,
+        cfg: ClientConfig,
+        faults: Option<NetFaultInjector>,
+    ) -> anyhow::Result<Self> {
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("no address for {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let transport: Box<dyn Transport> = match faults {
+            Some(inj) => Box::new(FaultyTransport::new(stream, inj)),
+            None => Box::new(stream),
+        };
+        let mut c = Self {
+            transport,
+            cfg,
+            buf: Vec::with_capacity(4096),
+            out: Vec::with_capacity(4096),
+            msg: String::new(),
+            spare_data: Vec::new(),
+            spare_valid: Vec::new(),
+            next_req: 0,
+            d: 0,
+            rows: 0,
+            broken: false,
+        };
+        begin_frame(&mut c.out);
+        protocol::encode_hello(&mut c.out, &c.cfg.tenant);
+        send_frame(c.transport.as_mut(), &mut c.out, c.cfg.max_frame)
+            .context("sending hello")?;
+        c.read_reply().context("waiting for hello-ack")?;
+        match protocol::decode(&c.buf).context("decoding hello-ack")? {
+            Frame::HelloAck { version, d, rows } if version == protocol::VERSION => {
+                c.d = d as usize;
+                c.rows = rows;
+            }
+            Frame::HelloAck { version, .. } => bail!(
+                "server speaks protocol version {version}, client speaks {}",
+                protocol::VERSION
+            ),
+            Frame::Shed { code, msg } => bail!("shed({code}): {msg}"),
+            _ => bail!("unexpected frame in handshake"),
+        }
+        Ok(c)
+    }
+
+    /// Row width of the served table (from the `HelloAck`).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows in the served table (valid ids are `0..rows`).
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// True once this connection must not be reused (transport fault or
+    /// protocol desync).  Server-side request refusals do not poison.
+    pub fn poisoned(&self) -> bool {
+        self.broken || self.transport.poisoned()
+    }
+
+    /// One frame into `self.buf`; anything but a frame poisons (the
+    /// client is strictly request→response, so Idle/EOF here mean the
+    /// server died, stalled past the budget, or a fault fired).
+    fn read_reply(&mut self) -> anyhow::Result<()> {
+        let event = read_frame(
+            self.transport.as_mut(),
+            &mut self.buf,
+            self.cfg.max_frame,
+            self.cfg.resp_timeout,
+            self.cfg.resp_timeout,
+        );
+        match event {
+            Ok(FrameEvent::Frame(_)) => Ok(()),
+            Ok(FrameEvent::Idle) => {
+                self.broken = true;
+                bail!("timed out waiting for a response")
+            }
+            Ok(FrameEvent::Eof) => {
+                self.broken = true;
+                bail!("connection closed by server")
+            }
+            Err(e) => {
+                self.broken = true;
+                Err(e).context("reading response")
+            }
+        }
+    }
+
+    // hotpath: begin (steady-state remote lookup: every buffer is reused)
+    /// One lookup round trip, decoded into caller-owned buffers.
+    /// Returns `true` if the result is partial (`valid` holds the mask;
+    /// masked rows are zero-filled in `out`).
+    pub fn lookup_into(
+        &mut self,
+        rows: &[u64],
+        deadline: Option<Duration>,
+        out: &mut Vec<f32>,
+        valid: &mut Vec<bool>,
+    ) -> anyhow::Result<bool> {
+        if self.poisoned() {
+            bail!("client connection is poisoned");
+        }
+        self.next_req += 1;
+        let req_id = self.next_req;
+        let deadline_ms =
+            deadline.map_or(0, |d| d.as_millis().min(u128::from(u32::MAX)) as u32);
+        begin_frame(&mut self.out);
+        protocol::encode_lookup(&mut self.out, req_id, deadline_ms, rows);
+        if let Err(e) = send_frame(self.transport.as_mut(), &mut self.out, self.cfg.max_frame) {
+            self.broken = true;
+            return Err(e).context("sending lookup");
+        }
+        self.read_reply()?;
+        let head = match protocol::decode_response_into(&self.buf, out, valid, &mut self.msg) {
+            Ok(h) => h,
+            Err(e) => {
+                self.broken = true;
+                return Err(e).context("decoding response");
+            }
+        };
+        match head {
+            RespHead::Full { req_id: rid, .. } if rid == req_id => Ok(false),
+            RespHead::Partial { req_id: rid, .. } if rid == req_id => Ok(true),
+            // req_id 0 is the server's "before I could parse yours"
+            // refusal; the connection is closed right after it.
+            RespHead::Error { req_id: rid, code } if rid == req_id || rid == 0 => {
+                if code.is_shed() {
+                    bail!("shed({code}): {}", self.msg)
+                }
+                bail!("{code}: {}", self.msg)
+            }
+            _ => {
+                self.broken = true;
+                bail!("response for a different request id (protocol desync)")
+            }
+        }
+    }
+
+    /// [`NetClient::lookup_into`] through the client's own spare result
+    /// buffers — the pooled, no-allocation-per-request path.
+    pub fn lookup_reuse(
+        &mut self,
+        rows: &[u64],
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<bool> {
+        let mut data = std::mem::take(&mut self.spare_data);
+        let mut valid = std::mem::take(&mut self.spare_valid);
+        let result = self.lookup_into(rows, deadline, &mut data, &mut valid);
+        self.spare_data = data;
+        self.spare_valid = valid;
+        result
+    }
+    // hotpath: end
+
+    /// One lookup round trip as an owned [`Outcome`] (allocates; use
+    /// [`NetClient::lookup_into`] on measured paths).
+    pub fn lookup(
+        &mut self,
+        rows: &[u64],
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Outcome> {
+        let mut data = Vec::new();
+        let mut valid = Vec::new();
+        if self.lookup_into(rows, deadline, &mut data, &mut valid)? {
+            Ok(Outcome::Partial { rows: data, valid })
+        } else {
+            Ok(Outcome::Full(data))
+        }
+    }
+}
+
+/// A bounded pool of [`NetClient`]s sharing one server address: the
+/// remote analog of handing `Service` to the workload drivers.
+/// Poisoned connections are discarded at check-in and replaced on the
+/// next checkout, so injected transport faults cost one request, not
+/// the rest of the run.
+pub struct RemotePool {
+    addr: String,
+    cfg: ClientConfig,
+    faults: Option<NetFaultPlan>,
+    idle: Mutex<Vec<NetClient>>,
+    /// Connections dialed so far; doubles as the per-connection fault
+    /// schedule index so re-dials get fresh (decorrelated) schedules.
+    dialed: AtomicU64,
+    /// Live connections (idle + checked out).
+    open: AtomicUsize,
+    max_conns: usize,
+}
+
+impl RemotePool {
+    pub fn new(addr: impl Into<String>, cfg: ClientConfig, max_conns: usize) -> Self {
+        Self {
+            addr: addr.into(),
+            cfg,
+            faults: None,
+            idle: Mutex::new(Vec::new()),
+            dialed: AtomicU64::new(0),
+            open: AtomicUsize::new(0),
+            max_conns: max_conns.max(1),
+        }
+    }
+
+    /// [`RemotePool::new`] with a deterministic client-side fault plan;
+    /// each dialed connection gets its own decorrelated schedule.
+    pub fn with_faults(
+        addr: impl Into<String>,
+        cfg: ClientConfig,
+        max_conns: usize,
+        faults: NetFaultPlan,
+    ) -> Self {
+        let mut pool = Self::new(addr, cfg, max_conns);
+        if !faults.is_empty() {
+            pool.faults = Some(faults);
+        }
+        pool
+    }
+
+    /// Pre-dial up to `n` connections (handshakes included) so the first
+    /// measured requests do not pay connection setup.
+    pub fn connect_warm(&self, n: usize) -> anyhow::Result<usize> {
+        let mut warmed = 0;
+        for _ in 0..n.min(self.max_conns) {
+            if self.open.fetch_add(1, Ordering::AcqRel) >= self.max_conns {
+                self.open.fetch_sub(1, Ordering::AcqRel);
+                break;
+            }
+            match self.dial() {
+                Ok(c) => {
+                    self.idle.lock().unwrap().push(c);
+                    warmed += 1;
+                }
+                Err(e) => {
+                    self.open.fetch_sub(1, Ordering::AcqRel);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(warmed)
+    }
+
+    /// Connections dialed over the pool's lifetime (grows past the pool
+    /// size exactly when poisoned connections get replaced).
+    pub fn dials(&self) -> u64 {
+        self.dialed.load(Ordering::Relaxed)
+    }
+
+    /// Row width / table size as reported by the server's `HelloAck`.
+    pub fn probe(&self) -> anyhow::Result<(usize, u64)> {
+        let c = self.checkout()?;
+        let shape = (c.d(), c.rows());
+        self.checkin(c);
+        Ok(shape)
+    }
+
+    /// One request as an owned [`Outcome`] (row-content verification
+    /// paths; allocates).
+    pub fn request(&self, rows: &[u64], deadline: Option<Duration>) -> anyhow::Result<Outcome> {
+        let mut c = self.checkout()?;
+        let result = c.lookup(rows, deadline);
+        self.checkin(c);
+        result
+    }
+
+    /// One request through the checked-out client's spare buffers — the
+    /// steady-state path allocates nothing per request.
+    pub fn request_pinned(&self, rows: &[u64], deadline: Option<Duration>) -> anyhow::Result<()> {
+        let mut c = self.checkout()?;
+        let result = c.lookup_reuse(rows, deadline).map(|_| ());
+        self.checkin(c);
+        result
+    }
+
+    fn dial(&self) -> anyhow::Result<NetClient> {
+        let idx = self.dialed.fetch_add(1, Ordering::Relaxed);
+        let inj = self.faults.as_ref().map(|p| p.for_conn(idx));
+        NetClient::connect_with(&self.addr, self.cfg.clone(), inj)
+    }
+
+    fn checkout(&self) -> anyhow::Result<NetClient> {
+        let give_up = Instant::now() + self.cfg.connect_timeout + self.cfg.resp_timeout;
+        loop {
+            if let Some(c) = self.idle.lock().unwrap().pop() {
+                return Ok(c);
+            }
+            if self.open.fetch_add(1, Ordering::AcqRel) < self.max_conns {
+                return match self.dial() {
+                    Ok(c) => Ok(c),
+                    Err(e) => {
+                        self.open.fetch_sub(1, Ordering::AcqRel);
+                        Err(e)
+                    }
+                };
+            }
+            self.open.fetch_sub(1, Ordering::AcqRel);
+            if Instant::now() >= give_up {
+                bail!("no pooled connection became available within the wait budget");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn checkin(&self, c: NetClient) {
+        if c.poisoned() {
+            // Dropped; the next checkout dials a replacement with a
+            // fresh fault schedule.
+            self.open.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+        self.idle.lock().unwrap().push(c);
+    }
+}

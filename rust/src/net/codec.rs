@@ -1,0 +1,329 @@
+//! Length-prefixed framing over a pluggable byte transport.
+//!
+//! `[len: u32 LE][payload: len bytes]`, with the robustness decisions
+//! concentrated here so both channel implementations inherit them:
+//!
+//! * **Bounded before allocated.**  The length prefix is validated
+//!   against `max_frame` *before* the payload buffer is grown; a rogue
+//!   prefix costs nothing.  Zero-length frames are invalid (there is no
+//!   empty payload in the protocol), which also makes plain-text
+//!   probes (whose first 4 bytes decode to an absurd length) fail fast.
+//! * **Idle vs torn.**  A timeout while waiting for the *first* byte of
+//!   a frame is `Idle` — the caller polls again (that is how the server
+//!   notices drain-state changes without dedicated wakeups).  A timeout
+//!   or EOF *mid-frame* is an error: that is a slow-loris client or a
+//!   torn stream, and the connection is closed.
+//! * **One writer, one buffer.**  Frames are assembled in a reusable
+//!   buffer ([`begin_frame`]/[`send_frame`]) and written with a single
+//!   `write_all`, so a frame is never interleaved and the hot path does
+//!   not allocate after warmup.
+//!
+//! The [`Transport`] trait abstracts `TcpStream` so the fault-injecting
+//! shim ([`super::faults::FaultyTransport`]) can wrap it; the server
+//! side always runs on the plain stream — faults are injected at the
+//! client so the *server's* seams are what get exercised.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+/// Minimal byte-stream surface the codec needs; implemented by
+/// `TcpStream` directly and by [`super::faults::FaultyTransport`].
+pub trait Transport: Send {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize>;
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    fn set_read_timeout(&mut self, d: Option<Duration>) -> io::Result<()>;
+    fn set_write_timeout(&mut self, d: Option<Duration>) -> io::Result<()>;
+    /// Half-close the write side (FIN); reads may still proceed.
+    fn shutdown_write(&mut self) -> io::Result<()>;
+    /// True once the transport is known-dead for further requests (set
+    /// by fault injection); pools discard poisoned connections.
+    fn poisoned(&self) -> bool {
+        false
+    }
+}
+
+impl Transport for TcpStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        Read::read(self, buf)
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        Write::write_all(self, buf)
+    }
+
+    fn set_read_timeout(&mut self, d: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_read_timeout(self, d)
+    }
+
+    fn set_write_timeout(&mut self, d: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_write_timeout(self, d)
+    }
+
+    fn shutdown_write(&mut self) -> io::Result<()> {
+        self.shutdown(Shutdown::Write)
+    }
+}
+
+/// Outcome of one [`read_frame`] poll.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameEvent {
+    /// A complete payload of this many bytes is in the buffer.
+    Frame(usize),
+    /// Peer closed cleanly at a frame boundary.
+    Eof,
+    /// Nothing arrived within the idle window; poll again.
+    Idle,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// `set_read_timeout(Some(0))` is an invalid argument in std; clamp.
+fn nonzero(d: Duration) -> Duration {
+    if d.is_zero() {
+        Duration::from_millis(1)
+    } else {
+        d
+    }
+}
+
+fn read_full<T: Transport + ?Sized>(t: &mut T, mut out: &mut [u8]) -> io::Result<()> {
+    while !out.is_empty() {
+        match t.read(out) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ))
+            }
+            Ok(n) => out = &mut out[n..],
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "timed out mid-frame (slow-loris guard)",
+                ))
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame into `buf` (cleared and refilled; capacity reused).
+///
+/// Waits up to `idle` for the first byte (returning [`FrameEvent::Idle`]
+/// if none arrives), then requires the rest of the frame within
+/// `frame_timeout` — a client that trickles bytes slower than that loses
+/// the connection instead of pinning a server thread.
+pub fn read_frame<T: Transport + ?Sized>(
+    t: &mut T,
+    buf: &mut Vec<u8>,
+    max_frame: usize,
+    idle: Duration,
+    frame_timeout: Duration,
+) -> io::Result<FrameEvent> {
+    let mut prefix = [0u8; 4];
+    t.set_read_timeout(Some(nonzero(idle)))?;
+    loop {
+        match t.read(&mut prefix[..1]) {
+            Ok(0) => return Ok(FrameEvent::Eof),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => return Ok(FrameEvent::Idle),
+            Err(e) => return Err(e),
+        }
+    }
+    // First byte seen: the rest of the frame is on the slow-loris clock.
+    t.set_read_timeout(Some(nonzero(frame_timeout)))?;
+    read_full(t, &mut prefix[1..])?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "zero-length frame",
+        ));
+    }
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {max_frame}"),
+        ));
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    read_full(t, buf)?;
+    Ok(FrameEvent::Frame(len))
+}
+
+/// Reset `out` to a fresh frame: 4 placeholder bytes for the length
+/// prefix, payload appended after by the protocol encoders.
+pub fn begin_frame(out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]);
+}
+
+/// Patch the length prefix and write the frame with one `write_all`.
+/// `out` must have been set up by [`begin_frame`].
+pub fn send_frame<T: Transport + ?Sized>(
+    t: &mut T,
+    out: &mut [u8],
+    max_frame: usize,
+) -> io::Result<()> {
+    let len = match out.len().checked_sub(4) {
+        Some(len) if len > 0 && len <= max_frame => len,
+        _ => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("refusing to send frame of {} bytes", out.len()),
+            ))
+        }
+    };
+    out[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    t.write_all(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// Scripted transport: reads drain a byte queue; an empty queue is a
+    /// timeout, a closed queue is EOF.
+    struct Script {
+        incoming: VecDeque<u8>,
+        closed: bool,
+        sent: Vec<u8>,
+        /// Serve at most this many bytes per read call (to exercise
+        /// partial reads).
+        chunk: usize,
+    }
+
+    impl Script {
+        fn new(bytes: &[u8], closed: bool) -> Self {
+            Self {
+                incoming: bytes.iter().copied().collect(),
+                closed,
+                sent: Vec::new(),
+                chunk: usize::MAX,
+            }
+        }
+    }
+
+    impl Transport for Script {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.incoming.is_empty() {
+                return if self.closed {
+                    Ok(0)
+                } else {
+                    Err(io::Error::new(io::ErrorKind::WouldBlock, "empty"))
+                };
+            }
+            let n = buf.len().min(self.incoming.len()).min(self.chunk).max(1);
+            for b in buf.iter_mut().take(n) {
+                *b = self.incoming.pop_front().unwrap();
+            }
+            Ok(n)
+        }
+
+        fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+            self.sent.extend_from_slice(buf);
+            Ok(())
+        }
+
+        fn set_read_timeout(&mut self, _d: Option<Duration>) -> io::Result<()> {
+            Ok(())
+        }
+
+        fn set_write_timeout(&mut self, _d: Option<Duration>) -> io::Result<()> {
+            Ok(())
+        }
+
+        fn shutdown_write(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    const T: Duration = Duration::from_millis(5);
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+        v.extend_from_slice(payload);
+        v
+    }
+
+    #[test]
+    fn roundtrip_including_partial_reads() {
+        let wire = framed(b"hello frame");
+        for chunk in [1, 2, usize::MAX] {
+            let mut t = Script::new(&wire, true);
+            t.chunk = chunk;
+            let mut buf = Vec::new();
+            assert_eq!(
+                read_frame(&mut t, &mut buf, 1 << 20, T, T).unwrap(),
+                FrameEvent::Frame(11)
+            );
+            assert_eq!(&buf, b"hello frame");
+            assert_eq!(read_frame(&mut t, &mut buf, 1 << 20, T, T).unwrap(), FrameEvent::Eof);
+        }
+    }
+
+    #[test]
+    fn idle_then_eof_vs_torn() {
+        // Empty, open stream: idle (poll again).
+        let mut t = Script::new(&[], false);
+        let mut buf = Vec::new();
+        assert_eq!(read_frame(&mut t, &mut buf, 64, T, T).unwrap(), FrameEvent::Idle);
+        // Torn mid-prefix: error, not idle and not eof.
+        let mut t = Script::new(&framed(b"abcd")[..2], true);
+        let err = read_frame(&mut t, &mut buf, 64, T, T).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // Torn mid-payload.
+        let mut t = Script::new(&framed(b"abcd")[..6], true);
+        let err = read_frame(&mut t, &mut buf, 64, T, T).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // Stalled mid-payload (open but silent): slow-loris timeout.
+        let mut t = Script::new(&framed(b"abcd")[..6], false);
+        let err = read_frame(&mut t, &mut buf, 64, T, T).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn length_bounds_enforced() {
+        let mut buf = Vec::new();
+        // Zero-length frame.
+        let mut t = Script::new(&0u32.to_le_bytes(), true);
+        assert_eq!(
+            read_frame(&mut t, &mut buf, 64, T, T).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+        // Oversized frame rejected before any payload read ("GET " as a
+        // length prefix lands here).
+        let mut t = Script::new(b"GET / HTTP/1.1\r\n", false);
+        assert_eq!(
+            read_frame(&mut t, &mut buf, 1 << 20, T, T).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+    }
+
+    #[test]
+    fn send_frame_patches_prefix() {
+        let mut t = Script::new(&[], false);
+        let mut out = Vec::new();
+        begin_frame(&mut out);
+        out.extend_from_slice(b"payload");
+        send_frame(&mut t, &mut out, 64).unwrap();
+        assert_eq!(t.sent, framed(b"payload"));
+        // Empty and oversized payloads refused.
+        begin_frame(&mut out);
+        assert!(send_frame(&mut t, &mut out, 64).is_err());
+        begin_frame(&mut out);
+        out.resize(4 + 65, 0);
+        assert!(send_frame(&mut t, &mut out, 64).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Per-connection handling for the binary channel.
+//!
+//! One reader thread (owns the socket's read side, decodes and admits
+//! requests) and one writer thread (owns *all* writes, resolves tickets
+//! FIFO) per connection, joined by an mpsc queue — so responses are
+//! never interleaved and a slow ticket never blocks the reader from
+//! noticing EOF, drain, or the next request.
+//!
+//! The hardening lives in the reader's refusal paths: every refused
+//! request gets an `Error` frame (budget, drain, bad rows) on a
+//! *surviving* connection; only protocol violations (undecodable or
+//! out-of-order frames) and slow-loris timeouts cost the connection
+//! itself.  In-flight accounting ([`WorkGuard`]) is RAII and rides the
+//! queue entry, so the drain loop's `in_flight == 0` condition means
+//! "every admitted request has had its response written (or its
+//! connection died trying)".
+
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::service::Outcome;
+
+use super::codec::{begin_frame, read_frame, send_frame, FrameEvent};
+use super::protocol::{self, ErrorCode, Frame};
+use super::server::{ConnGuard, ServerCore, READ_POLL, STOPPED};
+use super::{wire_deadline, Pending};
+
+/// RAII in-flight increment: created before admission, dropped after the
+/// response is written (or the request abandoned) — the drain condition
+/// counts on this never leaking.
+pub(crate) struct WorkGuard(Arc<ServerCore>);
+
+impl WorkGuard {
+    fn new(core: &Arc<ServerCore>) -> Self {
+        core.in_flight.fetch_add(1, Ordering::AcqRel);
+        Self(Arc::clone(core))
+    }
+}
+
+impl Drop for WorkGuard {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// One response owed to the peer, in arrival order.
+enum Reply {
+    /// Refusal or validation failure: the request never reached the
+    /// backend, the connection lives on.
+    Immediate {
+        req_id: u64,
+        code: ErrorCode,
+        msg: String,
+    },
+    /// An admitted ticket; the writer resolves it and encodes the
+    /// outcome (`Full`, `Partial`, or `Error`).
+    Ticket {
+        req_id: u64,
+        pending: Pending,
+        work: WorkGuard,
+    },
+}
+
+/// Entry point, run on a dedicated thread per accepted connection.
+pub(crate) fn serve(core: Arc<ServerCore>, mut stream: TcpStream, guard: ConnGuard) {
+    let _guard = guard;
+    let _ = stream.set_nodelay(true);
+    let Ok(wstream) = stream.try_clone() else {
+        core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    let _ = wstream.set_write_timeout(Some(core.cfg.write_timeout));
+    let Some((tenant, wstream)) = handshake(&core, &mut stream, wstream) else {
+        return;
+    };
+    core.metrics.hellos.fetch_add(1, Ordering::Relaxed);
+
+    let (tx, rx) = std::sync::mpsc::channel::<Reply>();
+    let wcore = Arc::clone(&core);
+    let writer = std::thread::Builder::new()
+        .name("net-conn-w".into())
+        .spawn(move || write_loop(wcore, wstream, rx));
+    let Ok(writer) = writer else {
+        core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+
+    read_loop(&core, &mut stream, &tenant, tx);
+    // Dropping `tx` (done by read_loop) lets the writer drain queued
+    // responses and exit; join so the connection gauge (released by
+    // `_guard`) really means "both threads gone".
+    let _ = writer.join();
+}
+
+/// Expect `Hello` within `hello_timeout`, answer `HelloAck` (row width +
+/// table size so the client can size buffers and validate row ids).
+/// Returns the tenant and the write stream, or None if the connection
+/// was refused or the peer violated the protocol.
+fn handshake(
+    core: &Arc<ServerCore>,
+    stream: &mut TcpStream,
+    mut wstream: TcpStream,
+) -> Option<(String, TcpStream)> {
+    let mut buf = Vec::with_capacity(256);
+    let event = read_frame(
+        stream,
+        &mut buf,
+        core.cfg.max_frame,
+        core.cfg.hello_timeout,
+        core.cfg.frame_timeout,
+    );
+    let frame = match event {
+        Ok(FrameEvent::Frame(_)) => protocol::decode(&buf),
+        Ok(FrameEvent::Idle) | Err(_) => {
+            core.metrics.slow_loris_closed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Ok(FrameEvent::Eof) => return None,
+    };
+    let tenant = match frame {
+        Ok(Frame::Hello { version, tenant }) if version == protocol::VERSION => tenant,
+        Ok(Frame::Hello { version, .. }) => {
+            refuse(
+                core,
+                &mut wstream,
+                ErrorCode::BadRequest,
+                &format!(
+                    "unsupported protocol version {version} (server speaks {})",
+                    protocol::VERSION
+                ),
+            );
+            return None;
+        }
+        _ => {
+            core.metrics.bad_frames.fetch_add(1, Ordering::Relaxed);
+            refuse(
+                core,
+                &mut wstream,
+                ErrorCode::BadRequest,
+                "expected Hello as the first frame",
+            );
+            return None;
+        }
+    };
+    let mut out = Vec::with_capacity(64);
+    begin_frame(&mut out);
+    protocol::encode_hello_ack(&mut out, core.target.d() as u32, core.target.rows());
+    if send_frame(&mut wstream, &mut out, core.cfg.max_frame).is_err() {
+        core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    Some((tenant, wstream))
+}
+
+/// Best-effort `Shed` frame on a connection being turned away.
+fn refuse(core: &Arc<ServerCore>, wstream: &mut TcpStream, code: ErrorCode, msg: &str) {
+    let mut out = Vec::with_capacity(64);
+    begin_frame(&mut out);
+    protocol::encode_shed(&mut out, code, msg);
+    let _ = send_frame(wstream, &mut out, core.cfg.max_frame);
+}
+
+fn read_loop(core: &Arc<ServerCore>, stream: &mut TcpStream, tenant: &str, tx: Sender<Reply>) {
+    // A response larger than max_frame would sever the connection at
+    // write time; refuse the request instead, up front.
+    let d = core.target.d().max(1);
+    let row_cap = core
+        .cfg
+        .max_rows_per_request
+        .min(core.cfg.max_frame.saturating_sub(64) / (d * 4 + 1));
+    let table_rows = core.target.rows();
+    let mut buf = Vec::with_capacity(4096);
+    let mut idle = Duration::ZERO;
+    loop {
+        if core.state() == STOPPED {
+            return;
+        }
+        let event = read_frame(
+            stream,
+            &mut buf,
+            core.cfg.max_frame,
+            READ_POLL,
+            core.cfg.frame_timeout,
+        );
+        let frame = match event {
+            Ok(FrameEvent::Idle) => {
+                idle += READ_POLL;
+                if idle >= core.cfg.idle_timeout {
+                    core.metrics.slow_loris_closed.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                continue;
+            }
+            Ok(FrameEvent::Eof) => return,
+            Ok(FrameEvent::Frame(_)) => {
+                idle = Duration::ZERO;
+                match protocol::decode(&buf) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        // Undecodable bytes mean the stream is desynced:
+                        // answer once, then close.
+                        core.metrics.bad_frames.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Reply::Immediate {
+                            req_id: 0,
+                            code: ErrorCode::BadRequest,
+                            msg: format!("malformed frame: {e:#}"),
+                        });
+                        return;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::TimedOut => {
+                core.metrics.slow_loris_closed.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                core.metrics.bad_frames.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(_) => return,
+        };
+        let Frame::Lookup {
+            req_id,
+            deadline_ms,
+            rows,
+        } = frame
+        else {
+            // Only Lookup is valid after the handshake.
+            core.metrics.bad_frames.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        core.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if rows.len() > row_cap {
+            let reply = Reply::Immediate {
+                req_id,
+                code: ErrorCode::BadRequest,
+                msg: format!("request of {} rows exceeds cap {row_cap}", rows.len()),
+            };
+            if tx.send(reply).is_err() {
+                return;
+            }
+            continue;
+        }
+        if let Some(&bad) = rows.iter().find(|&&r| r >= table_rows) {
+            let reply = Reply::Immediate {
+                req_id,
+                code: ErrorCode::BadRequest,
+                msg: format!("row {bad} out of range (table has {table_rows} rows)"),
+            };
+            if tx.send(reply).is_err() {
+                return;
+            }
+            continue;
+        }
+        // In-flight is counted from *before* admission so a concurrent
+        // drain cannot observe zero while a submit is mid-flight.
+        let work = WorkGuard::new(core);
+        let reply = match core.submit(tenant, Arc::new(rows), wire_deadline(deadline_ms)) {
+            Ok(pending) => Reply::Ticket {
+                req_id,
+                pending,
+                work,
+            },
+            Err((code, msg)) => {
+                drop(work);
+                Reply::Immediate { req_id, code, msg }
+            }
+        };
+        if tx.send(reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Single writer: resolves tickets in arrival order and owns every byte
+/// written after the handshake.
+fn write_loop(core: Arc<ServerCore>, mut stream: TcpStream, rx: Receiver<Reply>) {
+    let d = core.target.d().max(1);
+    let mut out = Vec::with_capacity(4096);
+    while let Ok(reply) = rx.recv() {
+        begin_frame(&mut out);
+        // Held across the write: in-flight must not reach zero (and let
+        // a drain declare victory) until the response is on the wire.
+        let mut held: Option<WorkGuard> = None;
+        match reply {
+            Reply::Immediate { req_id, code, msg } => {
+                core.metrics.responses_error.fetch_add(1, Ordering::Relaxed);
+                protocol::encode_error(&mut out, req_id, code, &msg);
+            }
+            Reply::Ticket {
+                req_id,
+                pending,
+                work,
+            } => {
+                held = Some(work);
+                match pending.wait_outcome() {
+                    Ok(Outcome::Full(data)) => {
+                        core.metrics.responses_full.fetch_add(1, Ordering::Relaxed);
+                        protocol::encode_full(&mut out, req_id, (data.len() / d) as u32, &data);
+                        core.target.recycle(data);
+                    }
+                    Ok(Outcome::Partial { rows, valid }) => {
+                        core.metrics.responses_partial.fetch_add(1, Ordering::Relaxed);
+                        protocol::encode_partial(&mut out, req_id, &valid, &rows);
+                        core.target.recycle(rows);
+                    }
+                    Err(e) => {
+                        core.metrics.responses_error.fetch_add(1, Ordering::Relaxed);
+                        let code = super::classify(&e);
+                        protocol::encode_error(&mut out, req_id, code, &format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        let wrote = send_frame(&mut stream, &mut out, core.cfg.max_frame).is_ok();
+        drop(held);
+        if !wrote {
+            core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+            // The peer is gone; remaining queue entries drop here,
+            // releasing their tickets and in-flight guards.
+            return;
+        }
+    }
+}

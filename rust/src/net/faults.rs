@@ -1,0 +1,359 @@
+//! Seeded transport-fault injection — `sim::FaultPlan`'s idea applied to
+//! the wire.
+//!
+//! A [`NetFaultPlan`] is a deterministic schedule of transport
+//! misbehaviors (delay, write splitting, truncation, half-close,
+//! connection drop) built with the same builder style as
+//! `sim::fault::FaultPlan`.  [`NetFaultPlan::for_conn`] derives a
+//! decorrelated per-connection schedule (SplitMix64 over `seed ^ conn`),
+//! so a multi-connection soak exercises different fault interleavings on
+//! every connection while staying bit-for-bit reproducible.
+//!
+//! Faults are injected on the **client** side by wrapping its transport
+//! in [`FaultyTransport`]; the server keeps its plain `TcpStream`.  That
+//! orientation is deliberate: the point of the soak is to prove the
+//! *server's* seams survive torn frames, half-closed peers, and
+//! mid-stream disconnects without corrupting any other connection's
+//! rows (`workload::chaos` does the end-to-end bookkeeping).
+
+use std::io;
+use std::time::Duration;
+
+use super::codec::Transport;
+
+/// SplitMix64 (same diffusion step as `sim::fault` and `util::rng`).
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic schedule of transport faults.  `*_every = k` fires on
+/// a pseudo-random 1-in-`k` subset of operations (0 = never), keyed by
+/// the per-connection operation counter — not wall clock — so replays
+/// are exact.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetFaultPlan {
+    seed: u64,
+    delay_every: u64,
+    delay_ms: u64,
+    split_every: u64,
+    truncate_every: u64,
+    half_close_every: u64,
+    drop_every: u64,
+}
+
+impl NetFaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Sleep `ms` before roughly 1-in-`every` reads and writes.
+    pub fn delays(mut self, every: u64, ms: u64) -> Self {
+        self.delay_every = every;
+        self.delay_ms = ms;
+        self
+    }
+
+    /// Split roughly 1-in-`every` writes into two syscalls with a pause
+    /// between (exercises the server's mid-frame reassembly).
+    pub fn splits(mut self, every: u64) -> Self {
+        self.split_every = every;
+        self
+    }
+
+    /// Truncate roughly 1-in-`every` writes (half the bytes, then FIN):
+    /// the server must see a torn frame, not a short valid one.
+    pub fn truncates(mut self, every: u64) -> Self {
+        self.truncate_every = every;
+        self
+    }
+
+    /// Half-close (FIN after a complete write) roughly 1-in-`every`
+    /// writes: the request is intact, the server must still answer it.
+    pub fn half_closes(mut self, every: u64) -> Self {
+        self.half_close_every = every;
+        self
+    }
+
+    /// Abandon the connection instead of roughly 1-in-`every` writes.
+    pub fn drops(mut self, every: u64) -> Self {
+        self.drop_every = every;
+        self
+    }
+
+    /// The acceptance-soak preset: every fault mode armed at co-prime
+    /// rates so schedules interleave rather than align.
+    pub fn chaos(seed: u64) -> Self {
+        Self::new(seed)
+            .delays(7, 2)
+            .splits(5)
+            .truncates(31)
+            .half_closes(41)
+            .drops(53)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.delay_every == 0
+            && self.split_every == 0
+            && self.truncate_every == 0
+            && self.half_close_every == 0
+            && self.drop_every == 0
+    }
+
+    /// Derive this connection's schedule (decorrelated across `conn`).
+    pub fn for_conn(&self, conn: u64) -> NetFaultInjector {
+        NetFaultInjector {
+            plan: self.clone(),
+            salt: splitmix64(self.seed ^ conn.wrapping_mul(0xD6E8_FEB8_6659_FD93)),
+            writes: 0,
+            reads: 0,
+            poisoned: false,
+        }
+    }
+}
+
+/// Per-connection fault state: operation counters plus the poison flag
+/// that tells the pool this transport is dead for further requests.
+#[derive(Debug, Clone)]
+pub struct NetFaultInjector {
+    plan: NetFaultPlan,
+    salt: u64,
+    writes: u64,
+    reads: u64,
+    poisoned: bool,
+}
+
+/// What a single write should do (exposed for deterministic tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteFault {
+    None,
+    Delay,
+    Split,
+    Truncate,
+    HalfClose,
+    Drop,
+}
+
+impl NetFaultInjector {
+    fn fires(&self, every: u64, kind: u64, idx: u64) -> bool {
+        let h = splitmix64(self.salt ^ kind.wrapping_mul(0xA076_1D64_78BD_642F) ^ idx);
+        every != 0 && h % every == 0
+    }
+
+    /// Verdict for write number `idx` (highest-severity fault wins).
+    pub fn write_fault(&self, idx: u64) -> WriteFault {
+        if self.fires(self.plan.truncate_every, 1, idx) {
+            WriteFault::Truncate
+        } else if self.fires(self.plan.drop_every, 2, idx) {
+            WriteFault::Drop
+        } else if self.fires(self.plan.half_close_every, 3, idx) {
+            WriteFault::HalfClose
+        } else if self.fires(self.plan.split_every, 4, idx) {
+            WriteFault::Split
+        } else if self.fires(self.plan.delay_every, 5, idx) {
+            WriteFault::Delay
+        } else {
+            WriteFault::None
+        }
+    }
+
+    fn read_delays(&self, idx: u64) -> bool {
+        self.fires(self.plan.delay_every, 6, idx)
+    }
+}
+
+/// A [`Transport`] that misbehaves on the injector's schedule.  Faults
+/// that sever the stream (`Truncate`, `Drop`, `HalfClose`) poison the
+/// transport so the owning pool retires it instead of reusing it.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    inj: NetFaultInjector,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, inj: NetFaultInjector) -> Self {
+        Self { inner, inj }
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let idx = self.inj.reads;
+        self.inj.reads += 1;
+        if self.inj.read_delays(idx) {
+            std::thread::sleep(Duration::from_millis(self.inj.plan.delay_ms));
+        }
+        self.inner.read(buf)
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        let idx = self.inj.writes;
+        self.inj.writes += 1;
+        if self.inj.poisoned {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "transport poisoned by injected fault",
+            ));
+        }
+        match self.inj.write_fault(idx) {
+            WriteFault::None => self.inner.write_all(buf),
+            WriteFault::Delay => {
+                std::thread::sleep(Duration::from_millis(self.inj.plan.delay_ms));
+                self.inner.write_all(buf)
+            }
+            WriteFault::Split if buf.len() >= 2 => {
+                let mid = buf.len() / 2;
+                self.inner.write_all(&buf[..mid])?;
+                std::thread::sleep(Duration::from_millis((self.inj.plan.delay_ms / 2).max(1)));
+                self.inner.write_all(&buf[mid..])
+            }
+            WriteFault::Split => self.inner.write_all(buf),
+            WriteFault::Truncate => {
+                self.inj.poisoned = true;
+                if buf.len() >= 2 {
+                    self.inner.write_all(&buf[..buf.len() / 2])?;
+                }
+                let _ = self.inner.shutdown_write();
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "injected truncation (torn frame on the wire)",
+                ))
+            }
+            WriteFault::Drop => {
+                self.inj.poisoned = true;
+                let _ = self.inner.shutdown_write();
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionAborted,
+                    "injected drop (connection abandoned mid-request)",
+                ))
+            }
+            WriteFault::HalfClose => {
+                // The request goes out whole, then FIN: the server must
+                // answer a half-closed peer.  Poisoned for *next* use.
+                self.inner.write_all(buf)?;
+                let _ = self.inner.shutdown_write();
+                self.inj.poisoned = true;
+                Ok(())
+            }
+        }
+    }
+
+    fn set_read_timeout(&mut self, d: Option<Duration>) -> io::Result<()> {
+        self.inner.set_read_timeout(d)
+    }
+
+    fn set_write_timeout(&mut self, d: Option<Duration>) -> io::Result<()> {
+        self.inner.set_write_timeout(d)
+    }
+
+    fn shutdown_write(&mut self) -> io::Result<()> {
+        self.inner.shutdown_write()
+    }
+
+    fn poisoned(&self) -> bool {
+        self.inj.poisoned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_decorrelated() {
+        let plan = NetFaultPlan::chaos(11);
+        let a: Vec<WriteFault> = (0..256).map(|i| plan.for_conn(0).write_fault(i)).collect();
+        let b: Vec<WriteFault> = (0..256).map(|i| plan.for_conn(0).write_fault(i)).collect();
+        let c: Vec<WriteFault> = (0..256).map(|i| plan.for_conn(1).write_fault(i)).collect();
+        assert_eq!(a, b, "same conn, same schedule");
+        assert_ne!(a, c, "different conns must decorrelate");
+        // Every armed mode fires somewhere in a long enough window.
+        for want in [
+            WriteFault::Delay,
+            WriteFault::Split,
+            WriteFault::Truncate,
+            WriteFault::HalfClose,
+            WriteFault::Drop,
+        ] {
+            let hit = (0..4096).any(|i| plan.for_conn(3).write_fault(i) == want);
+            assert!(hit, "{want:?} never fired");
+        }
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let inj = NetFaultPlan::new(5).for_conn(9);
+        assert!(NetFaultPlan::new(5).is_empty());
+        assert!((0..1024).all(|i| inj.write_fault(i) == WriteFault::None));
+    }
+
+    struct Sink {
+        written: Vec<u8>,
+        fins: usize,
+    }
+
+    impl Transport for Sink {
+        fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+            Ok(0)
+        }
+
+        fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+            self.written.extend_from_slice(buf);
+            Ok(())
+        }
+
+        fn set_read_timeout(&mut self, _d: Option<Duration>) -> io::Result<()> {
+            Ok(())
+        }
+
+        fn set_write_timeout(&mut self, _d: Option<Duration>) -> io::Result<()> {
+            Ok(())
+        }
+
+        fn shutdown_write(&mut self) -> io::Result<()> {
+            self.fins += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn truncation_writes_a_strict_prefix_then_poisons() {
+        // Find a plan/op where write 0 truncates.
+        let plan = NetFaultPlan::new(0).truncates(1);
+        let mut t = FaultyTransport::new(
+            Sink {
+                written: Vec::new(),
+                fins: 0,
+            },
+            plan.for_conn(0),
+        );
+        let err = t.write_all(&[1, 2, 3, 4, 5, 6]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(t.inner.written, vec![1, 2, 3]);
+        assert_eq!(t.inner.fins, 1);
+        assert!(t.poisoned());
+        // Poisoned transport refuses further writes.
+        assert!(t.write_all(&[9]).is_err());
+    }
+
+    #[test]
+    fn half_close_delivers_the_write_intact() {
+        let plan = NetFaultPlan::new(0).half_closes(1);
+        let mut t = FaultyTransport::new(
+            Sink {
+                written: Vec::new(),
+                fins: 0,
+            },
+            plan.for_conn(0),
+        );
+        t.write_all(&[7, 8, 9]).unwrap();
+        assert_eq!(t.inner.written, vec![7, 8, 9]);
+        assert_eq!(t.inner.fins, 1);
+        assert!(t.poisoned(), "half-close must poison for the next use");
+    }
+}

@@ -1,0 +1,341 @@
+//! Minimal HTTP/1.1 channel: integration lookups and health surface.
+//!
+//! One short-lived thread per connection, `Connection: close` semantics,
+//! hand-rolled request parsing over `util::json` — no framework, no new
+//! dependencies.  Three endpoints:
+//!
+//! * `GET /healthz` — always 200 while the process lives: lifecycle
+//!   state, gauges, and edge counters (operators watch a drain here).
+//! * `GET /readyz` — 200 only when `Serving` *and* the backend
+//!   readiness probe (breaker/health state) agrees; 503 otherwise, so
+//!   load balancers stop routing before requests start failing.
+//! * `POST /v1/lookup` — `{"tenant", "rows": [...], "deadline_ms"}`;
+//!   answers full or partial results as JSON, and maps the same
+//!   refusal taxonomy as the binary channel onto status codes
+//!   (429 over budget, 503 draining, 504 deadline, 400 bad request).
+//!
+//! The same hardening applies as on the binary channel: header and body
+//! size caps, read timeouts (a slow-loris HTTP client loses the
+//! connection), explicit shed responses over the connection limit, and
+//! in-flight accounting so a drain waits for HTTP lookups too.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::service::Outcome;
+use crate::util::json::Json;
+
+use super::protocol::ErrorCode;
+use super::server::{ConnGuard, ServerCore};
+use super::wire_deadline;
+
+/// Header-block cap (request line + headers).
+const MAX_HEAD: usize = 8 << 10;
+/// Body cap for `POST /v1/lookup`.
+const MAX_BODY: usize = 1 << 20;
+
+/// 503 + close for connections over the HTTP limit (the explicit-shed
+/// rule applies to this channel too).
+pub(crate) fn shed_and_close(_core: &Arc<ServerCore>, mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let body = Json::obj(vec![
+        ("error", Json::str("connection limit reached")),
+        ("code", Json::str("connection-limit")),
+    ])
+    .to_string();
+    let _ = write_response(&mut stream, 503, "Service Unavailable", &body, true);
+}
+
+/// Entry point, one thread per accepted HTTP connection.
+pub(crate) fn serve(core: Arc<ServerCore>, mut stream: TcpStream, guard: ConnGuard) {
+    let _guard = guard;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(core.cfg.write_timeout));
+    let _ = stream.set_read_timeout(Some(core.cfg.hello_timeout + core.cfg.frame_timeout));
+    core.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(kind) => {
+            match kind {
+                ReadFail::TooLarge => {
+                    let _ = respond_json(
+                        &mut stream,
+                        413,
+                        "Payload Too Large",
+                        Json::obj(vec![("error", Json::str("request too large"))]),
+                        false,
+                    );
+                }
+                ReadFail::Timeout => {
+                    core.metrics.slow_loris_closed.fetch_add(1, Ordering::Relaxed);
+                }
+                ReadFail::Malformed | ReadFail::Closed => {
+                    core.metrics.bad_frames.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = respond_json(&mut stream, 200, "OK", healthz(&core), false);
+        }
+        ("GET", "/readyz") => {
+            let ready = core.ready();
+            let body = Json::obj(vec![
+                ("ready", Json::Bool(ready)),
+                ("state", Json::str(core.state_name())),
+            ]);
+            if ready {
+                let _ = respond_json(&mut stream, 200, "OK", body, false);
+            } else {
+                let _ = respond_json(&mut stream, 503, "Service Unavailable", body, true);
+            }
+        }
+        ("POST", "/v1/lookup") => lookup(&core, &mut stream, &req.body),
+        _ => {
+            let _ = respond_json(
+                &mut stream,
+                404,
+                "Not Found",
+                Json::obj(vec![("error", Json::str("no such endpoint"))]),
+                false,
+            );
+        }
+    }
+}
+
+fn healthz(core: &Arc<ServerCore>) -> Json {
+    let m = core.snapshot();
+    let n = |v: u64| Json::num(v as f64);
+    Json::obj(vec![
+        ("state", Json::str(core.state_name())),
+        ("conns_open", Json::num(m.conns_open as f64)),
+        ("in_flight", Json::num(m.in_flight as f64)),
+        ("conns_accepted", n(m.conns_accepted)),
+        ("conns_shed", n(m.conns_shed)),
+        ("requests", n(m.requests)),
+        ("responses_full", n(m.responses_full)),
+        ("responses_partial", n(m.responses_partial)),
+        ("responses_error", n(m.responses_error)),
+        ("shed_over_budget", n(m.shed_over_budget)),
+        ("shed_draining", n(m.shed_draining)),
+        ("bad_frames", n(m.bad_frames)),
+        ("slow_loris_closed", n(m.slow_loris_closed)),
+        ("write_errors", n(m.write_errors)),
+        ("http_requests", n(m.http_requests)),
+    ])
+}
+
+/// `POST /v1/lookup`: parse, validate, admit (same taxonomy as the
+/// binary channel), resolve inline, answer JSON.
+fn lookup(core: &Arc<ServerCore>, stream: &mut TcpStream, body: &str) {
+    let parsed = match Json::parse(body) {
+        Ok(p) => p,
+        Err(e) => {
+            let body = Json::obj(vec![("error", Json::str(format!("bad JSON: {e:?}")))]);
+            let _ = respond_json(stream, 400, "Bad Request", body, false);
+            return;
+        }
+    };
+    let tenant = parsed
+        .get("tenant")
+        .and_then(Json::as_str)
+        .unwrap_or("http")
+        .to_string();
+    let items = parsed.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+    let rows: Vec<u64> = items.iter().filter_map(Json::as_u64).collect();
+    if rows.is_empty() || rows.len() != items.len() {
+        let body = Json::obj(vec![(
+            "error",
+            Json::str("\"rows\" must be a non-empty array of row ids"),
+        )]);
+        let _ = respond_json(stream, 400, "Bad Request", body, false);
+        return;
+    }
+    let table_rows = core.target.rows();
+    if rows.len() > core.cfg.max_rows_per_request {
+        let body = Json::obj(vec![("error", Json::str("too many rows"))]);
+        let _ = respond_json(stream, 400, "Bad Request", body, false);
+        return;
+    }
+    if let Some(&bad) = rows.iter().find(|&&r| r >= table_rows) {
+        let body = Json::obj(vec![(
+            "error",
+            Json::str(format!("row {bad} out of range (table has {table_rows} rows)")),
+        )]);
+        let _ = respond_json(stream, 400, "Bad Request", body, false);
+        return;
+    }
+    let deadline_ms = parsed
+        .get("deadline_ms")
+        .and_then(Json::as_u64)
+        .map_or(0, |v| v.min(u64::from(u32::MAX)) as u32);
+    // Count HTTP lookups against the same drain condition as binary
+    // requests: a drain waits for this response too.
+    core.in_flight.fetch_add(1, Ordering::AcqRel);
+    let result = core
+        .submit(&tenant, Arc::new(rows), wire_deadline(deadline_ms))
+        .map(super::Pending::wait_outcome);
+    let d = core.target.d();
+    match result {
+        Ok(Ok(outcome)) => {
+            let (data, valid, partial) = match outcome {
+                Outcome::Full(data) => (data, None, false),
+                Outcome::Partial { rows, valid } => (rows, Some(valid), true),
+            };
+            let mut pairs = vec![
+                ("d", Json::num(d as f64)),
+                ("partial", Json::Bool(partial)),
+                (
+                    "data",
+                    Json::arr(data.iter().map(|&v| Json::num(f64::from(v))).collect()),
+                ),
+            ];
+            if let Some(valid) = &valid {
+                pairs.push((
+                    "valid",
+                    Json::arr(valid.iter().map(|&b| Json::Bool(b)).collect()),
+                ));
+            }
+            let body = Json::obj(pairs);
+            core.target.recycle(data);
+            let _ = respond_json(stream, 200, "OK", body, false);
+        }
+        Ok(Err(e)) => {
+            let code = super::classify(&e);
+            respond_error(stream, code, &format!("{e:#}"));
+        }
+        Err((code, msg)) => respond_error(stream, code, &msg),
+    }
+    core.in_flight.fetch_sub(1, Ordering::AcqRel);
+}
+
+fn respond_error(stream: &mut TcpStream, code: ErrorCode, msg: &str) {
+    let (status, reason, retry) = match code {
+        ErrorCode::OverBudget => (429, "Too Many Requests", true),
+        ErrorCode::Draining | ErrorCode::ConnLimit => (503, "Service Unavailable", true),
+        ErrorCode::Deadline => (504, "Gateway Timeout", false),
+        ErrorCode::BadRequest => (400, "Bad Request", false),
+        ErrorCode::Internal => (500, "Internal Server Error", false),
+    };
+    let body = Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("code", Json::str(code.to_string())),
+    ]);
+    let _ = respond_json(stream, status, reason, body, retry);
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+enum ReadFail {
+    TooLarge,
+    Timeout,
+    Malformed,
+    Closed,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request, ReadFail> {
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    // Byte-at-a-time until CRLFCRLF: simple and safe under the size cap
+    // (the integration channel is not the hot path).
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() >= MAX_HEAD {
+            return Err(ReadFail::TooLarge);
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return Err(ReadFail::Closed),
+            Ok(_) => head.push(byte[0]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Err(ReadFail::Timeout)
+            }
+            Err(_) => return Err(ReadFail::Closed),
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    let mut lines = head.split("\r\n");
+    let mut first = lines.next().unwrap_or("").split_whitespace();
+    let (Some(method), Some(path)) = (first.next(), first.next()) else {
+        return Err(ReadFail::Malformed);
+    };
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else {
+            continue;
+        };
+        if k.eq_ignore_ascii_case("content-length") {
+            content_length = v.trim().parse().unwrap_or(usize::MAX);
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(ReadFail::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        let mut filled = 0usize;
+        while filled < content_length {
+            match stream.read(&mut body[filled..]) {
+                Ok(0) => return Err(ReadFail::Closed),
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ReadFail::Timeout)
+                }
+                Err(_) => return Err(ReadFail::Closed),
+            }
+        }
+    }
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: Json,
+    retry_after: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    write_response(stream, status, reason, &body, retry_after)
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+    retry_after: bool,
+) -> std::io::Result<()> {
+    let retry = if retry_after { "Retry-After: 1\r\n" } else { "" };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n{retry}\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

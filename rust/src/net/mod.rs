@@ -1,0 +1,142 @@
+//! The network front door: a robustness-first socket edge over
+//! [`Service`]/[`FleetService`].
+//!
+//! Two channels on separate listeners, one serving core:
+//!
+//! ```text
+//!   binary TCP (hot path)           HTTP/JSON (integration)
+//!   [len][Hello/Lookup/...]         GET /healthz  /readyz   POST /v1/lookup
+//!          │                                      │
+//!          ▼                                      ▼
+//!   conn.rs reader ─ mpsc ─ writer        http.rs (one thread/conn)
+//!          │                                      │
+//!          └───────────► ServerCore ◄─────────────┘
+//!              tenant → Session / GlobalAdmission slot
+//!                        │
+//!              Target: Service | FleetService
+//! ```
+//!
+//! Robustness decisions, in one place:
+//!
+//! * **Shedding is explicit.**  Over the connection limit, over a
+//!   tenant's admission budget, or while draining, the server *answers*
+//!   (a `Shed`/`Error` frame, an HTTP 429/503) and only then closes —
+//!   a remote client can always distinguish "refused" from "broken".
+//! * **Deadlines travel.**  A `Lookup`'s `deadline_ms` becomes the
+//!   ticket deadline, so the backend's culling/partial machinery (PR 6)
+//!   works unchanged for remote callers, and `Outcome::Partial` masks
+//!   are encoded on the wire rather than flattened into errors.
+//! * **Slow clients pay, not the server.**  Reads are polled in short
+//!   idle slices (so drain-state changes are noticed) with a separate
+//!   mid-frame budget: a client that trickles a frame byte-by-byte
+//!   loses its connection (`codec::read_frame`).
+//! * **Drain is a lifecycle, not a kill.**  `Serving → Draining`
+//!   (accept refused with `Shed`, new requests refused, in-flight
+//!   tickets finish) `→ Stopped` (backend shut down, slabs released).
+//! * **The whole path is soakable.**  [`faults::NetFaultPlan`] injects
+//!   deterministic transport faults client-side, and
+//!   [`client::RemotePool`] implements the `workload::openloop` and
+//!   `workload::chaos` target traits, so tier-1 drives the real socket
+//!   path under fault schedules and verifies every returned row.
+
+pub mod client;
+pub mod codec;
+pub mod conn;
+pub mod faults;
+pub mod http;
+pub mod protocol;
+pub mod server;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::service::session::GlobalSlotGuard;
+use crate::service::{FleetService, FleetTicket, Outcome, Service, Ticket};
+
+pub use client::{ClientConfig, NetClient, RemotePool};
+pub use faults::{FaultyTransport, NetFaultPlan};
+pub use protocol::ErrorCode;
+pub use server::{DrainReport, NetConfig, NetMetricsSnapshot, NetServer};
+
+/// What the edge serves: one card or a fleet.  Either way requests are
+/// ticketed, deadline-aware, and admission-controlled per tenant.
+pub enum Target {
+    Single(Service),
+    Fleet(Arc<FleetService>),
+}
+
+impl Target {
+    /// Row width (f32 elements per row).
+    pub fn d(&self) -> usize {
+        match self {
+            Target::Single(s) => s.d(),
+            Target::Fleet(f) => f.d(),
+        }
+    }
+
+    /// Rows in the served table (valid ids are `0..rows`).
+    pub fn rows(&self) -> u64 {
+        match self {
+            Target::Single(s) => s.rows(),
+            Target::Fleet(f) => f.rows(),
+        }
+    }
+
+    /// Return a redeemed result buffer to the backend slab pool.
+    pub fn recycle(&self, buf: Vec<f32>) {
+        match self {
+            Target::Single(s) => s.recycle(buf),
+            Target::Fleet(f) => f.recycle(buf),
+        }
+    }
+
+    /// Drain and stop the backend (idempotent) — the final step of the
+    /// server's drain lifecycle, releasing the slab pools.
+    pub fn shutdown(&self) {
+        match self {
+            Target::Single(s) => s.shutdown(),
+            Target::Fleet(f) => f.shutdown(),
+        }
+    }
+}
+
+/// An admitted, in-flight request: the ticket plus (fleet path) the
+/// tenant's global admission slot, released when the response is
+/// written or the request is abandoned.
+pub(crate) enum Pending {
+    Single(Ticket),
+    Fleet(FleetTicket, Option<GlobalSlotGuard>),
+}
+
+impl Pending {
+    pub(crate) fn wait_outcome(self) -> anyhow::Result<Outcome> {
+        match self {
+            Pending::Single(t) => t.wait_outcome(),
+            Pending::Fleet(t, _slot) => t.wait_outcome(),
+        }
+    }
+}
+
+/// Map a service-layer error onto a wire [`ErrorCode`] by the error
+/// chain's text — the service API deliberately exposes `anyhow` chains,
+/// and the admission/deadline messages are stable test surface
+/// (`tests/resilience.rs` matches on them too).
+pub(crate) fn classify(e: &anyhow::Error) -> ErrorCode {
+    let s = format!("{e:#}");
+    if s.contains("budget") {
+        ErrorCode::OverBudget
+    } else if s.contains("deadline") {
+        ErrorCode::Deadline
+    } else {
+        ErrorCode::Internal
+    }
+}
+
+/// Clamp a wire deadline (`deadline_ms`, 0 = none) to a ticket deadline.
+pub(crate) fn wire_deadline(deadline_ms: u32) -> Option<Duration> {
+    if deadline_ms == 0 {
+        None
+    } else {
+        Some(Duration::from_millis(u64::from(deadline_ms)))
+    }
+}

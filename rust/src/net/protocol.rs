@@ -1,0 +1,683 @@
+//! Wire protocol for the binary TCP channel.
+//!
+//! Every frame on the wire is `[len: u32 LE][payload: len bytes]` (the
+//! prefix is the codec's job — see [`super::codec`]); this module defines
+//! the *payload* encoding and keeps two invariants that the robustness
+//! story depends on:
+//!
+//! * **Self-validating frames.**  Element counts are explicit (`n`,
+//!   `elems`) and checked against the payload length on decode, and mask
+//!   padding bits must be zero — so *any* strict prefix of a valid frame,
+//!   and any bit-flip in structural fields, is rejected with an error
+//!   rather than misread (property-tested below).
+//! * **No panics.**  Decoding untrusted bytes returns `Err`, never
+//!   panics; a malicious or truncated frame can only cost its own
+//!   connection.
+//!
+//! Frame kinds: `Hello`/`HelloAck` handshake (magic + version + tenant,
+//! answered with the table's row width so clients can size buffers),
+//! `Lookup` requests (request id, optional deadline in ms, row ids),
+//! `Full`/`Partial` responses (`Partial` carries the validity mask
+//! LSB-first, exactly mirroring `Outcome::Partial`), request-scoped
+//! `Error` frames, and connection-scoped `Shed` frames (sent before the
+//! server closes a connection it refuses to serve — load shedding is
+//! explicit, never a silent drop).
+
+use anyhow::{bail, Context};
+
+/// Protocol magic, first field of `Hello` (catches non-protocol clients
+/// that happen to produce a plausible length prefix).
+pub const MAGIC: u32 = 0xA100_57_AC;
+/// Protocol version; `Hello`/`HelloAck` carry it, mismatches are refused.
+pub const VERSION: u16 = 1;
+/// Default ceiling on a single frame's payload (8 MiB ≈ 64k rows of
+/// d=32 f32s); anything larger is rejected before allocation.
+pub const DEFAULT_MAX_FRAME: usize = 8 << 20;
+/// Ceiling on tenant-name length in `Hello`.
+pub const MAX_TENANT_LEN: usize = 256;
+/// Ceiling on error-message length on the wire (longer messages are
+/// truncated at a char boundary by the encoder).
+pub const MAX_MSG_LEN: usize = 256;
+
+const KIND_HELLO: u8 = 0x01;
+const KIND_HELLO_ACK: u8 = 0x02;
+const KIND_LOOKUP: u8 = 0x03;
+const KIND_FULL: u8 = 0x04;
+const KIND_PARTIAL: u8 = 0x05;
+const KIND_ERROR: u8 = 0x06;
+const KIND_SHED: u8 = 0x07;
+
+/// Why a request or connection was refused.  Carried in `Error` (request
+/// scope) and `Shed` (connection scope) frames as a u16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Per-tenant or global admission budget exhausted (retryable).
+    OverBudget,
+    /// Server is draining; no new work accepted (retry elsewhere).
+    Draining,
+    /// Connection limit reached (retryable after backoff).
+    ConnLimit,
+    /// The ticket's deadline expired before completion.
+    Deadline,
+    /// Malformed or out-of-range request (not retryable as-is).
+    BadRequest,
+    /// Backend failure the edge could not classify.
+    Internal,
+}
+
+impl ErrorCode {
+    /// True for codes that mean "the server refused load it could not
+    /// take" — the load-shedding family a client should back off on.
+    pub fn is_shed(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::OverBudget | ErrorCode::Draining | ErrorCode::ConnLimit
+        )
+    }
+
+    fn to_u16(self) -> u16 {
+        match self {
+            ErrorCode::OverBudget => 1,
+            ErrorCode::Draining => 2,
+            ErrorCode::ConnLimit => 3,
+            ErrorCode::Deadline => 4,
+            ErrorCode::BadRequest => 5,
+            ErrorCode::Internal => 6,
+        }
+    }
+
+    fn from_u16(v: u16) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => ErrorCode::OverBudget,
+            2 => ErrorCode::Draining,
+            3 => ErrorCode::ConnLimit,
+            4 => ErrorCode::Deadline,
+            5 => ErrorCode::BadRequest,
+            6 => ErrorCode::Internal,
+            other => bail!("unknown error code {other}"),
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorCode::OverBudget => "over-budget",
+            ErrorCode::Draining => "draining",
+            ErrorCode::ConnLimit => "connection-limit",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::Internal => "internal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A decoded frame (owned).  The server decodes `Hello`/`Lookup`; the
+/// client decodes the rest; tests round-trip all of them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello {
+        version: u16,
+        tenant: String,
+    },
+    HelloAck {
+        version: u16,
+        /// Row width (f32 elements per row) of the served table.
+        d: u32,
+        /// Total rows in the served table (valid ids are `0..rows`).
+        rows: u64,
+    },
+    Lookup {
+        req_id: u64,
+        /// 0 = no deadline.
+        deadline_ms: u32,
+        rows: Vec<u64>,
+    },
+    Full {
+        req_id: u64,
+        /// Row count (client checks `n * d == data.len()`).
+        n: u32,
+        data: Vec<f32>,
+    },
+    Partial {
+        req_id: u64,
+        valid: Vec<bool>,
+        data: Vec<f32>,
+    },
+    Error {
+        req_id: u64,
+        code: ErrorCode,
+        msg: String,
+    },
+    Shed {
+        code: ErrorCode,
+        msg: String,
+    },
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str, cap: usize) {
+    // Truncate at a char boundary; messages are advisory, ids are capped
+    // by the caller before encode.
+    let mut end = s.len().min(cap);
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    let bytes = &s.as_bytes()[..end];
+    put_u16(buf, bytes.len() as u16);
+    buf.extend_from_slice(bytes);
+}
+
+/// Pack a validity mask LSB-first (`valid[0]` is bit 0 of byte 0);
+/// padding bits in the final byte are zero (and checked on decode).
+pub fn pack_mask(valid: &[bool], out: &mut Vec<u8>) {
+    let base = out.len();
+    out.resize(base + valid.len().div_ceil(8), 0);
+    for (i, &v) in valid.iter().enumerate() {
+        if v {
+            out[base + i / 8] |= 1 << (i % 8);
+        }
+    }
+}
+
+/// Unpack an LSB-first validity mask of `n` bits, rejecting short masks
+/// and nonzero padding bits (a truncated or corrupted mask must never
+/// silently widen or shrink the valid set).
+pub fn unpack_mask(bytes: &[u8], n: usize) -> anyhow::Result<Vec<bool>> {
+    if bytes.len() != n.div_ceil(8) {
+        bail!("mask length {} != ceil({n}/8)", bytes.len());
+    }
+    let mut valid = Vec::with_capacity(n);
+    for i in 0..n {
+        valid.push(bytes[i / 8] & (1 << (i % 8)) != 0);
+    }
+    if n % 8 != 0 && bytes[n / 8] >> (n % 8) != 0 {
+        bail!("nonzero padding bits in validity mask");
+    }
+    Ok(valid)
+}
+
+/// Encode `Hello` into `buf` (payload only; the codec adds the length
+/// prefix).  The buffer is appended to, not cleared.
+pub fn encode_hello(buf: &mut Vec<u8>, tenant: &str) {
+    buf.push(KIND_HELLO);
+    put_u32(buf, MAGIC);
+    put_u16(buf, VERSION);
+    put_str(buf, tenant, MAX_TENANT_LEN);
+}
+
+pub fn encode_hello_ack(buf: &mut Vec<u8>, d: u32, rows: u64) {
+    buf.push(KIND_HELLO_ACK);
+    put_u16(buf, VERSION);
+    put_u32(buf, d);
+    put_u64(buf, rows);
+}
+
+pub fn encode_lookup(buf: &mut Vec<u8>, req_id: u64, deadline_ms: u32, rows: &[u64]) {
+    buf.push(KIND_LOOKUP);
+    put_u64(buf, req_id);
+    put_u32(buf, deadline_ms);
+    put_u32(buf, rows.len() as u32);
+    for &r in rows {
+        put_u64(buf, r);
+    }
+}
+
+/// Encode a full response; `n` is the row count (the receiver checks
+/// `data.len() == n * d` against its own `d` from the handshake).
+pub fn encode_full(buf: &mut Vec<u8>, req_id: u64, n: u32, data: &[f32]) {
+    buf.push(KIND_FULL);
+    put_u64(buf, req_id);
+    put_u32(buf, n);
+    put_u32(buf, data.len() as u32);
+    for &v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn encode_partial(buf: &mut Vec<u8>, req_id: u64, valid: &[bool], data: &[f32]) {
+    buf.push(KIND_PARTIAL);
+    put_u64(buf, req_id);
+    put_u32(buf, valid.len() as u32);
+    pack_mask(valid, buf);
+    put_u32(buf, data.len() as u32);
+    for &v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn encode_error(buf: &mut Vec<u8>, req_id: u64, code: ErrorCode, msg: &str) {
+    buf.push(KIND_ERROR);
+    put_u64(buf, req_id);
+    put_u16(buf, code.to_u16());
+    put_str(buf, msg, MAX_MSG_LEN);
+}
+
+pub fn encode_shed(buf: &mut Vec<u8>, code: ErrorCode, msg: &str) {
+    buf.push(KIND_SHED);
+    put_u16(buf, code.to_u16());
+    put_str(buf, msg, MAX_MSG_LEN);
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked reader over an untrusted payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .context("truncated frame")?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn str16(&mut self, cap: usize) -> anyhow::Result<String> {
+        let len = self.u16()? as usize;
+        if len > cap {
+            bail!("string field length {len} exceeds cap {cap}");
+        }
+        let bytes = self.take(len)?;
+        Ok(std::str::from_utf8(bytes)
+            .context("string field is not UTF-8")?
+            .to_string())
+    }
+
+    fn f32s(&mut self, elems: usize) -> anyhow::Result<Vec<f32>> {
+        let bytes = self.take(elems.checked_mul(4).context("element count overflow")?)?;
+        let mut v = Vec::with_capacity(elems);
+        for c in bytes.chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(v)
+    }
+
+    fn finish(&self) -> anyhow::Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Decode one payload into an owned [`Frame`].  Strict: unknown kinds,
+/// truncation, trailing garbage, bad magic, oversized counts, and
+/// nonzero mask padding all fail.
+pub fn decode(payload: &[u8]) -> anyhow::Result<Frame> {
+    let mut c = Cursor::new(payload);
+    let frame = match c.u8()? {
+        KIND_HELLO => {
+            let magic = c.u32()?;
+            if magic != MAGIC {
+                bail!("bad protocol magic {magic:#010x}");
+            }
+            Frame::Hello {
+                version: c.u16()?,
+                tenant: c.str16(MAX_TENANT_LEN)?,
+            }
+        }
+        KIND_HELLO_ACK => Frame::HelloAck {
+            version: c.u16()?,
+            d: c.u32()?,
+            rows: c.u64()?,
+        },
+        KIND_LOOKUP => {
+            let req_id = c.u64()?;
+            let deadline_ms = c.u32()?;
+            let n = c.u32()? as usize;
+            let bytes = c.take(n.checked_mul(8).context("row count overflow")?)?;
+            let mut rows = Vec::with_capacity(n);
+            for b in bytes.chunks_exact(8) {
+                rows.push(u64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]));
+            }
+            Frame::Lookup {
+                req_id,
+                deadline_ms,
+                rows,
+            }
+        }
+        KIND_FULL => {
+            let req_id = c.u64()?;
+            let n = c.u32()?;
+            let elems = c.u32()? as usize;
+            Frame::Full {
+                req_id,
+                n,
+                data: c.f32s(elems)?,
+            }
+        }
+        KIND_PARTIAL => {
+            let req_id = c.u64()?;
+            let n = c.u32()? as usize;
+            let mask = c.take(n.div_ceil(8))?;
+            let valid = unpack_mask(mask, n)?;
+            let elems = c.u32()? as usize;
+            Frame::Partial {
+                req_id,
+                valid,
+                data: c.f32s(elems)?,
+            }
+        }
+        KIND_ERROR => Frame::Error {
+            req_id: c.u64()?,
+            code: ErrorCode::from_u16(c.u16()?)?,
+            msg: c.str16(MAX_MSG_LEN)?,
+        },
+        KIND_SHED => Frame::Shed {
+            code: ErrorCode::from_u16(c.u16()?)?,
+            msg: c.str16(MAX_MSG_LEN)?,
+        },
+        other => bail!("unknown frame kind {other:#04x}"),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+/// A response header decoded without allocating payload vectors — the
+/// client's steady-state path (`perf-assert` pins its allocations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RespHead {
+    Full { req_id: u64, n: u32 },
+    Partial { req_id: u64, n: u32 },
+    Error { req_id: u64, code: ErrorCode },
+}
+
+/// Decode a response payload into caller-owned buffers.  `data` and
+/// `valid` are cleared and refilled (capacity is reused across calls);
+/// for `Error` frames the message is appended to `msg`.  Exactly as
+/// strict as [`decode`].
+pub fn decode_response_into(
+    payload: &[u8],
+    data: &mut Vec<f32>,
+    valid: &mut Vec<bool>,
+    msg: &mut String,
+) -> anyhow::Result<RespHead> {
+    data.clear();
+    valid.clear();
+    msg.clear();
+    let mut c = Cursor::new(payload);
+    let head = match c.u8()? {
+        KIND_FULL => {
+            let req_id = c.u64()?;
+            let n = c.u32()?;
+            let elems = c.u32()? as usize;
+            let bytes = c.take(elems.checked_mul(4).context("element count overflow")?)?;
+            data.reserve(elems);
+            for ch in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            RespHead::Full { req_id, n }
+        }
+        KIND_PARTIAL => {
+            let req_id = c.u64()?;
+            let n = c.u32()? as usize;
+            let mask = c.take(n.div_ceil(8))?;
+            valid.reserve(n);
+            for i in 0..n {
+                valid.push(mask[i / 8] & (1 << (i % 8)) != 0);
+            }
+            if n % 8 != 0 && mask[n / 8] >> (n % 8) != 0 {
+                bail!("nonzero padding bits in validity mask");
+            }
+            let elems = c.u32()? as usize;
+            let bytes = c.take(elems.checked_mul(4).context("element count overflow")?)?;
+            data.reserve(elems);
+            for ch in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            RespHead::Partial {
+                req_id,
+                n: n as u32,
+            }
+        }
+        KIND_ERROR => {
+            let req_id = c.u64()?;
+            let code = ErrorCode::from_u16(c.u16()?)?;
+            msg.push_str(&c.str16(MAX_MSG_LEN)?);
+            RespHead::Error { req_id, code }
+        }
+        other => bail!("unexpected frame kind {other:#04x} in response"),
+    };
+    c.finish()?;
+    Ok(head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(frame: &Frame) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match frame {
+            Frame::Hello { tenant, .. } => encode_hello(&mut buf, tenant),
+            Frame::HelloAck { d, rows, .. } => encode_hello_ack(&mut buf, *d, *rows),
+            Frame::Lookup {
+                req_id,
+                deadline_ms,
+                rows,
+            } => encode_lookup(&mut buf, *req_id, *deadline_ms, rows),
+            Frame::Full { req_id, n, data } => encode_full(&mut buf, *req_id, *n, data),
+            Frame::Partial {
+                req_id,
+                valid,
+                data,
+            } => encode_partial(&mut buf, *req_id, valid, data),
+            Frame::Error { req_id, code, msg } => encode_error(&mut buf, *req_id, *code, msg),
+            Frame::Shed { code, msg } => encode_shed(&mut buf, *code, msg),
+        }
+        assert_eq!(&decode(&buf).unwrap(), frame, "identity broken");
+        buf
+    }
+
+    /// Every strict prefix of a valid frame must be rejected (never
+    /// panic, never decode to something else).
+    fn reject_prefixes(buf: &[u8]) {
+        for cut in 0..buf.len() {
+            assert!(
+                decode(&buf[..cut]).is_err(),
+                "prefix of {} bytes (of {}) decoded",
+                cut,
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrip() {
+        reject_prefixes(&roundtrip(&Frame::Hello {
+            version: VERSION,
+            tenant: "tenant-a".into(),
+        }));
+        reject_prefixes(&roundtrip(&Frame::HelloAck {
+            version: VERSION,
+            d: 32,
+            rows: 1 << 20,
+        }));
+    }
+
+    #[test]
+    fn partial_mask_roundtrip_random() {
+        // Satellite: encode/decode identity over random masks, and every
+        // truncated prefix rejected.
+        let mut rng = Rng::seed_from_u64(0xA100);
+        for iter in 0..200 {
+            let n = rng.gen_index(97);
+            let d = 1 + rng.gen_index(8);
+            let valid: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.6)).collect();
+            let data: Vec<f32> = (0..n * d).map(|i| (i as f32) * 0.5 - 7.0).collect();
+            let frame = Frame::Partial {
+                req_id: rng.next_u64(),
+                valid,
+                data,
+            };
+            let buf = roundtrip(&frame);
+            if iter % 16 == 0 {
+                reject_prefixes(&buf);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_padding_bits_must_be_zero() {
+        let valid = vec![true, false, true]; // 3 bits -> 5 padding bits
+        let mut buf = Vec::new();
+        encode_partial(&mut buf, 9, &valid, &[0.0; 3]);
+        assert!(decode(&buf).is_ok());
+        // Flip a padding bit in the single mask byte (offset: kind 1 +
+        // req_id 8 + n 4 = 13).
+        let mut bad = buf.clone();
+        bad[13] |= 1 << 6;
+        assert!(decode(&bad).is_err(), "padding-bit corruption accepted");
+    }
+
+    #[test]
+    fn lookup_and_responses_roundtrip() {
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..50 {
+            let n = rng.gen_index(64);
+            let rows: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            reject_prefixes(&roundtrip(&Frame::Lookup {
+                req_id: rng.next_u64(),
+                deadline_ms: rng.gen_range(10_000) as u32,
+                rows,
+            }));
+        }
+        let data: Vec<f32> = (0..96).map(|i| i as f32).collect();
+        reject_prefixes(&roundtrip(&Frame::Full {
+            req_id: 3,
+            n: 12,
+            data,
+        }));
+        reject_prefixes(&roundtrip(&Frame::Error {
+            req_id: 4,
+            code: ErrorCode::Deadline,
+            msg: "ticket deadline expired after 1ms".into(),
+        }));
+        reject_prefixes(&roundtrip(&Frame::Shed {
+            code: ErrorCode::Draining,
+            msg: "server draining".into(),
+        }));
+    }
+
+    #[test]
+    fn unknown_kind_and_code_rejected() {
+        assert!(decode(&[0xEE]).is_err());
+        assert!(decode(&[]).is_err());
+        // Error frame with an unknown code.
+        let mut buf = Vec::new();
+        encode_error(&mut buf, 1, ErrorCode::Internal, "x");
+        buf[9] = 0xFF; // code lives after kind(1) + req_id(8)
+        buf[10] = 0xFF;
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut buf = Vec::new();
+        encode_hello_ack(&mut buf, 8, 100);
+        buf.push(0);
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, "t");
+        buf[1] ^= 0x40; // corrupt magic (after kind byte)
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn decode_into_matches_owned_decode() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (mut data, mut valid, mut msg) = (Vec::new(), Vec::new(), String::new());
+        for _ in 0..100 {
+            let n = 1 + rng.gen_index(48);
+            let d = 1 + rng.gen_index(6);
+            let vmask: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+            let payload: Vec<f32> = (0..n * d).map(|_| rng.gen_f64() as f32).collect();
+            let mut buf = Vec::new();
+            encode_partial(&mut buf, 5, &vmask, &payload);
+            let head = decode_response_into(&buf, &mut data, &mut valid, &mut msg).unwrap();
+            assert_eq!(
+                head,
+                RespHead::Partial {
+                    req_id: 5,
+                    n: n as u32
+                }
+            );
+            assert_eq!(data, payload);
+            assert_eq!(valid, vmask);
+            // Truncations rejected by the into-variant as well.
+            for cut in [0, buf.len() / 2, buf.len() - 1] {
+                assert!(
+                    decode_response_into(&buf[..cut], &mut data, &mut valid, &mut msg).is_err()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn long_strings_truncate_at_char_boundary() {
+        let long = "é".repeat(300); // 2 bytes per char, 600 bytes total
+        let mut buf = Vec::new();
+        encode_error(&mut buf, 1, ErrorCode::Internal, &long);
+        let Frame::Error { msg, .. } = decode(&buf).unwrap() else {
+            panic!("wrong frame");
+        };
+        assert!(msg.len() <= MAX_MSG_LEN);
+        assert!(msg.chars().all(|c| c == 'é'));
+    }
+}

@@ -1,0 +1,583 @@
+//! The serving core and listener lifecycle.
+//!
+//! [`NetServer`] owns two nonblocking listeners (binary TCP + optional
+//! HTTP), a shared [`ServerCore`] (admission state, gauges, counters),
+//! and the three-state lifecycle the drain story hangs on:
+//!
+//! ```text
+//!   Serving ──drain()──► Draining ──in_flight==0──► Stopped
+//!     accept+serve         accept → Shed(draining)    backend shut down,
+//!                          requests → Error(draining)  slabs released
+//!                          in-flight tickets finish
+//! ```
+//!
+//! Accept never blocks (2 ms poll) so state changes are honored
+//! promptly, and a connection the server will not serve — over the
+//! limit, or mid-drain — still gets an explicit `Shed` frame before the
+//! close: remote clients can always tell refusal from failure.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::service::{GlobalAdmission, OverloadPolicy, Session, SessionConfig};
+
+use super::codec::{begin_frame, send_frame};
+use super::protocol::{self, ErrorCode};
+use super::{classify, conn, http, Pending, Target};
+
+/// Lifecycle states (stored in `ServerCore::state`).
+pub(crate) const SERVING: u8 = 0;
+pub(crate) const DRAINING: u8 = 1;
+pub(crate) const STOPPED: u8 = 2;
+
+/// Accept-loop poll period (listeners are nonblocking so they observe
+/// lifecycle transitions between accepts).
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Idle slice for connection readers: the bound on how stale a reader's
+/// view of the lifecycle state can get.
+pub(crate) const READ_POLL: Duration = Duration::from_millis(50);
+/// How long `drain`/`shutdown` waits for connection threads to notice
+/// `Stopped` and exit (a few read-poll slices is plenty).
+const CONN_EXIT_WAIT: Duration = Duration::from_secs(2);
+
+/// Tuning for the network edge.  Defaults are sized for loopback tests;
+/// `serve-net` exposes the load-bearing ones as flags.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address for the binary channel (`127.0.0.1:0` = ephemeral).
+    pub addr: String,
+    /// Bind address for the HTTP channel (None = no HTTP listener).
+    pub http_addr: Option<String>,
+    /// Binary-channel connection limit (excess gets `Shed(ConnLimit)`).
+    pub max_conns: usize,
+    /// HTTP-channel connection limit (excess gets 503).
+    pub max_http_conns: usize,
+    /// Cross-tenant in-flight budget ([`GlobalAdmission`] capacity).
+    pub global_slots: usize,
+    /// Per-tenant in-flight budget (single-card path mints `Session`s).
+    pub per_tenant_in_flight: usize,
+    /// Row-count ceiling per `Lookup` (over it = `BadRequest`).
+    pub max_rows_per_request: usize,
+    /// Frame payload ceiling on both directions.
+    pub max_frame: usize,
+    /// Close a connection idle longer than this between frames.
+    pub idle_timeout: Duration,
+    /// Slow-loris bound: a started frame must complete within this.
+    pub frame_timeout: Duration,
+    /// Per-connection socket write timeout.
+    pub write_timeout: Duration,
+    /// The `Hello` must arrive within this after connect.
+    pub hello_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            http_addr: None,
+            max_conns: 64,
+            max_http_conns: 16,
+            global_slots: 256,
+            per_tenant_in_flight: 64,
+            max_rows_per_request: 65_536,
+            max_frame: protocol::DEFAULT_MAX_FRAME,
+            idle_timeout: Duration::from_secs(30),
+            frame_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(5),
+            hello_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Readiness hook for `/readyz`: wired by `serve-net` to backend
+/// breaker/health state so orchestration stops routing to a degraded
+/// edge before it starts failing requests.
+pub type ReadyProbe = Box<dyn Fn() -> bool + Send + Sync>;
+
+/// Edge counters (atomics; sampled into [`NetMetricsSnapshot`]).
+#[derive(Default)]
+pub(crate) struct NetMetrics {
+    pub(crate) conns_accepted: AtomicU64,
+    pub(crate) conns_shed: AtomicU64,
+    pub(crate) hellos: AtomicU64,
+    pub(crate) requests: AtomicU64,
+    pub(crate) responses_full: AtomicU64,
+    pub(crate) responses_partial: AtomicU64,
+    pub(crate) responses_error: AtomicU64,
+    pub(crate) shed_over_budget: AtomicU64,
+    pub(crate) shed_draining: AtomicU64,
+    pub(crate) bad_frames: AtomicU64,
+    pub(crate) slow_loris_closed: AtomicU64,
+    pub(crate) write_errors: AtomicU64,
+    pub(crate) http_requests: AtomicU64,
+}
+
+/// Point-in-time view of the edge counters plus the live gauges.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetMetricsSnapshot {
+    pub conns_accepted: u64,
+    pub conns_shed: u64,
+    pub hellos: u64,
+    pub requests: u64,
+    pub responses_full: u64,
+    pub responses_partial: u64,
+    pub responses_error: u64,
+    pub shed_over_budget: u64,
+    pub shed_draining: u64,
+    pub bad_frames: u64,
+    pub slow_loris_closed: u64,
+    pub write_errors: u64,
+    pub http_requests: u64,
+    pub conns_open: usize,
+    pub in_flight: usize,
+}
+
+impl fmt::Display for NetMetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "conns {} (shed {}, open {}) reqs {} (full {}, partial {}, err {}) \
+             shed(budget {}, drain {}) bad-frames {} loris {} write-errs {} http {}",
+            self.conns_accepted,
+            self.conns_shed,
+            self.conns_open,
+            self.requests,
+            self.responses_full,
+            self.responses_partial,
+            self.responses_error,
+            self.shed_over_budget,
+            self.shed_draining,
+            self.bad_frames,
+            self.slow_loris_closed,
+            self.write_errors,
+            self.http_requests,
+        )
+    }
+}
+
+/// What a `drain` call observed: whether every in-flight ticket
+/// resolved inside the timeout, and what got refused meanwhile.
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    /// True iff in-flight hit zero before the timeout.
+    pub completed: bool,
+    /// Time spent waiting for in-flight work.
+    pub waited: Duration,
+    /// In-flight requests when the drain started.
+    pub in_flight_at_start: usize,
+    /// Connections shed (with an explicit response) during the drain.
+    pub refused_conns: u64,
+}
+
+/// State shared by both channels and every connection thread.
+pub(crate) struct ServerCore {
+    pub(crate) cfg: NetConfig,
+    pub(crate) target: Target,
+    pub(crate) state: AtomicU8,
+    pub(crate) conns: AtomicUsize,
+    pub(crate) http_conns: AtomicUsize,
+    pub(crate) in_flight: AtomicUsize,
+    pub(crate) metrics: NetMetrics,
+    global: Arc<GlobalAdmission>,
+    /// Single-card path: per-tenant sessions, minted on first `Hello`.
+    sessions: Mutex<HashMap<String, Arc<Session>>>,
+    /// Fleet path: tenant name -> admission registration.
+    tenants: Mutex<HashMap<String, usize>>,
+    ready: Option<ReadyProbe>,
+}
+
+impl ServerCore {
+    pub(crate) fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn serving(&self) -> bool {
+        self.state() == SERVING
+    }
+
+    /// `/readyz`: serving *and* the backend probe (if any) agrees.
+    pub(crate) fn ready(&self) -> bool {
+        self.serving() && self.ready.as_ref().is_none_or(|probe| probe())
+    }
+
+    pub(crate) fn state_name(&self) -> &'static str {
+        match self.state() {
+            SERVING => "serving",
+            DRAINING => "draining",
+            _ => "stopped",
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> NetMetricsSnapshot {
+        let m = &self.metrics;
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        NetMetricsSnapshot {
+            conns_accepted: c(&m.conns_accepted),
+            conns_shed: c(&m.conns_shed),
+            hellos: c(&m.hellos),
+            requests: c(&m.requests),
+            responses_full: c(&m.responses_full),
+            responses_partial: c(&m.responses_partial),
+            responses_error: c(&m.responses_error),
+            shed_over_budget: c(&m.shed_over_budget),
+            shed_draining: c(&m.shed_draining),
+            bad_frames: c(&m.bad_frames),
+            slow_loris_closed: c(&m.slow_loris_closed),
+            write_errors: c(&m.write_errors),
+            http_requests: c(&m.http_requests),
+            conns_open: self.conns.load(Ordering::Relaxed)
+                + self.http_conns.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Acquire),
+        }
+    }
+
+    /// Admit and submit one request for `tenant`.  Refusals come back as
+    /// wire-ready `(code, message)` pairs — the connection survives; only
+    /// the request is refused.
+    pub(crate) fn submit(
+        &self,
+        tenant: &str,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> Result<Pending, (ErrorCode, String)> {
+        if !self.serving() {
+            self.metrics.shed_draining.fetch_add(1, Ordering::Relaxed);
+            return Err((ErrorCode::Draining, "server draining".into()));
+        }
+        let out = match &self.target {
+            Target::Single(_) => self
+                .session(tenant)
+                .submit_with_deadline(rows, deadline)
+                .map(Pending::Single),
+            Target::Fleet(fleet) => {
+                let id = self.tenant_id(tenant);
+                match GlobalAdmission::try_acquire(&self.global, id) {
+                    None => Err(anyhow::anyhow!(
+                        "tenant '{tenant}' denied by the global admission budget ({})",
+                        self.global.capacity()
+                    )),
+                    Some(slot) => fleet
+                        .submit(rows, deadline)
+                        .map(|t| Pending::Fleet(t, Some(slot))),
+                }
+            }
+        };
+        out.map_err(|e| {
+            let code = classify(&e);
+            if code == ErrorCode::OverBudget {
+                self.metrics.shed_over_budget.fetch_add(1, Ordering::Relaxed);
+            }
+            (code, format!("{e:#}"))
+        })
+    }
+
+    fn session(&self, tenant: &str) -> Arc<Session> {
+        let mut map = self.sessions.lock().unwrap();
+        if let Some(s) = map.get(tenant) {
+            return Arc::clone(s);
+        }
+        let Target::Single(service) = &self.target else {
+            unreachable!("sessions are only minted for single-card targets");
+        };
+        let session = Arc::new(service.session_with_budget(
+            tenant,
+            SessionConfig {
+                max_in_flight: self.cfg.per_tenant_in_flight,
+                overload: OverloadPolicy::Reject,
+                deadline: None,
+            },
+            &self.global,
+            1.0,
+        ));
+        map.insert(tenant.to_string(), Arc::clone(&session));
+        session
+    }
+
+    fn tenant_id(&self, tenant: &str) -> usize {
+        let mut map = self.tenants.lock().unwrap();
+        if let Some(&id) = map.get(tenant) {
+            return id;
+        }
+        let id = self.global.register(tenant, 1.0);
+        map.insert(tenant.to_string(), id);
+        id
+    }
+}
+
+/// The listener owner.  Dropping it stops the server (hard); prefer
+/// [`NetServer::drain`] for the graceful path.
+pub struct NetServer {
+    core: Arc<ServerCore>,
+    addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
+    accepts: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind both channels and start accepting.
+    pub fn start(target: Target, cfg: NetConfig) -> anyhow::Result<Self> {
+        Self::start_with_probe(target, cfg, None)
+    }
+
+    /// [`NetServer::start`] with a readiness probe for `/readyz`.
+    pub fn start_with_probe(
+        target: Target,
+        cfg: NetConfig,
+        ready: Option<ReadyProbe>,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding binary channel on {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking accept")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let http_listener = match &cfg.http_addr {
+            None => None,
+            Some(a) => {
+                let l = TcpListener::bind(a)
+                    .with_context(|| format!("binding http channel on {a}"))?;
+                l.set_nonblocking(true).context("nonblocking accept")?;
+                Some(l)
+            }
+        };
+        let http_addr = match &http_listener {
+            None => None,
+            Some(l) => Some(l.local_addr().context("local_addr")?),
+        };
+        let global = GlobalAdmission::new(cfg.global_slots);
+        let core = Arc::new(ServerCore {
+            cfg,
+            target,
+            state: AtomicU8::new(SERVING),
+            conns: AtomicUsize::new(0),
+            http_conns: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+            metrics: NetMetrics::default(),
+            global,
+            sessions: Mutex::new(HashMap::new()),
+            tenants: Mutex::new(HashMap::new()),
+            ready,
+        });
+        let mut accepts = Vec::new();
+        let c = Arc::clone(&core);
+        accepts.push(
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(c, listener))
+                .context("spawning accept thread")?,
+        );
+        if let Some(l) = http_listener {
+            let c = Arc::clone(&core);
+            accepts.push(
+                std::thread::Builder::new()
+                    .name("net-http-accept".into())
+                    .spawn(move || http_accept_loop(c, l))
+                    .context("spawning http accept thread")?,
+            );
+        }
+        Ok(Self {
+            core,
+            addr,
+            http_addr,
+            accepts,
+        })
+    }
+
+    /// Bound address of the binary channel.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Bound address of the HTTP channel, if configured.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    pub fn metrics(&self) -> NetMetricsSnapshot {
+        self.core.snapshot()
+    }
+
+    /// Requests admitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.core.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Graceful drain: stop accepting (new connections and new requests
+    /// get explicit refusals), wait up to `timeout` for in-flight
+    /// tickets to resolve, then stop and shut the backend down —
+    /// releasing its slab pools.  Idempotent; returns what it observed.
+    pub fn drain(&mut self, timeout: Duration) -> DrainReport {
+        let _ = self.core.state.compare_exchange(
+            SERVING,
+            DRAINING,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        let shed_before = self.core.metrics.conns_shed.load(Ordering::Relaxed);
+        let in_flight_at_start = self.core.in_flight.load(Ordering::Acquire);
+        let start = Instant::now();
+        while self.core.in_flight.load(Ordering::Acquire) > 0 && start.elapsed() < timeout {
+            std::thread::sleep(ACCEPT_POLL);
+        }
+        let completed = self.core.in_flight.load(Ordering::Acquire) == 0;
+        let waited = start.elapsed();
+        let refused_conns = self.core.metrics.conns_shed.load(Ordering::Relaxed) - shed_before;
+        self.halt();
+        DrainReport {
+            completed,
+            waited,
+            in_flight_at_start,
+            refused_conns,
+        }
+    }
+
+    /// Hard stop: no waiting for in-flight work (their tickets are
+    /// dropped; admission guards release via RAII).  Prefer `drain`.
+    pub fn shutdown(&mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.core.state.store(STOPPED, Ordering::Release);
+        let open = |core: &ServerCore| {
+            core.conns.load(Ordering::Relaxed) + core.http_conns.load(Ordering::Relaxed)
+        };
+        let start = Instant::now();
+        while open(&self.core) > 0 && start.elapsed() < CONN_EXIT_WAIT {
+            std::thread::sleep(ACCEPT_POLL);
+        }
+        for h in self.accepts.drain(..) {
+            let _ = h.join();
+        }
+        self.core.target.shutdown();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// RAII decrement for a connection gauge (readers/HTTP threads exit on
+/// panic paths too, so the gauge never leaks).
+pub(crate) struct ConnGuard {
+    gauge: Arc<ServerCore>,
+    http: bool,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        let g = if self.http {
+            &self.gauge.http_conns
+        } else {
+            &self.gauge.conns
+        };
+        g.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn accept_loop(core: Arc<ServerCore>, listener: TcpListener) {
+    loop {
+        if core.state() == STOPPED {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => accept_binary(&core, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn accept_binary(core: &Arc<ServerCore>, mut stream: TcpStream) {
+    core.metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    if core.state() != SERVING {
+        core.metrics.shed_draining.fetch_add(1, Ordering::Relaxed);
+        shed_and_close(core, &mut stream, ErrorCode::Draining, "server draining");
+        return;
+    }
+    if core.conns.fetch_add(1, Ordering::AcqRel) >= core.cfg.max_conns {
+        core.conns.fetch_sub(1, Ordering::AcqRel);
+        shed_and_close(
+            core,
+            &mut stream,
+            ErrorCode::ConnLimit,
+            "connection limit reached",
+        );
+        return;
+    }
+    let guard = ConnGuard {
+        gauge: Arc::clone(core),
+        http: false,
+    };
+    let c = Arc::clone(core);
+    let spawned = std::thread::Builder::new()
+        .name("net-conn".into())
+        .spawn(move || conn::serve(c, stream, guard));
+    if spawned.is_err() {
+        // Spawn failure drops the closure, which drops the guard, so the
+        // gauge stays honest; the connection closes without a shed frame
+        // (thread exhaustion is a process-level emergency, not a
+        // protocol event).
+        core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Best-effort explicit refusal: one `Shed` frame, then close.  The
+/// write gets a short timeout so a malicious peer cannot pin the accept
+/// thread.
+fn shed_and_close(core: &Arc<ServerCore>, stream: &mut TcpStream, code: ErrorCode, msg: &str) {
+    core.metrics.conns_shed.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let mut out = Vec::with_capacity(64);
+    begin_frame(&mut out);
+    protocol::encode_shed(&mut out, code, msg);
+    let _ = send_frame(stream, &mut out, core.cfg.max_frame);
+}
+
+fn http_accept_loop(core: Arc<ServerCore>, listener: TcpListener) {
+    loop {
+        if core.state() == STOPPED {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => accept_http(&core, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn accept_http(core: &Arc<ServerCore>, stream: TcpStream) {
+    core.metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    // HTTP connections are accepted even mid-drain: `/healthz` must keep
+    // answering so operators can watch the drain; mutating requests are
+    // refused inside the handler with a 503.
+    if core.http_conns.fetch_add(1, Ordering::AcqRel) >= core.cfg.max_http_conns {
+        core.http_conns.fetch_sub(1, Ordering::AcqRel);
+        core.metrics.conns_shed.fetch_add(1, Ordering::Relaxed);
+        http::shed_and_close(core, stream);
+        return;
+    }
+    let guard = ConnGuard {
+        gauge: Arc::clone(core),
+        http: true,
+    };
+    let c = Arc::clone(core);
+    let spawned = std::thread::Builder::new()
+        .name("net-http".into())
+        .spawn(move || http::serve(c, stream, guard));
+    if spawned.is_err() {
+        core.metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}

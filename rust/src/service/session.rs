@@ -586,6 +586,17 @@ impl Session {
     /// deadline.  Both slots ride inside the ticket and free when the
     /// ticket resolves or is dropped.
     pub fn submit(&self, rows: Arc<Vec<u64>>) -> anyhow::Result<Ticket> {
+        self.submit_with_deadline(rows, self.cfg.deadline)
+    }
+
+    /// [`Session::submit`] with a per-request deadline override — the
+    /// network edge maps each wire request's deadline onto its tenant's
+    /// admission budgets through this entry point.
+    pub fn submit_with_deadline(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Ticket> {
         // `throttled` counts *submissions* that blocked, not budgets: a
         // Queue-mode submission that waits on both the session and the
         // global budget still increments once.
@@ -634,7 +645,7 @@ impl Session {
             self.metrics.throttled.fetch_add(1, Ordering::Relaxed);
         }
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        let mut ticket = self.service.submit(rows, self.cfg.deadline)?;
+        let mut ticket = self.service.submit(rows, deadline)?;
         ticket.slot = Some(guard);
         ticket.global_slot = global_guard;
         Ok(ticket)

@@ -56,6 +56,21 @@ impl ChaosTarget for FleetService {
     }
 }
 
+/// Remote counterpart: the soak drives the full network path — framing,
+/// admission, response encoding — and still verifies every returned row
+/// against the table.  With a [`crate::net::NetFaultPlan`] on the pool,
+/// injected transport faults (torn frames, half-closes, drops) surface
+/// here as `Err` outcomes, never as corrupted rows.
+impl ChaosTarget for crate::net::RemotePool {
+    fn run_outcome(
+        &self,
+        rows: Arc<Vec<u64>>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Outcome> {
+        self.request(&rows, deadline)
+    }
+}
+
 /// Chaos soak configuration.
 #[derive(Debug, Clone)]
 pub struct ChaosConfig {

@@ -42,6 +42,16 @@ impl LoadTarget for FleetService {
     }
 }
 
+/// Remote counterpart: the same sweep over loopback (or real) TCP via a
+/// pooled binary-protocol client (`bench-serve --remote`).  Uses the
+/// pool's pinned path so the *client's* allocator stays out of the
+/// measurement, mirroring the `recycle` discipline above.
+impl LoadTarget for crate::net::RemotePool {
+    fn run_request(&self, rows: Arc<Vec<u64>>, deadline: Option<Duration>) -> anyhow::Result<()> {
+        self.request_pinned(&rows, deadline)
+    }
+}
+
 /// One point on the latency-throughput curve.
 #[derive(Debug, Clone)]
 pub struct LoadPoint {

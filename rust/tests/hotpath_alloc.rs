@@ -121,3 +121,77 @@ fn steady_state_request_path_is_allocation_free_per_sub_batch() {
     );
     service.shutdown();
 }
+
+/// Per-request ceiling for the *remote* path (loopback TCP, one pinned
+/// connection).  The counting allocator is process-global, so this
+/// measures client AND server together.  The client side is fenced
+/// zero-alloc (`lookup_reuse` recycles every buffer), but the server
+/// still pays a small per-request constant: the mpsc node and reply
+/// shell in the writer channel, the decoded row vector handed to the
+/// facade, and the facade's own ~4 (bounded above).  64 keeps that
+/// honest while failing loudly on any per-row cost — a 256-row request
+/// regressing to one allocation per row would read ≥256.
+const MAX_REMOTE_ALLOCS_PER_REQUEST: u64 = 64;
+
+#[test]
+fn steady_state_remote_request_path_has_constant_allocations() {
+    use a100win::net::{ClientConfig, NetClient, NetConfig, NetServer, Target};
+
+    let rows: u64 = 32_768;
+    let d = 8usize;
+    let windows = 4usize;
+    let table = Table::synthetic(rows, d);
+    let plan = WindowPlan::split(rows, (d * 4) as u64, windows);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    cfg.batcher = BatcherConfig {
+        max_batch_rows: 4_096,
+        max_wait: std::time::Duration::from_micros(100),
+        max_pending: 256,
+    };
+    let backend = Arc::new(
+        SimBackend::start(cfg, &map4(), plan, table.view(), SimTiming::Probed).unwrap(),
+    );
+    let mut server = NetServer::start(
+        Target::Single(Service::new(backend)),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut client =
+        NetClient::connect(&server.addr().to_string(), ClientConfig::default()).unwrap();
+
+    let per_window = rows / windows as u64;
+    let payloads: Vec<Vec<u64>> = (0..32)
+        .map(|i: u64| {
+            (0..256u64)
+                .map(|k| (k % windows as u64) * per_window + (i * 37 + k * 13) % per_window)
+                .collect()
+        })
+        .collect();
+
+    let mut run = |n: usize| {
+        for i in 0..n {
+            let partial = client
+                .lookup_reuse(&payloads[i % payloads.len()], None)
+                .expect("remote lookup");
+            assert!(!partial, "clean loopback run went partial");
+        }
+    };
+
+    // Warmup: grow the client's frame/result buffers to their high-water
+    // marks and fill every server-side pool, exactly as the local test.
+    run(400);
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let measured = 200usize;
+    run(measured);
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let per_request = delta / measured as u64;
+    println!("remote allocations: {delta} over {measured} requests ({per_request}/request)");
+    assert!(
+        per_request <= MAX_REMOTE_ALLOCS_PER_REQUEST,
+        "steady-state remote path allocates {per_request}/request \
+         (> {MAX_REMOTE_ALLOCS_PER_REQUEST}): a per-row or per-frame allocation crept into \
+         the wire path ({delta} total over {measured})"
+    );
+    server.shutdown();
+}

@@ -1,0 +1,538 @@
+//! The network front door, end to end over real loopback sockets —
+//! hermetic (sim backend, no artifacts, no real card).
+//!
+//! Covers the wire-level acceptance surface:
+//! * binary round trips verify every returned cell against the table,
+//!   and the HTTP channel answers `/healthz`, `/readyz` and `/v1/lookup`,
+//! * the connection limit sheds with an explicit `shed(connection-limit)`
+//!   answer (never a silently dropped socket) and the slot frees on close,
+//! * per-tenant admission refuses over-budget requests on a connection
+//!   that stays usable afterwards,
+//! * a slow-loris peer (torn frame, then silence) is disconnected inside
+//!   the frame budget without consuming a reply,
+//! * `Outcome::Partial` masks survive the wire bit-exactly,
+//! * ticket deadlines travel the wire and expire as refusals, not poison,
+//! * graceful drain finishes in-flight tickets while new connections get
+//!   `shed(draining)`,
+//! * a seeded transport-fault chaos soak (client-side delays, splits,
+//!   truncations, drops on top of backend stalls/outages) delivers zero
+//!   corrupted rows through the pooled client.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use a100win::coordinator::{PlacementPolicy, Table, WindowPlan};
+use a100win::net::{
+    ClientConfig, NetClient, NetConfig, NetFaultPlan, NetServer, RemotePool, Target,
+};
+use a100win::probe::TopologyMap;
+use a100win::service::{
+    Outcome, ResilienceConfig, Service, SimBackend, SimBackendConfig, SimTiming,
+};
+use a100win::sim::{FaultPlan, StallKind};
+use a100win::workload::chaos::{drive_chaos, ChaosConfig};
+use a100win::workload::openloop::{drive, OpenLoopConfig};
+use a100win::workload::synth::Distribution;
+use a100win::workload::{RequestGen, WorkloadSpec};
+
+const D: usize = 8;
+
+/// Two-group map with controllable probed rates: `ns_per_row =
+/// row_bytes / solo_gbps`, so 2 GB/s at 32 B rows = 16 ns of simulated
+/// time per row — pacing tests can size request durations exactly.
+fn map2(gbps: f64) -> TopologyMap {
+    TopologyMap {
+        groups: vec![vec![0, 1], vec![2, 3]],
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![gbps, gbps],
+        independent: true,
+        card_id: "net-test".into(),
+    }
+}
+
+fn map4() -> TopologyMap {
+    TopologyMap {
+        groups: (0..4).map(|g| vec![g * 2, g * 2 + 1]).collect(),
+        reach_bytes: 64 << 30,
+        solo_gbps: vec![120.0, 119.0, 91.0, 90.0],
+        independent: true,
+        card_id: "net-test".into(),
+    }
+}
+
+/// Loopback server over a sim backend; returns the server plus the
+/// ground-truth table so tests verify every cell that crosses the wire.
+fn start_edge(
+    map: &TopologyMap,
+    rows: u64,
+    windows: usize,
+    net: NetConfig,
+    mutate: impl FnOnce(&mut SimBackendConfig),
+) -> (NetServer, Table) {
+    let table = Table::synthetic(rows, D);
+    let plan = WindowPlan::split(rows, (D * 4) as u64, windows);
+    let mut cfg = SimBackendConfig::new(PlacementPolicy::GroupToChunk);
+    mutate(&mut cfg);
+    let backend =
+        Arc::new(SimBackend::start(cfg, map, plan, table.view(), SimTiming::Probed).unwrap());
+    let server = NetServer::start(Target::Single(Service::new(backend)), net).unwrap();
+    (server, table)
+}
+
+fn verify(out: &[f32], rows: &[u64], table: &Table) {
+    assert_eq!(out.len(), rows.len() * table.d);
+    for (k, &row) in rows.iter().enumerate() {
+        for j in 0..table.d {
+            assert_eq!(
+                out[k * table.d + j],
+                table.expected(row, j),
+                "row {row} column {j}"
+            );
+        }
+    }
+}
+
+fn some_rows(n: usize, total: u64, salt: u64) -> Vec<u64> {
+    (0..n as u64).map(|i| (i * 37 + salt) % total).collect()
+}
+
+fn client(server: &NetServer) -> NetClient {
+    NetClient::connect(&server.addr().to_string(), ClientConfig::default()).unwrap()
+}
+
+/// Minimal raw HTTP/1.1 round trip (no client library): returns
+/// `(status, body)`.
+fn http_req(addr: &str, request: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.get(..3))
+        .unwrap_or_else(|| panic!("malformed response: {resp:.60}"))
+        .parse()
+        .unwrap();
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn http_get(addr: &str, path: &str) -> (u16, String) {
+    http_req(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn http_post_lookup(addr: &str, body: &str) -> (u16, String) {
+    http_req(
+        addr,
+        &format!(
+            "POST /v1/lookup HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+#[test]
+fn wire_roundtrip_verifies_and_http_channel_answers() {
+    let net = NetConfig {
+        http_addr: Some("127.0.0.1:0".into()),
+        ..NetConfig::default()
+    };
+    let (mut server, table) = start_edge(&map2(100.0), 8_192, 2, net, |_| {});
+    let mut c = client(&server);
+    assert_eq!(c.d(), table.d);
+    assert_eq!(c.rows(), table.rows);
+    for salt in 0..20u64 {
+        let rows = some_rows(96, table.rows, salt * 11 + 1);
+        match c.lookup(&rows, None).unwrap() {
+            Outcome::Full(data) => verify(&data, &rows, &table),
+            other => panic!("expected Full, got {other:?}"),
+        }
+    }
+    // Malformed requests are refused per-request: the connection survives.
+    let err = c.lookup(&[table.rows + 5], None).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    let rows = some_rows(8, table.rows, 3);
+    match c.lookup(&rows, None).unwrap() {
+        Outcome::Full(data) => verify(&data, &rows, &table),
+        other => panic!("expected Full after refusal, got {other:?}"),
+    }
+
+    // HTTP channel: health, readiness, lookup, and a 400.
+    let http = server.http_addr().unwrap().to_string();
+    let (status, body) = http_get(&http, "/healthz");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"state\":\"serving\""), "{body}");
+    let (status, body) = http_get(&http, "/readyz");
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = http_post_lookup(&http, "{\"rows\":[1,2,3]}");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"partial\":false"), "{body}");
+    let (status, _) = http_post_lookup(&http, "{\"rows\":[]}");
+    assert_eq!(status, 400);
+
+    let m = server.metrics();
+    assert!(m.responses_full >= 21, "{m}");
+    assert_eq!(m.responses_partial, 0, "{m}");
+    assert!(m.responses_error >= 1, "{m}");
+    assert!(m.http_requests >= 4, "{m}");
+    let report = server.drain(Duration::from_secs(5));
+    assert!(report.completed, "{report:?}");
+}
+
+#[test]
+fn connection_limit_sheds_explicitly_and_slot_frees_on_close() {
+    let net = NetConfig {
+        max_conns: 1,
+        ..NetConfig::default()
+    };
+    let (mut server, table) = start_edge(&map2(100.0), 4_096, 1, net, |_| {});
+    let addr = server.addr().to_string();
+    let mut first = NetClient::connect(&addr, ClientConfig::default()).unwrap();
+    // The limit is enforced with an answer, not a dropped socket.
+    let err = NetClient::connect(&addr, ClientConfig::default()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shed(connection-limit)"), "got: {msg}");
+    // The admitted connection is unaffected by its neighbor's refusal.
+    let rows = some_rows(32, table.rows, 1);
+    match first.lookup(&rows, None).unwrap() {
+        Outcome::Full(data) => verify(&data, &rows, &table),
+        other => panic!("expected Full, got {other:?}"),
+    }
+    assert!(server.metrics().conns_shed >= 1);
+    drop(first);
+    // The slot releases once the connection closes (reader thread exit
+    // lags the FIN slightly; poll briefly).
+    let give_up = Instant::now() + Duration::from_secs(5);
+    loop {
+        match NetClient::connect(&addr, ClientConfig::default()) {
+            Ok(_) => break,
+            Err(_) if Instant::now() < give_up => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("connection slot never freed: {e:#}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn over_budget_refusal_keeps_the_connection_usable() {
+    // One in-flight slot for the tenant and ~8 ms paced requests
+    // (512 rows / 2 groups * 16 ns * timescale 2000): two concurrent
+    // submissions collide; the loser's refusal must not cost its socket.
+    let net = NetConfig {
+        per_tenant_in_flight: 1,
+        ..NetConfig::default()
+    };
+    let (server, table) = start_edge(&map2(2.0), 4_096, 1, net, |cfg| {
+        cfg.sim_timescale = 2_000.0;
+    });
+    let addr = server.addr().to_string();
+    let table = &table;
+    let mut shed_seen = false;
+    for round in 0..20u64 {
+        if shed_seen {
+            break;
+        }
+        let sheds: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2u64)
+                .map(|t| {
+                    let addr = addr.clone();
+                    let rows = some_rows(512, table.rows, round * 7 + t);
+                    s.spawn(move || {
+                        let mut c = NetClient::connect(&addr, ClientConfig::default()).unwrap();
+                        match c.lookup(&rows, None) {
+                            Ok(Outcome::Full(data)) => {
+                                verify(&data, &rows, table);
+                                false
+                            }
+                            Ok(other) => panic!("unexpected outcome {other:?}"),
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                assert!(
+                                    msg.contains("shed(over-budget)"),
+                                    "unexpected refusal: {msg}"
+                                );
+                                // The refusal left the stream in sync: a
+                                // retry on the SAME socket succeeds once
+                                // the slot frees.
+                                let give_up = Instant::now() + Duration::from_secs(5);
+                                loop {
+                                    match c.lookup(&[5], None) {
+                                        Ok(Outcome::Full(data)) => {
+                                            verify(&data, &[5], table);
+                                            break;
+                                        }
+                                        Ok(other) => panic!("unexpected outcome {other:?}"),
+                                        Err(_) if Instant::now() < give_up => {
+                                            std::thread::sleep(Duration::from_millis(2));
+                                        }
+                                        Err(e) => {
+                                            panic!("connection died after a refusal: {e:#}")
+                                        }
+                                    }
+                                }
+                                true
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        shed_seen = sheds.into_iter().any(|s| s);
+    }
+    assert!(shed_seen, "two concurrent clients never collided on 1 slot");
+    assert!(server.metrics().shed_over_budget >= 1);
+    drop(server);
+}
+
+#[test]
+fn slow_loris_is_disconnected_inside_the_frame_budget() {
+    let net = NetConfig {
+        hello_timeout: Duration::from_millis(200),
+        frame_timeout: Duration::from_millis(200),
+        ..NetConfig::default()
+    };
+    let (mut server, _table) = start_edge(&map2(100.0), 4_096, 1, net, |_| {});
+    // Two bytes of a four-byte length prefix, then silence: a torn frame
+    // must cost the peer its connection, not the server a read slot.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.write_all(&[7, 0]).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let n = s.read_to_end(&mut buf).unwrap();
+    assert_eq!(n, 0, "server must close a torn frame without answering");
+    let give_up = Instant::now() + Duration::from_secs(2);
+    while server.metrics().slow_loris_closed == 0 && Instant::now() < give_up {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.metrics().slow_loris_closed >= 1);
+    // The server is unharmed: a well-behaved client still gets served.
+    let mut c = client(&server);
+    assert!(c.lookup(&[1, 2, 3], None).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn partial_mask_travels_the_wire_bit_exact() {
+    // Window 1's only group is permanently dead; partials are armed.  The
+    // wire must carry the same mask the facade produces: delivered rows
+    // exact, masked rows zero-filled, per-window consistency.
+    let (mut server, table) = start_edge(&map2(100.0), 8_192, 2, NetConfig::default(), |cfg| {
+        cfg.fault = Some(FaultPlan::new(13).outage(1, 0, u64::MAX));
+        cfg.resilience = ResilienceConfig {
+            partials: true,
+            ..ResilienceConfig::default()
+        };
+    });
+    let mut c = client(&server);
+    let rows: Vec<u64> = vec![10, 20, 4_100, 4_200];
+    let outcome = c.lookup(&rows, None).unwrap();
+    let Outcome::Partial { rows: out, valid } = outcome else {
+        panic!("expected Partial over the wire, got {outcome:?}");
+    };
+    assert_eq!(valid.len(), rows.len());
+    assert_eq!(out.len(), rows.len() * table.d);
+    assert_eq!(valid.iter().filter(|&&v| v).count(), 2, "{valid:?}");
+    for (k, &row) in rows.iter().enumerate() {
+        let span = &out[k * table.d..(k + 1) * table.d];
+        if valid[k] {
+            for (j, &got) in span.iter().enumerate() {
+                assert_eq!(got, table.expected(row, j), "row {row} column {j}");
+            }
+        } else {
+            assert!(span.iter().all(|&v| v == 0.0), "masked row {row} not zeroed");
+        }
+    }
+    assert_eq!(server.metrics().responses_partial, 1);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expiry_travels_the_wire_without_poisoning() {
+    // ~40 ms paced requests (512 rows / 2 groups * 16 ns * timescale
+    // 10_000) against a 5 ms wire deadline; resilience stays OFF so the
+    // expiry surfaces as an error, not a salvaged partial.
+    let (mut server, table) = start_edge(&map2(2.0), 4_096, 1, NetConfig::default(), |cfg| {
+        cfg.sim_timescale = 10_000.0;
+    });
+    let mut c = client(&server);
+    let rows = some_rows(512, table.rows, 0);
+    let err = c
+        .lookup(&rows, Some(Duration::from_millis(5)))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline"), "got: {msg}");
+    // Deadline refusals are per-request; the next unbounded lookup works.
+    let rows = some_rows(32, table.rows, 9);
+    match c.lookup(&rows, None).unwrap() {
+        Outcome::Full(data) => verify(&data, &rows, &table),
+        other => panic!("expected Full after expiry, got {other:?}"),
+    }
+    assert!(server.metrics().responses_error >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_and_sheds_new_connections() {
+    // Stall both groups so one request paces ~80 ms of wall clock — a
+    // window wide enough to observe the drain ordering: the in-flight
+    // ticket completes (and verifies), new connections get an explicit
+    // `shed(draining)` frame.
+    let (mut server, table) = start_edge(&map2(2.0), 4_096, 1, NetConfig::default(), |cfg| {
+        cfg.sim_timescale = 10_000.0;
+        cfg.fault = Some(
+            FaultPlan::new(5)
+                .stall(0, 0, u64::MAX, StallKind::Fixed(4.0))
+                .stall(1, 0, u64::MAX, StallKind::Fixed(4.0)),
+        );
+    });
+    let addr = server.addr().to_string();
+    let mut c = client(&server);
+    let rows = some_rows(256, table.rows, 5);
+    let rows_ref = &rows[..];
+    let server_ref = &mut server;
+    let (outcome, in_flight_seen, report, shed_msg) = std::thread::scope(|s| {
+        let lookup = s.spawn(move || c.lookup(rows_ref, None));
+        let mut seen = 0;
+        for _ in 0..5_000 {
+            seen = server_ref.in_flight();
+            if seen > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let probe_addr = addr.clone();
+        let probe = s.spawn(move || {
+            // Keep connecting until a refusal names the drain; tolerate
+            // successes (still serving) and raw connect errors (listener
+            // already down) by retrying inside the window.
+            let give_up = Instant::now() + Duration::from_secs(10);
+            let mut last = String::new();
+            while Instant::now() < give_up {
+                match NetClient::connect(&probe_addr, ClientConfig::default()) {
+                    Err(e) => {
+                        last = format!("{e:#}");
+                        if last.contains("shed(draining)") {
+                            return last;
+                        }
+                    }
+                    Ok(_) => {}
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            last
+        });
+        let report = server_ref.drain(Duration::from_secs(30));
+        (
+            lookup.join().unwrap(),
+            seen,
+            report,
+            probe.join().unwrap(),
+        )
+    });
+    assert!(in_flight_seen > 0, "request never observed in flight");
+    match outcome.unwrap() {
+        Outcome::Full(data) => verify(&data, &rows, &table),
+        other => panic!("drained ticket degraded to {other:?}"),
+    }
+    assert!(report.completed, "drain left work behind: {report:?}");
+    assert!(
+        shed_msg.contains("shed(draining)"),
+        "probe never saw the drain refusal: {shed_msg:?}"
+    );
+    assert!(report.refused_conns >= 1, "{report:?}");
+}
+
+#[test]
+fn transport_chaos_soak_delivers_no_corrupted_rows() {
+    // The resilience chaos soak, pushed through the real socket path:
+    // backend stalls/outages/flapping (FaultPlan::chaos) compose with
+    // client-side transport faults (delays, split writes, truncations,
+    // half-closes, drops).  Poisoned connections cost one request each —
+    // the pool re-dials — and every delivered row is verified.
+    let (mut server, table) = start_edge(&map4(), 16_384, 2, NetConfig::default(), |cfg| {
+        cfg.fault = Some(FaultPlan::chaos(11, 4));
+        cfg.resilience = ResilienceConfig::full();
+    });
+    let pool = RemotePool::with_faults(
+        server.addr().to_string(),
+        ClientConfig::default(),
+        4,
+        NetFaultPlan::chaos(11),
+    );
+    let report = drive_chaos(
+        &pool,
+        &table,
+        &ChaosConfig {
+            requests: 120,
+            request_rows: (16, 64),
+            distribution: Distribution::parse("drift:zipf:1.1:60").unwrap(),
+            seed: 17,
+            deadline: Some(Duration::from_millis(250)),
+            concurrency: 4,
+        },
+    );
+    assert_eq!(report.corrupted_rows, 0, "{report:?}");
+    assert_eq!(report.mask_violations, 0, "{report:?}");
+    assert!(report.completed > 0, "total outage: {report:?}");
+    assert!(report.valid_rows_checked > 0, "{report:?}");
+    // Failures must resolve in bounded time even when a transport fault
+    // burns the whole retry budget (well under the 10 s response timeout
+    // that would signal a hung connection).
+    if report.failed > 0 {
+        assert!(
+            report.failure_p99_us < 5_000_000,
+            "slow failure resolution: {report:?}"
+        );
+    }
+    // Transport faults poisoned connections; the pool replaced them
+    // instead of failing the rest of the run.
+    assert!(pool.dials() >= 4, "dials: {}", pool.dials());
+    let drained = server.drain(Duration::from_secs(10));
+    assert!(drained.completed, "{drained:?}");
+}
+
+#[test]
+fn remote_pool_drives_a_clean_open_loop_sweep() {
+    // The `bench-serve --remote` measurement path in miniature: pooled
+    // connections, pinned buffers, zero errors on a clean loopback run —
+    // and zero re-dials (no fault, no poisoning, no connection churn).
+    let (mut server, table) = start_edge(&map2(100.0), 8_192, 2, NetConfig::default(), |_| {});
+    let pool = RemotePool::new(server.addr().to_string(), ClientConfig::default(), 4);
+    pool.connect_warm(2).unwrap();
+    let (d, rows) = pool.probe().unwrap();
+    assert_eq!((d, rows), (table.d, table.rows));
+    let mut gen = RequestGen::new(WorkloadSpec::uniform(table.rows, 64, 21));
+    let point = drive(
+        &pool,
+        &mut gen,
+        400.0,
+        &OpenLoopConfig {
+            duration: Duration::from_millis(250),
+            max_requests: Some(60),
+            ..OpenLoopConfig::default()
+        },
+    );
+    assert_eq!(point.errors, 0, "clean loopback sweep errored: {point:?}");
+    assert!(point.achieved_rps > 0.0, "{point:?}");
+    assert!(
+        pool.dials() <= 4,
+        "clean run churned connections: {} dials",
+        pool.dials()
+    );
+    let drained = server.drain(Duration::from_secs(5));
+    assert!(drained.completed, "{drained:?}");
+}

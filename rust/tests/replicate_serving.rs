@@ -29,7 +29,11 @@ use a100win::coordinator::{
     AdaptiveConfig, BatcherConfig, CardSpec, ControlPlaneConfig, Lever, ReplicateConfig, Table,
 };
 use a100win::probe::TopologyMap;
-use a100win::service::{FleetConfig, FleetService, FleetTicket, RebalanceConfig, SimTiming};
+use a100win::service::{
+    FleetConfig, FleetService, FleetTicket, HedgeConfig, RebalanceConfig, ResilienceConfig,
+    SimTiming,
+};
+use a100win::sim::{FaultPlan, StallKind};
 use a100win::workload::{synth::Distribution, RequestGen, WorkloadSpec};
 
 const CARDS: usize = 3;
@@ -387,5 +391,114 @@ fn unarmed_fleet_never_replicates() {
     assert_eq!(m.replicate_epochs, 0);
     assert!(fleet.replica_set().is_empty());
     check_counters(&fleet);
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Resilience composes with replication: hedged sub-batches on a
+//    replicated fleet stay row-identical and release the P2C depth
+//    gauges exactly once.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hedging_composes_with_replication_and_balances_depth_gauges() {
+    // Every card's group 0 stalls 20_000x forever; pacing (timescale 50)
+    // makes that real wall time (~14 ms per stalled sub-batch vs ~30 us
+    // healthy), so the per-card monitor hedges each straggler to the
+    // sibling group past the 2 ms floor.  Meanwhile zipf(1.1) load walks
+    // the fleet ladder up to replication.  The composition must hold:
+    // every response row-identical, at least one hedge won by the
+    // speculative copy, and the fleet's P2C depth gauges back at zero
+    // once the pipeline drains — the guard releases exactly once per
+    // ticket even when the winner was the hedge, not the original.
+    let table = Table::synthetic(TOTAL_ROWS, D);
+    let fleet = FleetService::build_sim_with(
+        (0..CARDS).map(|i| (card(i), SimTiming::Probed)).collect(),
+        &table,
+        FleetConfig {
+            batcher: quick_batcher(),
+            seed: 5,
+            adaptive: Some(AdaptiveConfig::default()),
+            rebalance: RebalanceConfig {
+                min_imbalance: 0.15,
+                min_epoch_rows: 512,
+                min_move_rows: 16,
+            },
+            control: ControlPlaneConfig {
+                min_imbalance: 0.10,
+                patience: 1,
+                cooldown: 0,
+                max_lever: Lever::Migrate, // raised to Replicate when armed
+                trace_len: 512,
+            },
+            replicate: Some(ReplicateConfig {
+                capacity_fraction: 0.0,
+                ..ReplicateConfig::default()
+            }),
+            sim_timescale: 50.0,
+            fault: Some(FaultPlan::new(9).stall(0, 0, u64::MAX, StallKind::Fixed(20_000.0))),
+            resilience: ResilienceConfig {
+                hedge: Some(HedgeConfig {
+                    min_after: Duration::from_millis(2),
+                    quantile: 0.99,
+                }),
+                ..ResilienceConfig::default()
+            },
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+    let mut gen = RequestGen::new(spec(Distribution::Zipf { theta: 1.1 }, 31));
+
+    // Escalate to a live replica set with hedges already firing.
+    let mut inflight = escalate_to_replication(&fleet, &table, &mut gen);
+    check_zero_copy(&fleet, &table);
+
+    // Keep a depth-8 pipeline through the replicated map until a hedge
+    // wins somewhere in the fleet (owners or replica units).
+    let hedge_wins = |fleet: &FleetService| -> u64 {
+        let owners: u64 = fleet.cards().iter().map(|s| s.metrics().hedge_wins).sum();
+        let replicas: u64 = fleet
+            .replica_cards()
+            .iter()
+            .map(|(_, _, s)| s.metrics().hedge_wins)
+            .sum();
+        owners + replicas
+    };
+    let mut wins = 0u64;
+    for _ in 0..40 {
+        let rows = Arc::new(gen.next_request());
+        let ticket = fleet.submit(Arc::clone(&rows), None).unwrap();
+        inflight.push_back((ticket, rows));
+        if inflight.len() >= 8 {
+            let (t, rows) = inflight.pop_front().unwrap();
+            verify(&t.wait().unwrap(), &rows, &table);
+        }
+        wins = hedge_wins(&fleet);
+        if wins >= 1 {
+            break;
+        }
+    }
+    for (t, rows) in inflight.drain(..) {
+        verify(&t.wait().unwrap(), &rows, &table);
+    }
+    wins = wins.max(hedge_wins(&fleet));
+    assert!(wins >= 1, "no hedge ever won on the replicated fleet");
+
+    // The critical gauge identity: hedged tickets (winner = speculative
+    // copy) must still release their card's P2C depth exactly once.
+    assert_eq!(
+        fleet.queue_depths(),
+        vec![0; CARDS],
+        "depth gauge leaked under hedging"
+    );
+
+    // Replication really happened, the counters balance, and a
+    // full-table sweep through the replicated + hedged map stays exact.
+    let m = fleet.fleet_metrics();
+    assert!(m.replicas_created >= 1);
+    check_counters(&fleet);
+    let all: Arc<Vec<u64>> = Arc::new((0..TOTAL_ROWS).step_by(43).collect());
+    verify(&fleet.lookup(Arc::clone(&all)).unwrap(), &all, &table);
     fleet.shutdown();
 }

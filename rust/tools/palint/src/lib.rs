@@ -15,8 +15,8 @@
 //!   `closed`, `state`, `claimed`, `taken`, `remaining`, `generation`,
 //!   `depth`, `rr`, `slots[`) needs a `// RELAXED:` justification.
 //!   Telemetry counters (other names) are exempt.
-//! * **R3 — panic hygiene.**  Non-test code under `service/` and
-//!   `coordinator/` may not call `.unwrap()`, `.expect(…)`, `panic!`,
+//! * **R3 — panic hygiene.**  Non-test code under `service/`,
+//!   `coordinator/` and `net/` may not call `.unwrap()`, `.expect(…)`, `panic!`,
 //!   `todo!`, or `unimplemented!`.  Exemptions: lock-poison unwraps
 //!   (`.lock()`/`.read()`/`.write()`/`.wait*` on the same line, or a bare
 //!   `.unwrap()` continuation directly under such a call) and sites
@@ -24,7 +24,7 @@
 //!   it documents dead arms, it does not hide fallible paths.
 //! * **R4 — hot-path allocation.**  Between `// hotpath: begin` and
 //!   `// hotpath: end` fences in `ring.rs`, `scatter.rs`, `backend.rs`,
-//!   `fleet.rs`:
+//!   `fleet.rs`, `net/client.rs`:
 //!   `Box::new`, `Vec::with_capacity`, `.to_vec(` and `vec![` are banned
 //!   outright, with no justification override.
 //!
@@ -87,6 +87,7 @@ const HOTPATH_FILES: &[&str] = &[
     "service/scatter.rs",
     "service/backend.rs",
     "service/fleet.rs",
+    "net/client.rs",
 ];
 
 /// Tokens banned inside a hotpath fence.
@@ -291,7 +292,8 @@ pub fn scan_file(path: &str, text: &str) -> Vec<Finding> {
     let p = norm(path);
     let hot_ordering = HOT_ORDERING_FILES.iter().any(|f| p.ends_with(f));
     let hotpath_file = HOTPATH_FILES.iter().any(|f| p.ends_with(f));
-    let svc_coord = p.contains("service/") || p.contains("coordinator/");
+    let svc_coord =
+        p.contains("service/") || p.contains("coordinator/") || p.contains("net/");
 
     let stripped = strip_source(text);
     let raw: Vec<&str> = text.lines().collect();
@@ -497,6 +499,9 @@ mod tests {
         assert!(rules(p, "unreachable!(\"dead arm\");\n").is_empty());
         // Out of scope: other layers may unwrap.
         assert!(rules("src/util/threads.rs", "v.unwrap();\n").is_empty());
+        // The network edge joined the serving tree (PR 10): same hygiene.
+        assert_eq!(rules("src/net/conn.rs", "v.unwrap();\n"), vec!["R3"]);
+        assert!(rules("src/net/server.rs", "m.lock().unwrap();\n").is_empty());
     }
 
     #[test]
@@ -514,6 +519,8 @@ mod tests {
         assert!(scan_file("src/coordinator/cluster.rs", src).is_empty());
         // fleet.rs carries fences around the P2C routing path.
         assert_eq!(scan_file("src/service/fleet.rs", src).len(), 1);
+        // net/client.rs fences the pinned remote-lookup path.
+        assert_eq!(scan_file("src/net/client.rs", src).len(), 1);
     }
 
     #[test]
